@@ -1,0 +1,116 @@
+//! END-TO-END DRIVER (the repo's headline validation run).
+//!
+//! Reproduces the paper's Fig 7 scalability experiment on a real small
+//! workload: synthesize a KITTI-like drive dataset (bags of camera
+//! frames), run the deep-learning image-recognition simulation over it
+//! with 1, 2, 4, 8 workers, and report the scaling curve plus the
+//! paper-style extrapolation (§4.2: "3 hours standalone → 25 minutes on
+//! 8 workers"; §2.3: 600,000 single-machine hours for Google-scale).
+//!
+//! Results from this run are recorded in EXPERIMENTS.md.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example distributed_perception
+//! ```
+
+use av_simd::datagen::{generate_drive_dir, DriveSpec};
+use av_simd::engine::SimContext;
+use av_simd::msg::Message;
+use std::time::Instant;
+
+fn main() -> av_simd::Result<()> {
+    let bags = env_usize("BAGS", 16);
+    let frames = env_usize("FRAMES", 40) as u32;
+    let dir = std::env::temp_dir().join("av_simd_e2e_dataset");
+    let dir_s = dir.to_str().unwrap().to_string();
+
+    println!("== dataset ==");
+    let t = Instant::now();
+    let paths = generate_drive_dir(
+        &dir_s,
+        bags,
+        &DriveSpec { frames, ..DriveSpec::default() },
+    )?;
+    let total_bytes: u64 = paths
+        .iter()
+        .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .sum();
+    let total_frames = bags * frames as usize;
+    println!(
+        "{bags} bags x {frames} frames = {total_frames} frames, {} on disk ({:.2}s to generate)",
+        av_simd::util::human_bytes(total_bytes),
+        t.elapsed().as_secs_f64()
+    );
+
+    // -- real classification over the dataset (correctness + latency) --
+    println!("\n== distributed image recognition over the dataset ==");
+    let sc = SimContext::local(4);
+    let t = Instant::now();
+    let outs = sc
+        .bag_dir(&dir_s, &["/camera"])?
+        .take_payload()
+        .op("classify_images", vec![])
+        .collect()?;
+    let wall = t.elapsed().as_secs_f64();
+    assert_eq!(outs.len(), total_frames, "every frame classified");
+    let mut by_label = std::collections::BTreeMap::<String, usize>::new();
+    for d in &outs {
+        let det = av_simd::msg::DetectionArray::decode(d)?;
+        for dd in det.detections {
+            *by_label.entry(dd.label).or_default() += 1;
+        }
+    }
+    println!(
+        "{} frames classified in {wall:.2}s ({:.1} frames/s); labels: {by_label:?}",
+        outs.len(),
+        outs.len() as f64 / wall
+    );
+    sc.shutdown();
+
+    // -- Fig 7 scaling curve (calibrated compute; 1-core testbed, see
+    //    DESIGN.md substitution table) --
+    println!("\n== scalability sweep (Fig 7; 50 ms/frame calibrated perception) ==");
+    println!("{:>8} {:>12} {:>14} {:>10} {:>10}", "workers", "wall (s)", "frames/s", "speedup", "efficiency");
+    let mut t1 = None;
+    for workers in [1usize, 2, 4, 8] {
+        let sc = SimContext::local(workers);
+        let t = Instant::now();
+        let n = sc
+            .bag_dir(&dir_s, &["/camera"])?
+            .take_payload()
+            .simulate_compute(50_000)
+            .count()?;
+        let wall = t.elapsed().as_secs_f64();
+        assert_eq!(n as usize, total_frames);
+        let t1v = *t1.get_or_insert(wall);
+        let speedup = t1v / wall;
+        println!(
+            "{workers:>8} {wall:>12.2} {:>14.1} {speedup:>9.2}x {:>9.1}%",
+            total_frames as f64 / wall,
+            100.0 * speedup / workers as f64
+        );
+        sc.shutdown();
+    }
+
+    // paper-style extrapolation table (§2.3 / §4.2), using the measured
+    // real single-stream per-frame latency
+    let per_frame_8w = wall / total_frames as f64;
+    println!("\n== extrapolation (paper §2.3 / §4.2 style) ==");
+    let kitti_frames = 100_000_000f64 / 1000.0; // KITTI-scale proxy: 100k frames
+    let google_frames = kitti_frames * 400.0; // Google-scale ≈ 400x KITTI hours
+    for (name, frames_x) in [("KITTI-scale (100k frames)", kitti_frames), ("Google-scale (40M frames)", google_frames)] {
+        let hours_1w = frames_x * per_frame_8w * 8.0 / 3600.0;
+        let hours_10000w = hours_1w / 10_000.0;
+        println!(
+            "{name:<28} single-machine {hours_1w:>10.1} h   10,000 workers {hours_10000w:>8.3} h"
+        );
+    }
+
+    std::fs::remove_dir_all(&dir).ok();
+    println!("\nend-to-end driver OK");
+    Ok(())
+}
+
+fn env_usize(name: &str, default: usize) -> usize {
+    std::env::var(name).ok().and_then(|v| v.parse().ok()).unwrap_or(default)
+}

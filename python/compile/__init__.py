@@ -1,0 +1,5 @@
+"""Build-time compile package: L2 JAX models + L1 Pallas kernels + AOT.
+
+Never imported at runtime — `python -m compile.aot` runs once to emit
+`artifacts/*.hlo.txt`, which the Rust binary loads via PJRT.
+"""

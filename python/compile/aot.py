@@ -1,0 +1,109 @@
+"""AOT compile path: lower the L2 models to HLO **text** artifacts.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos (64-bit instruction
+ids); the text parser reassigns ids and round-trips cleanly. See
+/opt/xla-example/README.md.
+
+Usage:  python -m compile.aot --out-dir ../artifacts
+
+Emits, per model and batch:
+    artifacts/<name>_b<B>.hlo.txt
+plus a manifest (artifacts/manifest.txt) the Rust runtime parses:
+    <name>_b<B> <in dims ...> -> <out dims ...>
+"""
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+# (name, fwd fn, example input shape builder, batches)
+SPECS = [
+    (
+        "classifier",
+        lambda x: (model.classifier_fwd(x),),
+        lambda b: (b, model.IMAGE_SIZE, model.IMAGE_SIZE, 3),
+        (1, 8),
+    ),
+    (
+        "segmenter",
+        lambda x: (model.segmenter_fwd(x),),
+        lambda b: (b, model.IMAGE_SIZE, model.IMAGE_SIZE, 3),
+        (1, 8),
+    ),
+    (
+        "lidar_feat",
+        lambda x: (model.lidar_feat_fwd(x),),
+        lambda b: (b, model.LIDAR_POINTS, 4),
+        (1, 8),
+    ),
+]
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation → HLO text (return_tuple=True; the
+    Rust side unwraps with to_tuple1)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_one(fwd, in_shape):
+    spec = jax.ShapeDtypeStruct(in_shape, jnp.float32)
+    lowered = jax.jit(fwd).lower(spec)
+    out_shapes = jax.eval_shape(fwd, spec)
+    return to_hlo_text(lowered), [tuple(o.shape) for o in out_shapes]
+
+
+def build_all(out_dir: str, force: bool = False) -> list[str]:
+    os.makedirs(out_dir, exist_ok=True)
+    manifest_lines = []
+    written = []
+    for name, fwd, shape_of, batches in SPECS:
+        for b in batches:
+            in_shape = shape_of(b)
+            artifact = os.path.join(out_dir, f"{name}_b{b}.hlo.txt")
+            hlo, out_shapes = lower_one(fwd, in_shape)
+            assert len(out_shapes) == 1, f"{name}: expected single output"
+            if force or not _same_content(artifact, hlo):
+                with open(artifact, "w") as f:
+                    f.write(hlo)
+                written.append(artifact)
+            manifest_lines.append(
+                f"{name}_b{b} {' '.join(map(str, in_shape))} -> "
+                f"{' '.join(map(str, out_shapes[0]))}"
+            )
+    manifest = os.path.join(out_dir, "manifest.txt")
+    with open(manifest, "w") as f:
+        f.write("\n".join(manifest_lines) + "\n")
+    return written
+
+
+def _same_content(path: str, content: str) -> bool:
+    try:
+        with open(path) as f:
+            return f.read() == content
+    except OSError:
+        return False
+
+
+def main():
+    ap = argparse.ArgumentParser(description=__doc__)
+    ap.add_argument("--out-dir", default="../artifacts")
+    ap.add_argument("--force", action="store_true")
+    args = ap.parse_args()
+    written = build_all(args.out_dir, force=args.force)
+    for w in written:
+        print(f"wrote {w}")
+    print(f"artifacts up to date in {args.out_dir}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,3 @@
+"""L1 Pallas kernels (`matmul`, `conv2d`) and their pure-jnp oracles
+(`ref`). All kernels run with interpret=True (CPU PJRT cannot execute
+Mosaic custom-calls); see DESIGN.md §Hardware-Adaptation."""

@@ -1,0 +1,44 @@
+"""L1 Pallas kernel: SAME/stride-1 conv2d as im2col + MXU-tiled matmul.
+
+Hardware adaptation of the paper's GPU-era CNN workload (DESIGN.md
+§Hardware-Adaptation): instead of a CUDA threadblock direct convolution,
+the conv is re-thought for the TPU MXU — patches are laid out im2col so
+the inner loop is a dense (N*H*W, kh*kw*Cin) x (kh*kw*Cin, Cout) matmul
+that maps 1:1 onto 128x128 systolic tiles, with bias+ReLU fused in the
+matmul epilogue (activations never leave VMEM between conv and ReLU).
+
+The patch extraction itself is cheap data movement; it stays in jnp (XLA
+fuses it into the surrounding graph) while the FLOP-dense matmul runs in
+the Pallas kernel from `matmul.py`.
+"""
+
+import jax.numpy as jnp
+
+from . import matmul as mm
+from .ref import im2col_ref
+
+
+def conv2d_bias_relu(x, w, b, *, relu=True):
+    """SAME, stride-1 2-D convolution with fused bias (+ ReLU).
+
+    x: [N, H, W, Cin] f32
+    w: [kh, kw, Cin, Cout] f32
+    b: [Cout] f32
+    returns [N, H, W, Cout] f32
+    """
+    n, h, wd, cin = x.shape
+    kh, kw, cin2, cout = w.shape
+    assert cin == cin2, f"Cin mismatch: {cin} vs {cin2}"
+
+    patches = im2col_ref(x, kh, kw)  # [N, H, W, kh*kw*Cin]
+    lhs = patches.reshape(n * h * wd, kh * kw * cin)
+    rhs = w.reshape(kh * kw * cin, cout)
+    out = mm.matmul(lhs, rhs, b, fuse_bias_relu=relu)
+    if not relu:
+        out = out + b  # unfused epilogue still adds bias
+    return out.reshape(n, h, wd, cout)
+
+
+def conv_flops(n, h, w, cin, cout, kh, kw) -> int:
+    """MACs*2 for one conv — used by the roofline arithmetic in §Perf."""
+    return 2 * n * h * w * cin * cout * kh * kw

@@ -1,0 +1,144 @@
+"""L1 Pallas kernel: MXU-tiled matmul with optional fused bias + ReLU.
+
+This is the platform's compute hot-spot: every perception layer (conv via
+im2col, dense heads, PointNet shared MLPs) lowers to this kernel.
+
+TPU mapping (see DESIGN.md §Hardware-Adaptation): the grid walks
+(M/bm, N/bn, K/bk) output tiles; each step loads a (bm, bk) LHS block and
+a (bk, bn) RHS block into VMEM via BlockSpec, feeds the MXU-shaped
+`jnp.dot`, and accumulates into the resident (bm, bn) output tile in f32.
+Bias-add + ReLU are fused into the final K step so activations never
+round-trip to HBM. Default tiles are 128x128 (MXU native); VMEM footprint
+per step = bm*bk + bk*bn + bm*bn f32 = 3 * 64 KiB at defaults, far under
+the ~16 MiB VMEM budget, leaving room for double buffering.
+
+On this CPU image kernels MUST run with interpret=True (the CPU PJRT
+plugin cannot execute Mosaic custom-calls); numerics are identical.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# MXU-native tile sizes.
+DEFAULT_BM = 128
+DEFAULT_BN = 128
+DEFAULT_BK = 128
+
+
+def _matmul_kernel(x_ref, y_ref, b_ref, o_ref, *, nk: int, fuse_bias_relu: bool):
+    """One (i, j, k) grid step: accumulate x_tile @ y_tile into o_tile."""
+    k = pl.program_id(2)
+
+    @pl.when(k == 0)
+    def _init():
+        o_ref[...] = jnp.zeros_like(o_ref)
+
+    o_ref[...] += jnp.dot(
+        x_ref[...].astype(jnp.float32),
+        y_ref[...].astype(jnp.float32),
+        preferred_element_type=jnp.float32,
+    )
+
+    if fuse_bias_relu:
+        @pl.when(k == nk - 1)
+        def _epilogue():
+            o_ref[...] = jnp.maximum(o_ref[...] + b_ref[...], 0.0)
+
+
+def _pad_to(x, m, axis):
+    pad = (-x.shape[axis]) % m
+    if pad == 0:
+        return x
+    widths = [(0, 0)] * x.ndim
+    widths[axis] = (0, pad)
+    return jnp.pad(x, widths)
+
+
+@functools.partial(
+    jax.jit, static_argnames=("bm", "bn", "bk", "fuse_bias_relu")
+)
+def matmul(
+    x,
+    y,
+    bias=None,
+    *,
+    bm: int = DEFAULT_BM,
+    bn: int = DEFAULT_BN,
+    bk: int = DEFAULT_BK,
+    fuse_bias_relu: bool = False,
+):
+    """`x @ y` (+ bias, ReLU if fused) via the Pallas tiled kernel.
+
+    x: [M, K], y: [K, N], bias: [N] or None. Arbitrary M/N/K — inputs are
+    zero-padded up to tile multiples and the result is sliced back.
+    Accumulation is always f32; output is f32.
+    """
+    m, k = x.shape
+    k2, n = y.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    if bias is None:
+        bias = jnp.zeros((n,), jnp.float32)
+    assert bias.shape == (n,), f"bias shape {bias.shape} != ({n},)"
+
+    # Tile selection (perf pass, EXPERIMENTS.md §Perf):
+    # * shrink tiles for small dims (avoids padding blowup);
+    # * for tall-skinny problems (im2col conv: M = N*H*W in the
+    #   thousands, K/N tiny) GROW the M tile so the grid stays short —
+    #   every interpret/TPU grid step pays loop + slice overhead, and at
+    #   K=32,N=16 a 128-row tile leaves the MXU idle. The M tile expands
+    #   until the (bm*bk + bk*bn + bm*bn) f32 working set hits the VMEM
+    #   budget (4 MiB of the ~16 MiB VMEM, leaving double-buffer room).
+    bn_ = min(bn, _ceil_pow2(n))
+    bk_ = min(bk, _ceil_pow2(k))
+    vmem_budget_f32 = (4 * 1024 * 1024) // 4
+    bm_max = vmem_budget_f32 // max(bk_ + bn_, 1)
+    bm_ = min(_ceil_pow2(m), max(bm, _floor_pow2(bm_max)))
+
+    xp = _pad_to(_pad_to(x.astype(jnp.float32), bm_, 0), bk_, 1)
+    yp = _pad_to(_pad_to(y.astype(jnp.float32), bk_, 0), bn_, 1)
+    bp = _pad_to(bias.astype(jnp.float32), bn_, 0)
+
+    mp, kp = xp.shape
+    _, np_ = yp.shape
+    nk = kp // bk_
+
+    out = pl.pallas_call(
+        functools.partial(_matmul_kernel, nk=nk, fuse_bias_relu=fuse_bias_relu),
+        grid=(mp // bm_, np_ // bn_, nk),
+        in_specs=[
+            pl.BlockSpec((bm_, bk_), lambda i, j, k: (i, k)),
+            pl.BlockSpec((bk_, bn_), lambda i, j, k: (k, j)),
+            pl.BlockSpec((bn_,), lambda i, j, k: (j,)),
+        ],
+        out_specs=pl.BlockSpec((bm_, bn_), lambda i, j, k: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((mp, np_), jnp.float32),
+        interpret=True,  # CPU PJRT cannot run Mosaic custom-calls
+    )(xp, yp, bp)
+    return out[:m, :n]
+
+
+def matmul_bias_relu(x, y, b, **kw):
+    """Fused epilogue variant (the perception-layer entry point)."""
+    return matmul(x, y, b, fuse_bias_relu=True, **kw)
+
+
+def _ceil_pow2(v: int) -> int:
+    p = 1
+    while p < v:
+        p *= 2
+    return p
+
+
+def _floor_pow2(v: int) -> int:
+    p = 1
+    while p * 2 <= v:
+        p *= 2
+    return p
+
+
+def vmem_bytes(bm: int = DEFAULT_BM, bn: int = DEFAULT_BN, bk: int = DEFAULT_BK) -> int:
+    """Estimated VMEM residency per grid step (f32), for DESIGN.md §Perf."""
+    return 4 * (bm * bk + bk * bn + bm * bn + bn)

@@ -1,0 +1,61 @@
+"""Pure-jnp reference oracles for the Pallas kernels (L1 correctness).
+
+Every Pallas kernel in this package has a reference implementation here,
+written with stock jax.numpy ops only. pytest (and hypothesis sweeps)
+assert allclose between kernel and oracle across shapes/dtypes.
+"""
+
+import jax
+import jax.numpy as jnp
+
+
+def matmul_ref(x, y):
+    """Plain matmul in f32 accumulation."""
+    return jnp.matmul(x.astype(jnp.float32), y.astype(jnp.float32))
+
+
+def matmul_bias_relu_ref(x, y, b):
+    """Fused matmul + bias + ReLU reference."""
+    return jnp.maximum(matmul_ref(x, y) + b.astype(jnp.float32), 0.0)
+
+
+def im2col_ref(x, kh, kw):
+    """Extract kh x kw patches from NHWC `x` with SAME padding, stride 1.
+
+    Returns [N, H, W, kh*kw*C] — the standard im2col layout our conv
+    kernel consumes.
+    """
+    n, h, w, c = x.shape
+    ph, pw = kh // 2, kw // 2
+    xp = jnp.pad(x, ((0, 0), (ph, ph), (pw, pw), (0, 0)))
+    cols = []
+    for dy in range(kh):
+        for dx in range(kw):
+            cols.append(xp[:, dy : dy + h, dx : dx + w, :])
+    return jnp.concatenate(cols, axis=-1)
+
+
+def conv2d_ref(x, w, b, relu=True):
+    """SAME, stride-1 conv reference via lax.conv_general_dilated.
+
+    x: [N, H, W, Cin] f32, w: [kh, kw, Cin, Cout], b: [Cout].
+    """
+    out = jax.lax.conv_general_dilated(
+        x.astype(jnp.float32),
+        w.astype(jnp.float32),
+        window_strides=(1, 1),
+        padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    ) + b.astype(jnp.float32)
+    return jnp.maximum(out, 0.0) if relu else out
+
+
+def maxpool2_ref(x):
+    """2x2 max pool, stride 2, NHWC."""
+    n, h, w, c = x.shape
+    return jnp.max(x.reshape(n, h // 2, 2, w // 2, 2, c), axis=(2, 4))
+
+
+def global_avg_pool_ref(x):
+    """NHWC -> NC."""
+    return jnp.mean(x, axis=(1, 2))

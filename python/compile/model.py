@@ -1,0 +1,152 @@
+"""L2: perception forward graphs in JAX, built on the L1 Pallas kernels.
+
+Three models, mirroring the paper's simulation applications (§3, Fig 3):
+
+* ``classifier`` — "object recognition algorithms that consume image
+  data": a small CNN over RGB frames → class logits.
+* ``segmenter`` — the §2.3 "deep-learning based segmentation" workload:
+  a fully-convolutional head → per-pixel class logits.
+* ``lidar_feat`` — "localization algorithms that consume LiDAR raw
+  data": a PointNet-lite shared MLP + max-pool → scan descriptor.
+
+Weights are deterministic (seeded) and baked into the lowered HLO as
+constants, so the Rust runtime feeds sensor tensors only. Python runs
+once at build time (`aot.py`); never on the simulation path.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels import matmul as mm
+from .kernels.conv2d import conv2d_bias_relu
+from .kernels.ref import global_avg_pool_ref, maxpool2_ref
+
+# Label set shared with the Rust side (rust/src/perception/classify.rs).
+CLASSES = (
+    "vehicle",
+    "pedestrian",
+    "cyclist",
+    "traffic_light",
+    "sign",
+    "barrier",
+    "road",
+    "background",
+)
+NUM_CLASSES = len(CLASSES)
+SEG_CLASSES = 4  # road / vehicle / pedestrian / background
+IMAGE_SIZE = 32
+LIDAR_POINTS = 256
+LIDAR_FEAT = 64
+
+
+def _init(key, shape, scale=None):
+    """He-style init, deterministic per call site."""
+    fan_in = 1
+    for d in shape[:-1]:
+        fan_in *= d
+    scale = scale or (2.0 / max(fan_in, 1)) ** 0.5
+    return jax.random.normal(key, shape, jnp.float32) * scale
+
+
+def classifier_params(seed: int = 0):
+    """Weights constructed from the seed at trace time, so the AOT
+    lowering embeds only a tiny PRNG-key constant and the weight
+    computation itself — large captured ndarray constants would be
+    hoisted into extra HLO parameters, which the Rust runtime (which
+    feeds sensor tensors only) must not see."""
+    ks = jax.random.split(jax.random.PRNGKey(seed), 6)
+    return {
+        "c1_w": _init(ks[0], (3, 3, 3, 16)),
+        "c1_b": jnp.zeros((16,), jnp.float32),
+        "c2_w": _init(ks[1], (3, 3, 16, 32)),
+        "c2_b": jnp.zeros((32,), jnp.float32),
+        "fc_w": _init(ks[2], (32, NUM_CLASSES)),
+        "fc_b": jnp.zeros((NUM_CLASSES,), jnp.float32),
+    }
+
+
+def classifier_fwd(x, params=None):
+    """[B, 32, 32, 3] f32 in [0,1] → [B, NUM_CLASSES] logits."""
+    p = params or classifier_params()
+    x = x - 0.5  # center
+    h = conv2d_bias_relu(x, p["c1_w"], p["c1_b"])       # [B,32,32,16]
+    h = maxpool2_ref(h)                                  # [B,16,16,16]
+    h = conv2d_bias_relu(h, p["c2_w"], p["c2_b"])       # [B,16,16,32]
+    h = maxpool2_ref(h)                                  # [B,8,8,32]
+    h = global_avg_pool_ref(h)                           # [B,32]
+    return mm.matmul(h, p["fc_w"]) + p["fc_b"]           # [B,8]
+
+
+def segmenter_params(seed: int = 1):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 4)
+    return {
+        "c1_w": _init(ks[0], (3, 3, 3, 8)),
+        "c1_b": jnp.zeros((8,), jnp.float32),
+        "c2_w": _init(ks[1], (3, 3, 8, 8)),
+        "c2_b": jnp.zeros((8,), jnp.float32),
+        "c3_w": _init(ks[2], (1, 1, 8, SEG_CLASSES)),
+        "c3_b": jnp.zeros((SEG_CLASSES,), jnp.float32),
+    }
+
+
+def segmenter_fwd(x, params=None):
+    """[B, 32, 32, 3] → [B, 32, 32, SEG_CLASSES] per-pixel logits."""
+    p = params or segmenter_params()
+    x = x - 0.5
+    h = conv2d_bias_relu(x, p["c1_w"], p["c1_b"])
+    h = conv2d_bias_relu(h, p["c2_w"], p["c2_b"])
+    return conv2d_bias_relu(h, p["c3_w"], p["c3_b"], relu=False)
+
+
+def lidar_params(seed: int = 2):
+    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
+    return {
+        "m1_w": _init(ks[0], (4, 32)),
+        "m1_b": jnp.zeros((32,), jnp.float32),
+        "m2_w": _init(ks[1], (32, LIDAR_FEAT)),
+        "m2_b": jnp.zeros((LIDAR_FEAT,), jnp.float32),
+    }
+
+
+def lidar_feat_fwd(pts, params=None):
+    """PointNet-lite: [B, N, 4] xyzi → [B, LIDAR_FEAT] descriptor.
+
+    Shared per-point MLP (two fused matmul layers through the Pallas
+    kernel) followed by a permutation-invariant max-pool over points.
+    """
+    p = params or lidar_params()
+    b, n, c = pts.shape
+    flat = pts.reshape(b * n, c)
+    h = mm.matmul_bias_relu(flat, p["m1_w"], p["m1_b"])
+    h = mm.matmul_bias_relu(h, p["m2_w"], p["m2_b"])
+    return jnp.max(h.reshape(b, n, LIDAR_FEAT), axis=1)
+
+
+# ---- pure-jnp references for the full models (L2 oracle) ----
+
+def classifier_ref(x, params=None):
+    from .kernels.ref import conv2d_ref
+    p = params or classifier_params()
+    x = x - 0.5
+    h = conv2d_ref(x, p["c1_w"], p["c1_b"])
+    h = maxpool2_ref(h)
+    h = conv2d_ref(h, p["c2_w"], p["c2_b"])
+    h = maxpool2_ref(h)
+    h = global_avg_pool_ref(h)
+    return jnp.matmul(h, p["fc_w"]) + p["fc_b"]
+
+
+def segmenter_ref(x, params=None):
+    from .kernels.ref import conv2d_ref
+    p = params or segmenter_params()
+    x = x - 0.5
+    h = conv2d_ref(x, p["c1_w"], p["c1_b"])
+    h = conv2d_ref(h, p["c2_w"], p["c2_b"])
+    return conv2d_ref(h, p["c3_w"], p["c3_b"], relu=False)
+
+
+def lidar_feat_ref(pts, params=None):
+    p = params or lidar_params()
+    h = jnp.maximum(jnp.einsum("bnc,cd->bnd", pts, p["m1_w"]) + p["m1_b"], 0.0)
+    h = jnp.maximum(jnp.einsum("bnc,cd->bnd", h, p["m2_w"]) + p["m2_b"], 0.0)
+    return jnp.max(h, axis=1)

@@ -1,0 +1,118 @@
+"""L1 correctness: Pallas kernels vs pure-jnp oracles.
+
+Hypothesis sweeps shapes/dtypes; fixed cases pin the tile-boundary and
+degenerate geometries.
+"""
+
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import matmul as mm
+from compile.kernels import ref
+from compile.kernels.conv2d import conv2d_bias_relu
+
+RTOL = 1e-4
+ATOL = 1e-4
+
+
+def rand(shape, seed, dtype=np.float32):
+    return np.random.default_rng(seed).standard_normal(shape).astype(dtype)
+
+
+# ---------- fixed-geometry cases ----------
+
+@pytest.mark.parametrize(
+    "m,k,n",
+    [
+        (1, 1, 1),
+        (128, 128, 128),       # exactly one MXU tile
+        (129, 128, 127),       # one-past / one-short of tile edges
+        (7, 300, 5),           # K much larger than M,N
+        (256, 16, 256),        # skinny K
+    ],
+)
+def test_matmul_matches_ref(m, k, n):
+    x, y = rand((m, k), 1), rand((k, n), 2)
+    np.testing.assert_allclose(mm.matmul(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL)
+
+
+@pytest.mark.parametrize("m,k,n", [(4, 8, 16), (130, 70, 200)])
+def test_matmul_bias_relu_matches_ref(m, k, n):
+    x, y, b = rand((m, k), 1), rand((k, n), 2), rand((n,), 3)
+    got = mm.matmul_bias_relu(x, y, b)
+    want = ref.matmul_bias_relu_ref(x, y, b)
+    np.testing.assert_allclose(got, want, rtol=RTOL, atol=ATOL)
+    assert (np.asarray(got) >= 0).all(), "ReLU epilogue applied"
+
+
+def test_matmul_small_tiles():
+    x, y, b = rand((64, 64), 1), rand((64, 64), 2), rand((64,), 3)
+    got = mm.matmul(x, y, b, bm=32, bn=32, bk=16, fuse_bias_relu=True)
+    np.testing.assert_allclose(got, ref.matmul_bias_relu_ref(x, y, b), rtol=RTOL, atol=ATOL)
+
+
+def test_bfloat16_inputs_accumulate_f32():
+    import jax.numpy as jnp
+    x = rand((64, 64), 1).astype(jnp.bfloat16)
+    y = rand((64, 64), 2).astype(jnp.bfloat16)
+    got = mm.matmul(x, y)
+    want = ref.matmul_ref(x, y)
+    assert got.dtype == jnp.float32
+    np.testing.assert_allclose(got, want, rtol=2e-2, atol=2e-2)
+
+
+def test_vmem_budget_within_tpu_limits():
+    # default tiles must fit VMEM with double-buffering headroom
+    assert mm.vmem_bytes() * 2 < 16 * 1024 * 1024
+
+
+# ---------- hypothesis sweeps ----------
+
+@settings(max_examples=25, deadline=None)
+@given(
+    m=st.integers(1, 96),
+    k=st.integers(1, 96),
+    n=st.integers(1, 96),
+    seed=st.integers(0, 2**31),
+)
+def test_matmul_sweep(m, k, n, seed):
+    x, y = rand((m, k), seed), rand((k, n), seed + 1)
+    np.testing.assert_allclose(mm.matmul(x, y), ref.matmul_ref(x, y), rtol=RTOL, atol=ATOL)
+
+
+@settings(max_examples=15, deadline=None)
+@given(
+    b=st.integers(1, 3),
+    h=st.sampled_from([4, 8, 16]),
+    cin=st.integers(1, 6),
+    cout=st.integers(1, 8),
+    kh=st.sampled_from([1, 3, 5]),
+    seed=st.integers(0, 2**31),
+)
+def test_conv2d_sweep(b, h, cin, cout, kh, seed):
+    x = rand((b, h, h, cin), seed)
+    w = rand((kh, kh, cin, cout), seed + 1) * 0.3
+    bias = rand((cout,), seed + 2)
+    got = conv2d_bias_relu(x, w, bias)
+    want = ref.conv2d_ref(x, w, bias)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+
+
+def test_conv2d_no_relu_keeps_negatives():
+    x = rand((1, 8, 8, 3), 0)
+    w = rand((3, 3, 3, 4), 1) * 0.5
+    b = np.full((4,), -10.0, np.float32)  # push everything negative
+    got = conv2d_bias_relu(x, w, b, relu=False)
+    want = ref.conv2d_ref(x, w, b, relu=False)
+    np.testing.assert_allclose(got, want, rtol=5e-4, atol=5e-4)
+    assert (np.asarray(got) < 0).any()
+
+
+def test_im2col_shapes_and_center_tap():
+    x = rand((2, 6, 6, 3), 4)
+    cols = ref.im2col_ref(x, 3, 3)
+    assert cols.shape == (2, 6, 6, 27)
+    # center tap (dy=1, dx=1) of the patch equals the pixel itself
+    center = np.asarray(cols)[..., 4 * 3 : 5 * 3]
+    np.testing.assert_allclose(center, np.asarray(x))

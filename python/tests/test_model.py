@@ -1,0 +1,90 @@
+"""L2 correctness: full perception graphs (Pallas path) vs pure-jnp refs,
+plus AOT lowering invariants the Rust runtime depends on."""
+
+import numpy as np
+import pytest
+
+from compile import model
+from compile.aot import lower_one, SPECS
+
+RTOL = 5e-4
+ATOL = 5e-4
+
+
+def frames(b, seed=0):
+    return np.random.default_rng(seed).random((b, model.IMAGE_SIZE, model.IMAGE_SIZE, 3)).astype(np.float32)
+
+
+@pytest.mark.parametrize("b", [1, 2, 8])
+def test_classifier_matches_ref(b):
+    x = frames(b)
+    np.testing.assert_allclose(
+        model.classifier_fwd(x), model.classifier_ref(x), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_classifier_shape_and_finite():
+    out = np.asarray(model.classifier_fwd(frames(4)))
+    assert out.shape == (4, model.NUM_CLASSES)
+    assert np.isfinite(out).all()
+
+
+@pytest.mark.parametrize("b", [1, 4])
+def test_segmenter_matches_ref(b):
+    x = frames(b, seed=1)
+    np.testing.assert_allclose(
+        model.segmenter_fwd(x), model.segmenter_ref(x), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_segmenter_shape():
+    out = np.asarray(model.segmenter_fwd(frames(2)))
+    assert out.shape == (2, model.IMAGE_SIZE, model.IMAGE_SIZE, model.SEG_CLASSES)
+
+
+@pytest.mark.parametrize("b", [1, 3])
+def test_lidar_matches_ref(b):
+    pts = np.random.default_rng(2).standard_normal((b, model.LIDAR_POINTS, 4)).astype(np.float32)
+    np.testing.assert_allclose(
+        model.lidar_feat_fwd(pts), model.lidar_feat_ref(pts), rtol=RTOL, atol=ATOL
+    )
+
+
+def test_lidar_permutation_invariance():
+    rng = np.random.default_rng(3)
+    pts = rng.standard_normal((1, model.LIDAR_POINTS, 4)).astype(np.float32)
+    perm = rng.permutation(model.LIDAR_POINTS)
+    a = model.lidar_feat_fwd(pts)
+    b = model.lidar_feat_fwd(pts[:, perm, :])
+    np.testing.assert_allclose(a, b, rtol=1e-5, atol=1e-5)
+
+
+def test_deterministic_params():
+    a = model.classifier_params()
+    b = model.classifier_params()
+    np.testing.assert_array_equal(a["c1_w"], b["c1_w"])
+
+
+# ---------- AOT invariants ----------
+
+def test_lowering_produces_hlo_text():
+    name, fwd, shape_of, _ = SPECS[0]
+    hlo, out_shapes = lower_one(fwd, shape_of(1))
+    assert "HloModule" in hlo, "must be HLO text, not a serialized proto"
+    assert "ENTRY" in hlo
+    assert out_shapes == [(1, model.NUM_CLASSES)]
+
+
+def test_lowering_is_deterministic():
+    name, fwd, shape_of, _ = SPECS[0]
+    a, _ = lower_one(fwd, shape_of(1))
+    b, _ = lower_one(fwd, shape_of(1))
+    assert a == b
+
+
+def test_all_specs_lower():
+    for name, fwd, shape_of, batches in SPECS:
+        for b in batches:
+            hlo, out_shapes = lower_one(fwd, shape_of(b))
+            assert "HloModule" in hlo, name
+            assert out_shapes[0][0] == b, f"{name} batch dim preserved"

@@ -1,0 +1,166 @@
+//! Fig 6 reproduction — ROSBag cache performance.
+//!
+//! Paper §4.1: "the Small File Test, which repeatedly read and write
+//! 1 million files with 1 KB in size, and the Large File Test, which
+//! repeatedly read and write 100 thousand files with 1 MB in size …
+//! with in-memory cache, the write performance gets improved by about 3X
+//! and the read performance gets improved by 5X in the large file test,
+//! by about 10X in the small file test."
+//!
+//! We run the same two shapes (message counts scaled to this testbed;
+//! the ratio disk-vs-memory is the claim, not the absolute volume),
+//! through the identical BagWriter/BagReader code — only the ChunkStore
+//! differs. Disk writes fsync on flush so the page cache cannot fake
+//! memory-speed writes.
+
+use av_simd::bag::{
+    BagReader, BagWriter, Compression, DiskChunkedFile, MemoryChunkedFile,
+};
+use av_simd::msg::Time;
+use av_simd::util::bench::{print_table, speedup, Bench};
+use av_simd::util::prng::Prng;
+
+struct Shape {
+    name: &'static str,
+    n_msgs: usize,
+    msg_size: usize,
+    /// Bag chunk size: small for the small-file shape (per-chunk seek +
+    /// read syscalls dominate, like the paper's million separate 1 KB
+    /// files), large for the large-file shape.
+    chunk_size: usize,
+    paper_read_x: f64,
+    paper_write_x: f64,
+}
+
+/// Drop the OS page cache so disk reads are honest cold reads (requires
+/// root, silently skipped otherwise).
+fn drop_page_cache() {
+    let _ = std::process::Command::new("sync").status();
+    let _ = std::fs::write("/proc/sys/vm/drop_caches", "3");
+}
+
+fn main() {
+    let shapes = [
+        Shape {
+            name: "small-file (1 KB msgs)",
+            n_msgs: scaled(100_000),
+            msg_size: 1024,
+            chunk_size: 8 * 1024,
+            paper_read_x: 10.0,
+            paper_write_x: 3.0,
+        },
+        Shape {
+            name: "large-file (1 MB msgs)",
+            n_msgs: scaled(100),
+            msg_size: 1024 * 1024,
+            chunk_size: 4 << 20,
+            paper_read_x: 5.0,
+            paper_write_x: 3.0,
+        },
+    ];
+    let dir = std::env::temp_dir().join("av_simd_bench_cache");
+    std::fs::create_dir_all(&dir).unwrap();
+
+    println!("== Fig 6: ROSBag cache (disk ChunkedFile vs MemoryChunkedFile) ==");
+    for shape in &shapes {
+        let mut rng = Prng::new(7);
+        let mut payload = vec![0u8; shape.msg_size];
+        rng.fill_bytes(&mut payload);
+        let total_bytes = (shape.n_msgs * shape.msg_size) as f64;
+        let disk_path = dir.join(format!("bench_{}.bag", shape.msg_size));
+
+        // ---- record (write) ----
+        let disk_write = Bench::new(format!("{} record disk", shape.name))
+            .warmup(1)
+            .samples(3)
+            .units(total_bytes, "B")
+            .run(|| {
+                let mut store = DiskChunkedFile::create(&disk_path).unwrap();
+                store.set_sync_on_flush(true);
+                let mut w = BagWriter::new(store, Compression::None, shape.chunk_size).unwrap();
+                for i in 0..shape.n_msgs {
+                    w.write_raw("/t", "raw", Time::from_nanos(i as u64), payload.clone())
+                        .unwrap();
+                }
+                w.finish().unwrap();
+            });
+        let mem_write = Bench::new(format!("{} record memory", shape.name))
+            .warmup(1)
+            .samples(3)
+            .units(total_bytes, "B")
+            .run(|| {
+                let mut w = BagWriter::new(
+                    MemoryChunkedFile::new(),
+                    Compression::None,
+                    shape.chunk_size,
+                )
+                .unwrap();
+                for i in 0..shape.n_msgs {
+                    w.write_raw("/t", "raw", Time::from_nanos(i as u64), payload.clone())
+                        .unwrap();
+                }
+                w.finish().unwrap();
+            });
+
+        // ---- play (read) ----
+        // Build the in-memory bag once: the §3.2 cache scenario is "the
+        // bag is already resident"; play borrows it without copying.
+        let mut mem_bag = {
+            let mut w = BagWriter::new(
+                MemoryChunkedFile::new(),
+                Compression::None,
+                shape.chunk_size,
+            )
+            .unwrap();
+            for i in 0..shape.n_msgs {
+                w.write_raw("/t", "raw", Time::from_nanos(i as u64), payload.clone())
+                    .unwrap();
+            }
+            w.finish().unwrap()
+        };
+        let disk_read = Bench::new(format!("{} play disk (cold cache)", shape.name))
+            .warmup(1)
+            .samples(3)
+            .units(total_bytes, "B")
+            .run(|| {
+                drop_page_cache();
+                let mut r = BagReader::open(DiskChunkedFile::open(&disk_path).unwrap()).unwrap();
+                let n = r.for_each(None, |_| Ok(())).unwrap();
+                assert_eq!(n as usize, shape.n_msgs);
+            });
+        let mem_read = Bench::new(format!("{} play memory", shape.name))
+            .warmup(1)
+            .samples(3)
+            .units(total_bytes, "B")
+            .run(|| {
+                let mut r = BagReader::open(&mut mem_bag).unwrap();
+                let n = r.for_each(None, |_| Ok(())).unwrap();
+                assert_eq!(n as usize, shape.n_msgs);
+            });
+
+        print_table(
+            &format!("{} — {} msgs", shape.name, shape.n_msgs),
+            &[disk_write.clone(), mem_write.clone(), disk_read.clone(), mem_read.clone()],
+        );
+        println!(
+            "  write speedup (memory vs disk): {:.1}x   [paper: ~{:.0}x]",
+            speedup(&disk_write, &mem_write),
+            shape.paper_write_x
+        );
+        println!(
+            "  read  speedup (memory vs disk): {:.1}x   [paper: ~{:.0}x]",
+            speedup(&disk_read, &mem_read),
+            shape.paper_read_x
+        );
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+/// Allow CI-style scaling via AV_SIMD_BENCH_SCALE (percent).
+fn scaled(n: usize) -> usize {
+    let pct: usize = std::env::var("AV_SIMD_BENCH_SCALE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(100);
+    (n * pct / 100).max(1)
+}

@@ -1,0 +1,91 @@
+//! §2.3 reproduction — the compute demand of playback simulation.
+//!
+//! Paper: "processing each image takes about 0.3 seconds … it takes more
+//! than 100 hours to analyze the KITTI dataset alone, and … more than
+//! 600,000 hours … for Google's autonomous driving project" on one
+//! machine. This bench measures our per-message perception latencies
+//! (classification b1/b8, segmentation, LiDAR descriptor), the full
+//! bag→pipeline path, and prints the same extrapolation table.
+
+use av_simd::bag::BagReader;
+use av_simd::datagen::{generate_drive, DriveSpec};
+use av_simd::msg::{Image, Message};
+use av_simd::perception::{Classifier, Segmenter};
+use av_simd::util::bench::{print_table, Bench};
+
+fn main() {
+    let artifact_dir =
+        std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let classifier = Classifier::load(&artifact_dir).expect("run `make artifacts`");
+    let segmenter = Segmenter::load(&artifact_dir).unwrap();
+    let imgs: Vec<Image> = (0..8).map(|i| Image::synthetic(32, 32, i)).collect();
+    let one = [imgs[0].clone()];
+
+    let cls_b1 = Bench::new("classify batch=1")
+        .warmup(2)
+        .samples(20)
+        .units(1.0, "img")
+        .run(|| {
+            classifier.classify(&one).unwrap();
+        });
+    let cls_b8 = Bench::new("classify batch=8")
+        .warmup(2)
+        .samples(20)
+        .units(8.0, "img")
+        .run(|| {
+            classifier.classify(&imgs).unwrap();
+        });
+    let seg = Bench::new("segment batch=1")
+        .warmup(2)
+        .samples(20)
+        .units(1.0, "img")
+        .run(|| {
+            segmenter.segment(&one[0]).unwrap();
+        });
+    let pc = av_simd::msg::PointCloud::synthetic(256, 3);
+    let lidar = Bench::new("lidar descriptor")
+        .warmup(2)
+        .samples(20)
+        .units(1.0, "scan")
+        .run(|| {
+            av_simd::perception::scan_descriptor(&artifact_dir, &pc).unwrap();
+        });
+
+    // full path: bag playback → decode → classify
+    let (bag, _) = generate_drive(&DriveSpec { frames: 32, ..DriveSpec::default() }).unwrap();
+    let bag_bytes = bag.to_vec();
+    let pipeline = Bench::new("bag play → decode → classify (32 frames)")
+        .warmup(1)
+        .samples(5)
+        .units(32.0, "img")
+        .run(|| {
+            let mut r = BagReader::open(av_simd::bag::MemoryChunkedFile::from_bytes(
+                &bag_bytes,
+            ))
+            .unwrap();
+            let mut frames = Vec::new();
+            r.for_each(Some(&["/camera"]), |m| {
+                frames.push(Image::decode(&m.data)?);
+                Ok(())
+            })
+            .unwrap();
+            classifier.classify(&frames).unwrap();
+        });
+
+    print_table("§2.3 per-message perception latency", &[cls_b1.clone(), cls_b8.clone(), seg, lidar, pipeline.clone()]);
+
+    // extrapolation table, paper style
+    let per_img = cls_b8.median().as_secs_f64() / 8.0;
+    println!("\n== §2.3 extrapolation (single machine, batch-8 path) ==");
+    println!("per-image latency: {:.1} ms   [paper: ~300 ms on 2017 hardware]", per_img * 1e3);
+    for (name, images) in [
+        ("KITTI 6h (100M images in paper's text)", 1.0e8),
+        ("Google 40,000h (~2e9 frames proxy)", 2.0e9),
+    ] {
+        let hours = images * per_img / 3600.0;
+        println!(
+            "{name:<42} {hours:>12.0} h single-machine → {:>8.1} h on 10,000 workers",
+            hours / 1e4
+        );
+    }
+}

@@ -1,0 +1,120 @@
+//! Fig 7 reproduction — system scalability.
+//!
+//! Paper §4.2: "With the increase of computing resources, the
+//! calculation time is also linearly reduced … it takes 3 hours to
+//! process images using stand-alone processing, and only 25 minutes
+//! after using eight Spark workers" (≈7.2× on 8 workers), plus the
+//! 10,000-worker extrapolation over the Google-scale dataset.
+//!
+//! **Testbed substitution (DESIGN.md):** this container has ONE CPU
+//! core, so CPU-bound DNN work cannot physically speed up with more
+//! workers. Part 1 therefore runs the paper's workload shape with the
+//! per-image compute replaced by a calibrated stall (50 ms/frame ≈ a
+//! scaled §2.3 "0.3 s per image"); everything else — partitioning,
+//! scheduling, task dispatch, collection — is the real platform path,
+//! and the near-linear curve measures the *platform's* scaling overhead,
+//! which is what Fig 7 claims. Part 2 reports the real PJRT
+//! classification path for honesty (flat-to-degrading on 1 core).
+
+use av_simd::engine::SimContext;
+use av_simd::util::bench::fmt_duration;
+use std::time::Instant;
+
+fn sweep(
+    title: &str,
+    total: u32,
+    run: impl Fn(&SimContext) -> u64,
+) -> Vec<(usize, f64, f64)> {
+    println!("\n== {title} ==");
+    println!(
+        "{:>8} {:>12} {:>14} {:>9} {:>11}",
+        "workers", "wall", "frames/s", "speedup", "efficiency"
+    );
+    let mut t1 = None;
+    let mut rows = Vec::new();
+    for workers in [1usize, 2, 4, 8] {
+        let sc = SimContext::local(workers);
+        let t = Instant::now();
+        let n = run(&sc);
+        let wall = t.elapsed();
+        assert_eq!(n, total as u64);
+        let base = *t1.get_or_insert(wall.as_secs_f64());
+        let speedup = base / wall.as_secs_f64();
+        println!(
+            "{workers:>8} {:>12} {:>14.1} {:>8.2}x {:>10.1}%",
+            fmt_duration(wall),
+            total as f64 / wall.as_secs_f64(),
+            speedup,
+            100.0 * speedup / workers as f64
+        );
+        rows.push((workers, wall.as_secs_f64(), speedup));
+        sc.shutdown();
+    }
+    rows
+}
+
+fn main() {
+    let partitions = 16usize;
+
+    // ---- Part 1: Fig 7 curve with calibrated per-frame compute ----
+    let frames_each: u32 = 8;
+    let total = partitions as u32 * frames_each;
+    let stall_us: u64 = 50_000; // 50 ms/frame ≈ scaled paper 0.3 s/image
+    let rows = sweep(
+        &format!(
+            "Fig 7: platform scaling, {total} frames x {} ms simulated perception",
+            stall_us / 1000
+        ),
+        total,
+        |sc| {
+            sc.synth_frames(partitions, frames_each, 32, 32, 42)
+                .simulate_compute(stall_us)
+                .count()
+                .unwrap()
+        },
+    );
+    let (_, t1s, _) = rows[0];
+    let (_, t8s, s8) = rows[rows.len() - 1];
+    println!(
+        "headline: 1 worker {} → 8 workers {} ({s8:.2}x; paper: 3 h → 25 min ≈ 7.2x)",
+        fmt_duration(std::time::Duration::from_secs_f64(t1s)),
+        fmt_duration(std::time::Duration::from_secs_f64(t8s)),
+    );
+
+    // extrapolation table like §4.2's closing paragraph
+    let per_frame = stall_us as f64 / 1e6;
+    for (name, frames) in [("KITTI-scale (100k frames)", 1e5), ("Google-scale (40M frames)", 4e7)]
+    {
+        let single = frames * per_frame / 3600.0;
+        println!(
+            "{name:<26} single machine {single:>9.1} h → 10,000 workers {:>7.4} h",
+            single / 1e4
+        );
+    }
+
+    // ---- Part 2: real PJRT classification (1-core honesty) ----
+    let frames_each: u32 = std::env::var("AV_SIMD_BENCH_FRAMES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(8);
+    let total = partitions as u32 * frames_each;
+    println!(
+        "\n(real DNN path below: this testbed has 1 CPU core, so CPU-bound \
+         classification cannot scale — reported for per-frame truth, see DESIGN.md)"
+    );
+    sweep(
+        &format!("real PJRT classification, {total} frames"),
+        total,
+        |sc| {
+            // warmup compiles executables on each worker thread
+            sc.synth_frames(partitions, 1, 32, 32, 99)
+                .op("classify_images", vec![])
+                .count()
+                .unwrap();
+            sc.synth_frames(partitions, frames_each, 32, 32, 42)
+                .op("classify_images", vec![])
+                .count()
+                .unwrap()
+        },
+    );
+}

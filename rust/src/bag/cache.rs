@@ -1,0 +1,192 @@
+//! `BagCache` — process-wide registry of in-memory bags (paper §3.2).
+//!
+//! Workers receive bag bytes over the wire (BinPipedRDD / RPC), drop them
+//! into the cache, and play them back through `MemoryChunkedFile` without
+//! any disk I/O. An LRU byte-capacity bound keeps the cache from eating
+//! the machine (the paper's 65 GB server is someone else's machine).
+
+use super::memory::MemoryChunkedFile;
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex};
+
+struct Entry {
+    data: Arc<Vec<u8>>,
+    last_used: u64,
+}
+
+/// LRU-bounded in-memory bag registry. Cheap to clone (shared state).
+#[derive(Clone)]
+pub struct BagCache {
+    inner: Arc<Mutex<Inner>>,
+}
+
+struct Inner {
+    entries: HashMap<String, Entry>,
+    capacity: u64,
+    used: u64,
+    tick: u64,
+    hits: u64,
+    misses: u64,
+    evictions: u64,
+}
+
+impl BagCache {
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            inner: Arc::new(Mutex::new(Inner {
+                entries: HashMap::new(),
+                capacity: capacity_bytes,
+                used: 0,
+                tick: 0,
+                hits: 0,
+                misses: 0,
+                evictions: 0,
+            })),
+        }
+    }
+
+    /// Insert bag bytes under a key (e.g. its DFS path). Evicts LRU
+    /// entries until the new entry fits. Oversized entries are rejected.
+    pub fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
+        let mut g = self.inner.lock().unwrap();
+        let size = data.len() as u64;
+        if size > g.capacity {
+            return Err(Error::Storage(format!(
+                "bag '{key}' ({size} B) exceeds cache capacity ({} B)",
+                g.capacity
+            )));
+        }
+        if let Some(old) = g.entries.remove(key) {
+            g.used -= old.data.len() as u64;
+        }
+        while g.used + size > g.capacity {
+            let lru_key = g
+                .entries
+                .iter()
+                .min_by_key(|(_, e)| e.last_used)
+                .map(|(k, _)| k.clone())
+                .expect("used > 0 implies entries exist");
+            let e = g.entries.remove(&lru_key).unwrap();
+            g.used -= e.data.len() as u64;
+            g.evictions += 1;
+        }
+        g.tick += 1;
+        let tick = g.tick;
+        g.entries.insert(key.to_string(), Entry { data: Arc::new(data), last_used: tick });
+        g.used += size;
+        Ok(())
+    }
+
+    /// Fetch bag bytes; bumps LRU recency. None on miss.
+    pub fn get(&self, key: &str) -> Option<Arc<Vec<u8>>> {
+        let mut g = self.inner.lock().unwrap();
+        g.tick += 1;
+        let tick = g.tick;
+        let found = match g.entries.get_mut(key) {
+            Some(e) => {
+                e.last_used = tick;
+                Some(e.data.clone())
+            }
+            None => None,
+        };
+        if found.is_some() {
+            g.hits += 1;
+        } else {
+            g.misses += 1;
+        }
+        found
+    }
+
+    /// Get a bag as a playable `MemoryChunkedFile`, loading it from disk
+    /// on miss (read-through).
+    pub fn open(&self, path: &str) -> Result<MemoryChunkedFile> {
+        if let Some(data) = self.get(path) {
+            return Ok(MemoryChunkedFile::from_bytes(&data));
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Storage(format!("bag '{path}': {e}")))?;
+        self.put(path, bytes.clone())?;
+        Ok(MemoryChunkedFile::from_bytes(&bytes))
+    }
+
+    pub fn contains(&self, key: &str) -> bool {
+        self.inner.lock().unwrap().entries.contains_key(key)
+    }
+
+    pub fn used_bytes(&self) -> u64 {
+        self.inner.lock().unwrap().used
+    }
+
+    /// (hits, misses, evictions)
+    pub fn stats(&self) -> (u64, u64, u64) {
+        let g = self.inner.lock().unwrap();
+        (g.hits, g.misses, g.evictions)
+    }
+
+    pub fn clear(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.entries.clear();
+        g.used = 0;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn put_get_roundtrip() {
+        let c = BagCache::new(1024);
+        c.put("a", vec![1, 2, 3]).unwrap();
+        assert_eq!(*c.get("a").unwrap(), vec![1, 2, 3]);
+        assert!(c.get("b").is_none());
+        let (hits, misses, _) = c.stats();
+        assert_eq!((hits, misses), (1, 1));
+    }
+
+    #[test]
+    fn lru_eviction_under_pressure() {
+        let c = BagCache::new(100);
+        c.put("a", vec![0u8; 40]).unwrap();
+        c.put("b", vec![0u8; 40]).unwrap();
+        c.get("a"); // refresh a — b is now LRU
+        c.put("c", vec![0u8; 40]).unwrap();
+        assert!(c.contains("a"));
+        assert!(!c.contains("b"));
+        assert!(c.contains("c"));
+        assert_eq!(c.stats().2, 1);
+        assert!(c.used_bytes() <= 100);
+    }
+
+    #[test]
+    fn oversized_entry_rejected() {
+        let c = BagCache::new(10);
+        assert!(c.put("big", vec![0u8; 11]).is_err());
+    }
+
+    #[test]
+    fn replace_same_key_adjusts_usage() {
+        let c = BagCache::new(100);
+        c.put("a", vec![0u8; 60]).unwrap();
+        c.put("a", vec![0u8; 30]).unwrap();
+        assert_eq!(c.used_bytes(), 30);
+    }
+
+    #[test]
+    fn clear_empties() {
+        let c = BagCache::new(100);
+        c.put("a", vec![0u8; 10]).unwrap();
+        c.clear();
+        assert_eq!(c.used_bytes(), 0);
+        assert!(!c.contains("a"));
+    }
+
+    #[test]
+    fn shared_across_clones() {
+        let c = BagCache::new(100);
+        let c2 = c.clone();
+        c.put("a", vec![9]).unwrap();
+        assert_eq!(*c2.get("a").unwrap(), vec![9]);
+    }
+}

@@ -1,0 +1,234 @@
+//! The lower layer of the bag format: [`ChunkStore`] — the paper's
+//! `ChunkedFile` abstraction (Fig 2).
+//!
+//! The upper `Bag` layer (writer/reader) only ever talks to this trait, so
+//! swapping the disk-backed implementation for the in-memory one
+//! ([`super::memory::MemoryChunkedFile`]) changes *nothing* above it —
+//! exactly the paper's §3.2 design where `MemoryChunkedFile` "inherits
+//! from the ChunkedFile class and overrides all the methods".
+
+use crate::error::{Error, Result};
+use std::fs::{File, OpenOptions};
+use std::io::{BufWriter, Read, Seek, SeekFrom, Write};
+use std::path::{Path, PathBuf};
+
+/// Byte-level storage for a bag: append-only writes plus random reads.
+pub trait ChunkStore: Send {
+    /// Append `data`, returning the offset it was written at.
+    fn append(&mut self, data: &[u8]) -> Result<u64>;
+
+    /// Read exactly `len` bytes starting at `offset`.
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>>;
+
+    /// Total bytes stored.
+    fn len(&self) -> u64;
+
+    fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Flush buffered writes to the backing medium.
+    fn flush(&mut self) -> Result<()>;
+
+    /// Human-readable backend name ("disk" / "memory"), used by benches.
+    fn backend(&self) -> &'static str;
+}
+
+/// Any `&mut S` is itself a store — lets callers keep ownership while a
+/// `BagReader`/`BagWriter` borrows it (e.g. replaying one in-memory bag
+/// many times without copying).
+impl<S: ChunkStore> ChunkStore for &mut S {
+    fn append(&mut self, data: &[u8]) -> Result<u64> {
+        (**self).append(data)
+    }
+
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        (**self).read_at(offset, len)
+    }
+
+    fn len(&self) -> u64 {
+        (**self).len()
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        (**self).flush()
+    }
+
+    fn backend(&self) -> &'static str {
+        (**self).backend()
+    }
+}
+
+/// Disk-backed store — the paper's original `ChunkedFile`. Writes go
+/// through a buffered writer; reads reopen a read handle at the requested
+/// offset. `O_DIRECT`-style cache bypass is not portable, so the Fig 6
+/// disk baseline additionally calls [`DiskChunkedFile::sync`] on flush to
+/// make the disk path honest.
+pub struct DiskChunkedFile {
+    path: PathBuf,
+    writer: Option<BufWriter<File>>,
+    reader: Option<File>,
+    len: u64,
+    /// fsync on every flush (used by the write benchmark for honesty).
+    sync_on_flush: bool,
+}
+
+impl DiskChunkedFile {
+    /// Create (truncate) a bag file for writing.
+    pub fn create(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let f = OpenOptions::new()
+            .create(true)
+            .write(true)
+            .truncate(true)
+            .open(&path)?;
+        Ok(Self {
+            path,
+            writer: Some(BufWriter::with_capacity(256 * 1024, f)),
+            reader: None,
+            len: 0,
+            sync_on_flush: false,
+        })
+    }
+
+    /// Open an existing bag file for reading.
+    pub fn open(path: impl AsRef<Path>) -> Result<Self> {
+        let path = path.as_ref().to_path_buf();
+        let f = File::open(&path)?;
+        let len = f.metadata()?.len();
+        Ok(Self { path, writer: None, reader: Some(f), len, sync_on_flush: false })
+    }
+
+    /// Enable fsync-on-flush (disk benchmark honesty knob).
+    pub fn set_sync_on_flush(&mut self, on: bool) {
+        self.sync_on_flush = on;
+    }
+
+    pub fn path(&self) -> &Path {
+        &self.path
+    }
+
+    fn ensure_reader(&mut self) -> Result<&mut File> {
+        if self.reader.is_none() {
+            self.reader = Some(File::open(&self.path)?);
+        }
+        Ok(self.reader.as_mut().unwrap())
+    }
+}
+
+impl ChunkStore for DiskChunkedFile {
+    fn append(&mut self, data: &[u8]) -> Result<u64> {
+        let w = self
+            .writer
+            .as_mut()
+            .ok_or_else(|| Error::Io(std::io::Error::other("bag opened read-only")))?;
+        let offset = self.len;
+        w.write_all(data)?;
+        self.len += data.len() as u64;
+        // Invalidate the read handle's view (it may have a stale length).
+        self.reader = None;
+        Ok(offset)
+    }
+
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        // Reads must observe buffered writes.
+        if let Some(w) = self.writer.as_mut() {
+            w.flush()?;
+        }
+        let r = self.ensure_reader()?;
+        r.seek(SeekFrom::Start(offset))?;
+        let mut buf = vec![0u8; len];
+        r.read_exact(&mut buf).map_err(|e| {
+            if e.kind() == std::io::ErrorKind::UnexpectedEof {
+                Error::Corrupt(format!("bag truncated at offset {offset} (+{len})"))
+            } else {
+                Error::Io(e)
+            }
+        })?;
+        Ok(buf)
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        if let Some(w) = self.writer.as_mut() {
+            w.flush()?;
+            if self.sync_on_flush {
+                w.get_ref().sync_data()?;
+            }
+        }
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "disk"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp(name: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join("av_simd_test_chunked");
+        std::fs::create_dir_all(&dir).unwrap();
+        dir.join(format!("{name}_{}", std::process::id()))
+    }
+
+    #[test]
+    fn append_then_read_back() {
+        let p = tmp("rw.bag");
+        let mut f = DiskChunkedFile::create(&p).unwrap();
+        let o1 = f.append(b"hello").unwrap();
+        let o2 = f.append(b"world!").unwrap();
+        assert_eq!(o1, 0);
+        assert_eq!(o2, 5);
+        assert_eq!(f.len(), 11);
+        assert_eq!(f.read_at(0, 5).unwrap(), b"hello");
+        assert_eq!(f.read_at(5, 6).unwrap(), b"world!");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn read_past_end_is_corrupt() {
+        let p = tmp("short.bag");
+        let mut f = DiskChunkedFile::create(&p).unwrap();
+        f.append(b"abc").unwrap();
+        assert!(matches!(f.read_at(1, 10), Err(Error::Corrupt(_))));
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn reopen_for_read() {
+        let p = tmp("reopen.bag");
+        {
+            let mut f = DiskChunkedFile::create(&p).unwrap();
+            f.append(b"persisted").unwrap();
+            f.flush().unwrap();
+        }
+        let mut f = DiskChunkedFile::open(&p).unwrap();
+        assert_eq!(f.len(), 9);
+        assert_eq!(f.read_at(0, 9).unwrap(), b"persisted");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn readonly_append_fails() {
+        let p = tmp("ro.bag");
+        {
+            let mut f = DiskChunkedFile::create(&p).unwrap();
+            f.append(b"x").unwrap();
+            f.flush().unwrap();
+        }
+        let mut f = DiskChunkedFile::open(&p).unwrap();
+        assert!(f.append(b"y").is_err());
+        std::fs::remove_file(&p).ok();
+    }
+}

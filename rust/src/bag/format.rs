@@ -1,0 +1,378 @@
+//! AVBAG on-disk format — the upper `Bag` layer of the paper's two-tier
+//! design (Fig 2).
+//!
+//! ```text
+//! file   := MAGIC record*  index  footer
+//! MAGIC  := "AVBAG1\n" (7 bytes) version:u8
+//! record := type:u8 len:u32 payload crc32(payload):u32
+//!           type 2 = CONNECTION  {conn_id:u32 topic:str type_name:str}
+//!           type 3 = CHUNK       {compression:u8 raw_len:u32 body}
+//!                      body := msg*  (deflate-compressed if compression=1)
+//!                      msg  := conn_id:u32 time:u64 data:bytes
+//!           type 4 = INDEX       {chunk_count, ChunkInfo*, conn_count, Connection*}
+//! footer := index_offset:u64 index_len:u64 FOOTER_MAGIC:u64
+//! ```
+//!
+//! All multi-byte integers little-endian; strings/bytes varint-length-
+//! prefixed (see `util::bytes`). Every record payload is CRC-protected;
+//! the reader verifies CRCs and rejects corrupt bags.
+
+use crate::error::{Error, Result};
+use crate::msg::Time;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+pub const MAGIC: &[u8; 7] = b"AVBAG1\n";
+pub const FORMAT_VERSION: u8 = 1;
+pub const FOOTER_MAGIC: u64 = 0x4741_4256_4156_4721; // arbitrary sentinel
+pub const FOOTER_LEN: u64 = 24;
+
+pub const REC_CONNECTION: u8 = 2;
+pub const REC_CHUNK: u8 = 3;
+pub const REC_INDEX: u8 = 4;
+
+/// Chunk body compression codecs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Compression {
+    None,
+    Deflate,
+}
+
+impl Compression {
+    pub fn from_name(name: &str) -> Result<Self> {
+        match name {
+            "none" => Ok(Compression::None),
+            "deflate" => Ok(Compression::Deflate),
+            other => Err(Error::BagFormat(format!("unknown compression '{other}'"))),
+        }
+    }
+
+    pub fn to_u8(self) -> u8 {
+        match self {
+            Compression::None => 0,
+            Compression::Deflate => 1,
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(Compression::None),
+            1 => Ok(Compression::Deflate),
+            other => Err(Error::BagFormat(format!("unknown compression id {other}"))),
+        }
+    }
+}
+
+/// Topic → connection metadata (rosbag "connection record").
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Connection {
+    pub conn_id: u32,
+    pub topic: String,
+    pub type_name: String,
+}
+
+impl Connection {
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u32(self.conn_id);
+        w.put_str(&self.topic);
+        w.put_str(&self.type_name);
+    }
+
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            conn_id: r.get_u32()?,
+            topic: r.get_str()?,
+            type_name: r.get_str()?,
+        })
+    }
+}
+
+/// One message inside a chunk body.
+#[derive(Debug, Clone, PartialEq)]
+pub struct MessageRecord {
+    pub conn_id: u32,
+    pub time: Time,
+    pub data: Vec<u8>,
+}
+
+/// Per-chunk index entry.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ChunkInfo {
+    /// Absolute file offset of the chunk's record envelope.
+    pub offset: u64,
+    /// Envelope + payload + crc length, for single-read fetches.
+    pub stored_len: u32,
+    pub start_time: Time,
+    pub end_time: Time,
+    pub message_count: u32,
+}
+
+impl ChunkInfo {
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.offset);
+        w.put_u32(self.stored_len);
+        w.put_u64(self.start_time.nanos);
+        w.put_u64(self.end_time.nanos);
+        w.put_u32(self.message_count);
+    }
+
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            offset: r.get_u64()?,
+            stored_len: r.get_u32()?,
+            start_time: Time::from_nanos(r.get_u64()?),
+            end_time: Time::from_nanos(r.get_u64()?),
+            message_count: r.get_u32()?,
+        })
+    }
+}
+
+/// Wrap a record payload in the `type len payload crc` envelope.
+pub fn encode_record(rec_type: u8, payload: &[u8]) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(payload.len() + 9);
+    w.put_u8(rec_type);
+    w.put_u32(payload.len() as u32);
+    w.put_raw(payload);
+    w.put_u32(crc32fast::hash(payload));
+    w.into_vec()
+}
+
+/// Parse and CRC-check a record envelope from `buf`; returns
+/// (rec_type, payload, total_stored_len).
+pub fn decode_record(buf: &[u8]) -> Result<(u8, &[u8], usize)> {
+    let mut r = ByteReader::new(buf);
+    let rec_type = r.get_u8()?;
+    let len = r.get_u32()? as usize;
+    let payload = r.get_raw(len)?;
+    let crc = r.get_u32()?;
+    let actual = crc32fast::hash(payload);
+    if crc != actual {
+        return Err(Error::BagFormat(format!(
+            "record type {rec_type} CRC mismatch: stored {crc:#10x}, computed {actual:#10x}"
+        )));
+    }
+    Ok((rec_type, payload, r.position()))
+}
+
+/// Encode a chunk body (message list), optionally compressing.
+pub fn encode_chunk(messages: &[MessageRecord], compression: Compression) -> Result<Vec<u8>> {
+    let mut body = ByteWriter::with_capacity(
+        messages.iter().map(|m| m.data.len() + 16).sum::<usize>(),
+    );
+    for m in messages {
+        body.put_u32(m.conn_id);
+        body.put_u64(m.time.nanos);
+        body.put_bytes(&m.data);
+    }
+    let raw = body.into_vec();
+    let (codec_body, raw_len) = match compression {
+        Compression::None => (raw, 0u32),
+        Compression::Deflate => {
+            use std::io::Write;
+            let raw_len = raw.len() as u32;
+            let mut enc =
+                flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+            enc.write_all(&raw)?;
+            (enc.finish()?, raw_len)
+        }
+    };
+    let mut payload = ByteWriter::with_capacity(codec_body.len() + 5);
+    payload.put_u8(compression.to_u8());
+    payload.put_u32(raw_len);
+    payload.put_raw(&codec_body);
+    Ok(encode_record(REC_CHUNK, payload.as_slice()))
+}
+
+/// Decode a chunk record payload back into messages.
+pub fn decode_chunk(payload: &[u8]) -> Result<Vec<MessageRecord>> {
+    let mut r = ByteReader::new(payload);
+    let compression = Compression::from_u8(r.get_u8()?)?;
+    let raw_len = r.get_u32()? as usize;
+    let body_slice = r.get_raw(r.remaining())?;
+    let raw: Vec<u8> = match compression {
+        Compression::None => body_slice.to_vec(),
+        Compression::Deflate => {
+            use std::io::Read;
+            let mut dec = flate2::read::DeflateDecoder::new(body_slice);
+            let mut out = Vec::with_capacity(raw_len);
+            dec.read_to_end(&mut out)?;
+            if out.len() != raw_len {
+                return Err(Error::BagFormat(format!(
+                    "chunk decompressed to {} bytes, index said {raw_len}",
+                    out.len()
+                )));
+            }
+            out
+        }
+    };
+    let mut r = ByteReader::new(&raw);
+    let mut messages = Vec::new();
+    while !r.is_empty() {
+        messages.push(MessageRecord {
+            conn_id: r.get_u32()?,
+            time: Time::from_nanos(r.get_u64()?),
+            data: r.get_bytes_vec()?,
+        });
+    }
+    Ok(messages)
+}
+
+/// Encode the index record payload.
+pub fn encode_index(chunks: &[ChunkInfo], connections: &[Connection]) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_varint(chunks.len() as u64);
+    for c in chunks {
+        c.encode(&mut w);
+    }
+    w.put_varint(connections.len() as u64);
+    for c in connections {
+        c.encode(&mut w);
+    }
+    encode_record(REC_INDEX, w.as_slice())
+}
+
+/// Decode the index record payload.
+pub fn decode_index(payload: &[u8]) -> Result<(Vec<ChunkInfo>, Vec<Connection>)> {
+    let mut r = ByteReader::new(payload);
+    let n_chunks = r.get_varint()? as usize;
+    let mut chunks = Vec::with_capacity(n_chunks);
+    for _ in 0..n_chunks {
+        chunks.push(ChunkInfo::decode(&mut r)?);
+    }
+    let n_conns = r.get_varint()? as usize;
+    let mut conns = Vec::with_capacity(n_conns);
+    for _ in 0..n_conns {
+        conns.push(Connection::decode(&mut r)?);
+    }
+    Ok((chunks, conns))
+}
+
+/// Encode the fixed-size footer.
+pub fn encode_footer(index_offset: u64, index_len: u64) -> Vec<u8> {
+    let mut w = ByteWriter::with_capacity(FOOTER_LEN as usize);
+    w.put_u64(index_offset);
+    w.put_u64(index_len);
+    w.put_u64(FOOTER_MAGIC);
+    w.into_vec()
+}
+
+/// Decode the footer; returns (index_offset, index_len).
+pub fn decode_footer(buf: &[u8]) -> Result<(u64, u64)> {
+    let mut r = ByteReader::new(buf);
+    let off = r.get_u64()?;
+    let len = r.get_u64()?;
+    let magic = r.get_u64()?;
+    if magic != FOOTER_MAGIC {
+        return Err(Error::BagFormat("bad footer magic (truncated bag?)".into()));
+    }
+    Ok((off, len))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn msgs() -> Vec<MessageRecord> {
+        (0..10)
+            .map(|i| MessageRecord {
+                conn_id: i % 3,
+                time: Time::from_nanos(i as u64 * 100),
+                data: vec![i as u8; (i as usize + 1) * 10],
+            })
+            .collect()
+    }
+
+    #[test]
+    fn record_envelope_roundtrip() {
+        let rec = encode_record(REC_CONNECTION, b"payload");
+        let (t, p, n) = decode_record(&rec).unwrap();
+        assert_eq!(t, REC_CONNECTION);
+        assert_eq!(p, b"payload");
+        assert_eq!(n, rec.len());
+    }
+
+    #[test]
+    fn crc_corruption_detected() {
+        let mut rec = encode_record(REC_CHUNK, b"sensor-data");
+        let n = rec.len();
+        rec[n - 6] ^= 0xff; // flip a payload byte
+        assert!(matches!(decode_record(&rec), Err(Error::BagFormat(_))));
+    }
+
+    #[test]
+    fn chunk_roundtrip_uncompressed() {
+        let m = msgs();
+        let rec = encode_chunk(&m, Compression::None).unwrap();
+        let (t, payload, _) = decode_record(&rec).unwrap();
+        assert_eq!(t, REC_CHUNK);
+        assert_eq!(decode_chunk(payload).unwrap(), m);
+    }
+
+    #[test]
+    fn chunk_roundtrip_deflate() {
+        let m = msgs();
+        let rec = encode_chunk(&m, Compression::Deflate).unwrap();
+        let (_, payload, _) = decode_record(&rec).unwrap();
+        assert_eq!(decode_chunk(payload).unwrap(), m);
+    }
+
+    #[test]
+    fn deflate_compresses_redundancy() {
+        let m: Vec<MessageRecord> = (0..20)
+            .map(|i| MessageRecord {
+                conn_id: 0,
+                time: Time::from_nanos(i),
+                data: vec![42u8; 4096],
+            })
+            .collect();
+        let plain = encode_chunk(&m, Compression::None).unwrap();
+        let packed = encode_chunk(&m, Compression::Deflate).unwrap();
+        assert!(packed.len() < plain.len() / 4, "{} !< {}", packed.len(), plain.len());
+    }
+
+    #[test]
+    fn index_roundtrip() {
+        let chunks = vec![
+            ChunkInfo {
+                offset: 8,
+                stored_len: 100,
+                start_time: Time::from_nanos(0),
+                end_time: Time::from_nanos(900),
+                message_count: 10,
+            },
+            ChunkInfo {
+                offset: 108,
+                stored_len: 50,
+                start_time: Time::from_nanos(1000),
+                end_time: Time::from_nanos(1500),
+                message_count: 5,
+            },
+        ];
+        let conns = vec![
+            Connection { conn_id: 0, topic: "/camera".into(), type_name: "av/sensor/Image".into() },
+            Connection { conn_id: 1, topic: "/lidar".into(), type_name: "av/sensor/PointCloud".into() },
+        ];
+        let rec = encode_index(&chunks, &conns);
+        let (t, payload, _) = decode_record(&rec).unwrap();
+        assert_eq!(t, REC_INDEX);
+        let (c2, n2) = decode_index(payload).unwrap();
+        assert_eq!(c2, chunks);
+        assert_eq!(n2, conns);
+    }
+
+    #[test]
+    fn footer_roundtrip_and_magic_check() {
+        let f = encode_footer(1234, 567);
+        assert_eq!(f.len() as u64, FOOTER_LEN);
+        assert_eq!(decode_footer(&f).unwrap(), (1234, 567));
+        let mut bad = f.clone();
+        bad[20] ^= 1;
+        assert!(decode_footer(&bad).is_err());
+    }
+
+    #[test]
+    fn compression_names() {
+        assert_eq!(Compression::from_name("none").unwrap(), Compression::None);
+        assert_eq!(Compression::from_name("deflate").unwrap(), Compression::Deflate);
+        assert!(Compression::from_name("zstd").is_err());
+    }
+}

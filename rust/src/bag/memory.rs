@@ -1,0 +1,192 @@
+//! `MemoryChunkedFile` — the paper's §3.2 contribution: a drop-in
+//! replacement for the disk-backed `ChunkedFile` that keeps the whole bag
+//! in RAM, so ROSBag play reads and record writes never touch disk I/O.
+//!
+//! Storage is a list of fixed-size pages rather than one `Vec<u8>` so
+//! appends never copy previously written data (a 1 GiB bag would otherwise
+//! pay repeated realloc-copies), mirroring the "chunked" nature of the
+//! original class.
+
+use super::chunked_file::ChunkStore;
+use crate::error::{Error, Result};
+use std::path::Path;
+
+const PAGE_SIZE: usize = 1 << 20; // 1 MiB pages
+
+/// In-memory bag storage.
+pub struct MemoryChunkedFile {
+    pages: Vec<Box<[u8; PAGE_SIZE]>>,
+    len: u64,
+}
+
+impl Default for MemoryChunkedFile {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl MemoryChunkedFile {
+    pub fn new() -> Self {
+        Self { pages: Vec::new(), len: 0 }
+    }
+
+    /// Load a bag file from disk into memory (cache warm-up path).
+    pub fn load(path: impl AsRef<Path>) -> Result<Self> {
+        let data = std::fs::read(path.as_ref())?;
+        let mut f = Self::new();
+        f.append(&data)?;
+        Ok(f)
+    }
+
+    /// Wrap an existing byte buffer (zero-setup for tests and the pipe).
+    pub fn from_bytes(data: &[u8]) -> Self {
+        let mut f = Self::new();
+        f.append(data).expect("memory append is infallible");
+        f
+    }
+
+    /// Persist the in-memory bag to disk (cache write-back path).
+    pub fn persist(&self, path: impl AsRef<Path>) -> Result<()> {
+        let path = path.as_ref();
+        if let Some(parent) = path.parent() {
+            if !parent.as_os_str().is_empty() {
+                std::fs::create_dir_all(parent)?;
+            }
+        }
+        let mut out = std::io::BufWriter::new(std::fs::File::create(path)?);
+        use std::io::Write;
+        let mut remaining = self.len as usize;
+        for page in &self.pages {
+            let take = remaining.min(PAGE_SIZE);
+            out.write_all(&page[..take])?;
+            remaining -= take;
+        }
+        out.flush()?;
+        Ok(())
+    }
+
+    /// Copy the full contents out as one contiguous buffer.
+    pub fn to_vec(&self) -> Vec<u8> {
+        let mut out = Vec::with_capacity(self.len as usize);
+        let mut remaining = self.len as usize;
+        for page in &self.pages {
+            let take = remaining.min(PAGE_SIZE);
+            out.extend_from_slice(&page[..take]);
+            remaining -= take;
+        }
+        out
+    }
+
+    /// Bytes of RAM currently held (page-granular).
+    pub fn capacity_bytes(&self) -> u64 {
+        (self.pages.len() * PAGE_SIZE) as u64
+    }
+}
+
+impl ChunkStore for MemoryChunkedFile {
+    fn append(&mut self, data: &[u8]) -> Result<u64> {
+        let offset = self.len;
+        let mut src = data;
+        while !src.is_empty() {
+            let page_off = (self.len as usize) % PAGE_SIZE;
+            if page_off == 0 && self.len as usize / PAGE_SIZE == self.pages.len() {
+                // Zeroed page allocation; avoids Box<[u8; N]> stack copy.
+                let page = vec![0u8; PAGE_SIZE].into_boxed_slice();
+                let page: Box<[u8; PAGE_SIZE]> =
+                    page.try_into().expect("page size fixed");
+                self.pages.push(page);
+            }
+            let page = self.pages.last_mut().unwrap();
+            let take = src.len().min(PAGE_SIZE - page_off);
+            page[page_off..page_off + take].copy_from_slice(&src[..take]);
+            self.len += take as u64;
+            src = &src[take..];
+        }
+        Ok(offset)
+    }
+
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        if offset + len as u64 > self.len {
+            return Err(Error::Corrupt(format!(
+                "memory bag read past end: offset {offset} + {len} > {}",
+                self.len
+            )));
+        }
+        let mut out = Vec::with_capacity(len);
+        let mut pos = offset as usize;
+        let mut remaining = len;
+        while remaining > 0 {
+            let page = &self.pages[pos / PAGE_SIZE];
+            let page_off = pos % PAGE_SIZE;
+            let take = remaining.min(PAGE_SIZE - page_off);
+            out.extend_from_slice(&page[page_off..page_off + take]);
+            pos += take;
+            remaining -= take;
+        }
+        Ok(out)
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(()) // nothing to flush — that's the point
+    }
+
+    fn backend(&self) -> &'static str {
+        "memory"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_read_within_page() {
+        let mut f = MemoryChunkedFile::new();
+        f.append(b"hello").unwrap();
+        f.append(b" world").unwrap();
+        assert_eq!(f.len(), 11);
+        assert_eq!(f.read_at(0, 11).unwrap(), b"hello world");
+        assert_eq!(f.read_at(6, 5).unwrap(), b"world");
+    }
+
+    #[test]
+    fn crosses_page_boundaries() {
+        let mut f = MemoryChunkedFile::new();
+        let blob: Vec<u8> = (0..(PAGE_SIZE * 2 + 123)).map(|i| (i % 251) as u8).collect();
+        f.append(&blob).unwrap();
+        assert_eq!(f.len() as usize, blob.len());
+        // read spanning the first page boundary
+        let r = f.read_at((PAGE_SIZE - 10) as u64, 20).unwrap();
+        assert_eq!(&r, &blob[PAGE_SIZE - 10..PAGE_SIZE + 10]);
+        assert_eq!(f.to_vec(), blob);
+    }
+
+    #[test]
+    fn read_past_end_rejected() {
+        let mut f = MemoryChunkedFile::from_bytes(b"abc");
+        assert!(f.read_at(1, 5).is_err());
+    }
+
+    #[test]
+    fn persist_and_load_roundtrip() {
+        let dir = std::env::temp_dir().join("av_simd_test_memchunk");
+        std::fs::create_dir_all(&dir).unwrap();
+        let p = dir.join(format!("m_{}.bag", std::process::id()));
+        let blob: Vec<u8> = (0..50_000).map(|i| (i * 7 % 256) as u8).collect();
+        let f = MemoryChunkedFile::from_bytes(&blob);
+        f.persist(&p).unwrap();
+        let mut g = MemoryChunkedFile::load(&p).unwrap();
+        assert_eq!(g.len() as usize, blob.len());
+        assert_eq!(g.read_at(0, blob.len()).unwrap(), blob);
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn backend_name() {
+        assert_eq!(MemoryChunkedFile::new().backend(), "memory");
+    }
+}

@@ -1,0 +1,305 @@
+//! `BagReader` — the Play half of rosbag (paper §2.1): opens a bag via
+//! any [`ChunkStore`], loads the footer + index, and iterates messages in
+//! time order (merging across chunks), optionally filtered by topic.
+
+use super::chunked_file::ChunkStore;
+use super::format::{self, ChunkInfo, Connection};
+use crate::error::{Error, Result};
+use crate::msg::{Message, Time};
+use std::collections::HashMap;
+
+/// One played-back message.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlayedMessage {
+    pub topic: String,
+    pub type_name: String,
+    pub time: Time,
+    pub data: Vec<u8>,
+}
+
+impl PlayedMessage {
+    /// Decode into a typed message (checks the type name).
+    pub fn decode_as<M: Message>(&self) -> Result<M> {
+        if self.type_name != M::TYPE_NAME {
+            return Err(Error::BagFormat(format!(
+                "message on '{}' is {}, not {}",
+                self.topic,
+                self.type_name,
+                M::TYPE_NAME
+            )));
+        }
+        M::decode(&self.data)
+    }
+}
+
+/// Indexed bag reader.
+pub struct BagReader<S: ChunkStore> {
+    store: S,
+    chunks: Vec<ChunkInfo>,
+    connections: Vec<Connection>,
+    conn_by_id: HashMap<u32, usize>,
+}
+
+impl<S: ChunkStore> BagReader<S> {
+    /// Open a bag: verify magic, read footer, load the index.
+    pub fn open(mut store: S) -> Result<Self> {
+        let total = store.len();
+        if total < 8 + format::FOOTER_LEN {
+            return Err(Error::BagFormat(format!("bag too short ({total} bytes)")));
+        }
+        let head = store.read_at(0, 8)?;
+        if &head[..7] != format::MAGIC {
+            return Err(Error::BagFormat("bad magic: not an AVBAG file".into()));
+        }
+        if head[7] != format::FORMAT_VERSION {
+            return Err(Error::BagFormat(format!(
+                "unsupported bag version {}",
+                head[7]
+            )));
+        }
+        let footer = store.read_at(total - format::FOOTER_LEN, format::FOOTER_LEN as usize)?;
+        let (index_offset, index_len) = format::decode_footer(&footer)?;
+        if index_offset + index_len > total {
+            return Err(Error::BagFormat("index extends past end of bag".into()));
+        }
+        let index_buf = store.read_at(index_offset, index_len as usize)?;
+        let (rec_type, payload, _) = format::decode_record(&index_buf)?;
+        if rec_type != format::REC_INDEX {
+            return Err(Error::BagFormat(format!(
+                "expected index record at footer offset, got type {rec_type}"
+            )));
+        }
+        let (chunks, connections) = format::decode_index(payload)?;
+        let conn_by_id = connections
+            .iter()
+            .enumerate()
+            .map(|(i, c)| (c.conn_id, i))
+            .collect();
+        Ok(Self { store, chunks, connections, conn_by_id })
+    }
+
+    pub fn connections(&self) -> &[Connection] {
+        &self.connections
+    }
+
+    pub fn chunk_count(&self) -> usize {
+        self.chunks.len()
+    }
+
+    pub fn message_count(&self) -> u64 {
+        self.chunks.iter().map(|c| c.message_count as u64).sum()
+    }
+
+    /// Bag time span (start of first chunk, end of last), if non-empty.
+    pub fn time_range(&self) -> Option<(Time, Time)> {
+        let start = self.chunks.iter().map(|c| c.start_time).min()?;
+        let end = self.chunks.iter().map(|c| c.end_time).max()?;
+        Some((start, end))
+    }
+
+    /// Read and decode one chunk's messages.
+    fn read_chunk(&mut self, i: usize) -> Result<Vec<format::MessageRecord>> {
+        let info = self.chunks[i].clone();
+        let buf = self.store.read_at(info.offset, info.stored_len as usize)?;
+        let (rec_type, payload, _) = format::decode_record(&buf)?;
+        if rec_type != format::REC_CHUNK {
+            return Err(Error::BagFormat(format!(
+                "chunk index pointed at record type {rec_type}"
+            )));
+        }
+        let msgs = format::decode_chunk(payload)?;
+        if msgs.len() != info.message_count as usize {
+            return Err(Error::BagFormat(format!(
+                "chunk {i} decoded {} messages, index said {}",
+                msgs.len(),
+                info.message_count
+            )));
+        }
+        Ok(msgs)
+    }
+
+    /// Play back all messages in time order. `topics` = None plays
+    /// everything; otherwise only the named topics.
+    pub fn play(&mut self, topics: Option<&[&str]>) -> Result<Vec<PlayedMessage>> {
+        let keep: Option<Vec<u32>> = topics.map(|ts| {
+            self.connections
+                .iter()
+                .filter(|c| ts.contains(&c.topic.as_str()))
+                .map(|c| c.conn_id)
+                .collect()
+        });
+        let mut out = Vec::new();
+        // Chunks are time-ordered by construction; iterate in index order
+        // and stable-sort at the end to merge overlapping chunk spans.
+        for i in 0..self.chunks.len() {
+            let msgs = self.read_chunk(i)?;
+            for m in msgs {
+                if let Some(keep) = &keep {
+                    if !keep.contains(&m.conn_id) {
+                        continue;
+                    }
+                }
+                let ci = *self.conn_by_id.get(&m.conn_id).ok_or_else(|| {
+                    Error::BagFormat(format!("message references unknown conn {}", m.conn_id))
+                })?;
+                let conn = &self.connections[ci];
+                out.push(PlayedMessage {
+                    topic: conn.topic.clone(),
+                    type_name: conn.type_name.clone(),
+                    time: m.time,
+                    data: m.data,
+                });
+            }
+        }
+        out.sort_by_key(|m| m.time);
+        Ok(out)
+    }
+
+    /// Stream messages chunk-by-chunk through `f` without materializing
+    /// the whole bag (the hot path for big bags).
+    pub fn for_each(
+        &mut self,
+        topics: Option<&[&str]>,
+        mut f: impl FnMut(PlayedMessage) -> Result<()>,
+    ) -> Result<u64> {
+        let keep: Option<Vec<u32>> = topics.map(|ts| {
+            self.connections
+                .iter()
+                .filter(|c| ts.contains(&c.topic.as_str()))
+                .map(|c| c.conn_id)
+                .collect()
+        });
+        let mut n = 0u64;
+        for i in 0..self.chunks.len() {
+            let msgs = self.read_chunk(i)?;
+            for m in msgs {
+                if let Some(keep) = &keep {
+                    if !keep.contains(&m.conn_id) {
+                        continue;
+                    }
+                }
+                let ci = *self.conn_by_id.get(&m.conn_id).ok_or_else(|| {
+                    Error::BagFormat(format!("message references unknown conn {}", m.conn_id))
+                })?;
+                let conn = &self.connections[ci];
+                f(PlayedMessage {
+                    topic: conn.topic.clone(),
+                    type_name: conn.type_name.clone(),
+                    time: m.time,
+                    data: m.data,
+                })?;
+                n += 1;
+            }
+        }
+        Ok(n)
+    }
+
+    /// Consume the reader and return the store.
+    pub fn into_store(self) -> S {
+        self.store
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bag::format::Compression;
+    use crate::bag::memory::MemoryChunkedFile;
+    use crate::bag::writer::BagWriter;
+    use crate::msg::{Image, PointCloud};
+
+    fn build_bag(compression: Compression) -> MemoryChunkedFile {
+        let mut w =
+            BagWriter::new(MemoryChunkedFile::new(), compression, 4096).unwrap();
+        for i in 0..20u64 {
+            if i % 2 == 0 {
+                let img = Image::synthetic(8, 8, i);
+                w.write("/camera", Time::from_nanos(i * 10), &img).unwrap();
+            } else {
+                let pc = PointCloud::synthetic(32, i);
+                w.write("/lidar", Time::from_nanos(i * 10), &pc).unwrap();
+            }
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn full_roundtrip_time_ordered() {
+        let store = build_bag(Compression::None);
+        let mut r = BagReader::open(store).unwrap();
+        assert_eq!(r.message_count(), 20);
+        assert_eq!(r.connections().len(), 2);
+        let msgs = r.play(None).unwrap();
+        assert_eq!(msgs.len(), 20);
+        for pair in msgs.windows(2) {
+            assert!(pair[0].time <= pair[1].time, "not time ordered");
+        }
+        // every even message decodes as an Image
+        let img: Image = msgs[0].decode_as().unwrap();
+        assert_eq!(img.width, 8);
+    }
+
+    #[test]
+    fn topic_filtering() {
+        let store = build_bag(Compression::None);
+        let mut r = BagReader::open(store).unwrap();
+        let cams = r.play(Some(&["/camera"])).unwrap();
+        assert_eq!(cams.len(), 10);
+        assert!(cams.iter().all(|m| m.topic == "/camera"));
+        let none = r.play(Some(&["/radar"])).unwrap();
+        assert!(none.is_empty());
+    }
+
+    #[test]
+    fn deflate_bag_roundtrip() {
+        let store = build_bag(Compression::Deflate);
+        let mut r = BagReader::open(store).unwrap();
+        assert_eq!(r.play(None).unwrap().len(), 20);
+    }
+
+    #[test]
+    fn for_each_streams_all() {
+        let store = build_bag(Compression::None);
+        let mut r = BagReader::open(store).unwrap();
+        let mut seen = 0;
+        let n = r
+            .for_each(None, |m| {
+                assert!(!m.data.is_empty());
+                seen += 1;
+                Ok(())
+            })
+            .unwrap();
+        assert_eq!(n, 20);
+        assert_eq!(seen, 20);
+    }
+
+    #[test]
+    fn wrong_type_decode_fails() {
+        let store = build_bag(Compression::None);
+        let mut r = BagReader::open(store).unwrap();
+        let msgs = r.play(Some(&["/camera"])).unwrap();
+        assert!(msgs[0].decode_as::<PointCloud>().is_err());
+    }
+
+    #[test]
+    fn garbage_rejected() {
+        let store = MemoryChunkedFile::from_bytes(&vec![7u8; 100]);
+        assert!(BagReader::open(store).is_err());
+    }
+
+    #[test]
+    fn truncated_bag_rejected() {
+        let full = build_bag(Compression::None).to_vec();
+        let store = MemoryChunkedFile::from_bytes(&full[..full.len() - 10]);
+        assert!(BagReader::open(store).is_err());
+    }
+
+    #[test]
+    fn time_range_spans_messages() {
+        let store = build_bag(Compression::None);
+        let r = BagReader::open(store).unwrap();
+        let (start, end) = r.time_range().unwrap();
+        assert_eq!(start, Time::from_nanos(0));
+        assert_eq!(end, Time::from_nanos(190));
+    }
+}

@@ -1,0 +1,191 @@
+//! `BagWriter` — the Record half of rosbag (paper §2.1): subscribe-side
+//! code hands in (topic, time, payload) triples; the writer buffers them
+//! into chunks, seals chunks at the configured size, and finalizes the
+//! index + footer on close.
+//!
+//! Generic over [`ChunkStore`], so recording to disk and recording into
+//! the in-memory cache (paper §3.2) is the same code path.
+
+use super::chunked_file::ChunkStore;
+use super::format::{self, ChunkInfo, Compression, Connection, MessageRecord};
+use crate::error::{Error, Result};
+use crate::msg::{Message, Time};
+use std::collections::HashMap;
+
+/// Streaming bag writer.
+pub struct BagWriter<S: ChunkStore> {
+    store: S,
+    compression: Compression,
+    chunk_size: usize,
+    /// Buffered messages for the open chunk.
+    pending: Vec<MessageRecord>,
+    pending_bytes: usize,
+    connections: Vec<Connection>,
+    topic_ids: HashMap<String, u32>,
+    chunks: Vec<ChunkInfo>,
+    message_count: u64,
+    finished: bool,
+}
+
+impl<S: ChunkStore> BagWriter<S> {
+    /// Start a bag on `store`. Writes the magic immediately.
+    pub fn new(mut store: S, compression: Compression, chunk_size: usize) -> Result<Self> {
+        if store.len() != 0 {
+            return Err(Error::BagFormat("store not empty at bag start".into()));
+        }
+        let mut head = Vec::with_capacity(8);
+        head.extend_from_slice(format::MAGIC);
+        head.push(format::FORMAT_VERSION);
+        store.append(&head)?;
+        Ok(Self {
+            store,
+            compression,
+            chunk_size: chunk_size.max(1024),
+            pending: Vec::new(),
+            pending_bytes: 0,
+            connections: Vec::new(),
+            topic_ids: HashMap::new(),
+            chunks: Vec::new(),
+            message_count: 0,
+            finished: false,
+        })
+    }
+
+    /// Register (or look up) the connection id for a topic.
+    pub fn connection(&mut self, topic: &str, type_name: &str) -> Result<u32> {
+        if let Some(&id) = self.topic_ids.get(topic) {
+            let existing = &self.connections[id as usize];
+            if existing.type_name != type_name {
+                return Err(Error::BagFormat(format!(
+                    "topic '{topic}' recorded as {} but got {type_name}",
+                    existing.type_name
+                )));
+            }
+            return Ok(id);
+        }
+        let id = self.connections.len() as u32;
+        self.connections.push(Connection {
+            conn_id: id,
+            topic: topic.to_string(),
+            type_name: type_name.to_string(),
+        });
+        self.topic_ids.insert(topic.to_string(), id);
+        Ok(id)
+    }
+
+    /// Append a raw, already-encoded message payload.
+    pub fn write_raw(
+        &mut self,
+        topic: &str,
+        type_name: &str,
+        time: Time,
+        data: Vec<u8>,
+    ) -> Result<()> {
+        if self.finished {
+            return Err(Error::BagFormat("bag already finished".into()));
+        }
+        let conn_id = self.connection(topic, type_name)?;
+        self.pending_bytes += data.len() + 16;
+        self.pending.push(MessageRecord { conn_id, time, data });
+        self.message_count += 1;
+        if self.pending_bytes >= self.chunk_size {
+            self.seal_chunk()?;
+        }
+        Ok(())
+    }
+
+    /// Append a typed message (encodes with the message envelope).
+    pub fn write<M: Message>(&mut self, topic: &str, time: Time, msg: &M) -> Result<()> {
+        self.write_raw(topic, M::TYPE_NAME, time, msg.encode())
+    }
+
+    fn seal_chunk(&mut self) -> Result<()> {
+        if self.pending.is_empty() {
+            return Ok(());
+        }
+        let start_time = self.pending.iter().map(|m| m.time).min().unwrap();
+        let end_time = self.pending.iter().map(|m| m.time).max().unwrap();
+        let rec = format::encode_chunk(&self.pending, self.compression)?;
+        let offset = self.store.append(&rec)?;
+        self.chunks.push(ChunkInfo {
+            offset,
+            stored_len: rec.len() as u32,
+            start_time,
+            end_time,
+            message_count: self.pending.len() as u32,
+        });
+        self.pending.clear();
+        self.pending_bytes = 0;
+        Ok(())
+    }
+
+    /// Messages written so far (including buffered).
+    pub fn message_count(&self) -> u64 {
+        self.message_count
+    }
+
+    /// Seal the last chunk, write connection records, index and footer.
+    /// Returns the underlying store.
+    pub fn finish(mut self) -> Result<S> {
+        self.seal_chunk()?;
+        // Connection records (also embedded in the index; standalone
+        // records allow streaming readers to recover without the footer).
+        for c in &self.connections {
+            let mut w = crate::util::bytes::ByteWriter::new();
+            c.encode(&mut w);
+            let rec = format::encode_record(format::REC_CONNECTION, w.as_slice());
+            self.store.append(&rec)?;
+        }
+        let index = format::encode_index(&self.chunks, &self.connections);
+        let index_offset = self.store.append(&index)?;
+        let footer = format::encode_footer(index_offset, index.len() as u64);
+        self.store.append(&footer)?;
+        self.store.flush()?;
+        self.finished = true;
+        Ok(self.store)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bag::memory::MemoryChunkedFile;
+    use crate::msg::Image;
+
+    #[test]
+    fn writes_magic_first() {
+        let w = BagWriter::new(MemoryChunkedFile::new(), Compression::None, 4096).unwrap();
+        let mut store = w.finish().unwrap();
+        let head = store.read_at(0, 8).unwrap();
+        assert_eq!(&head[..7], format::MAGIC);
+        assert_eq!(head[7], format::FORMAT_VERSION);
+    }
+
+    #[test]
+    fn chunk_seals_at_size() {
+        let mut w = BagWriter::new(MemoryChunkedFile::new(), Compression::None, 2048).unwrap();
+        for i in 0..10 {
+            w.write_raw("/camera", "av/sensor/Image", Time::from_nanos(i), vec![0u8; 512])
+                .unwrap();
+        }
+        assert!(w.chunks.len() >= 2, "expected multiple sealed chunks, got {}", w.chunks.len());
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn type_clash_on_topic_rejected() {
+        let mut w = BagWriter::new(MemoryChunkedFile::new(), Compression::None, 4096).unwrap();
+        w.write_raw("/t", "A", Time::ZERO, vec![1]).unwrap();
+        assert!(w.write_raw("/t", "B", Time::ZERO, vec![2]).is_err());
+    }
+
+    #[test]
+    fn typed_write_uses_message_type() {
+        let mut w = BagWriter::new(MemoryChunkedFile::new(), Compression::None, 4096).unwrap();
+        let img = Image::synthetic(4, 4, 0);
+        w.write("/camera", Time::from_nanos(1), &img).unwrap();
+        assert_eq!(w.connections[0].type_name, "av/sensor/Image");
+        assert_eq!(w.message_count(), 1);
+        w.finish().unwrap();
+    }
+}

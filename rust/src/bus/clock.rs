@@ -1,0 +1,107 @@
+//! Simulation clock for bag playback.
+//!
+//! Bag playback can run "as fast as possible" (rate = ∞, the batch
+//! simulation mode the paper's Spark workers use) or paced against wall
+//! time at a rate multiplier like `rosbag play -r`.
+
+use crate::msg::Time;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+use std::time::Instant;
+
+/// Playback pacing mode.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum Pace {
+    /// No sleeping — replay as fast as the consumers can go.
+    FreeRun,
+    /// Real-time multiplier (1.0 = recorded speed).
+    Rate(f64),
+}
+
+/// Shared simulation clock: tracks "now" in bag time.
+#[derive(Clone)]
+pub struct SimClock {
+    now_nanos: Arc<AtomicU64>,
+    pace: Pace,
+}
+
+impl SimClock {
+    pub fn new(pace: Pace) -> Self {
+        Self { now_nanos: Arc::new(AtomicU64::new(0)), pace }
+    }
+
+    /// Current simulation time.
+    pub fn now(&self) -> Time {
+        Time::from_nanos(self.now_nanos.load(Ordering::Acquire))
+    }
+
+    /// Advance sim time to `t` (monotonic; earlier times are ignored).
+    pub fn advance_to(&self, t: Time) {
+        self.now_nanos.fetch_max(t.nanos, Ordering::AcqRel);
+    }
+
+    pub fn pace(&self) -> Pace {
+        self.pace
+    }
+
+    /// Sleep as needed so that message stamped `msg_time` (relative to
+    /// `bag_start`) is released on schedule given the pace and the wall
+    /// clock `wall_start` of playback. FreeRun never sleeps.
+    pub fn pace_for(&self, bag_start: Time, wall_start: Instant, msg_time: Time) {
+        if let Pace::Rate(r) = self.pace {
+            if r <= 0.0 {
+                return;
+            }
+            let bag_elapsed = msg_time.saturating_sub(bag_start).as_secs_f64();
+            let target_wall = bag_elapsed / r;
+            let actual_wall = wall_start.elapsed().as_secs_f64();
+            if target_wall > actual_wall {
+                std::thread::sleep(std::time::Duration::from_secs_f64(
+                    target_wall - actual_wall,
+                ));
+            }
+        }
+        self.advance_to(msg_time);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn advances_monotonically() {
+        let c = SimClock::new(Pace::FreeRun);
+        c.advance_to(Time::from_nanos(100));
+        c.advance_to(Time::from_nanos(50)); // ignored
+        assert_eq!(c.now(), Time::from_nanos(100));
+    }
+
+    #[test]
+    fn free_run_does_not_sleep() {
+        let c = SimClock::new(Pace::FreeRun);
+        let t = Instant::now();
+        c.pace_for(Time::ZERO, Instant::now(), Time::from_secs_f64(100.0));
+        assert!(t.elapsed().as_millis() < 50);
+        assert_eq!(c.now(), Time::from_secs_f64(100.0));
+    }
+
+    #[test]
+    fn rate_paces_playback() {
+        let c = SimClock::new(Pace::Rate(10.0)); // 10x speed
+        let wall = Instant::now();
+        // message 0.2s into the bag should release at ~20ms wall
+        c.pace_for(Time::ZERO, wall, Time::from_secs_f64(0.2));
+        let el = wall.elapsed().as_millis();
+        assert!(el >= 15, "released too early: {el}ms");
+        assert!(el < 200, "released too late: {el}ms");
+    }
+
+    #[test]
+    fn shared_view_across_clones() {
+        let c = SimClock::new(Pace::FreeRun);
+        let c2 = c.clone();
+        c.advance_to(Time::from_nanos(7));
+        assert_eq!(c2.now(), Time::from_nanos(7));
+    }
+}

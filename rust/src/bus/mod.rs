@@ -1,0 +1,396 @@
+//! In-process pub/sub message bus — the platform's ROS analogue (§2).
+//!
+//! The paper's architecture runs one ROS graph per Spark worker: functional
+//! modules are *nodes*, they `advertise` publishers and `subscribe`
+//! subscribers on named, typed *topics*, and a rosbag play node feeds them
+//! recorded sensor data. This module provides exactly that graph:
+//!
+//! * [`Broker`] — the message pool: topic registry with type checking.
+//! * [`Node`] — a named participant that creates publishers/subscribers.
+//! * [`Publisher<M>`] / [`Subscriber<M>`] — typed endpoints; payloads are
+//!   encoded once and fanned out as `Arc<[u8]>`.
+//! * QoS: bounded subscriber queues with configurable overflow policy
+//!   (drop-oldest like ROS, or block for lossless pipelines).
+//! * [`SimClock`] — playback clock for bag-driven time.
+
+pub mod clock;
+pub mod node;
+pub mod player;
+
+pub use clock::SimClock;
+pub use node::Node;
+pub use player::{play_bag, PlayOptions};
+
+use crate::error::{Error, Result};
+use crate::msg::Message;
+use std::collections::{HashMap, VecDeque};
+use std::marker::PhantomData;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Queue overflow behaviour for a subscriber.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OverflowPolicy {
+    /// Drop the oldest queued message (sensor-style, ROS default).
+    DropOldest,
+    /// Block the publisher until space frees (lossless pipelines).
+    Block,
+}
+
+/// Subscriber quality-of-service.
+#[derive(Debug, Clone, Copy)]
+pub struct QoS {
+    pub depth: usize,
+    pub overflow: OverflowPolicy,
+}
+
+impl Default for QoS {
+    fn default() -> Self {
+        Self { depth: 64, overflow: OverflowPolicy::DropOldest }
+    }
+}
+
+impl QoS {
+    pub fn lossless(depth: usize) -> Self {
+        Self { depth, overflow: OverflowPolicy::Block }
+    }
+
+    pub fn sensor(depth: usize) -> Self {
+        Self { depth, overflow: OverflowPolicy::DropOldest }
+    }
+}
+
+/// A raw published sample: encoded payload shared across subscribers.
+type Sample = Arc<Vec<u8>>;
+
+struct SubQueue {
+    q: Mutex<SubQueueState>,
+    cv: Condvar,
+    qos: QoS,
+}
+
+struct SubQueueState {
+    buf: VecDeque<Sample>,
+    closed: bool,
+    dropped: u64,
+}
+
+impl SubQueue {
+    fn new(qos: QoS) -> Self {
+        Self {
+            q: Mutex::new(SubQueueState { buf: VecDeque::new(), closed: false, dropped: 0 }),
+            cv: Condvar::new(),
+            qos,
+        }
+    }
+
+    fn push(&self, s: Sample) {
+        let mut g = self.q.lock().unwrap();
+        if g.closed {
+            return;
+        }
+        match self.qos.overflow {
+            OverflowPolicy::DropOldest => {
+                if g.buf.len() >= self.qos.depth {
+                    g.buf.pop_front();
+                    g.dropped += 1;
+                }
+                g.buf.push_back(s);
+            }
+            OverflowPolicy::Block => {
+                while g.buf.len() >= self.qos.depth && !g.closed {
+                    g = self.cv.wait(g).unwrap();
+                }
+                if !g.closed {
+                    g.buf.push_back(s);
+                }
+            }
+        }
+        self.cv.notify_all();
+    }
+
+    fn pop_timeout(&self, timeout: std::time::Duration) -> Option<Sample> {
+        let mut g = self.q.lock().unwrap();
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            if let Some(s) = g.buf.pop_front() {
+                self.cv.notify_all();
+                return Some(s);
+            }
+            if g.closed {
+                return None;
+            }
+            let now = std::time::Instant::now();
+            if now >= deadline {
+                return None;
+            }
+            let (g2, res) = self.cv.wait_timeout(g, deadline - now).unwrap();
+            g = g2;
+            if res.timed_out() && g.buf.is_empty() {
+                return None;
+            }
+        }
+    }
+
+    fn close(&self) {
+        self.q.lock().unwrap().closed = true;
+        self.cv.notify_all();
+    }
+}
+
+struct Topic {
+    type_name: String,
+    subs: Vec<Arc<SubQueue>>,
+    publish_count: u64,
+}
+
+/// The message pool: topic registry + fan-out.
+#[derive(Clone, Default)]
+pub struct Broker {
+    topics: Arc<Mutex<HashMap<String, Topic>>>,
+}
+
+impl Broker {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    pub(crate) fn check_type(&self, topic: &str, type_name: &str) -> Result<()> {
+        let mut g = self.topics.lock().unwrap();
+        match g.get(topic) {
+            Some(t) if t.type_name != type_name => Err(Error::Bus(format!(
+                "topic '{topic}' is {} but endpoint wants {type_name}",
+                t.type_name
+            ))),
+            Some(_) => Ok(()),
+            None => {
+                g.insert(
+                    topic.to_string(),
+                    Topic { type_name: type_name.to_string(), subs: Vec::new(), publish_count: 0 },
+                );
+                Ok(())
+            }
+        }
+    }
+
+    /// Advertise a typed publisher on `topic`.
+    pub fn advertise<M: Message>(&self, topic: &str) -> Result<Publisher<M>> {
+        self.check_type(topic, M::TYPE_NAME)?;
+        Ok(Publisher { broker: self.clone(), topic: topic.to_string(), _m: PhantomData })
+    }
+
+    /// Subscribe with QoS; returns a typed receiving endpoint.
+    pub fn subscribe<M: Message>(&self, topic: &str, qos: QoS) -> Result<Subscriber<M>> {
+        self.check_type(topic, M::TYPE_NAME)?;
+        let q = Arc::new(SubQueue::new(qos));
+        self.topics
+            .lock()
+            .unwrap()
+            .get_mut(topic)
+            .expect("registered above")
+            .subs
+            .push(q.clone());
+        Ok(Subscriber { queue: q, _m: PhantomData })
+    }
+
+    pub(crate) fn publish_raw(&self, topic: &str, payload: Vec<u8>) -> Result<usize> {
+        let subs: Vec<Arc<SubQueue>> = {
+            let mut g = self.topics.lock().unwrap();
+            let t = g
+                .get_mut(topic)
+                .ok_or_else(|| Error::Bus(format!("publish to unknown topic '{topic}'")))?;
+            t.publish_count += 1;
+            t.subs.clone()
+        };
+        let sample: Sample = Arc::new(payload);
+        for s in &subs {
+            s.push(sample.clone());
+        }
+        Ok(subs.len())
+    }
+
+    /// Topics currently known, with type and publish count.
+    pub fn topic_info(&self) -> Vec<(String, String, u64)> {
+        let g = self.topics.lock().unwrap();
+        let mut v: Vec<_> = g
+            .iter()
+            .map(|(k, t)| (k.clone(), t.type_name.clone(), t.publish_count))
+            .collect();
+        v.sort();
+        v
+    }
+
+    /// Close every subscriber queue (graph shutdown).
+    pub fn shutdown(&self) {
+        let g = self.topics.lock().unwrap();
+        for t in g.values() {
+            for s in &t.subs {
+                s.close();
+            }
+        }
+    }
+}
+
+/// Typed publishing endpoint.
+pub struct Publisher<M: Message> {
+    broker: Broker,
+    topic: String,
+    _m: PhantomData<M>,
+}
+
+impl<M: Message> Publisher<M> {
+    /// Publish a message; returns the number of subscribers reached.
+    pub fn publish(&self, msg: &M) -> Result<usize> {
+        self.broker.publish_raw(&self.topic, msg.encode())
+    }
+
+    pub fn topic(&self) -> &str {
+        &self.topic
+    }
+}
+
+/// Typed subscribing endpoint.
+pub struct Subscriber<M: Message> {
+    queue: Arc<SubQueue>,
+    _m: PhantomData<M>,
+}
+
+impl<M: Message> Subscriber<M> {
+    /// Blocking receive with timeout. `None` on timeout or closed-empty.
+    pub fn recv_timeout(&self, timeout: std::time::Duration) -> Option<Result<M>> {
+        self.queue.pop_timeout(timeout).map(|s| M::decode(&s))
+    }
+
+    /// Non-blocking poll.
+    pub fn try_recv(&self) -> Option<Result<M>> {
+        self.queue
+            .pop_timeout(std::time::Duration::ZERO)
+            .map(|s| M::decode(&s))
+    }
+
+    /// Messages dropped due to queue overflow (QoS accounting).
+    pub fn dropped(&self) -> u64 {
+        self.queue.q.lock().unwrap().dropped
+    }
+}
+
+impl<M: Message> Drop for Subscriber<M> {
+    fn drop(&mut self) {
+        self.queue.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::{Image, Imu};
+    use std::time::Duration;
+
+    #[test]
+    fn pub_sub_roundtrip() {
+        let b = Broker::new();
+        let sub = b.subscribe::<Image>("/camera", QoS::default()).unwrap();
+        let pb = b.advertise::<Image>("/camera").unwrap();
+        let img = Image::synthetic(4, 4, 1);
+        assert_eq!(pb.publish(&img).unwrap(), 1);
+        let got = sub.recv_timeout(Duration::from_secs(1)).unwrap().unwrap();
+        assert_eq!(got, img);
+    }
+
+    #[test]
+    fn type_mismatch_rejected() {
+        let b = Broker::new();
+        let _p = b.advertise::<Image>("/camera").unwrap();
+        assert!(b.subscribe::<Imu>("/camera", QoS::default()).is_err());
+        assert!(b.advertise::<Imu>("/camera").is_err());
+    }
+
+    #[test]
+    fn fanout_to_multiple_subscribers() {
+        let b = Broker::new();
+        let s1 = b.subscribe::<Imu>("/imu", QoS::default()).unwrap();
+        let s2 = b.subscribe::<Imu>("/imu", QoS::default()).unwrap();
+        let p = b.advertise::<Imu>("/imu").unwrap();
+        let m = Imu {
+            header: Default::default(),
+            accel: [1.0, 2.0, 3.0],
+            gyro: [0.0; 3],
+        };
+        assert_eq!(p.publish(&m).unwrap(), 2);
+        assert!(s1.recv_timeout(Duration::from_millis(100)).is_some());
+        assert!(s2.recv_timeout(Duration::from_millis(100)).is_some());
+    }
+
+    #[test]
+    fn drop_oldest_overflow() {
+        let b = Broker::new();
+        let s = b
+            .subscribe::<Imu>("/imu", QoS { depth: 2, overflow: OverflowPolicy::DropOldest })
+            .unwrap();
+        let p = b.advertise::<Imu>("/imu").unwrap();
+        for i in 0..5 {
+            let m = Imu {
+                header: crate::msg::Header::new(i, Default::default(), "imu"),
+                accel: [i as f32; 3],
+                gyro: [0.0; 3],
+            };
+            p.publish(&m).unwrap();
+        }
+        assert_eq!(s.dropped(), 3);
+        let first = s.recv_timeout(Duration::from_millis(10)).unwrap().unwrap();
+        assert_eq!(first.header.seq, 3, "oldest were dropped");
+    }
+
+    #[test]
+    fn blocking_qos_is_lossless() {
+        let b = Broker::new();
+        let s = b.subscribe::<Imu>("/imu", QoS::lossless(2)).unwrap();
+        let p = b.advertise::<Imu>("/imu").unwrap();
+        let t = std::thread::spawn(move || {
+            for i in 0..20 {
+                let m = Imu {
+                    header: crate::msg::Header::new(i, Default::default(), "imu"),
+                    accel: [0.0; 3],
+                    gyro: [0.0; 3],
+                };
+                p.publish(&m).unwrap();
+            }
+        });
+        let mut got = 0;
+        while let Some(Ok(_)) = s.recv_timeout(Duration::from_millis(500)) {
+            got += 1;
+            if got == 20 {
+                break;
+            }
+        }
+        t.join().unwrap();
+        assert_eq!(got, 20);
+        assert_eq!(s.dropped(), 0);
+    }
+
+    #[test]
+    fn publish_without_topic_errors() {
+        let b = Broker::new();
+        assert!(b.publish_raw("/ghost", vec![1]).is_err());
+    }
+
+    #[test]
+    fn recv_timeout_expires() {
+        let b = Broker::new();
+        let s = b.subscribe::<Imu>("/imu", QoS::default()).unwrap();
+        let t = std::time::Instant::now();
+        assert!(s.recv_timeout(Duration::from_millis(30)).is_none());
+        assert!(t.elapsed() >= Duration::from_millis(25));
+    }
+
+    #[test]
+    fn topic_info_lists_counts() {
+        let b = Broker::new();
+        let p = b.advertise::<Imu>("/imu").unwrap();
+        let m = Imu { header: Default::default(), accel: [0.0; 3], gyro: [0.0; 3] };
+        p.publish(&m).unwrap();
+        p.publish(&m).unwrap();
+        let info = b.topic_info();
+        assert_eq!(info.len(), 1);
+        assert_eq!(info[0], ("/imu".to_string(), Imu::TYPE_NAME.to_string(), 2));
+    }
+}

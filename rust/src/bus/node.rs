@@ -1,0 +1,108 @@
+//! [`Node`] — a named participant in the bus graph, the platform's
+//! `ros::NodeHandle`. Functional modules (perception, decision, control,
+//! bag play/record) each own a node; the node remembers its endpoints for
+//! introspection (`rosnode info` analogue).
+
+use super::{Broker, Publisher, QoS, Subscriber};
+use crate::error::Result;
+use crate::msg::Message;
+use std::sync::{Arc, Mutex};
+
+/// Endpoint descriptor for introspection.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct EndpointInfo {
+    pub topic: String,
+    pub type_name: String,
+    pub kind: EndpointKind,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EndpointKind {
+    Publisher,
+    Subscriber,
+}
+
+/// A named bus participant.
+pub struct Node {
+    name: String,
+    broker: Broker,
+    endpoints: Arc<Mutex<Vec<EndpointInfo>>>,
+}
+
+impl Node {
+    pub fn new(broker: &Broker, name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            broker: broker.clone(),
+            endpoints: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+
+    pub fn name(&self) -> &str {
+        &self.name
+    }
+
+    /// Advertise a typed publisher (records the endpoint).
+    pub fn advertise<M: Message>(&self, topic: &str) -> Result<Publisher<M>> {
+        let p = self.broker.advertise::<M>(topic)?;
+        self.endpoints.lock().unwrap().push(EndpointInfo {
+            topic: topic.to_string(),
+            type_name: M::TYPE_NAME.to_string(),
+            kind: EndpointKind::Publisher,
+        });
+        Ok(p)
+    }
+
+    /// Subscribe with explicit QoS.
+    pub fn subscribe<M: Message>(&self, topic: &str, qos: QoS) -> Result<Subscriber<M>> {
+        let s = self.broker.subscribe::<M>(topic, qos)?;
+        self.endpoints.lock().unwrap().push(EndpointInfo {
+            topic: topic.to_string(),
+            type_name: M::TYPE_NAME.to_string(),
+            kind: EndpointKind::Subscriber,
+        });
+        Ok(s)
+    }
+
+    /// Subscribe with default QoS.
+    pub fn subscribe_default<M: Message>(&self, topic: &str) -> Result<Subscriber<M>> {
+        self.subscribe::<M>(topic, QoS::default())
+    }
+
+    /// This node's registered endpoints.
+    pub fn endpoints(&self) -> Vec<EndpointInfo> {
+        self.endpoints.lock().unwrap().clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Imu;
+    use std::time::Duration;
+
+    #[test]
+    fn node_tracks_endpoints() {
+        let b = Broker::new();
+        let n = Node::new(&b, "perception");
+        let _s = n.subscribe_default::<Imu>("/imu").unwrap();
+        let _p = n.advertise::<Imu>("/imu_filtered").unwrap();
+        let eps = n.endpoints();
+        assert_eq!(eps.len(), 2);
+        assert_eq!(eps[0].kind, EndpointKind::Subscriber);
+        assert_eq!(eps[1].kind, EndpointKind::Publisher);
+        assert_eq!(n.name(), "perception");
+    }
+
+    #[test]
+    fn nodes_communicate_through_broker() {
+        let b = Broker::new();
+        let sensor = Node::new(&b, "sensor");
+        let fusion = Node::new(&b, "fusion");
+        let sub = fusion.subscribe_default::<Imu>("/imu").unwrap();
+        let pb = sensor.advertise::<Imu>("/imu").unwrap();
+        let m = Imu { header: Default::default(), accel: [1.0; 3], gyro: [2.0; 3] };
+        pb.publish(&m).unwrap();
+        assert_eq!(sub.recv_timeout(Duration::from_secs(1)).unwrap().unwrap(), m);
+    }
+}

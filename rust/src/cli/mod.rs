@@ -1,0 +1,128 @@
+//! Hand-rolled CLI argument parsing (no clap in the offline crate set).
+//!
+//! `Args` supports `--flag value`, `--flag=value`, boolean `--flag`, and
+//! positional arguments, with typed getters that produce actionable
+//! errors naming the flag.
+
+use crate::error::{Error, Result};
+use std::collections::HashMap;
+
+/// Parsed command line: subcommand, flags, positionals.
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub command: String,
+    flags: HashMap<String, String>,
+    bools: Vec<String>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    /// Parse from raw args (without argv[0]).
+    pub fn parse(raw: &[String]) -> Result<Self> {
+        let mut out = Args::default();
+        let mut it = raw.iter().peekable();
+        if let Some(cmd) = it.peek() {
+            if !cmd.starts_with('-') {
+                out.command = it.next().unwrap().clone();
+            }
+        }
+        while let Some(arg) = it.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                if name.is_empty() {
+                    return Err(Error::Config("bare '--' not supported".into()));
+                }
+                if let Some((k, v)) = name.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    out.flags.insert(name.to_string(), it.next().unwrap().clone());
+                } else {
+                    out.bools.push(name.to_string());
+                }
+            } else {
+                out.positional.push(arg.clone());
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.flags.get(name).map(|s| s.as_str())
+    }
+
+    pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
+        self.get(name).unwrap_or(default)
+    }
+
+    pub fn require(&self, name: &str) -> Result<&str> {
+        self.get(name)
+            .ok_or_else(|| Error::Config(format!("missing required flag --{name}")))
+    }
+
+    pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
+        match self.get(name) {
+            None => Ok(default),
+            Some(v) => v
+                .parse()
+                .map_err(|_| Error::Config(format!("--{name} expects an integer, got '{v}'"))),
+        }
+    }
+
+    pub fn has(&self, name: &str) -> bool {
+        self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &[&str]) -> Args {
+        Args::parse(&s.iter().map(|x| x.to_string()).collect::<Vec<_>>()).unwrap()
+    }
+
+    #[test]
+    fn subcommand_and_flags() {
+        let a = parse(&["worker", "--listen", "127.0.0.1:7077", "--id", "3"]);
+        assert_eq!(a.command, "worker");
+        assert_eq!(a.get("listen"), Some("127.0.0.1:7077"));
+        assert_eq!(a.get_usize("id", 0).unwrap(), 3);
+    }
+
+    #[test]
+    fn equals_form_and_bools() {
+        let a = parse(&["perceive", "--workers=8", "--standalone"]);
+        assert_eq!(a.get_usize("workers", 1).unwrap(), 8);
+        assert!(a.has("standalone"));
+        assert!(!a.has("verbose"));
+    }
+
+    #[test]
+    fn positionals_collected() {
+        let a = parse(&["user-logic", "rotate90"]);
+        assert_eq!(a.command, "user-logic");
+        assert_eq!(a.positional, vec!["rotate90"]);
+    }
+
+    #[test]
+    fn require_and_type_errors() {
+        let a = parse(&["x", "--n", "abc"]);
+        assert!(a.require("missing").is_err());
+        assert!(a.get_usize("n", 0).is_err());
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse(&["x"]);
+        assert_eq!(a.get_or("mode", "local"), "local");
+        assert_eq!(a.get_usize("workers", 4).unwrap(), 4);
+    }
+}

@@ -1,0 +1,311 @@
+//! Configuration system.
+//!
+//! A real deployment drives the platform from a config file (cluster size,
+//! ports, bag cache policy, artifact paths, simulation parameters). We
+//! parse a TOML subset (tables, string/int/float/bool scalars, string
+//! arrays, `#` comments) into a typed [`PlatformConfig`]; every field has a
+//! production default and can be overridden by `AV_SIMD_*` environment
+//! variables (env wins over file, file wins over default).
+
+mod toml;
+
+pub use toml::{parse_toml, TomlValue};
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// How workers execute tasks.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ClusterMode {
+    /// Thread-pool executors inside the driver process.
+    Local,
+    /// Spawned worker processes connected over TCP.
+    Standalone,
+}
+
+impl std::str::FromStr for ClusterMode {
+    type Err = Error;
+    fn from_str(s: &str) -> Result<Self> {
+        match s {
+            "local" => Ok(ClusterMode::Local),
+            "standalone" => Ok(ClusterMode::Standalone),
+            other => Err(Error::Config(format!("unknown cluster mode '{other}'"))),
+        }
+    }
+}
+
+/// Engine / cluster section.
+#[derive(Debug, Clone)]
+pub struct ClusterConfig {
+    pub mode: ClusterMode,
+    /// Number of workers (threads in local mode, processes in standalone).
+    pub workers: usize,
+    /// Task slots per worker.
+    pub slots_per_worker: usize,
+    /// Base TCP port for standalone workers.
+    pub base_port: u16,
+    /// Max task retries before the job fails.
+    pub task_retries: usize,
+    /// Default partitions for parallelize / bag-dir reads.
+    pub default_parallelism: usize,
+}
+
+impl Default for ClusterConfig {
+    fn default() -> Self {
+        Self {
+            mode: ClusterMode::Local,
+            workers: 4,
+            slots_per_worker: 1,
+            base_port: 7077,
+            task_retries: 2,
+            default_parallelism: 8,
+        }
+    }
+}
+
+/// Bag / cache section (the paper's §3.2 knobs).
+#[derive(Debug, Clone)]
+pub struct BagConfig {
+    /// Chunk size threshold before a chunk is sealed (bytes).
+    pub chunk_size: usize,
+    /// Use the in-memory MemoryChunkedFile cache for play/record.
+    pub memory_cache: bool,
+    /// Max bytes the in-memory bag cache may hold before eviction.
+    pub cache_capacity: u64,
+    /// Compression: "none" | "deflate".
+    pub compression: String,
+}
+
+impl Default for BagConfig {
+    fn default() -> Self {
+        Self {
+            chunk_size: 4 * 1024 * 1024,
+            memory_cache: true,
+            cache_capacity: 1024 * 1024 * 1024,
+            compression: "none".into(),
+        }
+    }
+}
+
+/// Perception / runtime section.
+#[derive(Debug, Clone)]
+pub struct PerceptionConfig {
+    /// Directory containing AOT artifacts (*.hlo.txt).
+    pub artifact_dir: String,
+    /// Batch size the classifier artifact was lowered with.
+    pub batch: usize,
+    /// Image side (images are square, RGB).
+    pub image_size: usize,
+    /// Number of classes in the classifier head.
+    pub classes: usize,
+}
+
+impl Default for PerceptionConfig {
+    fn default() -> Self {
+        Self {
+            artifact_dir: "artifacts".into(),
+            batch: 8,
+            image_size: 32,
+            classes: 8,
+        }
+    }
+}
+
+/// Simulation section (Fig 1 scenario matrix + dynamics).
+#[derive(Debug, Clone)]
+pub struct SimConfig {
+    /// Simulation timestep (seconds).
+    pub dt: f64,
+    /// Episode horizon (seconds).
+    pub horizon: f64,
+    /// Ego cruise speed (m/s).
+    pub ego_speed: f64,
+    /// Random seed for scenario sampling and sensor noise.
+    pub seed: u64,
+}
+
+impl Default for SimConfig {
+    fn default() -> Self {
+        Self { dt: 0.05, horizon: 12.0, ego_speed: 12.0, seed: 42 }
+    }
+}
+
+/// Top-level typed configuration.
+#[derive(Debug, Clone, Default)]
+pub struct PlatformConfig {
+    pub cluster: ClusterConfig,
+    pub bag: BagConfig,
+    pub perception: PerceptionConfig,
+    pub sim: SimConfig,
+}
+
+impl PlatformConfig {
+    /// Defaults → file (if given) → environment overrides.
+    pub fn load(path: Option<&Path>) -> Result<Self> {
+        let mut cfg = PlatformConfig::default();
+        if let Some(p) = path {
+            let text = std::fs::read_to_string(p)
+                .map_err(|e| Error::Config(format!("read {}: {e}", p.display())))?;
+            cfg.apply_toml(&parse_toml(&text)?)?;
+        }
+        cfg.apply_env();
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    /// Parse from TOML text (used by tests and the CLI `--config`).
+    pub fn from_toml(text: &str) -> Result<Self> {
+        let mut cfg = PlatformConfig::default();
+        cfg.apply_toml(&parse_toml(text)?)?;
+        cfg.validate()?;
+        Ok(cfg)
+    }
+
+    fn apply_toml(&mut self, doc: &BTreeMap<String, TomlValue>) -> Result<()> {
+        for (key, val) in doc {
+            let (section, field) = key
+                .split_once('.')
+                .ok_or_else(|| Error::Config(format!("top-level scalar '{key}' not allowed")))?;
+            match section {
+                "cluster" => match field {
+                    "mode" => self.cluster.mode = val.as_str()?.parse()?,
+                    "workers" => self.cluster.workers = val.as_usize()?,
+                    "slots_per_worker" => self.cluster.slots_per_worker = val.as_usize()?,
+                    "base_port" => self.cluster.base_port = val.as_usize()? as u16,
+                    "task_retries" => self.cluster.task_retries = val.as_usize()?,
+                    "default_parallelism" => {
+                        self.cluster.default_parallelism = val.as_usize()?
+                    }
+                    _ => return Err(Error::Config(format!("unknown key '{key}'"))),
+                },
+                "bag" => match field {
+                    "chunk_size" => self.bag.chunk_size = val.as_usize()?,
+                    "memory_cache" => self.bag.memory_cache = val.as_bool()?,
+                    "cache_capacity" => self.bag.cache_capacity = val.as_usize()? as u64,
+                    "compression" => self.bag.compression = val.as_str()?.to_string(),
+                    _ => return Err(Error::Config(format!("unknown key '{key}'"))),
+                },
+                "perception" => match field {
+                    "artifact_dir" => self.perception.artifact_dir = val.as_str()?.into(),
+                    "batch" => self.perception.batch = val.as_usize()?,
+                    "image_size" => self.perception.image_size = val.as_usize()?,
+                    "classes" => self.perception.classes = val.as_usize()?,
+                    _ => return Err(Error::Config(format!("unknown key '{key}'"))),
+                },
+                "sim" => match field {
+                    "dt" => self.sim.dt = val.as_f64()?,
+                    "horizon" => self.sim.horizon = val.as_f64()?,
+                    "ego_speed" => self.sim.ego_speed = val.as_f64()?,
+                    "seed" => self.sim.seed = val.as_usize()? as u64,
+                    _ => return Err(Error::Config(format!("unknown key '{key}'"))),
+                },
+                _ => return Err(Error::Config(format!("unknown section '{section}'"))),
+            }
+        }
+        Ok(())
+    }
+
+    fn apply_env(&mut self) {
+        if let Ok(v) = std::env::var("AV_SIMD_WORKERS") {
+            if let Ok(n) = v.parse() {
+                self.cluster.workers = n;
+            }
+        }
+        if let Ok(v) = std::env::var("AV_SIMD_MODE") {
+            if let Ok(m) = v.parse() {
+                self.cluster.mode = m;
+            }
+        }
+        if let Ok(v) = std::env::var("AV_SIMD_ARTIFACTS") {
+            self.perception.artifact_dir = v;
+        }
+        if let Ok(v) = std::env::var("AV_SIMD_MEMORY_CACHE") {
+            self.bag.memory_cache = v != "0" && v != "false";
+        }
+    }
+
+    fn validate(&self) -> Result<()> {
+        if self.cluster.workers == 0 {
+            return Err(Error::Config("cluster.workers must be >= 1".into()));
+        }
+        if self.bag.chunk_size < 1024 {
+            return Err(Error::Config("bag.chunk_size must be >= 1024".into()));
+        }
+        if !matches!(self.bag.compression.as_str(), "none" | "deflate") {
+            return Err(Error::Config(format!(
+                "bag.compression must be none|deflate, got '{}'",
+                self.bag.compression
+            )));
+        }
+        if self.sim.dt <= 0.0 || self.sim.horizon <= 0.0 {
+            return Err(Error::Config("sim.dt and sim.horizon must be > 0".into()));
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn defaults_validate() {
+        PlatformConfig::default().validate().unwrap();
+    }
+
+    #[test]
+    fn parse_full_file() {
+        let cfg = PlatformConfig::from_toml(
+            r#"
+            # production cluster
+            [cluster]
+            mode = "standalone"
+            workers = 8
+            base_port = 9000
+
+            [bag]
+            chunk_size = 1048576
+            memory_cache = false
+            compression = "deflate"
+
+            [perception]
+            batch = 4
+            image_size = 64
+
+            [sim]
+            dt = 0.02
+            ego_speed = 15.5
+            "#,
+        )
+        .unwrap();
+        assert_eq!(cfg.cluster.mode, ClusterMode::Standalone);
+        assert_eq!(cfg.cluster.workers, 8);
+        assert_eq!(cfg.cluster.base_port, 9000);
+        assert_eq!(cfg.bag.chunk_size, 1048576);
+        assert!(!cfg.bag.memory_cache);
+        assert_eq!(cfg.bag.compression, "deflate");
+        assert_eq!(cfg.perception.batch, 4);
+        assert!((cfg.sim.ego_speed - 15.5).abs() < 1e-9);
+    }
+
+    #[test]
+    fn unknown_key_rejected() {
+        assert!(PlatformConfig::from_toml("[cluster]\nbogus = 1\n").is_err());
+    }
+
+    #[test]
+    fn unknown_section_rejected() {
+        assert!(PlatformConfig::from_toml("[nope]\nx = 1\n").is_err());
+    }
+
+    #[test]
+    fn zero_workers_rejected() {
+        assert!(PlatformConfig::from_toml("[cluster]\nworkers = 0\n").is_err());
+    }
+
+    #[test]
+    fn bad_compression_rejected() {
+        assert!(PlatformConfig::from_toml("[bag]\ncompression = \"lzma\"\n").is_err());
+    }
+}

@@ -1,0 +1,220 @@
+//! Minimal TOML-subset parser.
+//!
+//! Supports exactly what the platform's config files use: `[table]`
+//! headers (one level), `key = value` with string / integer / float /
+//! boolean / string-array values, `#` comments, and blank lines. Keys are
+//! flattened to `"table.key"` in the output map. Anything outside the
+//! subset is a parse error — config typos should fail loudly.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed scalar value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TomlValue {
+    Str(String),
+    Int(i64),
+    Float(f64),
+    Bool(bool),
+    StrArray(Vec<String>),
+}
+
+impl TomlValue {
+    pub fn as_str(&self) -> Result<&str> {
+        match self {
+            TomlValue::Str(s) => Ok(s),
+            other => Err(Error::Config(format!("expected string, got {other:?}"))),
+        }
+    }
+
+    pub fn as_usize(&self) -> Result<usize> {
+        match self {
+            TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
+            other => Err(Error::Config(format!("expected non-negative int, got {other:?}"))),
+        }
+    }
+
+    pub fn as_f64(&self) -> Result<f64> {
+        match self {
+            TomlValue::Float(f) => Ok(*f),
+            TomlValue::Int(i) => Ok(*i as f64),
+            other => Err(Error::Config(format!("expected float, got {other:?}"))),
+        }
+    }
+
+    pub fn as_bool(&self) -> Result<bool> {
+        match self {
+            TomlValue::Bool(b) => Ok(*b),
+            other => Err(Error::Config(format!("expected bool, got {other:?}"))),
+        }
+    }
+
+    pub fn as_str_array(&self) -> Result<&[String]> {
+        match self {
+            TomlValue::StrArray(v) => Ok(v),
+            other => Err(Error::Config(format!("expected string array, got {other:?}"))),
+        }
+    }
+}
+
+/// Parse TOML-subset text into a flat `"section.key" → value` map.
+pub fn parse_toml(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let mut out = BTreeMap::new();
+    let mut section = String::new();
+    for (lineno, raw) in text.lines().enumerate() {
+        let line = strip_comment(raw).trim();
+        if line.is_empty() {
+            continue;
+        }
+        if let Some(rest) = line.strip_prefix('[') {
+            let name = rest
+                .strip_suffix(']')
+                .ok_or_else(|| Error::Config(format!("line {}: unterminated table header", lineno + 1)))?
+                .trim();
+            if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+                return Err(Error::Config(format!("line {}: bad table name '{name}'", lineno + 1)));
+            }
+            section = name.to_string();
+            continue;
+        }
+        let (key, val) = line
+            .split_once('=')
+            .ok_or_else(|| Error::Config(format!("line {}: expected key = value", lineno + 1)))?;
+        let key = key.trim();
+        if key.is_empty() || !key.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(Error::Config(format!("line {}: bad key '{key}'", lineno + 1)));
+        }
+        let full_key = if section.is_empty() {
+            key.to_string()
+        } else {
+            format!("{section}.{key}")
+        };
+        if out.contains_key(&full_key) {
+            return Err(Error::Config(format!("line {}: duplicate key '{full_key}'", lineno + 1)));
+        }
+        out.insert(full_key, parse_value(val.trim(), lineno + 1)?);
+    }
+    Ok(out)
+}
+
+fn strip_comment(line: &str) -> &str {
+    // '#' inside a quoted string does not start a comment.
+    let mut in_str = false;
+    for (i, c) in line.char_indices() {
+        match c {
+            '"' => in_str = !in_str,
+            '#' if !in_str => return &line[..i],
+            _ => {}
+        }
+    }
+    line
+}
+
+fn parse_value(s: &str, lineno: usize) -> Result<TomlValue> {
+    if s.is_empty() {
+        return Err(Error::Config(format!("line {lineno}: empty value")));
+    }
+    if let Some(inner) = s.strip_prefix('"') {
+        let inner = inner
+            .strip_suffix('"')
+            .ok_or_else(|| Error::Config(format!("line {lineno}: unterminated string")))?;
+        if inner.contains('"') {
+            return Err(Error::Config(format!("line {lineno}: embedded quote")));
+        }
+        return Ok(TomlValue::Str(inner.to_string()));
+    }
+    if let Some(inner) = s.strip_prefix('[') {
+        let inner = inner
+            .strip_suffix(']')
+            .ok_or_else(|| Error::Config(format!("line {lineno}: unterminated array")))?;
+        let mut items = Vec::new();
+        for item in inner.split(',') {
+            let item = item.trim();
+            if item.is_empty() {
+                continue;
+            }
+            match parse_value(item, lineno)? {
+                TomlValue::Str(v) => items.push(v),
+                other => {
+                    return Err(Error::Config(format!(
+                        "line {lineno}: only string arrays supported, got {other:?}"
+                    )))
+                }
+            }
+        }
+        return Ok(TomlValue::StrArray(items));
+    }
+    match s {
+        "true" => return Ok(TomlValue::Bool(true)),
+        "false" => return Ok(TomlValue::Bool(false)),
+        _ => {}
+    }
+    if s.contains('.') || s.contains('e') || s.contains('E') {
+        if let Ok(f) = s.parse::<f64>() {
+            return Ok(TomlValue::Float(f));
+        }
+    }
+    if let Ok(i) = s.replace('_', "").parse::<i64>() {
+        return Ok(TomlValue::Int(i));
+    }
+    Err(Error::Config(format!("line {lineno}: cannot parse value '{s}'")))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parses_scalars() {
+        let doc = parse_toml(
+            "a = 1\nb = 2.5\nc = \"hi\"\nd = true\ne = false\nf = 1_000\n",
+        )
+        .unwrap();
+        assert_eq!(doc["a"], TomlValue::Int(1));
+        assert_eq!(doc["b"], TomlValue::Float(2.5));
+        assert_eq!(doc["c"], TomlValue::Str("hi".into()));
+        assert_eq!(doc["d"], TomlValue::Bool(true));
+        assert_eq!(doc["e"], TomlValue::Bool(false));
+        assert_eq!(doc["f"], TomlValue::Int(1000));
+    }
+
+    #[test]
+    fn sections_flatten() {
+        let doc = parse_toml("[cluster]\nworkers = 8\n[bag]\nchunk_size = 4096\n").unwrap();
+        assert_eq!(doc["cluster.workers"], TomlValue::Int(8));
+        assert_eq!(doc["bag.chunk_size"], TomlValue::Int(4096));
+    }
+
+    #[test]
+    fn comments_and_blank_lines() {
+        let doc = parse_toml("# header\n\na = 1 # trailing\nb = \"x # not a comment\"\n").unwrap();
+        assert_eq!(doc["a"], TomlValue::Int(1));
+        assert_eq!(doc["b"], TomlValue::Str("x # not a comment".into()));
+    }
+
+    #[test]
+    fn string_arrays() {
+        let doc = parse_toml("topics = [\"/camera\", \"/lidar\"]\n").unwrap();
+        assert_eq!(
+            doc["topics"].as_str_array().unwrap(),
+            &["/camera".to_string(), "/lidar".to_string()]
+        );
+    }
+
+    #[test]
+    fn errors_are_loud() {
+        assert!(parse_toml("[unterminated\n").is_err());
+        assert!(parse_toml("novalue =\n").is_err());
+        assert!(parse_toml("x = \"unterminated\n").is_err());
+        assert!(parse_toml("x = 1\nx = 2\n").is_err());
+        assert!(parse_toml("weird key = 1\n").is_err());
+        assert!(parse_toml("x = [1, 2]\n").is_err());
+    }
+
+    #[test]
+    fn duplicate_across_sections_ok() {
+        let doc = parse_toml("[a]\nx = 1\n[b]\nx = 2\n").unwrap();
+        assert_eq!(doc["a.x"], TomlValue::Int(1));
+        assert_eq!(doc["b.x"], TomlValue::Int(2));
+    }
+}

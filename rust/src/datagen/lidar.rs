@@ -1,0 +1,143 @@
+//! LiDAR scan synthesis: planar raycast against scene obstacles.
+//!
+//! A rotating single-beam scanner at the ego origin casts `n_rays` rays;
+//! each returns the nearest hit among obstacle boxes and the road edges,
+//! with range noise. Output is the platform's XYZI [`PointCloud`].
+
+use crate::msg::{Header, PointCloud, Time};
+use crate::util::prng::Prng;
+
+/// An axis-aligned obstacle box in the ego frame (x forward, y left).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Obstacle {
+    pub cx: f64,
+    pub cy: f64,
+    pub half_x: f64,
+    pub half_y: f64,
+}
+
+impl Obstacle {
+    pub fn vehicle(cx: f64, cy: f64) -> Self {
+        Self { cx, cy, half_x: 2.3, half_y: 0.95 }
+    }
+}
+
+/// Ray/AABB intersection: distance along the unit ray (dx,dy) from the
+/// origin, or None.
+fn ray_box(dx: f64, dy: f64, b: &Obstacle) -> Option<f64> {
+    let inv = |d: f64| if d.abs() < 1e-12 { f64::INFINITY.copysign(d) } else { 1.0 / d };
+    let (ix, iy) = (inv(dx), inv(dy));
+    let (mut tmin, mut tmax) = (
+        ((b.cx - b.half_x) * ix).min((b.cx + b.half_x) * ix),
+        ((b.cx - b.half_x) * ix).max((b.cx + b.half_x) * ix),
+    );
+    let (tymin, tymax) = (
+        ((b.cy - b.half_y) * iy).min((b.cy + b.half_y) * iy),
+        ((b.cy - b.half_y) * iy).max((b.cy + b.half_y) * iy),
+    );
+    tmin = tmin.max(tymin);
+    tmax = tmax.min(tymax);
+    if tmax >= tmin && tmax > 0.0 {
+        Some(tmin.max(0.0))
+    } else {
+        None
+    }
+}
+
+/// Cast a full 360° scan.
+pub fn raycast_scan(
+    obstacles: &[Obstacle],
+    n_rays: usize,
+    max_range: f64,
+    seq: u64,
+    stamp: Time,
+    rng: &mut Prng,
+) -> PointCloud {
+    let mut points = Vec::with_capacity(n_rays * 4);
+    for k in 0..n_rays {
+        let ang = k as f64 / n_rays as f64 * std::f64::consts::TAU;
+        let (dy, dx) = ang.sin_cos();
+        let mut range = max_range;
+        let mut intensity = 0.05f32; // no-return / max-range return
+        for ob in obstacles {
+            if let Some(t) = ray_box(dx, dy, ob) {
+                if t < range && t > 0.1 {
+                    range = t;
+                    intensity = 0.9;
+                }
+            }
+        }
+        // road edges at y = ±8 m (infinite walls, hedge-like returns)
+        for wall_y in [8.0f64, -8.0] {
+            if dy.abs() > 1e-9 {
+                let t = wall_y / dy;
+                if t > 0.1 && t < range {
+                    range = t;
+                    intensity = 0.4;
+                }
+            }
+        }
+        // range noise (1σ = 2 cm)
+        range += rng.next_gaussian() * 0.02;
+        points.extend_from_slice(&[
+            (range * dx) as f32,
+            (range * dy) as f32,
+            0.0,
+            intensity,
+        ]);
+    }
+    PointCloud { header: Header::new(seq, stamp, "lidar"), points }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scan_has_requested_rays() {
+        let mut rng = Prng::new(1);
+        let pc = raycast_scan(&[], 180, 50.0, 0, Time::ZERO, &mut rng);
+        assert_eq!(pc.num_points(), 180);
+        pc.validate().unwrap();
+    }
+
+    #[test]
+    fn obstacle_ahead_shortens_forward_rays() {
+        let mut rng = Prng::new(1);
+        let ob = Obstacle::vehicle(10.0, 0.0);
+        let pc = raycast_scan(&[ob], 360, 50.0, 0, Time::ZERO, &mut rng);
+        // forward ray (k=0): x ≈ 10 - 2.3 (front face of the box)
+        let (x, y, _, i) = pc.point(0);
+        assert!((x - 7.7).abs() < 0.2, "front return at {x}");
+        assert!(y.abs() < 0.1);
+        assert!(i > 0.8, "hard return intensity");
+        // rearward ray (k=180) sees only road edge at max... rear is open
+        let (xr, _, _, _) = pc.point(180);
+        assert!(xr < -20.0, "rear ray goes long: {xr}");
+    }
+
+    #[test]
+    fn road_edges_bound_lateral_rays() {
+        let mut rng = Prng::new(2);
+        let pc = raycast_scan(&[], 360, 100.0, 0, Time::ZERO, &mut rng);
+        // left ray (k=90): y ≈ +8 (road edge)
+        let (_, y, _, i) = pc.point(90);
+        assert!((y - 8.0).abs() < 0.3, "left edge at {y}");
+        assert!((i - 0.4).abs() < 0.01);
+    }
+
+    #[test]
+    fn deterministic_given_seed() {
+        let a = raycast_scan(&[Obstacle::vehicle(5.0, 1.0)], 90, 30.0, 0, Time::ZERO, &mut Prng::new(3));
+        let b = raycast_scan(&[Obstacle::vehicle(5.0, 1.0)], 90, 30.0, 0, Time::ZERO, &mut Prng::new(3));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn ray_box_misses_behind() {
+        // box behind the origin; forward ray must miss
+        let b = Obstacle::vehicle(-10.0, 0.0);
+        assert!(ray_box(1.0, 0.0, &b).is_none());
+        assert!(ray_box(-1.0, 0.0, &b).is_some());
+    }
+}

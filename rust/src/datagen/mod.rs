@@ -1,0 +1,16 @@
+//! Synthetic KITTI-like data generation.
+//!
+//! The paper evaluates on recorded drives (KITTI / Google internal data)
+//! that we do not have; per DESIGN.md's substitution table this module
+//! generates the closest synthetic equivalent: timestamped camera frames
+//! rendered from a parametric road scene, raycast LiDAR scans of the
+//! same scene, and IMU samples — packed into AVBAG bags with the same
+//! topic layout a real recording vehicle would produce.
+
+pub mod camera;
+pub mod drive;
+pub mod lidar;
+
+pub use camera::{render_frame, SceneObject, SceneSpec};
+pub use drive::{generate_drive, generate_drive_dir, DriveSpec};
+pub use lidar::raycast_scan;

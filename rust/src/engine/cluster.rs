@@ -1,0 +1,148 @@
+//! Cluster abstraction + the local (thread-pool) implementation.
+//!
+//! The paper's platform runs on a Spark cluster; ours runs on either
+//! worker threads in-process ([`LocalCluster`], the default and the unit
+//! under test for scalability benches) or spawned worker processes over
+//! TCP ([`super::remote::StandaloneCluster`]). Both present the same
+//! [`Cluster`] trait: submit a batch of tasks, get per-task results back
+//! in order.
+
+use super::executor;
+use super::ops::{OpRegistry, TaskCtx};
+use super::plan::{TaskOutput, TaskSpec};
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::Mutex;
+
+/// A set of workers that can execute task batches.
+pub trait Cluster: Send + Sync {
+    /// Number of workers.
+    fn workers(&self) -> usize;
+
+    /// Execute all tasks, returning results in task order. Individual
+    /// task failures are returned as `Err` entries (the scheduler
+    /// retries); infrastructure failures may fail the whole batch.
+    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>>;
+
+    /// Graceful shutdown (no-op for local).
+    fn shutdown(&self) {}
+
+    /// Backend name for logs/benches.
+    fn backend(&self) -> &'static str;
+}
+
+/// Thread-pool cluster: N persistent worker contexts, each with its own
+/// bag cache (mirroring per-executor memory state in Spark).
+pub struct LocalCluster {
+    registry: OpRegistry,
+    ctxs: Vec<TaskCtx>,
+}
+
+impl LocalCluster {
+    pub fn new(workers: usize, registry: OpRegistry, artifact_dir: &str) -> Self {
+        assert!(workers >= 1, "need at least one worker");
+        let ctxs = (0..workers).map(|i| TaskCtx::new(i, artifact_dir)).collect();
+        Self { registry, ctxs }
+    }
+
+    pub fn registry(&self) -> &OpRegistry {
+        &self.registry
+    }
+}
+
+impl Cluster for LocalCluster {
+    fn workers(&self) -> usize {
+        self.ctxs.len()
+    }
+
+    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>> {
+        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..tasks.len()).collect());
+        let results: Vec<Mutex<Option<Result<TaskOutput>>>> =
+            (0..tasks.len()).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|scope| {
+            for ctx in &self.ctxs {
+                scope.spawn(|| loop {
+                    let idx = match queue.lock().unwrap().pop_front() {
+                        Some(i) => i,
+                        None => break,
+                    };
+                    let res = executor::run_task(ctx, &self.registry, &tasks[idx]);
+                    *results[idx].lock().unwrap() = Some(res);
+                });
+            }
+        });
+
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .unwrap_or_else(|| Err(Error::Engine("task never ran".into())))
+            })
+            .collect()
+    }
+
+    fn backend(&self) -> &'static str {
+        "local"
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::plan::{Action, Source};
+
+    fn count_task(id: u32, n: u64) -> TaskSpec {
+        TaskSpec {
+            job_id: 1,
+            task_id: id,
+            attempt: 0,
+            source: Source::Range { start: 0, end: n },
+            ops: vec![],
+            action: Action::Count,
+        }
+    }
+
+    #[test]
+    fn runs_all_tasks_in_order() {
+        let c = LocalCluster::new(4, OpRegistry::with_builtins(), "artifacts");
+        let tasks: Vec<TaskSpec> = (0..16).map(|i| count_task(i, (i as u64 + 1) * 10)).collect();
+        let results = c.run_tasks(&tasks);
+        assert_eq!(results.len(), 16);
+        for (i, r) in results.iter().enumerate() {
+            assert_eq!(*r.as_ref().unwrap(), TaskOutput::Count((i as u64 + 1) * 10));
+        }
+    }
+
+    #[test]
+    fn failures_are_per_task() {
+        let reg = OpRegistry::with_builtins();
+        reg.register("fail_if_small", |_c, _p, records| {
+            if records.len() < 5 {
+                Err(Error::Engine("too small".into()))
+            } else {
+                Ok(records)
+            }
+        });
+        let c = LocalCluster::new(2, reg, "artifacts");
+        let mk = |id: u32, n: u64| TaskSpec {
+            job_id: 1,
+            task_id: id,
+            attempt: 0,
+            source: Source::Range { start: 0, end: n },
+            ops: vec![super::super::plan::OpCall::new("fail_if_small", vec![])],
+            action: Action::Count,
+        };
+        let results = c.run_tasks(&[mk(0, 2), mk(1, 10)]);
+        assert!(results[0].is_err());
+        assert_eq!(*results[1].as_ref().unwrap(), TaskOutput::Count(10));
+    }
+
+    #[test]
+    fn single_worker_works() {
+        let c = LocalCluster::new(1, OpRegistry::with_builtins(), "artifacts");
+        let results = c.run_tasks(&[count_task(0, 5)]);
+        assert_eq!(*results[0].as_ref().unwrap(), TaskOutput::Count(5));
+    }
+}

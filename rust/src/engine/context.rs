@@ -1,0 +1,443 @@
+//! Driver API: [`SimContext`] (the platform's `SparkContext`) and
+//! [`Rdd`], the lazily-composed distributed dataset handle.
+//!
+//! An `Rdd` is lineage: per-partition [`Source`]s plus a chain of named
+//! operator calls. Transformations append to the chain; actions
+//! ([`Rdd::collect`], [`Rdd::count`], …) compile the lineage into one
+//! task per partition and hand the batch to the scheduler.
+
+use super::cluster::{Cluster, LocalCluster};
+use super::ops::OpRegistry;
+use super::plan::{Action, OpCall, Record, Source, TaskOutput, TaskSpec};
+use super::remote::StandaloneCluster;
+use super::scheduler::{run_job, JobReport};
+use crate::config::{ClusterMode, PlatformConfig};
+use crate::error::{Error, Result};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Arc;
+
+struct ContextInner {
+    cluster: Box<dyn Cluster>,
+    registry: OpRegistry,
+    job_counter: AtomicU64,
+    max_retries: usize,
+    default_parallelism: usize,
+    last_report: std::sync::Mutex<Option<JobReport>>,
+}
+
+/// Driver-side entry point to the distributed engine.
+#[derive(Clone)]
+pub struct SimContext {
+    inner: Arc<ContextInner>,
+}
+
+impl SimContext {
+    /// Local (thread) cluster with `workers` workers.
+    pub fn local(workers: usize) -> Self {
+        let registry = crate::full_op_registry();
+        let cluster = LocalCluster::new(workers, registry.clone(), "artifacts");
+        Self::from_parts(Box::new(cluster), registry, 2, workers * 2)
+    }
+
+    /// Cluster per the platform config (local threads or standalone
+    /// worker processes).
+    pub fn from_config(cfg: &PlatformConfig) -> Result<Self> {
+        let registry = crate::full_op_registry();
+        let cluster: Box<dyn Cluster> = match cfg.cluster.mode {
+            ClusterMode::Local => Box::new(LocalCluster::new(
+                cfg.cluster.workers,
+                registry.clone(),
+                &cfg.perception.artifact_dir,
+            )),
+            ClusterMode::Standalone => Box::new(StandaloneCluster::launch(
+                cfg.cluster.workers,
+                cfg.cluster.base_port,
+                &cfg.perception.artifact_dir,
+            )?),
+        };
+        Ok(Self::from_parts(
+            cluster,
+            registry,
+            cfg.cluster.task_retries,
+            cfg.cluster.default_parallelism,
+        ))
+    }
+
+    fn from_parts(
+        cluster: Box<dyn Cluster>,
+        registry: OpRegistry,
+        max_retries: usize,
+        default_parallelism: usize,
+    ) -> Self {
+        Self {
+            inner: Arc::new(ContextInner {
+                cluster,
+                registry,
+                job_counter: AtomicU64::new(1),
+                max_retries,
+                default_parallelism: default_parallelism.max(1),
+                last_report: std::sync::Mutex::new(None),
+            }),
+        }
+    }
+
+    /// The operator registry (register custom ops before running jobs).
+    pub fn registry(&self) -> &OpRegistry {
+        &self.inner.registry
+    }
+
+    pub fn workers(&self) -> usize {
+        self.inner.cluster.workers()
+    }
+
+    pub fn backend(&self) -> &'static str {
+        self.inner.cluster.backend()
+    }
+
+    /// Report of the most recently completed job.
+    pub fn last_report(&self) -> Option<JobReport> {
+        self.inner.last_report.lock().unwrap().clone()
+    }
+
+    pub fn shutdown(&self) {
+        self.inner.cluster.shutdown();
+    }
+
+    // ---- RDD constructors ----
+
+    /// Distribute in-memory records across `partitions`.
+    pub fn parallelize(&self, records: Vec<Record>, partitions: usize) -> Rdd {
+        let p = partitions.max(1);
+        let mut parts: Vec<Vec<Record>> = (0..p).map(|_| Vec::new()).collect();
+        for (i, r) in records.into_iter().enumerate() {
+            parts[i % p].push(r);
+        }
+        self.rdd(parts.into_iter().map(|records| Source::Inline { records }).collect())
+    }
+
+    /// One partition per `*.bag` file in `dir` (sorted for determinism).
+    pub fn bag_dir(&self, dir: &str, topics: &[&str]) -> Result<Rdd> {
+        let mut paths: Vec<String> = std::fs::read_dir(dir)
+            .map_err(|e| Error::Engine(format!("bag_dir {dir}: {e}")))?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "bag").unwrap_or(false))
+            .map(|p| p.to_string_lossy().into_owned())
+            .collect();
+        paths.sort();
+        if paths.is_empty() {
+            return Err(Error::Engine(format!("no .bag files in {dir}")));
+        }
+        let topics: Vec<String> = topics.iter().map(|s| s.to_string()).collect();
+        Ok(self.rdd(
+            paths
+                .into_iter()
+                .map(|path| Source::BagFile { path, topics: topics.clone() })
+                .collect(),
+        ))
+    }
+
+    /// Synthetic camera frames generated on the workers: `partitions`
+    /// partitions of `frames_each` `width`×`height` RGB images.
+    pub fn synth_frames(
+        &self,
+        partitions: usize,
+        frames_each: u32,
+        width: u32,
+        height: u32,
+        seed: u64,
+    ) -> Rdd {
+        self.rdd(
+            (0..partitions.max(1) as u64)
+                .map(|p| Source::SynthFrames {
+                    seed: seed.wrapping_add(p.wrapping_mul(0x9e37_79b9)),
+                    count: frames_each,
+                    width,
+                    height,
+                })
+                .collect(),
+        )
+    }
+
+    /// Integers [0, n) split over the default parallelism.
+    pub fn range(&self, n: u64) -> Rdd {
+        let p = self.inner.default_parallelism as u64;
+        let chunk = n.div_ceil(p).max(1);
+        let mut sources = Vec::new();
+        let mut start = 0;
+        while start < n {
+            let end = (start + chunk).min(n);
+            sources.push(Source::Range { start, end });
+            start = end;
+        }
+        if sources.is_empty() {
+            sources.push(Source::Range { start: 0, end: 0 });
+        }
+        self.rdd(sources)
+    }
+
+    fn rdd(&self, sources: Vec<Source>) -> Rdd {
+        Rdd { ctx: self.clone(), sources, ops: Vec::new() }
+    }
+
+    fn run(&self, tasks: Vec<TaskSpec>) -> Result<Vec<TaskOutput>> {
+        let (outs, report) = run_job(self.inner.cluster.as_ref(), tasks, self.inner.max_retries)?;
+        *self.inner.last_report.lock().unwrap() = Some(report);
+        Ok(outs)
+    }
+
+    fn next_job_id(&self) -> u64 {
+        self.inner.job_counter.fetch_add(1, Ordering::Relaxed)
+    }
+}
+
+/// Lazily-composed distributed dataset.
+#[derive(Clone)]
+pub struct Rdd {
+    ctx: SimContext,
+    sources: Vec<Source>,
+    ops: Vec<OpCall>,
+}
+
+impl Rdd {
+    pub fn num_partitions(&self) -> usize {
+        self.sources.len()
+    }
+
+    /// Append a named operator (must exist in the registry at run time).
+    pub fn op(mut self, name: &str, params: Vec<u8>) -> Rdd {
+        self.ops.push(OpCall::new(name, params));
+        self
+    }
+
+    /// BinPipedRDD: pipe every partition through a child process running
+    /// `logic` (paper §3.1).
+    pub fn pipe(self, logic: &str) -> Rdd {
+        self.op("binpipe", logic.as_bytes().to_vec())
+    }
+
+    /// Ablation: same logic, in-process (the JNI-design stand-in).
+    pub fn pipe_inproc(self, logic: &str) -> Rdd {
+        self.op("binpipe_inproc", logic.as_bytes().to_vec())
+    }
+
+    /// Keep only bag messages on `topic` (PlayedRecord partitions).
+    pub fn filter_topic(self, topic: &str) -> Rdd {
+        self.op("filter_topic", topic.as_bytes().to_vec())
+    }
+
+    /// Strip PlayedRecord framing down to raw message payloads.
+    pub fn take_payload(self) -> Rdd {
+        self.op("take_payload", vec![])
+    }
+
+    /// Calibrated per-record compute stall (see `simulate_compute` op).
+    pub fn simulate_compute(self, micros_per_record: u64) -> Rdd {
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_varint(micros_per_record);
+        self.op("simulate_compute", w.into_vec())
+    }
+
+    /// Keep the first `n` records of each partition.
+    pub fn take_per_partition(self, n: u64) -> Rdd {
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_varint(n);
+        self.op("take", w.into_vec())
+    }
+
+    fn tasks(&self, action: Action) -> Vec<TaskSpec> {
+        let job_id = self.ctx.next_job_id();
+        self.sources
+            .iter()
+            .enumerate()
+            .map(|(i, source)| TaskSpec {
+                job_id,
+                task_id: i as u32,
+                attempt: 0,
+                source: source.clone(),
+                ops: self.ops.clone(),
+                action: action.clone(),
+            })
+            .collect()
+    }
+
+    // ---- actions ----
+
+    /// Materialize every record on the driver.
+    pub fn collect(&self) -> Result<Vec<Record>> {
+        let outs = self.ctx.run(self.tasks(Action::Collect))?;
+        let mut all = Vec::new();
+        for o in outs {
+            match o {
+                TaskOutput::Records(mut rs) => all.append(&mut rs),
+                other => return Err(Error::Engine(format!("collect got {other:?}"))),
+            }
+        }
+        Ok(all)
+    }
+
+    /// Count records across all partitions.
+    pub fn count(&self) -> Result<u64> {
+        let outs = self.ctx.run(self.tasks(Action::Count))?;
+        let mut total = 0;
+        for o in outs {
+            match o {
+                TaskOutput::Count(n) => total += n,
+                other => return Err(Error::Engine(format!("count got {other:?}"))),
+            }
+        }
+        Ok(total)
+    }
+
+    /// Persist each partition as a bag under `dir`; returns written paths.
+    pub fn save_bags(&self, dir: &str, topic: &str, type_name: &str) -> Result<Vec<String>> {
+        std::fs::create_dir_all(dir)?;
+        let outs = self.ctx.run(self.tasks(Action::SaveBag {
+            dir: dir.to_string(),
+            topic: topic.to_string(),
+            type_name: type_name.to_string(),
+        }))?;
+        let mut paths = Vec::new();
+        for o in outs {
+            match o {
+                TaskOutput::Records(rs) => {
+                    for r in rs {
+                        paths.push(String::from_utf8(r).map_err(|_| {
+                            Error::Engine("save_bags returned non-utf8 path".into())
+                        })?);
+                    }
+                }
+                other => return Err(Error::Engine(format!("save got {other:?}"))),
+            }
+        }
+        Ok(paths)
+    }
+
+    /// Driver-side shuffle: group records by the key produced by the
+    /// registered `key_op` map operator (runs as a normal map, then the
+    /// records are hash-grouped here — a two-stage job with a driver
+    /// barrier, the honest small-cluster version of Spark's shuffle).
+    /// Records must be encoded as `varint keylen ‖ key ‖ value`.
+    pub fn group_by(&self, key_op: &str) -> Result<std::collections::HashMap<Vec<u8>, Vec<Record>>> {
+        let keyed = self.clone().op(key_op, vec![]).collect()?;
+        let mut groups: std::collections::HashMap<Vec<u8>, Vec<Record>> =
+            std::collections::HashMap::new();
+        for rec in keyed {
+            let mut r = crate::util::bytes::ByteReader::new(&rec);
+            let key = r.get_bytes_vec()?;
+            let value = r.get_bytes_vec()?;
+            groups.entry(key).or_default().push(value);
+        }
+        Ok(groups)
+    }
+
+    /// Redistribute current records across `partitions` (driver round
+    /// trip; pairs with [`Rdd::group_by`] for two-stage pipelines).
+    pub fn repartition(&self, partitions: usize) -> Result<Rdd> {
+        let records = self.collect()?;
+        Ok(self.ctx.parallelize(records, partitions))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parallelize_collect_roundtrip() {
+        let sc = SimContext::local(3);
+        let records: Vec<Record> = (0..10u8).map(|i| vec![i]).collect();
+        let rdd = sc.parallelize(records.clone(), 4);
+        assert_eq!(rdd.num_partitions(), 4);
+        let mut out = rdd.collect().unwrap();
+        out.sort();
+        assert_eq!(out, records);
+    }
+
+    #[test]
+    fn range_count() {
+        let sc = SimContext::local(2);
+        assert_eq!(sc.range(1000).count().unwrap(), 1000);
+        assert_eq!(sc.range(0).count().unwrap(), 0);
+    }
+
+    #[test]
+    fn synth_frames_partitions_differ() {
+        let sc = SimContext::local(2);
+        let rdd = sc.synth_frames(2, 3, 8, 8, 42);
+        let frames = rdd.collect().unwrap();
+        assert_eq!(frames.len(), 6);
+        // partitions must not generate identical frames
+        assert_ne!(frames[0], frames[3]);
+    }
+
+    #[test]
+    fn custom_op_via_registry() {
+        let sc = SimContext::local(2);
+        sc.registry().register_map("double", |_c, _p, r| {
+            Ok(r.iter().flat_map(|&b| [b, b]).collect())
+        });
+        let out = sc
+            .parallelize(vec![vec![1], vec![2]], 2)
+            .op("double", vec![])
+            .collect()
+            .unwrap();
+        let mut out = out;
+        out.sort();
+        assert_eq!(out, vec![vec![1, 1], vec![2, 2]]);
+    }
+
+    #[test]
+    fn take_per_partition_limits() {
+        let sc = SimContext::local(2);
+        let rdd = sc.parallelize((0..100u8).map(|i| vec![i]).collect(), 4);
+        assert_eq!(rdd.take_per_partition(5).count().unwrap(), 20);
+    }
+
+    #[test]
+    fn save_bags_writes_partitions() {
+        let sc = SimContext::local(2);
+        let dir = std::env::temp_dir().join(format!("av_simd_ctx_save_{}", std::process::id()));
+        let rdd = sc.parallelize((0..8u8).map(|i| vec![i]).collect(), 2);
+        let paths = rdd
+            .save_bags(dir.to_str().unwrap(), "/rec", "raw")
+            .unwrap();
+        assert_eq!(paths.len(), 2);
+        for p in &paths {
+            assert!(std::path::Path::new(p).exists());
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn group_by_hash_groups() {
+        let sc = SimContext::local(2);
+        // key = first byte parity, value = record
+        sc.registry().register_map("key_parity", |_c, _p, r| {
+            let mut w = crate::util::bytes::ByteWriter::new();
+            w.put_bytes(&[r[0] % 2]);
+            w.put_bytes(&r);
+            Ok(w.into_vec())
+        });
+        let rdd = sc.parallelize((0..10u8).map(|i| vec![i]).collect(), 3);
+        let groups = rdd.group_by("key_parity").unwrap();
+        assert_eq!(groups.len(), 2);
+        assert_eq!(groups[&vec![0u8]].len(), 5);
+        assert_eq!(groups[&vec![1u8]].len(), 5);
+    }
+
+    #[test]
+    fn job_report_is_recorded() {
+        let sc = SimContext::local(2);
+        sc.range(10).count().unwrap();
+        let report = sc.last_report().unwrap();
+        assert!(report.tasks >= 1);
+        assert_eq!(report.retries, 0);
+    }
+
+    #[test]
+    fn bag_dir_missing_is_error() {
+        let sc = SimContext::local(1);
+        assert!(sc.bag_dir("/definitely/not/here", &[]).is_err());
+    }
+}

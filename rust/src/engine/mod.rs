@@ -1,0 +1,27 @@
+//! The Spark-like distributed compute engine (paper §3).
+//!
+//! * [`plan`] — serializable task descriptions (sources, op chains,
+//!   actions) — the closure-serialization substitute.
+//! * [`ops`] — the operator registry shared by driver and workers.
+//! * [`executor`] — task execution (source → ops → action).
+//! * [`cluster`] / [`remote`] — thread-pool and worker-process clusters.
+//! * [`scheduler`] — batch dispatch with bounded retries.
+//! * [`context`] — the driver API: [`SimContext`] + [`Rdd`].
+//! * [`rpc`] / [`worker`] — the standalone-mode TCP protocol.
+
+pub mod cluster;
+pub mod context;
+pub mod executor;
+pub mod ops;
+pub mod plan;
+pub mod remote;
+pub mod rpc;
+pub mod scheduler;
+pub mod worker;
+
+pub use cluster::{Cluster, LocalCluster};
+pub use context::{Rdd, SimContext};
+pub use ops::{OpRegistry, TaskCtx};
+pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
+pub use remote::StandaloneCluster;
+pub use scheduler::{run_job, JobReport};

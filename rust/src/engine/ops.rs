@@ -1,0 +1,323 @@
+//! Operator registry — the engine's substitute for Spark closure
+//! serialization.
+//!
+//! Operators are whole-partition transforms registered under stable names
+//! on both driver and workers (built-ins at startup; applications may
+//! register more before creating workers — in local mode closures work
+//! directly, in standalone mode the op must exist in the worker binary,
+//! exactly like Spark needing the application jar on every executor).
+
+use super::plan::{OpCall, PlayedRecord, Record};
+use crate::bag::BagCache;
+use crate::error::{Error, Result};
+use crate::pipe::{self, ChildSpec, LogicRegistry, PipeItem};
+use std::collections::HashMap;
+use std::sync::{Arc, RwLock};
+
+/// Services available to operators while running a task.
+#[derive(Clone)]
+pub struct TaskCtx {
+    /// Worker-local in-memory bag cache (paper §3.2).
+    pub cache: BagCache,
+    /// AOT artifact directory for PJRT-backed ops.
+    pub artifact_dir: String,
+    /// Worker id (0-based) for logs and data-gen seeding.
+    pub worker_id: usize,
+    /// In-process user-logic registry (for the JNI-analogue ablation).
+    pub logic: LogicRegistry,
+}
+
+impl TaskCtx {
+    pub fn new(worker_id: usize, artifact_dir: impl Into<String>) -> Self {
+        Self {
+            cache: BagCache::new(1 << 30),
+            artifact_dir: artifact_dir.into(),
+            worker_id,
+            logic: crate::full_logic_registry(),
+        }
+    }
+}
+
+/// A whole-partition operator.
+pub type PartitionOp =
+    Arc<dyn Fn(&TaskCtx, &[u8], Vec<Record>) -> Result<Vec<Record>> + Send + Sync>;
+
+/// Thread-safe operator registry.
+#[derive(Clone, Default)]
+pub struct OpRegistry {
+    ops: Arc<RwLock<HashMap<String, PartitionOp>>>,
+}
+
+impl OpRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registry pre-loaded with all built-in operators.
+    pub fn with_builtins() -> Self {
+        let r = Self::new();
+        register_builtin_ops(&r);
+        r
+    }
+
+    /// Register a whole-partition operator.
+    pub fn register(
+        &self,
+        name: &str,
+        f: impl Fn(&TaskCtx, &[u8], Vec<Record>) -> Result<Vec<Record>> + Send + Sync + 'static,
+    ) {
+        self.ops.write().unwrap().insert(name.to_string(), Arc::new(f));
+    }
+
+    /// Register a per-record map (convenience).
+    pub fn register_map(
+        &self,
+        name: &str,
+        f: impl Fn(&TaskCtx, &[u8], Record) -> Result<Record> + Send + Sync + 'static,
+    ) {
+        self.register(name, move |ctx, params, records| {
+            records.into_iter().map(|r| f(ctx, params, r)).collect()
+        });
+    }
+
+    /// Register a per-record filter (convenience).
+    pub fn register_filter(
+        &self,
+        name: &str,
+        f: impl Fn(&TaskCtx, &[u8], &Record) -> Result<bool> + Send + Sync + 'static,
+    ) {
+        self.register(name, move |ctx, params, records| {
+            let mut out = Vec::with_capacity(records.len());
+            for r in records {
+                if f(ctx, params, &r)? {
+                    out.push(r);
+                }
+            }
+            Ok(out)
+        });
+    }
+
+    pub fn get(&self, name: &str) -> Result<PartitionOp> {
+        self.ops.read().unwrap().get(name).cloned().ok_or_else(|| {
+            Error::Engine(format!(
+                "unknown operator '{name}' — not registered on this worker \
+                 (standalone workers only know built-ins and ops registered in main())"
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.ops.read().unwrap().keys().cloned().collect();
+        v.sort();
+        v
+    }
+
+    /// Apply an op chain to a partition.
+    pub fn apply_chain(
+        &self,
+        ctx: &TaskCtx,
+        ops: &[OpCall],
+        mut records: Vec<Record>,
+    ) -> Result<Vec<Record>> {
+        for call in ops {
+            let f = self.get(&call.name)?;
+            records = f(ctx, &call.params, records)?;
+        }
+        Ok(records)
+    }
+}
+
+/// Convert engine records → pipe items (records are opaque bytes).
+fn records_to_items(records: Vec<Record>) -> Vec<PipeItem> {
+    records.into_iter().map(PipeItem::Bytes).collect()
+}
+
+/// Convert pipe items back → engine records. Non-bytes items are
+/// re-encoded through the codec so nothing is lost.
+fn items_to_records(items: Vec<PipeItem>) -> Vec<Record> {
+    items
+        .into_iter()
+        .map(|item| match item {
+            PipeItem::Bytes(b) => b,
+            other => {
+                let mut w = crate::util::bytes::ByteWriter::new();
+                other.encode_into(&mut w);
+                w.into_vec()
+            }
+        })
+        .collect()
+}
+
+/// Built-in operators available on every worker.
+pub fn register_builtin_ops(reg: &OpRegistry) {
+    // -- generic --
+    reg.register("identity", |_ctx, _p, records| Ok(records));
+
+    // params = varint n: keep first n records
+    reg.register("take", |_ctx, params, mut records| {
+        let mut r = crate::util::bytes::ByteReader::new(params);
+        let n = r.get_varint()? as usize;
+        records.truncate(n);
+        Ok(records)
+    });
+
+    // Calibrated compute stall: params = varint micros per record.
+    // Simulates an N-core cluster's CPU-bound perception work on this
+    // 1-core testbed (DESIGN.md substitution table): the whole platform
+    // path (scheduling, sources, collect) is real; only the DNN FLOPs
+    // are replaced by a timed stall workers can overlap.
+    reg.register("simulate_compute", |_ctx, params, records| {
+        let mut r = crate::util::bytes::ByteReader::new(params);
+        let micros = r.get_varint()?;
+        std::thread::sleep(std::time::Duration::from_micros(
+            micros * records.len() as u64,
+        ));
+        Ok(records)
+    });
+
+    // -- played-record (bag message) ops --
+    // Extract the raw message payload from PlayedRecords.
+    reg.register_map("take_payload", |_ctx, _p, rec| {
+        Ok(PlayedRecord::decode(&rec)?.data)
+    });
+
+    // params = topic string: keep only messages on that topic.
+    reg.register_filter("filter_topic", |_ctx, params, rec| {
+        let topic = std::str::from_utf8(params)
+            .map_err(|_| Error::Engine("filter_topic params not utf-8".into()))?;
+        Ok(PlayedRecord::decode(rec)?.topic == topic)
+    });
+
+    // -- BinPipedRDD ops (paper §3.1) --
+    // params = user-logic name. Pipes the partition through a child
+    // process of this binary in `user-logic` mode.
+    reg.register("binpipe", |ctx, params, records| {
+        let logic = std::str::from_utf8(params)
+            .map_err(|_| Error::Engine("binpipe params not utf-8".into()))?;
+        let mut spec = ChildSpec::for_logic(logic)?;
+        spec.env
+            .push(("AV_SIMD_ARTIFACTS".into(), ctx.artifact_dir.clone()));
+        let out = pipe::pipe_through_child(&spec, records_to_items(records))?;
+        Ok(items_to_records(out))
+    });
+
+    // Ablation baseline: the same user logic run in-process (what the
+    // paper's rejected JNI design would have bought).
+    reg.register("binpipe_inproc", |ctx, params, records| {
+        let logic = std::str::from_utf8(params)
+            .map_err(|_| Error::Engine("binpipe_inproc params not utf-8".into()))?;
+        let f = ctx.logic.get(logic)?;
+        let out = f(records_to_items(records))?;
+        Ok(items_to_records(out))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::{Message, Time};
+
+    fn ctx() -> TaskCtx {
+        TaskCtx::new(0, "artifacts")
+    }
+
+    #[test]
+    fn unknown_op_is_actionable_error() {
+        let reg = OpRegistry::with_builtins();
+        let err = match reg.get("frobnicate") { Err(e) => e, Ok(_) => panic!("expected error") };
+        assert!(err.to_string().contains("frobnicate"));
+    }
+
+    #[test]
+    fn chain_applies_in_order() {
+        let reg = OpRegistry::with_builtins();
+        reg.register_map("append_a", |_c, _p, mut r| {
+            r.push(b'a');
+            Ok(r)
+        });
+        reg.register_map("append_b", |_c, _p, mut r| {
+            r.push(b'b');
+            Ok(r)
+        });
+        let out = reg
+            .apply_chain(
+                &ctx(),
+                &[OpCall::new("append_a", vec![]), OpCall::new("append_b", vec![])],
+                vec![vec![b'x']],
+            )
+            .unwrap();
+        assert_eq!(out, vec![b"xab".to_vec()]);
+    }
+
+    #[test]
+    fn take_op_truncates() {
+        let reg = OpRegistry::with_builtins();
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_varint(2);
+        let out = reg
+            .apply_chain(
+                &ctx(),
+                &[OpCall::new("take", w.into_vec())],
+                vec![vec![1], vec![2], vec![3]],
+            )
+            .unwrap();
+        assert_eq!(out.len(), 2);
+    }
+
+    #[test]
+    fn filter_topic_and_take_payload() {
+        let reg = OpRegistry::with_builtins();
+        let recs: Vec<Record> = [("/camera", b"img".to_vec()), ("/lidar", b"pc".to_vec())]
+            .into_iter()
+            .map(|(topic, data)| {
+                PlayedRecord {
+                    topic: topic.into(),
+                    type_name: "T".into(),
+                    time: Time::ZERO,
+                    data,
+                }
+                .encode()
+            })
+            .collect();
+        let out = reg
+            .apply_chain(
+                &ctx(),
+                &[
+                    OpCall::new("filter_topic", b"/camera".to_vec()),
+                    OpCall::new("take_payload", vec![]),
+                ],
+                recs,
+            )
+            .unwrap();
+        assert_eq!(out, vec![b"img".to_vec()]);
+    }
+
+    #[test]
+    fn binpipe_inproc_runs_logic() {
+        let reg = OpRegistry::with_builtins();
+        let img = crate::msg::Image::synthetic(4, 6, 1);
+        let out = reg
+            .apply_chain(
+                &ctx(),
+                &[OpCall::new("binpipe_inproc", b"rotate90".to_vec())],
+                vec![img.encode()],
+            )
+            .unwrap();
+        let rot = crate::msg::Image::decode(&out[0]).unwrap();
+        assert_eq!((rot.width, rot.height), (6, 4));
+    }
+
+    #[test]
+    fn register_filter_propagates_errors() {
+        let reg = OpRegistry::with_builtins();
+        reg.register_filter("always_err", |_c, _p, _r| {
+            Err(Error::Engine("nope".into()))
+        });
+        let res = reg.apply_chain(
+            &ctx(),
+            &[OpCall::new("always_err", vec![])],
+            vec![vec![1]],
+        );
+        assert!(res.is_err());
+    }
+}

@@ -1,0 +1,369 @@
+//! Serializable execution plans.
+//!
+//! A task must cross a process boundary in standalone mode (driver →
+//! TCP → worker), so the unit of work is fully described by data: a
+//! per-partition [`Source`], a chain of named [`OpCall`]s (the platform's
+//! substitute for Spark closure serialization — operators are registered
+//! by name in the [`super::ops::OpRegistry`] on both sides), and a
+//! terminal [`Action`].
+//!
+//! Records are raw byte vectors (`RDD[Bytes]`, exactly the paper's §3.1
+//! model); typed views are layered on top by the ops themselves.
+
+use crate::error::{Error, Result};
+use crate::msg::Time;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// One data record flowing through the engine.
+pub type Record = Vec<u8>;
+
+/// Where a partition's records come from.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Source {
+    /// Records shipped inline with the task (parallelize / shuffled data).
+    Inline { records: Vec<Record> },
+    /// One bag file; records are encoded [`PlayedRecord`]s, optionally
+    /// filtered to `topics` (empty = all).
+    BagFile { path: String, topics: Vec<String> },
+    /// Synthetic camera frames generated on the worker (scalability
+    /// workloads without disk); records are encoded `msg::Image`s.
+    SynthFrames { seed: u64, count: u32, width: u32, height: u32 },
+    /// Integer range [start, end); records are 8-byte LE u64.
+    Range { start: u64, end: u64 },
+}
+
+impl Source {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Source::Inline { records } => {
+                w.put_u8(0);
+                w.put_varint(records.len() as u64);
+                for r in records {
+                    w.put_bytes(r);
+                }
+            }
+            Source::BagFile { path, topics } => {
+                w.put_u8(1);
+                w.put_str(path);
+                w.put_varint(topics.len() as u64);
+                for t in topics {
+                    w.put_str(t);
+                }
+            }
+            Source::SynthFrames { seed, count, width, height } => {
+                w.put_u8(2);
+                w.put_u64(*seed);
+                w.put_u32(*count);
+                w.put_u32(*width);
+                w.put_u32(*height);
+            }
+            Source::Range { start, end } => {
+                w.put_u8(3);
+                w.put_u64(*start);
+                w.put_u64(*end);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        match r.get_u8()? {
+            0 => {
+                let n = r.get_varint()? as usize;
+                let mut records = Vec::with_capacity(n);
+                for _ in 0..n {
+                    records.push(r.get_bytes_vec()?);
+                }
+                Ok(Source::Inline { records })
+            }
+            1 => {
+                let path = r.get_str()?;
+                let n = r.get_varint()? as usize;
+                let mut topics = Vec::with_capacity(n);
+                for _ in 0..n {
+                    topics.push(r.get_str()?);
+                }
+                Ok(Source::BagFile { path, topics })
+            }
+            2 => Ok(Source::SynthFrames {
+                seed: r.get_u64()?,
+                count: r.get_u32()?,
+                width: r.get_u32()?,
+                height: r.get_u32()?,
+            }),
+            3 => Ok(Source::Range { start: r.get_u64()?, end: r.get_u64()? }),
+            other => Err(Error::Engine(format!("unknown source tag {other}"))),
+        }
+    }
+
+    /// Rough description for logs / UI.
+    pub fn describe(&self) -> String {
+        match self {
+            Source::Inline { records } => format!("inline[{}]", records.len()),
+            Source::BagFile { path, .. } => format!("bag:{path}"),
+            Source::SynthFrames { count, width, height, .. } => {
+                format!("synth[{count} x {width}x{height}]")
+            }
+            Source::Range { start, end } => format!("range[{start}..{end})"),
+        }
+    }
+}
+
+/// A named operator application.
+#[derive(Debug, Clone, PartialEq)]
+pub struct OpCall {
+    pub name: String,
+    pub params: Vec<u8>,
+}
+
+impl OpCall {
+    pub fn new(name: impl Into<String>, params: Vec<u8>) -> Self {
+        Self { name: name.into(), params }
+    }
+
+    fn encode(&self, w: &mut ByteWriter) {
+        w.put_str(&self.name);
+        w.put_bytes(&self.params);
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self { name: r.get_str()?, params: r.get_bytes_vec()? })
+    }
+}
+
+/// Terminal operation of a task.
+#[derive(Debug, Clone, PartialEq)]
+pub enum Action {
+    /// Return the partition's records to the driver.
+    Collect,
+    /// Return only the record count.
+    Count,
+    /// Write records into a bag file under `dir` (the "persist to HDFS"
+    /// path); returns the written path as a single record.
+    SaveBag { dir: String, topic: String, type_name: String },
+}
+
+impl Action {
+    fn encode(&self, w: &mut ByteWriter) {
+        match self {
+            Action::Collect => w.put_u8(0),
+            Action::Count => w.put_u8(1),
+            Action::SaveBag { dir, topic, type_name } => {
+                w.put_u8(2);
+                w.put_str(dir);
+                w.put_str(topic);
+                w.put_str(type_name);
+            }
+        }
+    }
+
+    fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        match r.get_u8()? {
+            0 => Ok(Action::Collect),
+            1 => Ok(Action::Count),
+            2 => Ok(Action::SaveBag {
+                dir: r.get_str()?,
+                topic: r.get_str()?,
+                type_name: r.get_str()?,
+            }),
+            other => Err(Error::Engine(format!("unknown action tag {other}"))),
+        }
+    }
+}
+
+/// A fully-described unit of work.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TaskSpec {
+    pub job_id: u64,
+    pub task_id: u32,
+    pub attempt: u32,
+    pub source: Source,
+    pub ops: Vec<OpCall>,
+    pub action: Action,
+}
+
+impl TaskSpec {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u64(self.job_id);
+        w.put_u32(self.task_id);
+        w.put_u32(self.attempt);
+        self.source.encode(&mut w);
+        w.put_varint(self.ops.len() as u64);
+        for op in &self.ops {
+            op.encode(&mut w);
+        }
+        self.action.encode(&mut w);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let job_id = r.get_u64()?;
+        let task_id = r.get_u32()?;
+        let attempt = r.get_u32()?;
+        let source = Source::decode(&mut r)?;
+        let n = r.get_varint()? as usize;
+        let mut ops = Vec::with_capacity(n);
+        for _ in 0..n {
+            ops.push(OpCall::decode(&mut r)?);
+        }
+        let action = Action::decode(&mut r)?;
+        Ok(Self { job_id, task_id, attempt, source, ops, action })
+    }
+}
+
+/// What a finished task hands back.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TaskOutput {
+    Records(Vec<Record>),
+    Count(u64),
+}
+
+impl TaskOutput {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        match self {
+            TaskOutput::Records(rs) => {
+                w.put_u8(0);
+                w.put_varint(rs.len() as u64);
+                for r in rs {
+                    w.put_bytes(r);
+                }
+            }
+            TaskOutput::Count(n) => {
+                w.put_u8(1);
+                w.put_u64(*n);
+            }
+        }
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        match r.get_u8()? {
+            0 => {
+                let n = r.get_varint()? as usize;
+                let mut rs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    rs.push(r.get_bytes_vec()?);
+                }
+                Ok(TaskOutput::Records(rs))
+            }
+            1 => Ok(TaskOutput::Count(r.get_u64()?)),
+            other => Err(Error::Engine(format!("unknown output tag {other}"))),
+        }
+    }
+}
+
+/// A bag message flattened into an engine record (topic + type + time +
+/// payload). This is how bag contents flow through RDDs.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PlayedRecord {
+    pub topic: String,
+    pub type_name: String,
+    pub time: Time,
+    pub data: Vec<u8>,
+}
+
+impl PlayedRecord {
+    pub fn encode(&self) -> Record {
+        let mut w = ByteWriter::with_capacity(self.data.len() + 32);
+        w.put_str(&self.topic);
+        w.put_str(&self.type_name);
+        w.put_u64(self.time.nanos);
+        w.put_bytes(&self.data);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        Ok(Self {
+            topic: r.get_str()?,
+            type_name: r.get_str()?,
+            time: Time::from_nanos(r.get_u64()?),
+            data: r.get_bytes_vec()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> TaskSpec {
+        TaskSpec {
+            job_id: 9,
+            task_id: 3,
+            attempt: 1,
+            source: Source::BagFile { path: "/data/x.bag".into(), topics: vec!["/camera".into()] },
+            ops: vec![
+                OpCall::new("take_payload", vec![]),
+                OpCall::new("binpipe", b"rotate90".to_vec()),
+            ],
+            action: Action::Collect,
+        }
+    }
+
+    #[test]
+    fn task_spec_roundtrip() {
+        let s = spec();
+        assert_eq!(TaskSpec::decode(&s.encode()).unwrap(), s);
+    }
+
+    #[test]
+    fn all_sources_roundtrip() {
+        for source in [
+            Source::Inline { records: vec![vec![1], vec![2, 3]] },
+            Source::BagFile { path: "p".into(), topics: vec![] },
+            Source::SynthFrames { seed: 7, count: 10, width: 64, height: 48 },
+            Source::Range { start: 5, end: 50 },
+        ] {
+            let s = TaskSpec { source: source.clone(), ..spec() };
+            assert_eq!(TaskSpec::decode(&s.encode()).unwrap().source, source);
+        }
+    }
+
+    #[test]
+    fn all_actions_roundtrip() {
+        for action in [
+            Action::Collect,
+            Action::Count,
+            Action::SaveBag {
+                dir: "/out".into(),
+                topic: "/t".into(),
+                type_name: "T".into(),
+            },
+        ] {
+            let s = TaskSpec { action: action.clone(), ..spec() };
+            assert_eq!(TaskSpec::decode(&s.encode()).unwrap().action, action);
+        }
+    }
+
+    #[test]
+    fn output_roundtrip() {
+        for out in [
+            TaskOutput::Records(vec![vec![1, 2], vec![], vec![9; 100]]),
+            TaskOutput::Count(12345),
+        ] {
+            assert_eq!(TaskOutput::decode(&out.encode()).unwrap(), out);
+        }
+    }
+
+    #[test]
+    fn played_record_roundtrip() {
+        let p = PlayedRecord {
+            topic: "/camera".into(),
+            type_name: "av/sensor/Image".into(),
+            time: Time::from_nanos(42),
+            data: vec![1, 2, 3],
+        };
+        assert_eq!(PlayedRecord::decode(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn corrupt_spec_rejected() {
+        let mut buf = spec().encode();
+        buf.truncate(buf.len() / 2);
+        assert!(TaskSpec::decode(&buf).is_err());
+    }
+}

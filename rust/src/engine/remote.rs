@@ -1,0 +1,168 @@
+//! Standalone cluster: worker *processes* over TCP.
+//!
+//! The driver spawns N copies of this binary in `worker` mode, connects a
+//! [`WorkerClient`] to each, and fans task batches out with one feeder
+//! thread per worker pulling from a shared queue (greedy load balancing,
+//! like Spark's executor task slots). Lost workers fail their in-flight
+//! task with a retryable error; the scheduler re-queues it and the batch
+//! continues on the surviving workers.
+
+use super::cluster::Cluster;
+use super::plan::{TaskOutput, TaskSpec};
+use super::worker::WorkerClient;
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::process::{Child, Command, Stdio};
+use std::sync::Mutex;
+
+/// A spawned worker process + its RPC client.
+struct RemoteWorker {
+    client: Mutex<Option<WorkerClient>>,
+    child: Mutex<Child>,
+    addr: String,
+}
+
+/// Cluster of spawned worker processes.
+pub struct StandaloneCluster {
+    workers: Vec<RemoteWorker>,
+}
+
+impl StandaloneCluster {
+    /// Spawn `n` worker processes on sequential ports starting at
+    /// `base_port` and wait until all are reachable.
+    pub fn launch(n: usize, base_port: u16, artifact_dir: &str) -> Result<Self> {
+        assert!(n >= 1);
+        let exe = std::env::current_exe()
+            .map_err(|e| Error::Engine(format!("cannot locate current exe: {e}")))?;
+        let mut workers = Vec::with_capacity(n);
+        for i in 0..n {
+            let addr = format!("127.0.0.1:{}", base_port + i as u16);
+            let child = Command::new(&exe)
+                .args([
+                    "worker",
+                    "--listen",
+                    &addr,
+                    "--id",
+                    &i.to_string(),
+                    "--artifacts",
+                    artifact_dir,
+                ])
+                .stdin(Stdio::null())
+                .stdout(Stdio::null())
+                .stderr(Stdio::inherit())
+                .spawn()
+                .map_err(|e| Error::Engine(format!("spawn worker {i}: {e}")))?;
+            workers.push(RemoteWorker {
+                client: Mutex::new(None),
+                child: Mutex::new(child),
+                addr,
+            });
+        }
+        // Connect after all spawns so startup overlaps.
+        for (i, w) in workers.iter().enumerate() {
+            let client =
+                WorkerClient::connect(&w.addr, std::time::Duration::from_secs(20))
+                    .map_err(|e| Error::Engine(format!("worker {i}: {e}")))?;
+            *w.client.lock().unwrap() = Some(client);
+        }
+        Ok(Self { workers })
+    }
+}
+
+impl Cluster for StandaloneCluster {
+    fn workers(&self) -> usize {
+        self.workers.len()
+    }
+
+    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>> {
+        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..tasks.len()).collect());
+        let results: Vec<Mutex<Option<Result<TaskOutput>>>> =
+            (0..tasks.len()).map(|_| Mutex::new(None)).collect();
+
+        std::thread::scope(|scope| {
+            for w in &self.workers {
+                scope.spawn(|| {
+                    let mut guard = w.client.lock().unwrap();
+                    let client = match guard.as_mut() {
+                        Some(c) => c,
+                        None => return, // worker previously declared dead
+                    };
+                    loop {
+                        let idx = match queue.lock().unwrap().pop_front() {
+                            Some(i) => i,
+                            None => break,
+                        };
+                        match client.run_task(&tasks[idx]) {
+                            Ok(out) => {
+                                *results[idx].lock().unwrap() = Some(Ok(out));
+                            }
+                            Err(e) => {
+                                let transport_dead = matches!(e, Error::Io(_))
+                                    || e.to_string().contains("hung up");
+                                *results[idx].lock().unwrap() =
+                                    Some(Err(Error::Engine(format!(
+                                        "worker {}: {e}",
+                                        w.addr
+                                    ))));
+                                if transport_dead {
+                                    // Worker lost: stop pulling; surviving
+                                    // workers drain the queue.
+                                    *guard = None;
+                                    break;
+                                }
+                            }
+                        }
+                    }
+                });
+            }
+        });
+
+        results
+            .into_iter()
+            .map(|m| {
+                m.into_inner()
+                    .unwrap()
+                    .unwrap_or_else(|| Err(Error::Engine("task never dispatched".into())))
+            })
+            .collect()
+    }
+
+    fn shutdown(&self) {
+        for w in &self.workers {
+            if let Some(c) = w.client.lock().unwrap().as_mut() {
+                let _ = c.shutdown();
+            }
+        }
+        for w in &self.workers {
+            let mut child = w.child.lock().unwrap();
+            // Give it a moment to exit gracefully, then kill.
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+            loop {
+                match child.try_wait() {
+                    Ok(Some(_)) => break,
+                    Ok(None) if std::time::Instant::now() < deadline => {
+                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    }
+                    _ => {
+                        let _ = child.kill();
+                        let _ = child.wait();
+                        break;
+                    }
+                }
+            }
+        }
+    }
+
+    fn backend(&self) -> &'static str {
+        "standalone"
+    }
+}
+
+impl Drop for StandaloneCluster {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+// Integration tests for StandaloneCluster live in rust/tests/ — they need
+// the built `av-simd` binary on disk, which unit tests don't have.

@@ -1,0 +1,151 @@
+//! Driver ⇄ worker RPC: length-prefixed binary frames over TCP.
+//!
+//! ```text
+//! frame := len:u32 (type:u8 payload)   -- len covers type+payload
+//! ```
+//! The protocol is a simple request/response per connection: the driver
+//! sends `RunTask`, the worker answers `TaskOk`/`TaskErr`. `Ping`/`Pong`
+//! is the liveness probe used while waiting for worker startup.
+
+use crate::error::{Error, Result};
+use std::io::{Read, Write};
+
+/// Maximum frame size (guards against protocol desync).
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// RPC message.
+#[derive(Debug, Clone, PartialEq)]
+pub enum RpcMsg {
+    /// Driver → worker: run this encoded [`super::plan::TaskSpec`].
+    RunTask(Vec<u8>),
+    /// Worker → driver: encoded [`super::plan::TaskOutput`].
+    TaskOk(Vec<u8>),
+    /// Worker → driver: task failed with message.
+    TaskErr(String),
+    Ping,
+    Pong,
+    /// Driver → worker: exit gracefully.
+    Shutdown,
+}
+
+impl RpcMsg {
+    fn type_byte(&self) -> u8 {
+        match self {
+            RpcMsg::RunTask(_) => 1,
+            RpcMsg::TaskOk(_) => 2,
+            RpcMsg::TaskErr(_) => 3,
+            RpcMsg::Ping => 4,
+            RpcMsg::Pong => 5,
+            RpcMsg::Shutdown => 6,
+        }
+    }
+}
+
+/// Write one frame.
+pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
+    let payload: &[u8] = match msg {
+        RpcMsg::RunTask(b) | RpcMsg::TaskOk(b) => b,
+        RpcMsg::TaskErr(s) => s.as_bytes(),
+        _ => &[],
+    };
+    let len = (payload.len() + 1) as u32;
+    if len > MAX_FRAME {
+        return Err(Error::Engine(format!("frame too large: {len}")));
+    }
+    w.write_all(&len.to_le_bytes())?;
+    w.write_all(&[msg.type_byte()])?;
+    w.write_all(payload)?;
+    w.flush()?;
+    Ok(())
+}
+
+/// Read one frame. `Ok(None)` on clean EOF before any bytes.
+pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
+    let mut len_buf = [0u8; 4];
+    match r.read_exact(&mut len_buf) {
+        Ok(()) => {}
+        Err(e) if e.kind() == std::io::ErrorKind::UnexpectedEof => return Ok(None),
+        Err(e) => return Err(Error::Io(e)),
+    }
+    let len = u32::from_le_bytes(len_buf);
+    if len == 0 || len > MAX_FRAME {
+        return Err(Error::Engine(format!("bad frame length {len}")));
+    }
+    let mut buf = vec![0u8; len as usize];
+    r.read_exact(&mut buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Engine("connection died mid-frame".into())
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    let (ty, payload) = (buf[0], buf[1..].to_vec());
+    let msg = match ty {
+        1 => RpcMsg::RunTask(payload),
+        2 => RpcMsg::TaskOk(payload),
+        3 => RpcMsg::TaskErr(
+            String::from_utf8(payload)
+                .map_err(|_| Error::Engine("TaskErr not utf-8".into()))?,
+        ),
+        4 => RpcMsg::Ping,
+        5 => RpcMsg::Pong,
+        6 => RpcMsg::Shutdown,
+        other => return Err(Error::Engine(format!("unknown rpc type {other}"))),
+    };
+    Ok(Some(msg))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip(msg: RpcMsg) {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &msg).unwrap();
+        let mut cur = &buf[..];
+        assert_eq!(read_msg(&mut cur).unwrap().unwrap(), msg);
+        assert!(cur.is_empty());
+    }
+
+    #[test]
+    fn all_messages_roundtrip() {
+        roundtrip(RpcMsg::RunTask(vec![1, 2, 3]));
+        roundtrip(RpcMsg::TaskOk(vec![]));
+        roundtrip(RpcMsg::TaskErr("boom".into()));
+        roundtrip(RpcMsg::Ping);
+        roundtrip(RpcMsg::Pong);
+        roundtrip(RpcMsg::Shutdown);
+    }
+
+    #[test]
+    fn clean_eof_is_none() {
+        let mut cur: &[u8] = &[];
+        assert!(read_msg(&mut cur).unwrap().is_none());
+    }
+
+    #[test]
+    fn mid_frame_eof_is_error() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &RpcMsg::RunTask(vec![0; 100])).unwrap();
+        let mut cur = &buf[..20];
+        assert!(read_msg(&mut cur).is_err());
+    }
+
+    #[test]
+    fn zero_length_frame_rejected() {
+        let buf = 0u32.to_le_bytes();
+        let mut cur = &buf[..];
+        assert!(read_msg(&mut cur).is_err());
+    }
+
+    #[test]
+    fn multiple_frames_stream() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &RpcMsg::Ping).unwrap();
+        write_msg(&mut buf, &RpcMsg::TaskErr("x".into())).unwrap();
+        let mut cur = &buf[..];
+        assert_eq!(read_msg(&mut cur).unwrap().unwrap(), RpcMsg::Ping);
+        assert_eq!(read_msg(&mut cur).unwrap().unwrap(), RpcMsg::TaskErr("x".into()));
+        assert!(read_msg(&mut cur).unwrap().is_none());
+    }
+}

@@ -1,0 +1,177 @@
+//! Job scheduler: submits task batches to a [`Cluster`], retries failed
+//! tasks (with fresh attempt numbers), and records job metrics.
+
+use super::cluster::Cluster;
+use super::plan::{TaskOutput, TaskSpec};
+use crate::error::{Error, Result};
+use std::time::Instant;
+
+/// Per-job execution report.
+#[derive(Debug, Clone)]
+pub struct JobReport {
+    pub job_id: u64,
+    pub tasks: usize,
+    pub retries: usize,
+    pub wall: std::time::Duration,
+}
+
+/// Run a job: all tasks to completion with bounded retries.
+/// Returns outputs in task order plus the report.
+pub fn run_job(
+    cluster: &dyn Cluster,
+    mut tasks: Vec<TaskSpec>,
+    max_retries: usize,
+) -> Result<(Vec<TaskOutput>, JobReport)> {
+    let job_id = tasks.first().map(|t| t.job_id).unwrap_or(0);
+    let total = tasks.len();
+    let start = Instant::now();
+    let mut outputs: Vec<Option<TaskOutput>> = vec![None; total];
+    // positions[i] = original index of tasks[i] in the job
+    let mut positions: Vec<usize> = (0..total).collect();
+    let mut retries_used = 0usize;
+
+    loop {
+        let results = cluster.run_tasks(&tasks);
+        debug_assert_eq!(results.len(), tasks.len());
+        let mut retry_tasks = Vec::new();
+        let mut retry_positions = Vec::new();
+        let mut first_err: Option<Error> = None;
+
+        for ((task, pos), res) in tasks.into_iter().zip(positions.iter().copied()).zip(results) {
+            match res {
+                Ok(out) => outputs[pos] = Some(out),
+                Err(e) => {
+                    log::warn!(
+                        "job {job_id} task {} attempt {} failed: {e}",
+                        task.task_id,
+                        task.attempt
+                    );
+                    if (task.attempt as usize) < max_retries && e.is_retryable() {
+                        let mut t = task;
+                        t.attempt += 1;
+                        retry_tasks.push(t);
+                        retry_positions.push(pos);
+                        retries_used += 1;
+                    } else if first_err.is_none() {
+                        first_err = Some(Error::Engine(format!(
+                            "job {job_id} task {} failed after {} attempt(s): {e}",
+                            task.task_id,
+                            task.attempt + 1
+                        )));
+                    }
+                }
+            }
+        }
+
+        if let Some(e) = first_err {
+            return Err(e);
+        }
+        if retry_tasks.is_empty() {
+            break;
+        }
+        tasks = retry_tasks;
+        positions = retry_positions;
+    }
+
+    let outputs: Vec<TaskOutput> = outputs
+        .into_iter()
+        .map(|o| o.expect("all positions filled or job errored"))
+        .collect();
+    let report =
+        JobReport { job_id, tasks: total, retries: retries_used, wall: start.elapsed() };
+    // process metrics (`Metrics::global().report()`)
+    let m = crate::metrics::Metrics::global();
+    m.counter("engine_jobs_completed").inc();
+    m.counter("engine_tasks_completed").add(total as u64);
+    m.counter("engine_task_retries").add(retries_used as u64);
+    m.histogram("engine_job_wall").observe(report.wall);
+    Ok((outputs, report))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::cluster::LocalCluster;
+    use super::super::ops::OpRegistry;
+    use super::super::plan::{Action, OpCall, Source};
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn count_task(id: u32, n: u64, ops: Vec<OpCall>) -> TaskSpec {
+        TaskSpec {
+            job_id: 1,
+            task_id: id,
+            attempt: 0,
+            source: Source::Range { start: 0, end: n },
+            ops,
+            action: Action::Count,
+        }
+    }
+
+    #[test]
+    fn healthy_job_completes() {
+        let c = LocalCluster::new(2, OpRegistry::with_builtins(), "artifacts");
+        let tasks = (0..8).map(|i| count_task(i, 10, vec![])).collect();
+        let (outs, report) = run_job(&c, tasks, 2).unwrap();
+        assert_eq!(outs.len(), 8);
+        assert_eq!(report.retries, 0);
+        assert!(outs.iter().all(|o| *o == TaskOutput::Count(10)));
+    }
+
+    #[test]
+    fn transient_failures_are_retried() {
+        let reg = OpRegistry::with_builtins();
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a = attempts.clone();
+        // Fails the first two invocations globally, then succeeds.
+        reg.register("flaky", move |_c, _p, records| {
+            if a.fetch_add(1, Ordering::SeqCst) < 2 {
+                Err(Error::Engine("transient".into()))
+            } else {
+                Ok(records)
+            }
+        });
+        let c = LocalCluster::new(1, reg, "artifacts");
+        let tasks = vec![
+            count_task(0, 5, vec![OpCall::new("flaky", vec![])]),
+            count_task(1, 5, vec![OpCall::new("flaky", vec![])]),
+        ];
+        let (outs, report) = run_job(&c, tasks, 3).unwrap();
+        assert_eq!(outs.len(), 2);
+        assert!(report.retries >= 1 && report.retries <= 2, "retries {}", report.retries);
+    }
+
+    #[test]
+    fn permanent_failure_fails_job_with_context() {
+        let reg = OpRegistry::with_builtins();
+        reg.register("broken", |_c, _p, _r| Err(Error::Engine("always".into())));
+        let c = LocalCluster::new(2, reg, "artifacts");
+        let tasks = vec![count_task(3, 5, vec![OpCall::new("broken", vec![])])];
+        let err = run_job(&c, tasks, 1).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("task 3"), "{msg}");
+        assert!(msg.contains("2 attempt"), "{msg}");
+    }
+
+    #[test]
+    fn non_retryable_errors_fail_fast() {
+        let reg = OpRegistry::with_builtins();
+        let attempts = Arc::new(AtomicUsize::new(0));
+        let a = attempts.clone();
+        reg.register("corrupt", move |_c, _p, _r| {
+            a.fetch_add(1, Ordering::SeqCst);
+            Err(Error::Corrupt("bad bytes".into()))
+        });
+        let c = LocalCluster::new(1, reg, "artifacts");
+        let tasks = vec![count_task(0, 5, vec![OpCall::new("corrupt", vec![])])];
+        assert!(run_job(&c, tasks, 5).is_err());
+        assert_eq!(attempts.load(Ordering::SeqCst), 1, "corruption is not retried");
+    }
+
+    #[test]
+    fn empty_job_is_ok() {
+        let c = LocalCluster::new(1, OpRegistry::with_builtins(), "artifacts");
+        let (outs, _) = run_job(&c, vec![], 1).unwrap();
+        assert!(outs.is_empty());
+    }
+}

@@ -1,0 +1,218 @@
+//! Standalone worker: a separate OS process serving tasks over TCP.
+//!
+//! Launched as `av-simd worker --listen <addr> --id <n>`; the driver's
+//! [`super::remote::StandaloneCluster`] connects and drives it with
+//! [`super::rpc`] frames. One connection at a time, tasks executed
+//! serially (one task slot per worker process, matching the paper's
+//! one-ROS-node-per-Spark-worker layout).
+
+use super::executor;
+use super::ops::{OpRegistry, TaskCtx};
+use super::plan::{TaskOutput, TaskSpec};
+use super::rpc::{read_msg, write_msg, RpcMsg};
+use crate::error::{Error, Result};
+use std::net::{TcpListener, TcpStream};
+
+/// Serve tasks forever (until `Shutdown` or driver disconnect after at
+/// least one session). Returns after a clean shutdown.
+pub fn serve(addr: &str, worker_id: usize, registry: OpRegistry, artifact_dir: &str) -> Result<()> {
+    let listener = TcpListener::bind(addr)
+        .map_err(|e| Error::Engine(format!("worker {worker_id} bind {addr}: {e}")))?;
+    log::info!("worker {worker_id} listening on {addr}");
+    let ctx = TaskCtx::new(worker_id, artifact_dir);
+    for conn in listener.incoming() {
+        let stream = conn.map_err(Error::Io)?;
+        match serve_connection(stream, &ctx, &registry) {
+            Ok(ShutdownKind::Graceful) => return Ok(()),
+            Ok(ShutdownKind::Disconnect) => continue, // driver may reconnect
+            Err(e) => {
+                log::warn!("worker {worker_id} connection error: {e}");
+                continue;
+            }
+        }
+    }
+    Ok(())
+}
+
+enum ShutdownKind {
+    Graceful,
+    Disconnect,
+}
+
+fn serve_connection(
+    stream: TcpStream,
+    ctx: &TaskCtx,
+    registry: &OpRegistry,
+) -> Result<ShutdownKind> {
+    stream.set_nodelay(true).ok();
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    loop {
+        match read_msg(&mut reader)? {
+            None => return Ok(ShutdownKind::Disconnect),
+            Some(RpcMsg::Ping) => write_msg(&mut writer, &RpcMsg::Pong)?,
+            Some(RpcMsg::Shutdown) => return Ok(ShutdownKind::Graceful),
+            Some(RpcMsg::RunTask(spec_bytes)) => {
+                let reply = match TaskSpec::decode(&spec_bytes)
+                    .and_then(|spec| executor::run_task(ctx, registry, &spec))
+                {
+                    Ok(out) => RpcMsg::TaskOk(out.encode()),
+                    Err(e) => RpcMsg::TaskErr(e.to_string()),
+                };
+                write_msg(&mut writer, &reply)?;
+            }
+            Some(other) => {
+                return Err(Error::Engine(format!(
+                    "worker received unexpected message {other:?}"
+                )))
+            }
+        }
+    }
+}
+
+/// Driver-side client handle to one worker connection.
+pub struct WorkerClient {
+    reader: std::io::BufReader<TcpStream>,
+    writer: std::io::BufWriter<TcpStream>,
+    pub addr: String,
+}
+
+impl WorkerClient {
+    /// Connect, retrying until the worker process is up (bounded wait).
+    pub fn connect(addr: &str, timeout: std::time::Duration) -> Result<Self> {
+        let deadline = std::time::Instant::now() + timeout;
+        loop {
+            match TcpStream::connect(addr) {
+                Ok(stream) => {
+                    stream.set_nodelay(true).ok();
+                    let mut c = Self {
+                        reader: std::io::BufReader::new(stream.try_clone()?),
+                        writer: std::io::BufWriter::new(stream),
+                        addr: addr.to_string(),
+                    };
+                    // verify liveness
+                    c.ping()?;
+                    return Ok(c);
+                }
+                Err(e) => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(Error::Engine(format!(
+                            "worker at {addr} not reachable: {e}"
+                        )));
+                    }
+                    std::thread::sleep(std::time::Duration::from_millis(30));
+                }
+            }
+        }
+    }
+
+    pub fn ping(&mut self) -> Result<()> {
+        write_msg(&mut self.writer, &RpcMsg::Ping)?;
+        match read_msg(&mut self.reader)? {
+            Some(RpcMsg::Pong) => Ok(()),
+            other => Err(Error::Engine(format!("expected Pong, got {other:?}"))),
+        }
+    }
+
+    /// Run one task to completion on this worker.
+    pub fn run_task(&mut self, spec: &TaskSpec) -> Result<TaskOutput> {
+        write_msg(&mut self.writer, &RpcMsg::RunTask(spec.encode()))?;
+        match read_msg(&mut self.reader)? {
+            Some(RpcMsg::TaskOk(out)) => TaskOutput::decode(&out),
+            Some(RpcMsg::TaskErr(msg)) => Err(Error::Engine(format!(
+                "remote task {} failed: {msg}",
+                spec.task_id
+            ))),
+            None => Err(Error::Engine("worker hung up mid-task".into())),
+            other => Err(Error::Engine(format!("unexpected reply {other:?}"))),
+        }
+    }
+
+    pub fn shutdown(&mut self) -> Result<()> {
+        write_msg(&mut self.writer, &RpcMsg::Shutdown)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::plan::{Action, Source};
+
+    /// In-process worker serve thread + client, exercising the full RPC
+    /// path without spawning a process.
+    #[test]
+    fn serve_and_run_tasks_over_tcp() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener); // free the port for serve() to rebind
+        let addr2 = addr.clone();
+        let handle = std::thread::spawn(move || {
+            serve(&addr2, 0, OpRegistry::with_builtins(), "artifacts").unwrap();
+        });
+
+        let mut client =
+            WorkerClient::connect(&addr, std::time::Duration::from_secs(5)).unwrap();
+        client.ping().unwrap();
+
+        let spec = TaskSpec {
+            job_id: 1,
+            task_id: 0,
+            attempt: 0,
+            source: Source::Range { start: 0, end: 100 },
+            ops: vec![],
+            action: Action::Count,
+        };
+        assert_eq!(client.run_task(&spec).unwrap(), TaskOutput::Count(100));
+
+        // second task on the same connection
+        let spec2 = TaskSpec {
+            source: Source::Inline { records: vec![vec![1], vec![2]] },
+            action: Action::Collect,
+            ..spec
+        };
+        match client.run_task(&spec2).unwrap() {
+            TaskOutput::Records(rs) => assert_eq!(rs.len(), 2),
+            other => panic!("unexpected {other:?}"),
+        }
+
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn remote_task_error_is_surfaced() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let addr2 = addr.clone();
+        let handle = std::thread::spawn(move || {
+            serve(&addr2, 1, OpRegistry::with_builtins(), "artifacts").unwrap();
+        });
+        let mut client =
+            WorkerClient::connect(&addr, std::time::Duration::from_secs(5)).unwrap();
+        let spec = TaskSpec {
+            job_id: 1,
+            task_id: 9,
+            attempt: 0,
+            source: Source::Range { start: 0, end: 1 },
+            ops: vec![super::super::plan::OpCall::new("no_such_op", vec![])],
+            action: Action::Count,
+        };
+        let err = client.run_task(&spec).unwrap_err();
+        assert!(err.to_string().contains("no_such_op"), "{err}");
+        client.shutdown().unwrap();
+        handle.join().unwrap();
+    }
+
+    #[test]
+    fn connect_to_dead_worker_times_out() {
+        let err = match WorkerClient::connect(
+            "127.0.0.1:1", // reserved port, nothing listens
+            std::time::Duration::from_millis(100),
+        ) {
+            Err(e) => e,
+            Ok(_) => panic!("expected error"),
+        };
+        assert!(err.to_string().contains("not reachable"));
+    }
+}

@@ -1,0 +1,158 @@
+//! Unified error type for the platform.
+//!
+//! Every layer (bag, bus, engine, pipe, runtime, …) reports through
+//! [`Error`]; `Result<T>` is the crate-wide result alias.
+
+use std::fmt;
+
+/// Crate-wide result alias.
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// Unified platform error.
+#[derive(Debug)]
+pub enum Error {
+    /// Underlying I/O failure (disk, pipe, socket).
+    Io(std::io::Error),
+    /// Malformed or truncated on-wire / on-disk data.
+    Corrupt(String),
+    /// Bag format violation (bad magic, CRC mismatch, unknown record).
+    BagFormat(String),
+    /// Pub/sub bus failure (unknown topic, closed subscriber, type clash).
+    Bus(String),
+    /// Distributed engine failure (scheduling, task, worker loss).
+    Engine(String),
+    /// BinPipedRDD child-process failure.
+    Pipe(String),
+    /// PJRT / XLA runtime failure.
+    Runtime(String),
+    /// Configuration parse or validation failure.
+    Config(String),
+    /// Storage (DFS-lite / block store) failure.
+    Storage(String),
+    /// Simulation-layer failure (scenario, dynamics, verdict).
+    Sim(String),
+    /// Anything else.
+    Other(String),
+}
+
+impl Error {
+    /// Short machine-readable category tag, used by metrics and logs.
+    pub fn category(&self) -> &'static str {
+        match self {
+            Error::Io(_) => "io",
+            Error::Corrupt(_) => "corrupt",
+            Error::BagFormat(_) => "bag",
+            Error::Bus(_) => "bus",
+            Error::Engine(_) => "engine",
+            Error::Pipe(_) => "pipe",
+            Error::Runtime(_) => "runtime",
+            Error::Config(_) => "config",
+            Error::Storage(_) => "storage",
+            Error::Sim(_) => "sim",
+            Error::Other(_) => "other",
+        }
+    }
+
+    /// True when retrying the same operation may succeed (used by the
+    /// engine's task-retry policy).
+    pub fn is_retryable(&self) -> bool {
+        matches!(self, Error::Io(_) | Error::Engine(_) | Error::Pipe(_))
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Error::Io(e) => write!(f, "io error: {e}"),
+            Error::Corrupt(m) => write!(f, "corrupt data: {m}"),
+            Error::BagFormat(m) => write!(f, "bag format: {m}"),
+            Error::Bus(m) => write!(f, "bus: {m}"),
+            Error::Engine(m) => write!(f, "engine: {m}"),
+            Error::Pipe(m) => write!(f, "pipe: {m}"),
+            Error::Runtime(m) => write!(f, "runtime: {m}"),
+            Error::Config(m) => write!(f, "config: {m}"),
+            Error::Storage(m) => write!(f, "storage: {m}"),
+            Error::Sim(m) => write!(f, "sim: {m}"),
+            Error::Other(m) => write!(f, "{m}"),
+        }
+    }
+}
+
+impl std::error::Error for Error {
+    fn source(&self) -> Option<&(dyn std::error::Error + 'static)> {
+        match self {
+            Error::Io(e) => Some(e),
+            _ => None,
+        }
+    }
+}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::Io(e)
+    }
+}
+
+impl From<xla::Error> for Error {
+    fn from(e: xla::Error) -> Self {
+        Error::Runtime(e.to_string())
+    }
+}
+
+impl From<String> for Error {
+    fn from(m: String) -> Self {
+        Error::Other(m)
+    }
+}
+
+/// Convenience constructors used across the crate.
+#[macro_export]
+macro_rules! err {
+    ($kind:ident, $($arg:tt)*) => {
+        $crate::error::Error::$kind(format!($($arg)*))
+    };
+}
+
+/// `bail!(Kind, "...")` — early-return an error.
+#[macro_export]
+macro_rules! bail {
+    ($kind:ident, $($arg:tt)*) => {
+        return Err($crate::err!($kind, $($arg)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn categories_are_stable() {
+        assert_eq!(Error::Bus("x".into()).category(), "bus");
+        assert_eq!(
+            Error::Io(std::io::Error::new(std::io::ErrorKind::Other, "x")).category(),
+            "io"
+        );
+    }
+
+    #[test]
+    fn retryability() {
+        assert!(Error::Engine("worker lost".into()).is_retryable());
+        assert!(!Error::BagFormat("bad magic".into()).is_retryable());
+    }
+
+    #[test]
+    fn display_includes_message() {
+        let e = Error::Pipe("child exited 1".into());
+        assert!(e.to_string().contains("child exited 1"));
+    }
+
+    #[test]
+    fn macros_compile() {
+        fn f() -> crate::error::Result<()> {
+            bail!(Sim, "ttc {} below {}", 0.4, 1.0);
+        }
+        let e = f().unwrap_err();
+        assert_eq!(e.category(), "sim");
+        assert!(e.to_string().contains("ttc 0.4"));
+    }
+}

@@ -1,0 +1,49 @@
+//! # av-simd — Distributed Simulation Platform for Autonomous Driving
+//!
+//! Production-shaped reproduction of Tang et al., *Distributed Simulation
+//! Platform for Autonomous Driving* (CS.DC 2017): a Spark-like
+//! distributed compute engine ([`engine`]) orchestrating ROS-like playback
+//! simulators ([`bus`], [`bag`]) over binary sensor data, with the paper's
+//! `BinPipedRDD` binary pipe bridge ([`pipe`]) and `MemoryChunkedFile`
+//! in-memory bag cache ([`bag::MemoryChunkedFile`]). Perception compute is
+//! AOT-compiled JAX/Pallas executed through PJRT ([`runtime`],
+//! [`perception`]); Python never runs on the simulation path.
+//!
+//! See `DESIGN.md` for the paper → module inventory and `EXPERIMENTS.md`
+//! for reproduced figures.
+
+pub mod bag;
+pub mod bus;
+pub mod cli;
+pub mod config;
+pub mod datagen;
+pub mod engine;
+pub mod error;
+pub mod msg;
+pub mod metrics;
+pub mod perception;
+pub mod pipe;
+pub mod runtime;
+pub mod sim;
+pub mod storage;
+pub mod util;
+
+pub use error::{Error, Result};
+
+/// Operator registry with every operator this binary knows: engine
+/// built-ins + PJRT-backed perception ops. Drivers and workers both use
+/// this, so op names resolve identically across processes.
+pub fn full_op_registry() -> engine::OpRegistry {
+    let reg = engine::OpRegistry::with_builtins();
+    perception::register_perception_ops(&reg);
+    sim::register_sim_ops(&reg);
+    reg
+}
+
+/// User-logic registry with every BinPipedRDD logic this binary knows
+/// (built-ins + perception). Used by the `user-logic` child mode.
+pub fn full_logic_registry() -> pipe::LogicRegistry {
+    let mut reg = pipe::LogicRegistry::with_builtins();
+    perception::register_perception_logics(&mut reg);
+    reg
+}

@@ -1,0 +1,224 @@
+//! `av-simd` — the platform launcher.
+//!
+//! Subcommands:
+//! * `worker --listen ADDR --id N [--artifacts DIR]` — standalone worker
+//!   process (spawned by `StandaloneCluster`, or manually for multi-box).
+//! * `user-logic NAME` — BinPipedRDD child mode: stream on stdin/stdout.
+//! * `datagen --dir D [--bags N] [--frames F]` — synthesize a drive set.
+//! * `perceive --dir D [--workers N] [--standalone]` — distributed image
+//!   recognition over a bag directory (the Fig 7 workload).
+//! * `scenarios [--workers N]` — distributed barrier-car matrix (Fig 1).
+//! * `info` — registries, artifacts, config.
+
+use av_simd::cli::Args;
+use av_simd::config::{ClusterMode, PlatformConfig};
+use av_simd::engine::SimContext;
+use av_simd::error::Result;
+use av_simd::msg::Message;
+
+fn main() {
+    let raw: Vec<String> = std::env::args().skip(1).collect();
+    let code = match run(&raw) {
+        Ok(()) => 0,
+        Err(e) => {
+            eprintln!("av-simd: {e}");
+            1
+        }
+    };
+    std::process::exit(code);
+}
+
+fn run(raw: &[String]) -> Result<()> {
+    let args = Args::parse(raw)?;
+    match args.command.as_str() {
+        "worker" => cmd_worker(&args),
+        "user-logic" => cmd_user_logic(&args),
+        "datagen" => cmd_datagen(&args),
+        "perceive" => cmd_perceive(&args),
+        "scenarios" => cmd_scenarios(&args),
+        "info" => cmd_info(&args),
+        "" | "help" => {
+            print!("{HELP}");
+            Ok(())
+        }
+        other => {
+            eprint!("{HELP}");
+            Err(av_simd::err!(Config, "unknown subcommand '{other}'"))
+        }
+    }
+}
+
+const HELP: &str = "\
+av-simd — distributed simulation platform for autonomous driving
+
+USAGE: av-simd <command> [flags]
+
+COMMANDS:
+  worker      --listen ADDR --id N [--artifacts DIR]   serve tasks over TCP
+  user-logic  NAME                                     BinPipedRDD child mode
+  datagen     --dir D [--bags N] [--frames F] [--size PX] [--seed S]
+  perceive    --dir D [--workers N] [--standalone] [--base-port P]
+  scenarios   [--workers N] [--ego-speed V]
+  info        [--artifacts DIR]
+";
+
+fn cmd_worker(args: &Args) -> Result<()> {
+    let listen = args.require("listen")?;
+    let id = args.get_usize("id", 0)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    av_simd::engine::worker::serve(listen, id, av_simd::full_op_registry(), artifacts)
+}
+
+fn cmd_user_logic(args: &Args) -> Result<()> {
+    let name = args
+        .positional
+        .first()
+        .ok_or_else(|| av_simd::err!(Config, "user-logic needs a logic name"))?;
+    let reg = av_simd::full_logic_registry();
+    let stdin = std::io::stdin().lock();
+    let stdout = std::io::stdout().lock();
+    let n = av_simd::pipe::run_user_logic_stdio(&reg, name, stdin, stdout)?;
+    eprintln!("user-logic {name}: processed {n} items");
+    Ok(())
+}
+
+fn cmd_datagen(args: &Args) -> Result<()> {
+    let dir = args.require("dir")?;
+    let bags = args.get_usize("bags", 4)?;
+    let frames = args.get_usize("frames", 50)? as u32;
+    let size = args.get_usize("size", 32)? as u32;
+    let seed = args.get_u64("seed", 42)?;
+    let spec = av_simd::datagen::DriveSpec {
+        frames,
+        width: size,
+        height: size,
+        seed,
+        ..Default::default()
+    };
+    let paths = av_simd::datagen::generate_drive_dir(dir, bags, &spec)?;
+    let total: u64 = paths
+        .iter()
+        .map(|p| std::fs::metadata(p).map(|m| m.len()).unwrap_or(0))
+        .sum();
+    println!(
+        "generated {} bags ({} frames each, {}) in {dir}",
+        paths.len(),
+        frames,
+        av_simd::util::human_bytes(total)
+    );
+    Ok(())
+}
+
+fn make_context(args: &Args) -> Result<SimContext> {
+    let mut cfg = match args.get("config") {
+        Some(p) => PlatformConfig::load(Some(std::path::Path::new(p)))?,
+        None => PlatformConfig::default(),
+    };
+    cfg.cluster.workers = args.get_usize("workers", cfg.cluster.workers)?;
+    cfg.cluster.base_port = args.get_usize("base-port", cfg.cluster.base_port as usize)? as u16;
+    if args.has("standalone") {
+        cfg.cluster.mode = ClusterMode::Standalone;
+    }
+    if let Some(a) = args.get("artifacts") {
+        cfg.perception.artifact_dir = a.to_string();
+    }
+    SimContext::from_config(&cfg)
+}
+
+fn cmd_perceive(args: &Args) -> Result<()> {
+    let dir = args.require("dir")?;
+    let sc = make_context(args)?;
+    let t = std::time::Instant::now();
+    let detections = sc
+        .bag_dir(dir, &["/camera"])?
+        .take_payload()
+        .op("classify_images", vec![])
+        .collect()?;
+    let wall = t.elapsed();
+    let mut by_label = std::collections::BTreeMap::<String, usize>::new();
+    for d in &detections {
+        let det = av_simd::msg::DetectionArray::decode(d)?;
+        for dd in det.detections {
+            *by_label.entry(dd.label).or_default() += 1;
+        }
+    }
+    println!(
+        "classified {} frames in {:.2}s on {} {} workers ({:.1} frames/s)",
+        detections.len(),
+        wall.as_secs_f64(),
+        sc.workers(),
+        sc.backend(),
+        detections.len() as f64 / wall.as_secs_f64()
+    );
+    for (label, n) in by_label {
+        println!("  {label:<14} {n}");
+    }
+    sc.shutdown();
+    Ok(())
+}
+
+fn cmd_scenarios(args: &Args) -> Result<()> {
+    let ego_speed = args
+        .get("ego-speed")
+        .map(|v| v.parse::<f64>())
+        .transpose()
+        .map_err(|_| av_simd::err!(Config, "--ego-speed expects a number"))?
+        .unwrap_or(12.0);
+    let sc = make_context(args)?;
+    let matrix = av_simd::sim::scenario_matrix(ego_speed);
+    let records: Vec<Vec<u8>> = matrix.iter().map(av_simd::sim::encode_scenario).collect();
+    let t = std::time::Instant::now();
+    let outs = sc
+        .parallelize(records, sc.workers() * 2)
+        .op("run_scenario", vec![])
+        .collect()?;
+    let wall = t.elapsed();
+    let mut passed = 0;
+    let mut failed: Vec<String> = Vec::new();
+    for o in &outs {
+        let r = av_simd::sim::decode_result(o)?;
+        if r.passed {
+            passed += 1;
+        } else {
+            failed.push(r.scenario_id);
+        }
+    }
+    println!(
+        "scenario matrix: {}/{} passed in {:.2}s on {} workers",
+        passed,
+        outs.len(),
+        wall.as_secs_f64(),
+        sc.workers()
+    );
+    if !failed.is_empty() {
+        failed.sort();
+        println!("failed: {}", failed.join(", "));
+    }
+    sc.shutdown();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let artifacts = args.get_or("artifacts", "artifacts");
+    println!("operators:");
+    for op in av_simd::full_op_registry().names() {
+        println!("  {op}");
+    }
+    println!("user logics:");
+    for l in av_simd::full_logic_registry().names() {
+        println!("  {l}");
+    }
+    match av_simd::runtime::Manifest::load(
+        std::path::Path::new(artifacts).join("manifest.txt").as_path(),
+    ) {
+        Ok(m) => {
+            println!("artifacts ({artifacts}):");
+            for name in m.names() {
+                let sig = m.get(&name).unwrap();
+                println!("  {name}: {:?} -> {:?}", sig.in_dims, sig.out_dims);
+            }
+        }
+        Err(e) => println!("artifacts: unavailable ({e})"),
+    }
+    Ok(())
+}

@@ -1,0 +1,167 @@
+//! Lightweight process metrics: named counters and duration histograms,
+//! rendered as a text report (the platform's `/metrics` analogue).
+
+use std::collections::BTreeMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Mutex, OnceLock};
+use std::time::Duration;
+
+/// A monotonically increasing counter.
+#[derive(Default)]
+pub struct Counter(AtomicU64);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.add(1);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Fixed-bucket log-scale duration histogram (µs .. minutes).
+pub struct Histogram {
+    /// bucket i counts durations < 10^(i) µs … simple log10 buckets.
+    buckets: [AtomicU64; 9],
+    total_nanos: AtomicU64,
+    count: AtomicU64,
+}
+
+impl Default for Histogram {
+    fn default() -> Self {
+        Self {
+            buckets: Default::default(),
+            total_nanos: AtomicU64::new(0),
+            count: AtomicU64::new(0),
+        }
+    }
+}
+
+impl Histogram {
+    pub fn observe(&self, d: Duration) {
+        let us = d.as_micros().max(1) as f64;
+        let bucket = (us.log10().floor() as usize).min(8);
+        self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
+        self.total_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        self.count.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn count(&self) -> u64 {
+        self.count.load(Ordering::Relaxed)
+    }
+
+    pub fn mean(&self) -> Duration {
+        let c = self.count();
+        if c == 0 {
+            return Duration::ZERO;
+        }
+        Duration::from_nanos(self.total_nanos.load(Ordering::Relaxed) / c)
+    }
+}
+
+/// Process-wide metrics registry.
+#[derive(Default)]
+pub struct Metrics {
+    counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
+}
+
+impl Metrics {
+    /// The process-global registry.
+    pub fn global() -> &'static Metrics {
+        static M: OnceLock<Metrics> = OnceLock::new();
+        M.get_or_init(Metrics::default)
+    }
+
+    pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
+        self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
+        self.histograms
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    /// Render all metrics as a text block.
+    pub fn report(&self) -> String {
+        let mut out = String::new();
+        for (name, c) in self.counters.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, h) in self.histograms.lock().unwrap().iter() {
+            out.push_str(&format!(
+                "{name}_count {}\n{name}_mean_us {:.1}\n",
+                h.count(),
+                h.mean().as_secs_f64() * 1e6
+            ));
+        }
+        out
+    }
+}
+
+/// Time a closure into a global histogram.
+pub fn timed<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    let h = Metrics::global().histogram(name);
+    let t = std::time::Instant::now();
+    let out = f();
+    h.observe(t.elapsed());
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counters_accumulate() {
+        let m = Metrics::default();
+        let c = m.counter("tasks");
+        c.inc();
+        c.add(4);
+        assert_eq!(c.get(), 5);
+        // same name → same counter
+        assert_eq!(m.counter("tasks").get(), 5);
+    }
+
+    #[test]
+    fn histogram_tracks_mean_and_count() {
+        let m = Metrics::default();
+        let h = m.histogram("lat");
+        h.observe(Duration::from_millis(10));
+        h.observe(Duration::from_millis(30));
+        assert_eq!(h.count(), 2);
+        let mean = h.mean();
+        assert!(mean >= Duration::from_millis(19) && mean <= Duration::from_millis(21));
+    }
+
+    #[test]
+    fn report_renders_both_kinds() {
+        let m = Metrics::default();
+        m.counter("a").inc();
+        m.histogram("b").observe(Duration::from_micros(100));
+        let r = m.report();
+        assert!(r.contains("a 1"));
+        assert!(r.contains("b_count 1"));
+    }
+
+    #[test]
+    fn timed_records() {
+        let out = timed("test_timed_op", || 42);
+        assert_eq!(out, 42);
+        assert!(Metrics::global().histogram("test_timed_op").count() >= 1);
+    }
+}

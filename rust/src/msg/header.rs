@@ -1,0 +1,99 @@
+//! Message header: timestamp + sequence + frame, mirroring
+//! `std_msgs/Header`. Bag playback ordering and the sim clock are driven
+//! by [`Time`].
+
+use crate::error::Result;
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Nanosecond-resolution timestamp (like `ros::Time`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct Time {
+    pub nanos: u64,
+}
+
+impl Time {
+    pub const ZERO: Time = Time { nanos: 0 };
+
+    pub fn from_nanos(nanos: u64) -> Self {
+        Self { nanos }
+    }
+
+    pub fn from_secs_f64(secs: f64) -> Self {
+        Self { nanos: (secs.max(0.0) * 1e9) as u64 }
+    }
+
+    pub fn as_secs_f64(self) -> f64 {
+        self.nanos as f64 / 1e9
+    }
+
+    pub fn saturating_sub(self, other: Time) -> std::time::Duration {
+        std::time::Duration::from_nanos(self.nanos.saturating_sub(other.nanos))
+    }
+
+    pub fn add_nanos(self, d: u64) -> Time {
+        Time { nanos: self.nanos + d }
+    }
+}
+
+/// Standard message header.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Header {
+    /// Monotonic per-publisher sequence number.
+    pub seq: u64,
+    /// Acquisition / publication timestamp.
+    pub stamp: Time,
+    /// Coordinate frame id ("base_link", "camera", "lidar", …).
+    pub frame_id: String,
+}
+
+impl Header {
+    pub fn new(seq: u64, stamp: Time, frame_id: impl Into<String>) -> Self {
+        Self { seq, stamp, frame_id: frame_id.into() }
+    }
+
+    pub fn encode(&self, w: &mut ByteWriter) {
+        w.put_u64(self.seq);
+        w.put_u64(self.stamp.nanos);
+        w.put_str(&self.frame_id);
+    }
+
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            seq: r.get_u64()?,
+            stamp: Time::from_nanos(r.get_u64()?),
+            frame_id: r.get_str()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn time_conversions() {
+        let t = Time::from_secs_f64(1.5);
+        assert_eq!(t.nanos, 1_500_000_000);
+        assert!((t.as_secs_f64() - 1.5).abs() < 1e-9);
+        assert_eq!(Time::from_secs_f64(-3.0), Time::ZERO);
+    }
+
+    #[test]
+    fn time_ordering() {
+        assert!(Time::from_nanos(5) < Time::from_nanos(6));
+        let d = Time::from_nanos(10).saturating_sub(Time::from_nanos(4));
+        assert_eq!(d.as_nanos(), 6);
+        let z = Time::from_nanos(4).saturating_sub(Time::from_nanos(10));
+        assert_eq!(z.as_nanos(), 0);
+    }
+
+    #[test]
+    fn header_roundtrip() {
+        let h = Header::new(7, Time::from_nanos(123), "camera");
+        let mut w = ByteWriter::new();
+        h.encode(&mut w);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(Header::decode(&mut r).unwrap(), h);
+    }
+}

@@ -1,0 +1,109 @@
+//! Typed message definitions — the platform's equivalent of ROS message
+//! types (`sensor_msgs/Image`, `sensor_msgs/PointCloud2`, …).
+//!
+//! Every message has a stable type name (used by bag connection records
+//! and bus topic typing) and a versioned binary wire codec built on
+//! [`crate::util::bytes`]. Decoding rejects version/type mismatches.
+
+pub mod header;
+pub mod sensor;
+pub mod state;
+
+pub use header::{Header, Time};
+pub use sensor::{CompressedImage, Image, Imu, PixelFormat, PointCloud};
+pub use state::{ControlCommand, Detection, DetectionArray, Pose, Twist};
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Wire codec version for all message types.
+pub const MSG_CODEC_VERSION: u8 = 1;
+
+/// A message that can cross the bag/bus/pipe boundary.
+pub trait Message: Sized + Send + 'static {
+    /// Stable fully-qualified type name, e.g. `"av/sensor/Image"`.
+    const TYPE_NAME: &'static str;
+
+    /// Append the body (no envelope) to `w`.
+    fn encode_body(&self, w: &mut ByteWriter);
+
+    /// Parse the body from `r`.
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self>;
+
+    /// Encode with the standard envelope: codec version + type name.
+    fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(64);
+        w.put_u8(MSG_CODEC_VERSION);
+        w.put_str(Self::TYPE_NAME);
+        self.encode_body(&mut w);
+        w.into_vec()
+    }
+
+    /// Decode, checking envelope version and type name.
+    fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let ver = r.get_u8()?;
+        if ver != MSG_CODEC_VERSION {
+            return Err(Error::Corrupt(format!(
+                "message codec version {ver}, expected {MSG_CODEC_VERSION}"
+            )));
+        }
+        let ty = r.get_str()?;
+        if ty != Self::TYPE_NAME {
+            return Err(Error::Corrupt(format!(
+                "message type '{ty}', expected '{}'",
+                Self::TYPE_NAME
+            )));
+        }
+        let msg = Self::decode_body(&mut r)?;
+        if !r.is_empty() {
+            return Err(Error::Corrupt(format!(
+                "{} trailing bytes after {ty}",
+                r.remaining()
+            )));
+        }
+        Ok(msg)
+    }
+}
+
+/// Peek the type name of an encoded message without fully decoding it.
+pub fn peek_type(buf: &[u8]) -> Result<String> {
+    let mut r = ByteReader::new(buf);
+    let _ = r.get_u8()?;
+    r.get_str()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peek_matches_encode() {
+        let img = Image::synthetic(4, 4, 0);
+        let buf = img.encode();
+        assert_eq!(peek_type(&buf).unwrap(), Image::TYPE_NAME);
+    }
+
+    #[test]
+    fn wrong_type_rejected() {
+        let img = Image::synthetic(2, 2, 0);
+        let buf = img.encode();
+        assert!(Imu::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn bad_version_rejected() {
+        let img = Image::synthetic(2, 2, 0);
+        let mut buf = img.encode();
+        buf[0] = 99;
+        assert!(Image::decode(&buf).is_err());
+    }
+
+    #[test]
+    fn trailing_bytes_rejected() {
+        let img = Image::synthetic(2, 2, 0);
+        let mut buf = img.encode();
+        buf.push(0);
+        assert!(Image::decode(&buf).is_err());
+    }
+}

@@ -1,0 +1,371 @@
+//! Sensor message types: camera images, LiDAR point clouds, IMU samples —
+//! the payloads the paper's simulator plays back from bags.
+
+use super::header::{Header, Time};
+use super::Message;
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::prng::Prng;
+
+/// Pixel layouts the platform understands.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PixelFormat {
+    /// 8-bit RGB, row-major, 3 bytes/pixel.
+    Rgb8,
+    /// 8-bit grayscale.
+    Mono8,
+}
+
+impl PixelFormat {
+    pub fn bytes_per_pixel(self) -> usize {
+        match self {
+            PixelFormat::Rgb8 => 3,
+            PixelFormat::Mono8 => 1,
+        }
+    }
+
+    fn to_u8(self) -> u8 {
+        match self {
+            PixelFormat::Rgb8 => 0,
+            PixelFormat::Mono8 => 1,
+        }
+    }
+
+    fn from_u8(v: u8) -> Result<Self> {
+        match v {
+            0 => Ok(PixelFormat::Rgb8),
+            1 => Ok(PixelFormat::Mono8),
+            other => Err(Error::Corrupt(format!("unknown pixel format {other}"))),
+        }
+    }
+}
+
+/// Raw camera frame (`sensor_msgs/Image` analogue).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Image {
+    pub header: Header,
+    pub width: u32,
+    pub height: u32,
+    pub format: PixelFormat,
+    /// Row-major pixel data, `height * width * bpp` bytes.
+    pub data: Vec<u8>,
+}
+
+impl Image {
+    /// Deterministic synthetic frame (used by tests and datagen).
+    pub fn synthetic(width: u32, height: u32, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut data = vec![0u8; (width * height * 3) as usize];
+        rng.fill_bytes(&mut data);
+        Self {
+            header: Header::new(seed, Time::from_nanos(seed.wrapping_mul(1000)), "camera"),
+            width,
+            height,
+            format: PixelFormat::Rgb8,
+            data,
+        }
+    }
+
+    /// Consistency check between declared shape and payload size.
+    pub fn validate(&self) -> Result<()> {
+        let expect = self.width as usize * self.height as usize * self.format.bytes_per_pixel();
+        if self.data.len() != expect {
+            return Err(Error::Corrupt(format!(
+                "image {}x{} expects {expect} bytes, has {}",
+                self.width,
+                self.height,
+                self.data.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// Convert to normalized f32 RGB in [0,1], NHWC layout for the
+    /// perception runtime.
+    pub fn to_f32_rgb(&self) -> Vec<f32> {
+        match self.format {
+            PixelFormat::Rgb8 => self.data.iter().map(|&b| b as f32 / 255.0).collect(),
+            PixelFormat::Mono8 => self
+                .data
+                .iter()
+                .flat_map(|&b| {
+                    let v = b as f32 / 255.0;
+                    [v, v, v]
+                })
+                .collect(),
+        }
+    }
+}
+
+impl Message for Image {
+    const TYPE_NAME: &'static str = "av/sensor/Image";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        self.header.encode(w);
+        w.put_u32(self.width);
+        w.put_u32(self.height);
+        w.put_u8(self.format.to_u8());
+        w.put_bytes(&self.data);
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        let img = Self {
+            header: Header::decode(r)?,
+            width: r.get_u32()?,
+            height: r.get_u32()?,
+            format: PixelFormat::from_u8(r.get_u8()?)?,
+            data: r.get_bytes_vec()?,
+        };
+        img.validate()?;
+        Ok(img)
+    }
+}
+
+/// JPEG-less "compressed" image: deflate-compressed RGB. Exists so bags
+/// can exercise the compression path like `sensor_msgs/CompressedImage`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CompressedImage {
+    pub header: Header,
+    pub width: u32,
+    pub height: u32,
+    pub payload: Vec<u8>,
+}
+
+impl CompressedImage {
+    /// Compress a raw image with deflate.
+    pub fn compress(img: &Image) -> Result<Self> {
+        use std::io::Write;
+        let mut enc =
+            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
+        enc.write_all(&img.data)?;
+        Ok(Self {
+            header: img.header.clone(),
+            width: img.width,
+            height: img.height,
+            payload: enc.finish()?,
+        })
+    }
+
+    /// Decompress back to a raw RGB image.
+    pub fn decompress(&self) -> Result<Image> {
+        use std::io::Read;
+        let mut dec = flate2::read::DeflateDecoder::new(&self.payload[..]);
+        let mut data = Vec::new();
+        dec.read_to_end(&mut data)?;
+        let img = Image {
+            header: self.header.clone(),
+            width: self.width,
+            height: self.height,
+            format: PixelFormat::Rgb8,
+            data,
+        };
+        img.validate()?;
+        Ok(img)
+    }
+}
+
+impl Message for CompressedImage {
+    const TYPE_NAME: &'static str = "av/sensor/CompressedImage";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        self.header.encode(w);
+        w.put_u32(self.width);
+        w.put_u32(self.height);
+        w.put_bytes(&self.payload);
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            header: Header::decode(r)?,
+            width: r.get_u32()?,
+            height: r.get_u32()?,
+            payload: r.get_bytes_vec()?,
+        })
+    }
+}
+
+/// LiDAR scan as a flat XYZI point list (`sensor_msgs/PointCloud2`
+/// analogue, fixed schema: x,y,z,intensity f32).
+#[derive(Debug, Clone, PartialEq)]
+pub struct PointCloud {
+    pub header: Header,
+    /// len = 4 * num_points: [x0,y0,z0,i0, x1,...]
+    pub points: Vec<f32>,
+}
+
+impl PointCloud {
+    pub fn num_points(&self) -> usize {
+        self.points.len() / 4
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.points.len() % 4 != 0 {
+            return Err(Error::Corrupt(format!(
+                "point cloud length {} not a multiple of 4",
+                self.points.len()
+            )));
+        }
+        Ok(())
+    }
+
+    /// (x, y, z, intensity) of point `i`.
+    pub fn point(&self, i: usize) -> (f32, f32, f32, f32) {
+        let o = i * 4;
+        (self.points[o], self.points[o + 1], self.points[o + 2], self.points[o + 3])
+    }
+
+    /// Deterministic synthetic scan on a ring (tests / datagen).
+    pub fn synthetic(n: usize, seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        let mut points = Vec::with_capacity(n * 4);
+        for k in 0..n {
+            let ang = k as f32 / n as f32 * std::f32::consts::TAU;
+            let r = 10.0 + rng.next_f32() * 2.0;
+            points.extend_from_slice(&[
+                r * ang.cos(),
+                r * ang.sin(),
+                rng.next_f32() * 2.0 - 1.0,
+                rng.next_f32(),
+            ]);
+        }
+        Self {
+            header: Header::new(seed, Time::from_nanos(seed.wrapping_mul(1000)), "lidar"),
+            points,
+        }
+    }
+}
+
+impl Message for PointCloud {
+    const TYPE_NAME: &'static str = "av/sensor/PointCloud";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        self.header.encode(w);
+        w.put_f32_slice(&self.points);
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        let pc = Self { header: Header::decode(r)?, points: r.get_f32_vec()? };
+        pc.validate()?;
+        Ok(pc)
+    }
+}
+
+/// IMU sample: linear acceleration + angular velocity.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Imu {
+    pub header: Header,
+    pub accel: [f32; 3],
+    pub gyro: [f32; 3],
+}
+
+impl Message for Imu {
+    const TYPE_NAME: &'static str = "av/sensor/Imu";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        self.header.encode(w);
+        for v in self.accel.iter().chain(self.gyro.iter()) {
+            w.put_f32(*v);
+        }
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        let header = Header::decode(r)?;
+        let mut vals = [0f32; 6];
+        for v in &mut vals {
+            *v = r.get_f32()?;
+        }
+        Ok(Self {
+            header,
+            accel: [vals[0], vals[1], vals[2]],
+            gyro: [vals[3], vals[4], vals[5]],
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn image_roundtrip() {
+        let img = Image::synthetic(8, 6, 3);
+        let buf = img.encode();
+        assert_eq!(Image::decode(&buf).unwrap(), img);
+    }
+
+    #[test]
+    fn image_shape_mismatch_rejected() {
+        let mut img = Image::synthetic(4, 4, 0);
+        img.data.pop();
+        let mut w = ByteWriter::new();
+        w.put_u8(super::super::MSG_CODEC_VERSION);
+        w.put_str(Image::TYPE_NAME);
+        img.encode_body(&mut w);
+        assert!(Image::decode(&w.into_vec()).is_err());
+    }
+
+    #[test]
+    fn image_to_f32_normalizes() {
+        let img = Image {
+            header: Header::default(),
+            width: 1,
+            height: 1,
+            format: PixelFormat::Rgb8,
+            data: vec![0, 128, 255],
+        };
+        let f = img.to_f32_rgb();
+        assert_eq!(f.len(), 3);
+        assert!(f[0] == 0.0 && (f[1] - 128.0 / 255.0).abs() < 1e-6 && f[2] == 1.0);
+    }
+
+    #[test]
+    fn mono_to_f32_replicates_channels() {
+        let img = Image {
+            header: Header::default(),
+            width: 2,
+            height: 1,
+            format: PixelFormat::Mono8,
+            data: vec![255, 0],
+        };
+        assert_eq!(img.to_f32_rgb(), vec![1.0, 1.0, 1.0, 0.0, 0.0, 0.0]);
+    }
+
+    #[test]
+    fn compressed_image_roundtrip() {
+        let img = Image::synthetic(16, 16, 1);
+        let c = CompressedImage::compress(&img).unwrap();
+        let back = c.decompress().unwrap();
+        assert_eq!(back, img);
+    }
+
+    #[test]
+    fn pointcloud_roundtrip_and_access() {
+        let pc = PointCloud::synthetic(128, 9);
+        assert_eq!(pc.num_points(), 128);
+        let buf = pc.encode();
+        let back = PointCloud::decode(&buf).unwrap();
+        assert_eq!(back, pc);
+        let (x, y, _z, i) = pc.point(0);
+        assert!(x.is_finite() && y.is_finite() && (0.0..=1.0).contains(&i));
+    }
+
+    #[test]
+    fn pointcloud_ragged_rejected() {
+        let pc = PointCloud {
+            header: Header::default(),
+            points: vec![1.0, 2.0, 3.0],
+        };
+        assert!(pc.validate().is_err());
+    }
+
+    #[test]
+    fn imu_roundtrip() {
+        let imu = Imu {
+            header: Header::new(1, Time::from_nanos(5), "imu"),
+            accel: [0.1, -0.2, 9.8],
+            gyro: [0.01, 0.0, -0.03],
+        };
+        let buf = imu.encode();
+        assert_eq!(Imu::decode(&buf).unwrap(), imu);
+    }
+}

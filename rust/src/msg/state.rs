@@ -1,0 +1,224 @@
+//! Vehicle-state and perception-output message types: poses, twists,
+//! control commands, detections — what the decision/control modules under
+//! test consume and produce.
+
+use super::header::Header;
+use super::Message;
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// 2D pose + heading (the platform's planar world).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Pose {
+    pub x: f64,
+    pub y: f64,
+    /// Heading in radians, CCW from +x.
+    pub yaw: f64,
+}
+
+impl Pose {
+    pub fn distance(&self, other: &Pose) -> f64 {
+        ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
+    }
+}
+
+/// Stamped pose message.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct PoseStamped {
+    pub header: Header,
+    pub pose: Pose,
+}
+
+impl Message for PoseStamped {
+    const TYPE_NAME: &'static str = "av/state/PoseStamped";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        self.header.encode(w);
+        w.put_f64(self.pose.x);
+        w.put_f64(self.pose.y);
+        w.put_f64(self.pose.yaw);
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self {
+            header: Header::decode(r)?,
+            pose: Pose { x: r.get_f64()?, y: r.get_f64()?, yaw: r.get_f64()? },
+        })
+    }
+}
+
+/// Linear + angular velocity.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Twist {
+    /// Forward speed, m/s.
+    pub v: f64,
+    /// Yaw rate, rad/s.
+    pub omega: f64,
+}
+
+impl Message for Twist {
+    const TYPE_NAME: &'static str = "av/state/Twist";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        w.put_f64(self.v);
+        w.put_f64(self.omega);
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self { v: r.get_f64()?, omega: r.get_f64()? })
+    }
+}
+
+/// Control command from the controller under test.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct ControlCommand {
+    /// Longitudinal acceleration command, m/s² (negative = brake).
+    pub accel: f64,
+    /// Front-wheel steering angle, rad.
+    pub steer: f64,
+}
+
+impl ControlCommand {
+    /// Clamp to physical actuator limits.
+    pub fn clamped(self) -> Self {
+        Self {
+            accel: self.accel.clamp(-8.0, 3.0),
+            steer: self.steer.clamp(-0.6, 0.6),
+        }
+    }
+}
+
+impl Message for ControlCommand {
+    const TYPE_NAME: &'static str = "av/state/ControlCommand";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        w.put_f64(self.accel);
+        w.put_f64(self.steer);
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        Ok(Self { accel: r.get_f64()?, steer: r.get_f64()? })
+    }
+}
+
+/// One detected object in image or world coordinates.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Detection {
+    /// Class index into the perception label set.
+    pub class_id: u32,
+    /// Class label (denormalized for log readability).
+    pub label: String,
+    /// Confidence in [0, 1].
+    pub score: f32,
+    /// Bounding box (x, y, w, h) in pixels, or world extent.
+    pub bbox: [f32; 4],
+}
+
+/// Detections for one frame.
+#[derive(Debug, Clone, PartialEq, Default)]
+pub struct DetectionArray {
+    pub header: Header,
+    pub detections: Vec<Detection>,
+}
+
+impl Message for DetectionArray {
+    const TYPE_NAME: &'static str = "av/perception/DetectionArray";
+
+    fn encode_body(&self, w: &mut ByteWriter) {
+        self.header.encode(w);
+        w.put_varint(self.detections.len() as u64);
+        for d in &self.detections {
+            w.put_u32(d.class_id);
+            w.put_str(&d.label);
+            w.put_f32(d.score);
+            for v in d.bbox {
+                w.put_f32(v);
+            }
+        }
+    }
+
+    fn decode_body(r: &mut ByteReader<'_>) -> Result<Self> {
+        let header = Header::decode(r)?;
+        let n = r.get_varint()? as usize;
+        if n > 1_000_000 {
+            return Err(Error::Corrupt(format!("absurd detection count {n}")));
+        }
+        let mut detections = Vec::with_capacity(n);
+        for _ in 0..n {
+            let class_id = r.get_u32()?;
+            let label = r.get_str()?;
+            let score = r.get_f32()?;
+            let mut bbox = [0f32; 4];
+            for v in &mut bbox {
+                *v = r.get_f32()?;
+            }
+            detections.push(Detection { class_id, label, score, bbox });
+        }
+        Ok(Self { header, detections })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::header::Time;
+
+    #[test]
+    fn pose_distance() {
+        let a = Pose { x: 0.0, y: 0.0, yaw: 0.0 };
+        let b = Pose { x: 3.0, y: 4.0, yaw: 1.0 };
+        assert!((a.distance(&b) - 5.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn pose_stamped_roundtrip() {
+        let p = PoseStamped {
+            header: Header::new(3, Time::from_nanos(77), "map"),
+            pose: Pose { x: 1.5, y: -2.5, yaw: 0.25 },
+        };
+        assert_eq!(PoseStamped::decode(&p.encode()).unwrap(), p);
+    }
+
+    #[test]
+    fn twist_and_control_roundtrip() {
+        let t = Twist { v: 11.1, omega: -0.3 };
+        assert_eq!(Twist::decode(&t.encode()).unwrap(), t);
+        let c = ControlCommand { accel: -2.0, steer: 0.1 };
+        assert_eq!(ControlCommand::decode(&c.encode()).unwrap(), c);
+    }
+
+    #[test]
+    fn control_clamps_to_actuator_limits() {
+        let c = ControlCommand { accel: -99.0, steer: 9.0 }.clamped();
+        assert_eq!(c.accel, -8.0);
+        assert_eq!(c.steer, 0.6);
+    }
+
+    #[test]
+    fn detection_array_roundtrip() {
+        let d = DetectionArray {
+            header: Header::new(1, Time::from_nanos(9), "camera"),
+            detections: vec![
+                Detection {
+                    class_id: 2,
+                    label: "pedestrian".into(),
+                    score: 0.93,
+                    bbox: [10.0, 20.0, 30.0, 40.0],
+                },
+                Detection {
+                    class_id: 0,
+                    label: "vehicle".into(),
+                    score: 0.5,
+                    bbox: [0.0; 4],
+                },
+            ],
+        };
+        assert_eq!(DetectionArray::decode(&d.encode()).unwrap(), d);
+    }
+
+    #[test]
+    fn empty_detection_array_ok() {
+        let d = DetectionArray::default();
+        assert_eq!(DetectionArray::decode(&d.encode()).unwrap(), d);
+    }
+}

@@ -1,0 +1,206 @@
+//! Image recognition through the AOT classifier artifact — the paper's
+//! "object recognition algorithms that consume image data" (Fig 3) and
+//! the workload of the §2.3 compute-demand analysis and Fig 7 scalability
+//! experiment.
+
+use crate::error::{Error, Result};
+use crate::msg::{Detection, DetectionArray, Image};
+use crate::runtime::{thread_runtime, CompiledModel};
+use std::rc::Rc;
+
+/// Label set — must match `python/compile/model.py::CLASSES`.
+pub const CLASSES: [&str; 8] = [
+    "vehicle",
+    "pedestrian",
+    "cyclist",
+    "traffic_light",
+    "sign",
+    "barrier",
+    "road",
+    "background",
+];
+
+/// Model input side (images are resized to this).
+pub const INPUT_SIZE: usize = 32;
+
+/// Batched image classifier over the PJRT runtime (thread-local).
+pub struct Classifier {
+    b1: Rc<CompiledModel>,
+    b8: Rc<CompiledModel>,
+}
+
+/// One classification result.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClassResult {
+    pub class_id: u32,
+    pub label: &'static str,
+    pub score: f32,
+    pub logits: Vec<f32>,
+}
+
+impl Classifier {
+    /// Load from this thread's runtime rooted at `artifact_dir`.
+    pub fn load(artifact_dir: &str) -> Result<Self> {
+        let rt = thread_runtime(artifact_dir)?;
+        Ok(Self { b1: rt.model("classifier_b1")?, b8: rt.model("classifier_b8")? })
+    }
+
+    /// Classify a batch of images (any sizes; resized to 32×32).
+    /// Uses the batch-8 artifact for full groups and batch-1 for the tail.
+    pub fn classify(&self, images: &[Image]) -> Result<Vec<ClassResult>> {
+        let mut out = Vec::with_capacity(images.len());
+        let row = INPUT_SIZE * INPUT_SIZE * 3;
+        let mut i = 0;
+        while i + 8 <= images.len() {
+            let mut input = Vec::with_capacity(8 * row);
+            for img in &images[i..i + 8] {
+                pack_image(img, &mut input)?;
+            }
+            let logits = self.b8.run_f32(&input)?;
+            for b in 0..8 {
+                out.push(interpret_logits(&logits[b * 8..(b + 1) * 8]));
+            }
+            i += 8;
+        }
+        for img in &images[i..] {
+            let mut input = Vec::with_capacity(row);
+            pack_image(img, &mut input)?;
+            let logits = self.b1.run_f32(&input)?;
+            out.push(interpret_logits(&logits));
+        }
+        Ok(out)
+    }
+
+    /// Classify and wrap as a bus message.
+    pub fn detect(&self, img: &Image) -> Result<DetectionArray> {
+        let r = self.classify(std::slice::from_ref(img))?.remove(0);
+        Ok(DetectionArray {
+            header: img.header.clone(),
+            detections: vec![Detection {
+                class_id: r.class_id,
+                label: r.label.to_string(),
+                score: r.score,
+                bbox: [0.0, 0.0, img.width as f32, img.height as f32],
+            }],
+        })
+    }
+}
+
+/// Resize (nearest-neighbour) + normalize an image into `out` as NHWC f32.
+pub fn pack_image(img: &Image, out: &mut Vec<f32>) -> Result<()> {
+    img.validate()?;
+    let (w, h) = (img.width as usize, img.height as usize);
+    if w == 0 || h == 0 {
+        return Err(Error::Runtime("cannot classify empty image".into()));
+    }
+    let bpp = img.format.bytes_per_pixel();
+    // Fast path (perf pass): model-native RGB frames skip the resample
+    // loop — one bulk normalize instead of 32*32 bounds-checked pushes.
+    if w == INPUT_SIZE && h == INPUT_SIZE && bpp == 3 {
+        out.extend(img.data.iter().map(|&b| b as f32 * (1.0 / 255.0)));
+        return Ok(());
+    }
+    for y in 0..INPUT_SIZE {
+        let sy = y * h / INPUT_SIZE;
+        for x in 0..INPUT_SIZE {
+            let sx = x * w / INPUT_SIZE;
+            let o = (sy * w + sx) * bpp;
+            match bpp {
+                3 => {
+                    out.push(img.data[o] as f32 / 255.0);
+                    out.push(img.data[o + 1] as f32 / 255.0);
+                    out.push(img.data[o + 2] as f32 / 255.0);
+                }
+                _ => {
+                    let v = img.data[o] as f32 / 255.0;
+                    out.extend_from_slice(&[v, v, v]);
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+fn interpret_logits(logits: &[f32]) -> ClassResult {
+    let (mut best, mut best_v) = (0usize, f32::NEG_INFINITY);
+    for (i, &v) in logits.iter().enumerate() {
+        if v > best_v {
+            best = i;
+            best_v = v;
+        }
+    }
+    // softmax score of the argmax
+    let m = best_v;
+    let denom: f32 = logits.iter().map(|&v| (v - m).exp()).sum();
+    ClassResult {
+        class_id: best as u32,
+        label: CLASSES[best],
+        score: 1.0 / denom,
+        logits: logits.to_vec(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> String {
+        std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    }
+
+    #[test]
+    fn classify_batch_sizes() {
+        let c = Classifier::load(&artifact_dir()).unwrap();
+        for n in [1usize, 3, 8, 11] {
+            let imgs: Vec<Image> =
+                (0..n).map(|i| Image::synthetic(32, 32, i as u64)).collect();
+            let res = c.classify(&imgs).unwrap();
+            assert_eq!(res.len(), n);
+            for r in &res {
+                assert!((r.class_id as usize) < CLASSES.len());
+                assert!(r.score > 0.0 && r.score <= 1.0);
+                assert_eq!(r.logits.len(), 8);
+            }
+        }
+    }
+
+    #[test]
+    fn batch_path_matches_single_path() {
+        let c = Classifier::load(&artifact_dir()).unwrap();
+        let imgs: Vec<Image> = (0..8).map(|i| Image::synthetic(32, 32, i)).collect();
+        let batched = c.classify(&imgs).unwrap();
+        for (i, img) in imgs.iter().enumerate() {
+            let single = c.classify(std::slice::from_ref(img)).unwrap().remove(0);
+            assert_eq!(single.class_id, batched[i].class_id, "image {i}");
+            for (a, b) in single.logits.iter().zip(&batched[i].logits) {
+                assert!((a - b).abs() < 1e-4, "image {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn resizes_arbitrary_input() {
+        let c = Classifier::load(&artifact_dir()).unwrap();
+        let img = Image::synthetic(64, 48, 5);
+        let res = c.classify(std::slice::from_ref(&img)).unwrap();
+        assert_eq!(res.len(), 1);
+    }
+
+    #[test]
+    fn detect_wraps_as_message() {
+        let c = Classifier::load(&artifact_dir()).unwrap();
+        let img = Image::synthetic(32, 32, 1);
+        let det = c.detect(&img).unwrap();
+        assert_eq!(det.detections.len(), 1);
+        assert_eq!(det.header, img.header);
+    }
+
+    #[test]
+    fn deterministic_results() {
+        let c = Classifier::load(&artifact_dir()).unwrap();
+        let img = Image::synthetic(32, 32, 9);
+        let a = c.classify(std::slice::from_ref(&img)).unwrap();
+        let b = c.classify(std::slice::from_ref(&img)).unwrap();
+        assert_eq!(a, b);
+    }
+}

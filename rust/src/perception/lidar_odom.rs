@@ -1,0 +1,231 @@
+//! LiDAR localization — the paper's "localization algorithms that
+//! consume LiDAR raw data" (Fig 3).
+//!
+//! Two pieces: a pure-Rust planar ICP (point-to-point, used as the
+//! odometry estimator in the playback pipeline) and a PJRT-backed scan
+//! descriptor (PointNet-lite artifact) used for loop-closure-style scan
+//! matching.
+
+use crate::error::{Error, Result};
+use crate::msg::PointCloud;
+use crate::runtime::thread_runtime;
+
+/// Planar rigid transform (dx, dy, dtheta).
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct Transform2D {
+    pub dx: f64,
+    pub dy: f64,
+    pub dtheta: f64,
+}
+
+impl Transform2D {
+    pub fn apply(&self, x: f64, y: f64) -> (f64, f64) {
+        let (s, c) = self.dtheta.sin_cos();
+        (c * x - s * y + self.dx, s * x + c * y + self.dy)
+    }
+
+    /// Compose: self ∘ other (apply other first).
+    pub fn compose(&self, other: &Transform2D) -> Transform2D {
+        let (s, c) = self.dtheta.sin_cos();
+        Transform2D {
+            dx: self.dx + c * other.dx - s * other.dy,
+            dy: self.dy + s * other.dx + c * other.dy,
+            dtheta: self.dtheta + other.dtheta,
+        }
+    }
+}
+
+/// Point-to-point ICP in the plane (z ignored). Returns the transform
+/// that maps `src` onto `dst`.
+pub fn icp_2d(src: &PointCloud, dst: &PointCloud, iterations: usize) -> Result<Transform2D> {
+    if src.num_points() < 3 || dst.num_points() < 3 {
+        return Err(Error::Sim("icp needs >= 3 points per scan".into()));
+    }
+    let dst_pts: Vec<(f64, f64)> = (0..dst.num_points())
+        .map(|i| {
+            let (x, y, _, _) = dst.point(i);
+            (x as f64, y as f64)
+        })
+        .collect();
+    let mut cur: Vec<(f64, f64)> = (0..src.num_points())
+        .map(|i| {
+            let (x, y, _, _) = src.point(i);
+            (x as f64, y as f64)
+        })
+        .collect();
+    let mut total = Transform2D::default();
+
+    for _ in 0..iterations {
+        // nearest-neighbour correspondence (brute force; scans are small)
+        let pairs: Vec<((f64, f64), (f64, f64))> = cur
+            .iter()
+            .map(|&p| {
+                let q = dst_pts
+                    .iter()
+                    .min_by(|a, b| {
+                        d2(p, **a).partial_cmp(&d2(p, **b)).unwrap()
+                    })
+                    .unwrap();
+                (p, *q)
+            })
+            .collect();
+        // closed-form 2D rigid alignment (Umeyama / SVD-free for 2D)
+        let n = pairs.len() as f64;
+        let (mut mx, mut my, mut qx, mut qy) = (0.0, 0.0, 0.0, 0.0);
+        for ((px, py), (dxp, dyp)) in &pairs {
+            mx += px;
+            my += py;
+            qx += dxp;
+            qy += dyp;
+        }
+        mx /= n;
+        my /= n;
+        qx /= n;
+        qy /= n;
+        let (mut sxx, mut sxy) = (0.0, 0.0);
+        for ((px, py), (dxp, dyp)) in &pairs {
+            let (ax, ay) = (px - mx, py - my);
+            let (bx, by) = (dxp - qx, dyp - qy);
+            sxx += ax * bx + ay * by;
+            sxy += ax * by - ay * bx;
+        }
+        let theta = sxy.atan2(sxx);
+        let (s, c) = theta.sin_cos();
+        let step = Transform2D {
+            dx: qx - (c * mx - s * my),
+            dy: qy - (s * mx + c * my),
+            dtheta: theta,
+        };
+        for p in &mut cur {
+            *p = step.apply(p.0, p.1);
+        }
+        total = step.compose(&total);
+        if step.dx.abs() < 1e-9 && step.dy.abs() < 1e-9 && step.dtheta.abs() < 1e-9 {
+            break;
+        }
+    }
+    Ok(total)
+}
+
+fn d2(a: (f64, f64), b: (f64, f64)) -> f64 {
+    (a.0 - b.0).powi(2) + (a.1 - b.1).powi(2)
+}
+
+/// PJRT-backed scan descriptor (PointNet-lite artifact).
+pub fn scan_descriptor(artifact_dir: &str, pc: &PointCloud) -> Result<Vec<f32>> {
+    let rt = thread_runtime(artifact_dir)?;
+    let m = rt.model("lidar_feat_b1")?;
+    let n_model = m.sig.in_dims[1]; // points the artifact expects
+    let mut input = vec![0f32; n_model * 4];
+    // truncate / zero-pad the scan to the artifact's point count
+    let n = pc.num_points().min(n_model);
+    input[..n * 4].copy_from_slice(&pc.points[..n * 4]);
+    m.run_f32(&input)
+}
+
+/// Cosine similarity between two descriptors (scan-match score).
+pub fn descriptor_similarity(a: &[f32], b: &[f32]) -> f32 {
+    let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
+    let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
+    let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::msg::Header;
+
+    fn ring(n: usize, tf: &Transform2D) -> PointCloud {
+        let mut points = Vec::with_capacity(n * 4);
+        for k in 0..n {
+            let ang = k as f64 / n as f64 * std::f64::consts::TAU;
+            // non-circular shape (ellipse + bump) so rotation is observable
+            let r = 10.0 + 2.0 * (3.0 * ang).cos();
+            let (x, y) = (r * ang.cos(), r * ang.sin());
+            let (x, y) = tf.apply(x, y);
+            points.extend_from_slice(&[x as f32, y as f32, 0.0, 1.0]);
+        }
+        PointCloud { header: Header::default(), points }
+    }
+
+    #[test]
+    fn icp_recovers_translation() {
+        let src = ring(90, &Transform2D::default());
+        let truth = Transform2D { dx: 0.4, dy: -0.25, dtheta: 0.0 };
+        let dst = ring(90, &truth);
+        let est = icp_2d(&src, &dst, 30).unwrap();
+        assert!((est.dx - truth.dx).abs() < 0.05, "{est:?}");
+        assert!((est.dy - truth.dy).abs() < 0.05, "{est:?}");
+    }
+
+    #[test]
+    fn icp_recovers_small_rotation() {
+        // A scattered (non-curve) cloud: rotation is observable because
+        // points cannot slide along a tangent direction (no aperture
+        // ambiguity like a smooth ring has).
+        let mut rng = crate::util::prng::Prng::new(7);
+        let mut points = Vec::new();
+        for _ in 0..150 {
+            let x = rng.range_f64(-10.0, 10.0);
+            let y = rng.range_f64(-10.0, 10.0);
+            points.extend_from_slice(&[x as f32, y as f32, 0.0, 1.0]);
+        }
+        let src = PointCloud { header: Header::default(), points: points.clone() };
+        let truth = Transform2D { dx: 0.1, dy: 0.1, dtheta: 0.05 };
+        let moved: Vec<f32> = points
+            .chunks_exact(4)
+            .flat_map(|p| {
+                let (x, y) = truth.apply(p[0] as f64, p[1] as f64);
+                [x as f32, y as f32, p[2], p[3]]
+            })
+            .collect();
+        let dst = PointCloud { header: Header::default(), points: moved };
+        let est = icp_2d(&src, &dst, 40).unwrap();
+        assert!((est.dtheta - truth.dtheta).abs() < 0.02, "{est:?}");
+        assert!((est.dx - truth.dx).abs() < 0.1, "{est:?}");
+    }
+
+    #[test]
+    fn icp_identity_for_same_scan() {
+        let s = ring(60, &Transform2D::default());
+        let est = icp_2d(&s, &s, 10).unwrap();
+        assert!(est.dx.abs() < 1e-6 && est.dy.abs() < 1e-6 && est.dtheta.abs() < 1e-6);
+    }
+
+    #[test]
+    fn icp_rejects_tiny_scans() {
+        let s = PointCloud { header: Header::default(), points: vec![1.0; 8] };
+        assert!(icp_2d(&s, &s, 5).is_err());
+    }
+
+    #[test]
+    fn transform_compose_and_apply() {
+        let a = Transform2D { dx: 1.0, dy: 0.0, dtheta: std::f64::consts::FRAC_PI_2 };
+        let b = Transform2D { dx: 0.0, dy: 2.0, dtheta: 0.0 };
+        let ab = a.compose(&b); // apply b then a
+        let (x, y) = ab.apply(1.0, 0.0);
+        // b: (1,0)->(1,2); a: rotate 90° -> (-2,1) then +1 x -> (-1,1)
+        assert!((x - -1.0).abs() < 1e-9 && (y - 1.0).abs() < 1e-9, "({x},{y})");
+    }
+
+    #[test]
+    fn descriptors_similar_for_similar_scans() {
+        let dir = std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let a = PointCloud::synthetic(256, 1);
+        let b = PointCloud::synthetic(256, 1);
+        let c = PointCloud::synthetic(256, 999);
+        let da = scan_descriptor(&dir, &a).unwrap();
+        let db = scan_descriptor(&dir, &b).unwrap();
+        let dc = scan_descriptor(&dir, &c).unwrap();
+        assert!(descriptor_similarity(&da, &db) > 0.999, "same scan ≈ identical");
+        assert!(
+            descriptor_similarity(&da, &dc) < descriptor_similarity(&da, &db),
+            "different scan less similar"
+        );
+    }
+}

@@ -1,0 +1,206 @@
+//! Perception applications — the simulation workloads the Spark driver
+//! launches (paper Fig 3): image recognition, segmentation, LiDAR
+//! localization. All deep-learning compute executes AOT-compiled
+//! JAX/Pallas artifacts through PJRT; Python never runs here.
+//!
+//! [`register_perception_ops`] / [`register_perception_logics`] plug
+//! these into the engine's operator registry and the BinPipedRDD child.
+
+pub mod classify;
+pub mod lidar_odom;
+pub mod segment;
+
+pub use classify::{Classifier, ClassResult, CLASSES};
+pub use lidar_odom::{descriptor_similarity, icp_2d, scan_descriptor, Transform2D};
+pub use segment::{SegResult, Segmenter, SEG_CLASSES};
+
+use crate::engine::OpRegistry;
+use crate::error::Result;
+use crate::msg::{Image, Message, PointCloud};
+use crate::pipe::{LogicRegistry, PipeItem};
+use std::cell::RefCell;
+
+thread_local! {
+    static TL_CLASSIFIER: RefCell<Option<Classifier>> = const { RefCell::new(None) };
+    static TL_SEGMENTER: RefCell<Option<Segmenter>> = const { RefCell::new(None) };
+}
+
+/// Run `f` with this thread's (lazily-created) classifier.
+pub fn with_classifier<T>(
+    artifact_dir: &str,
+    f: impl FnOnce(&Classifier) -> Result<T>,
+) -> Result<T> {
+    TL_CLASSIFIER.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Classifier::load(artifact_dir)?);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Run `f` with this thread's (lazily-created) segmenter.
+pub fn with_segmenter<T>(
+    artifact_dir: &str,
+    f: impl FnOnce(&Segmenter) -> Result<T>,
+) -> Result<T> {
+    TL_SEGMENTER.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if slot.is_none() {
+            *slot = Some(Segmenter::load(artifact_dir)?);
+        }
+        f(slot.as_ref().unwrap())
+    })
+}
+
+/// Engine operators backed by the PJRT runtime. Registered by default in
+/// `SimContext` builds (and in worker `main`).
+pub fn register_perception_ops(reg: &OpRegistry) {
+    // Image records in → DetectionArray records out (batched inside).
+    reg.register("classify_images", |ctx, _p, records| {
+        let images: Result<Vec<Image>> = records.iter().map(|r| Image::decode(r)).collect();
+        let images = images?;
+        with_classifier(&ctx.artifact_dir, |c| {
+            let results = c.classify(&images)?;
+            Ok(images
+                .iter()
+                .zip(results)
+                .map(|(img, r)| {
+                    crate::msg::DetectionArray {
+                        header: img.header.clone(),
+                        detections: vec![crate::msg::Detection {
+                            class_id: r.class_id,
+                            label: r.label.to_string(),
+                            score: r.score,
+                            bbox: [0.0, 0.0, img.width as f32, img.height as f32],
+                        }],
+                    }
+                    .encode()
+                })
+                .collect())
+        })
+    });
+
+    // Image records → per-image dominant segmentation class (u8 record).
+    reg.register("segment_images", |ctx, _p, records| {
+        with_segmenter(&ctx.artifact_dir, |s| {
+            records
+                .iter()
+                .map(|r| {
+                    let img = Image::decode(r)?;
+                    let seg = s.segment(&img)?;
+                    let dominant = (0..4u8)
+                        .max_by_key(|&c| seg.histogram[c as usize])
+                        .unwrap();
+                    Ok(vec![dominant])
+                })
+                .collect()
+        })
+    });
+
+    // PointCloud records → 64-f32 descriptor records.
+    reg.register("lidar_descriptors", |ctx, _p, records| {
+        records
+            .iter()
+            .map(|r| {
+                let pc = PointCloud::decode(r)?;
+                let d = scan_descriptor(&ctx.artifact_dir, &pc)?;
+                let mut w = crate::util::bytes::ByteWriter::new();
+                w.put_f32_slice(&d);
+                Ok(w.into_vec())
+            })
+            .collect()
+    });
+}
+
+/// BinPipedRDD user logics backed by PJRT (run inside the child process;
+/// artifact dir comes from `AV_SIMD_ARTIFACTS`, set by the parent op).
+pub fn register_perception_logics(reg: &mut LogicRegistry) {
+    // The paper's "detecting pedestrians given the binary sensor
+    // readings" example: images in, label strings out.
+    reg.register("classify", |items| {
+        let dir = std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        let mut images = Vec::new();
+        for item in &items {
+            match item {
+                PipeItem::Bytes(b) => images.push(Image::decode(b)?),
+                PipeItem::File { content, .. } => images.push(Image::decode(content)?),
+                _ => {}
+            }
+        }
+        with_classifier(&dir, |c| {
+            let results = c.classify(&images)?;
+            Ok(results
+                .into_iter()
+                .map(|r| PipeItem::Str(format!("{}:{:.3}", r.label, r.score)))
+                .collect())
+        })
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{OpCall, TaskCtx};
+
+    fn artifact_dir() -> String {
+        std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    }
+
+    #[test]
+    fn classify_op_end_to_end() {
+        let reg = OpRegistry::with_builtins();
+        register_perception_ops(&reg);
+        let ctx = TaskCtx::new(0, artifact_dir());
+        let records: Vec<Vec<u8>> =
+            (0..5).map(|i| Image::synthetic(32, 32, i).encode()).collect();
+        let out = reg
+            .apply_chain(&ctx, &[OpCall::new("classify_images", vec![])], records)
+            .unwrap();
+        assert_eq!(out.len(), 5);
+        for r in out {
+            let det = crate::msg::DetectionArray::decode(&r).unwrap();
+            assert_eq!(det.detections.len(), 1);
+        }
+    }
+
+    #[test]
+    fn segment_op_end_to_end() {
+        let reg = OpRegistry::with_builtins();
+        register_perception_ops(&reg);
+        let ctx = TaskCtx::new(0, artifact_dir());
+        let records = vec![Image::synthetic(32, 32, 0).encode()];
+        let out = reg
+            .apply_chain(&ctx, &[OpCall::new("segment_images", vec![])], records)
+            .unwrap();
+        assert_eq!(out.len(), 1);
+        assert!(out[0][0] < 4);
+    }
+
+    #[test]
+    fn lidar_op_end_to_end() {
+        let reg = OpRegistry::with_builtins();
+        register_perception_ops(&reg);
+        let ctx = TaskCtx::new(0, artifact_dir());
+        let records = vec![PointCloud::synthetic(256, 1).encode()];
+        let out = reg
+            .apply_chain(&ctx, &[OpCall::new("lidar_descriptors", vec![])], records)
+            .unwrap();
+        let mut r = crate::util::bytes::ByteReader::new(&out[0]);
+        assert_eq!(r.get_f32_vec().unwrap().len(), 64);
+    }
+
+    #[test]
+    fn classify_logic_in_process() {
+        let mut reg = LogicRegistry::with_builtins();
+        register_perception_logics(&mut reg);
+        std::env::set_var("AV_SIMD_ARTIFACTS", artifact_dir());
+        let f = reg.get("classify").unwrap();
+        let out = f(vec![PipeItem::Bytes(Image::synthetic(32, 32, 2).encode())]).unwrap();
+        assert_eq!(out.len(), 1);
+        match &out[0] {
+            PipeItem::Str(s) => assert!(s.contains(':'), "{s}"),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,84 @@
+//! Per-pixel segmentation through the AOT segmenter artifact — the
+//! paper's §2.3 "deep-learning based segmentation tasks" workload.
+
+use crate::error::Result;
+use crate::msg::Image;
+use crate::perception::classify::pack_image;
+use crate::runtime::{thread_runtime, CompiledModel};
+use std::rc::Rc;
+
+/// Segmentation label set (must match `model.py::SEG_CLASSES` order).
+pub const SEG_CLASSES: [&str; 4] = ["road", "vehicle", "pedestrian", "background"];
+const SIZE: usize = 32;
+
+/// Segmentation result: per-pixel class map + class pixel histogram.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SegResult {
+    /// 32*32 class indices, row-major.
+    pub class_map: Vec<u8>,
+    /// Pixel counts per class.
+    pub histogram: [u32; 4],
+}
+
+/// Batched segmenter.
+pub struct Segmenter {
+    b1: Rc<CompiledModel>,
+}
+
+impl Segmenter {
+    pub fn load(artifact_dir: &str) -> Result<Self> {
+        let rt = thread_runtime(artifact_dir)?;
+        Ok(Self { b1: rt.model("segmenter_b1")? })
+    }
+
+    /// Segment one image (resized to 32×32).
+    pub fn segment(&self, img: &Image) -> Result<SegResult> {
+        let mut input = Vec::with_capacity(SIZE * SIZE * 3);
+        pack_image(img, &mut input)?;
+        let logits = self.b1.run_f32(&input)?; // [32*32*4]
+        let mut class_map = Vec::with_capacity(SIZE * SIZE);
+        let mut histogram = [0u32; 4];
+        for px in logits.chunks_exact(4) {
+            let mut best = 0u8;
+            let mut best_v = f32::NEG_INFINITY;
+            for (i, &v) in px.iter().enumerate() {
+                if v > best_v {
+                    best = i as u8;
+                    best_v = v;
+                }
+            }
+            histogram[best as usize] += 1;
+            class_map.push(best);
+        }
+        Ok(SegResult { class_map, histogram })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> String {
+        std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+    }
+
+    #[test]
+    fn segment_produces_full_map() {
+        let s = Segmenter::load(&artifact_dir()).unwrap();
+        let res = s.segment(&Image::synthetic(32, 32, 3)).unwrap();
+        assert_eq!(res.class_map.len(), 32 * 32);
+        assert_eq!(res.histogram.iter().sum::<u32>(), 1024);
+        assert!(res.class_map.iter().all(|&c| c < 4));
+    }
+
+    #[test]
+    fn histogram_matches_map() {
+        let s = Segmenter::load(&artifact_dir()).unwrap();
+        let res = s.segment(&Image::synthetic(64, 64, 8)).unwrap();
+        let mut hist = [0u32; 4];
+        for &c in &res.class_map {
+            hist[c as usize] += 1;
+        }
+        assert_eq!(hist, res.histogram);
+    }
+}

@@ -1,0 +1,234 @@
+//! User-logic registry for the BinPipedRDD child process (paper Fig 4's
+//! "User Logic" box).
+//!
+//! Each logic is a named transform over a stream of [`PipeItem`]s —
+//! "ranges from simple tasks such as rotate the jpg file by 90 degrees …
+//! to relatively complex tasks such as detecting pedestrians given the
+//! binary sensor readings". Perception-backed logics are registered by
+//! `perception::register_pipe_logics` so this module stays dependency-free.
+
+use super::codec::PipeItem;
+use crate::error::{Error, Result};
+use crate::msg::{Image, Message, PixelFormat};
+use std::collections::HashMap;
+use std::sync::Arc;
+
+/// A user-logic transform: whole-partition items in, items out.
+pub type LogicFn = Arc<dyn Fn(Vec<PipeItem>) -> Result<Vec<PipeItem>> + Send + Sync>;
+
+/// Registry of named user logics.
+#[derive(Clone, Default)]
+pub struct LogicRegistry {
+    fns: HashMap<String, LogicFn>,
+}
+
+impl LogicRegistry {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Registry pre-loaded with the built-in logics.
+    pub fn with_builtins() -> Self {
+        let mut r = Self::new();
+        register_builtins(&mut r);
+        r
+    }
+
+    pub fn register(
+        &mut self,
+        name: &str,
+        f: impl Fn(Vec<PipeItem>) -> Result<Vec<PipeItem>> + Send + Sync + 'static,
+    ) {
+        self.fns.insert(name.to_string(), Arc::new(f));
+    }
+
+    pub fn get(&self, name: &str) -> Result<LogicFn> {
+        self.fns.get(name).cloned().ok_or_else(|| {
+            Error::Pipe(format!(
+                "unknown user logic '{name}' (known: {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        let mut v: Vec<_> = self.fns.keys().cloned().collect();
+        v.sort();
+        v
+    }
+}
+
+/// Rotate an RGB image 90° clockwise in place of its pixel buffer.
+pub fn rotate90(img: &Image) -> Image {
+    let (w, h) = (img.width as usize, img.height as usize);
+    let bpp = img.format.bytes_per_pixel();
+    let mut out = vec![0u8; img.data.len()];
+    // dst(x, y) = src(y, h-1-x); dst dims are (h, w).
+    for y in 0..h {
+        for x in 0..w {
+            let src = (y * w + x) * bpp;
+            let (dx, dy) = (h - 1 - y, x);
+            let dst = (dy * h + dx) * bpp;
+            out[dst..dst + bpp].copy_from_slice(&img.data[src..src + bpp]);
+        }
+    }
+    Image {
+        header: img.header.clone(),
+        width: img.height,
+        height: img.width,
+        format: img.format,
+        data: out,
+    }
+}
+
+/// Convert an RGB image to grayscale (luma-weighted).
+pub fn grayscale(img: &Image) -> Image {
+    match img.format {
+        PixelFormat::Mono8 => img.clone(),
+        PixelFormat::Rgb8 => {
+            let data: Vec<u8> = img
+                .data
+                .chunks_exact(3)
+                .map(|p| {
+                    (0.299 * p[0] as f32 + 0.587 * p[1] as f32 + 0.114 * p[2] as f32) as u8
+                })
+                .collect();
+            Image {
+                header: img.header.clone(),
+                width: img.width,
+                height: img.height,
+                format: PixelFormat::Mono8,
+                data,
+            }
+        }
+    }
+}
+
+fn map_image_items(
+    items: Vec<PipeItem>,
+    f: impl Fn(&Image) -> Image,
+) -> Result<Vec<PipeItem>> {
+    items
+        .into_iter()
+        .map(|item| match item {
+            PipeItem::Bytes(b) => {
+                let img = Image::decode(&b)?;
+                Ok(PipeItem::Bytes(f(&img).encode()))
+            }
+            PipeItem::File { name, content } => {
+                let img = Image::decode(&content)?;
+                Ok(PipeItem::File { name, content: f(&img).encode() })
+            }
+            other => Ok(other), // pass through non-image items unchanged
+        })
+        .collect()
+}
+
+/// Register the dependency-free built-in logics.
+pub fn register_builtins(r: &mut LogicRegistry) {
+    // identity: bytes through untouched (pipe-overhead baseline).
+    r.register("identity", Ok);
+
+    // The paper's "rotate the jpg file by 90 degrees if needed" example.
+    r.register("rotate90", |items| map_image_items(items, rotate90));
+
+    r.register("grayscale", |items| map_image_items(items, grayscale));
+
+    // Count bytes: emits a single I64 of total payload size (smoke logic).
+    r.register("byte_count", |items| {
+        let total: i64 = items
+            .iter()
+            .map(|i| match i {
+                PipeItem::Bytes(b) => b.len() as i64,
+                PipeItem::File { content, .. } => content.len() as i64,
+                PipeItem::Str(s) => s.len() as i64,
+                PipeItem::I64(_) => 8,
+            })
+            .sum();
+        Ok(vec![PipeItem::I64(total)])
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_lookup_and_error() {
+        let r = LogicRegistry::with_builtins();
+        assert!(r.get("identity").is_ok());
+        let err = match r.get("nonsense") { Err(e) => e, Ok(_) => panic!("expected error") };
+        assert!(err.to_string().contains("identity"), "error lists known logics");
+    }
+
+    #[test]
+    fn rotate90_four_times_is_identity() {
+        let img = Image::synthetic(6, 4, 5);
+        let mut cur = img.clone();
+        for _ in 0..4 {
+            cur = rotate90(&cur);
+        }
+        assert_eq!(cur, img);
+    }
+
+    #[test]
+    fn rotate90_transposes_dims() {
+        let img = Image::synthetic(8, 4, 1);
+        let rot = rotate90(&img);
+        assert_eq!((rot.width, rot.height), (4, 8));
+        rot.validate().unwrap();
+    }
+
+    #[test]
+    fn rotate90_moves_corner_correctly() {
+        // 2x2 RGB: pixels A B / C D → rotate cw → C A / D B
+        let img = Image {
+            header: Default::default(),
+            width: 2,
+            height: 2,
+            format: PixelFormat::Rgb8,
+            data: vec![
+                1, 1, 1, 2, 2, 2, // A B
+                3, 3, 3, 4, 4, 4, // C D
+            ],
+        };
+        let rot = rotate90(&img);
+        assert_eq!(rot.data, vec![3, 3, 3, 1, 1, 1, 4, 4, 4, 2, 2, 2]);
+    }
+
+    #[test]
+    fn grayscale_output_is_mono() {
+        let img = Image::synthetic(4, 4, 2);
+        let g = grayscale(&img);
+        assert_eq!(g.format, PixelFormat::Mono8);
+        assert_eq!(g.data.len(), 16);
+        g.validate().unwrap();
+    }
+
+    #[test]
+    fn rotate_logic_via_registry() {
+        let r = LogicRegistry::with_builtins();
+        let f = r.get("rotate90").unwrap();
+        let img = Image::synthetic(4, 6, 7);
+        let out = f(vec![PipeItem::Bytes(img.encode())]).unwrap();
+        match &out[0] {
+            PipeItem::Bytes(b) => {
+                let rot = Image::decode(b).unwrap();
+                assert_eq!((rot.width, rot.height), (6, 4));
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+
+    #[test]
+    fn byte_count_logic() {
+        let r = LogicRegistry::with_builtins();
+        let f = r.get("byte_count").unwrap();
+        let out = f(vec![
+            PipeItem::Bytes(vec![0; 10]),
+            PipeItem::File { name: "x".into(), content: vec![0; 5] },
+        ])
+        .unwrap();
+        assert_eq!(out, vec![PipeItem::I64(15)]);
+    }
+}

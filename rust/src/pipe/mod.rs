@@ -1,0 +1,14 @@
+//! BinPipedRDD — binary data streaming between the engine and external
+//! user programs over Linux pipes (paper §3.1, Fig 4).
+//!
+//! * [`codec`] — the uniform byte-array format + stream (de)serialization.
+//! * [`logic`] — named user-logic transforms run inside the child.
+//! * [`binpipe`] — parent/child process plumbing.
+
+pub mod binpipe;
+pub mod codec;
+pub mod logic;
+
+pub use binpipe::{pipe_through_child, run_user_logic_stdio, ChildSpec};
+pub use codec::{deserialize_stream, serialize_stream, PipeItem, StreamReader, StreamWriter};
+pub use logic::{LogicRegistry, LogicFn};

@@ -1,0 +1,147 @@
+//! Artifact manifest parsing.
+//!
+//! `aot.py` writes `artifacts/manifest.txt` with one line per artifact:
+//! ```text
+//! classifier_b8 8 32 32 3 -> 8 8
+//! ```
+//! (name, input dims, `->`, output dims). The Rust runtime uses it to
+//! validate input shapes without parsing HLO.
+
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+
+/// Shape signature of one artifact.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ModelSig {
+    pub name: String,
+    pub in_dims: Vec<usize>,
+    pub out_dims: Vec<usize>,
+}
+
+impl ModelSig {
+    /// Batch dimension (leading input dim).
+    pub fn batch(&self) -> usize {
+        *self.in_dims.first().unwrap_or(&1)
+    }
+
+    /// Input elements per batch row.
+    pub fn in_elems_per_row(&self) -> usize {
+        self.in_dims.iter().skip(1).product()
+    }
+
+    /// Output elements per batch row.
+    pub fn out_elems_per_row(&self) -> usize {
+        self.out_dims.iter().skip(1).product()
+    }
+}
+
+/// Parsed manifest: artifact name → signature.
+#[derive(Debug, Clone, Default)]
+pub struct Manifest {
+    models: BTreeMap<String, ModelSig>,
+}
+
+impl Manifest {
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path).map_err(|e| {
+            Error::Runtime(format!(
+                "manifest {}: {e} (run `make artifacts`)",
+                path.display()
+            ))
+        })?;
+        Self::parse(&text)
+    }
+
+    pub fn parse(text: &str) -> Result<Self> {
+        let mut models = BTreeMap::new();
+        for (i, line) in text.lines().enumerate() {
+            let line = line.trim();
+            if line.is_empty() || line.starts_with('#') {
+                continue;
+            }
+            let (head, tail) = line.split_once("->").ok_or_else(|| {
+                Error::Runtime(format!("manifest line {}: missing '->'", i + 1))
+            })?;
+            let mut head_it = head.split_whitespace();
+            let name = head_it
+                .next()
+                .ok_or_else(|| Error::Runtime(format!("manifest line {}: empty", i + 1)))?
+                .to_string();
+            let in_dims = parse_dims(head_it, i)?;
+            let out_dims = parse_dims(tail.split_whitespace(), i)?;
+            if in_dims.is_empty() || out_dims.is_empty() {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: empty dims for {name}",
+                    i + 1
+                )));
+            }
+            models.insert(name.clone(), ModelSig { name, in_dims, out_dims });
+        }
+        Ok(Self { models })
+    }
+
+    pub fn get(&self, name: &str) -> Result<&ModelSig> {
+        self.models.get(name).ok_or_else(|| {
+            Error::Runtime(format!(
+                "unknown artifact '{name}' (manifest has: {})",
+                self.names().join(", ")
+            ))
+        })
+    }
+
+    pub fn names(&self) -> Vec<String> {
+        self.models.keys().cloned().collect()
+    }
+}
+
+fn parse_dims<'a>(
+    it: impl Iterator<Item = &'a str>,
+    line: usize,
+) -> Result<Vec<usize>> {
+    it.map(|t| {
+        t.parse::<usize>()
+            .map_err(|_| Error::Runtime(format!("manifest line {}: bad dim '{t}'", line + 1)))
+    })
+    .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_well_formed() {
+        let m = Manifest::parse(
+            "classifier_b8 8 32 32 3 -> 8 8\nlidar_feat_b1 1 256 4 -> 1 64\n",
+        )
+        .unwrap();
+        let sig = m.get("classifier_b8").unwrap();
+        assert_eq!(sig.in_dims, vec![8, 32, 32, 3]);
+        assert_eq!(sig.out_dims, vec![8, 8]);
+        assert_eq!(sig.batch(), 8);
+        assert_eq!(sig.in_elems_per_row(), 32 * 32 * 3);
+        assert_eq!(sig.out_elems_per_row(), 8);
+        assert_eq!(m.names(), vec!["classifier_b8", "lidar_feat_b1"]);
+    }
+
+    #[test]
+    fn comments_and_blanks_skipped() {
+        let m = Manifest::parse("# header\n\nx 1 2 -> 1\n").unwrap();
+        assert!(m.get("x").is_ok());
+    }
+
+    #[test]
+    fn malformed_lines_rejected() {
+        assert!(Manifest::parse("no_arrow 1 2 3\n").is_err());
+        assert!(Manifest::parse("bad_dim 1 x -> 1\n").is_err());
+        assert!(Manifest::parse("empty_out 1 ->\n").is_err());
+    }
+
+    #[test]
+    fn unknown_lookup_lists_known() {
+        let m = Manifest::parse("a 1 -> 1\n").unwrap();
+        let err = m.get("b").unwrap_err();
+        assert!(err.to_string().contains("manifest has: a"));
+    }
+}

@@ -1,0 +1,209 @@
+//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
+//! the Rust hot path.
+//!
+//! The compile path is Python (`python/compile/aot.py`, build time only);
+//! this module is the run path: `PjRtClient::cpu()` →
+//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
+//! One [`ModelRuntime`] per process caches compiled executables by
+//! artifact name; [`ModelPool`] hands out per-thread handles.
+
+pub mod manifest;
+
+pub use manifest::{Manifest, ModelSig};
+
+use crate::error::{Error, Result};
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::rc::Rc;
+
+/// A compiled model executable + its I/O signature.
+pub struct CompiledModel {
+    exe: xla::PjRtLoadedExecutable,
+    pub sig: ModelSig,
+}
+
+impl CompiledModel {
+    /// Execute on a flat f32 input of the signature's input shape.
+    /// Returns the flat f32 output.
+    pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let expect: usize = self.sig.in_dims.iter().product();
+        if input.len() != expect {
+            return Err(Error::Runtime(format!(
+                "model '{}' expects {expect} f32 inputs ({:?}), got {}",
+                self.sig.name,
+                self.sig.in_dims,
+                input.len()
+            )));
+        }
+        let dims: Vec<i64> = self.sig.in_dims.iter().map(|&d| d as i64).collect();
+        let lit = xla::Literal::vec1(input).reshape(&dims)?;
+        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True → 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<f32>()?)
+    }
+
+    /// Output element count.
+    pub fn out_len(&self) -> usize {
+        self.sig.out_dims.iter().product()
+    }
+}
+
+/// Process-wide PJRT client + executable cache.
+pub struct ModelRuntime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    manifest: Manifest,
+    cache: RefCell<HashMap<String, Rc<CompiledModel>>>,
+}
+
+impl ModelRuntime {
+    /// Create a CPU PJRT client and read the artifact manifest.
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
+        let artifact_dir = artifact_dir.as_ref().to_path_buf();
+        let manifest = Manifest::load(&artifact_dir.join("manifest.txt"))?;
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Self { client, artifact_dir, manifest, cache: RefCell::new(HashMap::new()) })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    /// Load + compile (or fetch cached) a model by artifact name, e.g.
+    /// `"classifier_b8"`.
+    pub fn model(&self, name: &str) -> Result<Rc<CompiledModel>> {
+        if let Some(m) = self.cache.borrow().get(name) {
+            return Ok(m.clone());
+        }
+        let sig = self.manifest.get(name)?.clone();
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let path_str = path
+            .to_str()
+            .ok_or_else(|| Error::Runtime(format!("bad artifact path {path:?}")))?;
+        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(|e| {
+            Error::Runtime(format!(
+                "load artifact {path_str}: {e} (run `make artifacts`?)"
+            ))
+        })?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp)?;
+        let model = Rc::new(CompiledModel { exe, sig });
+        self.cache.borrow_mut().insert(name.to_string(), model.clone());
+        Ok(model)
+    }
+}
+
+// PJRT handles in the `xla` crate are Rc-based (not Send/Sync), so the
+// runtime is per-thread: each executor thread (local mode) or worker
+// process (standalone mode) owns one client + executable cache — the
+// same one-runtime-per-executor layout Spark workers have.
+thread_local! {
+    static THREAD_RT: RefCell<Option<(String, Rc<ModelRuntime>)>> = const { RefCell::new(None) };
+}
+
+/// Get (or initialize) this thread's runtime rooted at `artifact_dir`.
+/// Re-rooting the same thread at a different directory is an error.
+pub fn thread_runtime(artifact_dir: &str) -> Result<Rc<ModelRuntime>> {
+    THREAD_RT.with(|slot| {
+        let mut slot = slot.borrow_mut();
+        if let Some((root, rt)) = slot.as_ref() {
+            if root != artifact_dir {
+                return Err(Error::Runtime(format!(
+                    "thread runtime already rooted at '{root}', asked for '{artifact_dir}'"
+                )));
+            }
+            return Ok(rt.clone());
+        }
+        let rt = Rc::new(ModelRuntime::new(artifact_dir)?);
+        *slot = Some((artifact_dir.to_string(), rt.clone()));
+        Ok(rt)
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn artifact_dir() -> String {
+        // tests run from the crate root; artifacts/ is built by `make artifacts`
+        let d = std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+        assert!(
+            std::path::Path::new(&d).join("manifest.txt").exists(),
+            "artifacts missing — run `make artifacts` first"
+        );
+        d
+    }
+
+    #[test]
+    fn load_and_run_classifier() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let m = rt.model("classifier_b1").unwrap();
+        assert_eq!(m.sig.in_dims, vec![1, 32, 32, 3]);
+        assert_eq!(m.sig.out_dims, vec![1, 8]);
+        let input = vec![0.5f32; 32 * 32 * 3];
+        let out = m.run_f32(&input).unwrap();
+        assert_eq!(out.len(), 8);
+        assert!(out.iter().all(|v| v.is_finite()));
+    }
+
+    #[test]
+    fn batch8_runs_and_differs_across_rows() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let m = rt.model("classifier_b8").unwrap();
+        let n = 8 * 32 * 32 * 3;
+        let input: Vec<f32> = (0..n).map(|i| (i % 255) as f32 / 255.0).collect();
+        let out = m.run_f32(&input).unwrap();
+        assert_eq!(out.len(), 64);
+        // different rows see different pixels → logits differ
+        assert_ne!(&out[0..8], &out[8..16]);
+    }
+
+    #[test]
+    fn executables_are_cached() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let a = rt.model("lidar_feat_b1").unwrap();
+        let b = rt.model("lidar_feat_b1").unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+    }
+
+    #[test]
+    fn thread_runtime_is_cached_and_root_checked() {
+        let dir = artifact_dir();
+        let a = thread_runtime(&dir).unwrap();
+        let b = thread_runtime(&dir).unwrap();
+        assert!(Rc::ptr_eq(&a, &b));
+        assert!(thread_runtime("/other/root").is_err());
+    }
+
+    #[test]
+    fn wrong_input_len_is_error() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let m = rt.model("classifier_b1").unwrap();
+        let err = m.run_f32(&[0.0; 7]).unwrap_err();
+        assert!(err.to_string().contains("expects"));
+    }
+
+    #[test]
+    fn unknown_model_is_error() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        assert!(rt.model("nonexistent_b4").is_err());
+    }
+
+    #[test]
+    fn segmenter_per_pixel_output() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let m = rt.model("segmenter_b1").unwrap();
+        let out = m.run_f32(&vec![0.3; 32 * 32 * 3]).unwrap();
+        assert_eq!(out.len(), 32 * 32 * 4);
+    }
+
+    #[test]
+    fn lidar_descriptor_runs() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let m = rt.model("lidar_feat_b1").unwrap();
+        let out = m.run_f32(&vec![0.1; 256 * 4]).unwrap();
+        assert_eq!(out.len(), 64);
+    }
+}

@@ -1,0 +1,160 @@
+//! The decision/control module under test (paper §1: "if we want to
+//! coordinate the functions of the decision module and the control
+//! module…"). An ACC + AEB controller: maintain cruise speed, keep a
+//! time-gap to the lead vehicle, emergency-brake on low time-to-collision.
+
+use crate::msg::ControlCommand;
+use crate::sim::dynamics::VehicleState;
+
+/// Controller tuning.
+#[derive(Debug, Clone, Copy)]
+pub struct ControllerParams {
+    /// Desired cruise speed (m/s).
+    pub cruise_speed: f64,
+    /// Desired time gap to lead (s).
+    pub time_gap: f64,
+    /// Minimum standstill distance (m).
+    pub min_gap: f64,
+    /// AEB triggers below this time-to-collision (s).
+    pub aeb_ttc: f64,
+    /// Proportional gains.
+    pub kp_speed: f64,
+    pub kp_gap: f64,
+    /// Lane-keeping proportional steer gain (on lateral offset).
+    pub kp_lat: f64,
+}
+
+impl Default for ControllerParams {
+    fn default() -> Self {
+        Self {
+            cruise_speed: 12.0,
+            time_gap: 1.8,
+            min_gap: 5.0,
+            aeb_ttc: 1.6,
+            kp_speed: 0.8,
+            kp_gap: 0.5,
+            kp_lat: 0.08,
+        }
+    }
+}
+
+/// What the controller perceives about the lead vehicle (from the
+/// perception stack or, in closed-loop sim, ground truth + noise).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct LeadObservation {
+    /// Bumper-to-bumper gap (m).
+    pub gap: f64,
+    /// Closing speed (m/s, > 0 when approaching).
+    pub closing_speed: f64,
+}
+
+/// Controller decision for this tick plus why (for verdict logs).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ControlMode {
+    Cruise,
+    Follow,
+    Emergency,
+}
+
+/// ACC/AEB longitudinal + lane-keep lateral control.
+pub fn control(
+    ego: &VehicleState,
+    lead: Option<LeadObservation>,
+    lane_y: f64,
+    p: &ControllerParams,
+) -> (ControlCommand, ControlMode) {
+    let mut mode = ControlMode::Cruise;
+    // longitudinal
+    let mut accel = p.kp_speed * (p.cruise_speed - ego.v);
+    if let Some(l) = lead {
+        let ttc = if l.closing_speed > 0.1 { l.gap / l.closing_speed } else { f64::INFINITY };
+        if ttc < p.aeb_ttc || l.gap < p.min_gap {
+            // emergency stop
+            accel = -8.0;
+            mode = ControlMode::Emergency;
+        } else {
+            let desired_gap = p.min_gap + p.time_gap * ego.v;
+            if l.gap < desired_gap * 1.5 {
+                // car-following: blend gap error and closing speed
+                let gap_err = l.gap - desired_gap;
+                let follow = p.kp_gap * gap_err - 0.8 * l.closing_speed;
+                if follow < accel {
+                    accel = follow;
+                    mode = ControlMode::Follow;
+                }
+            }
+        }
+    }
+    // lateral: hold lane centre (lane_y in world frame)
+    let lat_err = lane_y - ego.pose.y;
+    let heading_err = -ego.pose.yaw;
+    let steer = p.kp_lat * lat_err + 0.4 * heading_err;
+    (
+        ControlCommand { accel, steer }.clamped(),
+        mode,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ego(v: f64) -> VehicleState {
+        VehicleState::at(0.0, 0.0, 0.0, v)
+    }
+
+    #[test]
+    fn cruises_to_set_speed() {
+        let p = ControllerParams::default();
+        let (cmd, mode) = control(&ego(8.0), None, 0.0, &p);
+        assert!(cmd.accel > 0.0, "accelerate toward cruise");
+        assert_eq!(mode, ControlMode::Cruise);
+        let (cmd2, _) = control(&ego(15.0), None, 0.0, &p);
+        assert!(cmd2.accel < 0.0, "slow down when above cruise");
+    }
+
+    #[test]
+    fn follows_slower_lead() {
+        let p = ControllerParams::default();
+        let lead = LeadObservation { gap: 20.0, closing_speed: 3.0 };
+        let (cmd, mode) = control(&ego(12.0), Some(lead), 0.0, &p);
+        assert!(cmd.accel < 0.0);
+        assert_eq!(mode, ControlMode::Follow);
+    }
+
+    #[test]
+    fn emergency_brakes_on_low_ttc() {
+        let p = ControllerParams::default();
+        // gap 8 m, closing at 8 m/s → TTC 1.0 s < 1.6 s
+        let lead = LeadObservation { gap: 8.0, closing_speed: 8.0 };
+        let (cmd, mode) = control(&ego(12.0), Some(lead), 0.0, &p);
+        assert_eq!(mode, ControlMode::Emergency);
+        assert_eq!(cmd.accel, -8.0);
+    }
+
+    #[test]
+    fn emergency_brakes_inside_min_gap() {
+        let p = ControllerParams::default();
+        let lead = LeadObservation { gap: 3.0, closing_speed: -1.0 };
+        let (_, mode) = control(&ego(12.0), Some(lead), 0.0, &p);
+        assert_eq!(mode, ControlMode::Emergency);
+    }
+
+    #[test]
+    fn distant_lead_does_not_disturb_cruise() {
+        let p = ControllerParams::default();
+        let lead = LeadObservation { gap: 120.0, closing_speed: 0.5 };
+        let (cmd, mode) = control(&ego(12.0), Some(lead), 0.0, &p);
+        assert_eq!(mode, ControlMode::Cruise);
+        assert!(cmd.accel.abs() < 0.5);
+    }
+
+    #[test]
+    fn steers_back_to_lane() {
+        let p = ControllerParams::default();
+        let mut off = ego(10.0);
+        off.pose.y = -2.0; // right of lane centre 0
+        let (cmd, _) = control(&off, None, 0.0, &p);
+        assert!(cmd.steer > 0.0, "steer left toward the lane");
+    }
+}

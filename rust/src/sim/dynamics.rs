@@ -1,0 +1,190 @@
+//! Vehicle dynamic model (paper §1.1: "the autonomous vehicle simulator
+//! contains a dynamic model of the car"). Kinematic bicycle model — the
+//! standard planar approximation for control-in-the-loop simulation.
+
+use crate::msg::{ControlCommand, Pose, Twist};
+
+/// Vehicle geometry + limits.
+#[derive(Debug, Clone, Copy)]
+pub struct VehicleParams {
+    /// Wheelbase (m).
+    pub wheelbase: f64,
+    /// Body length/width for collision checks (m).
+    pub length: f64,
+    pub width: f64,
+    /// Speed limits (m/s).
+    pub max_speed: f64,
+    /// Actuation limits.
+    pub max_accel: f64,
+    pub max_brake: f64,
+    pub max_steer: f64,
+}
+
+impl Default for VehicleParams {
+    fn default() -> Self {
+        Self {
+            wheelbase: 2.8,
+            length: 4.6,
+            width: 1.9,
+            max_speed: 40.0,
+            max_accel: 3.0,
+            max_brake: 8.0,
+            max_steer: 0.6,
+        }
+    }
+}
+
+/// Full kinematic state.
+#[derive(Debug, Clone, Copy, PartialEq, Default)]
+pub struct VehicleState {
+    pub pose: Pose,
+    /// Longitudinal speed (m/s, >= 0).
+    pub v: f64,
+}
+
+impl VehicleState {
+    pub fn at(x: f64, y: f64, yaw: f64, v: f64) -> Self {
+        Self { pose: Pose { x, y, yaw }, v }
+    }
+
+    pub fn twist(&self, steer: f64, params: &VehicleParams) -> Twist {
+        Twist { v: self.v, omega: self.v * steer.tan() / params.wheelbase }
+    }
+}
+
+/// Kinematic bicycle model: integrate one step of `dt` seconds under a
+/// (clamped) control command.
+pub fn step(
+    state: &VehicleState,
+    cmd: &ControlCommand,
+    params: &VehicleParams,
+    dt: f64,
+) -> VehicleState {
+    let accel = cmd.accel.clamp(-params.max_brake, params.max_accel);
+    let steer = cmd.steer.clamp(-params.max_steer, params.max_steer);
+    let v = (state.v + accel * dt).clamp(0.0, params.max_speed);
+    // midpoint speed for position integration
+    let v_mid = 0.5 * (state.v + v);
+    let yaw_rate = v_mid * steer.tan() / params.wheelbase;
+    let yaw = state.pose.yaw + yaw_rate * dt;
+    let yaw_mid = state.pose.yaw + 0.5 * yaw_rate * dt;
+    VehicleState {
+        pose: Pose {
+            x: state.pose.x + v_mid * yaw_mid.cos() * dt,
+            y: state.pose.y + v_mid * yaw_mid.sin() * dt,
+            yaw,
+        },
+        v,
+    }
+}
+
+/// Axis-aligned-ish oriented-box overlap test between two vehicles
+/// (separating-axis on the two body frames).
+pub fn collides(a: &VehicleState, b: &VehicleState, params: &VehicleParams) -> bool {
+    let corners = |s: &VehicleState| -> [(f64, f64); 4] {
+        let (sy, cy) = s.pose.yaw.sin_cos();
+        let (hl, hw) = (params.length / 2.0, params.width / 2.0);
+        let mut out = [(0.0, 0.0); 4];
+        for (i, (dx, dy)) in [(hl, hw), (hl, -hw), (-hl, -hw), (-hl, hw)].iter().enumerate() {
+            out[i] = (s.pose.x + cy * dx - sy * dy, s.pose.y + sy * dx + cy * dy);
+        }
+        out
+    };
+    let ca = corners(a);
+    let cb = corners(b);
+    // SAT over the 4 edge normals (2 per box)
+    for s in [a, b] {
+        let (sy, cy) = s.pose.yaw.sin_cos();
+        for axis in [(cy, sy), (-sy, cy)] {
+            let proj = |pts: &[(f64, f64); 4]| -> (f64, f64) {
+                let mut lo = f64::INFINITY;
+                let mut hi = f64::NEG_INFINITY;
+                for (x, y) in pts {
+                    let p = x * axis.0 + y * axis.1;
+                    lo = lo.min(p);
+                    hi = hi.max(p);
+                }
+                (lo, hi)
+            };
+            let (alo, ahi) = proj(&ca);
+            let (blo, bhi) = proj(&cb);
+            if ahi < blo || bhi < alo {
+                return false; // separating axis found
+            }
+        }
+    }
+    true
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn straight_line_integration() {
+        let p = VehicleParams::default();
+        let mut s = VehicleState::at(0.0, 0.0, 0.0, 10.0);
+        for _ in 0..100 {
+            s = step(&s, &ControlCommand::default(), &p, 0.01);
+        }
+        assert!((s.pose.x - 10.0).abs() < 1e-6, "{}", s.pose.x);
+        assert!(s.pose.y.abs() < 1e-9);
+        assert!((s.v - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn braking_stops_without_reversing() {
+        let p = VehicleParams::default();
+        let mut s = VehicleState::at(0.0, 0.0, 0.0, 5.0);
+        for _ in 0..200 {
+            s = step(&s, &ControlCommand { accel: -8.0, steer: 0.0 }, &p, 0.05);
+        }
+        assert_eq!(s.v, 0.0);
+    }
+
+    #[test]
+    fn speed_clamped_at_max() {
+        let p = VehicleParams::default();
+        let mut s = VehicleState::at(0.0, 0.0, 0.0, 39.0);
+        for _ in 0..100 {
+            s = step(&s, &ControlCommand { accel: 3.0, steer: 0.0 }, &p, 0.05);
+        }
+        assert_eq!(s.v, p.max_speed);
+    }
+
+    #[test]
+    fn constant_steer_turns_circle() {
+        let p = VehicleParams::default();
+        let mut s = VehicleState::at(0.0, 0.0, 0.0, 5.0);
+        let cmd = ControlCommand { accel: 0.0, steer: 0.2 };
+        // expected turn radius R = L / tan(steer)
+        let r_expect = p.wheelbase / (0.2f64).tan();
+        for _ in 0..2000 {
+            s = step(&s, &cmd, &p, 0.005);
+        }
+        // after driving, distance from the turn center (0, R) stays ~R
+        let d = (s.pose.x.powi(2) + (s.pose.y - r_expect).powi(2)).sqrt();
+        assert!((d - r_expect).abs() / r_expect < 0.01, "d={d}, R={r_expect}");
+    }
+
+    #[test]
+    fn collision_detects_overlap_and_respects_separation() {
+        let p = VehicleParams::default();
+        let a = VehicleState::at(0.0, 0.0, 0.0, 0.0);
+        let near = VehicleState::at(3.0, 0.0, 0.0, 0.0); // bumper overlap (len 4.6)
+        let far = VehicleState::at(10.0, 0.0, 0.0, 0.0);
+        let beside = VehicleState::at(0.0, 2.5, 0.0, 0.0); // > width apart
+        assert!(collides(&a, &near, &p));
+        assert!(!collides(&a, &far, &p));
+        assert!(!collides(&a, &beside, &p));
+    }
+
+    #[test]
+    fn rotated_collision() {
+        let p = VehicleParams::default();
+        let a = VehicleState::at(0.0, 0.0, 0.0, 0.0);
+        // crossing car rotated 90°, overlapping laterally
+        let b = VehicleState::at(2.0, 1.0, std::f64::consts::FRAC_PI_2, 0.0);
+        assert!(collides(&a, &b, &p));
+    }
+}

@@ -1,0 +1,142 @@
+//! The autonomous-driving simulator (paper §1.1): vehicle dynamics,
+//! the Fig 1 barrier-car scenario matrix, the controller under test, and
+//! closed-loop episode execution with verdicts.
+//!
+//! Scenario episodes run as engine operators too (see
+//! [`register_sim_ops`]), which is how the distributed scenario sweep
+//! example fans the matrix out across workers.
+
+pub mod controller;
+pub mod dynamics;
+pub mod runner;
+pub mod scenario;
+
+pub use controller::{control, ControlMode, ControllerParams, LeadObservation};
+pub use dynamics::{collides, step, VehicleParams, VehicleState};
+pub use runner::{run_episode, run_matrix, EpisodeConfig, EpisodeResult};
+pub use scenario::{random_scenario, scenario_matrix, Direction, Maneuver, RelSpeed, Scenario};
+
+use crate::engine::OpRegistry;
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+
+/// Encode a scenario as an engine record (for distributing the matrix).
+pub fn encode_scenario(s: &Scenario) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_u8(Direction::ALL.iter().position(|d| *d == s.direction).unwrap() as u8);
+    w.put_u8(RelSpeed::ALL.iter().position(|r| *r == s.rel_speed).unwrap() as u8);
+    w.put_u8(Maneuver::ALL.iter().position(|m| *m == s.maneuver).unwrap() as u8);
+    w.put_f64(s.ego_speed);
+    w.into_vec()
+}
+
+/// Decode a scenario record.
+pub fn decode_scenario(buf: &[u8]) -> Result<Scenario> {
+    let mut r = ByteReader::new(buf);
+    let d = r.get_u8()? as usize;
+    let sp = r.get_u8()? as usize;
+    let m = r.get_u8()? as usize;
+    let ego_speed = r.get_f64()?;
+    if d >= 8 || sp >= 3 || m >= 3 {
+        return Err(Error::Sim(format!("bad scenario record ({d},{sp},{m})")));
+    }
+    Ok(Scenario {
+        direction: Direction::ALL[d],
+        rel_speed: RelSpeed::ALL[sp],
+        maneuver: Maneuver::ALL[m],
+        ego_speed,
+    })
+}
+
+/// Encode an episode result record: `id ‖ passed ‖ min_ttc ‖ min_gap ‖
+/// max_brake ‖ collided`.
+pub fn encode_result(r: &EpisodeResult) -> Vec<u8> {
+    let mut w = ByteWriter::new();
+    w.put_str(&r.scenario_id);
+    w.put_bool(r.passed);
+    w.put_bool(r.collided);
+    w.put_f64(r.min_ttc);
+    w.put_f64(r.min_gap);
+    w.put_f64(r.max_brake);
+    w.put_u32(r.emergency_ticks);
+    w.put_u32(r.ticks);
+    w.into_vec()
+}
+
+/// Decode an episode result record.
+pub fn decode_result(buf: &[u8]) -> Result<EpisodeResult> {
+    let mut r = ByteReader::new(buf);
+    Ok(EpisodeResult {
+        scenario_id: r.get_str()?,
+        passed: r.get_bool()?,
+        collided: r.get_bool()?,
+        min_ttc: r.get_f64()?,
+        min_gap: r.get_f64()?,
+        max_brake: r.get_f64()?,
+        emergency_ticks: r.get_u32()?,
+        ticks: r.get_u32()?,
+    })
+}
+
+/// Engine operator: scenario records in → episode-result records out.
+/// This is what the distributed scenario sweep runs on every worker.
+pub fn register_sim_ops(reg: &OpRegistry) {
+    reg.register_map("run_scenario", |_ctx, _p, rec| {
+        let s = decode_scenario(&rec)?;
+        let res = run_episode(
+            &s,
+            &EpisodeConfig::default(),
+            &ControllerParams::default(),
+            |_| Ok(()),
+        )?;
+        Ok(encode_result(&res))
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::{OpCall, OpRegistry, TaskCtx};
+
+    #[test]
+    fn scenario_codec_roundtrip() {
+        for s in scenario_matrix(11.5) {
+            let back = decode_scenario(&encode_scenario(&s)).unwrap();
+            assert_eq!(back, s);
+        }
+    }
+
+    #[test]
+    fn result_codec_roundtrip() {
+        let r = EpisodeResult {
+            scenario_id: "front-slower-straight".into(),
+            collided: false,
+            min_ttc: 2.5,
+            min_gap: 7.0,
+            max_brake: 3.2,
+            emergency_ticks: 4,
+            ticks: 240,
+            passed: true,
+        };
+        assert_eq!(decode_result(&encode_result(&r)).unwrap(), r);
+    }
+
+    #[test]
+    fn bad_scenario_record_rejected() {
+        assert!(decode_scenario(&[9, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn run_scenario_op_executes_matrix_entry() {
+        let reg = OpRegistry::with_builtins();
+        register_sim_ops(&reg);
+        let ctx = TaskCtx::new(0, "artifacts");
+        let s = scenario_matrix(12.0)[0];
+        let out = reg
+            .apply_chain(&ctx, &[OpCall::new("run_scenario", vec![])], vec![encode_scenario(&s)])
+            .unwrap();
+        let res = decode_result(&out[0]).unwrap();
+        assert_eq!(res.scenario_id, s.id());
+        assert!(res.ticks > 0);
+    }
+}

@@ -1,0 +1,259 @@
+//! Scenario matrix generation — the paper's Fig 1 test-case methodology:
+//! "The initial position of the barrier car is a simulation variable …
+//! eight directions in total. Next, the speed of the barrier car is
+//! another simulation variable … three categories. The next motion step
+//! … going straight, turning to the left, and turning to the right. By
+//! multiplying all these simulation variables and removing all the
+//! unwanted cases, we get a set of test cases."
+
+use crate::util::prng::Prng;
+
+/// Where the barrier car starts relative to the ego vehicle.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Direction {
+    Front,
+    FrontLeft,
+    Left,
+    RearLeft,
+    Rear,
+    RearRight,
+    Right,
+    FrontRight,
+}
+
+impl Direction {
+    pub const ALL: [Direction; 8] = [
+        Direction::Front,
+        Direction::FrontLeft,
+        Direction::Left,
+        Direction::RearLeft,
+        Direction::Rear,
+        Direction::RearRight,
+        Direction::Right,
+        Direction::FrontRight,
+    ];
+
+    /// Initial offset (dx, dy) of the barrier car in the ego frame
+    /// (x forward, y left).
+    pub fn offset(self) -> (f64, f64) {
+        const LON: f64 = 22.0; // longitudinal gap
+        const LAT: f64 = 3.5; // one lane
+        match self {
+            Direction::Front => (LON, 0.0),
+            Direction::FrontLeft => (LON, LAT),
+            Direction::Left => (0.0, LAT),
+            Direction::RearLeft => (-LON, LAT),
+            Direction::Rear => (-LON, 0.0),
+            Direction::RearRight => (-LON, -LAT),
+            Direction::Right => (0.0, -LAT),
+            Direction::FrontRight => (LON, -LAT),
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Direction::Front => "front",
+            Direction::FrontLeft => "front_left",
+            Direction::Left => "left",
+            Direction::RearLeft => "rear_left",
+            Direction::Rear => "rear",
+            Direction::RearRight => "rear_right",
+            Direction::Right => "right",
+            Direction::FrontRight => "front_right",
+        }
+    }
+}
+
+/// Barrier-car speed relative to ego.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum RelSpeed {
+    Slower,
+    Equal,
+    Faster,
+}
+
+impl RelSpeed {
+    pub const ALL: [RelSpeed; 3] = [RelSpeed::Slower, RelSpeed::Equal, RelSpeed::Faster];
+
+    /// Barrier speed as a multiple of ego speed.
+    pub fn factor(self) -> f64 {
+        match self {
+            RelSpeed::Slower => 0.6,
+            RelSpeed::Equal => 1.0,
+            RelSpeed::Faster => 1.4,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            RelSpeed::Slower => "slower",
+            RelSpeed::Equal => "equal",
+            RelSpeed::Faster => "faster",
+        }
+    }
+}
+
+/// Barrier-car next maneuver.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Maneuver {
+    Straight,
+    TurnLeft,
+    TurnRight,
+}
+
+impl Maneuver {
+    pub const ALL: [Maneuver; 3] = [Maneuver::Straight, Maneuver::TurnLeft, Maneuver::TurnRight];
+
+    /// Steering angle the barrier car applies (rad).
+    pub fn steer(self) -> f64 {
+        match self {
+            Maneuver::Straight => 0.0,
+            Maneuver::TurnLeft => 0.06,
+            Maneuver::TurnRight => -0.06,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Maneuver::Straight => "straight",
+            Maneuver::TurnLeft => "turn_left",
+            Maneuver::TurnRight => "turn_right",
+        }
+    }
+}
+
+/// One test case from the matrix.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Scenario {
+    pub direction: Direction,
+    pub rel_speed: RelSpeed,
+    pub maneuver: Maneuver,
+    /// Ego cruise speed (m/s).
+    pub ego_speed: f64,
+}
+
+impl Scenario {
+    pub fn id(&self) -> String {
+        format!(
+            "{}-{}-{}",
+            self.direction.name(),
+            self.rel_speed.name(),
+            self.maneuver.name()
+        )
+    }
+
+    /// The paper removes "unwanted cases" from the 8×3×3 product. A case
+    /// is unwanted when the barrier car can never interact with the ego
+    /// within the horizon:
+    /// * strictly behind and slower (falls further behind, going straight)
+    /// * strictly ahead and faster (pulls away, going straight)
+    pub fn is_interesting(&self) -> bool {
+        let behind = matches!(
+            self.direction,
+            Direction::Rear | Direction::RearLeft | Direction::RearRight
+        );
+        let ahead = matches!(
+            self.direction,
+            Direction::Front | Direction::FrontLeft | Direction::FrontRight
+        );
+        let straight = self.maneuver == Maneuver::Straight;
+        if behind && self.rel_speed == RelSpeed::Slower && straight {
+            return false;
+        }
+        if ahead && self.rel_speed == RelSpeed::Faster && straight {
+            return false;
+        }
+        true
+    }
+}
+
+/// The full filtered matrix (8 × 3 × 3 minus unwanted = 66 cases).
+pub fn scenario_matrix(ego_speed: f64) -> Vec<Scenario> {
+    let mut v = Vec::new();
+    for direction in Direction::ALL {
+        for rel_speed in RelSpeed::ALL {
+            for maneuver in Maneuver::ALL {
+                let s = Scenario { direction, rel_speed, maneuver, ego_speed };
+                if s.is_interesting() {
+                    v.push(s);
+                }
+            }
+        }
+    }
+    v
+}
+
+/// Random scenario (property tests / fuzzing).
+pub fn random_scenario(rng: &mut Prng, ego_speed: f64) -> Scenario {
+    Scenario {
+        direction: *rng.choose(&Direction::ALL),
+        rel_speed: *rng.choose(&RelSpeed::ALL),
+        maneuver: *rng.choose(&Maneuver::ALL),
+        ego_speed,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn matrix_size_is_product_minus_unwanted() {
+        let m = scenario_matrix(12.0);
+        // 72 total; removed: 3 rear dirs × slower × straight = 3,
+        // 3 front dirs × faster × straight = 3 → 66.
+        assert_eq!(m.len(), 66);
+    }
+
+    #[test]
+    fn ids_are_unique() {
+        let m = scenario_matrix(12.0);
+        let mut ids: Vec<String> = m.iter().map(|s| s.id()).collect();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), m.len());
+    }
+
+    #[test]
+    fn unwanted_cases_filtered() {
+        let rear_slow = Scenario {
+            direction: Direction::Rear,
+            rel_speed: RelSpeed::Slower,
+            maneuver: Maneuver::Straight,
+            ego_speed: 12.0,
+        };
+        assert!(!rear_slow.is_interesting());
+        let front_fast_turn = Scenario {
+            direction: Direction::Front,
+            rel_speed: RelSpeed::Faster,
+            maneuver: Maneuver::TurnLeft,
+            ego_speed: 12.0,
+        };
+        assert!(front_fast_turn.is_interesting(), "turning cases stay");
+    }
+
+    #[test]
+    fn offsets_cover_all_quadrants() {
+        let mut seen_pos_x = false;
+        let mut seen_neg_x = false;
+        let mut seen_pos_y = false;
+        let mut seen_neg_y = false;
+        for d in Direction::ALL {
+            let (x, y) = d.offset();
+            seen_pos_x |= x > 0.0;
+            seen_neg_x |= x < 0.0;
+            seen_pos_y |= y > 0.0;
+            seen_neg_y |= y < 0.0;
+        }
+        assert!(seen_pos_x && seen_neg_x && seen_pos_y && seen_neg_y);
+    }
+
+    #[test]
+    fn random_scenarios_are_valid() {
+        let mut rng = Prng::new(1);
+        for _ in 0..50 {
+            let s = random_scenario(&mut rng, 10.0);
+            assert!(!s.id().is_empty());
+        }
+    }
+}

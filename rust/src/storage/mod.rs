@@ -1,0 +1,231 @@
+//! DFS-lite — the platform's HDFS stand-in (paper Fig 3's storage tier).
+//!
+//! A [`BlockStore`] is a directory of content-addressed, hash-verified
+//! blocks plus named manifests mapping a logical path to its block list.
+//! Blocks are addressed by SHA-256 — NOT CRC32: bag records embed their
+//! own CRC32, and `CRC(m ‖ CRC(m))` is a constant residue, so distinct
+//! bags can share a whole-file CRC32 (a real collision our integration
+//! suite caught). A cryptographic hash makes dedupe sound.
+//! It gives the engine the two HDFS behaviours the paper relies on:
+//! durable binary outputs (`RDD[Bytes] → HDFS`) and chunked re-reads, with
+//! corruption detection on every read. Replication across machines is out
+//! of scope (single-box testbed); the API is shaped so a replicated
+//! implementation could slot in.
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use sha2::{Digest, Sha256};
+use std::path::{Path, PathBuf};
+
+/// Content address of a block: SHA-256 digest.
+fn block_id(data: &[u8]) -> [u8; 32] {
+    Sha256::digest(data).into()
+}
+
+fn hex(id: &[u8; 32]) -> String {
+    id.iter().map(|b| format!("{b:02x}")).collect()
+}
+
+/// Default block size (4 MiB, HDFS-small because our testbed is small).
+pub const DEFAULT_BLOCK_SIZE: usize = 4 * 1024 * 1024;
+
+/// Content-addressed block store with named manifests.
+pub struct BlockStore {
+    root: PathBuf,
+    block_size: usize,
+}
+
+impl BlockStore {
+    /// Open (or create) a store rooted at `root`.
+    pub fn open(root: impl AsRef<Path>) -> Result<Self> {
+        let root = root.as_ref().to_path_buf();
+        std::fs::create_dir_all(root.join("blocks"))?;
+        std::fs::create_dir_all(root.join("manifests"))?;
+        Ok(Self { root, block_size: DEFAULT_BLOCK_SIZE })
+    }
+
+    pub fn with_block_size(mut self, n: usize) -> Self {
+        self.block_size = n.max(1024);
+        self
+    }
+
+    fn block_path(&self, id: &[u8; 32]) -> PathBuf {
+        self.root.join("blocks").join(format!("{}.blk", hex(id)))
+    }
+
+    fn manifest_path(&self, name: &str) -> Result<PathBuf> {
+        if name.is_empty() || name.contains('/') || name.contains("..") {
+            return Err(Error::Storage(format!("bad object name '{name}'")));
+        }
+        Ok(self.root.join("manifests").join(format!("{name}.mf")))
+    }
+
+    /// Store `data` under `name`, splitting into CRC-tagged blocks.
+    /// Blocks are content-addressed by CRC, so identical chunks dedupe.
+    pub fn put(&self, name: &str, data: &[u8]) -> Result<()> {
+        let mut manifest = ByteWriter::new();
+        let chunks: Vec<&[u8]> = if data.is_empty() {
+            vec![]
+        } else {
+            data.chunks(self.block_size).collect()
+        };
+        manifest.put_varint(chunks.len() as u64);
+        manifest.put_u64(data.len() as u64);
+        for chunk in chunks {
+            let id = block_id(chunk);
+            let path = self.block_path(&id);
+            if !path.exists() {
+                std::fs::write(&path, chunk)?;
+            }
+            manifest.put_raw(&id);
+            manifest.put_u32(chunk.len() as u32);
+        }
+        std::fs::write(self.manifest_path(name)?, manifest.into_vec())?;
+        Ok(())
+    }
+
+    /// Fetch an object, verifying every block's CRC.
+    pub fn get(&self, name: &str) -> Result<Vec<u8>> {
+        let mf = std::fs::read(self.manifest_path(name)?)
+            .map_err(|e| Error::Storage(format!("object '{name}': {e}")))?;
+        let mut r = ByteReader::new(&mf);
+        let n_blocks = r.get_varint()? as usize;
+        let total = r.get_u64()? as usize;
+        let mut out = Vec::with_capacity(total);
+        for _ in 0..n_blocks {
+            let id: [u8; 32] = r.get_raw(32)?.try_into().unwrap();
+            let len = r.get_u32()? as usize;
+            let block = std::fs::read(self.block_path(&id))
+                .map_err(|e| Error::Storage(format!("block {}: {e}", hex(&id))))?;
+            if block.len() != len {
+                return Err(Error::Storage(format!(
+                    "block {} length {} != manifest {len}",
+                    hex(&id),
+                    block.len()
+                )));
+            }
+            if block_id(&block) != id {
+                return Err(Error::Storage(format!("block {} hash mismatch", hex(&id))));
+            }
+            out.extend_from_slice(&block);
+        }
+        if out.len() != total {
+            return Err(Error::Storage(format!(
+                "object '{name}' reassembled to {} bytes, manifest said {total}",
+                out.len()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// List stored object names.
+    pub fn list(&self) -> Result<Vec<String>> {
+        let mut names = Vec::new();
+        for e in std::fs::read_dir(self.root.join("manifests"))? {
+            let p = e?.path();
+            if let Some(stem) = p.file_stem().and_then(|s| s.to_str()) {
+                if p.extension().map(|x| x == "mf").unwrap_or(false) {
+                    names.push(stem.to_string());
+                }
+            }
+        }
+        names.sort();
+        Ok(names)
+    }
+
+    pub fn exists(&self, name: &str) -> bool {
+        self.manifest_path(name).map(|p| p.exists()).unwrap_or(false)
+    }
+
+    /// Delete an object's manifest (blocks are left for GC; shared blocks
+    /// may be referenced by other manifests).
+    pub fn delete(&self, name: &str) -> Result<()> {
+        std::fs::remove_file(self.manifest_path(name)?)?;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn store() -> (BlockStore, PathBuf) {
+        let dir = std::env::temp_dir().join(format!(
+            "av_simd_test_store_{}_{:x}",
+            std::process::id(),
+            crate::util::now_nanos()
+        ));
+        (BlockStore::open(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn put_get_roundtrip_multiblock() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 251) as u8).collect();
+        s.put("drive_001", &data).unwrap();
+        assert_eq!(s.get("drive_001").unwrap(), data);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn empty_object_ok() {
+        let (s, dir) = store();
+        s.put("empty", &[]).unwrap();
+        assert!(s.get("empty").unwrap().is_empty());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corruption_is_detected() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        let data = vec![7u8; 3000];
+        s.put("obj", &data).unwrap();
+        // corrupt one block on disk
+        let block = std::fs::read_dir(dir.join("blocks"))
+            .unwrap()
+            .next()
+            .unwrap()
+            .unwrap()
+            .path();
+        let mut b = std::fs::read(&block).unwrap();
+        b[0] ^= 0xff;
+        std::fs::write(&block, b).unwrap();
+        assert!(matches!(s.get("obj"), Err(Error::Storage(_))));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn identical_blocks_dedupe() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        let data = vec![42u8; 4096]; // 4 identical blocks
+        s.put("dup", &data).unwrap();
+        let blocks = std::fs::read_dir(dir.join("blocks")).unwrap().count();
+        assert_eq!(blocks, 1, "all-same blocks stored once");
+        assert_eq!(s.get("dup").unwrap(), data);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn list_and_exists_and_delete() {
+        let (s, dir) = store();
+        s.put("a", b"1").unwrap();
+        s.put("b", b"2").unwrap();
+        assert_eq!(s.list().unwrap(), vec!["a", "b"]);
+        assert!(s.exists("a"));
+        s.delete("a").unwrap();
+        assert!(!s.exists("a"));
+        assert_eq!(s.list().unwrap(), vec!["b"]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn path_traversal_rejected() {
+        let (s, dir) = store();
+        assert!(s.put("../evil", b"x").is_err());
+        assert!(s.put("a/b", b"x").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+}

@@ -1,0 +1,208 @@
+//! Minimal benchmarking harness (criterion is unavailable offline).
+//!
+//! Used by the `harness = false` benches in `rust/benches/` and by the
+//! performance examples: warmup, fixed-iteration or fixed-time sampling,
+//! and a median/p95 table printer whose rows mirror the paper's figures.
+
+use std::time::{Duration, Instant};
+
+/// Result of one measured case.
+#[derive(Debug, Clone)]
+pub struct Sample {
+    pub name: String,
+    /// Wall time of each measured iteration.
+    pub iters: Vec<Duration>,
+    /// Work units (e.g. bytes or messages) processed per iteration, if any.
+    pub units_per_iter: Option<f64>,
+    pub unit_label: &'static str,
+}
+
+impl Sample {
+    pub fn median(&self) -> Duration {
+        let mut v = self.iters.clone();
+        v.sort_unstable();
+        v[v.len() / 2]
+    }
+
+    pub fn min(&self) -> Duration {
+        *self.iters.iter().min().unwrap()
+    }
+
+    pub fn p95(&self) -> Duration {
+        let mut v = self.iters.clone();
+        v.sort_unstable();
+        v[(v.len() as f64 * 0.95) as usize % v.len()]
+    }
+
+    pub fn mean(&self) -> Duration {
+        let total: Duration = self.iters.iter().sum();
+        total / self.iters.len() as u32
+    }
+
+    /// Units per second at the median, if units were declared.
+    pub fn throughput(&self) -> Option<f64> {
+        self.units_per_iter
+            .map(|u| u / self.median().as_secs_f64())
+    }
+}
+
+/// Bench runner: `Bench::new("name").warmup(2).samples(10).run(|| work())`.
+pub struct Bench {
+    name: String,
+    warmup_iters: usize,
+    sample_iters: usize,
+    units: Option<f64>,
+    unit_label: &'static str,
+}
+
+impl Bench {
+    pub fn new(name: impl Into<String>) -> Self {
+        Self {
+            name: name.into(),
+            warmup_iters: 1,
+            sample_iters: 5,
+            units: None,
+            unit_label: "",
+        }
+    }
+
+    pub fn warmup(mut self, n: usize) -> Self {
+        self.warmup_iters = n;
+        self
+    }
+
+    pub fn samples(mut self, n: usize) -> Self {
+        self.sample_iters = n.max(1);
+        self
+    }
+
+    /// Declare throughput units processed per iteration (bytes, msgs, imgs).
+    pub fn units(mut self, per_iter: f64, label: &'static str) -> Self {
+        self.units = Some(per_iter);
+        self.unit_label = label;
+        self
+    }
+
+    pub fn run<F: FnMut()>(self, mut f: F) -> Sample {
+        for _ in 0..self.warmup_iters {
+            f();
+        }
+        let mut iters = Vec::with_capacity(self.sample_iters);
+        for _ in 0..self.sample_iters {
+            let t = Instant::now();
+            f();
+            iters.push(t.elapsed());
+        }
+        Sample {
+            name: self.name,
+            iters,
+            units_per_iter: self.units,
+            unit_label: self.unit_label,
+        }
+    }
+}
+
+/// Human-readable duration.
+pub fn fmt_duration(d: Duration) -> String {
+    let s = d.as_secs_f64();
+    if s >= 1.0 {
+        format!("{s:.3} s")
+    } else if s >= 1e-3 {
+        format!("{:.3} ms", s * 1e3)
+    } else {
+        format!("{:.1} µs", s * 1e6)
+    }
+}
+
+/// Human-readable rate.
+pub fn fmt_rate(r: f64, label: &str) -> String {
+    if r >= 1e9 {
+        format!("{:.2} G{label}/s", r / 1e9)
+    } else if r >= 1e6 {
+        format!("{:.2} M{label}/s", r / 1e6)
+    } else if r >= 1e3 {
+        format!("{:.2} K{label}/s", r / 1e3)
+    } else {
+        format!("{r:.2} {label}/s")
+    }
+}
+
+/// Print a fixed-width results table; also returns the rendered string so
+/// benches can tee it into EXPERIMENTS.md fragments.
+pub fn print_table(title: &str, samples: &[Sample]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!("\n== {title} ==\n"));
+    out.push_str(&format!(
+        "{:<44} {:>12} {:>12} {:>12} {:>16}\n",
+        "case", "median", "min", "p95", "throughput"
+    ));
+    for s in samples {
+        let tp = s
+            .throughput()
+            .map(|r| fmt_rate(r, s.unit_label))
+            .unwrap_or_else(|| "-".into());
+        out.push_str(&format!(
+            "{:<44} {:>12} {:>12} {:>12} {:>16}\n",
+            s.name,
+            fmt_duration(s.median()),
+            fmt_duration(s.min()),
+            fmt_duration(s.p95()),
+            tp
+        ));
+    }
+    print!("{out}");
+    out
+}
+
+/// Speedup of `b` relative to `a` (a.median / b.median).
+pub fn speedup(a: &Sample, b: &Sample) -> f64 {
+    a.median().as_secs_f64() / b.median().as_secs_f64()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_collects_requested_samples() {
+        let s = Bench::new("noop").warmup(1).samples(7).run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        assert_eq!(s.iters.len(), 7);
+        assert!(s.median() <= s.p95());
+    }
+
+    #[test]
+    fn throughput_computed() {
+        let s = Bench::new("sleepy")
+            .samples(3)
+            .units(1000.0, "msg")
+            .run(|| std::thread::sleep(Duration::from_millis(2)));
+        let tp = s.throughput().unwrap();
+        assert!(tp > 0.0 && tp < 1_000_000.0);
+    }
+
+    #[test]
+    fn formatting() {
+        assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
+        assert!(fmt_duration(Duration::from_micros(50)).contains("µs"));
+        assert!(fmt_rate(2.5e6, "B").contains("MB/s"));
+    }
+
+    #[test]
+    fn speedup_ratio() {
+        let a = Sample {
+            name: "slow".into(),
+            iters: vec![Duration::from_millis(100)],
+            units_per_iter: None,
+            unit_label: "",
+        };
+        let b = Sample {
+            name: "fast".into(),
+            iters: vec![Duration::from_millis(20)],
+            units_per_iter: None,
+            unit_label: "",
+        };
+        assert!((speedup(&a, &b) - 5.0).abs() < 1e-9);
+    }
+}

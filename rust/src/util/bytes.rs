@@ -1,0 +1,326 @@
+//! Binary encode/decode primitives shared by every wire/disk format in the
+//! platform (bag records, RPC frames, BinPipedRDD streams, messages).
+//!
+//! Everything is little-endian. Variable-length integers use LEB128.
+
+use crate::error::{Error, Result};
+
+/// Append-only byte writer with typed put_* helpers.
+#[derive(Default, Debug, Clone)]
+pub struct ByteWriter {
+    buf: Vec<u8>,
+}
+
+impl ByteWriter {
+    pub fn new() -> Self {
+        Self { buf: Vec::new() }
+    }
+
+    pub fn with_capacity(cap: usize) -> Self {
+        Self { buf: Vec::with_capacity(cap) }
+    }
+
+    pub fn into_vec(self) -> Vec<u8> {
+        self.buf
+    }
+
+    pub fn as_slice(&self) -> &[u8] {
+        &self.buf
+    }
+
+    pub fn len(&self) -> usize {
+        self.buf.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buf.is_empty()
+    }
+
+    pub fn put_u8(&mut self, v: u8) {
+        self.buf.push(v);
+    }
+
+    pub fn put_u16(&mut self, v: u16) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u32(&mut self, v: u32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_u64(&mut self, v: u64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_i64(&mut self, v: i64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f32(&mut self, v: f32) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    pub fn put_f64(&mut self, v: f64) {
+        self.buf.extend_from_slice(&v.to_le_bytes());
+    }
+
+    /// LEB128 unsigned varint.
+    pub fn put_varint(&mut self, mut v: u64) {
+        loop {
+            let byte = (v & 0x7f) as u8;
+            v >>= 7;
+            if v == 0 {
+                self.buf.push(byte);
+                return;
+            }
+            self.buf.push(byte | 0x80);
+        }
+    }
+
+    /// Length-prefixed (varint) byte slice.
+    pub fn put_bytes(&mut self, b: &[u8]) {
+        self.put_varint(b.len() as u64);
+        self.buf.extend_from_slice(b);
+    }
+
+    /// Length-prefixed UTF-8 string.
+    pub fn put_str(&mut self, s: &str) {
+        self.put_bytes(s.as_bytes());
+    }
+
+    /// Raw bytes, no length prefix.
+    pub fn put_raw(&mut self, b: &[u8]) {
+        self.buf.extend_from_slice(b);
+    }
+
+    pub fn put_bool(&mut self, v: bool) {
+        self.put_u8(v as u8);
+    }
+
+    /// f32 slice with varint count prefix.
+    pub fn put_f32_slice(&mut self, v: &[f32]) {
+        self.put_varint(v.len() as u64);
+        self.buf.reserve(v.len() * 4);
+        for x in v {
+            self.buf.extend_from_slice(&x.to_le_bytes());
+        }
+    }
+}
+
+/// Cursor-based byte reader; every getter checks bounds and returns
+/// `Error::Corrupt` on truncation instead of panicking.
+#[derive(Debug)]
+pub struct ByteReader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> ByteReader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.remaining() == 0
+    }
+
+    pub fn position(&self) -> usize {
+        self.pos
+    }
+
+    fn take(&mut self, n: usize) -> Result<&'a [u8]> {
+        if self.remaining() < n {
+            return Err(Error::Corrupt(format!(
+                "truncated: need {n} bytes at offset {}, have {}",
+                self.pos,
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn get_u8(&mut self) -> Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn get_u16(&mut self) -> Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn get_u32(&mut self) -> Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_u64(&mut self) -> Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_i64(&mut self) -> Result<i64> {
+        Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_f32(&mut self) -> Result<f32> {
+        Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn get_f64(&mut self) -> Result<f64> {
+        Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn get_bool(&mut self) -> Result<bool> {
+        Ok(self.get_u8()? != 0)
+    }
+
+    pub fn get_varint(&mut self) -> Result<u64> {
+        let mut v: u64 = 0;
+        let mut shift = 0u32;
+        loop {
+            let byte = self.get_u8()?;
+            if shift >= 64 {
+                return Err(Error::Corrupt("varint overflow".into()));
+            }
+            v |= u64::from(byte & 0x7f) << shift;
+            if byte & 0x80 == 0 {
+                return Ok(v);
+            }
+            shift += 7;
+        }
+    }
+
+    pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
+        let n = self.get_varint()? as usize;
+        self.take(n)
+    }
+
+    pub fn get_bytes_vec(&mut self) -> Result<Vec<u8>> {
+        Ok(self.get_bytes()?.to_vec())
+    }
+
+    pub fn get_str(&mut self) -> Result<String> {
+        let b = self.get_bytes()?;
+        String::from_utf8(b.to_vec())
+            .map_err(|_| Error::Corrupt("invalid utf-8 string".into()))
+    }
+
+    pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
+        self.take(n)
+    }
+
+    pub fn get_f32_vec(&mut self) -> Result<Vec<f32>> {
+        let n = self.get_varint()? as usize;
+        if n > self.remaining() / 4 + 1 {
+            return Err(Error::Corrupt(format!("f32 vec claims {n} elements")));
+        }
+        let mut v = Vec::with_capacity(n);
+        for _ in 0..n {
+            v.push(self.get_f32()?);
+        }
+        Ok(v)
+    }
+}
+
+/// Read exactly `n` bytes from a `Read`, mapping EOF to `Error::Corrupt`.
+pub fn read_exact_n<R: std::io::Read>(r: &mut R, n: usize) -> Result<Vec<u8>> {
+    let mut buf = vec![0u8; n];
+    r.read_exact(&mut buf).map_err(|e| {
+        if e.kind() == std::io::ErrorKind::UnexpectedEof {
+            Error::Corrupt(format!("unexpected EOF reading {n} bytes"))
+        } else {
+            Error::Io(e)
+        }
+    })?;
+    Ok(buf)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip_scalars() {
+        let mut w = ByteWriter::new();
+        w.put_u8(7);
+        w.put_u16(65535);
+        w.put_u32(123456);
+        w.put_u64(u64::MAX);
+        w.put_i64(-42);
+        w.put_f32(3.5);
+        w.put_f64(-2.25);
+        w.put_bool(true);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_u8().unwrap(), 7);
+        assert_eq!(r.get_u16().unwrap(), 65535);
+        assert_eq!(r.get_u32().unwrap(), 123456);
+        assert_eq!(r.get_u64().unwrap(), u64::MAX);
+        assert_eq!(r.get_i64().unwrap(), -42);
+        assert_eq!(r.get_f32().unwrap(), 3.5);
+        assert_eq!(r.get_f64().unwrap(), -2.25);
+        assert!(r.get_bool().unwrap());
+        assert!(r.is_empty());
+    }
+
+    #[test]
+    fn varint_boundaries() {
+        for v in [0u64, 1, 127, 128, 16383, 16384, u32::MAX as u64, u64::MAX] {
+            let mut w = ByteWriter::new();
+            w.put_varint(v);
+            let buf = w.into_vec();
+            let mut r = ByteReader::new(&buf);
+            assert_eq!(r.get_varint().unwrap(), v, "value {v}");
+            assert!(r.is_empty());
+        }
+    }
+
+    #[test]
+    fn strings_and_bytes() {
+        let mut w = ByteWriter::new();
+        w.put_str("topic/ライダー");
+        w.put_bytes(&[1, 2, 3]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_str().unwrap(), "topic/ライダー");
+        assert_eq!(r.get_bytes().unwrap(), &[1, 2, 3]);
+    }
+
+    #[test]
+    fn truncation_is_an_error_not_a_panic() {
+        let mut w = ByteWriter::new();
+        w.put_u64(1);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf[..5]);
+        assert!(r.get_u64().is_err());
+    }
+
+    #[test]
+    fn bad_utf8_is_corrupt() {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&[0xff, 0xfe]);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert!(matches!(r.get_str(), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn f32_slice_roundtrip() {
+        let v: Vec<f32> = (0..100).map(|i| i as f32 * 0.5).collect();
+        let mut w = ByteWriter::new();
+        w.put_f32_slice(&v);
+        let buf = w.into_vec();
+        let mut r = ByteReader::new(&buf);
+        assert_eq!(r.get_f32_vec().unwrap(), v);
+    }
+
+    #[test]
+    fn varint_overflow_rejected() {
+        let buf = [0xffu8; 11];
+        let mut r = ByteReader::new(&buf);
+        assert!(r.get_varint().is_err());
+    }
+}

@@ -1,0 +1,113 @@
+//! Hand-rolled property-testing helper (the `proptest` crate is not in the
+//! offline crate set). Seeded generators + a fixed-iteration runner with
+//! failure reporting that includes the case seed, so any failing case is
+//! reproducible by rerunning with that seed.
+
+use crate::util::prng::Prng;
+
+/// Number of cases per property (overridable via `AV_SIMD_PROP_CASES`).
+pub fn default_cases() -> u64 {
+    std::env::var("AV_SIMD_PROP_CASES")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(64)
+}
+
+/// Run `prop` against `cases` generated inputs. `gen` receives an
+/// independent PRNG per case. Panics with the case seed on failure.
+pub fn check<T: std::fmt::Debug>(
+    name: &str,
+    gen: impl Fn(&mut Prng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    check_n(name, default_cases(), gen, prop)
+}
+
+/// Like [`check`] with an explicit case count.
+pub fn check_n<T: std::fmt::Debug>(
+    name: &str,
+    cases: u64,
+    gen: impl Fn(&mut Prng) -> T,
+    prop: impl Fn(&T) -> bool,
+) {
+    let base = std::env::var("AV_SIMD_PROP_SEED")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0xA5EED_u64);
+    for case in 0..cases {
+        let seed = base.wrapping_add(case.wrapping_mul(0x9e3779b97f4a7c15));
+        let mut rng = Prng::new(seed);
+        let input = gen(&mut rng);
+        if !prop(&input) {
+            panic!(
+                "property '{name}' failed on case {case} (seed {seed:#x}):\n{input:#?}\n\
+                 reproduce with AV_SIMD_PROP_SEED={base} (case index {case})"
+            );
+        }
+    }
+}
+
+/// Generator helpers.
+pub mod gen {
+    use crate::util::prng::Prng;
+
+    /// Random byte payload, length in [0, max_len].
+    pub fn bytes(rng: &mut Prng, max_len: usize) -> Vec<u8> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        let mut v = vec![0u8; n];
+        rng.fill_bytes(&mut v);
+        v
+    }
+
+    /// Random ASCII identifier (non-empty, [a-z0-9_/], length ≤ max_len).
+    pub fn ident(rng: &mut Prng, max_len: usize) -> String {
+        const CHARS: &[u8] = b"abcdefghijklmnopqrstuvwxyz0123456789_/";
+        let n = 1 + rng.below(max_len.max(1) as u64) as usize;
+        (0..n)
+            .map(|_| CHARS[rng.below(CHARS.len() as u64) as usize] as char)
+            .collect()
+    }
+
+    /// Vec of T with length in [0, max_len].
+    pub fn vec_of<T>(
+        rng: &mut Prng,
+        max_len: usize,
+        mut f: impl FnMut(&mut Prng) -> T,
+    ) -> Vec<T> {
+        let n = rng.below(max_len as u64 + 1) as usize;
+        (0..n).map(|_| f(rng)).collect()
+    }
+
+    /// Finite f64 in [lo, hi).
+    pub fn f64_in(rng: &mut Prng, lo: f64, hi: f64) -> f64 {
+        rng.range_f64(lo, hi)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("reverse twice is identity", |r| gen::bytes(r, 64), |b| {
+            let mut x = b.clone();
+            x.reverse();
+            x.reverse();
+            x == *b
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property 'always false'")]
+    fn failing_property_reports_seed() {
+        check_n("always false", 1, |r| r.next_u64(), |_| false);
+    }
+
+    #[test]
+    fn ident_is_well_formed() {
+        check("idents non-empty ascii", |r| gen::ident(r, 20), |s| {
+            !s.is_empty() && s.len() <= 20 && s.is_ascii()
+        });
+    }
+}

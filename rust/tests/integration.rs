@@ -1,0 +1,225 @@
+//! Cross-module integration tests: datagen → bag → engine → perception,
+//! bus playback, config-driven contexts, DFS persistence.
+
+use av_simd::bag::{BagCache, BagReader, MemoryChunkedFile};
+use av_simd::bus::{clock::Pace, play_bag, Broker, PlayOptions, QoS, SimClock};
+use av_simd::datagen::{generate_drive, generate_drive_dir, DriveSpec};
+use av_simd::engine::SimContext;
+use av_simd::msg::{DetectionArray, Image, Message};
+use av_simd::storage::BlockStore;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!(
+        "av_simd_it_{tag}_{}_{:x}",
+        std::process::id(),
+        av_simd::util::now_nanos()
+    ));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn datagen_to_distributed_perception() {
+    let dir = tmp_dir("e2e");
+    let dir_s = dir.to_str().unwrap();
+    generate_drive_dir(dir_s, 3, &DriveSpec { frames: 6, ..DriveSpec::default() }).unwrap();
+
+    let sc = SimContext::local(2);
+    let outs = sc
+        .bag_dir(dir_s, &["/camera"]).unwrap()
+        .take_payload()
+        .op("classify_images", vec![])
+        .collect()
+        .unwrap();
+    assert_eq!(outs.len(), 18, "3 bags x 6 frames");
+    for o in &outs {
+        let det = DetectionArray::decode(o).unwrap();
+        assert_eq!(det.detections.len(), 1);
+        assert!(det.detections[0].score > 0.0);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn bag_playback_feeds_live_graph_with_all_topics() {
+    let (bag, _) = generate_drive(&DriveSpec { frames: 5, ..DriveSpec::default() }).unwrap();
+    let broker = Broker::new();
+    let cam = broker.subscribe::<Image>("/camera", QoS::lossless(64)).unwrap();
+    let imu = broker
+        .subscribe::<av_simd::msg::Imu>("/imu", QoS::lossless(64))
+        .unwrap();
+    let mut reader = BagReader::open(bag).unwrap();
+    let clock = SimClock::new(Pace::FreeRun);
+    let n = play_bag(&mut reader, &broker, &clock, &PlayOptions::default()).unwrap();
+    assert_eq!(n, 5 + 5 + 25); // camera + lidar + imu
+    let mut cams = 0;
+    while cam.try_recv().is_some() {
+        cams += 1;
+    }
+    let mut imus = 0;
+    while imu.try_recv().is_some() {
+        imus += 1;
+    }
+    assert_eq!(cams, 5);
+    assert_eq!(imus, 25);
+}
+
+#[test]
+fn bag_cache_accelerated_second_pass() {
+    let dir = tmp_dir("cache");
+    let dir_s = dir.to_str().unwrap();
+    let paths =
+        generate_drive_dir(dir_s, 1, &DriveSpec { frames: 20, ..DriveSpec::default() })
+            .unwrap();
+    let cache = BagCache::new(64 << 20);
+    // pass 1: loads from disk
+    let mut r1 = BagReader::open(cache.open(&paths[0]).unwrap()).unwrap();
+    let n1 = r1.for_each(None, |_| Ok(())).unwrap();
+    // pass 2: hits memory
+    let mut r2 = BagReader::open(cache.open(&paths[0]).unwrap()).unwrap();
+    let n2 = r2.for_each(None, |_| Ok(())).unwrap();
+    assert_eq!(n1, n2);
+    let (hits, misses, _) = cache.stats();
+    assert_eq!((hits, misses), (1, 1));
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn pipeline_with_binpipe_rotate_through_real_child() {
+    // Requires the launcher binary for the child; skip when missing
+    // (e.g. bare `cargo test` before `cargo build --release`).
+    if !std::path::Path::new("target/release/av-simd").exists() {
+        eprintln!("skipping: build target/release/av-simd first");
+        return;
+    }
+    // Run the binpipe op but point ChildSpec at the launcher via a custom
+    // op, since test binaries have no user-logic mode.
+    let sc = SimContext::local(2);
+    sc.registry().register("binpipe_via_launcher", |_ctx, params, records| {
+        let logic = std::str::from_utf8(params).unwrap().to_string();
+        let spec = av_simd::pipe::ChildSpec {
+            program: "target/release/av-simd".into(),
+            args: vec!["user-logic".into(), logic],
+            env: vec![("AV_SIMD_ARTIFACTS".into(), "artifacts".into())],
+        };
+        let items = records.into_iter().map(av_simd::pipe::PipeItem::Bytes).collect();
+        let out = av_simd::pipe::pipe_through_child(&spec, items)?;
+        Ok(out
+            .into_iter()
+            .map(|i| match i {
+                av_simd::pipe::PipeItem::Bytes(b) => b,
+                other => panic!("unexpected {other:?}"),
+            })
+            .collect())
+    });
+    let frames: Vec<Vec<u8>> =
+        (0..6).map(|i| Image::synthetic(8, 12, i).encode()).collect();
+    let out = sc
+        .parallelize(frames, 2)
+        .op("binpipe_via_launcher", b"rotate90".to_vec())
+        .collect()
+        .unwrap();
+    assert_eq!(out.len(), 6);
+    for o in out {
+        let img = Image::decode(&o).unwrap();
+        assert_eq!((img.width, img.height), (12, 8), "rotated in the child");
+    }
+}
+
+#[test]
+fn standalone_cluster_runs_jobs_via_spawned_processes() {
+    if !std::path::Path::new("target/release/av-simd").exists() {
+        eprintln!("skipping: build target/release/av-simd first");
+        return;
+    }
+    // StandaloneCluster spawns current_exe(); for tests that's the test
+    // binary, which has no worker mode. Spawn launcher workers manually
+    // and drive them with WorkerClient instead.
+    use av_simd::engine::plan::{Action, Source, TaskSpec};
+    use av_simd::engine::worker::WorkerClient;
+    let addr = "127.0.0.1:7355";
+    let mut child = std::process::Command::new("target/release/av-simd")
+        .args(["worker", "--listen", addr, "--id", "0"])
+        .stdout(std::process::Stdio::null())
+        .spawn()
+        .unwrap();
+    let mut client = WorkerClient::connect(addr, std::time::Duration::from_secs(20)).unwrap();
+    let out = client
+        .run_task(&TaskSpec {
+            job_id: 1,
+            task_id: 0,
+            attempt: 0,
+            source: Source::Range { start: 0, end: 1000 },
+            ops: vec![],
+            action: Action::Count,
+        })
+        .unwrap();
+    assert_eq!(out, av_simd::engine::TaskOutput::Count(1000));
+    client.shutdown().unwrap();
+    child.wait().unwrap();
+}
+
+#[test]
+fn save_bags_roundtrip_through_dfs() {
+    let dir = tmp_dir("dfs");
+    let sc = SimContext::local(2);
+    let records: Vec<Vec<u8>> = (0..10u8).map(|i| vec![i; 100]).collect();
+    let bag_dir = dir.join("bags");
+    let paths = sc
+        .parallelize(records.clone(), 2)
+        .save_bags(bag_dir.to_str().unwrap(), "/rec", "raw")
+        .unwrap();
+    assert_eq!(paths.len(), 2);
+
+    // push the bags into the DFS-lite store and pull them back intact
+    let store = BlockStore::open(dir.join("dfs")).unwrap();
+    for (i, p) in paths.iter().enumerate() {
+        let bytes = std::fs::read(p).unwrap();
+        store.put(&format!("part{i}"), &bytes).unwrap();
+        let back = store.get(&format!("part{i}")).unwrap();
+        assert_eq!(back, bytes);
+        // and the retrieved bag still parses
+        let mut r = BagReader::open(MemoryChunkedFile::from_bytes(&back)).unwrap();
+        assert!(r.play(None).unwrap().len() >= 1);
+    }
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn config_driven_local_context() {
+    let cfg = av_simd::config::PlatformConfig::from_toml(
+        "[cluster]\nmode = \"local\"\nworkers = 3\n",
+    )
+    .unwrap();
+    let sc = SimContext::from_config(&cfg).unwrap();
+    assert_eq!(sc.workers(), 3);
+    assert_eq!(sc.backend(), "local");
+    assert_eq!(sc.range(100).count().unwrap(), 100);
+}
+
+#[test]
+fn scenario_matrix_distributed_equals_serial() {
+    let matrix = av_simd::sim::scenario_matrix(10.0);
+    let serial = av_simd::sim::run_matrix(
+        &matrix,
+        &av_simd::sim::EpisodeConfig::default(),
+        &av_simd::sim::ControllerParams::default(),
+    )
+    .unwrap();
+
+    let sc = SimContext::local(3);
+    let records: Vec<Vec<u8>> = matrix.iter().map(av_simd::sim::encode_scenario).collect();
+    let outs = sc
+        .parallelize(records, 6)
+        .op("run_scenario", vec![])
+        .collect()
+        .unwrap();
+    let mut dist: Vec<av_simd::sim::EpisodeResult> = outs
+        .iter()
+        .map(|o| av_simd::sim::decode_result(o).unwrap())
+        .collect();
+    dist.sort_by(|a, b| a.scenario_id.cmp(&b.scenario_id));
+    let mut ser = serial;
+    ser.sort_by(|a, b| a.scenario_id.cmp(&b.scenario_id));
+    assert_eq!(dist, ser, "distribution must not change simulation results");
+}

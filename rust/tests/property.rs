@@ -1,0 +1,380 @@
+//! Property-based tests (seeded generator harness from
+//! `util::proptest`; the proptest crate is unavailable offline) plus
+//! corruption/failure-injection sweeps: randomly damaged inputs must
+//! produce errors, never panics or silent wrong answers.
+
+use av_simd::bag::{BagReader, BagWriter, Compression, MemoryChunkedFile};
+use av_simd::engine::{PlayedRecord, SimContext, TaskOutput, TaskSpec};
+use av_simd::msg::{Image, Message, PointCloud, Time};
+use av_simd::pipe::{deserialize_stream, serialize_stream, PipeItem};
+use av_simd::util::proptest::{check, check_n, gen};
+use av_simd::util::prng::Prng;
+
+// ---------- codecs ----------
+
+#[test]
+fn prop_pipe_stream_roundtrip() {
+    check("pipe stream roundtrip", |rng| {
+        gen::vec_of(rng, 20, |r| match r.below(4) {
+            0 => PipeItem::Str(gen::ident(r, 24)),
+            1 => PipeItem::I64(r.next_u64() as i64),
+            2 => PipeItem::Bytes(gen::bytes(r, 512)),
+            _ => PipeItem::File { name: gen::ident(r, 16), content: gen::bytes(r, 256) },
+        })
+    }, |items| {
+        deserialize_stream(&serialize_stream(items)).unwrap() == *items
+    });
+}
+
+#[test]
+fn prop_task_spec_roundtrip() {
+    check("task spec roundtrip", |rng| random_spec(rng), |spec| {
+        TaskSpec::decode(&spec.encode()).unwrap() == *spec
+    });
+}
+
+fn random_spec(rng: &mut Prng) -> TaskSpec {
+    use av_simd::engine::{Action, OpCall, Source};
+    let source = match rng.below(4) {
+        0 => Source::Inline {
+            records: gen::vec_of(rng, 8, |r| gen::bytes(r, 64)),
+        },
+        1 => Source::BagFile {
+            path: gen::ident(rng, 32),
+            topics: gen::vec_of(rng, 3, |r| gen::ident(r, 12)),
+        },
+        2 => Source::SynthFrames {
+            seed: rng.next_u64(),
+            count: rng.next_u32() % 100,
+            width: 1 + rng.next_u32() % 64,
+            height: 1 + rng.next_u32() % 64,
+        },
+        _ => {
+            let start = rng.below(1000);
+            Source::Range { start, end: start + rng.below(1000) }
+        }
+    };
+    let action = match rng.below(3) {
+        0 => Action::Collect,
+        1 => Action::Count,
+        _ => Action::SaveBag {
+            dir: gen::ident(rng, 16),
+            topic: gen::ident(rng, 12),
+            type_name: gen::ident(rng, 12),
+        },
+    };
+    TaskSpec {
+        job_id: rng.next_u64(),
+        task_id: rng.next_u32(),
+        attempt: rng.next_u32() % 4,
+        source,
+        ops: gen::vec_of(rng, 4, |r| OpCall::new(gen::ident(r, 10), gen::bytes(r, 32))),
+        action,
+    }
+}
+
+#[test]
+fn prop_played_record_roundtrip() {
+    check("played record roundtrip", |rng| PlayedRecord {
+        topic: format!("/{}", gen::ident(rng, 16)),
+        type_name: gen::ident(rng, 16),
+        time: Time::from_nanos(rng.next_u64()),
+        data: gen::bytes(rng, 1024),
+    }, |p| PlayedRecord::decode(&p.encode()).unwrap() == *p);
+}
+
+#[test]
+fn prop_message_roundtrips() {
+    check("image roundtrip", |rng| {
+        Image::synthetic(1 + rng.next_u32() % 48, 1 + rng.next_u32() % 48, rng.next_u64())
+    }, |img| Image::decode(&img.encode()).unwrap() == *img);
+    check("pointcloud roundtrip", |rng| {
+        PointCloud::synthetic(rng.below(512) as usize, rng.next_u64())
+    }, |pc| PointCloud::decode(&pc.encode()).unwrap() == *pc);
+}
+
+// ---------- bag invariants ----------
+
+fn random_bag_messages(rng: &mut Prng) -> Vec<(String, Time, Vec<u8>)> {
+    let topics = ["/camera", "/lidar", "/imu"];
+    gen::vec_of(rng, 40, |r| {
+        (
+            topics[r.below(3) as usize].to_string(),
+            Time::from_nanos(r.below(1_000_000)),
+            gen::bytes(r, 600),
+        )
+    })
+}
+
+#[test]
+fn prop_bag_preserves_every_message_in_time_order() {
+    check("bag roundtrip ordered", random_bag_messages, |msgs| {
+        let mut w = BagWriter::new(
+            MemoryChunkedFile::new(),
+            Compression::None,
+            2048, // small chunks: force multi-chunk bags
+        )
+        .unwrap();
+        for (topic, t, data) in msgs {
+            w.write_raw(topic, "raw", *t, data.clone()).unwrap();
+        }
+        let mut r = BagReader::open(w.finish().unwrap()).unwrap();
+        let played = r.play(None).unwrap();
+        if played.len() != msgs.len() {
+            return false;
+        }
+        // time order
+        if !played.windows(2).all(|p| p[0].time <= p[1].time) {
+            return false;
+        }
+        // multiset equality of (topic, time, payload)
+        let mut a: Vec<_> = msgs
+            .iter()
+            .map(|(tp, t, d)| (tp.clone(), *t, d.clone()))
+            .collect();
+        let mut b: Vec<_> = played
+            .into_iter()
+            .map(|m| (m.topic, m.time, m.data))
+            .collect();
+        a.sort();
+        b.sort();
+        a == b
+    });
+}
+
+#[test]
+fn prop_deflate_bag_equals_plain_bag_content() {
+    check_n("deflate == none content", 24, random_bag_messages, |msgs| {
+        let build = |c: Compression| {
+            let mut w = BagWriter::new(MemoryChunkedFile::new(), c, 4096).unwrap();
+            for (topic, t, data) in msgs {
+                w.write_raw(topic, "raw", *t, data.clone()).unwrap();
+            }
+            let mut r = BagReader::open(w.finish().unwrap()).unwrap();
+            r.play(None).unwrap()
+        };
+        build(Compression::None) == build(Compression::Deflate)
+    });
+}
+
+#[test]
+fn prop_corrupted_bag_errors_but_never_panics() {
+    check_n("bag corruption safety", 48, |rng| {
+        let msgs = random_bag_messages(rng);
+        let mut w =
+            BagWriter::new(MemoryChunkedFile::new(), Compression::None, 2048).unwrap();
+        for (topic, t, data) in &msgs {
+            w.write_raw(topic, "raw", *t, data.clone()).unwrap();
+        }
+        let bytes = w.finish().unwrap().to_vec();
+        let pos = rng.below(bytes.len() as u64) as usize;
+        let bit = 1u8 << rng.below(8);
+        (bytes, pos, bit, msgs.len())
+    }, |(bytes, pos, bit, n_msgs)| {
+        let mut corrupt = bytes.clone();
+        corrupt[*pos] ^= bit;
+        // Either the bag fails to open / play (detected corruption), or —
+        // if the flip hit dead padding — replays the exact message count.
+        match BagReader::open(MemoryChunkedFile::from_bytes(&corrupt)) {
+            Err(_) => true,
+            Ok(mut r) => match r.play(None) {
+                Err(_) => true,
+                Ok(msgs) => msgs.len() == *n_msgs,
+            },
+        }
+    });
+}
+
+#[test]
+fn prop_corrupted_pipe_stream_never_panics() {
+    check_n("pipe corruption safety", 64, |rng| {
+        let items = gen::vec_of(rng, 8, |r| PipeItem::Bytes(gen::bytes(r, 128)));
+        let buf = serialize_stream(&items);
+        let pos = rng.below(buf.len() as u64) as usize;
+        (buf, pos)
+    }, |(buf, pos)| {
+        let mut corrupt = buf.clone();
+        corrupt[*pos] ^= 0xff;
+        // must not panic; Ok is allowed when the flip is benign
+        let _ = deserialize_stream(&corrupt);
+        true
+    });
+}
+
+#[test]
+fn prop_truncated_task_spec_never_panics() {
+    check_n("spec truncation safety", 64, |rng| {
+        let spec = random_spec(rng);
+        let buf = spec.encode();
+        let cut = rng.below(buf.len() as u64) as usize;
+        (buf, cut)
+    }, |(buf, cut)| {
+        let _ = TaskSpec::decode(&buf[..*cut]);
+        true
+    });
+}
+
+// ---------- engine invariants ----------
+
+#[test]
+fn prop_collect_is_partition_order_independent_multiset() {
+    let sc = SimContext::local(3);
+    check_n("parallelize/collect multiset identity", 16, |rng| {
+        let records = gen::vec_of(rng, 50, |r| gen::bytes(r, 40));
+        let partitions = 1 + rng.below(7) as usize;
+        (records, partitions)
+    }, |(records, partitions)| {
+        let mut out = sc.parallelize(records.clone(), *partitions).collect().unwrap();
+        let mut expect = records.clone();
+        out.sort();
+        expect.sort();
+        out == expect
+    });
+}
+
+#[test]
+fn prop_count_equals_collect_len() {
+    let sc = SimContext::local(2);
+    check_n("count == collect.len", 12, |rng| {
+        (rng.below(500), 1 + rng.below(6) as usize)
+    }, |(n, _parts)| {
+        let rdd = sc.range(*n);
+        rdd.count().unwrap() == rdd.collect().unwrap().len() as u64
+    });
+}
+
+#[test]
+fn prop_scenario_and_result_codecs_total() {
+    check("scenario codec", |rng| {
+        let speed = rng.range_f64(5.0, 25.0);
+        av_simd::sim::random_scenario(rng, speed)
+    }, |s| {
+        av_simd::sim::decode_scenario(&av_simd::sim::encode_scenario(s)).unwrap() == *s
+    });
+}
+
+// ---------- dynamics invariants ----------
+
+#[test]
+fn prop_dynamics_speed_bounded_and_yaw_finite() {
+    use av_simd::msg::ControlCommand;
+    use av_simd::sim::{step, VehicleParams, VehicleState};
+    let p = VehicleParams::default();
+    check("dynamics bounds", |rng| {
+        let s = VehicleState::at(
+            rng.range_f64(-100.0, 100.0),
+            rng.range_f64(-100.0, 100.0),
+            rng.range_f64(-3.2, 3.2),
+            rng.range_f64(0.0, 40.0),
+        );
+        let cmd = ControlCommand {
+            accel: rng.range_f64(-20.0, 20.0),
+            steer: rng.range_f64(-2.0, 2.0),
+        };
+        (s, cmd)
+    }, |(s, cmd)| {
+        let next = step(s, cmd, &p, 0.05);
+        next.v >= 0.0
+            && next.v <= p.max_speed
+            && next.pose.x.is_finite()
+            && next.pose.y.is_finite()
+            && next.pose.yaw.is_finite()
+    });
+}
+
+#[test]
+fn prop_collision_is_symmetric_and_reflexive() {
+    use av_simd::sim::{collides, VehicleParams, VehicleState};
+    let p = VehicleParams::default();
+    check("collision symmetry", |rng| {
+        let a = VehicleState::at(
+            rng.range_f64(-10.0, 10.0),
+            rng.range_f64(-10.0, 10.0),
+            rng.range_f64(-3.2, 3.2),
+            0.0,
+        );
+        let b = VehicleState::at(
+            rng.range_f64(-10.0, 10.0),
+            rng.range_f64(-10.0, 10.0),
+            rng.range_f64(-3.2, 3.2),
+            0.0,
+        );
+        (a, b)
+    }, |(a, b)| {
+        collides(a, b, &p) == collides(b, a, &p) && collides(a, a, &p)
+    });
+}
+
+// ---------- storage / cache invariants ----------
+
+#[test]
+fn prop_blockstore_roundtrip_any_block_size() {
+    let dir = std::env::temp_dir().join(format!(
+        "av_simd_prop_store_{}_{:x}",
+        std::process::id(),
+        av_simd::util::now_nanos()
+    ));
+    let store = av_simd::storage::BlockStore::open(&dir).unwrap().with_block_size(1024);
+    check_n("blockstore roundtrip", 24, |rng| {
+        // object names must be path-safe (no '/'), per BlockStore rules
+        (gen::ident(rng, 12).replace('/', "_"), gen::bytes(rng, 8192))
+    }, |(name, data)| {
+        store.put(name, data).unwrap();
+        store.get(name).unwrap() == *data
+    });
+    std::fs::remove_dir_all(&dir).ok();
+}
+
+#[test]
+fn prop_bag_cache_never_exceeds_capacity() {
+    use av_simd::bag::BagCache;
+    check_n("cache capacity invariant", 16, |rng| {
+        let capacity = 1000 + rng.below(4000);
+        let ops = gen::vec_of(rng, 60, |r| {
+            (gen::ident(r, 4), r.below(900) as usize, r.next_bool(0.3))
+        });
+        (capacity, ops)
+    }, |(capacity, ops)| {
+        let cache = BagCache::new(*capacity);
+        for (key, size, is_get) in ops {
+            if *is_get {
+                let _ = cache.get(key);
+            } else {
+                let _ = cache.put(key, vec![0u8; *size]);
+            }
+            if cache.used_bytes() > *capacity {
+                return false;
+            }
+        }
+        true
+    });
+}
+
+#[test]
+fn prop_rpc_frames_roundtrip() {
+    use av_simd::engine::rpc::{read_msg, write_msg, RpcMsg};
+    check("rpc roundtrip", |rng| match rng.below(6) {
+        0 => RpcMsg::RunTask(gen::bytes(rng, 512)),
+        1 => RpcMsg::TaskOk(gen::bytes(rng, 512)),
+        2 => RpcMsg::TaskErr(gen::ident(rng, 64)),
+        3 => RpcMsg::Ping,
+        4 => RpcMsg::Pong,
+        _ => RpcMsg::Shutdown,
+    }, |msg| {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, msg).unwrap();
+        let mut cur = &buf[..];
+        read_msg(&mut cur).unwrap().unwrap() == *msg
+    });
+}
+
+#[test]
+fn prop_task_output_roundtrip() {
+    check("task output roundtrip", |rng| {
+        if rng.next_bool(0.5) {
+            TaskOutput::Records(gen::vec_of(rng, 10, |r| gen::bytes(r, 100)))
+        } else {
+            TaskOutput::Count(rng.next_u64())
+        }
+    }, |o| TaskOutput::decode(&o.encode()).unwrap() == *o);
+}
