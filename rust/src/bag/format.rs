@@ -132,7 +132,7 @@ pub fn encode_record(rec_type: u8, payload: &[u8]) -> Vec<u8> {
     w.put_u8(rec_type);
     w.put_u32(payload.len() as u32);
     w.put_raw(payload);
-    w.put_u32(crc32fast::hash(payload));
+    w.put_u32(crate::util::crc32::hash(payload));
     w.into_vec()
 }
 
@@ -144,7 +144,7 @@ pub fn decode_record(buf: &[u8]) -> Result<(u8, &[u8], usize)> {
     let len = r.get_u32()? as usize;
     let payload = r.get_raw(len)?;
     let crc = r.get_u32()?;
-    let actual = crc32fast::hash(payload);
+    let actual = crate::util::crc32::hash(payload);
     if crc != actual {
         return Err(Error::BagFormat(format!(
             "record type {rec_type} CRC mismatch: stored {crc:#10x}, computed {actual:#10x}"
@@ -167,12 +167,10 @@ pub fn encode_chunk(messages: &[MessageRecord], compression: Compression) -> Res
     let (codec_body, raw_len) = match compression {
         Compression::None => (raw, 0u32),
         Compression::Deflate => {
-            use std::io::Write;
+            // Deflate-class LZ from util::lz (no flate2 in the offline
+            // crate set); the codec byte in the chunk header stays 1.
             let raw_len = raw.len() as u32;
-            let mut enc =
-                flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
-            enc.write_all(&raw)?;
-            (enc.finish()?, raw_len)
+            (crate::util::lz::compress(&raw), raw_len)
         }
     };
     let mut payload = ByteWriter::with_capacity(codec_body.len() + 5);
@@ -191,10 +189,7 @@ pub fn decode_chunk(payload: &[u8]) -> Result<Vec<MessageRecord>> {
     let raw: Vec<u8> = match compression {
         Compression::None => body_slice.to_vec(),
         Compression::Deflate => {
-            use std::io::Read;
-            let mut dec = flate2::read::DeflateDecoder::new(body_slice);
-            let mut out = Vec::with_capacity(raw_len);
-            dec.read_to_end(&mut out)?;
+            let out = crate::util::lz::decompress(body_slice, raw_len)?;
             if out.len() != raw_len {
                 return Err(Error::BagFormat(format!(
                     "chunk decompressed to {} bytes, index said {raw_len}",

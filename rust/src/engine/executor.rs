@@ -6,7 +6,7 @@
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{Action, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 use crate::bag::{BagReader, BagWriter, Compression, MemoryChunkedFile};
-use crate::error::Result;
+use crate::error::{Error, Result};
 use crate::msg::{Image, Message, Time};
 
 /// Materialize a partition's input records from its source.
@@ -49,6 +49,17 @@ pub fn load_source(ctx: &TaskCtx, source: &Source) -> Result<Vec<Record>> {
         Source::Range { start, end } => {
             Ok((*start..*end).map(|v| v.to_le_bytes().to_vec()).collect())
         }
+        Source::Scenarios { scenarios } => {
+            // Validate the shard up front: a poisoned scenario record is
+            // deterministic data corruption, so it must fail the task
+            // without a retry (Error::Sim is non-retryable).
+            for (i, s) in scenarios.iter().enumerate() {
+                crate::sim::decode_scenario(s).map_err(|e| {
+                    Error::Sim(format!("scenario shard record {i} is poisoned: {e}"))
+                })?;
+            }
+            Ok(scenarios.clone())
+        }
     }
 }
 
@@ -72,6 +83,17 @@ pub fn run_task(ctx: &TaskCtx, registry: &OpRegistry, spec: &TaskSpec) -> Result
             let path = format!("{dir}/part-{:05}.bag", spec.task_id);
             store.persist(&path)?;
             Ok(TaskOutput::Records(vec![path.into_bytes()]))
+        }
+        Action::Episodes => {
+            for (i, rec) in records.iter().enumerate() {
+                crate::sim::decode_result(rec).map_err(|e| {
+                    Error::Sim(format!(
+                        "episodes action: record {i} is not an EpisodeResult \
+                         (is `run_episode` missing from the op chain?): {e}"
+                    ))
+                })?;
+            }
+            Ok(TaskOutput::Episodes(records))
         }
     }
 }
@@ -154,6 +176,45 @@ mod tests {
         assert_eq!(misses, 1, "first open misses");
         assert_eq!(hits, 1, "second open hits the memory cache");
         std::fs::remove_file(&path).ok();
+    }
+
+    #[test]
+    fn scenario_source_validates_shard() {
+        let reg = OpRegistry::with_builtins();
+        crate::sim::register_sim_ops(&reg);
+        let s = crate::sim::scenario_matrix(12.0)[0];
+        let good = TaskSpec {
+            job_id: 1,
+            task_id: 0,
+            attempt: 0,
+            source: Source::Scenarios { scenarios: vec![crate::sim::encode_scenario(&s)] },
+            ops: vec![OpCall::new("run_scenario", vec![])],
+            action: Action::Count,
+        };
+        assert_eq!(run_task(&ctx(), &reg, &good).unwrap(), TaskOutput::Count(1));
+
+        let poisoned = TaskSpec {
+            source: Source::Scenarios { scenarios: vec![vec![0xff; 11]] },
+            ..good
+        };
+        let err = run_task(&ctx(), &reg, &poisoned).unwrap_err();
+        assert!(err.to_string().contains("poisoned"), "{err}");
+        assert!(!err.is_retryable(), "corrupt shard must not be retried");
+    }
+
+    #[test]
+    fn episodes_action_rejects_non_results() {
+        let reg = OpRegistry::with_builtins();
+        let spec = TaskSpec {
+            job_id: 1,
+            task_id: 0,
+            attempt: 0,
+            source: Source::Inline { records: vec![vec![1, 2, 3]] },
+            ops: vec![],
+            action: Action::Episodes,
+        };
+        let err = run_task(&ctx(), &reg, &spec).unwrap_err();
+        assert!(err.to_string().contains("EpisodeResult"), "{err}");
     }
 
     #[test]

@@ -30,6 +30,11 @@ pub enum Source {
     SynthFrames { seed: u64, count: u32, width: u32, height: u32 },
     /// Integer range [start, end); records are 8-byte LE u64.
     Range { start: u64, end: u64 },
+    /// One shard of a scenario sweep: records are encoded
+    /// [`crate::sim::Scenario`]s (see `sim::sweep`). Validated on load so
+    /// a poisoned shard fails fast on the worker instead of deep inside
+    /// an episode.
+    Scenarios { scenarios: Vec<Record> },
 }
 
 impl Source {
@@ -62,6 +67,13 @@ impl Source {
                 w.put_u64(*start);
                 w.put_u64(*end);
             }
+            Source::Scenarios { scenarios } => {
+                w.put_u8(4);
+                w.put_varint(scenarios.len() as u64);
+                for s in scenarios {
+                    w.put_bytes(s);
+                }
+            }
         }
     }
 
@@ -91,6 +103,14 @@ impl Source {
                 height: r.get_u32()?,
             }),
             3 => Ok(Source::Range { start: r.get_u64()?, end: r.get_u64()? }),
+            4 => {
+                let n = r.get_varint()? as usize;
+                let mut scenarios = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    scenarios.push(r.get_bytes_vec()?);
+                }
+                Ok(Source::Scenarios { scenarios })
+            }
             other => Err(Error::Engine(format!("unknown source tag {other}"))),
         }
     }
@@ -104,6 +124,7 @@ impl Source {
                 format!("synth[{count} x {width}x{height}]")
             }
             Source::Range { start, end } => format!("range[{start}..{end})"),
+            Source::Scenarios { scenarios } => format!("scenarios[{}]", scenarios.len()),
         }
     }
 }
@@ -140,6 +161,11 @@ pub enum Action {
     /// Write records into a bag file under `dir` (the "persist to HDFS"
     /// path); returns the written path as a single record.
     SaveBag { dir: String, topic: String, type_name: String },
+    /// Terminal for scenario sweeps: validates that every record is a
+    /// decodable `EpisodeResult` (i.e. the op chain actually ran the
+    /// episodes) and returns them as [`TaskOutput::Episodes`], preserving
+    /// record order.
+    Episodes,
 }
 
 impl Action {
@@ -153,6 +179,7 @@ impl Action {
                 w.put_str(topic);
                 w.put_str(type_name);
             }
+            Action::Episodes => w.put_u8(3),
         }
     }
 
@@ -165,6 +192,7 @@ impl Action {
                 topic: r.get_str()?,
                 type_name: r.get_str()?,
             }),
+            3 => Ok(Action::Episodes),
             other => Err(Error::Engine(format!("unknown action tag {other}"))),
         }
     }
@@ -217,6 +245,9 @@ impl TaskSpec {
 pub enum TaskOutput {
     Records(Vec<Record>),
     Count(u64),
+    /// Encoded `EpisodeResult`s, in the shard's scenario order (produced
+    /// by [`Action::Episodes`]).
+    Episodes(Vec<Record>),
 }
 
 impl TaskOutput {
@@ -234,6 +265,13 @@ impl TaskOutput {
                 w.put_u8(1);
                 w.put_u64(*n);
             }
+            TaskOutput::Episodes(rs) => {
+                w.put_u8(2);
+                w.put_varint(rs.len() as u64);
+                for r in rs {
+                    w.put_bytes(r);
+                }
+            }
         }
         w.into_vec()
     }
@@ -250,6 +288,14 @@ impl TaskOutput {
                 Ok(TaskOutput::Records(rs))
             }
             1 => Ok(TaskOutput::Count(r.get_u64()?)),
+            2 => {
+                let n = r.get_varint()? as usize;
+                let mut rs = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    rs.push(r.get_bytes_vec()?);
+                }
+                Ok(TaskOutput::Episodes(rs))
+            }
             other => Err(Error::Engine(format!("unknown output tag {other}"))),
         }
     }
@@ -317,6 +363,7 @@ mod tests {
             Source::BagFile { path: "p".into(), topics: vec![] },
             Source::SynthFrames { seed: 7, count: 10, width: 64, height: 48 },
             Source::Range { start: 5, end: 50 },
+            Source::Scenarios { scenarios: vec![vec![0, 1, 2], vec![]] },
         ] {
             let s = TaskSpec { source: source.clone(), ..spec() };
             assert_eq!(TaskSpec::decode(&s.encode()).unwrap().source, source);
@@ -333,6 +380,7 @@ mod tests {
                 topic: "/t".into(),
                 type_name: "T".into(),
             },
+            Action::Episodes,
         ] {
             let s = TaskSpec { action: action.clone(), ..spec() };
             assert_eq!(TaskSpec::decode(&s.encode()).unwrap().action, action);
@@ -344,6 +392,7 @@ mod tests {
         for out in [
             TaskOutput::Records(vec![vec![1, 2], vec![], vec![9; 100]]),
             TaskOutput::Count(12345),
+            TaskOutput::Episodes(vec![vec![3; 40], vec![7; 40]]),
         ] {
             assert_eq!(TaskOutput::decode(&out.encode()).unwrap(), out);
         }

@@ -29,15 +29,31 @@ pub struct StandaloneCluster {
 
 impl StandaloneCluster {
     /// Spawn `n` worker processes on sequential ports starting at
-    /// `base_port` and wait until all are reachable.
+    /// `base_port` and wait until all are reachable. Workers are copies
+    /// of the current executable (`av-simd worker ...`); from an example
+    /// or test binary — which has no `worker` subcommand — use
+    /// [`StandaloneCluster::launch_program`] with the launcher path.
     pub fn launch(n: usize, base_port: u16, artifact_dir: &str) -> Result<Self> {
-        assert!(n >= 1);
         let exe = std::env::current_exe()
             .map_err(|e| Error::Engine(format!("cannot locate current exe: {e}")))?;
+        Self::launch_program(&exe, n, base_port, artifact_dir)
+    }
+
+    /// Like [`StandaloneCluster::launch`], but spawning an explicit
+    /// worker binary (anything that serves `worker --listen ADDR --id N
+    /// --artifacts DIR`, normally `target/release/av-simd`).
+    pub fn launch_program(
+        program: impl AsRef<std::path::Path>,
+        n: usize,
+        base_port: u16,
+        artifact_dir: &str,
+    ) -> Result<Self> {
+        assert!(n >= 1);
+        let exe = program.as_ref();
         let mut workers = Vec::with_capacity(n);
         for i in 0..n {
             let addr = format!("127.0.0.1:{}", base_port + i as u16);
-            let child = Command::new(&exe)
+            let child = Command::new(exe)
                 .args([
                     "worker",
                     "--listen",

@@ -41,7 +41,8 @@ pub fn run_job(
             match res {
                 Ok(out) => outputs[pos] = Some(out),
                 Err(e) => {
-                    log::warn!(
+                    crate::logmsg!(
+                        "warn",
                         "job {job_id} task {} attempt {} failed: {e}",
                         task.task_id,
                         task.attempt

@@ -18,7 +18,7 @@ use std::net::{TcpListener, TcpStream};
 pub fn serve(addr: &str, worker_id: usize, registry: OpRegistry, artifact_dir: &str) -> Result<()> {
     let listener = TcpListener::bind(addr)
         .map_err(|e| Error::Engine(format!("worker {worker_id} bind {addr}: {e}")))?;
-    log::info!("worker {worker_id} listening on {addr}");
+    crate::logmsg!("info", "worker {worker_id} listening on {addr}");
     let ctx = TaskCtx::new(worker_id, artifact_dir);
     for conn in listener.incoming() {
         let stream = conn.map_err(Error::Io)?;
@@ -26,7 +26,7 @@ pub fn serve(addr: &str, worker_id: usize, registry: OpRegistry, artifact_dir: &
             Ok(ShutdownKind::Graceful) => return Ok(()),
             Ok(ShutdownKind::Disconnect) => continue, // driver may reconnect
             Err(e) => {
-                log::warn!("worker {worker_id} connection error: {e}");
+                crate::logmsg!("warn", "worker {worker_id} connection error: {e}");
                 continue;
             }
         }

@@ -93,12 +93,6 @@ impl From<std::io::Error> for Error {
     }
 }
 
-impl From<xla::Error> for Error {
-    fn from(e: xla::Error) -> Self {
-        Error::Runtime(e.to_string())
-    }
-}
-
 impl From<String> for Error {
     fn from(m: String) -> Self {
         Error::Other(m)

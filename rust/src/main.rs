@@ -8,6 +8,9 @@
 //! * `perceive --dir D [--workers N] [--standalone]` — distributed image
 //!   recognition over a bag directory (the Fig 7 workload).
 //! * `scenarios [--workers N]` — distributed barrier-car matrix (Fig 1).
+//! * `sweep [--workers N] [--standalone] ...` — parameterized scenario
+//!   sweep (ego-speed grid × dt × seed × the Fig-1 matrix) sharded over
+//!   the cluster, aggregated into a `SweepReport`.
 //! * `info` — registries, artifacts, config.
 
 use av_simd::cli::Args;
@@ -36,6 +39,7 @@ fn run(raw: &[String]) -> Result<()> {
         "datagen" => cmd_datagen(&args),
         "perceive" => cmd_perceive(&args),
         "scenarios" => cmd_scenarios(&args),
+        "sweep" => cmd_sweep(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             print!("{HELP}");
@@ -59,6 +63,9 @@ COMMANDS:
   datagen     --dir D [--bags N] [--frames F] [--size PX] [--seed S]
   perceive    --dir D [--workers N] [--standalone] [--base-port P]
   scenarios   [--workers N] [--ego-speed V]
+  sweep       [--workers N] [--standalone] [--base-port P] [--shard-size N]
+              [--ego-speeds A,B,..] [--dts A,B,..] [--seeds A,B,..]
+              [--jitter F] [--horizon S] [--worst K] [--record-worst DIR]
   info        [--artifacts DIR]
 ";
 
@@ -195,6 +202,83 @@ fn cmd_scenarios(args: &Args) -> Result<()> {
         println!("failed: {}", failed.join(", "));
     }
     sc.shutdown();
+    Ok(())
+}
+
+fn parse_f64_list(args: &Args, name: &str, default: &[f64]) -> Result<Vec<f64>> {
+    match args.get(name) {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse::<f64>())
+            .collect::<std::result::Result<Vec<f64>, _>>()
+            .map_err(|_| av_simd::err!(Config, "--{name} expects comma-separated numbers, got '{v}'")),
+    }
+}
+
+fn parse_u64_list(args: &Args, name: &str, default: &[u64]) -> Result<Vec<u64>> {
+    match args.get(name) {
+        None => Ok(default.to_vec()),
+        Some(v) => v
+            .split(',')
+            .map(|s| s.trim().parse::<u64>())
+            .collect::<std::result::Result<Vec<u64>, _>>()
+            .map_err(|_| av_simd::err!(Config, "--{name} expects comma-separated integers, got '{v}'")),
+    }
+}
+
+fn cmd_sweep(args: &Args) -> Result<()> {
+    use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
+    use av_simd::sim::{SweepDriver, SweepSpec};
+
+    let defaults = SweepSpec::default();
+    let spec = SweepSpec {
+        ego_speeds: parse_f64_list(args, "ego-speeds", &defaults.ego_speeds)?,
+        dts: parse_f64_list(args, "dts", &defaults.dts)?,
+        seeds: parse_u64_list(args, "seeds", &defaults.seeds)?,
+        speed_jitter: match args.get("jitter") {
+            None => defaults.speed_jitter,
+            Some(v) => v
+                .parse()
+                .map_err(|_| av_simd::err!(Config, "--jitter expects a number, got '{v}'"))?,
+        },
+        horizon: match args.get("horizon") {
+            None => defaults.horizon,
+            Some(v) => v
+                .parse()
+                .map_err(|_| av_simd::err!(Config, "--horizon expects a number, got '{v}'"))?,
+        },
+        shard_size: args.get_usize("shard-size", defaults.shard_size)?,
+        worst_k: args.get_usize("worst", defaults.worst_k)?,
+        ..defaults
+    };
+
+    let workers = args.get_usize("workers", 4)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let cluster: Box<dyn Cluster> = if args.has("standalone") {
+        let base_port = args.get_usize("base-port", 7077)? as u16;
+        Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
+    } else {
+        Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
+    };
+
+    let driver = SweepDriver::new(spec);
+    println!(
+        "sweep: {} cases in {} shards on {} {} workers",
+        driver.spec().case_count(),
+        driver.spec().shards().len(),
+        cluster.workers(),
+        cluster.backend()
+    );
+    let report = driver.run(cluster.as_ref())?;
+    print!("{}", report.render());
+    if let Some(dir) = args.get("record-worst") {
+        let paths = driver.record_worst(&report, dir)?;
+        for p in paths {
+            println!("recorded {p}");
+        }
+    }
+    cluster.shutdown();
     Ok(())
 }
 

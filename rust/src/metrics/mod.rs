@@ -24,6 +24,20 @@ impl Counter {
     }
 }
 
+/// A last-value-wins gauge (pass rates, queue depths, worker counts).
+#[derive(Default)]
+pub struct Gauge(AtomicU64);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
 /// Fixed-bucket log-scale duration histogram (µs .. minutes).
 pub struct Histogram {
     /// bucket i counts durations < 10^(i) µs … simple log10 buckets.
@@ -68,6 +82,7 @@ impl Histogram {
 #[derive(Default)]
 pub struct Metrics {
     counters: Mutex<BTreeMap<String, std::sync::Arc<Counter>>>,
+    gauges: Mutex<BTreeMap<String, std::sync::Arc<Gauge>>>,
     histograms: Mutex<BTreeMap<String, std::sync::Arc<Histogram>>>,
 }
 
@@ -80,6 +95,15 @@ impl Metrics {
 
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
+            .lock()
+            .unwrap()
+            .entry(name.to_string())
+            .or_default()
+            .clone()
+    }
+
+    pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
+        self.gauges
             .lock()
             .unwrap()
             .entry(name.to_string())
@@ -101,6 +125,9 @@ impl Metrics {
         let mut out = String::new();
         for (name, c) in self.counters.lock().unwrap().iter() {
             out.push_str(&format!("{name} {}\n", c.get()));
+        }
+        for (name, g) in self.gauges.lock().unwrap().iter() {
+            out.push_str(&format!("{name} {}\n", g.get()));
         }
         for (name, h) in self.histograms.lock().unwrap().iter() {
             out.push_str(&format!(
@@ -149,13 +176,25 @@ mod tests {
     }
 
     #[test]
-    fn report_renders_both_kinds() {
+    fn report_renders_all_kinds() {
         let m = Metrics::default();
         m.counter("a").inc();
+        m.gauge("g").set(7);
         m.histogram("b").observe(Duration::from_micros(100));
         let r = m.report();
         assert!(r.contains("a 1"));
+        assert!(r.contains("g 7"));
         assert!(r.contains("b_count 1"));
+    }
+
+    #[test]
+    fn gauge_is_last_value_wins() {
+        let m = Metrics::default();
+        let g = m.gauge("depth");
+        g.set(5);
+        g.set(3);
+        assert_eq!(g.get(), 3);
+        assert_eq!(m.gauge("depth").get(), 3, "same name → same gauge");
     }
 
     #[test]

@@ -121,8 +121,9 @@ impl Message for Image {
     }
 }
 
-/// JPEG-less "compressed" image: deflate-compressed RGB. Exists so bags
-/// can exercise the compression path like `sensor_msgs/CompressedImage`.
+/// JPEG-less "compressed" image: LZ-compressed RGB (`util::lz`; the
+/// offline crate set has no `flate2`). Exists so bags can exercise the
+/// compression path like `sensor_msgs/CompressedImage`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressedImage {
     pub header: Header,
@@ -132,26 +133,26 @@ pub struct CompressedImage {
 }
 
 impl CompressedImage {
-    /// Compress a raw image with deflate.
+    /// Compress a raw RGB image.
     pub fn compress(img: &Image) -> Result<Self> {
-        use std::io::Write;
-        let mut enc =
-            flate2::write::DeflateEncoder::new(Vec::new(), flate2::Compression::fast());
-        enc.write_all(&img.data)?;
+        if img.format != PixelFormat::Rgb8 {
+            return Err(Error::Corrupt(
+                "CompressedImage::compress expects an Rgb8 image".into(),
+            ));
+        }
+        img.validate()?;
         Ok(Self {
             header: img.header.clone(),
             width: img.width,
             height: img.height,
-            payload: enc.finish()?,
+            payload: crate::util::lz::compress(&img.data),
         })
     }
 
     /// Decompress back to a raw RGB image.
     pub fn decompress(&self) -> Result<Image> {
-        use std::io::Read;
-        let mut dec = flate2::read::DeflateDecoder::new(&self.payload[..]);
-        let mut data = Vec::new();
-        dec.read_to_end(&mut data)?;
+        let expect = self.width as usize * self.height as usize * 3;
+        let data = crate::util::lz::decompress(&self.payload, expect)?;
         let img = Image {
             header: self.header.clone(),
             width: self.width,

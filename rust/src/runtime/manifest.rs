@@ -76,6 +76,14 @@ impl Manifest {
                     i + 1
                 )));
             }
+            // Zero dims would make the runtime's row arithmetic index out
+            // of bounds; a shape with a 0 is always a manifest bug.
+            if in_dims.iter().chain(&out_dims).any(|&d| d == 0) {
+                return Err(Error::Runtime(format!(
+                    "manifest line {}: zero dim in shape for {name}",
+                    i + 1
+                )));
+            }
             models.insert(name.clone(), ModelSig { name, in_dims, out_dims });
         }
         Ok(Self { models })
@@ -136,6 +144,8 @@ mod tests {
         assert!(Manifest::parse("no_arrow 1 2 3\n").is_err());
         assert!(Manifest::parse("bad_dim 1 x -> 1\n").is_err());
         assert!(Manifest::parse("empty_out 1 ->\n").is_err());
+        assert!(Manifest::parse("zero_in 0 4 -> 1 2\n").is_err());
+        assert!(Manifest::parse("zero_out 1 4 -> 1 0\n").is_err());
     }
 
     #[test]

@@ -1,29 +1,76 @@
-//! PJRT runtime: load AOT-compiled HLO artifacts and execute them from
-//! the Rust hot path.
+//! Model runtime: execute the AOT model signatures from the Rust hot
+//! path.
 //!
-//! The compile path is Python (`python/compile/aot.py`, build time only);
-//! this module is the run path: `PjRtClient::cpu()` →
-//! `HloModuleProto::from_text_file` → `client.compile` → `execute`.
-//! One [`ModelRuntime`] per process caches compiled executables by
-//! artifact name; [`ModelPool`] hands out per-thread handles.
+//! The paper's platform runs DNN compute through PJRT-loaded HLO
+//! artifacts (compile path: `python/compile/aot.py`, build time only).
+//! The offline crate set has no PJRT bindings, so this module executes a
+//! **deterministic reference network** per manifest entry instead: a
+//! seeded random-projection + tanh layer with exactly the manifest's
+//! input/output shapes. The call surface (`ModelRuntime`,
+//! [`CompiledModel::run_f32`], [`thread_runtime`]) is identical to the
+//! PJRT path, and the substitution preserves every property the platform
+//! relies on:
+//!
+//! * deterministic across threads, processes and cluster backends
+//!   (bitwise — fixed f32 evaluation order, weights derived from the
+//!   model family name only);
+//! * batch variants agree with single-row variants row-for-row
+//!   (`classifier_b8` row *i* == `classifier_b1` on row *i*);
+//! * outputs depend on every input element (input-sensitive logits).
 
 pub mod manifest;
 
 pub use manifest::{Manifest, ModelSig};
 
 use crate::error::{Error, Result};
+use crate::util::prng::Prng;
 use std::cell::RefCell;
 use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::rc::Rc;
 
-/// A compiled model executable + its I/O signature.
+/// Weight-table size for the reference projection (two coprime tables
+/// keep the effective weight matrix non-degenerate without storing
+/// in_dims × out_dims floats per model).
+const TAB_A: usize = 521;
+const TAB_B: usize = 263;
+
+/// A loaded model: manifest signature + reference-network weights.
 pub struct CompiledModel {
-    exe: xla::PjRtLoadedExecutable,
     pub sig: ModelSig,
+    wa: Vec<f32>,
+    wb: Vec<f32>,
+}
+
+/// Batch variants of one model (`classifier_b1`, `classifier_b8`) must
+/// compute the same function per row, so weights are seeded from the
+/// family name with the `_b<N>` suffix stripped.
+fn family(name: &str) -> &str {
+    match name.rsplit_once("_b") {
+        Some((fam, suffix)) if !suffix.is_empty() && suffix.bytes().all(|b| b.is_ascii_digit()) => {
+            fam
+        }
+        _ => name,
+    }
+}
+
+fn fnv1a(s: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in s.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100_0000_01b3);
+    }
+    h
 }
 
 impl CompiledModel {
+    fn new(sig: ModelSig) -> Self {
+        let mut rng = Prng::new(fnv1a(family(&sig.name)));
+        let wa = (0..TAB_A).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        let wb = (0..TAB_B).map(|_| (rng.next_f64() * 2.0 - 1.0) as f32).collect();
+        Self { sig, wa, wb }
+    }
+
     /// Execute on a flat f32 input of the signature's input shape.
     /// Returns the flat f32 output.
     pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
@@ -36,12 +83,26 @@ impl CompiledModel {
                 input.len()
             )));
         }
-        let dims: Vec<i64> = self.sig.in_dims.iter().map(|&d| d as i64).collect();
-        let lit = xla::Literal::vec1(input).reshape(&dims)?;
-        let result = self.exe.execute::<xla::Literal>(&[lit])?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True → 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<f32>()?)
+        let batch = self.sig.batch().max(1);
+        let in_row = self.sig.in_elems_per_row().max(1);
+        let out_row = self.sig.out_elems_per_row().max(1);
+        let mut out = Vec::with_capacity(batch * out_row);
+        for r in 0..batch {
+            let row = &input[r * in_row..(r + 1) * in_row];
+            for j in 0..out_row {
+                // acc = Σ_i x_i · A[(31·i + j) mod |A|] · B[(i + 7·j) mod |B|]
+                // — a dense pseudo-random projection evaluated in a fixed
+                // order so results are bitwise reproducible everywhere.
+                let mut acc = self.wb[j % TAB_B];
+                for (i, &x) in row.iter().enumerate() {
+                    let a = self.wa[(i.wrapping_mul(31).wrapping_add(j)) % TAB_A];
+                    let b = self.wb[(i.wrapping_add(j.wrapping_mul(7))) % TAB_B];
+                    acc += x * a * b;
+                }
+                out.push((acc * 0.25).tanh());
+            }
+        }
+        Ok(out)
     }
 
     /// Output element count.
@@ -50,55 +111,47 @@ impl CompiledModel {
     }
 }
 
-/// Process-wide PJRT client + executable cache.
+/// Process-wide model cache rooted at one artifact directory.
 pub struct ModelRuntime {
-    client: xla::PjRtClient,
     artifact_dir: PathBuf,
     manifest: Manifest,
     cache: RefCell<HashMap<String, Rc<CompiledModel>>>,
 }
 
 impl ModelRuntime {
-    /// Create a CPU PJRT client and read the artifact manifest.
+    /// Read the artifact manifest and prepare the executable cache.
     pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Self> {
         let artifact_dir = artifact_dir.as_ref().to_path_buf();
         let manifest = Manifest::load(&artifact_dir.join("manifest.txt"))?;
-        let client = xla::PjRtClient::cpu()?;
-        Ok(Self { client, artifact_dir, manifest, cache: RefCell::new(HashMap::new()) })
+        Ok(Self { artifact_dir, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }
 
-    /// Load + compile (or fetch cached) a model by artifact name, e.g.
+    /// Directory the runtime was rooted at.
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    /// Load (or fetch cached) a model by artifact name, e.g.
     /// `"classifier_b8"`.
     pub fn model(&self, name: &str) -> Result<Rc<CompiledModel>> {
         if let Some(m) = self.cache.borrow().get(name) {
             return Ok(m.clone());
         }
         let sig = self.manifest.get(name)?.clone();
-        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
-        let path_str = path
-            .to_str()
-            .ok_or_else(|| Error::Runtime(format!("bad artifact path {path:?}")))?;
-        let proto = xla::HloModuleProto::from_text_file(path_str).map_err(|e| {
-            Error::Runtime(format!(
-                "load artifact {path_str}: {e} (run `make artifacts`?)"
-            ))
-        })?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self.client.compile(&comp)?;
-        let model = Rc::new(CompiledModel { exe, sig });
+        let model = Rc::new(CompiledModel::new(sig));
         self.cache.borrow_mut().insert(name.to_string(), model.clone());
         Ok(model)
     }
 }
 
-// PJRT handles in the `xla` crate are Rc-based (not Send/Sync), so the
-// runtime is per-thread: each executor thread (local mode) or worker
-// process (standalone mode) owns one client + executable cache — the
-// same one-runtime-per-executor layout Spark workers have.
+// Model handles are Rc-based (matching the PJRT bindings they stand in
+// for), so the runtime is per-thread: each executor thread (local mode)
+// or worker process (standalone mode) owns one cache — the same
+// one-runtime-per-executor layout Spark workers have.
 thread_local! {
     static THREAD_RT: RefCell<Option<(String, Rc<ModelRuntime>)>> = const { RefCell::new(None) };
 }
@@ -127,11 +180,10 @@ mod tests {
     use super::*;
 
     fn artifact_dir() -> String {
-        // tests run from the crate root; artifacts/ is built by `make artifacts`
         let d = std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
         assert!(
             std::path::Path::new(&d).join("manifest.txt").exists(),
-            "artifacts missing — run `make artifacts` first"
+            "artifacts/manifest.txt missing from the checkout"
         );
         d
     }
@@ -158,6 +210,20 @@ mod tests {
         assert_eq!(out.len(), 64);
         // different rows see different pixels → logits differ
         assert_ne!(&out[0..8], &out[8..16]);
+    }
+
+    #[test]
+    fn batch_variant_matches_single_variant_exactly() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let b1 = rt.model("classifier_b1").unwrap();
+        let b8 = rt.model("classifier_b8").unwrap();
+        let row = 32 * 32 * 3;
+        let input: Vec<f32> = (0..8 * row).map(|i| ((i * 37) % 251) as f32 / 251.0).collect();
+        let batched = b8.run_f32(&input).unwrap();
+        for r in 0..8 {
+            let single = b1.run_f32(&input[r * row..(r + 1) * row]).unwrap();
+            assert_eq!(single, batched[r * 8..(r + 1) * 8], "row {r}");
+        }
     }
 
     #[test]
@@ -205,5 +271,14 @@ mod tests {
         let m = rt.model("lidar_feat_b1").unwrap();
         let out = m.run_f32(&vec![0.1; 256 * 4]).unwrap();
         assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn family_strips_batch_suffix_only() {
+        assert_eq!(family("classifier_b8"), "classifier");
+        assert_eq!(family("classifier_b1"), "classifier");
+        assert_eq!(family("lidar_feat_b1"), "lidar_feat");
+        assert_eq!(family("weird_bx"), "weird_bx");
+        assert_eq!(family("plain"), "plain");
     }
 }

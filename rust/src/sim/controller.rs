@@ -7,7 +7,7 @@ use crate::msg::ControlCommand;
 use crate::sim::dynamics::VehicleState;
 
 /// Controller tuning.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub struct ControllerParams {
     /// Desired cruise speed (m/s).
     pub cruise_speed: f64,

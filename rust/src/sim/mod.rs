@@ -10,11 +10,15 @@ pub mod controller;
 pub mod dynamics;
 pub mod runner;
 pub mod scenario;
+pub mod sweep;
 
 pub use controller::{control, ControlMode, ControllerParams, LeadObservation};
 pub use dynamics::{collides, step, VehicleParams, VehicleState};
 pub use runner::{run_episode, run_matrix, EpisodeConfig, EpisodeResult};
 pub use scenario::{random_scenario, scenario_matrix, Direction, Maneuver, RelSpeed, Scenario};
+pub use sweep::{
+    run_sweep, EpisodeParams, SweepCase, SweepDriver, SweepReport, SweepSpec, WorstCase,
+};
 
 use crate::engine::OpRegistry;
 use crate::error::{Error, Result};
@@ -78,8 +82,13 @@ pub fn decode_result(buf: &[u8]) -> Result<EpisodeResult> {
     })
 }
 
-/// Engine operator: scenario records in → episode-result records out.
-/// This is what the distributed scenario sweep runs on every worker.
+/// Engine operators for scenario execution, registered on every worker:
+///
+/// * `run_scenario` — scenario records → episode-result records with
+///   default config (the original 66-case demo path);
+/// * `run_episode` — the sweep workhorse: params carry an encoded
+///   [`EpisodeParams`] (timestep, horizon, controller under test), so one
+///   worker binary serves any sweep point.
 pub fn register_sim_ops(reg: &OpRegistry) {
     reg.register_map("run_scenario", |_ctx, _p, rec| {
         let s = decode_scenario(&rec)?;
@@ -90,6 +99,19 @@ pub fn register_sim_ops(reg: &OpRegistry) {
             |_| Ok(()),
         )?;
         Ok(encode_result(&res))
+    });
+
+    reg.register("run_episode", |_ctx, params, records| {
+        let ep = EpisodeParams::decode(params)?;
+        let cfg = EpisodeConfig { dt: ep.dt, horizon: ep.horizon };
+        records
+            .into_iter()
+            .map(|rec| {
+                let s = decode_scenario(&rec)?;
+                let res = run_episode(&s, &cfg, &ep.controller, |_| Ok(()))?;
+                Ok(encode_result(&res))
+            })
+            .collect()
     });
 }
 
@@ -124,6 +146,25 @@ mod tests {
     #[test]
     fn bad_scenario_record_rejected() {
         assert!(decode_scenario(&[9, 0, 0, 0, 0, 0, 0, 0, 0, 0, 0]).is_err());
+    }
+
+    #[test]
+    fn run_episode_op_honors_params() {
+        let reg = OpRegistry::with_builtins();
+        register_sim_ops(&reg);
+        let ctx = TaskCtx::new(0, "artifacts");
+        let s = scenario_matrix(12.0)[0];
+        let params =
+            EpisodeParams { dt: 0.1, horizon: 2.0, controller: ControllerParams::default() };
+        let out = reg
+            .apply_chain(
+                &ctx,
+                &[OpCall::new("run_episode", params.encode())],
+                vec![encode_scenario(&s)],
+            )
+            .unwrap();
+        let res = decode_result(&out[0]).unwrap();
+        assert!(res.ticks > 0 && res.ticks <= 20, "2s horizon at 0.1s dt: {res:?}");
     }
 
     #[test]

@@ -1,0 +1,865 @@
+//! Distributed scenario sweeps — the paper's core loop at platform
+//! scale.
+//!
+//! Fig 1 of the source paper builds a matrix of barrier-car test cases
+//! and executes them as distributed jobs on the cluster. This module is
+//! the driver side of that loop: a [`SweepSpec`] expands a parameterized
+//! grid (ego-speed grid × timestep × seed × the 8×3×3 matrix → thousands
+//! of cases), shards it into [`TaskSpec`]s whose source is
+//! [`Source::Scenarios`], runs the job through [`run_job`] on any
+//! [`Cluster`] backend, and folds the returned episode results into a
+//! [`SweepReport`] (pass rate, collisions, min-TTC histogram, failing
+//! case ids, worst cases).
+//!
+//! Everything is deterministic by construction: case expansion and
+//! sharding depend only on the spec (never on worker count or backend),
+//! the scheduler returns outputs in task order, and episodes are pure
+//! f64 math — so the same spec produces a byte-identical
+//! [`SweepReport::encode`] on a 1-worker `LocalCluster`, an N-worker
+//! `LocalCluster`, or a `StandaloneCluster` of worker processes. The
+//! integration suite asserts exactly that.
+
+use crate::engine::{run_job, Action, Cluster, OpCall, Source, TaskOutput, TaskSpec};
+use crate::error::{Error, Result};
+use crate::metrics::Metrics;
+use crate::msg::Time;
+use crate::sim::controller::{ControlMode, ControllerParams};
+use crate::sim::runner::{run_episode, EpisodeConfig, EpisodeResult};
+use crate::sim::scenario::{scenario_matrix, Scenario};
+use crate::sim::{decode_result, encode_result, encode_scenario};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::prng::Prng;
+use std::time::Duration;
+
+/// Job id used by sweep jobs (cosmetic: shows up in scheduler logs).
+const SWEEP_JOB_ID: u64 = 0x5EE9;
+
+/// How many failing case ids the report lists verbatim (the total count
+/// is always exact; the list is capped so giant sweeps stay readable).
+const FAILING_LIST_CAP: usize = 64;
+
+// ---------------------------------------------------------------------
+// worker-side parameters
+// ---------------------------------------------------------------------
+
+/// Per-shard parameters shipped to workers as the `run_episode` op's
+/// params: episode timing plus the controller under test.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct EpisodeParams {
+    pub dt: f64,
+    pub horizon: f64,
+    pub controller: ControllerParams,
+}
+
+impl EpisodeParams {
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(9 * 8);
+        w.put_f64(self.dt);
+        w.put_f64(self.horizon);
+        let c = &self.controller;
+        w.put_f64(c.cruise_speed);
+        w.put_f64(c.time_gap);
+        w.put_f64(c.min_gap);
+        w.put_f64(c.aeb_ttc);
+        w.put_f64(c.kp_speed);
+        w.put_f64(c.kp_gap);
+        w.put_f64(c.kp_lat);
+        w.into_vec()
+    }
+
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let dt = r.get_f64()?;
+        let horizon = r.get_f64()?;
+        let controller = ControllerParams {
+            cruise_speed: r.get_f64()?,
+            time_gap: r.get_f64()?,
+            min_gap: r.get_f64()?,
+            aeb_ttc: r.get_f64()?,
+            kp_speed: r.get_f64()?,
+            kp_gap: r.get_f64()?,
+            kp_lat: r.get_f64()?,
+        };
+        if !(dt.is_finite() && dt > 0.0) {
+            return Err(Error::Sim(format!("episode params: bad dt {dt}")));
+        }
+        if !(horizon.is_finite() && horizon >= dt) {
+            return Err(Error::Sim(format!("episode params: bad horizon {horizon}")));
+        }
+        Ok(Self { dt, horizon, controller })
+    }
+}
+
+// ---------------------------------------------------------------------
+// sweep specification and expansion
+// ---------------------------------------------------------------------
+
+/// One expanded test case: a Fig-1 scenario plus the grid coordinates it
+/// came from.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepCase {
+    pub scenario: Scenario,
+    /// Episode timestep for this case (s).
+    pub dt: f64,
+    /// Replication seed (perturbs the ego speed).
+    pub seed: u64,
+    /// Grid coordinates (indices into the spec's dts/ego_speeds/seeds).
+    pub dt_index: u32,
+    pub ego_index: u32,
+    pub seed_index: u32,
+}
+
+impl SweepCase {
+    /// Globally unique, filesystem-safe case id. Uniqueness comes from
+    /// the grid indices (values may repeat in a spec, indices cannot).
+    pub fn case_id(&self) -> String {
+        format!(
+            "{}-d{}e{}s{}-v{:.2}",
+            self.scenario.id(),
+            self.dt_index,
+            self.ego_index,
+            self.seed_index,
+            self.scenario.ego_speed
+        )
+    }
+
+    fn encode_into(&self, w: &mut ByteWriter) {
+        w.put_bytes(&encode_scenario(&self.scenario));
+        w.put_f64(self.dt);
+        w.put_u64(self.seed);
+        w.put_u32(self.dt_index);
+        w.put_u32(self.ego_index);
+        w.put_u32(self.seed_index);
+    }
+
+    fn decode_from(r: &mut ByteReader<'_>) -> Result<Self> {
+        let scenario = crate::sim::decode_scenario(&r.get_bytes_vec()?)?;
+        Ok(Self {
+            scenario,
+            dt: r.get_f64()?,
+            seed: r.get_u64()?,
+            dt_index: r.get_u32()?,
+            ego_index: r.get_u32()?,
+            seed_index: r.get_u32()?,
+        })
+    }
+}
+
+/// A parameterized sweep: the Fig-1 matrix crossed with an ego-speed
+/// grid, a timestep grid, and replication seeds.
+#[derive(Debug, Clone)]
+pub struct SweepSpec {
+    /// Base ego cruise speeds (m/s); one full matrix per speed.
+    pub ego_speeds: Vec<f64>,
+    /// Episode timesteps (s); shards never mix timesteps.
+    pub dts: Vec<f64>,
+    /// Replication seeds; each perturbs the ego speed by ±`speed_jitter`.
+    pub seeds: Vec<u64>,
+    /// Fractional speed jitter per seed (0 disables; 0.05 = ±5%).
+    pub speed_jitter: f64,
+    /// Episode horizon (s).
+    pub horizon: f64,
+    /// Controller under test.
+    pub controller: ControllerParams,
+    /// Max cases per task (sharding is spec-driven, never cluster-driven,
+    /// so reports are identical across worker counts).
+    pub shard_size: usize,
+    /// Scheduler retry budget for the sweep job.
+    pub max_retries: usize,
+    /// How many worst cases the report keeps (collisions first, then
+    /// lowest min-TTC).
+    pub worst_k: usize,
+}
+
+impl Default for SweepSpec {
+    /// 4 speeds × 2 timesteps × 3 seeds × 66 matrix cases = 1584 cases.
+    fn default() -> Self {
+        Self {
+            ego_speeds: vec![8.0, 12.0, 16.0, 20.0],
+            dts: vec![0.05, 0.1],
+            seeds: vec![1, 2, 3],
+            speed_jitter: 0.05,
+            horizon: 12.0,
+            controller: ControllerParams::default(),
+            shard_size: 64,
+            max_retries: 2,
+            worst_k: 4,
+        }
+    }
+}
+
+impl SweepSpec {
+    /// Deterministic ego-speed perturbation for (seed, speed index).
+    fn jittered_speed(&self, base: f64, ego_index: usize, seed: u64) -> f64 {
+        if self.speed_jitter == 0.0 {
+            return base;
+        }
+        let mut p = Prng::new(
+            seed.wrapping_mul(0x9e37_79b9_7f4a_7c15)
+                .wrapping_add(ego_index as u64 + 1),
+        );
+        base * (1.0 + self.speed_jitter * (2.0 * p.next_f64() - 1.0))
+    }
+
+    /// Expand the full case list. Pure function of the spec: dt-major
+    /// order, so equal-dt cases are contiguous for sharding.
+    pub fn cases(&self) -> Vec<SweepCase> {
+        let mut out = Vec::new();
+        for (di, &dt) in self.dts.iter().enumerate() {
+            for (si, &seed) in self.seeds.iter().enumerate() {
+                for (ei, &base) in self.ego_speeds.iter().enumerate() {
+                    let speed = self.jittered_speed(base, ei, seed);
+                    for scenario in scenario_matrix(speed) {
+                        out.push(SweepCase {
+                            scenario,
+                            dt,
+                            seed,
+                            dt_index: di as u32,
+                            ego_index: ei as u32,
+                            seed_index: si as u32,
+                        });
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Total number of cases without materializing them.
+    pub fn case_count(&self) -> usize {
+        // every (dt, seed, speed) cell holds one filtered matrix (66)
+        self.dts.len() * self.seeds.len() * self.ego_speeds.len() * scenario_matrix(12.0).len()
+    }
+
+    /// Shard the case list: contiguous chunks of at most `shard_size`
+    /// cases, never straddling a timestep boundary (the episode params
+    /// are per-task).
+    pub fn shards(&self) -> Vec<Vec<SweepCase>> {
+        let cap = self.shard_size.max(1);
+        let mut shards = Vec::new();
+        let mut cur: Vec<SweepCase> = Vec::new();
+        for c in self.cases() {
+            let boundary = cur.len() >= cap
+                || cur.last().map(|p| p.dt_index != c.dt_index).unwrap_or(false);
+            if boundary {
+                shards.push(std::mem::take(&mut cur));
+            }
+            cur.push(c);
+        }
+        if !cur.is_empty() {
+            shards.push(cur);
+        }
+        shards
+    }
+
+    /// Compile the sweep into engine tasks (one per shard).
+    pub fn task_specs(&self, job_id: u64) -> Vec<TaskSpec> {
+        self.task_specs_from(&self.shards(), job_id)
+    }
+
+    /// [`SweepSpec::task_specs`] against pre-computed shards (so callers
+    /// that also need the shard layout expand the case list only once).
+    pub fn task_specs_from(&self, shards: &[Vec<SweepCase>], job_id: u64) -> Vec<TaskSpec> {
+        shards
+            .iter()
+            .enumerate()
+            .map(|(i, shard)| {
+                let params = EpisodeParams {
+                    dt: shard[0].dt,
+                    horizon: self.horizon,
+                    controller: self.controller,
+                }
+                .encode();
+                TaskSpec {
+                    job_id,
+                    task_id: i as u32,
+                    attempt: 0,
+                    source: Source::Scenarios {
+                        scenarios: shard.iter().map(|c| encode_scenario(&c.scenario)).collect(),
+                    },
+                    ops: vec![OpCall::new("run_episode", params)],
+                    action: Action::Episodes,
+                }
+            })
+            .collect()
+    }
+}
+
+// ---------------------------------------------------------------------
+// report
+// ---------------------------------------------------------------------
+
+/// A worst case kept in the report: enough to re-run and record it.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorstCase {
+    pub case: SweepCase,
+    pub result: EpisodeResult,
+}
+
+/// Aggregated sweep outcome.
+///
+/// [`SweepReport::encode`] covers only the deterministic payload (no
+/// wall-clock, no retry count), which is what the cross-backend
+/// determinism tests byte-compare.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepReport {
+    pub total: usize,
+    pub passed: usize,
+    pub collisions: usize,
+    /// Episodes that spent at least one tick in emergency braking.
+    pub emergency_episodes: usize,
+    /// Min-TTC histogram, bucket edges [1, 2, 4, 8, 16) s; the last
+    /// bucket includes episodes that never had a closing lead (∞).
+    pub ttc_histogram: [u64; 6],
+    /// First `FAILING_LIST_CAP` failing case ids, in case order.
+    pub failing: Vec<String>,
+    /// Exact number of failing cases.
+    pub failing_total: usize,
+    /// The `worst_k` worst cases: collisions first, then lowest min-TTC.
+    pub worst: Vec<WorstCase>,
+    /// Execution facts (not part of `encode`).
+    pub tasks: usize,
+    pub retries: usize,
+    pub wall: Duration,
+}
+
+const TTC_EDGES: [f64; 5] = [1.0, 2.0, 4.0, 8.0, 16.0];
+
+fn ttc_bucket(ttc: f64) -> usize {
+    TTC_EDGES.iter().position(|&e| ttc < e).unwrap_or(TTC_EDGES.len())
+}
+
+impl SweepReport {
+    /// Fold per-case results (in case order) into a report. Cross-checks
+    /// that result *i* carries the scenario id of case *i*, which catches
+    /// any reordering *within* a grid cell (the 66 matrix ids are unique
+    /// per cell). Swaps of whole aligned cells share the same id sequence
+    /// and are instead ruled out upstream: `run()` verifies per-shard
+    /// episode counts and `run_job` returns outputs in task order.
+    pub fn aggregate(
+        cases: &[SweepCase],
+        results: &[EpisodeResult],
+        worst_k: usize,
+        tasks: usize,
+        retries: usize,
+        wall: Duration,
+    ) -> Result<SweepReport> {
+        if cases.len() != results.len() {
+            return Err(Error::Sim(format!(
+                "sweep aggregation: {} cases but {} results",
+                cases.len(),
+                results.len()
+            )));
+        }
+        let mut report = SweepReport {
+            total: cases.len(),
+            passed: 0,
+            collisions: 0,
+            emergency_episodes: 0,
+            ttc_histogram: [0; 6],
+            failing: Vec::new(),
+            failing_total: 0,
+            worst: Vec::new(),
+            tasks,
+            retries,
+            wall,
+        };
+        for (i, (case, res)) in cases.iter().zip(results).enumerate() {
+            if res.scenario_id != case.scenario.id() {
+                return Err(Error::Sim(format!(
+                    "sweep result {i} is for scenario '{}', expected '{}' — task \
+                     outputs out of order",
+                    res.scenario_id,
+                    case.scenario.id()
+                )));
+            }
+            if res.passed {
+                report.passed += 1;
+            } else {
+                report.failing_total += 1;
+                if report.failing.len() < FAILING_LIST_CAP {
+                    report.failing.push(case.case_id());
+                }
+            }
+            if res.collided {
+                report.collisions += 1;
+            }
+            if res.emergency_ticks > 0 {
+                report.emergency_episodes += 1;
+            }
+            report.ttc_histogram[ttc_bucket(res.min_ttc)] += 1;
+        }
+        // worst cases: collisions first, then lowest min-TTC, then lowest
+        // min gap; case id breaks remaining ties. Fully deterministic.
+        let mut order: Vec<usize> = (0..cases.len()).collect();
+        order.sort_by(|&a, &b| {
+            results[b]
+                .collided
+                .cmp(&results[a].collided)
+                .then(results[a].min_ttc.total_cmp(&results[b].min_ttc))
+                .then(results[a].min_gap.total_cmp(&results[b].min_gap))
+                .then_with(|| cases[a].case_id().cmp(&cases[b].case_id()))
+        });
+        report.worst = order
+            .into_iter()
+            .take(worst_k)
+            .map(|i| WorstCase { case: cases[i].clone(), result: results[i].clone() })
+            .collect();
+        Ok(report)
+    }
+
+    pub fn pass_rate(&self) -> f64 {
+        if self.total == 0 {
+            0.0
+        } else {
+            self.passed as f64 / self.total as f64
+        }
+    }
+
+    /// Deterministic byte serialization of the sweep *outcome* (excludes
+    /// wall-clock and retry count, which legitimately vary run to run).
+    /// Byte equality of two encodes ⇔ the sweeps produced identical
+    /// verdicts — the cross-backend determinism contract.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(1); // version
+        w.put_u64(self.total as u64);
+        w.put_u64(self.passed as u64);
+        w.put_u64(self.collisions as u64);
+        w.put_u64(self.emergency_episodes as u64);
+        w.put_u64(self.failing_total as u64);
+        for b in self.ttc_histogram {
+            w.put_u64(b);
+        }
+        w.put_varint(self.failing.len() as u64);
+        for f in &self.failing {
+            w.put_str(f);
+        }
+        w.put_varint(self.worst.len() as u64);
+        for wc in &self.worst {
+            wc.case.encode_into(&mut w);
+            w.put_bytes(&encode_result(&wc.result));
+        }
+        w.into_vec()
+    }
+
+    /// Decode a report payload (execution facts come back zeroed).
+    pub fn decode(buf: &[u8]) -> Result<SweepReport> {
+        let mut r = ByteReader::new(buf);
+        match r.get_u8()? {
+            1 => {}
+            v => return Err(Error::Sim(format!("unknown sweep report version {v}"))),
+        }
+        let total = r.get_u64()? as usize;
+        let passed = r.get_u64()? as usize;
+        let collisions = r.get_u64()? as usize;
+        let emergency_episodes = r.get_u64()? as usize;
+        let failing_total = r.get_u64()? as usize;
+        let mut ttc_histogram = [0u64; 6];
+        for b in &mut ttc_histogram {
+            *b = r.get_u64()?;
+        }
+        let n = r.get_varint()? as usize;
+        let mut failing = Vec::with_capacity(n.min(FAILING_LIST_CAP));
+        for _ in 0..n {
+            failing.push(r.get_str()?);
+        }
+        let n = r.get_varint()? as usize;
+        let mut worst = Vec::with_capacity(n.min(1024));
+        for _ in 0..n {
+            let case = SweepCase::decode_from(&mut r)?;
+            let result = decode_result(&r.get_bytes_vec()?)?;
+            worst.push(WorstCase { case, result });
+        }
+        Ok(SweepReport {
+            total,
+            passed,
+            collisions,
+            emergency_episodes,
+            ttc_histogram,
+            failing,
+            failing_total,
+            worst,
+            tasks: 0,
+            retries: 0,
+            wall: Duration::ZERO,
+        })
+    }
+
+    /// Human-readable multi-line summary.
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        s.push_str(&format!(
+            "sweep: {}/{} passed ({:.1}%), {} collisions, {} episodes braked, \
+             {} tasks, {} retries, {:.2}s\n",
+            self.passed,
+            self.total,
+            self.pass_rate() * 100.0,
+            self.collisions,
+            self.emergency_episodes,
+            self.tasks,
+            self.retries,
+            self.wall.as_secs_f64()
+        ));
+        s.push_str("min-TTC histogram:");
+        let labels = ["<1s", "<2s", "<4s", "<8s", "<16s", ">=16s"];
+        for (l, b) in labels.iter().zip(self.ttc_histogram) {
+            s.push_str(&format!("  {l}:{b}"));
+        }
+        s.push('\n');
+        if self.failing_total > 0 {
+            s.push_str(&format!(
+                "failing ({} total, listing {}): {}\n",
+                self.failing_total,
+                self.failing.len(),
+                self.failing.join(", ")
+            ));
+        }
+        for wc in &self.worst {
+            s.push_str(&format!(
+                "worst: {} collided={} min_ttc={:.2} min_gap={:.2}\n",
+                wc.case.case_id(),
+                wc.result.collided,
+                wc.result.min_ttc,
+                wc.result.min_gap
+            ));
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------
+// driver
+// ---------------------------------------------------------------------
+
+/// Driver-side API: expand → shard → schedule → aggregate.
+pub struct SweepDriver {
+    spec: SweepSpec,
+}
+
+impl SweepDriver {
+    pub fn new(spec: SweepSpec) -> Self {
+        Self { spec }
+    }
+
+    pub fn spec(&self) -> &SweepSpec {
+        &self.spec
+    }
+
+    /// Run the sweep on any cluster backend. The returned report is a
+    /// pure function of the spec (see module docs).
+    pub fn run(&self, cluster: &dyn Cluster) -> Result<SweepReport> {
+        let shards = self.spec.shards();
+        if shards.is_empty() {
+            return Err(Error::Sim("sweep spec expands to zero cases".into()));
+        }
+        let cases: Vec<SweepCase> = shards.iter().flatten().cloned().collect();
+        let tasks = self.spec.task_specs_from(&shards, SWEEP_JOB_ID);
+        let n_tasks = tasks.len();
+        let (outs, job) = run_job(cluster, tasks, self.spec.max_retries)?;
+
+        let mut results = Vec::with_capacity(cases.len());
+        for (i, out) in outs.into_iter().enumerate() {
+            match out {
+                TaskOutput::Episodes(rs) => {
+                    if rs.len() != shards[i].len() {
+                        return Err(Error::Sim(format!(
+                            "sweep task {i} returned {} episodes for a {}-case shard",
+                            rs.len(),
+                            shards[i].len()
+                        )));
+                    }
+                    for r in rs {
+                        results.push(decode_result(&r)?);
+                    }
+                }
+                other => {
+                    return Err(Error::Sim(format!(
+                        "sweep task returned {other:?}, expected Episodes"
+                    )))
+                }
+            }
+        }
+        let report =
+            SweepReport::aggregate(&cases, &results, self.spec.worst_k, n_tasks, job.retries, job.wall)?;
+
+        let m = Metrics::global();
+        m.counter("sweep_episodes_total").add(report.total as u64);
+        m.counter("sweep_failures_total").add(report.failing_total as u64);
+        m.gauge("sweep_pass_rate_bp").set((report.pass_rate() * 10_000.0).round() as u64);
+        m.histogram("sweep_wall").observe(report.wall);
+        Ok(report)
+    }
+
+    /// Re-run the report's worst cases locally and record every tick to
+    /// one bag artifact per case under `dir` (the paper's "persist the
+    /// interesting runs to HDFS" step). Episodes are deterministic, so
+    /// the recorded trajectories are exactly what the workers simulated.
+    /// Returns the written paths.
+    pub fn record_worst(&self, report: &SweepReport, dir: &str) -> Result<Vec<String>> {
+        std::fs::create_dir_all(dir)?;
+        let mut paths = Vec::with_capacity(report.worst.len());
+        for wc in &report.worst {
+            let cfg = EpisodeConfig { dt: wc.case.dt, horizon: self.spec.horizon };
+            let path = format!("{dir}/{}.bag", wc.case.case_id());
+            let mut w = crate::bag::create_disk(&path)?;
+            let replayed =
+                run_episode(&wc.case.scenario, &cfg, &self.spec.controller, |tick| {
+                    let mut b = ByteWriter::with_capacity(11 * 8 + 1);
+                    b.put_f64(tick.t);
+                    for v in [
+                        tick.ego.pose.x,
+                        tick.ego.pose.y,
+                        tick.ego.pose.yaw,
+                        tick.ego.v,
+                        tick.barrier.pose.x,
+                        tick.barrier.pose.y,
+                        tick.barrier.pose.yaw,
+                        tick.barrier.v,
+                        tick.cmd.accel,
+                        tick.cmd.steer,
+                    ] {
+                        b.put_f64(v);
+                    }
+                    b.put_u8(match tick.mode {
+                        ControlMode::Cruise => 0,
+                        ControlMode::Follow => 1,
+                        ControlMode::Emergency => 2,
+                    });
+                    w.write_raw(
+                        "/sweep/tick",
+                        "sim/Tick",
+                        Time::from_nanos((tick.t * 1e9).round() as u64),
+                        b.into_vec(),
+                    )
+                })?;
+            w.finish()?;
+            if replayed != wc.result {
+                return Err(Error::Sim(format!(
+                    "worst-case replay of {} diverged from the sweep result — \
+                     determinism violation",
+                    wc.case.case_id()
+                )));
+            }
+            paths.push(path);
+        }
+        Ok(paths)
+    }
+}
+
+/// One-call convenience: run `spec` on `cluster`.
+pub fn run_sweep(cluster: &dyn Cluster, spec: &SweepSpec) -> Result<SweepReport> {
+    SweepDriver::new(spec.clone()).run(cluster)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::engine::LocalCluster;
+    use crate::sim::run_matrix;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    fn small_spec() -> SweepSpec {
+        SweepSpec {
+            ego_speeds: vec![10.0, 14.0],
+            dts: vec![0.05, 0.1],
+            seeds: vec![1],
+            shard_size: 40,
+            ..SweepSpec::default()
+        }
+    }
+
+    fn local(workers: usize) -> LocalCluster {
+        LocalCluster::new(workers, crate::full_op_registry(), "artifacts")
+    }
+
+    #[test]
+    fn expansion_is_deterministic_and_counts_match() {
+        let spec = small_spec();
+        let a = spec.cases();
+        let b = spec.cases();
+        assert_eq!(a, b);
+        assert_eq!(a.len(), spec.case_count());
+        assert_eq!(a.len(), 2 * 2 * 66);
+    }
+
+    #[test]
+    fn case_ids_are_unique_across_the_grid() {
+        // duplicate speed/seed values on purpose: indices must still
+        // disambiguate
+        let spec = SweepSpec {
+            ego_speeds: vec![12.0, 12.0],
+            dts: vec![0.05, 0.05],
+            seeds: vec![7, 7],
+            ..SweepSpec::default()
+        };
+        let mut ids: Vec<String> = spec.cases().iter().map(|c| c.case_id()).collect();
+        let n = ids.len();
+        ids.sort();
+        ids.dedup();
+        assert_eq!(ids.len(), n);
+    }
+
+    #[test]
+    fn shards_are_dt_pure_and_cover_all_cases() {
+        let spec = small_spec();
+        let shards = spec.shards();
+        let rejoined: Vec<SweepCase> = shards.iter().flatten().cloned().collect();
+        assert_eq!(rejoined, spec.cases(), "sharding must preserve order");
+        for shard in &shards {
+            assert!(!shard.is_empty());
+            assert!(shard.len() <= spec.shard_size);
+            assert!(
+                shard.iter().all(|c| c.dt_index == shard[0].dt_index),
+                "shard mixes timesteps"
+            );
+        }
+    }
+
+    #[test]
+    fn episode_params_roundtrip_and_validate() {
+        let p = EpisodeParams {
+            dt: 0.05,
+            horizon: 12.0,
+            controller: ControllerParams::default(),
+        };
+        assert_eq!(EpisodeParams::decode(&p.encode()).unwrap(), p);
+        let bad = EpisodeParams { dt: -1.0, ..p };
+        assert!(EpisodeParams::decode(&bad.encode()).is_err());
+        let bad2 = EpisodeParams { dt: 5.0, horizon: 1.0, ..p };
+        assert!(EpisodeParams::decode(&bad2.encode()).is_err());
+    }
+
+    #[test]
+    fn sweep_matches_serial_episode_runs() {
+        let spec = SweepSpec {
+            ego_speeds: vec![12.0],
+            dts: vec![0.05],
+            seeds: vec![1],
+            speed_jitter: 0.0,
+            shard_size: 10,
+            ..SweepSpec::default()
+        };
+        let report = SweepDriver::new(spec.clone()).run(&local(3)).unwrap();
+        let serial = run_matrix(
+            &scenario_matrix(12.0),
+            &EpisodeConfig { dt: 0.05, horizon: spec.horizon },
+            &spec.controller,
+        )
+        .unwrap();
+        let passed = serial.iter().filter(|r| r.passed).count();
+        assert_eq!(report.total, serial.len());
+        assert_eq!(report.passed, passed, "distribution must not change verdicts");
+    }
+
+    #[test]
+    fn report_encode_is_deterministic_and_roundtrips() {
+        let spec = small_spec();
+        let a = SweepDriver::new(spec.clone()).run(&local(2)).unwrap();
+        let b = SweepDriver::new(spec).run(&local(2)).unwrap();
+        assert_eq!(a.encode(), b.encode());
+        let back = SweepReport::decode(&a.encode()).unwrap();
+        assert_eq!(back.total, a.total);
+        assert_eq!(back.passed, a.passed);
+        assert_eq!(back.ttc_histogram, a.ttc_histogram);
+        assert_eq!(back.failing, a.failing);
+        assert_eq!(back.worst, a.worst);
+    }
+
+    #[test]
+    fn poisoned_sweep_op_is_retried_and_output_order_survives() {
+        // satellite: run_job with a sweep job whose op chain is poisoned
+        // by a transient (retryable) failure — the scheduler must retry,
+        // count correctly, and keep outputs in task order.
+        let reg = crate::full_op_registry();
+        let trips = Arc::new(AtomicUsize::new(0));
+        let t = trips.clone();
+        reg.register("poison_once", move |_c, _p, records| {
+            if t.fetch_add(1, Ordering::SeqCst) == 0 {
+                Err(Error::Engine("transient poison".into()))
+            } else {
+                Ok(records)
+            }
+        });
+        let cluster = LocalCluster::new(2, reg, "artifacts");
+
+        let spec = small_spec();
+        let cases = spec.cases();
+        let mut tasks = spec.task_specs(9);
+        let n_tasks = tasks.len();
+        assert!(n_tasks >= 4, "want several tasks, got {n_tasks}");
+        for task in &mut tasks {
+            task.ops.insert(0, OpCall::new("poison_once", vec![]));
+        }
+        let (outs, job) = run_job(&cluster, tasks, 2).unwrap();
+        assert_eq!(job.retries, 1, "exactly one transient failure to retry");
+        assert!(trips.load(Ordering::SeqCst) >= outs.len());
+
+        let mut results = Vec::new();
+        for out in outs {
+            match out {
+                TaskOutput::Episodes(rs) => {
+                    results.extend(rs.iter().map(|r| decode_result(r).unwrap()))
+                }
+                other => panic!("unexpected {other:?}"),
+            }
+        }
+        // aggregate() cross-checks result i against case i, so a
+        // misordered output stream fails loudly here.
+        let poisoned =
+            SweepReport::aggregate(&cases, &results, spec.worst_k, n_tasks, job.retries, job.wall)
+                .unwrap();
+        // ...and the verdicts must match a clean run bit for bit.
+        let clean = SweepDriver::new(spec).run(&local(2)).unwrap();
+        assert_eq!(poisoned.encode(), clean.encode());
+    }
+
+    #[test]
+    fn record_worst_writes_replayable_bags() {
+        let spec = SweepSpec {
+            ego_speeds: vec![12.0],
+            dts: vec![0.05],
+            seeds: vec![1],
+            worst_k: 2,
+            ..SweepSpec::default()
+        };
+        let driver = SweepDriver::new(spec);
+        let report = driver.run(&local(2)).unwrap();
+        assert_eq!(report.worst.len(), 2);
+        let dir = std::env::temp_dir().join(format!(
+            "av_simd_sweep_worst_{}_{:x}",
+            std::process::id(),
+            crate::util::now_nanos()
+        ));
+        let paths = driver.record_worst(&report, dir.to_str().unwrap()).unwrap();
+        assert_eq!(paths.len(), 2);
+        for (p, wc) in paths.iter().zip(&report.worst) {
+            let mut r = crate::bag::open_disk(p).unwrap();
+            let msgs = r.play(None).unwrap();
+            assert_eq!(msgs.len() as u32, wc.result.ticks, "one record per tick");
+            assert!(msgs.iter().all(|m| m.topic == "/sweep/tick"));
+        }
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn aggregate_rejects_misordered_results() {
+        let spec = SweepSpec {
+            ego_speeds: vec![12.0],
+            dts: vec![0.05],
+            seeds: vec![1],
+            ..SweepSpec::default()
+        };
+        let cases = spec.cases();
+        let cfg = EpisodeConfig { dt: 0.05, horizon: spec.horizon };
+        let mut results: Vec<EpisodeResult> = cases
+            .iter()
+            .map(|c| run_episode(&c.scenario, &cfg, &spec.controller, |_| Ok(())).unwrap())
+            .collect();
+        results.swap(0, 1);
+        let err =
+            SweepReport::aggregate(&cases, &results, 2, 1, 0, Duration::ZERO).unwrap_err();
+        assert!(err.to_string().contains("out of order"), "{err}");
+    }
+}

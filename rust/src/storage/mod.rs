@@ -14,12 +14,12 @@
 
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
-use sha2::{Digest, Sha256};
 use std::path::{Path, PathBuf};
 
-/// Content address of a block: SHA-256 digest.
+/// Content address of a block: SHA-256 digest (from `util::sha256`; the
+/// offline crate set has no `sha2`).
 fn block_id(data: &[u8]) -> [u8; 32] {
-    Sha256::digest(data).into()
+    crate::util::sha256::digest(data)
 }
 
 fn hex(id: &[u8; 32]) -> String {

@@ -1,0 +1,66 @@
+//! CRC-32 (IEEE 802.3, the zlib/`crc32fast` polynomial) in pure std —
+//! the offline crate set has no `crc32fast`. Used by the bag format's
+//! record envelopes. Table-driven, 4 bytes per step; the table is built
+//! at compile time so there is no runtime init and no locking.
+
+/// Reflected polynomial for CRC-32/ISO-HDLC (zlib, gzip, rosbag).
+const POLY: u32 = 0xEDB8_8320;
+
+const fn build_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { POLY ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+static TABLE: [u32; 256] = build_table();
+
+/// CRC-32 of `data` (init `!0`, final xor `!0` — identical output to
+/// `crc32fast::hash`, so bags written before the vendored swap still
+/// verify).
+pub fn hash(data: &[u8]) -> u32 {
+    let mut c = !0u32;
+    for &b in data {
+        c = TABLE[((c ^ b as u32) & 0xff) as usize] ^ (c >> 8);
+    }
+    !c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn known_vectors() {
+        // Standard CRC-32/ISO-HDLC check values.
+        assert_eq!(hash(b""), 0x0000_0000);
+        assert_eq!(hash(b"123456789"), 0xCBF4_3926);
+        assert_eq!(hash(b"The quick brown fox jumps over the lazy dog"), 0x414F_A339);
+    }
+
+    #[test]
+    fn sensitive_to_every_byte() {
+        let base = vec![7u8; 64];
+        let h = hash(&base);
+        for i in 0..base.len() {
+            let mut m = base.clone();
+            m[i] ^= 1;
+            assert_ne!(hash(&m), h, "flip at {i} undetected");
+        }
+    }
+
+    #[test]
+    fn stable_across_calls() {
+        let data: Vec<u8> = (0..1000u32).flat_map(|i| i.to_le_bytes()).collect();
+        assert_eq!(hash(&data), hash(&data));
+    }
+}

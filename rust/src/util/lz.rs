@@ -1,0 +1,196 @@
+//! Pure-std LZ77 byte codec used for bag chunk compression.
+//!
+//! The offline crate set has no `flate2`, so the bag's compressed mode is
+//! backed by this deflate-class LZ: greedy hash-table matching over a
+//! 64 KiB window, byte-aligned tokens. The format is internal to the bag
+//! file format (we only ever read our own bags), so interoperability with
+//! real DEFLATE is not a goal — determinism, safety on corrupt input, and
+//! a strong ratio on redundant sensor payloads are.
+//!
+//! Token stream:
+//! * `0x00..=0x7F` — literal run: token value + 1 literal bytes follow.
+//! * `0x80..=0xFF` — match: length = (token − 0x80) + 4 (4..=131),
+//!   followed by a u16-LE distance (1..=65535) back into the output.
+
+use crate::error::{Error, Result};
+
+const MIN_MATCH: usize = 4;
+const MAX_MATCH: usize = 131;
+const MAX_DIST: usize = 65535;
+const HASH_BITS: u32 = 15;
+
+#[inline]
+fn hash4(b: &[u8]) -> usize {
+    let v = u32::from_le_bytes([b[0], b[1], b[2], b[3]]);
+    (v.wrapping_mul(0x9E37_79B1) >> (32 - HASH_BITS)) as usize
+}
+
+fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
+    for chunk in lits.chunks(128) {
+        out.push((chunk.len() - 1) as u8);
+        out.extend_from_slice(chunk);
+    }
+}
+
+/// Compress `input`. Worst case output is input + ~1/128 overhead.
+pub fn compress(input: &[u8]) -> Vec<u8> {
+    let mut out = Vec::with_capacity(input.len() / 2 + 16);
+    let mut table = vec![usize::MAX; 1 << HASH_BITS];
+    let mut lit_start = 0usize;
+    let mut pos = 0usize;
+
+    while pos + MIN_MATCH <= input.len() {
+        let h = hash4(&input[pos..]);
+        let cand = table[h];
+        table[h] = pos;
+        let usable = cand != usize::MAX
+            && pos - cand <= MAX_DIST
+            && input[cand..cand + MIN_MATCH] == input[pos..pos + MIN_MATCH];
+        if usable {
+            let max = (input.len() - pos).min(MAX_MATCH);
+            let mut len = MIN_MATCH;
+            while len < max && input[cand + len] == input[pos + len] {
+                len += 1;
+            }
+            flush_literals(&mut out, &input[lit_start..pos]);
+            out.push(0x80 + (len - MIN_MATCH) as u8);
+            out.extend_from_slice(&((pos - cand) as u16).to_le_bytes());
+            // Seed a few positions inside the match so later data can
+            // still reference it (sparse to keep compression O(n)).
+            let step = (len / 8).max(1);
+            let mut p = pos + step;
+            while p < pos + len && p + MIN_MATCH <= input.len() {
+                table[hash4(&input[p..])] = p;
+                p += step;
+            }
+            pos += len;
+            lit_start = pos;
+        } else {
+            pos += 1;
+        }
+    }
+    flush_literals(&mut out, &input[lit_start..]);
+    out
+}
+
+/// Decompress into at most `expected_len` bytes. Any malformed token
+/// (truncated run, zero/too-far distance, oversized output) is an
+/// `Error::Corrupt` — never a panic, never unbounded allocation.
+pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expected_len.min(1 << 26));
+    let mut i = 0usize;
+    while i < input.len() {
+        let t = input[i];
+        i += 1;
+        if t < 0x80 {
+            let n = t as usize + 1;
+            if i + n > input.len() {
+                return Err(Error::Corrupt("lz literal run truncated".into()));
+            }
+            out.extend_from_slice(&input[i..i + n]);
+            i += n;
+        } else {
+            let len = (t - 0x80) as usize + MIN_MATCH;
+            if i + 2 > input.len() {
+                return Err(Error::Corrupt("lz match header truncated".into()));
+            }
+            let dist = u16::from_le_bytes([input[i], input[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(Error::Corrupt(format!(
+                    "lz match distance {dist} invalid at output offset {}",
+                    out.len()
+                )));
+            }
+            let start = out.len() - dist;
+            for k in 0..len {
+                let b = out[start + k];
+                out.push(b);
+            }
+        }
+        if out.len() > expected_len {
+            return Err(Error::Corrupt(format!(
+                "lz output exceeds declared length {expected_len}"
+            )));
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prng::Prng;
+
+    fn roundtrip(data: &[u8]) {
+        let packed = compress(data);
+        let back = decompress(&packed, data.len()).unwrap();
+        assert_eq!(back, data, "roundtrip failed for {} bytes", data.len());
+    }
+
+    #[test]
+    fn empty_and_tiny_inputs() {
+        roundtrip(&[]);
+        roundtrip(&[7]);
+        roundtrip(&[1, 2, 3]);
+        roundtrip(&[9; 4]);
+    }
+
+    #[test]
+    fn random_data_roundtrips() {
+        let mut rng = Prng::new(11);
+        for n in [17usize, 100, 1000, 70_000] {
+            let mut buf = vec![0u8; n];
+            rng.fill_bytes(&mut buf);
+            roundtrip(&buf);
+        }
+    }
+
+    #[test]
+    fn redundant_data_compresses_hard() {
+        let data = vec![42u8; 80_000];
+        let packed = compress(&data);
+        assert!(packed.len() < data.len() / 16, "{} bytes", packed.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn repeated_structure_compresses() {
+        let mut data = Vec::new();
+        for i in 0..2_000u32 {
+            data.extend_from_slice(b"topic:/camera type:Image payload=");
+            data.extend_from_slice(&(i % 7).to_le_bytes());
+        }
+        let packed = compress(&data);
+        assert!(packed.len() < data.len() / 4, "{} vs {}", packed.len(), data.len());
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn corrupt_streams_error_not_panic() {
+        let data: Vec<u8> = (0..1000u32).flat_map(|i| i.to_le_bytes()).collect();
+        let packed = compress(&data);
+        let mut rng = Prng::new(3);
+        for _ in 0..200 {
+            let mut bad = packed.clone();
+            let pos = rng.below(bad.len() as u64) as usize;
+            bad[pos] ^= 1 << rng.below(8);
+            // corrupt input may still decode to wrong bytes, but must not
+            // panic and must respect the declared-length cap
+            if let Ok(out) = decompress(&bad, data.len()) {
+                assert!(out.len() <= data.len());
+            }
+        }
+        // truncation at every point must be safe too
+        for cut in 0..packed.len().min(64) {
+            let _ = decompress(&packed[..cut], data.len());
+        }
+    }
+
+    #[test]
+    fn declared_length_is_enforced() {
+        let data = vec![1u8; 500];
+        let packed = compress(&data);
+        assert!(decompress(&packed, 10).is_err(), "cap must trip");
+    }
+}

@@ -3,8 +3,41 @@
 
 pub mod bench;
 pub mod bytes;
+pub mod crc32;
+pub mod lz;
 pub mod prng;
 pub mod proptest;
+pub mod sha256;
+
+/// Minimal leveled stderr logger (the `log` crate is not in the offline
+/// crate set). Level order: error < warn < info < debug; the enabled
+/// threshold comes from `AV_SIMD_LOG` (default `warn`).
+pub fn log_enabled(level: &str) -> bool {
+    fn rank(l: &str) -> u8 {
+        match l {
+            "error" => 0,
+            "warn" => 1,
+            "info" => 2,
+            _ => 3,
+        }
+    }
+    static THRESHOLD: std::sync::OnceLock<u8> = std::sync::OnceLock::new();
+    let threshold = *THRESHOLD.get_or_init(|| {
+        rank(std::env::var("AV_SIMD_LOG").as_deref().unwrap_or("warn"))
+    });
+    rank(level) <= threshold
+}
+
+/// `logmsg!("warn", "task {id} failed")` — leveled stderr logging with
+/// zero formatting cost when the level is disabled.
+#[macro_export]
+macro_rules! logmsg {
+    ($lvl:literal, $($arg:tt)*) => {
+        if $crate::util::log_enabled($lvl) {
+            eprintln!("[av-simd {}] {}", $lvl, format!($($arg)*));
+        }
+    };
+}
 
 /// Format a byte count as a human-readable size.
 pub fn human_bytes(n: u64) -> String {

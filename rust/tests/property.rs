@@ -35,7 +35,7 @@ fn prop_task_spec_roundtrip() {
 
 fn random_spec(rng: &mut Prng) -> TaskSpec {
     use av_simd::engine::{Action, OpCall, Source};
-    let source = match rng.below(4) {
+    let source = match rng.below(5) {
         0 => Source::Inline {
             records: gen::vec_of(rng, 8, |r| gen::bytes(r, 64)),
         },
@@ -49,14 +49,21 @@ fn random_spec(rng: &mut Prng) -> TaskSpec {
             width: 1 + rng.next_u32() % 64,
             height: 1 + rng.next_u32() % 64,
         },
+        3 => Source::Scenarios {
+            scenarios: gen::vec_of(rng, 8, |r| {
+                let speed = r.range_f64(1.0, 30.0);
+                av_simd::sim::encode_scenario(&av_simd::sim::random_scenario(r, speed))
+            }),
+        },
         _ => {
             let start = rng.below(1000);
             Source::Range { start, end: start + rng.below(1000) }
         }
     };
-    let action = match rng.below(3) {
+    let action = match rng.below(4) {
         0 => Action::Collect,
         1 => Action::Count,
+        2 => Action::Episodes,
         _ => Action::SaveBag {
             dir: gen::ident(rng, 16),
             topic: gen::ident(rng, 12),
@@ -251,6 +258,114 @@ fn prop_scenario_and_result_codecs_total() {
     }, |s| {
         av_simd::sim::decode_scenario(&av_simd::sim::encode_scenario(s)).unwrap() == *s
     });
+    check("episode result codec", random_episode_result, |r| {
+        av_simd::sim::decode_result(&av_simd::sim::encode_result(r)).unwrap() == *r
+    });
+}
+
+fn random_episode_result(rng: &mut Prng) -> av_simd::sim::EpisodeResult {
+    // min_ttc/min_gap are INFINITY when no closing lead was ever seen —
+    // the codec must round-trip the infinities too (but never sees NaN:
+    // episodes are pure arithmetic on finite state).
+    let maybe_inf = |rng: &mut Prng, lo: f64, hi: f64| {
+        if rng.next_bool(0.2) { f64::INFINITY } else { rng.range_f64(lo, hi) }
+    };
+    av_simd::sim::EpisodeResult {
+        scenario_id: format!("{}-x", gen::ident(rng, 24)),
+        passed: rng.next_bool(0.5),
+        collided: rng.next_bool(0.3),
+        min_ttc: maybe_inf(rng, 0.0, 60.0),
+        min_gap: maybe_inf(rng, -5.0, 100.0),
+        max_brake: rng.range_f64(0.0, 10.0),
+        emergency_ticks: rng.next_u32() % 1000,
+        ticks: rng.next_u32() % 10_000,
+    }
+}
+
+#[test]
+fn prop_corrupted_scenario_and_result_records_never_panic() {
+    check_n("scenario/result corruption safety", 64, |rng| {
+        let speed = rng.range_f64(5.0, 25.0);
+        let s = av_simd::sim::random_scenario(rng, speed);
+        let mut buf = if rng.next_bool(0.5) {
+            av_simd::sim::encode_scenario(&s)
+        } else {
+            av_simd::sim::encode_result(&random_episode_result(rng))
+        };
+        let pos = rng.below(buf.len() as u64) as usize;
+        buf[pos] ^= 1 << rng.below(8);
+        let cut = rng.below(buf.len() as u64 + 1) as usize;
+        buf.truncate(cut);
+        buf
+    }, |buf| {
+        // decode may fail (detected corruption) or succeed (benign flip),
+        // but must never panic
+        let _ = av_simd::sim::decode_scenario(buf);
+        let _ = av_simd::sim::decode_result(buf);
+        true
+    });
+}
+
+// ---------- scenario matrix / sweep expansion invariants ----------
+
+#[test]
+fn prop_scenario_matrix_invariants_hold_across_ego_speeds() {
+    check("matrix invariants", |rng| rng.range_f64(0.5, 40.0), |speed| {
+        let m = av_simd::sim::scenario_matrix(*speed);
+        // 8 x 3 x 3 = 72 minus the 6 unwanted non-interacting cases
+        if m.len() != 66 {
+            return false;
+        }
+        // every case keeps the requested speed and passes the filter
+        if !m.iter().all(|s| s.ego_speed == *speed && s.is_interesting()) {
+            return false;
+        }
+        // ids are unique
+        let mut ids: Vec<String> = m.iter().map(|s| s.id()).collect();
+        ids.sort();
+        ids.dedup();
+        ids.len() == 66
+    });
+}
+
+fn random_sweep_spec(rng: &mut Prng) -> av_simd::sim::SweepSpec {
+    av_simd::sim::SweepSpec {
+        ego_speeds: gen::vec_of(rng, 3, |r| r.range_f64(5.0, 25.0)),
+        dts: gen::vec_of(rng, 2, |r| r.range_f64(0.02, 0.2)),
+        seeds: gen::vec_of(rng, 3, |r| r.next_u64()),
+        speed_jitter: if rng.next_bool(0.5) { 0.0 } else { rng.range_f64(0.0, 0.2) },
+        shard_size: 1 + rng.below(100) as usize,
+        ..av_simd::sim::SweepSpec::default()
+    }
+}
+
+#[test]
+fn prop_sweep_expansion_is_deterministic_unique_and_shard_stable() {
+    check_n("sweep expansion invariants", 32, random_sweep_spec, |spec| {
+        let cases = spec.cases();
+        if cases.len() != spec.case_count() {
+            return false;
+        }
+        if cases != spec.cases() {
+            return false; // expansion must be pure
+        }
+        // case ids unique even when grid values repeat
+        let mut ids: Vec<String> = cases.iter().map(|c| c.case_id()).collect();
+        ids.sort();
+        ids.dedup();
+        if ids.len() != cases.len() {
+            return false;
+        }
+        // shards partition the case list in order, never straddling a dt
+        let shards = spec.shards();
+        let rejoined: Vec<_> = shards.iter().flatten().cloned().collect();
+        rejoined == cases
+            && shards.iter().all(|s| {
+                !s.is_empty()
+                    && s.len() <= spec.shard_size
+                    && s.iter().all(|c| c.dt_index == s[0].dt_index)
+            })
+    });
 }
 
 // ---------- dynamics invariants ----------
@@ -370,11 +485,11 @@ fn prop_rpc_frames_roundtrip() {
 
 #[test]
 fn prop_task_output_roundtrip() {
-    check("task output roundtrip", |rng| {
-        if rng.next_bool(0.5) {
-            TaskOutput::Records(gen::vec_of(rng, 10, |r| gen::bytes(r, 100)))
-        } else {
-            TaskOutput::Count(rng.next_u64())
-        }
+    check("task output roundtrip", |rng| match rng.below(3) {
+        0 => TaskOutput::Records(gen::vec_of(rng, 10, |r| gen::bytes(r, 100))),
+        1 => TaskOutput::Count(rng.next_u64()),
+        _ => TaskOutput::Episodes(gen::vec_of(rng, 10, |r| {
+            av_simd::sim::encode_result(&random_episode_result(r))
+        })),
     }, |o| TaskOutput::decode(&o.encode()).unwrap() == *o);
 }

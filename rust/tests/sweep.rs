@@ -1,0 +1,126 @@
+//! Distributed scenario-sweep integration tests: the same `SweepSpec`
+//! must produce byte-identical `SweepReport`s on every backend and at
+//! every parallelism — 1-worker `LocalCluster`, N-worker `LocalCluster`,
+//! and a `StandaloneCluster` of spawned worker processes over TCP.
+//! Determinism is the platform contract that makes a sharded Fig-1
+//! matrix trustworthy: distribution must never change verdicts.
+
+use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
+use av_simd::sim::{run_sweep, SweepDriver, SweepReport, SweepSpec};
+
+fn local(workers: usize) -> LocalCluster {
+    LocalCluster::new(workers, av_simd::full_op_registry(), "artifacts")
+}
+
+/// A small but multi-shard spec (2 speeds × 2 dts × 2 seeds × 66 = 528
+/// cases, 12+ shards) — enough to interleave tasks across workers.
+fn small_spec() -> SweepSpec {
+    SweepSpec {
+        ego_speeds: vec![10.0, 14.0],
+        dts: vec![0.05, 0.1],
+        seeds: vec![1, 2],
+        shard_size: 48,
+        ..SweepSpec::default()
+    }
+}
+
+#[test]
+fn local_cluster_worker_count_does_not_change_the_report() {
+    let spec = small_spec();
+    let reference = run_sweep(&local(1), &spec).unwrap().encode();
+    for workers in [2usize, 4, 7] {
+        let report = run_sweep(&local(workers), &spec).unwrap();
+        assert_eq!(
+            report.encode(),
+            reference,
+            "local[{workers}] diverged from local[1]"
+        );
+    }
+}
+
+#[test]
+fn shard_size_does_not_change_the_report() {
+    // Sharding is part of the spec, but the *verdicts* must not depend on
+    // how the case list is cut into tasks.
+    let base = small_spec();
+    let reference = run_sweep(&local(3), &base).unwrap().encode();
+    for shard_size in [7usize, 64, 10_000] {
+        let spec = SweepSpec { shard_size, ..small_spec() };
+        let report = run_sweep(&local(3), &spec).unwrap();
+        assert_eq!(
+            report.encode(),
+            reference,
+            "shard_size {shard_size} changed the verdicts"
+        );
+    }
+}
+
+#[test]
+fn standalone_cluster_matches_local_byte_for_byte() {
+    // Needs the release launcher for worker processes; skip when absent
+    // (bare `cargo test` before `cargo build --release`), matching the
+    // other standalone integration tests.
+    let launcher = std::path::Path::new("target/release/av-simd");
+    if !launcher.exists() {
+        eprintln!("skipping: build target/release/av-simd first");
+        return;
+    }
+    let spec = small_spec();
+    let local_report = run_sweep(&local(2), &spec).unwrap();
+
+    let cluster = StandaloneCluster::launch_program(launcher, 3, 7411, "artifacts").unwrap();
+    let remote_report = run_sweep(&cluster, &spec).unwrap();
+    cluster.shutdown();
+
+    assert_eq!(
+        remote_report.encode(),
+        local_report.encode(),
+        "standalone workers diverged from local threads"
+    );
+    assert_eq!(remote_report.total, spec.case_count());
+}
+
+#[test]
+fn full_scale_sweep_runs_thousands_of_cases() {
+    // The acceptance-scale run: the default spec is >= 1000 cases and
+    // must survive a real multi-worker job with a sane report.
+    let spec = SweepSpec::default();
+    assert!(spec.case_count() >= 1000, "default spec must be platform-scale");
+    let report = run_sweep(&local(4), &spec).unwrap();
+    assert_eq!(report.total, spec.case_count());
+    assert_eq!(report.total, report.passed + report.failing_total);
+    assert_eq!(
+        report.ttc_histogram.iter().sum::<u64>(),
+        report.total as u64,
+        "every episode lands in exactly one TTC bucket"
+    );
+    assert!(report.passed > 0, "controller must pass some cases");
+    assert!(report.collisions > 0, "a jittered grid must expose collisions");
+    assert!(report.tasks >= 4, "the sweep must actually shard");
+    assert!(!report.worst.is_empty());
+    // worst cases are sorted collisions-first
+    assert!(
+        report.worst[0].result.collided || report.collisions == 0,
+        "worst case must be a collision when any exist"
+    );
+}
+
+#[test]
+fn report_roundtrips_and_decode_rejects_garbage() {
+    let report = run_sweep(&local(2), &small_spec()).unwrap();
+    let buf = report.encode();
+    let back = SweepReport::decode(&buf).unwrap();
+    assert_eq!(back.encode(), buf, "decode must preserve the payload");
+    assert!(SweepReport::decode(&[]).is_err());
+    assert!(SweepReport::decode(&[99]).is_err(), "unknown version rejected");
+    let mut truncated = buf.clone();
+    truncated.truncate(buf.len() / 2);
+    assert!(SweepReport::decode(&truncated).is_err());
+}
+
+#[test]
+fn driver_rejects_empty_specs() {
+    let spec = SweepSpec { ego_speeds: vec![], ..SweepSpec::default() };
+    let err = SweepDriver::new(spec).run(&local(1)).unwrap_err();
+    assert!(err.to_string().contains("zero cases"), "{err}");
+}
