@@ -48,6 +48,24 @@ fn main() -> av_simd::Result<()> {
         reports.push(("local", workers, report));
     }
 
+    // --- adaptive shard sizing: calibrated task sizes, same verdicts --
+    {
+        let spec = SweepSpec {
+            adaptive: Some(av_simd::sim::AdaptiveSharding::default()),
+            ..spec.clone()
+        };
+        let cluster = LocalCluster::new(4, av_simd::full_op_registry(), "artifacts");
+        let t = std::time::Instant::now();
+        let report = SweepDriver::new(spec).run(&cluster)?;
+        println!(
+            "local[4] adaptive: {} tasks, {:?} sharding, {:.2}s wall",
+            report.tasks,
+            report.sharding,
+            t.elapsed().as_secs_f64()
+        );
+        reports.push(("local-adaptive", 4, report));
+    }
+
     // --- backend 2: standalone worker processes over TCP -------------
     let launcher = std::path::Path::new("target/release/av-simd");
     if launcher.exists() {

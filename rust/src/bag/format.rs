@@ -129,11 +129,17 @@ impl ChunkInfo {
 /// Wrap a record payload in the `type len payload crc` envelope.
 pub fn encode_record(rec_type: u8, payload: &[u8]) -> Vec<u8> {
     let mut w = ByteWriter::with_capacity(payload.len() + 9);
+    encode_record_into(&mut w, rec_type, payload);
+    w.into_vec()
+}
+
+/// [`encode_record`] appending into an existing writer — the chunk
+/// encode path uses this to skip one whole-payload copy per chunk.
+pub fn encode_record_into(w: &mut ByteWriter, rec_type: u8, payload: &[u8]) {
     w.put_u8(rec_type);
     w.put_u32(payload.len() as u32);
     w.put_raw(payload);
     w.put_u32(crate::util::crc32::hash(payload));
-    w.into_vec()
 }
 
 /// Parse and CRC-check a record envelope from `buf`; returns
@@ -173,11 +179,20 @@ pub fn encode_chunk(messages: &[MessageRecord], compression: Compression) -> Res
             (crate::util::lz::compress(&raw), raw_len)
         }
     };
-    let mut payload = ByteWriter::with_capacity(codec_body.len() + 5);
-    payload.put_u8(compression.to_u8());
-    payload.put_u32(raw_len);
-    payload.put_raw(&codec_body);
-    Ok(encode_record(REC_CHUNK, payload.as_slice()))
+    // Build the envelope in place — bytes identical to
+    // `encode_record(REC_CHUNK, payload)` without staging the payload in
+    // a second buffer (chunks run to megabytes on the bag write path).
+    let payload_len = codec_body.len() + 5;
+    let mut w = ByteWriter::with_capacity(payload_len + 9);
+    w.put_u8(REC_CHUNK);
+    w.put_u32(payload_len as u32);
+    let payload_start = w.len();
+    w.put_u8(compression.to_u8());
+    w.put_u32(raw_len);
+    w.put_raw(&codec_body);
+    let crc = crate::util::crc32::hash(&w.as_slice()[payload_start..]);
+    w.put_u32(crc);
+    Ok(w.into_vec())
 }
 
 /// Decode a chunk record payload back into messages.

@@ -4,25 +4,54 @@
 //! worker threads in-process ([`LocalCluster`], the default and the unit
 //! under test for scalability benches) or spawned worker processes over
 //! TCP ([`super::remote::StandaloneCluster`]). Both present the same
-//! [`Cluster`] trait: submit a batch of tasks, get per-task results back
-//! in order.
+//! [`Cluster`] trait: open a [`TaskStream`], feed tasks through it as
+//! capacity frees up, read completions back in finish order. The batch
+//! API ([`Cluster::run_tasks`]) is a thin convenience wrapper over the
+//! stream.
 
 use super::executor;
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
+use super::stream::TaskStream;
 use crate::error::{Error, Result};
-use std::collections::VecDeque;
-use std::sync::Mutex;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
 
-/// A set of workers that can execute task batches.
+/// A set of workers that can execute tasks.
 pub trait Cluster: Send + Sync {
     /// Number of workers.
     fn workers(&self) -> usize;
 
-    /// Execute all tasks, returning results in task order. Individual
-    /// task failures are returned as `Err` entries (the scheduler
-    /// retries); infrastructure failures may fail the whole batch.
-    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>>;
+    /// Open a streaming session: tasks submitted through the returned
+    /// [`TaskStream`] flow to idle workers immediately; completions come
+    /// back in finish order. The caller must `close()` the stream when
+    /// no more tasks will be submitted.
+    fn open_stream(&self) -> Arc<TaskStream>;
+
+    /// Batch convenience: execute all tasks, returning results in task
+    /// order. Individual task failures are returned as `Err` entries
+    /// (the scheduler retries); runs on the streaming path.
+    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>> {
+        let stream = self.open_stream();
+        let _close = stream.clone().close_on_drop();
+        for (i, t) in tasks.iter().enumerate() {
+            stream.submit(i as u64, t.clone());
+        }
+        let mut out: Vec<Option<Result<TaskOutput>>> =
+            (0..tasks.len()).map(|_| None).collect();
+        for _ in 0..tasks.len() {
+            match stream.next_completion() {
+                Some(c) => out[c.seq as usize] = Some(c.result),
+                None => break,
+            }
+        }
+        stream.close();
+        out.into_iter()
+            .map(|o| {
+                o.unwrap_or_else(|| Err(Error::Engine("task never ran: stream ended early".into())))
+            })
+            .collect()
+    }
 
     /// Graceful shutdown (no-op for local).
     fn shutdown(&self) {}
@@ -31,18 +60,53 @@ pub trait Cluster: Send + Sync {
     fn backend(&self) -> &'static str;
 }
 
-/// Thread-pool cluster: N persistent worker contexts, each with its own
-/// bag cache (mirroring per-executor memory state in Spark).
+/// Shared state between a [`LocalCluster`] handle and its pool threads.
+struct PoolShared {
+    state: Mutex<PoolState>,
+    /// Signalled when any active stream gains work (or on quit).
+    work_ready: Condvar,
+}
+
+struct PoolState {
+    /// Streams with tasks potentially outstanding; drained streams are
+    /// pruned lazily by the workers.
+    streams: Vec<Arc<TaskStream>>,
+    quit: bool,
+}
+
+/// Thread-pool cluster: N *persistent* worker threads, each with its own
+/// [`TaskCtx`] / bag cache (mirroring per-executor memory state in
+/// Spark). Workers outlive individual jobs — there is no per-batch
+/// thread spawn — and multiplex every stream opened on the cluster, so
+/// back-to-back jobs reuse warm caches. Worker panics are caught and
+/// surfaced as task errors carrying the panic payload.
 pub struct LocalCluster {
     registry: OpRegistry,
-    ctxs: Vec<TaskCtx>,
+    pool: Arc<PoolShared>,
+    workers: usize,
+    handles: Mutex<Vec<std::thread::JoinHandle<()>>>,
 }
 
 impl LocalCluster {
     pub fn new(workers: usize, registry: OpRegistry, artifact_dir: &str) -> Self {
         assert!(workers >= 1, "need at least one worker");
-        let ctxs = (0..workers).map(|i| TaskCtx::new(i, artifact_dir)).collect();
-        Self { registry, ctxs }
+        let pool = Arc::new(PoolShared {
+            state: Mutex::new(PoolState { streams: Vec::new(), quit: false }),
+            work_ready: Condvar::new(),
+        });
+        let mut handles = Vec::with_capacity(workers);
+        for i in 0..workers {
+            let pool = pool.clone();
+            let registry = registry.clone();
+            let ctx = TaskCtx::new(i, artifact_dir);
+            handles.push(
+                std::thread::Builder::new()
+                    .name(format!("av-simd-worker-{i}"))
+                    .spawn(move || pool_worker(pool, registry, ctx))
+                    .expect("spawn local worker thread"),
+            );
+        }
+        Self { registry, pool, workers, handles: Mutex::new(handles) }
     }
 
     pub fn registry(&self) -> &OpRegistry {
@@ -52,39 +116,91 @@ impl LocalCluster {
 
 impl Cluster for LocalCluster {
     fn workers(&self) -> usize {
-        self.ctxs.len()
+        self.workers
     }
 
-    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>> {
-        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..tasks.len()).collect());
-        let results: Vec<Mutex<Option<Result<TaskOutput>>>> =
-            (0..tasks.len()).map(|_| Mutex::new(None)).collect();
-
-        std::thread::scope(|scope| {
-            for ctx in &self.ctxs {
-                scope.spawn(|| loop {
-                    let idx = match queue.lock().unwrap().pop_front() {
-                        Some(i) => i,
-                        None => break,
-                    };
-                    let res = executor::run_task(ctx, &self.registry, &tasks[idx]);
-                    *results[idx].lock().unwrap() = Some(res);
-                });
-            }
+    fn open_stream(&self) -> Arc<TaskStream> {
+        let stream = TaskStream::new();
+        let pool = self.pool.clone();
+        stream.set_waker(move || {
+            // Lock-then-notify so a worker mid-scan cannot miss the wake:
+            // it either sees the new task in its scan or is already
+            // parked in wait() when the notify lands.
+            let _g = pool.state.lock().unwrap();
+            pool.work_ready.notify_all();
         });
-
-        results
-            .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .unwrap()
-                    .unwrap_or_else(|| Err(Error::Engine("task never ran".into())))
-            })
-            .collect()
+        let mut st = self.pool.state.lock().unwrap();
+        st.streams.push(stream.clone());
+        drop(st);
+        self.pool.work_ready.notify_all();
+        stream
     }
 
     fn backend(&self) -> &'static str {
         "local"
+    }
+}
+
+impl Drop for LocalCluster {
+    fn drop(&mut self) {
+        {
+            let mut st = self.pool.state.lock().unwrap();
+            st.quit = true;
+        }
+        self.pool.work_ready.notify_all();
+        for h in self.handles.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Render a panic payload for the task error (satisfying the scheduler's
+/// retry classifier with a real cause instead of a generic failure).
+fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".into()
+    }
+}
+
+/// Persistent pool worker: scan active streams for work, run one task,
+/// repeat; park on the pool condvar when every stream is idle.
+fn pool_worker(pool: Arc<PoolShared>, registry: OpRegistry, ctx: TaskCtx) {
+    loop {
+        let work = {
+            let mut st = pool.state.lock().unwrap();
+            loop {
+                if st.quit {
+                    return;
+                }
+                st.streams.retain(|s| !s.drained());
+                let found = st
+                    .streams
+                    .iter()
+                    .find_map(|s| s.try_pop().map(|t| (s.clone(), t)));
+                match found {
+                    Some(w) => break w,
+                    None => st = pool.work_ready.wait(st).unwrap(),
+                }
+            }
+        };
+        let (stream, (seq, spec, queue_wait)) = work;
+        let started = Instant::now();
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            executor::run_task(&ctx, &registry, &spec)
+        }))
+        .unwrap_or_else(|payload| {
+            Err(Error::Engine(format!(
+                "task {} worker {} panicked: {}",
+                spec.task_id,
+                ctx.worker_id,
+                panic_message(payload.as_ref())
+            )))
+        });
+        stream.complete(seq, spec, result, queue_wait, started.elapsed());
     }
 }
 
@@ -144,5 +260,60 @@ mod tests {
         let c = LocalCluster::new(1, OpRegistry::with_builtins(), "artifacts");
         let results = c.run_tasks(&[count_task(0, 5)]);
         assert_eq!(*results[0].as_ref().unwrap(), TaskOutput::Count(5));
+    }
+
+    #[test]
+    fn worker_panic_is_surfaced_with_payload() {
+        let reg = OpRegistry::with_builtins();
+        reg.register("blow_up", |_c, _p, _records| -> Result<Vec<Vec<u8>>> {
+            panic!("index out of range in op body");
+        });
+        let c = LocalCluster::new(2, reg, "artifacts");
+        let mut t = count_task(7, 3);
+        t.ops.push(super::super::plan::OpCall::new("blow_up", vec![]));
+        let results = c.run_tasks(std::slice::from_ref(&t));
+        let err = results[0].as_ref().unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("panicked"), "{msg}");
+        assert!(msg.contains("index out of range in op body"), "payload lost: {msg}");
+        assert!(msg.contains("task 7"), "{msg}");
+        assert!(err.is_retryable(), "panics must be retry-classifiable");
+        // the pool must survive the panic and keep serving tasks
+        let again = c.run_tasks(&[count_task(0, 9)]);
+        assert_eq!(*again[0].as_ref().unwrap(), TaskOutput::Count(9));
+    }
+
+    #[test]
+    fn pool_survives_many_sequential_batches() {
+        // no per-batch thread spawn: the same pool serves every batch
+        let c = LocalCluster::new(3, OpRegistry::with_builtins(), "artifacts");
+        for round in 0..10u64 {
+            let tasks: Vec<TaskSpec> =
+                (0..6).map(|i| count_task(i, round + 1)).collect();
+            let results = c.run_tasks(&tasks);
+            assert!(results
+                .iter()
+                .all(|r| *r.as_ref().unwrap() == TaskOutput::Count(round + 1)));
+        }
+    }
+
+    #[test]
+    fn concurrent_streams_share_the_pool() {
+        let c = Arc::new(LocalCluster::new(4, OpRegistry::with_builtins(), "artifacts"));
+        let mut joins = Vec::new();
+        for j in 0..4u64 {
+            let c = c.clone();
+            joins.push(std::thread::spawn(move || {
+                let tasks: Vec<TaskSpec> =
+                    (0..8).map(|i| count_task(i, j * 100 + 1)).collect();
+                let results = c.run_tasks(&tasks);
+                assert!(results
+                    .iter()
+                    .all(|r| *r.as_ref().unwrap() == TaskOutput::Count(j * 100 + 1)));
+            }));
+        }
+        for h in joins {
+            h.join().unwrap();
+        }
     }
 }

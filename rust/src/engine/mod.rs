@@ -5,7 +5,10 @@
 //! * [`ops`] — the operator registry shared by driver and workers.
 //! * [`executor`] — task execution (source → ops → action).
 //! * [`cluster`] / [`remote`] — thread-pool and worker-process clusters.
-//! * [`scheduler`] — batch dispatch with bounded retries.
+//! * [`stream`] — the streaming work-stealing pipeline between the
+//!   scheduler and a cluster's workers.
+//! * [`scheduler`] — streaming dispatch with immediate bounded retries
+//!   (plus the old round-based model as a bench baseline).
 //! * [`context`] — the driver API: [`SimContext`] + [`Rdd`].
 //! * [`rpc`] / [`worker`] — the standalone-mode TCP protocol.
 
@@ -17,6 +20,7 @@ pub mod plan;
 pub mod remote;
 pub mod rpc;
 pub mod scheduler;
+pub mod stream;
 pub mod worker;
 
 pub use cluster::{Cluster, LocalCluster};
@@ -24,4 +28,5 @@ pub use context::{Rdd, SimContext};
 pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 pub use remote::StandaloneCluster;
-pub use scheduler::{run_job, JobReport};
+pub use scheduler::{run_job, run_job_rounds, JobReport};
+pub use stream::{Completion, TaskStream};

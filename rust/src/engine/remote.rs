@@ -1,19 +1,39 @@
 //! Standalone cluster: worker *processes* over TCP.
 //!
 //! The driver spawns N copies of this binary in `worker` mode, connects a
-//! [`WorkerClient`] to each, and fans task batches out with one feeder
-//! thread per worker pulling from a shared queue (greedy load balancing,
-//! like Spark's executor task slots). Lost workers fail their in-flight
-//! task with a retryable error; the scheduler re-queues it and the batch
-//! continues on the surviving workers.
+//! [`WorkerClient`] to each, and streams tasks out with one feeder
+//! thread per worker pulling from the shared [`TaskStream`] (greedy load
+//! balancing, like Spark's executor task slots). Dispatch is pipelined:
+//! each connection keeps up to [`PIPELINE_DEPTH`] tasks in flight, so
+//! the next task's bytes are already on the wire while the worker
+//! computes the current one. All waiting is event-driven (condvars on
+//! the stream, blocking socket reads) — there is no sleep-polling in the
+//! dispatch path. Lost workers fail their in-flight tasks with a
+//! retryable error; the scheduler re-queues them immediately and the
+//! stream continues on the surviving workers.
 
 use super::cluster::Cluster;
-use super::plan::{TaskOutput, TaskSpec};
+use super::plan::TaskSpec;
+use super::stream::TaskStream;
 use super::worker::WorkerClient;
 use crate::error::{Error, Result};
 use std::collections::VecDeque;
 use std::process::{Child, Command, Stdio};
-use std::sync::Mutex;
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+/// Max task attempts in flight per worker connection. Depth 2 hides the
+/// request/response turnaround without hoarding tasks on a slow worker.
+const PIPELINE_DEPTH: usize = 2;
+
+/// Max encoded size of a frame sent while another task is already in
+/// flight. The worker is single-threaded (it reads one task, computes,
+/// then writes the reply), so a pipelined send must never be able to
+/// fill the socket buffers while the worker is blocked writing a big
+/// reply nobody is reading — that wedges both sides. Frames at or under
+/// this size always fit in kernel buffering; bigger specs simply wait
+/// for the pipeline to drain (the pre-pipelining protocol).
+const PIPELINE_MAX_BYTES: usize = 64 * 1024;
 
 /// A spawned worker process + its RPC client.
 struct RemoteWorker {
@@ -22,9 +42,13 @@ struct RemoteWorker {
     addr: String,
 }
 
+struct Workers {
+    workers: Vec<RemoteWorker>,
+}
+
 /// Cluster of spawned worker processes.
 pub struct StandaloneCluster {
-    workers: Vec<RemoteWorker>,
+    inner: Arc<Workers>,
 }
 
 impl StandaloneCluster {
@@ -81,83 +105,52 @@ impl StandaloneCluster {
                     .map_err(|e| Error::Engine(format!("worker {i}: {e}")))?;
             *w.client.lock().unwrap() = Some(client);
         }
-        Ok(Self { workers })
+        Ok(Self { inner: Arc::new(Workers { workers }) })
     }
 }
 
 impl Cluster for StandaloneCluster {
     fn workers(&self) -> usize {
-        self.workers.len()
+        self.inner.workers.len()
     }
 
-    fn run_tasks(&self, tasks: &[TaskSpec]) -> Vec<Result<TaskOutput>> {
-        let queue: Mutex<VecDeque<usize>> = Mutex::new((0..tasks.len()).collect());
-        let results: Vec<Mutex<Option<Result<TaskOutput>>>> =
-            (0..tasks.len()).map(|_| Mutex::new(None)).collect();
-
-        std::thread::scope(|scope| {
-            for w in &self.workers {
-                scope.spawn(|| {
-                    let mut guard = w.client.lock().unwrap();
-                    let client = match guard.as_mut() {
-                        Some(c) => c,
-                        None => return, // worker previously declared dead
-                    };
-                    loop {
-                        let idx = match queue.lock().unwrap().pop_front() {
-                            Some(i) => i,
-                            None => break,
-                        };
-                        match client.run_task(&tasks[idx]) {
-                            Ok(out) => {
-                                *results[idx].lock().unwrap() = Some(Ok(out));
-                            }
-                            Err(e) => {
-                                let transport_dead = matches!(e, Error::Io(_))
-                                    || e.to_string().contains("hung up");
-                                *results[idx].lock().unwrap() =
-                                    Some(Err(Error::Engine(format!(
-                                        "worker {}: {e}",
-                                        w.addr
-                                    ))));
-                                if transport_dead {
-                                    // Worker lost: stop pulling; surviving
-                                    // workers drain the queue.
-                                    *guard = None;
-                                    break;
-                                }
-                            }
-                        }
-                    }
-                });
-            }
-        });
-
-        results
-            .into_iter()
-            .map(|m| {
-                m.into_inner()
-                    .unwrap()
-                    .unwrap_or_else(|| Err(Error::Engine("task never dispatched".into())))
-            })
-            .collect()
+    fn open_stream(&self) -> Arc<TaskStream> {
+        let stream = TaskStream::new();
+        // Attach every worker *before* spawning any feeder, so an early
+        // transport death cannot momentarily zero the worker count and
+        // fail pending tasks while healthy feeders are still starting.
+        for _ in &self.inner.workers {
+            stream.attach_worker();
+        }
+        for i in 0..self.inner.workers.len() {
+            let inner = self.inner.clone();
+            let stream = stream.clone();
+            std::thread::Builder::new()
+                .name(format!("av-simd-feeder-{i}"))
+                .spawn(move || feeder_loop(&inner.workers[i], &stream))
+                .expect("spawn feeder thread");
+        }
+        stream
     }
 
     fn shutdown(&self) {
-        for w in &self.workers {
+        for w in &self.inner.workers {
             if let Some(c) = w.client.lock().unwrap().as_mut() {
                 let _ = c.shutdown();
             }
         }
-        for w in &self.workers {
+        for w in &self.inner.workers {
             let mut child = w.child.lock().unwrap();
-            // Give it a moment to exit gracefully, then kill.
-            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(2);
+            // Give it a moment to exit gracefully (exponential backoff —
+            // `try_wait` has no blocking-with-timeout form), then kill.
+            let deadline = Instant::now() + Duration::from_secs(2);
+            let mut backoff = Duration::from_millis(1);
             loop {
                 match child.try_wait() {
                     Ok(Some(_)) => break,
-                    Ok(None) if std::time::Instant::now() < deadline => {
-                        std::thread::sleep(std::time::Duration::from_millis(20));
+                    Ok(None) if Instant::now() < deadline => {
+                        std::thread::sleep(backoff);
+                        backoff = (backoff * 2).min(Duration::from_millis(50));
                     }
                     _ => {
                         let _ = child.kill();
@@ -177,6 +170,138 @@ impl Cluster for StandaloneCluster {
 impl Drop for StandaloneCluster {
     fn drop(&mut self) {
         self.shutdown();
+    }
+}
+
+/// One in-flight attempt on a connection.
+struct InFlight {
+    seq: u64,
+    spec: TaskSpec,
+    queue_wait: Duration,
+    sent_at: Instant,
+}
+
+/// Feeder: stream tasks to one worker connection, keeping up to
+/// [`PIPELINE_DEPTH`] in flight, until the stream closes or the
+/// transport dies. Detaches from the stream on every exit path.
+fn feeder_loop(w: &RemoteWorker, stream: &TaskStream) {
+    struct Detach<'a>(&'a TaskStream);
+    impl Drop for Detach<'_> {
+        fn drop(&mut self) {
+            self.0.detach_worker();
+        }
+    }
+    let _detach = Detach(stream);
+
+    let mut guard = w.client.lock().unwrap();
+    // Own the client for the session (put back on clean exit; a dead
+    // transport stays taken, which is how the worker is marked lost).
+    let Some(mut client) = guard.take() else {
+        return; // worker previously declared dead
+    };
+
+    let mut inflight: VecDeque<InFlight> = VecDeque::new();
+    // A pulled task too large to pipeline safely; sent once the
+    // pipeline drains. Invariant: only Some while `inflight` is
+    // non-empty or between fill and the next fill pass.
+    let mut deferred: Option<(u64, TaskSpec, Duration)> = None;
+    loop {
+        // Fill the pipeline. Only block on the stream when nothing is in
+        // flight — otherwise a pending reply could starve behind a wait.
+        while inflight.len() < PIPELINE_DEPTH {
+            let pulled = if let Some(t) = deferred.take() {
+                t
+            } else if inflight.is_empty() {
+                match stream.pop_task() {
+                    Some(t) => t,
+                    None => {
+                        *guard = Some(client); // stream closed and drained
+                        return;
+                    }
+                }
+            } else {
+                match stream.try_pop() {
+                    Some(t) => t,
+                    None => break,
+                }
+            };
+            let (seq, spec, queue_wait) = pulled;
+            let encoded = spec.encode();
+            if !inflight.is_empty() && encoded.len() > PIPELINE_MAX_BYTES {
+                // too big to ship behind an outstanding reply (deadlock
+                // risk — see PIPELINE_MAX_BYTES); wait for the drain
+                deferred = Some((seq, spec, queue_wait));
+                break;
+            }
+            if let Err(e) = client.send_task_encoded(encoded) {
+                stream.complete(
+                    seq,
+                    spec,
+                    Err(Error::Engine(format!("worker {}: {e}", w.addr))),
+                    queue_wait,
+                    Duration::ZERO,
+                );
+                fail_undispatched(stream, &mut inflight, &mut deferred, &w.addr);
+                return; // transport unusable: client stays dropped
+            }
+            inflight.push_back(InFlight { seq, spec, queue_wait, sent_at: Instant::now() });
+        }
+
+        // Read one reply (FIFO per connection).
+        let f = inflight.pop_front().expect("pipeline fill guarantees one in flight");
+        match client.recv_reply(f.spec.task_id) {
+            Ok(out) => {
+                stream.complete(f.seq, f.spec, Ok(out), f.queue_wait, f.sent_at.elapsed())
+            }
+            Err(e) => {
+                let msg = e.to_string();
+                let transport_dead = matches!(e, Error::Io(_))
+                    || msg.contains("hung up")
+                    || msg.contains("died mid-frame");
+                stream.complete(
+                    f.seq,
+                    f.spec,
+                    Err(Error::Engine(format!("worker {}: {e}", w.addr))),
+                    f.queue_wait,
+                    f.sent_at.elapsed(),
+                );
+                if transport_dead {
+                    // Worker lost: fail everything queued behind the dead
+                    // reply; surviving workers drain the stream.
+                    fail_undispatched(stream, &mut inflight, &mut deferred, &w.addr);
+                    return;
+                }
+            }
+        }
+    }
+}
+
+/// Fail every attempt still held by a dead connection — queued replies
+/// and any deferred jumbo task (retryable — the scheduler re-runs them
+/// on surviving workers).
+fn fail_undispatched(
+    stream: &TaskStream,
+    inflight: &mut VecDeque<InFlight>,
+    deferred: &mut Option<(u64, TaskSpec, Duration)>,
+    addr: &str,
+) {
+    while let Some(f) = inflight.pop_front() {
+        stream.complete(
+            f.seq,
+            f.spec,
+            Err(Error::Engine(format!("worker {addr} lost with task in flight"))),
+            f.queue_wait,
+            f.sent_at.elapsed(),
+        );
+    }
+    if let Some((seq, spec, queue_wait)) = deferred.take() {
+        stream.complete(
+            seq,
+            spec,
+            Err(Error::Engine(format!("worker {addr} lost with task in flight"))),
+            queue_wait,
+            Duration::ZERO,
+        );
     }
 }
 

@@ -71,15 +71,27 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
     if len == 0 || len > MAX_FRAME {
         return Err(Error::Engine(format!("bad frame length {len}")));
     }
-    let mut buf = vec![0u8; len as usize];
-    r.read_exact(&mut buf).map_err(|e| {
+    // Read the type byte, then the payload straight into its own Vec via
+    // `Read::take` — no zero-fill (`vec![0; len]`) and no re-copy of a
+    // combined buffer; task payloads run to megabytes of scenario/bag
+    // bytes on the RPC hot path.
+    let mut ty_buf = [0u8; 1];
+    r.read_exact(&mut ty_buf).map_err(|e| {
         if e.kind() == std::io::ErrorKind::UnexpectedEof {
             Error::Engine("connection died mid-frame".into())
         } else {
             Error::Io(e)
         }
     })?;
-    let (ty, payload) = (buf[0], buf[1..].to_vec());
+    let ty = ty_buf[0];
+    let payload_len = (len - 1) as usize;
+    let mut payload = Vec::with_capacity(payload_len);
+    r.take(payload_len as u64)
+        .read_to_end(&mut payload)
+        .map_err(Error::Io)?;
+    if payload.len() < payload_len {
+        return Err(Error::Engine("connection died mid-frame".into()));
+    }
     let msg = match ty {
         1 => RpcMsg::RunTask(payload),
         2 => RpcMsg::TaskOk(payload),

@@ -1,10 +1,22 @@
-//! Job scheduler: submits task batches to a [`Cluster`], retries failed
-//! tasks (with fresh attempt numbers), and records job metrics.
+//! Job scheduler: streams tasks to a [`Cluster`], retries failed
+//! attempts immediately (no round barrier), and records job metrics.
+//!
+//! `run_job` is the production path: it opens a [`TaskStream`], submits
+//! every task, and reacts to completions as they arrive — a retryable
+//! failure re-enters the queue the moment it is observed, so a retry
+//! overlaps the still-running stragglers instead of waiting for the
+//! whole batch. Outputs are still returned in task order (each
+//! completion carries the sequence slot it fills).
+//!
+//! `run_job_rounds` is the old barrier-synchronous model (one full
+//! `run_tasks` batch per retry wave), kept as the comparison baseline
+//! for the scheduler benches (`examples/bench_engine.rs`) and as the
+//! reference semantics the streaming path must reproduce.
 
 use super::cluster::Cluster;
 use super::plan::{TaskOutput, TaskSpec};
 use crate::error::{Error, Result};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// Per-job execution report.
 #[derive(Debug, Clone)]
@@ -13,11 +25,141 @@ pub struct JobReport {
     pub tasks: usize,
     pub retries: usize,
     pub wall: std::time::Duration,
+    /// Per-attempt execution wall time (includes RPC transport for
+    /// remote workers). Zero for `run_job_rounds` (the batch API does
+    /// not observe per-task timing).
+    pub task_wall_p50: Duration,
+    pub task_wall_p95: Duration,
+    /// Time attempts spent queued before a worker picked them up.
+    pub queue_wait_p50: Duration,
+    pub queue_wait_p95: Duration,
 }
 
-/// Run a job: all tasks to completion with bounded retries.
+impl JobReport {
+    fn new(job_id: u64, tasks: usize, retries: usize, wall: Duration) -> Self {
+        Self {
+            job_id,
+            tasks,
+            retries,
+            wall,
+            task_wall_p50: Duration::ZERO,
+            task_wall_p95: Duration::ZERO,
+            queue_wait_p50: Duration::ZERO,
+            queue_wait_p95: Duration::ZERO,
+        }
+    }
+}
+
+/// Nearest-rank percentile over an unsorted set of durations.
+fn percentile(samples: &mut [Duration], q: f64) -> Duration {
+    if samples.is_empty() {
+        return Duration::ZERO;
+    }
+    samples.sort_unstable();
+    let idx = ((samples.len() as f64 * q) as usize).min(samples.len() - 1);
+    samples[idx]
+}
+
+/// Run a job: all tasks to completion with bounded retries, streaming.
 /// Returns outputs in task order plus the report.
 pub fn run_job(
+    cluster: &dyn Cluster,
+    tasks: Vec<TaskSpec>,
+    max_retries: usize,
+) -> Result<(Vec<TaskOutput>, JobReport)> {
+    let job_id = tasks.first().map(|t| t.job_id).unwrap_or(0);
+    let total = tasks.len();
+    let start = Instant::now();
+    let mut outputs: Vec<Option<TaskOutput>> = vec![None; total];
+    let mut retries_used = 0usize;
+    let mut first_err: Option<Error> = None;
+    let mut walls: Vec<Duration> = Vec::with_capacity(total);
+    let mut waits: Vec<Duration> = Vec::with_capacity(total);
+
+    let m = crate::metrics::Metrics::global();
+    let wall_hist = m.histogram("engine_task_wall");
+    let wait_hist = m.histogram("engine_task_queue_wait");
+
+    let stream = cluster.open_stream();
+    // closes the stream on every exit path (incl. panics), so workers
+    // never stay parked on an abandoned job
+    let _close = stream.clone().close_on_drop();
+    let mut outstanding = 0usize;
+    for (i, t) in tasks.into_iter().enumerate() {
+        stream.submit(i as u64, t);
+        outstanding += 1;
+    }
+
+    while outstanding > 0 {
+        let Some(c) = stream.next_completion() else {
+            return Err(first_err.unwrap_or_else(|| {
+                Error::Engine(format!(
+                    "job {job_id}: task stream ended with {outstanding} task(s) unresolved"
+                ))
+            }));
+        };
+        outstanding -= 1;
+        walls.push(c.wall);
+        waits.push(c.queue_wait);
+        wall_hist.observe(c.wall);
+        wait_hist.observe(c.queue_wait);
+        match c.result {
+            Ok(out) => outputs[c.seq as usize] = Some(out),
+            Err(e) => {
+                crate::logmsg!(
+                    "warn",
+                    "job {job_id} task {} attempt {} failed: {e}",
+                    c.spec.task_id,
+                    c.spec.attempt
+                );
+                if first_err.is_none()
+                    && (c.spec.attempt as usize) < max_retries
+                    && e.is_retryable()
+                {
+                    // immediate re-entry: the retry runs on the next free
+                    // worker while stragglers are still in flight
+                    let mut t = c.spec;
+                    t.attempt += 1;
+                    retries_used += 1;
+                    stream.submit(c.seq, t);
+                    outstanding += 1;
+                } else if first_err.is_none() {
+                    first_err = Some(Error::Engine(format!(
+                        "job {job_id} task {} failed after {} attempt(s): {e}",
+                        c.spec.task_id,
+                        c.spec.attempt + 1
+                    )));
+                }
+            }
+        }
+    }
+    stream.close();
+
+    if let Some(e) = first_err {
+        return Err(e);
+    }
+    let outputs: Vec<TaskOutput> = outputs
+        .into_iter()
+        .map(|o| o.expect("all sequence slots filled or job errored"))
+        .collect();
+    let mut report = JobReport::new(job_id, total, retries_used, start.elapsed());
+    report.task_wall_p50 = percentile(&mut walls, 0.50);
+    report.task_wall_p95 = percentile(&mut walls, 0.95);
+    report.queue_wait_p50 = percentile(&mut waits, 0.50);
+    report.queue_wait_p95 = percentile(&mut waits, 0.95);
+    // process metrics (`Metrics::global().report()`)
+    m.counter("engine_jobs_completed").inc();
+    m.counter("engine_tasks_completed").add(total as u64);
+    m.counter("engine_task_retries").add(retries_used as u64);
+    m.histogram("engine_job_wall").observe(report.wall);
+    Ok((outputs, report))
+}
+
+/// The pre-streaming scheduler: submit the whole batch, wait at the
+/// round barrier, then run one extra full round per retry wave. Kept
+/// verbatim so `bench_engine` can measure the streaming path against it
+/// and tests can assert both produce identical outputs.
+pub fn run_job_rounds(
     cluster: &dyn Cluster,
     mut tasks: Vec<TaskSpec>,
     max_retries: usize,
@@ -41,12 +183,6 @@ pub fn run_job(
             match res {
                 Ok(out) => outputs[pos] = Some(out),
                 Err(e) => {
-                    crate::logmsg!(
-                        "warn",
-                        "job {job_id} task {} attempt {} failed: {e}",
-                        task.task_id,
-                        task.attempt
-                    );
                     if (task.attempt as usize) < max_retries && e.is_retryable() {
                         let mut t = task;
                         t.attempt += 1;
@@ -78,15 +214,7 @@ pub fn run_job(
         .into_iter()
         .map(|o| o.expect("all positions filled or job errored"))
         .collect();
-    let report =
-        JobReport { job_id, tasks: total, retries: retries_used, wall: start.elapsed() };
-    // process metrics (`Metrics::global().report()`)
-    let m = crate::metrics::Metrics::global();
-    m.counter("engine_jobs_completed").inc();
-    m.counter("engine_tasks_completed").add(total as u64);
-    m.counter("engine_task_retries").add(retries_used as u64);
-    m.histogram("engine_job_wall").observe(report.wall);
-    Ok((outputs, report))
+    Ok((outputs, JobReport::new(job_id, total, retries_used, start.elapsed())))
 }
 
 #[cfg(test)]
@@ -96,7 +224,7 @@ mod tests {
     use super::super::ops::OpRegistry;
     use super::super::plan::{Action, OpCall, Source};
     use std::sync::atomic::{AtomicUsize, Ordering};
-    use std::sync::Arc;
+    use std::sync::{Arc, Mutex};
 
     fn count_task(id: u32, n: u64, ops: Vec<OpCall>) -> TaskSpec {
         TaskSpec {
@@ -117,6 +245,9 @@ mod tests {
         assert_eq!(outs.len(), 8);
         assert_eq!(report.retries, 0);
         assert!(outs.iter().all(|o| *o == TaskOutput::Count(10)));
+        // streaming path must observe per-attempt timing
+        assert!(report.task_wall_p95 >= report.task_wall_p50);
+        assert!(report.queue_wait_p95 >= report.queue_wait_p50);
     }
 
     #[test]
@@ -174,5 +305,99 @@ mod tests {
         let c = LocalCluster::new(1, OpRegistry::with_builtins(), "artifacts");
         let (outs, _) = run_job(&c, vec![], 1).unwrap();
         assert!(outs.is_empty());
+    }
+
+    #[test]
+    fn streaming_and_rounds_agree_on_outputs() {
+        let c = LocalCluster::new(3, OpRegistry::with_builtins(), "artifacts");
+        let mk = || (0..12).map(|i| count_task(i, (i as u64 + 1) * 3, vec![])).collect();
+        let (a, _) = run_job(&c, mk(), 2).unwrap();
+        let (b, _) = run_job_rounds(&c, mk(), 2).unwrap();
+        assert_eq!(a, b);
+    }
+
+    /// Millisecond stall op: params = varint millis (whole-task stall,
+    /// independent of record count).
+    fn stall_op(reg: &OpRegistry) {
+        reg.register("stall_ms", |_c, params, records| {
+            let mut r = crate::util::bytes::ByteReader::new(params);
+            let ms = r.get_varint()?;
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(records)
+        });
+    }
+
+    fn stall_params(ms: u64) -> Vec<u8> {
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_varint(ms);
+        w.into_vec()
+    }
+
+    /// Op that fails the first attempt of each task, then stalls: params
+    /// = varint millis. Shared `seen` set keys on task_id.
+    fn fail_once_then_stall_op(reg: &OpRegistry, seen: Arc<Mutex<std::collections::HashSet<u32>>>) {
+        reg.register("fail_once_then_stall", move |_c, params, records| {
+            let mut r = crate::util::bytes::ByteReader::new(params);
+            let task_id = r.get_varint()? as u32;
+            let ms = r.get_varint()?;
+            if seen.lock().unwrap().insert(task_id) {
+                return Err(Error::Engine("transient first-attempt failure".into()));
+            }
+            std::thread::sleep(Duration::from_millis(ms));
+            Ok(records)
+        });
+    }
+
+    fn fail_once_params(task_id: u32, ms: u64) -> Vec<u8> {
+        let mut w = crate::util::bytes::ByteWriter::new();
+        w.put_varint(task_id as u64);
+        w.put_varint(ms);
+        w.into_vec()
+    }
+
+    /// The retry-wave regression the streaming scheduler removes: a
+    /// straggler plus a task whose retry is expensive. Round-based, the
+    /// retry only starts after the straggler's round ends (~2 stalls
+    /// serialized); streaming, the retry overlaps the straggler.
+    #[test]
+    fn retry_overlaps_straggler_instead_of_waiting_for_the_round() {
+        const STALL: u64 = 120;
+        let mk_tasks = || {
+            vec![
+                count_task(0, 4, vec![OpCall::new("stall_ms", stall_params(STALL))]),
+                count_task(
+                    1,
+                    4,
+                    vec![OpCall::new("fail_once_then_stall", fail_once_params(1, STALL))],
+                ),
+            ]
+        };
+
+        let reg = OpRegistry::with_builtins();
+        stall_op(&reg);
+        fail_once_then_stall_op(&reg, Arc::new(Mutex::new(std::collections::HashSet::new())));
+        let c = LocalCluster::new(2, reg, "artifacts");
+        let t0 = Instant::now();
+        let (outs, report) = run_job(&c, mk_tasks(), 2).unwrap();
+        let streaming_wall = t0.elapsed();
+        assert_eq!(outs.len(), 2);
+        assert_eq!(report.retries, 1);
+
+        let reg = OpRegistry::with_builtins();
+        stall_op(&reg);
+        fail_once_then_stall_op(&reg, Arc::new(Mutex::new(std::collections::HashSet::new())));
+        let c = LocalCluster::new(2, reg, "artifacts");
+        let t0 = Instant::now();
+        let (outs2, _) = run_job_rounds(&c, mk_tasks(), 2).unwrap();
+        let rounds_wall = t0.elapsed();
+        assert_eq!(outs, outs2);
+
+        // rounds: straggler round (~STALL) then the retry round (~STALL)
+        // ≈ 2×STALL; streaming: both overlap ≈ 1×STALL. Generous margin
+        // for noisy CI runners: streaming must beat rounds by ≥ 1.3×.
+        assert!(
+            streaming_wall.as_secs_f64() * 1.3 < rounds_wall.as_secs_f64(),
+            "streaming {streaming_wall:?} not faster than rounds {rounds_wall:?}"
+        );
     }
 }

@@ -1,0 +1,339 @@
+//! Streaming task pipeline — the work-stealing channel between the
+//! scheduler and a cluster's workers.
+//!
+//! The old execution model was barrier-synchronous: `run_job` handed the
+//! whole batch to `Cluster::run_tasks`, waited for every task (so one
+//! straggler shard idled every worker between retry waves), then ran a
+//! full extra round per wave. A [`TaskStream`] replaces that: the driver
+//! submits tasks as sequenced work items, idle workers pull them the
+//! moment a slot frees up, and completions flow back in *finish* order.
+//! Failed tasks re-enter the queue immediately — a retry overlaps the
+//! still-running stragglers instead of waiting for them.
+//!
+//! The stream is backend-agnostic: `LocalCluster`'s persistent thread
+//! pool and `StandaloneCluster`'s per-connection feeders both speak it.
+//! All waiting is event-driven (condvars), never sleep-polling.
+
+use super::plan::{TaskOutput, TaskSpec};
+use crate::error::{Error, Result};
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+/// One finished task attempt, delivered to the driver in finish order.
+#[derive(Debug)]
+pub struct Completion {
+    /// Driver-assigned sequence number (the slot this result fills; the
+    /// scheduler uses the original task index so outputs stay ordered).
+    pub seq: u64,
+    /// The spec that ran — returned so a retry can be resubmitted with a
+    /// bumped attempt number without the driver keeping a copy.
+    pub spec: TaskSpec,
+    pub result: Result<TaskOutput>,
+    /// Time the attempt spent queued before a worker picked it up.
+    pub queue_wait: Duration,
+    /// Execution wall time (includes RPC transport for remote workers).
+    pub wall: Duration,
+}
+
+struct StreamInner {
+    pending: VecDeque<(u64, TaskSpec, Instant)>,
+    done: VecDeque<Completion>,
+    in_flight: usize,
+    closed: bool,
+    /// Attached workers (standalone feeders attach/detach; the local
+    /// pool polls without attaching and sets `tracks_workers` false).
+    workers: usize,
+    tracks_workers: bool,
+}
+
+/// A live streaming session between the scheduler and a set of workers.
+///
+/// Driver side: [`TaskStream::submit`] / [`TaskStream::next_completion`]
+/// / [`TaskStream::close`]. Worker side: [`TaskStream::pop_task`] (or
+/// the non-blocking [`TaskStream::try_pop`]) and
+/// [`TaskStream::complete`].
+pub struct TaskStream {
+    inner: Mutex<StreamInner>,
+    /// Workers blocked waiting for tasks.
+    work_ready: Condvar,
+    /// The driver blocked waiting for completions.
+    done_ready: Condvar,
+    /// Optional backend hook fired after submit/close (the local pool
+    /// uses it to wake threads that multiplex several streams).
+    waker: Mutex<Option<Box<dyn Fn() + Send + Sync>>>,
+}
+
+impl TaskStream {
+    pub fn new() -> Arc<Self> {
+        Arc::new(Self {
+            inner: Mutex::new(StreamInner {
+                pending: VecDeque::new(),
+                done: VecDeque::new(),
+                in_flight: 0,
+                closed: false,
+                workers: 0,
+                tracks_workers: false,
+            }),
+            work_ready: Condvar::new(),
+            done_ready: Condvar::new(),
+            waker: Mutex::new(None),
+        })
+    }
+
+    /// Install the backend wake hook (called once by `open_stream`).
+    pub fn set_waker(&self, f: impl Fn() + Send + Sync + 'static) {
+        *self.waker.lock().unwrap() = Some(Box::new(f));
+    }
+
+    fn wake_backend(&self) {
+        if let Some(f) = self.waker.lock().unwrap().as_ref() {
+            f();
+        }
+    }
+
+    /// Enqueue a task attempt under sequence slot `seq`. Retries reuse
+    /// the seq of the attempt they replace. If every tracked worker has
+    /// already detached the task fails immediately (there is nobody left
+    /// to run it) instead of hanging the driver.
+    pub fn submit(&self, seq: u64, spec: TaskSpec) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            debug_assert!(!g.closed, "submit after close");
+            if g.tracks_workers && g.workers == 0 {
+                g.done.push_back(Completion {
+                    seq,
+                    spec,
+                    result: Err(Error::Engine(
+                        "no workers left to run task: all workers lost".into(),
+                    )),
+                    queue_wait: Duration::ZERO,
+                    wall: Duration::ZERO,
+                });
+                self.done_ready.notify_all();
+                return;
+            }
+            g.pending.push_back((seq, spec, Instant::now()));
+            self.work_ready.notify_one();
+        }
+        self.wake_backend();
+    }
+
+    /// Declare that no further tasks will be submitted. Blocked workers
+    /// drain the queue and then see `None` from [`TaskStream::pop_task`].
+    pub fn close(&self) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.closed = true;
+            self.work_ready.notify_all();
+            self.done_ready.notify_all();
+        }
+        self.wake_backend();
+    }
+
+    /// True once the stream is closed and no task is pending (workers
+    /// multiplexing several streams use this to drop finished ones).
+    pub fn drained(&self) -> bool {
+        let g = self.inner.lock().unwrap();
+        g.closed && g.pending.is_empty()
+    }
+
+    /// Worker side: blocking pull. Returns `None` only after
+    /// [`TaskStream::close`] with the queue empty. The returned
+    /// `Duration` is the task's queue wait.
+    pub fn pop_task(&self) -> Option<(u64, TaskSpec, Duration)> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some((seq, spec, enqueued)) = g.pending.pop_front() {
+                g.in_flight += 1;
+                return Some((seq, spec, enqueued.elapsed()));
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.work_ready.wait(g).unwrap();
+        }
+    }
+
+    /// Worker side: non-blocking pull (the local pool scans several
+    /// streams and must never park on one while another has work).
+    pub fn try_pop(&self) -> Option<(u64, TaskSpec, Duration)> {
+        let mut g = self.inner.lock().unwrap();
+        let (seq, spec, enqueued) = g.pending.pop_front()?;
+        g.in_flight += 1;
+        Some((seq, spec, enqueued.elapsed()))
+    }
+
+    /// Worker side: deliver a finished attempt.
+    pub fn complete(
+        &self,
+        seq: u64,
+        spec: TaskSpec,
+        result: Result<TaskOutput>,
+        queue_wait: Duration,
+        wall: Duration,
+    ) {
+        let mut g = self.inner.lock().unwrap();
+        debug_assert!(g.in_flight > 0, "complete without matching pop");
+        g.in_flight = g.in_flight.saturating_sub(1);
+        g.done.push_back(Completion { seq, spec, result, queue_wait, wall });
+        self.done_ready.notify_all();
+    }
+
+    /// Driver side: blocking wait for the next completion, in finish
+    /// order. Returns `None` once the stream is closed and fully drained
+    /// (no pending, no in-flight, no undelivered completions).
+    pub fn next_completion(&self) -> Option<Completion> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(c) = g.done.pop_front() {
+                return Some(c);
+            }
+            if g.closed && g.pending.is_empty() && g.in_flight == 0 {
+                return None;
+            }
+            g = self.done_ready.wait(g).unwrap();
+        }
+    }
+
+    /// RAII close guard: closes the stream when dropped (idempotent), so
+    /// worker loops always unblock even if the driver unwinds mid-job.
+    /// Call as `stream.clone().close_on_drop()` to keep using the stream.
+    pub fn close_on_drop(self: Arc<Self>) -> CloseGuard {
+        CloseGuard(self)
+    }
+
+    /// Register a worker serving this stream (standalone feeders). Once
+    /// any worker has attached, the stream knows its worker population
+    /// and can fail tasks when the last one detaches.
+    pub fn attach_worker(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.tracks_workers = true;
+        g.workers += 1;
+    }
+
+    /// A tracked worker left (drained stream or lost transport). When
+    /// the last one goes, everything still pending fails with a
+    /// retryable error so the driver never waits on a dead cluster.
+    pub fn detach_worker(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.workers = g.workers.saturating_sub(1);
+        if g.workers == 0 && !g.pending.is_empty() {
+            while let Some((seq, spec, enqueued)) = g.pending.pop_front() {
+                let queue_wait = enqueued.elapsed();
+                g.done.push_back(Completion {
+                    seq,
+                    spec,
+                    result: Err(Error::Engine(
+                        "no workers left to run task: all workers lost".into(),
+                    )),
+                    queue_wait,
+                    wall: Duration::ZERO,
+                });
+            }
+            self.done_ready.notify_all();
+        }
+    }
+}
+
+/// Closes its stream on drop (see [`TaskStream::close_on_drop`]).
+pub struct CloseGuard(Arc<TaskStream>);
+
+impl Drop for CloseGuard {
+    fn drop(&mut self) {
+        self.0.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use super::super::plan::{Action, Source};
+
+    fn spec(id: u32) -> TaskSpec {
+        TaskSpec {
+            job_id: 1,
+            task_id: id,
+            attempt: 0,
+            source: Source::Range { start: 0, end: 1 },
+            ops: vec![],
+            action: Action::Count,
+        }
+    }
+
+    #[test]
+    fn completions_flow_in_finish_order() {
+        let s = TaskStream::new();
+        s.submit(0, spec(0));
+        s.submit(1, spec(1));
+        let (seq_a, spec_a, qw_a) = s.pop_task().unwrap();
+        let (seq_b, spec_b, qw_b) = s.pop_task().unwrap();
+        assert_eq!((seq_a, seq_b), (0, 1));
+        // finish b first: the driver must see b first
+        s.complete(seq_b, spec_b, Ok(TaskOutput::Count(2)), qw_b, Duration::ZERO);
+        s.complete(seq_a, spec_a, Ok(TaskOutput::Count(1)), qw_a, Duration::ZERO);
+        assert_eq!(s.next_completion().unwrap().seq, 1);
+        assert_eq!(s.next_completion().unwrap().seq, 0);
+        s.close();
+        assert!(s.next_completion().is_none());
+    }
+
+    #[test]
+    fn close_unblocks_workers() {
+        let s = TaskStream::new();
+        let s2 = s.clone();
+        let h = std::thread::spawn(move || s2.pop_task());
+        std::thread::sleep(Duration::from_millis(20));
+        s.close();
+        assert!(h.join().unwrap().is_none());
+    }
+
+    #[test]
+    fn last_detach_fails_pending_tasks() {
+        let s = TaskStream::new();
+        s.attach_worker();
+        s.submit(0, spec(0));
+        s.submit(1, spec(1));
+        let (seq, sp, qw) = s.pop_task().unwrap();
+        s.complete(seq, sp, Ok(TaskOutput::Count(1)), qw, Duration::ZERO);
+        s.detach_worker(); // worker lost with task 1 still queued
+        let c0 = s.next_completion().unwrap();
+        assert!(c0.result.is_ok());
+        let c1 = s.next_completion().unwrap();
+        assert_eq!(c1.seq, 1);
+        let err = c1.result.unwrap_err();
+        assert!(err.to_string().contains("no workers left"), "{err}");
+        assert!(err.is_retryable(), "worker loss must stay retryable");
+        // resubmits against a dead stream fail immediately, not hang
+        s.submit(1, spec(1));
+        assert!(s.next_completion().unwrap().result.is_err());
+    }
+
+    #[test]
+    fn cross_thread_pipeline_completes() {
+        let s = TaskStream::new();
+        let worker = {
+            let s = s.clone();
+            std::thread::spawn(move || {
+                let mut served = 0u64;
+                while let Some((seq, sp, qw)) = s.pop_task() {
+                    let out = TaskOutput::Count(seq);
+                    s.complete(seq, sp, Ok(out), qw, Duration::from_micros(1));
+                    served += 1;
+                }
+                served
+            })
+        };
+        for i in 0..32 {
+            s.submit(i, spec(i as u32));
+        }
+        let mut got = 0;
+        while got < 32 {
+            let c = s.next_completion().unwrap();
+            assert_eq!(c.result.unwrap(), TaskOutput::Count(c.seq));
+            got += 1;
+        }
+        s.close();
+        assert_eq!(worker.join().unwrap(), 32);
+    }
+}

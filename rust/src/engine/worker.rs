@@ -78,9 +78,13 @@ pub struct WorkerClient {
 }
 
 impl WorkerClient {
-    /// Connect, retrying until the worker process is up (bounded wait).
+    /// Connect, retrying with exponential backoff until the worker
+    /// process is up (bounded wait): quick first probes catch an
+    /// already-listening worker in a millisecond or two, the capped
+    /// backoff keeps a slow-starting worker from being hammered.
     pub fn connect(addr: &str, timeout: std::time::Duration) -> Result<Self> {
         let deadline = std::time::Instant::now() + timeout;
+        let mut backoff = std::time::Duration::from_millis(1);
         loop {
             match TcpStream::connect(addr) {
                 Ok(stream) => {
@@ -100,7 +104,8 @@ impl WorkerClient {
                             "worker at {addr} not reachable: {e}"
                         )));
                     }
-                    std::thread::sleep(std::time::Duration::from_millis(30));
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(std::time::Duration::from_millis(50));
                 }
             }
         }
@@ -114,18 +119,37 @@ impl WorkerClient {
         }
     }
 
-    /// Run one task to completion on this worker.
-    pub fn run_task(&mut self, spec: &TaskSpec) -> Result<TaskOutput> {
-        write_msg(&mut self.writer, &RpcMsg::RunTask(spec.encode()))?;
+    /// Dispatch a task without waiting for its reply. The worker answers
+    /// requests strictly in order, so callers may pipeline several
+    /// `send_task`s and collect replies FIFO with
+    /// [`WorkerClient::recv_reply`].
+    pub fn send_task(&mut self, spec: &TaskSpec) -> Result<()> {
+        self.send_task_encoded(spec.encode())
+    }
+
+    /// [`WorkerClient::send_task`] with a pre-encoded spec (callers that
+    /// size-check the frame before dispatch avoid encoding twice).
+    pub fn send_task_encoded(&mut self, encoded_spec: Vec<u8>) -> Result<()> {
+        write_msg(&mut self.writer, &RpcMsg::RunTask(encoded_spec))
+    }
+
+    /// Receive the reply for the oldest outstanding [`WorkerClient::send_task`].
+    /// `task_id` is only used to label errors.
+    pub fn recv_reply(&mut self, task_id: u32) -> Result<TaskOutput> {
         match read_msg(&mut self.reader)? {
             Some(RpcMsg::TaskOk(out)) => TaskOutput::decode(&out),
             Some(RpcMsg::TaskErr(msg)) => Err(Error::Engine(format!(
-                "remote task {} failed: {msg}",
-                spec.task_id
+                "remote task {task_id} failed: {msg}"
             ))),
             None => Err(Error::Engine("worker hung up mid-task".into())),
             other => Err(Error::Engine(format!("unexpected reply {other:?}"))),
         }
+    }
+
+    /// Run one task to completion on this worker (send + wait).
+    pub fn run_task(&mut self, spec: &TaskSpec) -> Result<TaskOutput> {
+        self.send_task(spec)?;
+        self.recv_reply(spec.task_id)
     }
 
     pub fn shutdown(&mut self) -> Result<()> {

@@ -64,6 +64,7 @@ COMMANDS:
   perceive    --dir D [--workers N] [--standalone] [--base-port P]
   scenarios   [--workers N] [--ego-speed V]
   sweep       [--workers N] [--standalone] [--base-port P] [--shard-size N]
+              [--adaptive] [--target-task-ms MS]
               [--ego-speeds A,B,..] [--dts A,B,..] [--seeds A,B,..]
               [--jitter F] [--horizon S] [--worst K] [--record-worst DIR]
   info        [--artifacts DIR]
@@ -249,6 +250,15 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 .map_err(|_| av_simd::err!(Config, "--horizon expects a number, got '{v}'"))?,
         },
         shard_size: args.get_usize("shard-size", defaults.shard_size)?,
+        adaptive: if args.has("adaptive") || args.has("target-task-ms") {
+            let ms = args.get_u64("target-task-ms", 100)?;
+            Some(av_simd::sim::AdaptiveSharding {
+                target_task: std::time::Duration::from_millis(ms.max(1)),
+                ..Default::default()
+            })
+        } else {
+            None
+        },
         worst_k: args.get_usize("worst", defaults.worst_k)?,
         ..defaults
     };

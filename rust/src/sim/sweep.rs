@@ -29,7 +29,7 @@ use crate::sim::scenario::{scenario_matrix, Scenario};
 use crate::sim::{decode_result, encode_result, encode_scenario};
 use crate::util::bytes::{ByteReader, ByteWriter};
 use crate::util::prng::Prng;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 /// Job id used by sweep jobs (cosmetic: shows up in scheduler logs).
 const SWEEP_JOB_ID: u64 = 0x5EE9;
@@ -145,6 +145,52 @@ impl SweepCase {
     }
 }
 
+/// Adaptive shard sizing: a calibration task measures per-case wall
+/// time, then the driver re-shards the remaining cases so each task
+/// lands near `target_task` — big enough to amortize dispatch, small
+/// enough that no straggler shard dominates the stream. Sharding stays
+/// a pure function of (spec case order, measured shard size), never of
+/// worker count or backend, so [`SweepReport::encode`] stays
+/// byte-identical everywhere; the measured inputs are recorded in
+/// [`SweepReport::sharding`] for reproducibility.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct AdaptiveSharding {
+    /// Target wall time per task after calibration.
+    pub target_task: Duration,
+    /// Cases in the calibration task (clamped to the case count and cut
+    /// at the first timestep boundary — shards never mix timesteps).
+    pub calibration_cases: usize,
+    /// Bounds on the computed cases-per-shard.
+    pub min_shard: usize,
+    pub max_shard: usize,
+}
+
+impl Default for AdaptiveSharding {
+    fn default() -> Self {
+        Self {
+            target_task: Duration::from_millis(100),
+            calibration_cases: 64,
+            min_shard: 8,
+            max_shard: 4096,
+        }
+    }
+}
+
+/// How a sweep's case list was cut into tasks (execution fact recorded
+/// in the report; not part of [`SweepReport::encode`], which wall-time
+/// measurements must never influence).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ShardSizing {
+    /// `SweepSpec::shard_size` applied uniformly.
+    Fixed { shard_size: usize },
+    /// Calibrated: `shard_size = clamp(target_task / measured_per_case)`.
+    Adaptive {
+        calibration_cases: usize,
+        measured_per_case: Duration,
+        shard_size: usize,
+    },
+}
+
 /// A parameterized sweep: the Fig-1 matrix crossed with an ego-speed
 /// grid, a timestep grid, and replication seeds.
 #[derive(Debug, Clone)]
@@ -164,6 +210,10 @@ pub struct SweepSpec {
     /// Max cases per task (sharding is spec-driven, never cluster-driven,
     /// so reports are identical across worker counts).
     pub shard_size: usize,
+    /// When set, the driver ignores `shard_size` and calibrates the
+    /// cases-per-shard from measured per-case wall time (see
+    /// [`AdaptiveSharding`]); verdicts stay byte-identical either way.
+    pub adaptive: Option<AdaptiveSharding>,
     /// Scheduler retry budget for the sweep job.
     pub max_retries: usize,
     /// How many worst cases the report keeps (collisions first, then
@@ -182,6 +232,7 @@ impl Default for SweepSpec {
             horizon: 12.0,
             controller: ControllerParams::default(),
             shard_size: 64,
+            adaptive: None,
             max_retries: 2,
             worst_k: 4,
         }
@@ -235,21 +286,7 @@ impl SweepSpec {
     /// cases, never straddling a timestep boundary (the episode params
     /// are per-task).
     pub fn shards(&self) -> Vec<Vec<SweepCase>> {
-        let cap = self.shard_size.max(1);
-        let mut shards = Vec::new();
-        let mut cur: Vec<SweepCase> = Vec::new();
-        for c in self.cases() {
-            let boundary = cur.len() >= cap
-                || cur.last().map(|p| p.dt_index != c.dt_index).unwrap_or(false);
-            if boundary {
-                shards.push(std::mem::take(&mut cur));
-            }
-            cur.push(c);
-        }
-        if !cur.is_empty() {
-            shards.push(cur);
-        }
-        shards
+        chunk_dt_pure(&self.cases(), self.shard_size)
     }
 
     /// Compile the sweep into engine tasks (one per shard).
@@ -283,6 +320,61 @@ impl SweepSpec {
             })
             .collect()
     }
+}
+
+/// Cut an ordered case list into contiguous chunks of at most `cap`
+/// cases that never straddle a timestep boundary (the episode params are
+/// per-task). Pure function of (case order, cap) — both the fixed and
+/// the adaptive sharding path go through here, which is what keeps
+/// reports byte-identical across backends, worker counts, and shard
+/// sizes.
+fn chunk_dt_pure(cases: &[SweepCase], cap: usize) -> Vec<Vec<SweepCase>> {
+    let cap = cap.max(1);
+    let mut shards = Vec::new();
+    let mut cur: Vec<SweepCase> = Vec::new();
+    for c in cases {
+        let boundary = cur.len() >= cap
+            || cur.last().map(|p| p.dt_index != c.dt_index).unwrap_or(false);
+        if boundary {
+            shards.push(std::mem::take(&mut cur));
+        }
+        cur.push(c.clone());
+    }
+    if !cur.is_empty() {
+        shards.push(cur);
+    }
+    shards
+}
+
+/// Decode a job's `Episodes` outputs (task order) into per-case results,
+/// cross-checking every task's episode count against its shard.
+fn collect_episodes(
+    outs: Vec<TaskOutput>,
+    shards: &[Vec<SweepCase>],
+    results: &mut Vec<EpisodeResult>,
+) -> Result<()> {
+    for (i, out) in outs.into_iter().enumerate() {
+        match out {
+            TaskOutput::Episodes(rs) => {
+                if rs.len() != shards[i].len() {
+                    return Err(Error::Sim(format!(
+                        "sweep task {i} returned {} episodes for a {}-case shard",
+                        rs.len(),
+                        shards[i].len()
+                    )));
+                }
+                for r in rs {
+                    results.push(decode_result(&r)?);
+                }
+            }
+            other => {
+                return Err(Error::Sim(format!(
+                    "sweep task returned {other:?}, expected Episodes"
+                )))
+            }
+        }
+    }
+    Ok(())
 }
 
 // ---------------------------------------------------------------------
@@ -321,6 +413,9 @@ pub struct SweepReport {
     pub tasks: usize,
     pub retries: usize,
     pub wall: Duration,
+    /// How the case list was cut into tasks (fixed or calibrated — see
+    /// [`ShardSizing`]); recorded so adaptive runs are reproducible.
+    pub sharding: ShardSizing,
 }
 
 const TTC_EDGES: [f64; 5] = [1.0, 2.0, 4.0, 8.0, 16.0];
@@ -363,6 +458,7 @@ impl SweepReport {
             tasks,
             retries,
             wall,
+            sharding: ShardSizing::Fixed { shard_size: 0 },
         };
         for (i, (case, res)) in cases.iter().zip(results).enumerate() {
             if res.scenario_id != case.scenario.id() {
@@ -483,6 +579,7 @@ impl SweepReport {
             tasks: 0,
             retries: 0,
             wall: Duration::ZERO,
+            sharding: ShardSizing::Fixed { shard_size: 0 },
         })
     }
 
@@ -501,6 +598,19 @@ impl SweepReport {
             self.retries,
             self.wall.as_secs_f64()
         ));
+        match self.sharding {
+            ShardSizing::Fixed { shard_size } if shard_size > 0 => {
+                s.push_str(&format!("sharding: fixed, {shard_size} cases/shard\n"));
+            }
+            ShardSizing::Adaptive { calibration_cases, measured_per_case, shard_size } => {
+                s.push_str(&format!(
+                    "sharding: adaptive, calibrated {calibration_cases} cases @ \
+                     {:.1} µs/case -> {shard_size} cases/shard\n",
+                    measured_per_case.as_secs_f64() * 1e6
+                ));
+            }
+            ShardSizing::Fixed { .. } => {}
+        }
         s.push_str("min-TTC histogram:");
         let labels = ["<1s", "<2s", "<4s", "<8s", "<16s", ">=16s"];
         for (l, b) in labels.iter().zip(self.ttc_histogram) {
@@ -546,9 +656,24 @@ impl SweepDriver {
         &self.spec
     }
 
-    /// Run the sweep on any cluster backend. The returned report is a
-    /// pure function of the spec (see module docs).
+    /// Run the sweep on any cluster backend. The returned report's
+    /// verdict payload ([`SweepReport::encode`]) is a pure function of
+    /// the spec (see module docs) — with or without adaptive sharding.
     pub fn run(&self, cluster: &dyn Cluster) -> Result<SweepReport> {
+        let report = match self.spec.adaptive {
+            Some(ad) => self.run_adaptive(cluster, &ad)?,
+            None => self.run_fixed(cluster)?,
+        };
+        let m = Metrics::global();
+        m.counter("sweep_episodes_total").add(report.total as u64);
+        m.counter("sweep_failures_total").add(report.failing_total as u64);
+        m.gauge("sweep_pass_rate_bp").set((report.pass_rate() * 10_000.0).round() as u64);
+        m.histogram("sweep_wall").observe(report.wall);
+        Ok(report)
+    }
+
+    /// Static path: one job, spec-sized shards.
+    fn run_fixed(&self, cluster: &dyn Cluster) -> Result<SweepReport> {
         let shards = self.spec.shards();
         if shards.is_empty() {
             return Err(Error::Sim("sweep spec expands to zero cases".into()));
@@ -559,35 +684,67 @@ impl SweepDriver {
         let (outs, job) = run_job(cluster, tasks, self.spec.max_retries)?;
 
         let mut results = Vec::with_capacity(cases.len());
-        for (i, out) in outs.into_iter().enumerate() {
-            match out {
-                TaskOutput::Episodes(rs) => {
-                    if rs.len() != shards[i].len() {
-                        return Err(Error::Sim(format!(
-                            "sweep task {i} returned {} episodes for a {}-case shard",
-                            rs.len(),
-                            shards[i].len()
-                        )));
-                    }
-                    for r in rs {
-                        results.push(decode_result(&r)?);
-                    }
-                }
-                other => {
-                    return Err(Error::Sim(format!(
-                        "sweep task returned {other:?}, expected Episodes"
-                    )))
-                }
-            }
-        }
-        let report =
+        collect_episodes(outs, &shards, &mut results)?;
+        let mut report =
             SweepReport::aggregate(&cases, &results, self.spec.worst_k, n_tasks, job.retries, job.wall)?;
+        report.sharding = ShardSizing::Fixed { shard_size: self.spec.shard_size };
+        Ok(report)
+    }
 
-        let m = Metrics::global();
-        m.counter("sweep_episodes_total").add(report.total as u64);
-        m.counter("sweep_failures_total").add(report.failing_total as u64);
-        m.gauge("sweep_pass_rate_bp").set((report.pass_rate() * 10_000.0).round() as u64);
-        m.histogram("sweep_wall").observe(report.wall);
+    /// Adaptive path: run a dt-pure calibration prefix as one task,
+    /// derive cases-per-shard from its measured wall time, then stream
+    /// the remainder in calibrated shards. Case order (and therefore the
+    /// encoded verdict payload) is identical to the fixed path.
+    fn run_adaptive(&self, cluster: &dyn Cluster, ad: &AdaptiveSharding) -> Result<SweepReport> {
+        let cases = self.spec.cases();
+        if cases.is_empty() {
+            return Err(Error::Sim("sweep spec expands to zero cases".into()));
+        }
+        let wall_start = Instant::now();
+
+        // calibration shard: leading cases, cut at the first dt boundary
+        let mut calib_len = ad.calibration_cases.clamp(1, cases.len());
+        if let Some(cut) = cases[..calib_len]
+            .windows(2)
+            .position(|w| w[0].dt_index != w[1].dt_index)
+        {
+            calib_len = cut + 1;
+        }
+        let calib_shards = vec![cases[..calib_len].to_vec()];
+        let calib_tasks = self.spec.task_specs_from(&calib_shards, SWEEP_JOB_ID);
+        let (calib_outs, calib_job) = run_job(cluster, calib_tasks, self.spec.max_retries)?;
+        let mut results = Vec::with_capacity(cases.len());
+        collect_episodes(calib_outs, &calib_shards, &mut results)?;
+
+        // measured per-case wall: the calibration task's execution time
+        // (p50 of a 1-task job = that task) over its case count
+        let per_case = Duration::from_nanos(
+            ((calib_job.task_wall_p50.as_nanos() as u64) / calib_len as u64).max(1),
+        );
+        let min_shard = ad.min_shard.max(1);
+        let shard_size = ((ad.target_task.as_secs_f64() / per_case.as_secs_f64()).round()
+            as usize)
+            .clamp(min_shard, ad.max_shard.max(min_shard));
+
+        let shards = chunk_dt_pure(&cases[calib_len..], shard_size);
+        let tasks = self.spec.task_specs_from(&shards, SWEEP_JOB_ID);
+        let n_tasks = tasks.len();
+        let (outs, job) = run_job(cluster, tasks, self.spec.max_retries)?;
+        collect_episodes(outs, &shards, &mut results)?;
+
+        let mut report = SweepReport::aggregate(
+            &cases,
+            &results,
+            self.spec.worst_k,
+            1 + n_tasks,
+            calib_job.retries + job.retries,
+            wall_start.elapsed(),
+        )?;
+        report.sharding = ShardSizing::Adaptive {
+            calibration_cases: calib_len,
+            measured_per_case: per_case,
+            shard_size,
+        };
         Ok(report)
     }
 
@@ -813,6 +970,68 @@ mod tests {
         // ...and the verdicts must match a clean run bit for bit.
         let clean = SweepDriver::new(spec).run(&local(2)).unwrap();
         assert_eq!(poisoned.encode(), clean.encode());
+    }
+
+    #[test]
+    fn adaptive_sharding_matches_fixed_verdicts_byte_for_byte() {
+        let fixed = small_spec();
+        let reference = SweepDriver::new(fixed.clone()).run(&local(2)).unwrap();
+        // several calibration/target shapes, all must agree with fixed
+        for ad in [
+            AdaptiveSharding::default(),
+            AdaptiveSharding {
+                target_task: Duration::from_micros(200),
+                calibration_cases: 7,
+                min_shard: 2,
+                max_shard: 50,
+            },
+            AdaptiveSharding {
+                target_task: Duration::from_secs(5),
+                calibration_cases: 1000,
+                ..AdaptiveSharding::default()
+            },
+        ] {
+            let spec = SweepSpec { adaptive: Some(ad), ..small_spec() };
+            let report = SweepDriver::new(spec).run(&local(3)).unwrap();
+            assert_eq!(
+                report.encode(),
+                reference.encode(),
+                "adaptive {ad:?} changed the verdicts"
+            );
+            match report.sharding {
+                ShardSizing::Adaptive { calibration_cases, measured_per_case, shard_size } => {
+                    assert!(calibration_cases >= 1);
+                    assert!(measured_per_case > Duration::ZERO);
+                    assert!(shard_size >= 1);
+                }
+                other => panic!("adaptive run recorded {other:?}"),
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_calibration_shard_is_dt_pure() {
+        // calibration_cases larger than the first dt cell: the prefix
+        // must be cut at the boundary, and the sweep must still complete
+        let spec = SweepSpec {
+            ego_speeds: vec![12.0],
+            dts: vec![0.05, 0.1],
+            seeds: vec![1],
+            adaptive: Some(AdaptiveSharding {
+                calibration_cases: 10_000,
+                ..AdaptiveSharding::default()
+            }),
+            ..SweepSpec::default()
+        };
+        let report = SweepDriver::new(spec.clone()).run(&local(2)).unwrap();
+        assert_eq!(report.total, spec.case_count());
+        match report.sharding {
+            ShardSizing::Adaptive { calibration_cases, .. } => {
+                // one dt cell is 66 cases here — the cut must respect it
+                assert_eq!(calibration_cases, 66);
+            }
+            other => panic!("expected adaptive sharding, got {other:?}"),
+        }
     }
 
     #[test]

@@ -29,9 +29,13 @@ impl Sample {
     }
 
     pub fn p95(&self) -> Duration {
+        // nearest-rank with the index clamped into range — the old
+        // `% len` wrap could alias a high percentile back to the fastest
+        // samples on small counts
         let mut v = self.iters.clone();
         v.sort_unstable();
-        v[(v.len() as f64 * 0.95) as usize % v.len()]
+        let idx = ((v.len() as f64 * 0.95) as usize).min(v.len() - 1);
+        v[idx]
     }
 
     pub fn mean(&self) -> Duration {
@@ -159,6 +163,65 @@ pub fn speedup(a: &Sample, b: &Sample) -> f64 {
     a.median().as_secs_f64() / b.median().as_secs_f64()
 }
 
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for c in s.chars() {
+        match c {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+fn sample_json(s: &Sample) -> String {
+    let tp = s
+        .throughput()
+        .map(|r| format!("{r:.3}"))
+        .unwrap_or_else(|| "null".into());
+    format!(
+        "{{\"name\":\"{}\",\"samples\":{},\"median_ns\":{},\"min_ns\":{},\
+         \"p95_ns\":{},\"mean_ns\":{},\"throughput_units_per_s\":{tp},\
+         \"unit\":\"{}\"}}",
+        json_escape(&s.name),
+        s.iters.len(),
+        s.median().as_nanos(),
+        s.min().as_nanos(),
+        s.p95().as_nanos(),
+        s.mean().as_nanos(),
+        json_escape(s.unit_label),
+    )
+}
+
+/// Render a bench report as a JSON document: the measured samples plus
+/// named scalar facts (speedups, ratios, config). Schema documented in
+/// the README's benchmarking section.
+pub fn report_json(title: &str, samples: &[Sample], facts: &[(&str, f64)]) -> String {
+    let mut out = String::new();
+    out.push_str("{\n");
+    out.push_str(&format!("  \"schema\": 1,\n  \"title\": \"{}\",\n", json_escape(title)));
+    out.push_str(&format!(
+        "  \"created_unix_ns\": {},\n",
+        crate::util::now_nanos()
+    ));
+    out.push_str("  \"benches\": [\n");
+    for (i, s) in samples.iter().enumerate() {
+        let sep = if i + 1 == samples.len() { "" } else { "," };
+        out.push_str(&format!("    {}{sep}\n", sample_json(s)));
+    }
+    out.push_str("  ],\n  \"facts\": {\n");
+    for (i, (k, v)) in facts.iter().enumerate() {
+        let sep = if i + 1 == facts.len() { "" } else { "," };
+        let v = if v.is_finite() { format!("{v:.4}") } else { "null".into() };
+        out.push_str(&format!("    \"{}\": {v}{sep}\n", json_escape(k)));
+    }
+    out.push_str("  }\n}\n");
+    out
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -187,6 +250,55 @@ mod tests {
         assert_eq!(fmt_duration(Duration::from_secs(2)), "2.000 s");
         assert!(fmt_duration(Duration::from_micros(50)).contains("µs"));
         assert!(fmt_rate(2.5e6, "B").contains("MB/s"));
+    }
+
+    fn sample_of_millis(ms: &[u64]) -> Sample {
+        Sample {
+            name: "t".into(),
+            iters: ms.iter().map(|&m| Duration::from_millis(m)).collect(),
+            units_per_iter: None,
+            unit_label: "",
+        }
+    }
+
+    #[test]
+    fn p95_is_clamped_and_sane_on_small_sample_counts() {
+        // 1 sample: p95 is that sample (the old `% len` math held here
+        // only by accident of the wrap)
+        assert_eq!(sample_of_millis(&[7]).p95(), Duration::from_millis(7));
+        // 2 samples: index 1 (the slower one), never wrapped back to 0
+        assert_eq!(sample_of_millis(&[5, 9]).p95(), Duration::from_millis(9));
+        // 3 samples: (3*0.95)=2 → the max
+        assert_eq!(sample_of_millis(&[3, 1, 2]).p95(), Duration::from_millis(3));
+        // 20 samples 1..=20: index 19 → 20ms, and must be >= median
+        let v: Vec<u64> = (1..=20).collect();
+        let s = sample_of_millis(&v);
+        assert_eq!(s.p95(), Duration::from_millis(20));
+        assert!(s.p95() >= s.median());
+        // 100 samples: nearest-rank 95th — index 95 → 96ms
+        let v: Vec<u64> = (1..=100).collect();
+        assert_eq!(sample_of_millis(&v).p95(), Duration::from_millis(96));
+    }
+
+    #[test]
+    fn p95_never_below_median_for_any_count() {
+        for n in 1..=40u64 {
+            let v: Vec<u64> = (1..=n).collect();
+            let s = sample_of_millis(&v);
+            assert!(s.p95() >= s.median(), "n={n}: p95 {:?} < median {:?}", s.p95(), s.median());
+        }
+    }
+
+    #[test]
+    fn report_json_is_well_formed_enough() {
+        let s = Bench::new("fmt\"check").samples(2).units(10.0, "B").run(|| {
+            std::hint::black_box(1 + 1);
+        });
+        let j = report_json("t", &[s], &[("speedup", 2.0)]);
+        assert!(j.contains("\"schema\": 1"));
+        assert!(j.contains("fmt\\\"check"), "quotes must be escaped: {j}");
+        assert!(j.contains("\"speedup\": 2.0000"));
+        assert_eq!(j.matches('{').count(), j.matches('}').count());
     }
 
     #[test]

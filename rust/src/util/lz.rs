@@ -1,16 +1,25 @@
 //! Pure-std LZ77 byte codec used for bag chunk compression.
 //!
 //! The offline crate set has no `flate2`, so the bag's compressed mode is
-//! backed by this deflate-class LZ: greedy hash-table matching over a
-//! 64 KiB window, byte-aligned tokens. The format is internal to the bag
-//! file format (we only ever read our own bags), so interoperability with
-//! real DEFLATE is not a goal — determinism, safety on corrupt input, and
-//! a strong ratio on redundant sensor payloads are.
+//! backed by this deflate-class LZ. The token stream is byte-aligned and
+//! versionless — the *format* below is the compatibility contract; the
+//! encoder is free to pick any valid token sequence, and has changed
+//! over time (greedy single-probe → hash chains with lazy matching).
+//! [`decompress`] reads every stream either encoder ever produced, so
+//! old bags keep replaying. Determinism, safety on corrupt input, and a
+//! strong ratio on redundant sensor payloads are the goals.
 //!
 //! Token stream:
 //! * `0x00..=0x7F` — literal run: token value + 1 literal bytes follow.
 //! * `0x80..=0xFF` — match: length = (token − 0x80) + 4 (4..=131),
 //!   followed by a u16-LE distance (1..=65535) back into the output.
+//!
+//! Encoder: hash-chain match search (multiple candidates per 4-byte
+//! hash, bounded probes) with one-step lazy matching — if the position
+//! after a found match starts a strictly longer match, the current byte
+//! is emitted as a literal and the longer match wins. Decoder: pre-
+//! validated block copies via `extend_from_within` (doubling windows for
+//! overlapped matches) instead of a bounds-checked push per byte.
 
 use crate::error::{Error, Result};
 
@@ -18,6 +27,10 @@ const MIN_MATCH: usize = 4;
 const MAX_MATCH: usize = 131;
 const MAX_DIST: usize = 65535;
 const HASH_BITS: u32 = 15;
+/// Max hash-chain candidates probed per position. 32 probes finds
+/// near-optimal matches on sensor payloads while keeping compression
+/// O(n · CHAIN_LIMIT) worst case.
+const CHAIN_LIMIT: usize = 32;
 
 #[inline]
 fn hash4(b: &[u8]) -> usize {
@@ -32,8 +45,133 @@ fn flush_literals(out: &mut Vec<u8>, lits: &[u8]) {
     }
 }
 
+/// Hash-chain index: `head[h]` is the most recent position with hash
+/// `h`; `prev[p & WINDOW_MASK]` links position `p` to the previous
+/// position sharing its hash. The prev table is a 64 Ki ring, not one
+/// slot per input byte: matches farther than [`MAX_DIST`] are unusable
+/// anyway, and the walk stops at the first candidate beyond it — before
+/// any slot that could have been overwritten by an aliased newer
+/// position (same residue positions differ by the full window). Keeps
+/// the working set ~640 KiB regardless of input size (a per-byte table
+/// would be 8× the multi-megabyte bag chunks this compresses).
+struct Chains {
+    head: Vec<usize>,
+    prev: Vec<usize>,
+}
+
+/// Ring size for the prev table; must be a power of two > [`MAX_DIST`].
+const WINDOW: usize = 1 << 16;
+const WINDOW_MASK: usize = WINDOW - 1;
+
+impl Chains {
+    fn new() -> Self {
+        Self {
+            head: vec![usize::MAX; 1 << HASH_BITS],
+            prev: vec![usize::MAX; WINDOW],
+        }
+    }
+
+    #[inline]
+    fn insert(&mut self, input: &[u8], pos: usize) {
+        let h = hash4(&input[pos..]);
+        self.prev[pos & WINDOW_MASK] = self.head[h];
+        self.head[h] = pos;
+    }
+
+    /// Longest match for `pos` among chained candidates (bounded walk).
+    fn best_match(&self, input: &[u8], pos: usize) -> Option<(usize, usize)> {
+        let max_len = (input.len() - pos).min(MAX_MATCH);
+        if max_len < MIN_MATCH {
+            return None;
+        }
+        let mut cand = self.head[hash4(&input[pos..])];
+        let mut best_len = MIN_MATCH - 1;
+        let mut best_dist = 0usize;
+        let mut probes = 0;
+        while cand != usize::MAX && probes < CHAIN_LIMIT {
+            let dist = pos - cand;
+            if dist > MAX_DIST {
+                break; // chain is position-ordered: older is only farther
+            }
+            // quick reject: a longer match must at least extend past the
+            // current best (best_len < max_len here, so both in bounds)
+            if input[cand + best_len] == input[pos + best_len] {
+                let mut len = 0;
+                while len < max_len && input[cand + len] == input[pos + len] {
+                    len += 1;
+                }
+                if len > best_len {
+                    best_len = len;
+                    best_dist = dist;
+                    if len == max_len {
+                        break;
+                    }
+                }
+            }
+            cand = self.prev[cand & WINDOW_MASK];
+            probes += 1;
+        }
+        (best_len >= MIN_MATCH).then_some((best_len, best_dist))
+    }
+}
+
 /// Compress `input`. Worst case output is input + ~1/128 overhead.
+/// Deterministic: a pure function of the input bytes.
 pub fn compress(input: &[u8]) -> Vec<u8> {
+    let n = input.len();
+    let mut out = Vec::with_capacity(n / 2 + 16);
+    if n < MIN_MATCH {
+        flush_literals(&mut out, input);
+        return out;
+    }
+    let mut chains = Chains::new();
+    // last position with MIN_MATCH bytes of lookahead (inclusive)
+    let last = n - MIN_MATCH;
+    let mut lit_start = 0usize;
+    let mut pos = 0usize;
+
+    while pos <= last {
+        let Some((mut len, mut dist)) = chains.best_match(input, pos) else {
+            chains.insert(input, pos);
+            pos += 1;
+            continue;
+        };
+        chains.insert(input, pos);
+        // lazy step: prefer a strictly longer match starting one byte on
+        if len < MAX_MATCH && pos + 1 <= last {
+            if let Some((len2, dist2)) = chains.best_match(input, pos + 1) {
+                if len2 > len {
+                    pos += 1; // current byte joins the literal run
+                    chains.insert(input, pos);
+                    len = len2;
+                    dist = dist2;
+                }
+            }
+        }
+        flush_literals(&mut out, &input[lit_start..pos]);
+        out.push(0x80 + (len - MIN_MATCH) as u8);
+        out.extend_from_slice(&(dist as u16).to_le_bytes());
+        // index the match interior so later data can reference it
+        let end = pos + len;
+        let mut p = pos + 1;
+        let insert_end = end.min(last + 1);
+        while p < insert_end {
+            chains.insert(input, p);
+            p += 1;
+        }
+        pos = end;
+        lit_start = pos;
+    }
+    flush_literals(&mut out, &input[lit_start..]);
+    out
+}
+
+/// The original greedy single-probe encoder (one hash-table slot, first
+/// candidate wins, sparse interior seeding). Kept (not `cfg(test)`) as
+/// the ratio/throughput baseline for `examples/bench_engine.rs` and the
+/// cross-encoder decode tests; produces the same token format.
+#[doc(hidden)]
+pub fn compress_greedy(input: &[u8]) -> Vec<u8> {
     let mut out = Vec::with_capacity(input.len() / 2 + 16);
     let mut table = vec![usize::MAX; 1 << HASH_BITS];
     let mut lit_start = 0usize;
@@ -55,8 +193,6 @@ pub fn compress(input: &[u8]) -> Vec<u8> {
             flush_literals(&mut out, &input[lit_start..pos]);
             out.push(0x80 + (len - MIN_MATCH) as u8);
             out.extend_from_slice(&((pos - cand) as u16).to_le_bytes());
-            // Seed a few positions inside the match so later data can
-            // still reference it (sparse to keep compression O(n)).
             let step = (len / 8).max(1);
             let mut p = pos + step;
             while p < pos + len && p + MIN_MATCH <= input.len() {
@@ -77,6 +213,65 @@ pub fn compress(input: &[u8]) -> Vec<u8> {
 /// (truncated run, zero/too-far distance, oversized output) is an
 /// `Error::Corrupt` — never a panic, never unbounded allocation.
 pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
+    let mut out = Vec::with_capacity(expected_len.min(1 << 26));
+    let mut i = 0usize;
+    while i < input.len() {
+        let t = input[i];
+        i += 1;
+        if t < 0x80 {
+            let n = t as usize + 1;
+            if i + n > input.len() {
+                return Err(Error::Corrupt("lz literal run truncated".into()));
+            }
+            if out.len() + n > expected_len {
+                return Err(Error::Corrupt(format!(
+                    "lz output exceeds declared length {expected_len}"
+                )));
+            }
+            out.extend_from_slice(&input[i..i + n]);
+            i += n;
+        } else {
+            let len = (t - 0x80) as usize + MIN_MATCH;
+            if i + 2 > input.len() {
+                return Err(Error::Corrupt("lz match header truncated".into()));
+            }
+            let dist = u16::from_le_bytes([input[i], input[i + 1]]) as usize;
+            i += 2;
+            if dist == 0 || dist > out.len() {
+                return Err(Error::Corrupt(format!(
+                    "lz match distance {dist} invalid at output offset {}",
+                    out.len()
+                )));
+            }
+            if out.len() + len > expected_len {
+                return Err(Error::Corrupt(format!(
+                    "lz output exceeds declared length {expected_len}"
+                )));
+            }
+            let start = out.len() - dist;
+            if dist >= len {
+                // disjoint: one block copy
+                out.extend_from_within(start..start + len);
+            } else {
+                // overlapped (run-length style): doubling windows — each
+                // pass can copy everything written since `start`
+                let mut remaining = len;
+                while remaining > 0 {
+                    let take = remaining.min(out.len() - start);
+                    out.extend_from_within(start..start + take);
+                    remaining -= take;
+                }
+            }
+        }
+    }
+    Ok(out)
+}
+
+/// The original byte-at-a-time decoder (push-per-byte match copies),
+/// kept (not `cfg(test)`) as the `bench_engine` baseline and the
+/// differential-test oracle for [`decompress`].
+#[doc(hidden)]
+pub fn decompress_reference(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
     let mut out = Vec::with_capacity(expected_len.min(1 << 26));
     let mut i = 0usize;
     while i < input.len() {
@@ -126,6 +321,12 @@ mod tests {
         let packed = compress(data);
         let back = decompress(&packed, data.len()).unwrap();
         assert_eq!(back, data, "roundtrip failed for {} bytes", data.len());
+        // the fast decoder and the reference decoder must agree bit for bit
+        let back_ref = decompress_reference(&packed, data.len()).unwrap();
+        assert_eq!(back_ref, data);
+        // streams from the old greedy encoder must still decode
+        let packed_greedy = compress_greedy(data);
+        assert_eq!(decompress(&packed_greedy, data.len()).unwrap(), data);
     }
 
     #[test]
@@ -163,7 +364,42 @@ mod tests {
         }
         let packed = compress(&data);
         assert!(packed.len() < data.len() / 4, "{} vs {}", packed.len(), data.len());
+        // the chained encoder must never lose to the old greedy one here
+        let greedy = compress_greedy(&data);
+        assert!(
+            packed.len() <= greedy.len(),
+            "chained {} worse than greedy {}",
+            packed.len(),
+            greedy.len()
+        );
         roundtrip(&data);
+    }
+
+    #[test]
+    fn mixed_sensor_like_payload_roundtrips() {
+        // interleave noise with structure: the lazy-match seam cases
+        // (literal-then-longer-match) show up at these boundaries
+        let mut rng = Prng::new(0xA5);
+        let mut data = Vec::new();
+        for i in 0..500u32 {
+            let mut noise = vec![0u8; (i % 13) as usize];
+            rng.fill_bytes(&mut noise);
+            data.extend_from_slice(&noise);
+            data.extend_from_slice(b"/lidar/points frame=");
+            data.extend_from_slice(&i.to_le_bytes());
+            data.extend_from_slice(&[0xEE; 9]);
+        }
+        roundtrip(&data);
+    }
+
+    #[test]
+    fn overlapped_matches_roundtrip() {
+        // distances shorter than the match length exercise the doubling-
+        // window copy in the fast decoder
+        for period in [1usize, 2, 3, 5, 7] {
+            let data: Vec<u8> = (0..10_000).map(|i| (i % period) as u8).collect();
+            roundtrip(&data);
+        }
     }
 
     #[test]

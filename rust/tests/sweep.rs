@@ -6,7 +6,8 @@
 //! matrix trustworthy: distribution must never change verdicts.
 
 use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
-use av_simd::sim::{run_sweep, SweepDriver, SweepReport, SweepSpec};
+use av_simd::sim::{run_sweep, AdaptiveSharding, ShardSizing, SweepDriver, SweepReport, SweepSpec};
+use std::time::Duration;
 
 fn local(workers: usize) -> LocalCluster {
     LocalCluster::new(workers, av_simd::full_op_registry(), "artifacts")
@@ -103,6 +104,183 @@ fn full_scale_sweep_runs_thousands_of_cases() {
         report.worst[0].result.collided || report.collisions == 0,
         "worst case must be a collision when any exist"
     );
+}
+
+/// `small_spec` with adaptive sharding enabled: a short calibration
+/// task, then calibrated shards for the remainder.
+fn adaptive_spec() -> SweepSpec {
+    SweepSpec {
+        adaptive: Some(AdaptiveSharding {
+            target_task: Duration::from_millis(20),
+            calibration_cases: 40,
+            min_shard: 4,
+            max_shard: 512,
+        }),
+        ..small_spec()
+    }
+}
+
+#[test]
+fn adaptive_sharding_is_byte_identical_across_worker_counts() {
+    // sharding derives from *measured* wall time, so task boundaries
+    // differ run to run — the verdict payload must not
+    let fixed_reference = run_sweep(&local(1), &small_spec()).unwrap().encode();
+    for workers in [1usize, 3, 6] {
+        let report = run_sweep(&local(workers), &adaptive_spec()).unwrap();
+        assert_eq!(
+            report.encode(),
+            fixed_reference,
+            "adaptive local[{workers}] diverged from fixed local[1]"
+        );
+        match report.sharding {
+            ShardSizing::Adaptive { calibration_cases, measured_per_case, shard_size } => {
+                assert!(calibration_cases >= 1 && calibration_cases <= 40);
+                assert!(measured_per_case > Duration::ZERO);
+                assert!((4..=512).contains(&shard_size), "shard_size {shard_size}");
+            }
+            other => panic!("adaptive run recorded {other:?}"),
+        }
+    }
+}
+
+#[test]
+fn adaptive_sharding_matches_across_backends() {
+    // acceptance: byte-equality on LocalCluster and StandaloneCluster
+    // with adaptive sharding enabled
+    let launcher = std::path::Path::new("target/release/av-simd");
+    if !launcher.exists() {
+        eprintln!("skipping: build target/release/av-simd first");
+        return;
+    }
+    let local_report = run_sweep(&local(2), &adaptive_spec()).unwrap();
+
+    let cluster = StandaloneCluster::launch_program(launcher, 3, 7455, "artifacts").unwrap();
+    let remote_report = run_sweep(&cluster, &adaptive_spec()).unwrap();
+    cluster.shutdown();
+
+    assert_eq!(
+        remote_report.encode(),
+        local_report.encode(),
+        "adaptive standalone diverged from adaptive local"
+    );
+    // and both equal the fixed-sharding verdicts
+    assert_eq!(
+        local_report.encode(),
+        run_sweep(&local(2), &small_spec()).unwrap().encode(),
+        "adaptive sharding changed the verdicts"
+    );
+}
+
+#[test]
+fn retry_during_stream_preserves_case_order() {
+    // poison the op chain with one transient failure per run: the retry
+    // re-enters the stream immediately (no round barrier) and the
+    // aggregated verdicts must still land in case order, byte-identical
+    // to a clean run. SweepReport::aggregate cross-checks result i
+    // against case i, so any misordering fails loudly inside run().
+    use av_simd::engine::OpCall;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let clean = run_sweep(&local(3), &small_spec()).unwrap();
+
+    let reg = av_simd::full_op_registry();
+    let trips = Arc::new(AtomicUsize::new(0));
+    let t = trips.clone();
+    reg.register("poison_once", move |_c, _p, records| {
+        if t.fetch_add(1, Ordering::SeqCst) == 0 {
+            Err(av_simd::err!(Engine, "transient poison"))
+        } else {
+            Ok(records)
+        }
+    });
+    let cluster = LocalCluster::new(3, reg, "artifacts");
+
+    let spec = small_spec();
+    let shards = spec.shards();
+    let mut tasks = spec.task_specs_from(&shards, 77);
+    for task in &mut tasks {
+        task.ops.insert(0, OpCall::new("poison_once", vec![]));
+    }
+    let n_tasks = tasks.len();
+    let (outs, job) = av_simd::engine::run_job(&cluster, tasks, 2).unwrap();
+    assert_eq!(job.retries, 1, "exactly one transient failure to retry");
+
+    let cases: Vec<_> = shards.iter().flatten().cloned().collect();
+    let mut results = Vec::new();
+    for out in outs {
+        match out {
+            av_simd::engine::TaskOutput::Episodes(rs) => {
+                results.extend(rs.iter().map(|r| av_simd::sim::decode_result(r).unwrap()))
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let poisoned = SweepReport::aggregate(
+        &cases,
+        &results,
+        spec.worst_k,
+        n_tasks,
+        job.retries,
+        job.wall,
+    )
+    .unwrap();
+    assert_eq!(poisoned.encode(), clean.encode());
+}
+
+#[test]
+fn skewed_shard_no_longer_serializes_the_job() {
+    // one shard carries a deliberate straggler stall; with streaming
+    // dispatch the other workers chew through the rest of the sweep
+    // while it runs, so the job wall stays near the straggler wall —
+    // nowhere near the serialized sum of all task time.
+    use av_simd::engine::OpCall;
+
+    const STRAGGLER_MS: u64 = 600;
+    const WORKERS: usize = 4;
+
+    let reg = av_simd::full_op_registry();
+    reg.register("stall_first_shard", move |_c, params, records| {
+        if !params.is_empty() {
+            std::thread::sleep(Duration::from_millis(STRAGGLER_MS));
+        }
+        Ok(records)
+    });
+    let cluster = LocalCluster::new(WORKERS, reg, "artifacts");
+
+    // a small sweep (66 cases) so even unoptimized episode math is tiny
+    // next to the straggler stall
+    let spec = SweepSpec {
+        ego_speeds: vec![12.0],
+        dts: vec![0.05],
+        seeds: vec![1],
+        shard_size: 8,
+        ..SweepSpec::default()
+    };
+    let shards = spec.shards();
+    let mut tasks = spec.task_specs_from(&shards, 78);
+    assert!(tasks.len() >= 8, "need a real shard spread, got {}", tasks.len());
+    for (i, task) in tasks.iter_mut().enumerate() {
+        let marker = if i == 0 { vec![1] } else { vec![] };
+        task.ops.insert(0, OpCall::new("stall_first_shard", marker));
+    }
+
+    let t0 = std::time::Instant::now();
+    let (outs, report) = av_simd::engine::run_job(&cluster, tasks, 1).unwrap();
+    let wall = t0.elapsed();
+    assert_eq!(outs.len(), shards.len());
+    assert_eq!(report.retries, 0);
+
+    // the straggler pins one worker; every other shard must overlap it,
+    // so the job wall stays near the straggler wall. The margin leaves
+    // room for unoptimized episode math on a contended test runner while
+    // still catching any return to queue-behind-the-straggler dispatch.
+    assert!(
+        wall < Duration::from_millis(STRAGGLER_MS) + Duration::from_millis(400),
+        "skewed shard serialized the job: wall {wall:?}"
+    );
+    // and the straggler really ran: the job can't be faster than it
+    assert!(wall >= Duration::from_millis(STRAGGLER_MS), "stall op didn't run: {wall:?}");
 }
 
 #[test]
