@@ -1,0 +1,119 @@
+//! Multi-host sweep scale-out demo: `ClusterSpec` manifest → health
+//! probe → standalone fleet → sweep with mid-sweep re-calibration and a
+//! late-joining worker.
+//!
+//! Workers here are in-process `worker::serve` threads (they speak the
+//! exact protocol of `av-simd worker` processes on remote boxes), so the
+//! demo runs with a plain `cargo run --example deploy_cluster` and
+//! still exercises every deploy-layer code path: manifest parsing, the
+//! version handshake, spec-connected clusters, elastic admission, and
+//! the byte-equality contract against a local run.
+
+use av_simd::engine::deploy::{self, ClusterSpec};
+use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
+use av_simd::sim::{run_sweep, AdaptiveSharding, ShardSizing, SweepSpec};
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+fn spawn_worker(id: usize) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let a = addr.clone();
+    let h = std::thread::spawn(move || {
+        av_simd::engine::worker::serve(&a, id, av_simd::full_op_registry(), "artifacts")
+            .expect("worker serve");
+    });
+    (addr, h)
+}
+
+fn main() -> av_simd::Result<()> {
+    // --- the fleet: two workers now, one joining later ---
+    let (addr_a, h_a) = spawn_worker(0);
+    let (addr_b, h_b) = spawn_worker(1);
+
+    // --- the manifest (in production this is a file: av-simd deploy
+    //     --spec fleet.toml; JSON works too) ---
+    let manifest = format!(
+        "# demo fleet\n\
+         [cluster]\n\
+         name = \"demo\"\n\
+         connect_timeout_ms = 10000\n\n\
+         [workers]\n\
+         hosts = [\"{addr_a}\", \"{addr_b}\"]\n"
+    );
+    let spec = ClusterSpec::load_from_str(&manifest)?;
+    println!("manifest: fleet '{}' with {} endpoint(s)", spec.name, spec.workers.len());
+
+    // --- health probe (what `av-simd deploy --spec ...` prints) ---
+    for h in deploy::probe(&spec) {
+        println!(
+            "  {:<22} {}",
+            h.addr,
+            if h.ok() {
+                format!("ok (worker id {})", h.worker_id.unwrap())
+            } else {
+                format!("DOWN: {}", h.error.unwrap())
+            }
+        );
+    }
+
+    // --- sweep on the fleet, re-calibrating mid-sweep ---
+    let sweep = SweepSpec {
+        ego_speeds: vec![10.0, 14.0],
+        dts: vec![0.05, 0.1],
+        seeds: vec![1, 2],
+        adaptive: Some(AdaptiveSharding {
+            target_task: Duration::from_millis(10),
+            calibration_cases: 40,
+            drift_threshold: 1.2, // eager, to show re-calibration in the log
+            recalibration_window: 32,
+            ..AdaptiveSharding::default()
+        }),
+        ..SweepSpec::default()
+    };
+
+    let cluster = Arc::new(StandaloneCluster::connect(&spec)?);
+    // a third worker comes up *while the sweep runs* and is admitted
+    // into the running task stream
+    let (addr_c, h_c) = spawn_worker(2);
+    let joiner = {
+        let cluster = cluster.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(20));
+            cluster.add_worker(&addr_c, Duration::from_secs(10)).expect("late join");
+        })
+    };
+
+    let remote = run_sweep(cluster.as_ref(), &sweep)?;
+    joiner.join().expect("joiner thread");
+    println!(
+        "fleet sweep: {} cases on {} workers ({} joined late)\n{}",
+        remote.total,
+        cluster.workers(),
+        cluster.workers() - spec.workers.len(),
+        remote.render()
+    );
+    if let ShardSizing::Adaptive { log, .. } = &remote.sharding {
+        println!("calibration log has {} entr(ies)", log.len());
+    }
+
+    // --- the platform contract: byte-identical to a local run ---
+    let local = LocalCluster::new(4, av_simd::full_op_registry(), "artifacts");
+    let reference = run_sweep(&local, &sweep)?;
+    assert_eq!(
+        remote.encode(),
+        reference.encode(),
+        "fleet verdicts diverged from local"
+    );
+    println!("byte-equality check passed (fleet == local[4])");
+
+    cluster.stop_workers();
+    drop(cluster);
+    for h in [h_a, h_b, h_c] {
+        h.join().expect("worker thread");
+    }
+    println!("deploy cluster demo OK");
+    Ok(())
+}

@@ -32,6 +32,7 @@ struct Inner {
 }
 
 impl BagCache {
+    /// Cache bounded at `capacity_bytes` of bag data.
     pub fn new(capacity_bytes: u64) -> Self {
         Self {
             inner: Arc::new(Mutex::new(Inner {
@@ -110,10 +111,12 @@ impl BagCache {
         Ok(MemoryChunkedFile::from_bytes(&bytes))
     }
 
+    /// True when `key` is resident.
     pub fn contains(&self, key: &str) -> bool {
         self.inner.lock().unwrap().entries.contains_key(key)
     }
 
+    /// Bytes currently held.
     pub fn used_bytes(&self) -> u64 {
         self.inner.lock().unwrap().used
     }
@@ -124,6 +127,7 @@ impl BagCache {
         (g.hits, g.misses, g.evictions)
     }
 
+    /// Drop every entry (stats are kept).
     pub fn clear(&self) {
         let mut g = self.inner.lock().unwrap();
         g.entries.clear();

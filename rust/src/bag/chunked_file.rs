@@ -23,6 +23,7 @@ pub trait ChunkStore: Send {
     /// Total bytes stored.
     fn len(&self) -> u64;
 
+    /// True when nothing has been stored.
     fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -62,8 +63,8 @@ impl<S: ChunkStore> ChunkStore for &mut S {
 /// Disk-backed store — the paper's original `ChunkedFile`. Writes go
 /// through a buffered writer; reads reopen a read handle at the requested
 /// offset. `O_DIRECT`-style cache bypass is not portable, so the Fig 6
-/// disk baseline additionally calls [`DiskChunkedFile::sync`] on flush to
-/// make the disk path honest.
+/// disk baseline additionally fsyncs on flush
+/// ([`DiskChunkedFile::set_sync_on_flush`]) to make the disk path honest.
 pub struct DiskChunkedFile {
     path: PathBuf,
     writer: Option<BufWriter<File>>,
@@ -109,6 +110,7 @@ impl DiskChunkedFile {
         self.sync_on_flush = on;
     }
 
+    /// Path of the backing file.
     pub fn path(&self) -> &Path {
         &self.path
     }

@@ -21,23 +21,33 @@ use crate::error::{Error, Result};
 use crate::msg::Time;
 use crate::util::bytes::{ByteReader, ByteWriter};
 
+/// File magic ('AVBAG1' + newline).
 pub const MAGIC: &[u8; 7] = b"AVBAG1\n";
+/// On-disk format version written after the magic.
 pub const FORMAT_VERSION: u8 = 1;
+/// Footer sentinel (last 8 bytes of every bag).
 pub const FOOTER_MAGIC: u64 = 0x4741_4256_4156_4721; // arbitrary sentinel
+/// Footer size in bytes (offset + len + magic).
 pub const FOOTER_LEN: u64 = 24;
 
+/// Record type: connection metadata.
 pub const REC_CONNECTION: u8 = 2;
+/// Record type: message chunk.
 pub const REC_CHUNK: u8 = 3;
+/// Record type: the index.
 pub const REC_INDEX: u8 = 4;
 
 /// Chunk body compression codecs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Compression {
+    /// No compression: chunk bodies are stored raw.
     None,
+    /// Deflate-class LZ compression (`util::lz`).
     Deflate,
 }
 
 impl Compression {
+    /// Parse a config-file codec name (`"none"` / `"deflate"`).
     pub fn from_name(name: &str) -> Result<Self> {
         match name {
             "none" => Ok(Compression::None),
@@ -46,6 +56,7 @@ impl Compression {
         }
     }
 
+    /// The codec byte stored in chunk headers.
     pub fn to_u8(self) -> u8 {
         match self {
             Compression::None => 0,
@@ -53,6 +64,7 @@ impl Compression {
         }
     }
 
+    /// Decode a chunk-header codec byte.
     pub fn from_u8(v: u8) -> Result<Self> {
         match v {
             0 => Ok(Compression::None),
@@ -65,18 +77,23 @@ impl Compression {
 /// Topic → connection metadata (rosbag "connection record").
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct Connection {
+    /// Connection id referenced by chunk messages.
     pub conn_id: u32,
+    /// Topic name.
     pub topic: String,
+    /// Message type on the topic.
     pub type_name: String,
 }
 
 impl Connection {
+    /// Append the wire encoding to `w`.
     pub fn encode(&self, w: &mut ByteWriter) {
         w.put_u32(self.conn_id);
         w.put_str(&self.topic);
         w.put_str(&self.type_name);
     }
 
+    /// Decode a connection from `r`.
     pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
         Ok(Self {
             conn_id: r.get_u32()?,
@@ -89,8 +106,11 @@ impl Connection {
 /// One message inside a chunk body.
 #[derive(Debug, Clone, PartialEq)]
 pub struct MessageRecord {
+    /// Connection the message belongs to.
     pub conn_id: u32,
+    /// Message timestamp.
     pub time: Time,
+    /// Raw message payload.
     pub data: Vec<u8>,
 }
 
@@ -101,12 +121,16 @@ pub struct ChunkInfo {
     pub offset: u64,
     /// Envelope + payload + crc length, for single-read fetches.
     pub stored_len: u32,
+    /// Earliest message timestamp in the chunk.
     pub start_time: Time,
+    /// Latest message timestamp in the chunk.
     pub end_time: Time,
+    /// Messages in the chunk.
     pub message_count: u32,
 }
 
 impl ChunkInfo {
+    /// Append the wire encoding to `w`.
     pub fn encode(&self, w: &mut ByteWriter) {
         w.put_u64(self.offset);
         w.put_u32(self.stored_len);
@@ -115,6 +139,7 @@ impl ChunkInfo {
         w.put_u32(self.message_count);
     }
 
+    /// Decode a chunk-info entry from `r`.
     pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
         Ok(Self {
             offset: r.get_u64()?,

@@ -26,6 +26,7 @@ impl Default for MemoryChunkedFile {
 }
 
 impl MemoryChunkedFile {
+    /// Empty in-memory file.
     pub fn new() -> Self {
         Self { pages: Vec::new(), len: 0 }
     }

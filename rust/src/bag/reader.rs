@@ -11,9 +11,13 @@ use std::collections::HashMap;
 /// One played-back message.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlayedMessage {
+    /// Topic the message was recorded on.
     pub topic: String,
+    /// Message type on the topic.
     pub type_name: String,
+    /// Recorded timestamp.
     pub time: Time,
+    /// Raw message payload.
     pub data: Vec<u8>,
 }
 
@@ -78,14 +82,17 @@ impl<S: ChunkStore> BagReader<S> {
         Ok(Self { store, chunks, connections, conn_by_id })
     }
 
+    /// Connection records from the bag index.
     pub fn connections(&self) -> &[Connection] {
         &self.connections
     }
 
+    /// Number of chunks in the bag.
     pub fn chunk_count(&self) -> usize {
         self.chunks.len()
     }
 
+    /// Total messages across all chunks (from the index).
     pub fn message_count(&self) -> u64 {
         self.chunks.iter().map(|c| c.message_count as u64).sum()
     }

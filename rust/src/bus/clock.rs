@@ -26,6 +26,7 @@ pub struct SimClock {
 }
 
 impl SimClock {
+    /// Clock starting at time zero with the given pacing.
     pub fn new(pace: Pace) -> Self {
         Self { now_nanos: Arc::new(AtomicU64::new(0)), pace }
     }
@@ -40,6 +41,7 @@ impl SimClock {
         self.now_nanos.fetch_max(t.nanos, Ordering::AcqRel);
     }
 
+    /// The pacing mode this clock was created with.
     pub fn pace(&self) -> Pace {
         self.pace
     }

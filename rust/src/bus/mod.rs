@@ -39,7 +39,9 @@ pub enum OverflowPolicy {
 /// Subscriber quality-of-service.
 #[derive(Debug, Clone, Copy)]
 pub struct QoS {
+    /// Max queued messages per subscriber.
     pub depth: usize,
+    /// What happens when the queue is full.
     pub overflow: OverflowPolicy,
 }
 
@@ -50,10 +52,12 @@ impl Default for QoS {
 }
 
 impl QoS {
+    /// Blocking QoS: publishers wait instead of dropping.
     pub fn lossless(depth: usize) -> Self {
         Self { depth, overflow: OverflowPolicy::Block }
     }
 
+    /// Sensor QoS: oldest messages are dropped on overflow.
     pub fn sensor(depth: usize) -> Self {
         Self { depth, overflow: OverflowPolicy::DropOldest }
     }
@@ -150,6 +154,7 @@ pub struct Broker {
 }
 
 impl Broker {
+    /// Empty broker with no topics.
     pub fn new() -> Self {
         Self::default()
     }
@@ -243,6 +248,7 @@ impl<M: Message> Publisher<M> {
         self.broker.publish_raw(&self.topic, msg.encode())
     }
 
+    /// The topic this publisher writes to.
     pub fn topic(&self) -> &str {
         &self.topic
     }

@@ -11,14 +11,20 @@ use std::sync::{Arc, Mutex};
 /// Endpoint descriptor for introspection.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct EndpointInfo {
+    /// Topic name.
     pub topic: String,
+    /// Message type on the topic.
     pub type_name: String,
+    /// Whether this endpoint publishes or subscribes.
     pub kind: EndpointKind,
 }
 
+/// Which side of a topic an endpoint is on.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum EndpointKind {
+    /// The endpoint publishes.
     Publisher,
+    /// The endpoint subscribes.
     Subscriber,
 }
 
@@ -30,6 +36,7 @@ pub struct Node {
 }
 
 impl Node {
+    /// A node named `name` on `broker`.
     pub fn new(broker: &Broker, name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -38,6 +45,7 @@ impl Node {
         }
     }
 
+    /// The node's name.
     pub fn name(&self) -> &str {
         &self.name
     }

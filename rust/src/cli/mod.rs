@@ -10,9 +10,11 @@ use std::collections::HashMap;
 /// Parsed command line: subcommand, flags, positionals.
 #[derive(Debug, Clone, Default)]
 pub struct Args {
+    /// The subcommand (empty when none was given).
     pub command: String,
     flags: HashMap<String, String>,
     bools: Vec<String>,
+    /// Positional (non-flag) arguments, in order.
     pub positional: Vec<String>,
 }
 
@@ -45,19 +47,23 @@ impl Args {
         Ok(out)
     }
 
+    /// The value of `--name`, when present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.flags.get(name).map(|s| s.as_str())
     }
 
+    /// The value of `--name`, or `default`.
     pub fn get_or<'a>(&'a self, name: &str, default: &'a str) -> &'a str {
         self.get(name).unwrap_or(default)
     }
 
+    /// The value of `--name`, or an error naming the flag.
     pub fn require(&self, name: &str) -> Result<&str> {
         self.get(name)
             .ok_or_else(|| Error::Config(format!("missing required flag --{name}")))
     }
 
+    /// `--name` parsed as `usize`, or `default` when absent.
     pub fn get_usize(&self, name: &str, default: usize) -> Result<usize> {
         match self.get(name) {
             None => Ok(default),
@@ -67,6 +73,7 @@ impl Args {
         }
     }
 
+    /// `--name` parsed as `u64`, or `default` when absent.
     pub fn get_u64(&self, name: &str, default: u64) -> Result<u64> {
         match self.get(name) {
             None => Ok(default),
@@ -76,6 +83,7 @@ impl Args {
         }
     }
 
+    /// True when `--name` was passed (bool or with a value).
     pub fn has(&self, name: &str) -> bool {
         self.bools.iter().any(|b| b == name) || self.flags.contains_key(name)
     }

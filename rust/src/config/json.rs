@@ -1,0 +1,347 @@
+//! Minimal JSON parser for deployment manifests.
+//!
+//! Cluster specs travel through provisioning systems that speak JSON
+//! more readily than TOML, so [`crate::engine::deploy::ClusterSpec`]
+//! accepts both. This is a strict recursive-descent parser for the full
+//! JSON value grammar (objects, arrays, strings with escapes, numbers,
+//! booleans, null); [`flatten_json`] then maps a two-level object of
+//! scalars / string arrays onto the same flat `"section.key"` map the
+//! TOML-subset parser produces, so both formats share one typed loader.
+
+use super::toml::TomlValue;
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+
+/// A parsed JSON value.
+#[derive(Debug, Clone, PartialEq)]
+pub enum JsonValue {
+    /// `null`.
+    Null,
+    /// `true` / `false`.
+    Bool(bool),
+    /// Any JSON number (always carried as `f64`).
+    Num(f64),
+    /// A string literal (escapes resolved).
+    Str(String),
+    /// An array of values.
+    Array(Vec<JsonValue>),
+    /// An object; insertion order is not preserved (keys sort).
+    Object(BTreeMap<String, JsonValue>),
+}
+
+struct Parser<'a> {
+    bytes: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Parser<'a> {
+    fn err(&self, msg: &str) -> Error {
+        Error::Config(format!("json at byte {}: {msg}", self.pos))
+    }
+
+    fn skip_ws(&mut self) {
+        while let Some(b) = self.bytes.get(self.pos) {
+            if matches!(b, b' ' | b'\t' | b'\n' | b'\r') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+    }
+
+    fn peek(&self) -> Option<u8> {
+        self.bytes.get(self.pos).copied()
+    }
+
+    fn expect(&mut self, b: u8) -> Result<()> {
+        if self.peek() == Some(b) {
+            self.pos += 1;
+            Ok(())
+        } else {
+            Err(self.err(&format!("expected '{}'", b as char)))
+        }
+    }
+
+    fn value(&mut self) -> Result<JsonValue> {
+        self.skip_ws();
+        match self.peek() {
+            Some(b'{') => self.object(),
+            Some(b'[') => self.array(),
+            Some(b'"') => Ok(JsonValue::Str(self.string()?)),
+            Some(b't') => self.literal("true", JsonValue::Bool(true)),
+            Some(b'f') => self.literal("false", JsonValue::Bool(false)),
+            Some(b'n') => self.literal("null", JsonValue::Null),
+            Some(c) if c == b'-' || c.is_ascii_digit() => self.number(),
+            Some(c) => Err(self.err(&format!("unexpected '{}'", c as char))),
+            None => Err(self.err("unexpected end of input")),
+        }
+    }
+
+    fn literal(&mut self, text: &str, v: JsonValue) -> Result<JsonValue> {
+        if self.bytes[self.pos..].starts_with(text.as_bytes()) {
+            self.pos += text.len();
+            Ok(v)
+        } else {
+            Err(self.err(&format!("expected '{text}'")))
+        }
+    }
+
+    fn number(&mut self) -> Result<JsonValue> {
+        let start = self.pos;
+        if self.peek() == Some(b'-') {
+            self.pos += 1;
+        }
+        while let Some(c) = self.peek() {
+            if c.is_ascii_digit() || matches!(c, b'.' | b'e' | b'E' | b'+' | b'-') {
+                self.pos += 1;
+            } else {
+                break;
+            }
+        }
+        let text = std::str::from_utf8(&self.bytes[start..self.pos])
+            .map_err(|_| self.err("non-utf8 number"))?;
+        text.parse::<f64>()
+            .map(JsonValue::Num)
+            .map_err(|_| self.err(&format!("bad number '{text}'")))
+    }
+
+    fn string(&mut self) -> Result<String> {
+        self.expect(b'"')?;
+        let mut out = String::new();
+        loop {
+            match self.peek() {
+                None => return Err(self.err("unterminated string")),
+                Some(b'"') => {
+                    self.pos += 1;
+                    return Ok(out);
+                }
+                Some(b'\\') => {
+                    self.pos += 1;
+                    let esc = self.peek().ok_or_else(|| self.err("dangling escape"))?;
+                    self.pos += 1;
+                    match esc {
+                        b'"' => out.push('"'),
+                        b'\\' => out.push('\\'),
+                        b'/' => out.push('/'),
+                        b'n' => out.push('\n'),
+                        b't' => out.push('\t'),
+                        b'r' => out.push('\r'),
+                        b'b' => out.push('\u{0008}'),
+                        b'f' => out.push('\u{000C}'),
+                        b'u' => {
+                            if self.pos + 4 > self.bytes.len() {
+                                return Err(self.err("truncated \\u escape"));
+                            }
+                            let hex =
+                                std::str::from_utf8(&self.bytes[self.pos..self.pos + 4])
+                                    .map_err(|_| self.err("bad \\u escape"))?;
+                            let code = u32::from_str_radix(hex, 16)
+                                .map_err(|_| self.err("bad \\u escape"))?;
+                            // surrogate pairs are out of scope for manifests
+                            let ch = char::from_u32(code)
+                                .ok_or_else(|| self.err("bad \\u code point"))?;
+                            out.push(ch);
+                            self.pos += 4;
+                        }
+                        other => {
+                            return Err(
+                                self.err(&format!("unknown escape '\\{}'", other as char))
+                            )
+                        }
+                    }
+                }
+                Some(_) => {
+                    // consume one UTF-8 scalar (multi-byte sequences pass
+                    // through verbatim)
+                    let rest = std::str::from_utf8(&self.bytes[self.pos..])
+                        .map_err(|_| self.err("non-utf8 string"))?;
+                    let ch = rest.chars().next().unwrap();
+                    out.push(ch);
+                    self.pos += ch.len_utf8();
+                }
+            }
+        }
+    }
+
+    fn array(&mut self) -> Result<JsonValue> {
+        self.expect(b'[')?;
+        let mut items = Vec::new();
+        self.skip_ws();
+        if self.peek() == Some(b']') {
+            self.pos += 1;
+            return Ok(JsonValue::Array(items));
+        }
+        loop {
+            items.push(self.value()?);
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b']') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Array(items));
+                }
+                _ => return Err(self.err("expected ',' or ']'")),
+            }
+        }
+    }
+
+    fn object(&mut self) -> Result<JsonValue> {
+        self.expect(b'{')?;
+        let mut map = BTreeMap::new();
+        self.skip_ws();
+        if self.peek() == Some(b'}') {
+            self.pos += 1;
+            return Ok(JsonValue::Object(map));
+        }
+        loop {
+            self.skip_ws();
+            let key = self.string()?;
+            self.skip_ws();
+            self.expect(b':')?;
+            let val = self.value()?;
+            if map.insert(key.clone(), val).is_some() {
+                return Err(self.err(&format!("duplicate key '{key}'")));
+            }
+            self.skip_ws();
+            match self.peek() {
+                Some(b',') => {
+                    self.pos += 1;
+                }
+                Some(b'}') => {
+                    self.pos += 1;
+                    return Ok(JsonValue::Object(map));
+                }
+                _ => return Err(self.err("expected ',' or '}'")),
+            }
+        }
+    }
+}
+
+/// Parse one JSON value from `text`; trailing non-whitespace is an error.
+pub fn parse_json(text: &str) -> Result<JsonValue> {
+    let mut p = Parser { bytes: text.as_bytes(), pos: 0 };
+    let v = p.value()?;
+    p.skip_ws();
+    if p.pos != p.bytes.len() {
+        return Err(p.err("trailing data after value"));
+    }
+    Ok(v)
+}
+
+/// Flatten a two-level JSON object (`{"section": {"key": value}}`) into
+/// the same `"section.key" →` [`TomlValue`] map [`super::parse_toml`]
+/// produces. Supported leaf values: strings, numbers (integral numbers
+/// become [`TomlValue::Int`]), booleans, and arrays of strings — the
+/// exact subset the TOML side accepts, so a manifest can be written in
+/// either format and load through one code path.
+pub fn flatten_json(text: &str) -> Result<BTreeMap<String, TomlValue>> {
+    let JsonValue::Object(sections) = parse_json(text)? else {
+        return Err(Error::Config("json manifest must be an object".into()));
+    };
+    let mut out = BTreeMap::new();
+    for (section, val) in sections {
+        let JsonValue::Object(fields) = val else {
+            return Err(Error::Config(format!(
+                "json manifest: top-level '{section}' must be an object"
+            )));
+        };
+        for (key, leaf) in fields {
+            let full = format!("{section}.{key}");
+            let tv = match leaf {
+                JsonValue::Str(s) => TomlValue::Str(s),
+                JsonValue::Bool(b) => TomlValue::Bool(b),
+                JsonValue::Num(n) if n.fract() == 0.0 && n.abs() < 9.0e18 => {
+                    TomlValue::Int(n as i64)
+                }
+                JsonValue::Num(n) => TomlValue::Float(n),
+                JsonValue::Array(items) => {
+                    let mut strs = Vec::with_capacity(items.len());
+                    for it in items {
+                        match it {
+                            JsonValue::Str(s) => strs.push(s),
+                            other => {
+                                return Err(Error::Config(format!(
+                                    "json manifest: '{full}' array must hold strings, \
+                                     got {other:?}"
+                                )))
+                            }
+                        }
+                    }
+                    TomlValue::StrArray(strs)
+                }
+                other => {
+                    return Err(Error::Config(format!(
+                        "json manifest: unsupported value for '{full}': {other:?}"
+                    )))
+                }
+            };
+            out.insert(full, tv);
+        }
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalars_parse() {
+        assert_eq!(parse_json("true").unwrap(), JsonValue::Bool(true));
+        assert_eq!(parse_json("null").unwrap(), JsonValue::Null);
+        assert_eq!(parse_json("-2.5e2").unwrap(), JsonValue::Num(-250.0));
+        assert_eq!(
+            parse_json(r#""a\n\"b\" A""#).unwrap(),
+            JsonValue::Str("a\n\"b\" A".into())
+        );
+    }
+
+    #[test]
+    fn nested_structures_parse() {
+        let v = parse_json(r#"{"a": [1, "x", {"b": false}], "c": {}}"#).unwrap();
+        let JsonValue::Object(o) = v else { panic!() };
+        let JsonValue::Array(a) = &o["a"] else { panic!() };
+        assert_eq!(a.len(), 3);
+        assert_eq!(o["c"], JsonValue::Object(BTreeMap::new()));
+    }
+
+    #[test]
+    fn malformed_inputs_error() {
+        for bad in [
+            "", "{", "[1,", "{\"a\" 1}", "tru", "\"unterminated", "1 2",
+            "{\"a\":1,\"a\":2}", "{\"a\": nope}",
+        ] {
+            assert!(parse_json(bad).is_err(), "accepted {bad:?}");
+        }
+    }
+
+    #[test]
+    fn flatten_matches_toml_shape() {
+        let flat = flatten_json(
+            r#"{
+                "cluster": {"name": "lab", "connect_timeout_ms": 500},
+                "workers": {"hosts": ["10.0.0.1:7077", "10.0.0.2:7077"], "capacity": 2},
+                "launch": {"program": "target/release/av-simd"}
+            }"#,
+        )
+        .unwrap();
+        assert_eq!(flat["cluster.name"], TomlValue::Str("lab".into()));
+        assert_eq!(flat["cluster.connect_timeout_ms"], TomlValue::Int(500));
+        assert_eq!(flat["workers.capacity"], TomlValue::Int(2));
+        assert_eq!(
+            flat["workers.hosts"].as_str_array().unwrap().len(),
+            2
+        );
+        assert_eq!(flat["launch.program"], TomlValue::Str("target/release/av-simd".into()));
+    }
+
+    #[test]
+    fn flatten_rejects_wrong_shapes() {
+        assert!(flatten_json("[1]").is_err());
+        assert!(flatten_json(r#"{"a": 1}"#).is_err(), "top level must be objects");
+        assert!(flatten_json(r#"{"a": {"b": [1]}}"#).is_err(), "non-string array");
+        assert!(flatten_json(r#"{"a": {"b": null}}"#).is_err());
+    }
+}

@@ -7,8 +7,10 @@
 //! production default and can be overridden by `AV_SIMD_*` environment
 //! variables (env wins over file, file wins over default).
 
+pub mod json;
 mod toml;
 
+pub use json::{flatten_json, parse_json, JsonValue};
 pub use toml::{parse_toml, TomlValue};
 
 use crate::error::{Error, Result};
@@ -38,6 +40,7 @@ impl std::str::FromStr for ClusterMode {
 /// Engine / cluster section.
 #[derive(Debug, Clone)]
 pub struct ClusterConfig {
+    /// Cluster execution mode.
     pub mode: ClusterMode,
     /// Number of workers (threads in local mode, processes in standalone).
     pub workers: usize,
@@ -134,9 +137,13 @@ impl Default for SimConfig {
 /// Top-level typed configuration.
 #[derive(Debug, Clone, Default)]
 pub struct PlatformConfig {
+    /// Engine / cluster section.
     pub cluster: ClusterConfig,
+    /// Bag / cache section.
     pub bag: BagConfig,
+    /// Perception / runtime section.
     pub perception: PerceptionConfig,
+    /// Simulation section.
     pub sim: SimConfig,
 }
 

@@ -12,14 +12,20 @@ use std::collections::BTreeMap;
 /// A parsed scalar value.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TomlValue {
+    /// A quoted string.
     Str(String),
+    /// An integer.
     Int(i64),
+    /// A float.
     Float(f64),
+    /// `true` / `false`.
     Bool(bool),
+    /// An array of strings.
     StrArray(Vec<String>),
 }
 
 impl TomlValue {
+    /// The string value, or a config error naming the actual type.
     pub fn as_str(&self) -> Result<&str> {
         match self {
             TomlValue::Str(s) => Ok(s),
@@ -27,6 +33,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as a non-negative integer.
     pub fn as_usize(&self) -> Result<usize> {
         match self {
             TomlValue::Int(i) if *i >= 0 => Ok(*i as usize),
@@ -34,6 +41,7 @@ impl TomlValue {
         }
     }
 
+    /// The value as a float (integers widen).
     pub fn as_f64(&self) -> Result<f64> {
         match self {
             TomlValue::Float(f) => Ok(*f),
@@ -42,6 +50,7 @@ impl TomlValue {
         }
     }
 
+    /// The boolean value.
     pub fn as_bool(&self) -> Result<bool> {
         match self {
             TomlValue::Bool(b) => Ok(*b),
@@ -49,6 +58,7 @@ impl TomlValue {
         }
     }
 
+    /// The string-array value.
     pub fn as_str_array(&self) -> Result<&[String]> {
         match self {
             TomlValue::StrArray(v) => Ok(v),

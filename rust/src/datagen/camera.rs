@@ -15,6 +15,7 @@ pub struct SceneObject {
     pub class_id: u32,
     /// Center x in [0,1], bottom y in [0,1] (1 = bottom of frame).
     pub cx: f64,
+    /// Ground-contact y in [0,1] of frame height (1 = bottom).
     pub ground_y: f64,
     /// Apparent size in [0,1] of frame height.
     pub scale: f64,
@@ -23,8 +24,11 @@ pub struct SceneObject {
 /// Scene description for one frame.
 #[derive(Debug, Clone)]
 pub struct SceneSpec {
+    /// Frame width (px).
     pub width: u32,
+    /// Frame height (px).
     pub height: u32,
+    /// Objects to render, back to front.
     pub objects: Vec<SceneObject>,
     /// Additive pixel noise amplitude (0-255 scale).
     pub noise: f64,

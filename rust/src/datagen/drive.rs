@@ -18,6 +18,7 @@ pub struct DriveSpec {
     pub rate_hz: f64,
     /// Frame geometry.
     pub width: u32,
+    /// Frame height (px).
     pub height: u32,
     /// LiDAR rays per scan.
     pub lidar_rays: usize,
@@ -34,7 +35,9 @@ impl Default for DriveSpec {
 /// Ground truth for one frame (for recognition accuracy checks).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct FrameTruth {
+    /// Camera frame sequence number.
     pub seq: u64,
+    /// Class id of the largest object in frame.
     pub dominant_class: u32,
 }
 

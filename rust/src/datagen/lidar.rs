@@ -10,13 +10,18 @@ use crate::util::prng::Prng;
 /// An axis-aligned obstacle box in the ego frame (x forward, y left).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Obstacle {
+    /// Box center x in the ego frame (m, forward).
     pub cx: f64,
+    /// Box center y in the ego frame (m, left).
     pub cy: f64,
+    /// Half-extent along x (m).
     pub half_x: f64,
+    /// Half-extent along y (m).
     pub half_y: f64,
 }
 
 impl Obstacle {
+    /// A car-sized obstacle centered at (`cx`, `cy`).
     pub fn vehicle(cx: f64, cy: f64) -> Self {
         Self { cx, cy, half_x: 2.3, half_y: 0.95 }
     }

@@ -88,6 +88,8 @@ pub struct LocalCluster {
 }
 
 impl LocalCluster {
+    /// Build a pool of `workers` persistent threads sharing `registry`,
+    /// each with its own [`TaskCtx`] rooted at `artifact_dir`.
     pub fn new(workers: usize, registry: OpRegistry, artifact_dir: &str) -> Self {
         assert!(workers >= 1, "need at least one worker");
         let pool = Arc::new(PoolShared {
@@ -109,6 +111,7 @@ impl LocalCluster {
         Self { registry, pool, workers, handles: Mutex::new(handles) }
     }
 
+    /// The operator registry this cluster's workers execute from.
     pub fn registry(&self) -> &OpRegistry {
         &self.registry
     }

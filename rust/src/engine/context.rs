@@ -86,10 +86,12 @@ impl SimContext {
         &self.inner.registry
     }
 
+    /// Number of workers in the underlying cluster.
     pub fn workers(&self) -> usize {
         self.inner.cluster.workers()
     }
 
+    /// Backend name of the underlying cluster (`"local"` / `"standalone"`).
     pub fn backend(&self) -> &'static str {
         self.inner.cluster.backend()
     }
@@ -99,6 +101,7 @@ impl SimContext {
         self.inner.last_report.lock().unwrap().clone()
     }
 
+    /// Gracefully stop the underlying cluster (no-op for local pools).
     pub fn shutdown(&self) {
         self.inner.cluster.shutdown();
     }
@@ -200,6 +203,7 @@ pub struct Rdd {
 }
 
 impl Rdd {
+    /// Number of partitions (= tasks this RDD compiles into).
     pub fn num_partitions(&self) -> usize {
         self.sources.len()
     }

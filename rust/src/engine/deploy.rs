@@ -1,0 +1,429 @@
+//! Deployment layer: `ClusterSpec` manifests for multi-host standalone
+//! clusters.
+//!
+//! The paper's platform treats the worker fleet as a managed resource —
+//! a Spark manager owns N playback nodes spread over many machines. The
+//! deploy layer is our equivalent: a [`ClusterSpec`] names every worker
+//! endpoint (`host:port`, with per-host capacity expansion), how long to
+//! wait for each to come up, and optionally how to launch workers on
+//! *this* machine. Specs are plain files (TOML or JSON — provisioning
+//! systems prefer JSON, humans prefer TOML) so the same manifest drives
+//! `av-simd deploy`, `av-simd sweep --cluster-spec`, and
+//! [`super::remote::StandaloneCluster::connect`].
+//!
+//! Health checking goes through the RPC handshake
+//! ([`super::worker::WorkerClient::handshake`]): every probe verifies
+//! both liveness and protocol version, so a stale binary on one box is
+//! caught at deploy time, not mid-sweep.
+//!
+//! ```
+//! use av_simd::engine::deploy::ClusterSpec;
+//!
+//! let spec = ClusterSpec::from_toml_text(r#"
+//!     [cluster]
+//!     name = "lab"
+//!     connect_timeout_ms = 5000
+//!
+//!     [workers]
+//!     hosts = ["10.0.0.1:7077*2", "10.0.0.2:7077"]
+//!     capacity = 1
+//! "#).unwrap();
+//! // "*2" expands to two sequential ports on 10.0.0.1
+//! assert_eq!(spec.addrs(), vec![
+//!     "10.0.0.1:7077".to_string(),
+//!     "10.0.0.1:7078".to_string(),
+//!     "10.0.0.2:7077".to_string(),
+//! ]);
+//! ```
+
+use super::worker::WorkerClient;
+use crate::config::{flatten_json, parse_toml, TomlValue};
+use crate::error::{Error, Result};
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+/// One worker endpoint in a [`ClusterSpec`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct WorkerEndpoint {
+    /// Hostname or IP address.
+    pub host: String,
+    /// TCP port the worker listens on.
+    pub port: u16,
+}
+
+impl WorkerEndpoint {
+    /// The `host:port` dial string.
+    pub fn addr(&self) -> String {
+        format!("{}:{}", self.host, self.port)
+    }
+
+    /// True when the endpoint is on this machine (loopback), i.e. a
+    /// candidate for [`launch_local_workers`].
+    pub fn is_local(&self) -> bool {
+        matches!(self.host.as_str(), "127.0.0.1" | "localhost" | "::1")
+    }
+
+    /// Parse one manifest entry into endpoints. Entries are
+    /// `host:port` (one worker) or `host:port*N` (N workers on
+    /// sequential ports starting at `port`); with no `*N` suffix the
+    /// spec-wide `capacity` applies.
+    pub fn parse(entry: &str, default_capacity: usize) -> Result<Vec<WorkerEndpoint>> {
+        let (addr, count) = match entry.rsplit_once('*') {
+            Some((addr, n)) => {
+                let n: usize = n.trim().parse().map_err(|_| {
+                    Error::Config(format!("cluster spec: bad capacity in '{entry}'"))
+                })?;
+                (addr.trim(), n)
+            }
+            None => (entry.trim(), default_capacity),
+        };
+        if count == 0 {
+            return Err(Error::Config(format!(
+                "cluster spec: zero capacity in '{entry}'"
+            )));
+        }
+        let (host, port) = addr.rsplit_once(':').ok_or_else(|| {
+            Error::Config(format!("cluster spec: '{entry}' is not host:port"))
+        })?;
+        if host.is_empty() {
+            return Err(Error::Config(format!("cluster spec: empty host in '{entry}'")));
+        }
+        let port: u16 = port.parse().map_err(|_| {
+            Error::Config(format!("cluster spec: bad port in '{entry}'"))
+        })?;
+        if (port as usize) + count - 1 > u16::MAX as usize {
+            return Err(Error::Config(format!(
+                "cluster spec: '{entry}' expands past port 65535"
+            )));
+        }
+        Ok((0..count)
+            .map(|j| WorkerEndpoint { host: host.to_string(), port: port + j as u16 })
+            .collect())
+    }
+}
+
+/// A deployable cluster manifest: every worker endpoint the driver
+/// should dial, plus connection and launch parameters. See the module
+/// docs for the file format.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterSpec {
+    /// Human-readable fleet name (shows up in errors and the deploy
+    /// status table).
+    pub name: String,
+    /// Expanded worker endpoints, in manifest order.
+    pub workers: Vec<WorkerEndpoint>,
+    /// Per-endpoint connect/handshake budget.
+    pub connect_timeout: Duration,
+    /// Artifact directory passed to locally launched workers.
+    pub artifact_dir: String,
+    /// Worker binary for [`launch_local_workers`] (usually
+    /// `target/release/av-simd`); `None` means the fleet is launched by
+    /// something else (systemd, k8s, ssh loops).
+    pub launch_program: Option<String>,
+}
+
+impl ClusterSpec {
+    /// Load a manifest from disk, dispatching on content: files whose
+    /// first non-whitespace byte is `{` parse as JSON, everything else
+    /// as the TOML subset.
+    pub fn load(path: &Path) -> Result<Self> {
+        let text = std::fs::read_to_string(path)
+            .map_err(|e| Error::Config(format!("read cluster spec {}: {e}", path.display())))?;
+        Self::load_from_str(&text)
+    }
+
+    /// Parse a manifest from text with the same content dispatch as
+    /// [`ClusterSpec::load`] (leading `{` → JSON, otherwise TOML).
+    pub fn load_from_str(text: &str) -> Result<Self> {
+        if text.trim_start().starts_with('{') {
+            Self::from_json_text(text)
+        } else {
+            Self::from_toml_text(text)
+        }
+    }
+
+    /// Parse a TOML-subset manifest.
+    pub fn from_toml_text(text: &str) -> Result<Self> {
+        Self::from_map(&parse_toml(text)?)
+    }
+
+    /// Parse a JSON manifest (same sections and keys as the TOML form).
+    pub fn from_json_text(text: &str) -> Result<Self> {
+        Self::from_map(&flatten_json(text)?)
+    }
+
+    /// Build a spec from the flat `"section.key"` map both parsers
+    /// produce. Unknown keys are errors — manifest typos fail loudly.
+    pub fn from_map(doc: &BTreeMap<String, TomlValue>) -> Result<Self> {
+        let mut name = "cluster".to_string();
+        let mut connect_timeout = Duration::from_secs(20);
+        let mut artifact_dir = "artifacts".to_string();
+        let mut launch_program = None;
+        let mut hosts: Vec<String> = Vec::new();
+        let mut capacity = 1usize;
+        for (key, val) in doc {
+            match key.as_str() {
+                "cluster.name" => name = val.as_str()?.to_string(),
+                "cluster.connect_timeout_ms" => {
+                    connect_timeout = Duration::from_millis(val.as_usize()? as u64)
+                }
+                "cluster.artifact_dir" => artifact_dir = val.as_str()?.to_string(),
+                "workers.hosts" => hosts = val.as_str_array()?.to_vec(),
+                "workers.capacity" => capacity = val.as_usize()?,
+                "launch.program" => launch_program = Some(val.as_str()?.to_string()),
+                other => {
+                    return Err(Error::Config(format!(
+                        "cluster spec: unknown key '{other}'"
+                    )))
+                }
+            }
+        }
+        if capacity == 0 {
+            return Err(Error::Config("cluster spec: workers.capacity must be >= 1".into()));
+        }
+        let mut workers = Vec::new();
+        for entry in &hosts {
+            workers.extend(WorkerEndpoint::parse(entry, capacity)?);
+        }
+        if workers.is_empty() {
+            return Err(Error::Config(
+                "cluster spec: workers.hosts must name at least one endpoint".into(),
+            ));
+        }
+        // duplicate endpoints would double-dial one worker
+        let mut seen = std::collections::BTreeSet::new();
+        for w in &workers {
+            if !seen.insert(w.addr()) {
+                return Err(Error::Config(format!(
+                    "cluster spec: duplicate endpoint {}",
+                    w.addr()
+                )));
+            }
+        }
+        Ok(Self { name, workers, connect_timeout, artifact_dir, launch_program })
+    }
+
+    /// Dial strings for every endpoint, in manifest order.
+    pub fn addrs(&self) -> Vec<String> {
+        self.workers.iter().map(WorkerEndpoint::addr).collect()
+    }
+}
+
+/// Outcome of health-checking one endpoint (see [`probe`]).
+#[derive(Debug, Clone)]
+pub struct WorkerHealth {
+    /// The endpoint that was dialed.
+    pub addr: String,
+    /// The worker's self-reported id, when the handshake succeeded.
+    pub worker_id: Option<u64>,
+    /// The failure, when it did not.
+    pub error: Option<String>,
+}
+
+impl WorkerHealth {
+    /// True when the worker answered the version handshake.
+    pub fn ok(&self) -> bool {
+        self.error.is_none()
+    }
+}
+
+/// Health-check every endpoint in the spec: TCP connect + the
+/// [`WorkerClient::handshake`] version RPC. Never fails as a whole —
+/// each endpoint reports independently so an operator sees the full
+/// fleet state in one pass. Endpoints are probed *concurrently* (one
+/// thread each), so a fleet with several dead boxes reports after one
+/// `connect_timeout`, not one per dead box. Probing is read-only: the
+/// probe connection closes after the handshake and the worker keeps
+/// serving. Results come back in manifest order.
+pub fn probe(spec: &ClusterSpec) -> Vec<WorkerHealth> {
+    let timeout = spec.connect_timeout;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = spec
+            .workers
+            .iter()
+            .map(|w| {
+                s.spawn(move || {
+                    let addr = w.addr();
+                    match WorkerClient::connect(&addr, timeout) {
+                        Ok(client) => WorkerHealth {
+                            addr,
+                            worker_id: Some(client.worker_id),
+                            error: None,
+                        },
+                        Err(e) => {
+                            WorkerHealth { addr, worker_id: None, error: Some(e.to_string()) }
+                        }
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("probe thread panicked"))
+            .collect()
+    })
+}
+
+/// Spawn a worker process (via the spec's `launch.program`) for every
+/// *loopback* endpoint in the spec, detached — the children outlive the
+/// calling process, so `av-simd deploy --launch` then exit leaves a
+/// serving fleet behind. Remote endpoints are skipped (launching over
+/// SSH/orchestrators is the operator's side of the contract — see
+/// `docs/OPERATIONS.md`); returns the spawned children in endpoint
+/// order alongside how many endpoints were skipped.
+pub fn launch_local_workers(
+    spec: &ClusterSpec,
+) -> Result<(Vec<std::process::Child>, usize)> {
+    let program = spec.launch_program.as_deref().ok_or_else(|| {
+        Error::Config("cluster spec has no [launch] program to spawn workers with".into())
+    })?;
+    let mut children = Vec::new();
+    let mut skipped = 0usize;
+    for (i, w) in spec.workers.iter().enumerate() {
+        if !w.is_local() {
+            skipped += 1;
+            continue;
+        }
+        let addr = w.addr();
+        let child = std::process::Command::new(program)
+            .args([
+                "worker",
+                "--listen",
+                &addr,
+                "--id",
+                &i.to_string(),
+                "--artifacts",
+                &spec.artifact_dir,
+            ])
+            .stdin(std::process::Stdio::null())
+            .stdout(std::process::Stdio::null())
+            .stderr(std::process::Stdio::inherit())
+            .spawn()
+            .map_err(|e| {
+                Error::Engine(format!("launch worker {i} at {addr} via '{program}': {e}"))
+            })?;
+        children.push(child);
+    }
+    Ok((children, skipped))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const TOML_SPEC: &str = r#"
+        # two-box lab fleet
+        [cluster]
+        name = "lab"
+        connect_timeout_ms = 1500
+        artifact_dir = "artifacts"
+
+        [workers]
+        hosts = ["10.0.0.1:7077", "10.0.0.2:7100*3"]
+        capacity = 2
+
+        [launch]
+        program = "target/release/av-simd"
+    "#;
+
+    const JSON_SPEC: &str = r#"{
+        "cluster": {"name": "lab", "connect_timeout_ms": 1500, "artifact_dir": "artifacts"},
+        "workers": {"hosts": ["10.0.0.1:7077", "10.0.0.2:7100*3"], "capacity": 2},
+        "launch": {"program": "target/release/av-simd"}
+    }"#;
+
+    #[test]
+    fn toml_and_json_manifests_parse_identically() {
+        let a = ClusterSpec::from_toml_text(TOML_SPEC).unwrap();
+        let b = ClusterSpec::from_json_text(JSON_SPEC).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(a.name, "lab");
+        assert_eq!(a.connect_timeout, Duration::from_millis(1500));
+        // capacity 2 for the first entry, explicit *3 for the second
+        assert_eq!(
+            a.addrs(),
+            vec![
+                "10.0.0.1:7077".to_string(),
+                "10.0.0.1:7078".to_string(),
+                "10.0.0.2:7100".to_string(),
+                "10.0.0.2:7101".to_string(),
+                "10.0.0.2:7102".to_string(),
+            ]
+        );
+        assert_eq!(a.launch_program.as_deref(), Some("target/release/av-simd"));
+    }
+
+    #[test]
+    fn defaults_fill_in() {
+        let spec =
+            ClusterSpec::from_toml_text("[workers]\nhosts = [\"127.0.0.1:7500\"]\n").unwrap();
+        assert_eq!(spec.name, "cluster");
+        assert_eq!(spec.connect_timeout, Duration::from_secs(20));
+        assert_eq!(spec.artifact_dir, "artifacts");
+        assert!(spec.launch_program.is_none());
+        assert!(spec.workers[0].is_local());
+    }
+
+    #[test]
+    fn bad_specs_fail_loudly() {
+        // no workers
+        assert!(ClusterSpec::from_toml_text("[cluster]\nname = \"x\"\n").is_err());
+        // unknown key
+        assert!(ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"h:1\"]\nbogus = 1\n"
+        )
+        .is_err());
+        // malformed endpoints
+        for entry in ["nohost", "h:notaport", ":7077", "h:70000", "h:7077*0", "h:65535*2"] {
+            let toml = format!("[workers]\nhosts = [\"{entry}\"]\n");
+            assert!(ClusterSpec::from_toml_text(&toml).is_err(), "accepted '{entry}'");
+        }
+        // duplicate endpoint after expansion
+        assert!(ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"h:7077*2\", \"h:7078\"]\n"
+        )
+        .is_err());
+        // zero capacity
+        assert!(ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"h:7077\"]\ncapacity = 0\n"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn load_dispatches_on_content() {
+        let dir = std::env::temp_dir().join(format!(
+            "av_simd_spec_{}_{:x}",
+            std::process::id(),
+            crate::util::now_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        let toml_path = dir.join("fleet.toml");
+        std::fs::write(&toml_path, TOML_SPEC).unwrap();
+        let json_path = dir.join("fleet.json");
+        std::fs::write(&json_path, JSON_SPEC).unwrap();
+        let a = ClusterSpec::load(&toml_path).unwrap();
+        let b = ClusterSpec::load(&json_path).unwrap();
+        assert_eq!(a, b);
+        std::fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn probe_reports_per_endpoint() {
+        // nothing listens on the reserved port: the probe must report the
+        // failure (with the endpoint) rather than erroring out entirely
+        let spec = ClusterSpec {
+            name: "t".into(),
+            workers: vec![WorkerEndpoint { host: "127.0.0.1".into(), port: 1 }],
+            connect_timeout: Duration::from_millis(50),
+            artifact_dir: "artifacts".into(),
+            launch_program: None,
+        };
+        let health = probe(&spec);
+        assert_eq!(health.len(), 1);
+        assert!(!health[0].ok());
+        assert_eq!(health[0].addr, "127.0.0.1:1");
+        assert!(health[0].error.as_ref().unwrap().contains("127.0.0.1:1"));
+    }
+}

@@ -5,15 +5,40 @@
 //! * [`ops`] — the operator registry shared by driver and workers.
 //! * [`executor`] — task execution (source → ops → action).
 //! * [`cluster`] / [`remote`] — thread-pool and worker-process clusters.
+//! * [`deploy`] — [`deploy::ClusterSpec`] manifests for multi-host
+//!   fleets: parse (TOML/JSON), health-probe, launch local workers.
 //! * [`stream`] — the streaming work-stealing pipeline between the
 //!   scheduler and a cluster's workers.
 //! * [`scheduler`] — streaming dispatch with immediate bounded retries
 //!   (plus the old round-based model as a bench baseline).
 //! * [`context`] — the driver API: [`SimContext`] + [`Rdd`].
 //! * [`rpc`] / [`worker`] — the standalone-mode TCP protocol.
+//!
+//! Quick taste — a four-worker in-process cluster counting a range:
+//!
+//! ```
+//! use av_simd::engine::{run_job, Action, LocalCluster, OpRegistry, Source, TaskOutput, TaskSpec};
+//!
+//! let cluster = LocalCluster::new(4, OpRegistry::with_builtins(), "artifacts");
+//! let tasks: Vec<TaskSpec> = (0..8)
+//!     .map(|i| TaskSpec {
+//!         job_id: 1,
+//!         task_id: i,
+//!         attempt: 0,
+//!         source: Source::Range { start: 0, end: 100 },
+//!         ops: vec![],
+//!         action: Action::Count,
+//!     })
+//!     .collect();
+//! let (outputs, report) = run_job(&cluster, tasks, 2).unwrap();
+//! assert_eq!(outputs.len(), 8);
+//! assert!(outputs.iter().all(|o| *o == TaskOutput::Count(100)));
+//! assert_eq!(report.retries, 0);
+//! ```
 
 pub mod cluster;
 pub mod context;
+pub mod deploy;
 pub mod executor;
 pub mod ops;
 pub mod plan;
@@ -25,6 +50,7 @@ pub mod worker;
 
 pub use cluster::{Cluster, LocalCluster};
 pub use context::{Rdd, SimContext};
+pub use deploy::{ClusterSpec, WorkerEndpoint, WorkerHealth};
 pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 pub use remote::StandaloneCluster;

@@ -28,6 +28,7 @@ pub struct TaskCtx {
 }
 
 impl TaskCtx {
+    /// Context for worker `worker_id` with artifacts under `artifact_dir`.
     pub fn new(worker_id: usize, artifact_dir: impl Into<String>) -> Self {
         Self {
             cache: BagCache::new(1 << 30),
@@ -49,6 +50,7 @@ pub struct OpRegistry {
 }
 
 impl OpRegistry {
+    /// Empty registry (no operators — see [`OpRegistry::with_builtins`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -97,6 +99,7 @@ impl OpRegistry {
         });
     }
 
+    /// Look up an operator by name (actionable error when missing).
     pub fn get(&self, name: &str) -> Result<PartitionOp> {
         self.ops.read().unwrap().get(name).cloned().ok_or_else(|| {
             Error::Engine(format!(
@@ -106,6 +109,7 @@ impl OpRegistry {
         })
     }
 
+    /// All registered operator names, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut v: Vec<_> = self.ops.read().unwrap().keys().cloned().collect();
         v.sort();

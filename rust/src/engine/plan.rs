@@ -132,11 +132,14 @@ impl Source {
 /// A named operator application.
 #[derive(Debug, Clone, PartialEq)]
 pub struct OpCall {
+    /// Operator name (must be registered on the executing worker).
     pub name: String,
+    /// Opaque operator parameters (ops define their own encoding).
     pub params: Vec<u8>,
 }
 
 impl OpCall {
+    /// Build an operator call.
     pub fn new(name: impl Into<String>, params: Vec<u8>) -> Self {
         Self { name: name.into(), params }
     }
@@ -201,15 +204,22 @@ impl Action {
 /// A fully-described unit of work.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TaskSpec {
+    /// Job this task belongs to (for logs and metrics).
     pub job_id: u64,
+    /// Index of this task within the job.
     pub task_id: u32,
+    /// Retry attempt number (0 = first run).
     pub attempt: u32,
+    /// Where the task's input records come from.
     pub source: Source,
+    /// Operator chain applied to the records, in order.
     pub ops: Vec<OpCall>,
+    /// How the op-chain output is reduced into a [`TaskOutput`].
     pub action: Action,
 }
 
 impl TaskSpec {
+    /// Serialize for the RPC wire / replay logs.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
         w.put_u64(self.job_id);
@@ -224,6 +234,7 @@ impl TaskSpec {
         w.into_vec()
     }
 
+    /// Decode a [`TaskSpec::encode`] payload.
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
         let job_id = r.get_u64()?;
@@ -243,7 +254,9 @@ impl TaskSpec {
 /// What a finished task hands back.
 #[derive(Debug, Clone, PartialEq)]
 pub enum TaskOutput {
+    /// Collected records (produced by [`Action::Collect`]).
     Records(Vec<Record>),
+    /// Record count (produced by [`Action::Count`]).
     Count(u64),
     /// Encoded `EpisodeResult`s, in the shard's scenario order (produced
     /// by [`Action::Episodes`]).
@@ -251,6 +264,7 @@ pub enum TaskOutput {
 }
 
 impl TaskOutput {
+    /// Serialize for the RPC wire.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
         match self {
@@ -276,6 +290,7 @@ impl TaskOutput {
         w.into_vec()
     }
 
+    /// Decode a [`TaskOutput::encode`] payload.
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
         match r.get_u8()? {
@@ -305,13 +320,18 @@ impl TaskOutput {
 /// payload). This is how bag contents flow through RDDs.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PlayedRecord {
+    /// Topic the message was played from.
     pub topic: String,
+    /// Message type name (e.g. `sim/Tick`).
     pub type_name: String,
+    /// Bag timestamp.
     pub time: Time,
+    /// Raw message payload.
     pub data: Vec<u8>,
 }
 
 impl PlayedRecord {
+    /// Serialize into an engine record.
     pub fn encode(&self) -> Record {
         let mut w = ByteWriter::with_capacity(self.data.len() + 32);
         w.put_str(&self.topic);
@@ -321,6 +341,7 @@ impl PlayedRecord {
         w.into_vec()
     }
 
+    /// Decode a [`PlayedRecord::encode`] record.
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
         Ok(Self {

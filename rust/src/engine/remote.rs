@@ -1,25 +1,37 @@
 //! Standalone cluster: worker *processes* over TCP.
 //!
-//! The driver spawns N copies of this binary in `worker` mode, connects a
-//! [`WorkerClient`] to each, and streams tasks out with one feeder
-//! thread per worker pulling from the shared [`TaskStream`] (greedy load
-//! balancing, like Spark's executor task slots). Dispatch is pipelined:
-//! each connection keeps up to [`PIPELINE_DEPTH`] tasks in flight, so
-//! the next task's bytes are already on the wire while the worker
-//! computes the current one. All waiting is event-driven (condvars on
-//! the stream, blocking socket reads) — there is no sleep-polling in the
-//! dispatch path. Lost workers fail their in-flight tasks with a
-//! retryable error; the scheduler re-queues them immediately and the
-//! stream continues on the surviving workers.
+//! The driver either spawns N copies of this binary in `worker` mode
+//! ([`StandaloneCluster::launch`]) or dials an externally managed fleet
+//! from a [`super::deploy::ClusterSpec`] manifest
+//! ([`StandaloneCluster::connect`] — hosts anywhere, not just
+//! localhost). Every connection opens with the RPC version handshake,
+//! so a stale worker binary is rejected before it can corrupt a job.
+//!
+//! Tasks stream out with one feeder thread per worker pulling from the
+//! shared [`TaskStream`] (greedy load balancing, like Spark's executor
+//! task slots). Dispatch is pipelined: each connection keeps up to
+//! `PIPELINE_DEPTH` tasks in flight, so the next task's bytes are
+//! already on the wire while the worker computes the current one. All
+//! waiting is event-driven (condvars on the stream, blocking socket
+//! reads) — there is no sleep-polling in the dispatch path. Lost
+//! workers fail their in-flight tasks with a retryable error; the
+//! scheduler re-queues them immediately and the stream continues on the
+//! surviving workers.
+//!
+//! The fleet is elastic: [`StandaloneCluster::add_worker`] admits a
+//! late-joining worker into every stream still running — the new feeder
+//! starts pulling queued tasks immediately, which is how a sweep
+//! absorbs capacity that comes up after the job started.
 
 use super::cluster::Cluster;
+use super::deploy::ClusterSpec;
 use super::plan::TaskSpec;
 use super::stream::TaskStream;
 use super::worker::WorkerClient;
 use crate::error::{Error, Result};
 use std::collections::VecDeque;
 use std::process::{Child, Command, Stdio};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
 
 /// Max task attempts in flight per worker connection. Depth 2 hides the
@@ -35,20 +47,31 @@ const PIPELINE_DEPTH: usize = 2;
 /// for the pipeline to drain (the pre-pipelining protocol).
 const PIPELINE_MAX_BYTES: usize = 64 * 1024;
 
-/// A spawned worker process + its RPC client.
+/// A worker process + its RPC client. `child` is `None` for workers the
+/// driver merely dialed (spec-connected fleets own their processes).
 struct RemoteWorker {
     client: Mutex<Option<WorkerClient>>,
-    child: Mutex<Child>,
+    child: Mutex<Option<Child>>,
     addr: String,
 }
 
 struct Workers {
-    workers: Vec<RemoteWorker>,
+    /// The fleet; grows through [`StandaloneCluster::add_worker`].
+    workers: Mutex<Vec<Arc<RemoteWorker>>>,
+    /// Streams opened on this cluster, kept weak so a finished stream
+    /// (and its completions) can be dropped by the scheduler. Late
+    /// joiners attach to every stream still alive here.
+    streams: Mutex<Vec<Weak<TaskStream>>>,
 }
 
-/// Cluster of spawned worker processes.
+/// Cluster of standalone worker processes (spawned locally or dialed
+/// from a [`ClusterSpec`] manifest).
 pub struct StandaloneCluster {
     inner: Arc<Workers>,
+    /// True when this driver spawned the workers (shutdown stops them);
+    /// false for [`StandaloneCluster::connect`]-mode clusters attached
+    /// to an externally managed fleet, which stays up.
+    owns_workers: bool,
 }
 
 impl StandaloneCluster {
@@ -91,61 +114,120 @@ impl StandaloneCluster {
                 .stdout(Stdio::null())
                 .stderr(Stdio::inherit())
                 .spawn()
-                .map_err(|e| Error::Engine(format!("spawn worker {i}: {e}")))?;
-            workers.push(RemoteWorker {
+                .map_err(|e| Error::Engine(format!("spawn worker {i} at {addr}: {e}")))?;
+            workers.push(Arc::new(RemoteWorker {
                 client: Mutex::new(None),
-                child: Mutex::new(child),
+                child: Mutex::new(Some(child)),
                 addr,
-            });
+            }));
         }
-        // Connect after all spawns so startup overlaps.
+        // Connect after all spawns so startup overlaps. The connect
+        // handshake checks liveness + protocol version per worker.
         for (i, w) in workers.iter().enumerate() {
-            let client =
-                WorkerClient::connect(&w.addr, std::time::Duration::from_secs(20))
-                    .map_err(|e| Error::Engine(format!("worker {i}: {e}")))?;
+            let client = WorkerClient::connect(&w.addr, Duration::from_secs(20))
+                .map_err(|e| Error::Engine(format!("worker {i}: {e}")))?;
             *w.client.lock().unwrap() = Some(client);
         }
-        Ok(Self { inner: Arc::new(Workers { workers }) })
+        Ok(Self {
+            inner: Arc::new(Workers {
+                workers: Mutex::new(workers),
+                streams: Mutex::new(Vec::new()),
+            }),
+            owns_workers: true,
+        })
     }
-}
 
-impl Cluster for StandaloneCluster {
-    fn workers(&self) -> usize {
-        self.inner.workers.len()
-    }
-
-    fn open_stream(&self) -> Arc<TaskStream> {
-        let stream = TaskStream::new();
-        // Attach every worker *before* spawning any feeder, so an early
-        // transport death cannot momentarily zero the worker count and
-        // fail pending tasks while healthy feeders are still starting.
-        for _ in &self.inner.workers {
-            stream.attach_worker();
+    /// Dial an externally managed fleet from a [`ClusterSpec`]: connect
+    /// and version-handshake every endpoint in the manifest. The fleet
+    /// is *not* stopped by [`Cluster::shutdown`] — it belongs to
+    /// whatever launched it (use [`StandaloneCluster::stop_workers`] to
+    /// stop it explicitly).
+    pub fn connect(spec: &ClusterSpec) -> Result<Self> {
+        let mut workers = Vec::with_capacity(spec.workers.len());
+        for endpoint in &spec.workers {
+            let addr = endpoint.addr();
+            let client = WorkerClient::connect(&addr, spec.connect_timeout)
+                .map_err(|e| Error::Engine(format!("cluster '{}': {e}", spec.name)))?;
+            workers.push(Arc::new(RemoteWorker {
+                client: Mutex::new(Some(client)),
+                child: Mutex::new(None),
+                addr,
+            }));
         }
-        for i in 0..self.inner.workers.len() {
-            let inner = self.inner.clone();
-            let stream = stream.clone();
+        Ok(Self {
+            inner: Arc::new(Workers {
+                workers: Mutex::new(workers),
+                streams: Mutex::new(Vec::new()),
+            }),
+            owns_workers: false,
+        })
+    }
+
+    /// Admit a late-joining worker into the fleet. The endpoint is
+    /// dialed and version-handshaked like any other; on success it joins
+    /// every stream still running — its feeder starts pulling queued
+    /// tasks immediately — and serves all future streams.
+    pub fn add_worker(&self, addr: &str, timeout: Duration) -> Result<()> {
+        let client = WorkerClient::connect(addr, timeout)?;
+        let worker = Arc::new(RemoteWorker {
+            client: Mutex::new(Some(client)),
+            child: Mutex::new(None),
+            addr: addr.to_string(),
+        });
+        self.inner.workers.lock().unwrap().push(worker.clone());
+        // join every live stream (prune dead/drained entries on the way)
+        let live: Vec<Arc<TaskStream>> = {
+            let mut streams = self.inner.streams.lock().unwrap();
+            streams.retain(|s| s.upgrade().map(|s| !s.drained()).unwrap_or(false));
+            streams.iter().filter_map(Weak::upgrade).collect()
+        };
+        for stream in live {
+            stream.attach_worker();
+            let w = worker.clone();
             std::thread::Builder::new()
-                .name(format!("av-simd-feeder-{i}"))
-                .spawn(move || feeder_loop(&inner.workers[i], &stream))
+                .name(format!("av-simd-feeder-join-{addr}"))
+                .spawn(move || feeder_loop(&w, &stream))
                 .expect("spawn feeder thread");
         }
-        stream
+        Ok(())
     }
 
-    fn shutdown(&self) {
-        for w in &self.inner.workers {
-            if let Some(c) = w.client.lock().unwrap().as_mut() {
-                let _ = c.shutdown();
+    /// Stop the fleet: send `Shutdown` to every reachable worker, then
+    /// reap spawned children (graceful wait with capped backoff, kill on
+    /// timeout). Failures are logged with the worker's `host:port` and
+    /// how many exit polls were made — they never poison the other
+    /// workers' shutdown.
+    pub fn stop_workers(&self) {
+        let workers: Vec<Arc<RemoteWorker>> = self.inner.workers.lock().unwrap().clone();
+        for w in &workers {
+            match w.client.lock().unwrap().as_mut() {
+                Some(c) => {
+                    if let Err(e) = c.shutdown() {
+                        crate::logmsg!("warn", "shutdown rpc to worker {}: {e}", w.addr);
+                    }
+                }
+                // The client is checked out only while a feeder owns the
+                // connection (lock contention means we waited for it) or
+                // after a transport death — either way the Shutdown RPC
+                // cannot be sent; spawned children are still reaped below.
+                None => crate::logmsg!(
+                    "warn",
+                    "worker {}: no live connection to send Shutdown (transport \
+                     lost or stream still open); process reaping still applies",
+                    w.addr
+                ),
             }
         }
-        for w in &self.inner.workers {
-            let mut child = w.child.lock().unwrap();
+        for w in &workers {
+            let mut child_guard = w.child.lock().unwrap();
+            let Some(child) = child_guard.as_mut() else { continue };
             // Give it a moment to exit gracefully (exponential backoff —
             // `try_wait` has no blocking-with-timeout form), then kill.
             let deadline = Instant::now() + Duration::from_secs(2);
             let mut backoff = Duration::from_millis(1);
+            let mut polls = 0usize;
             loop {
+                polls += 1;
                 match child.try_wait() {
                     Ok(Some(_)) => break,
                     Ok(None) if Instant::now() < deadline => {
@@ -153,6 +235,11 @@ impl Cluster for StandaloneCluster {
                         backoff = (backoff * 2).min(Duration::from_millis(50));
                     }
                     _ => {
+                        crate::logmsg!(
+                            "warn",
+                            "worker {} did not exit after {polls} poll(s); killing",
+                            w.addr
+                        );
                         let _ = child.kill();
                         let _ = child.wait();
                         break;
@@ -160,6 +247,50 @@ impl Cluster for StandaloneCluster {
                 }
             }
         }
+    }
+}
+
+impl Cluster for StandaloneCluster {
+    fn workers(&self) -> usize {
+        self.inner.workers.lock().unwrap().len()
+    }
+
+    fn open_stream(&self) -> Arc<TaskStream> {
+        let stream = TaskStream::new();
+        // Register for late joiners *before* reading the worker list
+        // (pruning finished streams on the way). Paired with add_worker
+        // doing the opposite — worker first, then stream scan — this
+        // closes the admission race: however the two interleave, a
+        // joining worker either lands in the copy below or sees the
+        // stream in the registry. The overlap case spawns a duplicate
+        // feeder, which finds the client taken and detaches harmlessly.
+        {
+            let mut streams = self.inner.streams.lock().unwrap();
+            streams.retain(|s| s.upgrade().map(|s| !s.drained()).unwrap_or(false));
+            streams.push(Arc::downgrade(&stream));
+        }
+        let workers: Vec<Arc<RemoteWorker>> = self.inner.workers.lock().unwrap().clone();
+        // Attach every worker *before* spawning any feeder, so an early
+        // transport death cannot momentarily zero the worker count and
+        // fail pending tasks while healthy feeders are still starting.
+        for _ in &workers {
+            stream.attach_worker();
+        }
+        for (i, w) in workers.into_iter().enumerate() {
+            let stream2 = stream.clone();
+            std::thread::Builder::new()
+                .name(format!("av-simd-feeder-{i}"))
+                .spawn(move || feeder_loop(&w, &stream2))
+                .expect("spawn feeder thread");
+        }
+        stream
+    }
+
+    fn shutdown(&self) {
+        if self.owns_workers {
+            self.stop_workers();
+        }
+        // connect-mode: the fleet is externally managed — leave it up
     }
 
     fn backend(&self) -> &'static str {
@@ -197,7 +328,7 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream) {
     // Own the client for the session (put back on clean exit; a dead
     // transport stays taken, which is how the worker is marked lost).
     let Some(mut client) = guard.take() else {
-        return; // worker previously declared dead
+        return; // worker previously declared dead (or serving another stream)
     };
 
     let mut inflight: VecDeque<InFlight> = VecDeque::new();
@@ -305,5 +436,7 @@ fn fail_undispatched(
     }
 }
 
-// Integration tests for StandaloneCluster live in rust/tests/ — they need
-// the built `av-simd` binary on disk, which unit tests don't have.
+// Integration tests for StandaloneCluster live in rust/tests/ — the
+// spawn paths need the built `av-simd` binary on disk, and the
+// spec-connect / late-join paths drive in-process `worker::serve`
+// threads (rust/tests/deploy.rs).

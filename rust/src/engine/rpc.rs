@@ -4,14 +4,23 @@
 //! frame := len:u32 (type:u8 payload)   -- len covers type+payload
 //! ```
 //! The protocol is a simple request/response per connection: the driver
-//! sends `RunTask`, the worker answers `TaskOk`/`TaskErr`. `Ping`/`Pong`
-//! is the liveness probe used while waiting for worker startup.
+//! opens with `Hello` and checks the worker's `HelloOk` (protocol
+//! version + worker id — the deployment health check), then sends
+//! `RunTask` frames which the worker answers with `TaskOk`/`TaskErr`.
+//! `Ping`/`Pong` is the liveness probe used while waiting for worker
+//! startup. See `docs/ARCHITECTURE.md` for the full wire-format spec.
 
 use crate::error::{Error, Result};
 use std::io::{Read, Write};
 
 /// Maximum frame size (guards against protocol desync).
 pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Protocol version spoken by this build. Bumped on any incompatible
+/// frame or payload change; the driver refuses workers that answer
+/// [`RpcMsg::Hello`] with a different version, so a mixed-version fleet
+/// fails loudly at connect time instead of corrupting task payloads.
+pub const RPC_VERSION: u32 = 1;
 
 /// RPC message.
 #[derive(Debug, Clone, PartialEq)]
@@ -22,10 +31,27 @@ pub enum RpcMsg {
     TaskOk(Vec<u8>),
     /// Worker → driver: task failed with message.
     TaskErr(String),
+    /// Driver → worker: liveness probe.
     Ping,
+    /// Worker → driver: liveness reply.
     Pong,
     /// Driver → worker: exit gracefully.
     Shutdown,
+    /// Driver → worker: handshake carrying the driver's
+    /// [`RPC_VERSION`]. First frame on every deploy-layer connection.
+    Hello {
+        /// The driver's protocol version.
+        version: u32,
+    },
+    /// Worker → driver: handshake reply. The driver rejects the
+    /// connection when `version` differs from its own.
+    HelloOk {
+        /// The worker's protocol version.
+        version: u32,
+        /// The worker's `--id` (diagnostic: lets a deploy probe map
+        /// endpoints back to launch manifests).
+        worker_id: u64,
+    },
 }
 
 impl RpcMsg {
@@ -37,15 +63,27 @@ impl RpcMsg {
             RpcMsg::Ping => 4,
             RpcMsg::Pong => 5,
             RpcMsg::Shutdown => 6,
+            RpcMsg::Hello { .. } => 7,
+            RpcMsg::HelloOk { .. } => 8,
         }
     }
 }
 
 /// Write one frame.
 pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
+    let mut scratch = [0u8; 12];
     let payload: &[u8] = match msg {
         RpcMsg::RunTask(b) | RpcMsg::TaskOk(b) => b,
         RpcMsg::TaskErr(s) => s.as_bytes(),
+        RpcMsg::Hello { version } => {
+            scratch[..4].copy_from_slice(&version.to_le_bytes());
+            &scratch[..4]
+        }
+        RpcMsg::HelloOk { version, worker_id } => {
+            scratch[..4].copy_from_slice(&version.to_le_bytes());
+            scratch[4..12].copy_from_slice(&worker_id.to_le_bytes());
+            &scratch[..12]
+        }
         _ => &[],
     };
     let len = (payload.len() + 1) as u32;
@@ -102,6 +140,29 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
         4 => RpcMsg::Ping,
         5 => RpcMsg::Pong,
         6 => RpcMsg::Shutdown,
+        7 => {
+            if payload.len() != 4 {
+                return Err(Error::Engine(format!(
+                    "bad Hello payload length {}",
+                    payload.len()
+                )));
+            }
+            RpcMsg::Hello {
+                version: u32::from_le_bytes(payload[..4].try_into().unwrap()),
+            }
+        }
+        8 => {
+            if payload.len() != 12 {
+                return Err(Error::Engine(format!(
+                    "bad HelloOk payload length {}",
+                    payload.len()
+                )));
+            }
+            RpcMsg::HelloOk {
+                version: u32::from_le_bytes(payload[..4].try_into().unwrap()),
+                worker_id: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
+            }
+        }
         other => return Err(Error::Engine(format!("unknown rpc type {other}"))),
     };
     Ok(Some(msg))
@@ -127,6 +188,21 @@ mod tests {
         roundtrip(RpcMsg::Ping);
         roundtrip(RpcMsg::Pong);
         roundtrip(RpcMsg::Shutdown);
+        roundtrip(RpcMsg::Hello { version: RPC_VERSION });
+        roundtrip(RpcMsg::HelloOk { version: RPC_VERSION, worker_id: 42 });
+        roundtrip(RpcMsg::Hello { version: u32::MAX });
+        roundtrip(RpcMsg::HelloOk { version: 0, worker_id: u64::MAX });
+    }
+
+    #[test]
+    fn truncated_hello_payload_rejected() {
+        // a Hello frame whose payload is 3 bytes instead of 4
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&4u32.to_le_bytes()); // len = type + 3
+        buf.push(7);
+        buf.extend_from_slice(&[1, 2, 3]);
+        let mut cur = &buf[..];
+        assert!(read_msg(&mut cur).is_err());
     }
 
     #[test]

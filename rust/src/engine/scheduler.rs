@@ -21,17 +21,23 @@ use std::time::{Duration, Instant};
 /// Per-job execution report.
 #[derive(Debug, Clone)]
 pub struct JobReport {
+    /// Job id (from the first task's `job_id`).
     pub job_id: u64,
+    /// Number of tasks in the job.
     pub tasks: usize,
+    /// Retry attempts consumed across all tasks.
     pub retries: usize,
+    /// End-to-end job wall time.
     pub wall: std::time::Duration,
     /// Per-attempt execution wall time (includes RPC transport for
     /// remote workers). Zero for `run_job_rounds` (the batch API does
     /// not observe per-task timing).
     pub task_wall_p50: Duration,
+    /// 95th-percentile per-attempt execution wall time.
     pub task_wall_p95: Duration,
     /// Time attempts spent queued before a worker picked them up.
     pub queue_wait_p50: Duration,
+    /// 95th-percentile queue wait.
     pub queue_wait_p95: Duration,
 }
 

@@ -29,6 +29,7 @@ pub struct Completion {
     /// The spec that ran — returned so a retry can be resubmitted with a
     /// bumped attempt number without the driver keeping a copy.
     pub spec: TaskSpec,
+    /// The attempt's outcome (task errors come through as `Err`).
     pub result: Result<TaskOutput>,
     /// Time the attempt spent queued before a worker picked it up.
     pub queue_wait: Duration,
@@ -65,6 +66,7 @@ pub struct TaskStream {
 }
 
 impl TaskStream {
+    /// Create an empty stream (no waker, no workers attached).
     pub fn new() -> Arc<Self> {
         Arc::new(Self {
             inner: Mutex::new(StreamInner {

@@ -9,7 +9,7 @@
 use super::executor;
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
-use super::rpc::{read_msg, write_msg, RpcMsg};
+use super::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
 use crate::error::{Error, Result};
 use std::net::{TcpListener, TcpStream};
 
@@ -51,6 +51,17 @@ fn serve_connection(
         match read_msg(&mut reader)? {
             None => return Ok(ShutdownKind::Disconnect),
             Some(RpcMsg::Ping) => write_msg(&mut writer, &RpcMsg::Pong)?,
+            Some(RpcMsg::Hello { version: _ }) => {
+                // The worker always reports its own version; rejecting a
+                // mismatch is the driver's call (it owns the fleet).
+                write_msg(
+                    &mut writer,
+                    &RpcMsg::HelloOk {
+                        version: RPC_VERSION,
+                        worker_id: ctx.worker_id as u64,
+                    },
+                )?
+            }
             Some(RpcMsg::Shutdown) => return Ok(ShutdownKind::Graceful),
             Some(RpcMsg::RunTask(spec_bytes)) => {
                 let reply = match TaskSpec::decode(&spec_bytes)
@@ -74,34 +85,64 @@ fn serve_connection(
 pub struct WorkerClient {
     reader: std::io::BufReader<TcpStream>,
     writer: std::io::BufWriter<TcpStream>,
+    /// The `host:port` this client dialed.
     pub addr: String,
+    /// The worker's self-reported id, learned during the connect
+    /// handshake (diagnostic: maps endpoints back to launch manifests).
+    pub worker_id: u64,
 }
 
 impl WorkerClient {
     /// Connect, retrying with exponential backoff until the worker
     /// process is up (bounded wait): quick first probes catch an
     /// already-listening worker in a millisecond or two, the capped
-    /// backoff keeps a slow-starting worker from being hammered.
+    /// backoff keeps a slow-starting worker from being hammered. Once a
+    /// TCP connection lands, the [`RpcMsg::Hello`] handshake verifies
+    /// liveness *and* protocol version; a version mismatch is a hard
+    /// error (never retried — the binary won't change underneath us).
+    /// On backoff exhaustion the error names the `host:port` and the
+    /// number of connect attempts made.
     pub fn connect(addr: &str, timeout: std::time::Duration) -> Result<Self> {
         let deadline = std::time::Instant::now() + timeout;
         let mut backoff = std::time::Duration::from_millis(1);
+        let mut attempts = 0usize;
         loop {
+            attempts += 1;
             match TcpStream::connect(addr) {
                 Ok(stream) => {
                     stream.set_nodelay(true).ok();
+                    // Bound the handshake read by the remaining budget:
+                    // without this, an endpoint that accepts TCP but
+                    // never answers (a wedged worker, or some unrelated
+                    // service on the port) would hang the driver forever.
+                    let remaining = deadline
+                        .saturating_duration_since(std::time::Instant::now())
+                        .max(std::time::Duration::from_millis(1));
+                    stream.set_read_timeout(Some(remaining)).ok();
                     let mut c = Self {
                         reader: std::io::BufReader::new(stream.try_clone()?),
                         writer: std::io::BufWriter::new(stream),
                         addr: addr.to_string(),
+                        worker_id: 0,
                     };
-                    // verify liveness
-                    c.ping()?;
+                    // verify liveness + protocol version
+                    c.worker_id = c.handshake().map_err(|e| match e {
+                        Error::Io(io) => Error::Engine(format!(
+                            "worker at {addr} did not complete the handshake \
+                             within {remaining:?}: {io}"
+                        )),
+                        other => other,
+                    })?;
+                    // task replies may legitimately take arbitrarily long —
+                    // the deadline only governs connection establishment
+                    c.reader.get_ref().set_read_timeout(None).ok();
                     return Ok(c);
                 }
                 Err(e) => {
                     if std::time::Instant::now() >= deadline {
                         return Err(Error::Engine(format!(
-                            "worker at {addr} not reachable: {e}"
+                            "worker at {addr} not reachable after {attempts} connect \
+                             attempt(s) over {timeout:?}: {e}"
                         )));
                     }
                     std::thread::sleep(backoff);
@@ -111,11 +152,42 @@ impl WorkerClient {
         }
     }
 
+    /// Liveness probe (no version check — see [`WorkerClient::handshake`]).
     pub fn ping(&mut self) -> Result<()> {
         write_msg(&mut self.writer, &RpcMsg::Ping)?;
         match read_msg(&mut self.reader)? {
             Some(RpcMsg::Pong) => Ok(()),
             other => Err(Error::Engine(format!("expected Pong, got {other:?}"))),
+        }
+    }
+
+    /// Version handshake: send [`RpcMsg::Hello`], require a matching
+    /// [`RpcMsg::HelloOk`]. Returns the worker's reported id. This is
+    /// the deploy layer's health check — a worker that answers with a
+    /// different [`RPC_VERSION`] is rejected with an error naming the
+    /// endpoint and both versions.
+    pub fn handshake(&mut self) -> Result<u64> {
+        write_msg(&mut self.writer, &RpcMsg::Hello { version: RPC_VERSION })?;
+        match read_msg(&mut self.reader)? {
+            Some(RpcMsg::HelloOk { version, worker_id }) => {
+                if version != RPC_VERSION {
+                    return Err(Error::Engine(format!(
+                        "worker at {} speaks rpc v{version} but this driver needs \
+                         v{RPC_VERSION} — redeploy the worker binary",
+                        self.addr
+                    )));
+                }
+                Ok(worker_id)
+            }
+            None => Err(Error::Engine(format!(
+                "worker at {} hung up during handshake — likely a worker binary \
+                 that predates the rpc version handshake; redeploy the worker",
+                self.addr
+            ))),
+            other => Err(Error::Engine(format!(
+                "worker at {} answered handshake with {other:?}",
+                self.addr
+            ))),
         }
     }
 
@@ -152,6 +224,7 @@ impl WorkerClient {
         self.recv_reply(spec.task_id)
     }
 
+    /// Ask the worker process to exit gracefully.
     pub fn shutdown(&mut self) -> Result<()> {
         write_msg(&mut self.writer, &RpcMsg::Shutdown)
     }
@@ -177,6 +250,7 @@ mod tests {
         let mut client =
             WorkerClient::connect(&addr, std::time::Duration::from_secs(5)).unwrap();
         client.ping().unwrap();
+        assert_eq!(client.handshake().unwrap(), 0, "worker id 0 reported");
 
         let spec = TaskSpec {
             job_id: 1,
@@ -237,6 +311,40 @@ mod tests {
             Err(e) => e,
             Ok(_) => panic!("expected error"),
         };
-        assert!(err.to_string().contains("not reachable"));
+        let msg = err.to_string();
+        assert!(msg.contains("not reachable"), "{msg}");
+        // the satellite fix: backoff exhaustion must keep the endpoint
+        // and report how many connect attempts were made
+        assert!(msg.contains("127.0.0.1:1"), "address lost: {msg}");
+        assert!(msg.contains("attempt"), "attempt count lost: {msg}");
+    }
+
+    #[test]
+    fn version_mismatch_is_rejected_at_connect() {
+        use super::super::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
+        // a fake worker that answers the handshake with a wrong version
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        let handle = std::thread::spawn(move || {
+            let (stream, _) = listener.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = std::io::BufWriter::new(stream);
+            match read_msg(&mut reader).unwrap() {
+                Some(RpcMsg::Hello { .. }) => write_msg(
+                    &mut writer,
+                    &RpcMsg::HelloOk { version: RPC_VERSION + 1, worker_id: 9 },
+                )
+                .unwrap(),
+                other => panic!("expected Hello, got {other:?}"),
+            }
+        });
+        let err = match WorkerClient::connect(&addr, std::time::Duration::from_secs(5)) {
+            Err(e) => e,
+            Ok(_) => panic!("mismatched worker must be rejected"),
+        };
+        let msg = err.to_string();
+        assert!(msg.contains(&addr), "endpoint lost: {msg}");
+        assert!(msg.contains("rpc v"), "{msg}");
+        handle.join().unwrap();
     }
 }

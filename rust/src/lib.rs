@@ -9,8 +9,11 @@
 //! AOT-compiled JAX/Pallas executed through PJRT ([`runtime`],
 //! [`perception`]); Python never runs on the simulation path.
 //!
-//! See `DESIGN.md` for the paper → module inventory and `EXPERIMENTS.md`
-//! for reproduced figures.
+//! See `docs/ARCHITECTURE.md` for the layer map and wire-format specs,
+//! `docs/OPERATIONS.md` for running multi-host fleets, `DESIGN.md` for
+//! the paper → module inventory and `EXPERIMENTS.md` for reproduced
+//! figures.
+#![warn(missing_docs)]
 
 pub mod bag;
 pub mod bus;

@@ -3,6 +3,8 @@
 //! Subcommands:
 //! * `worker --listen ADDR --id N [--artifacts DIR]` — standalone worker
 //!   process (spawned by `StandaloneCluster`, or manually for multi-box).
+//! * `deploy --spec FILE [--launch]` — health-check (and optionally
+//!   launch) a multi-host worker fleet from a `ClusterSpec` manifest.
 //! * `user-logic NAME` — BinPipedRDD child mode: stream on stdin/stdout.
 //! * `datagen --dir D [--bags N] [--frames F]` — synthesize a drive set.
 //! * `perceive --dir D [--workers N] [--standalone]` — distributed image
@@ -35,6 +37,7 @@ fn run(raw: &[String]) -> Result<()> {
     let args = Args::parse(raw)?;
     match args.command.as_str() {
         "worker" => cmd_worker(&args),
+        "deploy" => cmd_deploy(&args),
         "user-logic" => cmd_user_logic(&args),
         "datagen" => cmd_datagen(&args),
         "perceive" => cmd_perceive(&args),
@@ -59,16 +62,71 @@ USAGE: av-simd <command> [flags]
 
 COMMANDS:
   worker      --listen ADDR --id N [--artifacts DIR]   serve tasks over TCP
+  deploy      --spec FILE [--launch]                   health-check (and
+              optionally launch) a multi-host fleet from a ClusterSpec
+              manifest (TOML or JSON; see docs/OPERATIONS.md)
   user-logic  NAME                                     BinPipedRDD child mode
   datagen     --dir D [--bags N] [--frames F] [--size PX] [--seed S]
   perceive    --dir D [--workers N] [--standalone] [--base-port P]
   scenarios   [--workers N] [--ego-speed V]
-  sweep       [--workers N] [--standalone] [--base-port P] [--shard-size N]
+  sweep       [--workers N] [--standalone] [--base-port P]
+              [--cluster-spec FILE] [--shard-size N]
               [--adaptive] [--target-task-ms MS]
+              [--recalibrate-drift F] [--recalibrate-window N]
               [--ego-speeds A,B,..] [--dts A,B,..] [--seeds A,B,..]
               [--jitter F] [--horizon S] [--worst K] [--record-worst DIR]
   info        [--artifacts DIR]
 ";
+
+fn cmd_deploy(args: &Args) -> Result<()> {
+    use av_simd::engine::deploy;
+
+    let path = args.require("spec")?;
+    let spec = deploy::ClusterSpec::load(std::path::Path::new(path))?;
+    println!(
+        "cluster '{}': {} worker endpoint(s), connect timeout {:?}",
+        spec.name,
+        spec.workers.len(),
+        spec.connect_timeout
+    );
+    if args.has("launch") {
+        let (children, skipped) = deploy::launch_local_workers(&spec)?;
+        println!(
+            "launched {} local worker(s){}",
+            children.len(),
+            if skipped > 0 {
+                format!(" ({skipped} remote endpoint(s) must be launched on their hosts)")
+            } else {
+                String::new()
+            }
+        );
+        // children are detached on purpose: the fleet outlives `deploy`
+    }
+    let health = deploy::probe(&spec);
+    let mut down = 0usize;
+    for h in &health {
+        match (&h.error, h.worker_id) {
+            (None, Some(id)) => println!("  {:<24} ok   worker id {id}", h.addr),
+            _ => {
+                down += 1;
+                println!(
+                    "  {:<24} DOWN {}",
+                    h.addr,
+                    h.error.as_deref().unwrap_or("unknown")
+                );
+            }
+        }
+    }
+    if down > 0 {
+        return Err(av_simd::err!(
+            Engine,
+            "{down}/{} worker(s) unhealthy",
+            health.len()
+        ));
+    }
+    println!("all {} worker(s) healthy", health.len());
+    Ok(())
+}
 
 fn cmd_worker(args: &Args) -> Result<()> {
     let listen = args.require("listen")?;
@@ -250,11 +308,25 @@ fn cmd_sweep(args: &Args) -> Result<()> {
                 .map_err(|_| av_simd::err!(Config, "--horizon expects a number, got '{v}'"))?,
         },
         shard_size: args.get_usize("shard-size", defaults.shard_size)?,
-        adaptive: if args.has("adaptive") || args.has("target-task-ms") {
+        adaptive: if args.has("adaptive")
+            || args.has("target-task-ms")
+            || args.has("recalibrate-drift")
+            || args.has("recalibrate-window")
+        {
             let ms = args.get_u64("target-task-ms", 100)?;
+            let base = av_simd::sim::AdaptiveSharding::default();
+            let drift = match args.get("recalibrate-drift") {
+                None => base.drift_threshold,
+                Some(v) => v.parse().map_err(|_| {
+                    av_simd::err!(Config, "--recalibrate-drift expects a number, got '{v}'")
+                })?,
+            };
             Some(av_simd::sim::AdaptiveSharding {
                 target_task: std::time::Duration::from_millis(ms.max(1)),
-                ..Default::default()
+                drift_threshold: drift,
+                recalibration_window: args
+                    .get_usize("recalibrate-window", base.recalibration_window)?,
+                ..base
             })
         } else {
             None
@@ -265,7 +337,13 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let workers = args.get_usize("workers", 4)?;
     let artifacts = args.get_or("artifacts", "artifacts");
-    let cluster: Box<dyn Cluster> = if args.has("standalone") {
+    let cluster: Box<dyn Cluster> = if let Some(spec_path) = args.get("cluster-spec") {
+        // dial an externally managed (possibly multi-host) fleet; the
+        // fleet stays up after the sweep — see `av-simd deploy`
+        let spec =
+            av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(spec_path))?;
+        Box::new(StandaloneCluster::connect(&spec)?)
+    } else if args.has("standalone") {
         let base_port = args.get_usize("base-port", 7077)? as u16;
         Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
     } else {

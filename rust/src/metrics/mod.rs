@@ -11,14 +11,17 @@ use std::time::Duration;
 pub struct Counter(AtomicU64);
 
 impl Counter {
+    /// Add one.
     pub fn inc(&self) {
         self.add(1);
     }
 
+    /// Add `n`.
     pub fn add(&self, n: u64) {
         self.0.fetch_add(n, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -29,10 +32,12 @@ impl Counter {
 pub struct Gauge(AtomicU64);
 
 impl Gauge {
+    /// Set the value.
     pub fn set(&self, v: u64) {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
@@ -57,6 +62,7 @@ impl Default for Histogram {
 }
 
 impl Histogram {
+    /// Record one duration.
     pub fn observe(&self, d: Duration) {
         let us = d.as_micros().max(1) as f64;
         let bucket = (us.log10().floor() as usize).min(8);
@@ -65,10 +71,12 @@ impl Histogram {
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
+    /// Number of observations.
     pub fn count(&self) -> u64 {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Mean observed duration.
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
@@ -93,6 +101,7 @@ impl Metrics {
         M.get_or_init(Metrics::default)
     }
 
+    /// Get or create the counter `name`.
     pub fn counter(&self, name: &str) -> std::sync::Arc<Counter> {
         self.counters
             .lock()
@@ -102,6 +111,7 @@ impl Metrics {
             .clone()
     }
 
+    /// Get or create the gauge `name`.
     pub fn gauge(&self, name: &str) -> std::sync::Arc<Gauge> {
         self.gauges
             .lock()
@@ -111,6 +121,7 @@ impl Metrics {
             .clone()
     }
 
+    /// Get or create the histogram `name`.
     pub fn histogram(&self, name: &str) -> std::sync::Arc<Histogram> {
         self.histograms
             .lock()

@@ -8,28 +8,35 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 /// Nanosecond-resolution timestamp (like `ros::Time`).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub struct Time {
+    /// Nanoseconds since the bag epoch.
     pub nanos: u64,
 }
 
 impl Time {
+    /// Time zero.
     pub const ZERO: Time = Time { nanos: 0 };
 
+    /// Time from nanoseconds.
     pub fn from_nanos(nanos: u64) -> Self {
         Self { nanos }
     }
 
+    /// Time from seconds (saturating at 0 for negatives).
     pub fn from_secs_f64(secs: f64) -> Self {
         Self { nanos: (secs.max(0.0) * 1e9) as u64 }
     }
 
+    /// Seconds as `f64`.
     pub fn as_secs_f64(self) -> f64 {
         self.nanos as f64 / 1e9
     }
 
+    /// `self - other`, clamped at zero.
     pub fn saturating_sub(self, other: Time) -> std::time::Duration {
         std::time::Duration::from_nanos(self.nanos.saturating_sub(other.nanos))
     }
 
+    /// `self + d` nanoseconds.
     pub fn add_nanos(self, d: u64) -> Time {
         Time { nanos: self.nanos + d }
     }
@@ -47,16 +54,19 @@ pub struct Header {
 }
 
 impl Header {
+    /// Header with sequence number, stamp and frame id.
     pub fn new(seq: u64, stamp: Time, frame_id: impl Into<String>) -> Self {
         Self { seq, stamp, frame_id: frame_id.into() }
     }
 
+    /// Append the wire encoding to `w`.
     pub fn encode(&self, w: &mut ByteWriter) {
         w.put_u64(self.seq);
         w.put_u64(self.stamp.nanos);
         w.put_str(&self.frame_id);
     }
 
+    /// Decode a header from `r`.
     pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
         Ok(Self {
             seq: r.get_u64()?,

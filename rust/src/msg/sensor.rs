@@ -17,6 +17,7 @@ pub enum PixelFormat {
 }
 
 impl PixelFormat {
+    /// Bytes per pixel for this format.
     pub fn bytes_per_pixel(self) -> usize {
         match self {
             PixelFormat::Rgb8 => 3,
@@ -43,9 +44,13 @@ impl PixelFormat {
 /// Raw camera frame (`sensor_msgs/Image` analogue).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Image {
+    /// Standard header.
     pub header: Header,
+    /// Frame width (px).
     pub width: u32,
+    /// Frame height (px).
     pub height: u32,
+    /// Pixel layout of `data`.
     pub format: PixelFormat,
     /// Row-major pixel data, `height * width * bpp` bytes.
     pub data: Vec<u8>,
@@ -126,9 +131,13 @@ impl Message for Image {
 /// compression path like `sensor_msgs/CompressedImage`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CompressedImage {
+    /// Standard header.
     pub header: Header,
+    /// Frame width (px).
     pub width: u32,
+    /// Frame height (px).
     pub height: u32,
+    /// LZ-compressed RGB payload.
     pub payload: Vec<u8>,
 }
 
@@ -189,16 +198,19 @@ impl Message for CompressedImage {
 /// analogue, fixed schema: x,y,z,intensity f32).
 #[derive(Debug, Clone, PartialEq)]
 pub struct PointCloud {
+    /// Standard header.
     pub header: Header,
     /// len = 4 * num_points: [x0,y0,z0,i0, x1,...]
     pub points: Vec<f32>,
 }
 
 impl PointCloud {
+    /// Number of XYZI points.
     pub fn num_points(&self) -> usize {
         self.points.len() / 4
     }
 
+    /// Check the flat layout (length divisible by 4).
     pub fn validate(&self) -> Result<()> {
         if self.points.len() % 4 != 0 {
             return Err(Error::Corrupt(format!(
@@ -254,8 +266,11 @@ impl Message for PointCloud {
 /// IMU sample: linear acceleration + angular velocity.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Imu {
+    /// Standard header.
     pub header: Header,
+    /// Linear acceleration (m/s², xyz).
     pub accel: [f32; 3],
+    /// Angular velocity (rad/s, xyz).
     pub gyro: [f32; 3],
 }
 

@@ -10,13 +10,16 @@ use crate::util::bytes::{ByteReader, ByteWriter};
 /// 2D pose + heading (the platform's planar world).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Pose {
+    /// x position (m).
     pub x: f64,
+    /// y position (m).
     pub y: f64,
     /// Heading in radians, CCW from +x.
     pub yaw: f64,
 }
 
 impl Pose {
+    /// Euclidean distance to `other`.
     pub fn distance(&self, other: &Pose) -> f64 {
         ((self.x - other.x).powi(2) + (self.y - other.y).powi(2)).sqrt()
     }
@@ -25,7 +28,9 @@ impl Pose {
 /// Stamped pose message.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct PoseStamped {
+    /// Standard header.
     pub header: Header,
+    /// The pose.
     pub pose: Pose,
 }
 
@@ -117,7 +122,9 @@ pub struct Detection {
 /// Detections for one frame.
 #[derive(Debug, Clone, PartialEq, Default)]
 pub struct DetectionArray {
+    /// Standard header.
     pub header: Header,
+    /// Detections in this frame.
     pub detections: Vec<Detection>,
 }
 

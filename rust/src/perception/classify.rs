@@ -32,9 +32,13 @@ pub struct Classifier {
 /// One classification result.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClassResult {
+    /// Predicted class index into [`CLASSES`].
     pub class_id: u32,
+    /// Human-readable class label.
     pub label: &'static str,
+    /// Softmax score of the predicted class.
     pub score: f32,
+    /// Raw per-class logits.
     pub logits: Vec<f32>,
 }
 

@@ -13,12 +13,16 @@ use crate::runtime::thread_runtime;
 /// Planar rigid transform (dx, dy, dtheta).
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct Transform2D {
+    /// Translation along x (m).
     pub dx: f64,
+    /// Translation along y (m).
     pub dy: f64,
+    /// Rotation (rad, CCW).
     pub dtheta: f64,
 }
 
 impl Transform2D {
+    /// Apply the transform to a point.
     pub fn apply(&self, x: f64, y: f64) -> (f64, f64) {
         let (s, c) = self.dtheta.sin_cos();
         (c * x - s * y + self.dx, s * x + c * y + self.dy)

@@ -26,6 +26,7 @@ pub struct Segmenter {
 }
 
 impl Segmenter {
+    /// Load the segmenter artifact from `artifact_dir`.
     pub fn load(artifact_dir: &str) -> Result<Self> {
         let rt = thread_runtime(artifact_dir)?;
         Ok(Self { b1: rt.model("segmenter_b1")? })

@@ -22,7 +22,9 @@ use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
 use std::io::{BufRead, Write};
 
+/// Stream header magic ("BPDR").
 pub const STREAM_MAGIC: u32 = 0x4250_4452; // "BPDR"
+/// Stream format version written after the magic.
 pub const STREAM_VERSION: u8 = 1;
 
 const TAG_END: u8 = 0;
@@ -137,6 +139,7 @@ pub struct StreamWriter<W: Write> {
 }
 
 impl<W: Write> StreamWriter<W> {
+    /// Writer over `w`; the header is emitted lazily.
     pub fn new(w: W) -> Self {
         Self { w, started: false }
     }
@@ -150,6 +153,7 @@ impl<W: Write> StreamWriter<W> {
         Ok(())
     }
 
+    /// Append one item (writes the header first if needed).
     pub fn write_item(&mut self, item: &PipeItem) -> Result<()> {
         self.ensure_header()?;
         let mut buf = ByteWriter::with_capacity(item.encoded_len());
@@ -176,6 +180,7 @@ pub struct StreamReader<R: BufRead> {
 }
 
 impl<R: BufRead> StreamReader<R> {
+    /// Reader over `r`; the header is checked on first read.
     pub fn new(r: R) -> Self {
         Self { r, header_read: false, done: false }
     }

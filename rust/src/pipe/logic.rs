@@ -23,6 +23,7 @@ pub struct LogicRegistry {
 }
 
 impl LogicRegistry {
+    /// Empty registry (see [`LogicRegistry::with_builtins`]).
     pub fn new() -> Self {
         Self::default()
     }
@@ -34,6 +35,7 @@ impl LogicRegistry {
         r
     }
 
+    /// Register a user logic under `name`.
     pub fn register(
         &mut self,
         name: &str,
@@ -42,6 +44,7 @@ impl LogicRegistry {
         self.fns.insert(name.to_string(), Arc::new(f));
     }
 
+    /// Look up a logic by name (actionable error when missing).
     pub fn get(&self, name: &str) -> Result<LogicFn> {
         self.fns.get(name).cloned().ok_or_else(|| {
             Error::Pipe(format!(
@@ -51,6 +54,7 @@ impl LogicRegistry {
         })
     }
 
+    /// All registered logic names, sorted.
     pub fn names(&self) -> Vec<String> {
         let mut v: Vec<_> = self.fns.keys().cloned().collect();
         v.sort();

@@ -14,8 +14,11 @@ use std::path::Path;
 /// Shape signature of one artifact.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ModelSig {
+    /// Artifact name (e.g. `classifier_b8`).
     pub name: String,
+    /// Input tensor dimensions.
     pub in_dims: Vec<usize>,
+    /// Output tensor dimensions.
     pub out_dims: Vec<usize>,
 }
 
@@ -43,6 +46,7 @@ pub struct Manifest {
 }
 
 impl Manifest {
+    /// Load and parse `manifest.txt` from `path`.
     pub fn load(path: &Path) -> Result<Self> {
         let text = std::fs::read_to_string(path).map_err(|e| {
             Error::Runtime(format!(
@@ -53,6 +57,7 @@ impl Manifest {
         Self::parse(&text)
     }
 
+    /// Parse manifest text (`name: in_dims -> out_dims` lines).
     pub fn parse(text: &str) -> Result<Self> {
         let mut models = BTreeMap::new();
         for (i, line) in text.lines().enumerate() {
@@ -89,6 +94,7 @@ impl Manifest {
         Ok(Self { models })
     }
 
+    /// Look up an artifact signature (actionable error when missing).
     pub fn get(&self, name: &str) -> Result<&ModelSig> {
         self.models.get(name).ok_or_else(|| {
             Error::Runtime(format!(
@@ -98,6 +104,7 @@ impl Manifest {
         })
     }
 
+    /// All artifact names.
     pub fn names(&self) -> Vec<String> {
         self.models.keys().cloned().collect()
     }

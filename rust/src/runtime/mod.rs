@@ -37,6 +37,7 @@ const TAB_B: usize = 263;
 
 /// A loaded model: manifest signature + reference-network weights.
 pub struct CompiledModel {
+    /// Manifest signature the model was loaded against.
     pub sig: ModelSig,
     wa: Vec<f32>,
     wb: Vec<f32>,
@@ -126,6 +127,7 @@ impl ModelRuntime {
         Ok(Self { artifact_dir, manifest, cache: RefCell::new(HashMap::new()) })
     }
 
+    /// The parsed artifact manifest.
     pub fn manifest(&self) -> &Manifest {
         &self.manifest
     }

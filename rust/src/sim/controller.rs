@@ -19,6 +19,7 @@ pub struct ControllerParams {
     pub aeb_ttc: f64,
     /// Proportional gains.
     pub kp_speed: f64,
+    /// Proportional gain on gap error while following (1/s).
     pub kp_gap: f64,
     /// Lane-keeping proportional steer gain (on lateral offset).
     pub kp_lat: f64,
@@ -51,8 +52,11 @@ pub struct LeadObservation {
 /// Controller decision for this tick plus why (for verdict logs).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum ControlMode {
+    /// Track the cruise set-speed (no relevant lead).
     Cruise,
+    /// Time-gap follow the lead vehicle.
     Follow,
+    /// Emergency braking (time-to-collision below `aeb_ttc`).
     Emergency,
 }
 

@@ -11,12 +11,15 @@ pub struct VehicleParams {
     pub wheelbase: f64,
     /// Body length/width for collision checks (m).
     pub length: f64,
+    /// Body width for collision checks (m).
     pub width: f64,
     /// Speed limits (m/s).
     pub max_speed: f64,
     /// Actuation limits.
     pub max_accel: f64,
+    /// Braking limit (m/s², positive number).
     pub max_brake: f64,
+    /// Steering angle limit (rad).
     pub max_steer: f64,
 }
 
@@ -37,16 +40,19 @@ impl Default for VehicleParams {
 /// Full kinematic state.
 #[derive(Debug, Clone, Copy, PartialEq, Default)]
 pub struct VehicleState {
+    /// Position + heading.
     pub pose: Pose,
     /// Longitudinal speed (m/s, >= 0).
     pub v: f64,
 }
 
 impl VehicleState {
+    /// State at (`x`, `y`) heading `yaw` with speed `v`.
     pub fn at(x: f64, y: f64, yaw: f64, v: f64) -> Self {
         Self { pose: Pose { x, y, yaw }, v }
     }
 
+    /// Instantaneous twist under steering angle `steer`.
     pub fn twist(&self, steer: f64, params: &VehicleParams) -> Twist {
         Twist { v: self.v, omega: self.v * steer.tan() / params.wheelbase }
     }

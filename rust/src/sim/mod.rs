@@ -17,8 +17,8 @@ pub use dynamics::{collides, step, VehicleParams, VehicleState};
 pub use runner::{run_episode, run_matrix, EpisodeConfig, EpisodeResult};
 pub use scenario::{random_scenario, scenario_matrix, Direction, Maneuver, RelSpeed, Scenario};
 pub use sweep::{
-    run_sweep, AdaptiveSharding, EpisodeParams, ShardSizing, SweepCase, SweepDriver,
-    SweepReport, SweepSpec, WorstCase,
+    replay_shards, run_sweep, AdaptiveSharding, Calibration, EpisodeParams, ShardSizing,
+    SweepCase, SweepDriver, SweepReport, SweepSpec, WorstCase,
 };
 
 use crate::engine::OpRegistry;

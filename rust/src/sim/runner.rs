@@ -12,7 +12,9 @@ use crate::msg::ControlCommand;
 /// Episode configuration.
 #[derive(Debug, Clone, Copy)]
 pub struct EpisodeConfig {
+    /// Integration timestep (s).
     pub dt: f64,
+    /// Episode length (s).
     pub horizon: f64,
 }
 
@@ -25,7 +27,9 @@ impl Default for EpisodeConfig {
 /// Outcome of one scenario episode.
 #[derive(Debug, Clone, PartialEq)]
 pub struct EpisodeResult {
+    /// Id of the scenario that ran (see `Scenario::id`).
     pub scenario_id: String,
+    /// True when ego and barrier overlapped at any tick.
     pub collided: bool,
     /// Minimum time-to-collision observed (s).
     pub min_ttc: f64,
@@ -35,6 +39,7 @@ pub struct EpisodeResult {
     pub max_brake: f64,
     /// Ticks spent in emergency mode.
     pub emergency_ticks: u32,
+    /// Total ticks simulated.
     pub ticks: u32,
     /// Pass = no collision and the ego never left the road envelope.
     pub passed: bool,
@@ -43,10 +48,15 @@ pub struct EpisodeResult {
 /// Ego + barrier trajectories for one tick (for recording to bags).
 #[derive(Debug, Clone, Copy)]
 pub struct TickState {
+    /// Simulation time (s from episode start).
     pub t: f64,
+    /// Ego vehicle state.
     pub ego: VehicleState,
+    /// Barrier vehicle state.
     pub barrier: VehicleState,
+    /// Control command issued this tick.
     pub cmd: ControlCommand,
+    /// Controller mode this tick.
     pub mode: ControlMode,
 }
 

@@ -11,17 +11,26 @@ use crate::util::prng::Prng;
 /// Where the barrier car starts relative to the ego vehicle.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Direction {
+    /// Barrier ahead of the ego.
     Front,
+    /// Barrier ahead-left.
     FrontLeft,
+    /// Barrier to the left.
     Left,
+    /// Barrier behind-left.
     RearLeft,
+    /// Barrier behind the ego.
     Rear,
+    /// Barrier behind-right.
     RearRight,
+    /// Barrier to the right.
     Right,
+    /// Barrier ahead-right.
     FrontRight,
 }
 
 impl Direction {
+    /// All eight directions, in matrix order.
     pub const ALL: [Direction; 8] = [
         Direction::Front,
         Direction::FrontLeft,
@@ -50,6 +59,7 @@ impl Direction {
         }
     }
 
+    /// Stable lowercase name (used in scenario ids).
     pub fn name(self) -> &'static str {
         match self {
             Direction::Front => "front",
@@ -67,12 +77,16 @@ impl Direction {
 /// Barrier-car speed relative to ego.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum RelSpeed {
+    /// Barrier slower than the ego.
     Slower,
+    /// Barrier matching the ego's speed.
     Equal,
+    /// Barrier faster than the ego.
     Faster,
 }
 
 impl RelSpeed {
+    /// All three relative speeds, in matrix order.
     pub const ALL: [RelSpeed; 3] = [RelSpeed::Slower, RelSpeed::Equal, RelSpeed::Faster];
 
     /// Barrier speed as a multiple of ego speed.
@@ -84,6 +98,7 @@ impl RelSpeed {
         }
     }
 
+    /// Stable lowercase name (used in scenario ids).
     pub fn name(self) -> &'static str {
         match self {
             RelSpeed::Slower => "slower",
@@ -96,12 +111,16 @@ impl RelSpeed {
 /// Barrier-car next maneuver.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Maneuver {
+    /// Barrier holds its lane.
     Straight,
+    /// Barrier turns left.
     TurnLeft,
+    /// Barrier turns right.
     TurnRight,
 }
 
 impl Maneuver {
+    /// All three maneuvers, in matrix order.
     pub const ALL: [Maneuver; 3] = [Maneuver::Straight, Maneuver::TurnLeft, Maneuver::TurnRight];
 
     /// Steering angle the barrier car applies (rad).
@@ -113,6 +132,7 @@ impl Maneuver {
         }
     }
 
+    /// Stable lowercase name (used in scenario ids).
     pub fn name(self) -> &'static str {
         match self {
             Maneuver::Straight => "straight",
@@ -125,14 +145,18 @@ impl Maneuver {
 /// One test case from the matrix.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Scenario {
+    /// Where the barrier starts relative to the ego.
     pub direction: Direction,
+    /// Barrier speed relative to the ego.
     pub rel_speed: RelSpeed,
+    /// What the barrier does during the episode.
     pub maneuver: Maneuver,
     /// Ego cruise speed (m/s).
     pub ego_speed: f64,
 }
 
 impl Scenario {
+    /// Stable id, e.g. `front-faster-turnleft` (unique per matrix cell).
     pub fn id(&self) -> String {
         format!(
             "{}-{}-{}",

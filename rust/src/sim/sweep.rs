@@ -11,13 +11,27 @@
 //! [`SweepReport`] (pass rate, collisions, min-TTC histogram, failing
 //! case ids, worst cases).
 //!
-//! Everything is deterministic by construction: case expansion and
-//! sharding depend only on the spec (never on worker count or backend),
-//! the scheduler returns outputs in task order, and episodes are pure
-//! f64 math — so the same spec produces a byte-identical
-//! [`SweepReport::encode`] on a 1-worker `LocalCluster`, an N-worker
-//! `LocalCluster`, or a `StandaloneCluster` of worker processes. The
+//! Everything is deterministic by construction: case expansion depends
+//! only on the spec (never on worker count or backend), results are
+//! reassembled in case order, and episodes are pure f64 math — so the
+//! same spec produces a byte-identical [`SweepReport::encode`] on a
+//! 1-worker `LocalCluster`, an N-worker `LocalCluster`, or a
+//! `StandaloneCluster` of worker processes, with adaptive sharding
+//! (and mid-sweep re-calibration) on or off. Task *boundaries* may move
+//! with measured wall time — those are execution facts, recorded as a
+//! replayable calibration log in [`SweepReport::sharding`]
+//! ([`replay_shards`] reconstructs the executed layout). The
 //! integration suite asserts exactly that.
+//!
+//! ```
+//! use av_simd::sim::SweepSpec;
+//!
+//! let spec = SweepSpec::default();
+//! // 4 ego speeds x 2 timesteps x 3 seeds x 66 matrix cases
+//! assert_eq!(spec.case_count(), 4 * 2 * 3 * 66);
+//! // expansion is a pure function of the spec
+//! assert_eq!(spec.cases().len(), spec.case_count());
+//! ```
 
 use crate::engine::{run_job, Action, Cluster, OpCall, Source, TaskOutput, TaskSpec};
 use crate::error::{Error, Result};
@@ -46,12 +60,16 @@ const FAILING_LIST_CAP: usize = 64;
 /// params: episode timing plus the controller under test.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct EpisodeParams {
+    /// Episode timestep (s).
     pub dt: f64,
+    /// Episode horizon (s).
     pub horizon: f64,
+    /// Controller under test (shipped to workers per task).
     pub controller: ControllerParams,
 }
 
 impl EpisodeParams {
+    /// Serialize as the `run_episode` op's params.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::with_capacity(9 * 8);
         w.put_f64(self.dt);
@@ -67,6 +85,7 @@ impl EpisodeParams {
         w.into_vec()
     }
 
+    /// Decode and validate [`EpisodeParams::encode`] bytes.
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
         let dt = r.get_f64()?;
@@ -98,6 +117,7 @@ impl EpisodeParams {
 /// came from.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepCase {
+    /// The concrete Fig-1 scenario to run.
     pub scenario: Scenario,
     /// Episode timestep for this case (s).
     pub dt: f64,
@@ -105,7 +125,9 @@ pub struct SweepCase {
     pub seed: u64,
     /// Grid coordinates (indices into the spec's dts/ego_speeds/seeds).
     pub dt_index: u32,
+    /// Index into the spec's `ego_speeds`.
     pub ego_index: u32,
+    /// Index into the spec's `seeds`.
     pub seed_index: u32,
 }
 
@@ -146,13 +168,17 @@ impl SweepCase {
 }
 
 /// Adaptive shard sizing: a calibration task measures per-case wall
-/// time, then the driver re-shards the remaining cases so each task
-/// lands near `target_task` — big enough to amortize dispatch, small
-/// enough that no straggler shard dominates the stream. Sharding stays
-/// a pure function of (spec case order, measured shard size), never of
-/// worker count or backend, so [`SweepReport::encode`] stays
-/// byte-identical everywhere; the measured inputs are recorded in
-/// [`SweepReport::sharding`] for reproducibility.
+/// time, then the driver shards the remaining cases so each task lands
+/// near `target_task` — big enough to amortize dispatch, small enough
+/// that no straggler shard dominates the stream. Mid-sweep, the driver
+/// keeps folding the measured per-case wall of completed shards back
+/// in: when it drifts from the current calibration by more than
+/// `drift_threshold`×, the *unsubmitted* tail is re-sharded (already
+/// dispatched shards are never recut). Sharding stays a pure function
+/// of (spec case order, the recorded calibration log), never of worker
+/// count or backend, so [`SweepReport::encode`] stays byte-identical
+/// everywhere; the log lands in [`SweepReport::sharding`] and
+/// [`replay_shards`] reconstructs the executed layout from it.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct AdaptiveSharding {
     /// Target wall time per task after calibration.
@@ -160,9 +186,21 @@ pub struct AdaptiveSharding {
     /// Cases in the calibration task (clamped to the case count and cut
     /// at the first timestep boundary — shards never mix timesteps).
     pub calibration_cases: usize,
-    /// Bounds on the computed cases-per-shard.
+    /// Lower bound on the computed cases-per-shard.
     pub min_shard: usize,
+    /// Upper bound on the computed cases-per-shard.
     pub max_shard: usize,
+    /// Mid-sweep re-calibration trigger: re-shard the unsubmitted tail
+    /// when the measured per-case wall drifts from the current
+    /// calibration by more than this factor in either direction (e.g.
+    /// `1.5` fires at >1.5× or <1/1.5×). Values ≤ 1.0 or non-finite
+    /// (use [`f64::INFINITY`]) disable re-calibration; verdicts are
+    /// byte-identical either way.
+    pub drift_threshold: f64,
+    /// Minimum completed cases folded into a drift measurement before
+    /// it is compared against the calibration (smoothing window — one
+    /// noisy shard must not whipsaw the shard size).
+    pub recalibration_window: usize,
 }
 
 impl Default for AdaptiveSharding {
@@ -172,22 +210,46 @@ impl Default for AdaptiveSharding {
             calibration_cases: 64,
             min_shard: 8,
             max_shard: 4096,
+            drift_threshold: 1.5,
+            recalibration_window: 256,
         }
     }
+}
+
+/// One entry in the sharding calibration log: from `from_case` onward,
+/// shards were cut `shard_size` cases at a time because the measured
+/// per-case wall was `measured_per_case`. The first entry is the
+/// initial calibration; later entries are mid-sweep re-calibrations.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Calibration {
+    /// Case index (into [`SweepSpec::cases`] order) from which this
+    /// shard size applied. Always the submission cursor at decision
+    /// time — shards already dispatched are never recut.
+    pub from_case: usize,
+    /// The measured per-case wall time behind the decision.
+    pub measured_per_case: Duration,
+    /// Cases per shard from `from_case` on.
+    pub shard_size: usize,
 }
 
 /// How a sweep's case list was cut into tasks (execution fact recorded
 /// in the report; not part of [`SweepReport::encode`], which wall-time
 /// measurements must never influence).
-#[derive(Debug, Clone, Copy, PartialEq)]
+#[derive(Debug, Clone, PartialEq)]
 pub enum ShardSizing {
     /// `SweepSpec::shard_size` applied uniformly.
-    Fixed { shard_size: usize },
-    /// Calibrated: `shard_size = clamp(target_task / measured_per_case)`.
-    Adaptive {
-        calibration_cases: usize,
-        measured_per_case: Duration,
+    Fixed {
+        /// Cases per shard.
         shard_size: usize,
+    },
+    /// Calibrated: `shard_size = clamp(target_task / measured_per_case)`,
+    /// re-derived mid-sweep whenever drift exceeded the threshold.
+    Adaptive {
+        /// Cases in the calibration shard (task 0 of the sweep).
+        calibration_cases: usize,
+        /// The replayable calibration sequence; feed it to
+        /// [`replay_shards`] to reconstruct the executed shard layout.
+        log: Vec<Calibration>,
     },
 }
 
@@ -346,6 +408,95 @@ fn chunk_dt_pure(cases: &[SweepCase], cap: usize) -> Vec<Vec<SweepCase>> {
     shards
 }
 
+/// End (exclusive) of the next contiguous shard starting at `start`: at
+/// most `cap` cases, never straddling a timestep boundary. Cut-for-cut
+/// identical to [`chunk_dt_pure`] applied from `start` — the incremental
+/// form the streaming adaptive driver uses, which is what makes a
+/// recorded calibration log replayable.
+fn next_shard_end(cases: &[SweepCase], start: usize, cap: usize) -> usize {
+    let cap = cap.max(1);
+    let end = start.saturating_add(cap).min(cases.len());
+    for i in start + 1..end {
+        if cases[i].dt_index != cases[start].dt_index {
+            return i;
+        }
+    }
+    end
+}
+
+/// Reconstruct the exact shard layout an adaptive sweep executed from
+/// its recorded calibration log (see [`ShardSizing::Adaptive`]): shard
+/// 0 is the calibration prefix, then the tail is cut with whichever
+/// [`Calibration`] entry was in force at each cut position (the last
+/// entry whose `from_case` is ≤ the position). A pure function of
+/// (case order, `calibration_cases`, log) — run it on
+/// [`SweepSpec::cases`] and the report's log to audit how a sweep was
+/// actually dispatched.
+pub fn replay_shards(
+    cases: &[SweepCase],
+    calibration_cases: usize,
+    log: &[Calibration],
+) -> Vec<Vec<SweepCase>> {
+    let mut shards = Vec::new();
+    let calib = calibration_cases.min(cases.len());
+    if calib > 0 {
+        shards.push(cases[..calib].to_vec());
+    }
+    let mut cursor = calib;
+    let mut idx = 0usize;
+    while cursor < cases.len() {
+        while idx + 1 < log.len() && log[idx + 1].from_case <= cursor {
+            idx += 1;
+        }
+        let size = log.get(idx).map(|c| c.shard_size).unwrap_or(usize::MAX);
+        let end = next_shard_end(cases, cursor, size);
+        shards.push(cases[cursor..end].to_vec());
+        cursor = end;
+    }
+    shards
+}
+
+/// Compile one shard into its engine task (the streaming adaptive path
+/// cuts shards lazily, so it builds tasks one at a time instead of
+/// through [`SweepSpec::task_specs_from`]).
+fn shard_task(spec: &SweepSpec, shard: &[SweepCase], task_id: usize) -> TaskSpec {
+    let params = EpisodeParams {
+        dt: shard[0].dt,
+        horizon: spec.horizon,
+        controller: spec.controller,
+    }
+    .encode();
+    TaskSpec {
+        job_id: SWEEP_JOB_ID,
+        task_id: task_id as u32,
+        attempt: 0,
+        source: Source::Scenarios {
+            scenarios: shard.iter().map(|c| encode_scenario(&c.scenario)).collect(),
+        },
+        ops: vec![OpCall::new("run_episode", params)],
+        action: Action::Episodes,
+    }
+}
+
+/// `clamp(target / per_case)` — the one formula both the initial
+/// calibration and every re-calibration go through.
+fn calibrated_shard_size(target: Duration, per_case: Duration, ad: &AdaptiveSharding) -> usize {
+    let min_shard = ad.min_shard.max(1);
+    ((target.as_secs_f64() / per_case.as_secs_f64().max(1e-12)).round() as usize)
+        .clamp(min_shard, ad.max_shard.max(min_shard))
+}
+
+/// True when `measured` has drifted from `current` by more than
+/// `threshold`× in either direction. Thresholds ≤ 1.0 or non-finite
+/// disable drift detection entirely.
+fn drift_exceeded(current: Duration, measured: Duration, threshold: f64) -> bool {
+    if !threshold.is_finite() || threshold <= 1.0 {
+        return false;
+    }
+    let ratio = measured.as_secs_f64() / current.as_secs_f64().max(1e-12);
+    ratio > threshold || ratio < 1.0 / threshold
+}
+
 /// Decode a job's `Episodes` outputs (task order) into per-case results,
 /// cross-checking every task's episode count against its shard.
 fn collect_episodes(
@@ -377,6 +528,35 @@ fn collect_episodes(
     Ok(())
 }
 
+/// Decode one task's `Episodes` output into the case-indexed result
+/// slots `[start, start+len)` (the streaming adaptive path places each
+/// completion directly; shard coverage is a partition of the case list,
+/// so the slots reassemble into case order regardless of finish order).
+fn place_episodes(
+    out: TaskOutput,
+    start: usize,
+    len: usize,
+    results: &mut [Option<EpisodeResult>],
+) -> Result<()> {
+    match out {
+        TaskOutput::Episodes(rs) => {
+            if rs.len() != len {
+                return Err(Error::Sim(format!(
+                    "sweep task returned {} episodes for a {len}-case shard",
+                    rs.len()
+                )));
+            }
+            for (k, r) in rs.iter().enumerate() {
+                results[start + k] = Some(decode_result(r)?);
+            }
+            Ok(())
+        }
+        other => Err(Error::Sim(format!(
+            "sweep task returned {other:?}, expected Episodes"
+        ))),
+    }
+}
+
 // ---------------------------------------------------------------------
 // report
 // ---------------------------------------------------------------------
@@ -384,7 +564,9 @@ fn collect_episodes(
 /// A worst case kept in the report: enough to re-run and record it.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorstCase {
+    /// The case that produced the result.
     pub case: SweepCase,
+    /// Its episode outcome.
     pub result: EpisodeResult,
 }
 
@@ -395,8 +577,11 @@ pub struct WorstCase {
 /// determinism tests byte-compare.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepReport {
+    /// Total cases executed.
     pub total: usize,
+    /// Cases whose episode passed.
     pub passed: usize,
+    /// Cases that ended in a collision.
     pub collisions: usize,
     /// Episodes that spent at least one tick in emergency braking.
     pub emergency_episodes: usize,
@@ -411,7 +596,9 @@ pub struct SweepReport {
     pub worst: Vec<WorstCase>,
     /// Execution facts (not part of `encode`).
     pub tasks: usize,
+    /// Retry attempts consumed.
     pub retries: usize,
+    /// End-to-end sweep wall time.
     pub wall: Duration,
     /// How the case list was cut into tasks (fixed or calibrated — see
     /// [`ShardSizing`]); recorded so adaptive runs are reproducible.
@@ -504,6 +691,7 @@ impl SweepReport {
         Ok(report)
     }
 
+    /// Fraction of cases that passed (0 when the sweep is empty).
     pub fn pass_rate(&self) -> f64 {
         if self.total == 0 {
             0.0
@@ -598,16 +786,28 @@ impl SweepReport {
             self.retries,
             self.wall.as_secs_f64()
         ));
-        match self.sharding {
-            ShardSizing::Fixed { shard_size } if shard_size > 0 => {
+        match &self.sharding {
+            ShardSizing::Fixed { shard_size } if *shard_size > 0 => {
                 s.push_str(&format!("sharding: fixed, {shard_size} cases/shard\n"));
             }
-            ShardSizing::Adaptive { calibration_cases, measured_per_case, shard_size } => {
-                s.push_str(&format!(
-                    "sharding: adaptive, calibrated {calibration_cases} cases @ \
-                     {:.1} µs/case -> {shard_size} cases/shard\n",
-                    measured_per_case.as_secs_f64() * 1e6
-                ));
+            ShardSizing::Adaptive { calibration_cases, log } => {
+                if let Some(first) = log.first() {
+                    s.push_str(&format!(
+                        "sharding: adaptive, calibrated {calibration_cases} cases @ \
+                         {:.1} µs/case -> {} cases/shard, {} re-calibration(s)\n",
+                        first.measured_per_case.as_secs_f64() * 1e6,
+                        first.shard_size,
+                        log.len() - 1
+                    ));
+                }
+                for c in log.iter().skip(1) {
+                    s.push_str(&format!(
+                        "  re-calibrated at case {}: {:.1} µs/case -> {} cases/shard\n",
+                        c.from_case,
+                        c.measured_per_case.as_secs_f64() * 1e6,
+                        c.shard_size
+                    ));
+                }
             }
             ShardSizing::Fixed { .. } => {}
         }
@@ -648,10 +848,12 @@ pub struct SweepDriver {
 }
 
 impl SweepDriver {
+    /// Driver for `spec`.
     pub fn new(spec: SweepSpec) -> Self {
         Self { spec }
     }
 
+    /// The sweep specification this driver runs.
     pub fn spec(&self) -> &SweepSpec {
         &self.spec
     }
@@ -692,9 +894,15 @@ impl SweepDriver {
     }
 
     /// Adaptive path: run a dt-pure calibration prefix as one task,
-    /// derive cases-per-shard from its measured wall time, then stream
-    /// the remainder in calibrated shards. Case order (and therefore the
-    /// encoded verdict payload) is identical to the fixed path.
+    /// derive cases-per-shard from its measured wall time, then *stream*
+    /// the remainder — shards are cut lazily at the submission cursor,
+    /// and completed shards keep feeding measured per-case wall time
+    /// back in. When the measurement drifts past
+    /// [`AdaptiveSharding::drift_threshold`], the unsubmitted tail is
+    /// re-sharded and the decision is appended to the calibration log
+    /// ([`SweepReport::sharding`]). Case order — and therefore the
+    /// encoded verdict payload — is identical to the fixed path; only
+    /// task boundaries move.
     fn run_adaptive(&self, cluster: &dyn Cluster, ad: &AdaptiveSharding) -> Result<SweepReport> {
         let cases = self.spec.cases();
         if cases.is_empty() {
@@ -712,39 +920,171 @@ impl SweepDriver {
         }
         let calib_shards = vec![cases[..calib_len].to_vec()];
         let calib_tasks = self.spec.task_specs_from(&calib_shards, SWEEP_JOB_ID);
-        let (calib_outs, calib_job) = run_job(cluster, calib_tasks, self.spec.max_retries)?;
-        let mut results = Vec::with_capacity(cases.len());
-        collect_episodes(calib_outs, &calib_shards, &mut results)?;
+        let (mut calib_outs, calib_job) = run_job(cluster, calib_tasks, self.spec.max_retries)?;
+        let mut results: Vec<Option<EpisodeResult>> = vec![None; cases.len()];
+        place_episodes(
+            calib_outs.pop().expect("1-task job returns 1 output"),
+            0,
+            calib_len,
+            &mut results,
+        )?;
 
         // measured per-case wall: the calibration task's execution time
         // (p50 of a 1-task job = that task) over its case count
         let per_case = Duration::from_nanos(
             ((calib_job.task_wall_p50.as_nanos() as u64) / calib_len as u64).max(1),
         );
-        let min_shard = ad.min_shard.max(1);
-        let shard_size = ((ad.target_task.as_secs_f64() / per_case.as_secs_f64()).round()
-            as usize)
-            .clamp(min_shard, ad.max_shard.max(min_shard));
+        let mut shard_size = calibrated_shard_size(ad.target_task, per_case, ad);
+        let mut current_per_case = per_case;
+        let mut log = vec![Calibration {
+            from_case: calib_len,
+            measured_per_case: per_case,
+            shard_size,
+        }];
 
-        let shards = chunk_dt_pure(&cases[calib_len..], shard_size);
-        let tasks = self.spec.task_specs_from(&shards, SWEEP_JOB_ID);
-        let n_tasks = tasks.len();
-        let (outs, job) = run_job(cluster, tasks, self.spec.max_retries)?;
-        collect_episodes(outs, &shards, &mut results)?;
+        // --- stream the tail, re-sharding the unsubmitted remainder ---
+        let mut retries = calib_job.retries;
+        // seq → (start case, case count) of each submitted shard
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        if calib_len < cases.len() {
+            let m = Metrics::global();
+            let wall_hist = m.histogram("engine_task_wall");
+            let wait_hist = m.histogram("engine_task_queue_wait");
 
+            let stream = cluster.open_stream();
+            let _close = stream.clone().close_on_drop();
+            // Submission window: enough shards in flight to keep every
+            // worker's pipeline full, small enough that a re-calibration
+            // still has a tail left to re-shard. Affects dispatch only —
+            // never verdicts, which depend on case order alone.
+            let window = cluster.workers().saturating_mul(2).max(4);
+            let mut cursor = calib_len; // first case not yet submitted
+            let mut outstanding = 0usize;
+            let mut first_err: Option<Error> = None;
+            // drift accumulation since the last (re-)calibration check
+            let mut acc_cases = 0usize;
+            let mut acc_wall = Duration::ZERO;
+            let window_cases = ad.recalibration_window.max(1);
+
+            loop {
+                while first_err.is_none() && cursor < cases.len() && outstanding < window {
+                    let end = next_shard_end(&cases, cursor, shard_size);
+                    let seq = ranges.len() as u64;
+                    let task = shard_task(&self.spec, &cases[cursor..end], ranges.len() + 1);
+                    ranges.push((cursor, end - cursor));
+                    stream.submit(seq, task);
+                    outstanding += 1;
+                    cursor = end;
+                }
+                if outstanding == 0 {
+                    break;
+                }
+                let Some(c) = stream.next_completion() else {
+                    return Err(first_err.unwrap_or_else(|| {
+                        Error::Engine(format!(
+                            "sweep stream ended with {outstanding} task(s) unresolved"
+                        ))
+                    }));
+                };
+                outstanding -= 1;
+                wall_hist.observe(c.wall);
+                wait_hist.observe(c.queue_wait);
+                let (start, len) = ranges[c.seq as usize];
+                match c.result {
+                    Ok(out) => {
+                        place_episodes(out, start, len, &mut results)?;
+                        acc_cases += len;
+                        acc_wall += c.wall;
+                        // fold measured wall back into the sharding of
+                        // the unsubmitted tail once the smoothing window
+                        // is full and the drift threshold is exceeded
+                        if first_err.is_none()
+                            && cursor < cases.len()
+                            && acc_cases >= window_cases
+                        {
+                            let measured = Duration::from_nanos(
+                                ((acc_wall.as_nanos() as u64) / acc_cases as u64).max(1),
+                            );
+                            if drift_exceeded(current_per_case, measured, ad.drift_threshold)
+                            {
+                                current_per_case = measured;
+                                let new_size =
+                                    calibrated_shard_size(ad.target_task, measured, ad);
+                                if new_size != shard_size {
+                                    crate::logmsg!(
+                                        "info",
+                                        "sweep re-calibrated at case {cursor}: \
+                                         {:.1} µs/case -> {new_size} cases/shard",
+                                        measured.as_secs_f64() * 1e6
+                                    );
+                                    shard_size = new_size;
+                                    log.push(Calibration {
+                                        from_case: cursor,
+                                        measured_per_case: measured,
+                                        shard_size,
+                                    });
+                                }
+                            }
+                            acc_cases = 0;
+                            acc_wall = Duration::ZERO;
+                        }
+                    }
+                    Err(e) => {
+                        crate::logmsg!(
+                            "warn",
+                            "sweep task {} attempt {} failed: {e}",
+                            c.spec.task_id,
+                            c.spec.attempt
+                        );
+                        if first_err.is_none()
+                            && (c.spec.attempt as usize) < self.spec.max_retries
+                            && e.is_retryable()
+                        {
+                            let mut t = c.spec;
+                            t.attempt += 1;
+                            retries += 1;
+                            stream.submit(c.seq, t);
+                            outstanding += 1;
+                        } else if first_err.is_none() {
+                            first_err = Some(Error::Engine(format!(
+                                "sweep task {} failed after {} attempt(s): {e}",
+                                c.spec.task_id,
+                                c.spec.attempt + 1
+                            )));
+                        }
+                    }
+                }
+            }
+            stream.close();
+            if let Some(e) = first_err {
+                return Err(e);
+            }
+        }
+        // the recorded log must replay the executed layout exactly
+        debug_assert_eq!(
+            replay_shards(&cases, calib_len, &log)
+                .iter()
+                .map(|s| s.len())
+                .collect::<Vec<_>>(),
+            std::iter::once(calib_len)
+                .chain(ranges.iter().map(|r| r.1))
+                .collect::<Vec<_>>(),
+            "calibration log diverged from the executed shard layout"
+        );
+
+        let results: Vec<EpisodeResult> = results
+            .into_iter()
+            .map(|o| o.expect("every case slot filled or the sweep errored"))
+            .collect();
         let mut report = SweepReport::aggregate(
             &cases,
             &results,
             self.spec.worst_k,
-            1 + n_tasks,
-            calib_job.retries + job.retries,
+            1 + ranges.len(),
+            retries,
             wall_start.elapsed(),
         )?;
-        report.sharding = ShardSizing::Adaptive {
-            calibration_cases: calib_len,
-            measured_per_case: per_case,
-            shard_size,
-        };
+        report.sharding = ShardSizing::Adaptive { calibration_cases: calib_len, log };
         Ok(report)
     }
 
@@ -976,7 +1316,9 @@ mod tests {
     fn adaptive_sharding_matches_fixed_verdicts_byte_for_byte() {
         let fixed = small_spec();
         let reference = SweepDriver::new(fixed.clone()).run(&local(2)).unwrap();
-        // several calibration/target shapes, all must agree with fixed
+        // several calibration/target/re-calibration shapes, all must
+        // agree with fixed — including a hair-trigger drift threshold
+        // (re-shards aggressively) and a disabled one (never re-shards)
         for ad in [
             AdaptiveSharding::default(),
             AdaptiveSharding {
@@ -984,29 +1326,121 @@ mod tests {
                 calibration_cases: 7,
                 min_shard: 2,
                 max_shard: 50,
+                drift_threshold: 1.0001,
+                recalibration_window: 1,
             },
             AdaptiveSharding {
                 target_task: Duration::from_secs(5),
                 calibration_cases: 1000,
+                drift_threshold: f64::INFINITY,
                 ..AdaptiveSharding::default()
             },
         ] {
             let spec = SweepSpec { adaptive: Some(ad), ..small_spec() };
-            let report = SweepDriver::new(spec).run(&local(3)).unwrap();
+            let report = SweepDriver::new(spec.clone()).run(&local(3)).unwrap();
             assert_eq!(
                 report.encode(),
                 reference.encode(),
                 "adaptive {ad:?} changed the verdicts"
             );
-            match report.sharding {
-                ShardSizing::Adaptive { calibration_cases, measured_per_case, shard_size } => {
-                    assert!(calibration_cases >= 1);
-                    assert!(measured_per_case > Duration::ZERO);
-                    assert!(shard_size >= 1);
+            match &report.sharding {
+                ShardSizing::Adaptive { calibration_cases, log } => {
+                    assert!(*calibration_cases >= 1);
+                    assert!(!log.is_empty(), "initial calibration must be logged");
+                    assert!(log[0].measured_per_case > Duration::ZERO);
+                    assert!(log[0].shard_size >= 1);
+                    if !ad.drift_threshold.is_finite() {
+                        assert_eq!(log.len(), 1, "disabled drift must never re-calibrate");
+                    }
+                    // the log must replay into a valid, order-preserving,
+                    // dt-pure partition of the case list
+                    let replayed =
+                        replay_shards(&spec.cases(), *calibration_cases, log);
+                    let rejoined: Vec<SweepCase> =
+                        replayed.iter().flatten().cloned().collect();
+                    assert_eq!(rejoined, spec.cases(), "replay must cover all cases");
+                    assert_eq!(replayed.len(), report.tasks, "one shard per task");
+                    for shard in &replayed {
+                        assert!(shard
+                            .iter()
+                            .all(|c| c.dt_index == shard[0].dt_index));
+                    }
                 }
                 other => panic!("adaptive run recorded {other:?}"),
             }
         }
+    }
+
+    #[test]
+    fn drift_and_shard_size_helpers_are_pure() {
+        let ad = AdaptiveSharding {
+            target_task: Duration::from_millis(100),
+            min_shard: 4,
+            max_shard: 64,
+            ..AdaptiveSharding::default()
+        };
+        // 1 ms/case @ 100 ms target -> 100, clamped to 64
+        assert_eq!(
+            calibrated_shard_size(ad.target_task, Duration::from_millis(1), &ad),
+            64
+        );
+        // 10 ms/case -> 10
+        assert_eq!(
+            calibrated_shard_size(ad.target_task, Duration::from_millis(10), &ad),
+            10
+        );
+        // 100 ms/case -> 1, clamped to min 4
+        assert_eq!(
+            calibrated_shard_size(ad.target_task, Duration::from_millis(100), &ad),
+            4
+        );
+
+        let ms = Duration::from_millis;
+        assert!(drift_exceeded(ms(10), ms(16), 1.5), "1.6x up is drift");
+        assert!(drift_exceeded(ms(16), ms(10), 1.5), "1.6x down is drift");
+        assert!(!drift_exceeded(ms(10), ms(14), 1.5), "1.4x is within band");
+        assert!(!drift_exceeded(ms(10), ms(1000), f64::INFINITY), "inf disables");
+        assert!(!drift_exceeded(ms(10), ms(1000), 1.0), "<=1 disables");
+        assert!(!drift_exceeded(ms(10), ms(10), 1.5), "no drift, no trigger");
+    }
+
+    #[test]
+    fn replay_shards_follows_the_log_segments() {
+        let spec = small_spec(); // 2 dts x 1 seed x 2 speeds x 66 = 264 cases
+        let cases = spec.cases();
+        let n = cases.len();
+        let calib = 10usize;
+        let log = vec![
+            Calibration {
+                from_case: calib,
+                measured_per_case: Duration::from_micros(50),
+                shard_size: 20,
+            },
+            Calibration {
+                from_case: 90,
+                measured_per_case: Duration::from_micros(200),
+                shard_size: 5,
+            },
+        ];
+        let shards = replay_shards(&cases, calib, &log);
+        // partition: order-preserving, full coverage
+        let rejoined: Vec<SweepCase> = shards.iter().flatten().cloned().collect();
+        assert_eq!(rejoined, cases);
+        assert_eq!(shards[0].len(), calib, "shard 0 is the calibration prefix");
+        // cuts before case 90 use size 20; cuts at/after use size 5 (all
+        // subject to dt boundaries)
+        let mut cursor = calib;
+        for shard in &shards[1..] {
+            let expect_cap = if cursor >= 90 { 5 } else { 20 };
+            assert!(
+                shard.len() <= expect_cap,
+                "shard at case {cursor} has {} cases, cap {expect_cap}",
+                shard.len()
+            );
+            assert!(shard.iter().all(|c| c.dt_index == shard[0].dt_index));
+            cursor += shard.len();
+        }
+        assert_eq!(cursor, n);
     }
 
     #[test]

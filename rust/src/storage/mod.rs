@@ -44,6 +44,7 @@ impl BlockStore {
         Ok(Self { root, block_size: DEFAULT_BLOCK_SIZE })
     }
 
+    /// Override the content-split block size (min 1 KiB); builder-style.
     pub fn with_block_size(mut self, n: usize) -> Self {
         self.block_size = n.max(1024);
         self
@@ -133,6 +134,7 @@ impl BlockStore {
         Ok(names)
     }
 
+    /// True when an object named `name` exists in the store.
     pub fn exists(&self, name: &str) -> bool {
         self.manifest_path(name).map(|p| p.exists()).unwrap_or(false)
     }

@@ -9,25 +9,30 @@ use std::time::{Duration, Instant};
 /// Result of one measured case.
 #[derive(Debug, Clone)]
 pub struct Sample {
+    /// Bench case name.
     pub name: String,
     /// Wall time of each measured iteration.
     pub iters: Vec<Duration>,
     /// Work units (e.g. bytes or messages) processed per iteration, if any.
     pub units_per_iter: Option<f64>,
+    /// Unit label for throughput (e.g. `"bytes"`, `"tasks"`).
     pub unit_label: &'static str,
 }
 
 impl Sample {
+    /// Median sample duration.
     pub fn median(&self) -> Duration {
         let mut v = self.iters.clone();
         v.sort_unstable();
         v[v.len() / 2]
     }
 
+    /// Fastest sample (least noisy statistic on shared runners).
     pub fn min(&self) -> Duration {
         *self.iters.iter().min().unwrap()
     }
 
+    /// 95th-percentile sample duration.
     pub fn p95(&self) -> Duration {
         // nearest-rank with the index clamped into range — the old
         // `% len` wrap could alias a high percentile back to the fastest
@@ -38,6 +43,7 @@ impl Sample {
         v[idx]
     }
 
+    /// Mean sample duration.
     pub fn mean(&self) -> Duration {
         let total: Duration = self.iters.iter().sum();
         total / self.iters.len() as u32
@@ -60,6 +66,7 @@ pub struct Bench {
 }
 
 impl Bench {
+    /// Bench builder for case `name`.
     pub fn new(name: impl Into<String>) -> Self {
         Self {
             name: name.into(),
@@ -70,11 +77,13 @@ impl Bench {
         }
     }
 
+    /// Set warmup iterations (default 3); builder-style.
     pub fn warmup(mut self, n: usize) -> Self {
         self.warmup_iters = n;
         self
     }
 
+    /// Set measured samples (default 10); builder-style.
     pub fn samples(mut self, n: usize) -> Self {
         self.sample_iters = n.max(1);
         self
@@ -87,6 +96,7 @@ impl Bench {
         self
     }
 
+    /// Run the bench: warmups, then timed samples of `f`.
     pub fn run<F: FnMut()>(self, mut f: F) -> Sample {
         for _ in 0..self.warmup_iters {
             f();

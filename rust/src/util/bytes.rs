@@ -12,54 +12,67 @@ pub struct ByteWriter {
 }
 
 impl ByteWriter {
+    /// Empty writer.
     pub fn new() -> Self {
         Self { buf: Vec::new() }
     }
 
+    /// Empty writer with `cap` bytes preallocated.
     pub fn with_capacity(cap: usize) -> Self {
         Self { buf: Vec::with_capacity(cap) }
     }
 
+    /// Consume into the underlying byte vector.
     pub fn into_vec(self) -> Vec<u8> {
         self.buf
     }
 
+    /// The bytes written so far.
     pub fn as_slice(&self) -> &[u8] {
         &self.buf
     }
 
+    /// Bytes written so far.
     pub fn len(&self) -> usize {
         self.buf.len()
     }
 
+    /// True when nothing has been written.
     pub fn is_empty(&self) -> bool {
         self.buf.is_empty()
     }
 
+    /// Append one byte.
     pub fn put_u8(&mut self, v: u8) {
         self.buf.push(v);
     }
 
+    /// Append a `u16`, little-endian.
     pub fn put_u16(&mut self, v: u16) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `u32`, little-endian.
     pub fn put_u32(&mut self, v: u32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append a `u64`, little-endian.
     pub fn put_u64(&mut self, v: u64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append an `i64`, little-endian.
     pub fn put_i64(&mut self, v: i64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append an `f32`, little-endian.
     pub fn put_f32(&mut self, v: f32) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
 
+    /// Append an `f64`, little-endian.
     pub fn put_f64(&mut self, v: f64) {
         self.buf.extend_from_slice(&v.to_le_bytes());
     }
@@ -93,6 +106,7 @@ impl ByteWriter {
         self.buf.extend_from_slice(b);
     }
 
+    /// Append a bool as one byte (0/1).
     pub fn put_bool(&mut self, v: bool) {
         self.put_u8(v as u8);
     }
@@ -116,18 +130,22 @@ pub struct ByteReader<'a> {
 }
 
 impl<'a> ByteReader<'a> {
+    /// Cursor at the start of `buf`.
     pub fn new(buf: &'a [u8]) -> Self {
         Self { buf, pos: 0 }
     }
 
+    /// Bytes left to read.
     pub fn remaining(&self) -> usize {
         self.buf.len() - self.pos
     }
 
+    /// True when the cursor is at the end.
     pub fn is_empty(&self) -> bool {
         self.remaining() == 0
     }
 
+    /// Bytes consumed so far.
     pub fn position(&self) -> usize {
         self.pos
     }
@@ -145,38 +163,47 @@ impl<'a> ByteReader<'a> {
         Ok(s)
     }
 
+    /// Read one byte.
     pub fn get_u8(&mut self) -> Result<u8> {
         Ok(self.take(1)?[0])
     }
 
+    /// Read a little-endian `u16`.
     pub fn get_u16(&mut self) -> Result<u16> {
         Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u32`.
     pub fn get_u32(&mut self) -> Result<u32> {
         Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `u64`.
     pub fn get_u64(&mut self) -> Result<u64> {
         Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `i64`.
     pub fn get_i64(&mut self) -> Result<i64> {
         Ok(i64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `f32`.
     pub fn get_f32(&mut self) -> Result<f32> {
         Ok(f32::from_le_bytes(self.take(4)?.try_into().unwrap()))
     }
 
+    /// Read a little-endian `f64`.
     pub fn get_f64(&mut self) -> Result<f64> {
         Ok(f64::from_le_bytes(self.take(8)?.try_into().unwrap()))
     }
 
+    /// Read a bool byte (any non-zero is true).
     pub fn get_bool(&mut self) -> Result<bool> {
         Ok(self.get_u8()? != 0)
     }
 
+    /// Read a LEB128 unsigned varint.
     pub fn get_varint(&mut self) -> Result<u64> {
         let mut v: u64 = 0;
         let mut shift = 0u32;
@@ -193,25 +220,30 @@ impl<'a> ByteReader<'a> {
         }
     }
 
+    /// Read a varint-length-prefixed byte slice (borrowed).
     pub fn get_bytes(&mut self) -> Result<&'a [u8]> {
         let n = self.get_varint()? as usize;
         self.take(n)
     }
 
+    /// Read a varint-length-prefixed byte slice (owned).
     pub fn get_bytes_vec(&mut self) -> Result<Vec<u8>> {
         Ok(self.get_bytes()?.to_vec())
     }
 
+    /// Read a varint-length-prefixed UTF-8 string.
     pub fn get_str(&mut self) -> Result<String> {
         let b = self.get_bytes()?;
         String::from_utf8(b.to_vec())
             .map_err(|_| Error::Corrupt("invalid utf-8 string".into()))
     }
 
+    /// Read exactly `n` raw bytes (borrowed).
     pub fn get_raw(&mut self, n: usize) -> Result<&'a [u8]> {
         self.take(n)
     }
 
+    /// Read a varint-count-prefixed `f32` list.
     pub fn get_f32_vec(&mut self) -> Result<Vec<f32>> {
         let n = self.get_varint()? as usize;
         if n > self.remaining() / 4 + 1 {

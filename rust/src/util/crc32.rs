@@ -9,6 +9,12 @@
 //! built at compile time so there is no runtime init and no locking,
 //! and the output is bit-identical to the one-table version — bags
 //! written before the swap still verify.
+//!
+//! ```
+//! // the standard CRC-32 check value
+//! assert_eq!(av_simd::util::crc32::hash(b"123456789"), 0xCBF4_3926);
+//! assert_eq!(av_simd::util::crc32::hash(b""), 0);
+//! ```
 
 /// Reflected polynomial for CRC-32/ISO-HDLC (zlib, gzip, rosbag).
 const POLY: u32 = 0xEDB8_8320;

@@ -20,6 +20,17 @@
 //! is emitted as a literal and the longer match wins. Decoder: pre-
 //! validated block copies via `extend_from_within` (doubling windows for
 //! overlapped matches) instead of a bounds-checked push per byte.
+//!
+//! ```
+//! use av_simd::util::lz::{compress, decompress};
+//!
+//! let data = b"sensor payload sensor payload sensor payload".to_vec();
+//! let packed = compress(&data);
+//! assert!(packed.len() < data.len(), "redundant input must shrink");
+//! // decompression is bounded by the declared output length
+//! assert_eq!(decompress(&packed, data.len()).unwrap(), data);
+//! assert!(decompress(&packed, 4).is_err(), "length cap is enforced");
+//! ```
 
 use crate::error::{Error, Result};
 

@@ -22,6 +22,7 @@ impl Prng {
         Self { s: [next(), next(), next(), next()] }
     }
 
+    /// Next 64 random bits.
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[1]
             .wrapping_mul(5)
@@ -37,6 +38,7 @@ impl Prng {
         result
     }
 
+    /// Next 32 random bits (upper half of [`Prng::next_u64`]).
     pub fn next_u32(&mut self) -> u32 {
         (self.next_u64() >> 32) as u32
     }
@@ -69,6 +71,7 @@ impl Prng {
         lo + self.below((hi - lo) as u64) as i64
     }
 
+    /// Bernoulli draw: true with probability `p`.
     pub fn next_bool(&mut self, p: f64) -> bool {
         self.next_f64() < p
     }

@@ -1,6 +1,16 @@
 //! SHA-256 (FIPS 180-4) in pure std — the offline crate set has no
 //! `sha2`. Used by the DFS-lite block store for content addressing,
 //! where a cryptographic hash (not CRC) is what makes dedupe sound.
+//!
+//! ```
+//! let d = av_simd::util::sha256::digest(b"abc");
+//! let hex: String = d.iter().map(|b| format!("{b:02x}")).collect();
+//! // the FIPS 180-4 test vector
+//! assert_eq!(
+//!     hex,
+//!     "ba7816bf8f01cfea414140de5dae2223b00361a396177a9cb410ff61f20015ad"
+//! );
+//! ```
 
 const K: [u32; 64] = [
     0x428a2f98, 0x71374491, 0xb5c0fbcf, 0xe9b5dba5, 0x3956c25b, 0x59f111f1, 0x923f82a4,

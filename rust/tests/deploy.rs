@@ -1,0 +1,221 @@
+//! Deploy-layer integration tests: `ClusterSpec`-driven fleets,
+//! handshake/version enforcement, and mid-stream worker admission.
+//!
+//! Unlike the spawn-based standalone tests (which need the release
+//! binary on disk), these drive *in-process* worker servers —
+//! `engine::worker::serve` on a thread speaks exactly the protocol a
+//! worker process does, so the whole deploy path (dial → handshake →
+//! stream → shutdown) runs under plain `cargo test`.
+
+use av_simd::engine::deploy::{self, ClusterSpec};
+use av_simd::engine::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
+use av_simd::engine::worker::serve;
+use av_simd::engine::{Action, Cluster, OpRegistry, Source, StandaloneCluster, TaskOutput, TaskSpec};
+use std::net::TcpListener;
+use std::time::Duration;
+
+/// Reserve an ephemeral port, then serve a worker on it from a thread.
+/// (The listener is dropped and rebound by `serve` — the same pattern
+/// the in-crate RPC tests use.)
+fn spawn_worker(id: usize, registry: OpRegistry) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let a = addr.clone();
+    let h = std::thread::spawn(move || {
+        serve(&a, id, registry, "artifacts").unwrap();
+    });
+    (addr, h)
+}
+
+fn spec_for(addrs: &[String], timeout_ms: u64) -> ClusterSpec {
+    let hosts = addrs
+        .iter()
+        .map(|a| format!("\"{a}\""))
+        .collect::<Vec<_>>()
+        .join(", ");
+    ClusterSpec::from_toml_text(&format!(
+        "[cluster]\nname = \"test\"\nconnect_timeout_ms = {timeout_ms}\n\
+         [workers]\nhosts = [{hosts}]\n"
+    ))
+    .unwrap()
+}
+
+fn count_task(id: u32, n: u64) -> TaskSpec {
+    TaskSpec {
+        job_id: 1,
+        task_id: id,
+        attempt: 0,
+        source: Source::Range { start: 0, end: n },
+        ops: vec![],
+        action: Action::Count,
+    }
+}
+
+#[test]
+fn cluster_spec_fleet_runs_tasks() {
+    let (addr_a, h_a) = spawn_worker(0, OpRegistry::with_builtins());
+    let (addr_b, h_b) = spawn_worker(1, OpRegistry::with_builtins());
+    let spec = spec_for(&[addr_a, addr_b], 5000);
+    let cluster = StandaloneCluster::connect(&spec).unwrap();
+    assert_eq!(cluster.workers(), 2);
+
+    let tasks: Vec<TaskSpec> = (0..12).map(|i| count_task(i, (i as u64 + 1) * 5)).collect();
+    let results = cluster.run_tasks(&tasks);
+    for (i, r) in results.iter().enumerate() {
+        assert_eq!(*r.as_ref().unwrap(), TaskOutput::Count((i as u64 + 1) * 5));
+    }
+
+    // connect-mode `shutdown` leaves the fleet up (externally managed)
+    cluster.shutdown();
+    let again = cluster.run_tasks(&[count_task(0, 7)]);
+    assert_eq!(*again[0].as_ref().unwrap(), TaskOutput::Count(7));
+
+    // explicit stop tears the workers down so the threads join
+    cluster.stop_workers();
+    drop(cluster);
+    h_a.join().unwrap();
+    h_b.join().unwrap();
+}
+
+#[test]
+fn late_joining_worker_is_admitted_into_a_running_stream() {
+    // every task stalls long enough that one worker alone would need
+    // ~20x the join delay — the late joiner must end up serving tasks
+    let stall_registry = || {
+        let reg = OpRegistry::with_builtins();
+        reg.register("stall_and_tag", |c, _p, _records| {
+            std::thread::sleep(Duration::from_millis(60));
+            Ok(vec![vec![c.worker_id as u8]])
+        });
+        reg
+    };
+    let (addr_a, h_a) = spawn_worker(1, stall_registry());
+    let spec = spec_for(&[addr_a], 5000);
+    let cluster = StandaloneCluster::connect(&spec).unwrap();
+    assert_eq!(cluster.workers(), 1);
+
+    const TASKS: u64 = 20;
+    let stream = cluster.open_stream();
+    for i in 0..TASKS {
+        let mut t = count_task(i as u32, 1);
+        t.ops.push(av_simd::engine::OpCall::new("stall_and_tag", vec![]));
+        t.action = Action::Collect;
+        stream.submit(i, t);
+    }
+
+    // admit worker 2 while the stream is mid-flight
+    let (addr_b, h_b) = spawn_worker(2, stall_registry());
+    std::thread::sleep(Duration::from_millis(50));
+    cluster.add_worker(&addr_b, Duration::from_secs(5)).unwrap();
+    assert_eq!(cluster.workers(), 2);
+
+    let mut served_by: Vec<u8> = Vec::new();
+    for _ in 0..TASKS {
+        let c = stream.next_completion().expect("all tasks must complete");
+        match c.result.unwrap() {
+            TaskOutput::Records(rs) => served_by.push(rs[0][0]),
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    stream.close();
+
+    assert_eq!(served_by.len() as u64, TASKS);
+    assert!(
+        served_by.contains(&2),
+        "late-joining worker never served a task: {served_by:?}"
+    );
+    assert!(
+        served_by.contains(&1),
+        "original worker starved: {served_by:?}"
+    );
+
+    cluster.stop_workers();
+    drop(cluster);
+    h_a.join().unwrap();
+    h_b.join().unwrap();
+}
+
+#[test]
+fn worker_added_before_a_stream_serves_later_jobs() {
+    let (addr_a, h_a) = spawn_worker(0, OpRegistry::with_builtins());
+    let spec = spec_for(&[addr_a], 5000);
+    let cluster = StandaloneCluster::connect(&spec).unwrap();
+
+    let (addr_b, h_b) = spawn_worker(1, OpRegistry::with_builtins());
+    cluster.add_worker(&addr_b, Duration::from_secs(5)).unwrap();
+    assert_eq!(cluster.workers(), 2, "fleet grows with no stream open");
+
+    let tasks: Vec<TaskSpec> = (0..8).map(|i| count_task(i, 3)).collect();
+    let results = cluster.run_tasks(&tasks);
+    assert!(results.iter().all(|r| *r.as_ref().unwrap() == TaskOutput::Count(3)));
+
+    cluster.stop_workers();
+    drop(cluster);
+    h_a.join().unwrap();
+    h_b.join().unwrap();
+}
+
+#[test]
+fn version_mismatched_worker_is_rejected_at_cluster_connect() {
+    // a fake worker that speaks a newer protocol version
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    let h = std::thread::spawn(move || {
+        let (stream, _) = listener.accept().unwrap();
+        let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+        let mut writer = std::io::BufWriter::new(stream);
+        if let Some(RpcMsg::Hello { .. }) = read_msg(&mut reader).unwrap() {
+            write_msg(
+                &mut writer,
+                &RpcMsg::HelloOk { version: RPC_VERSION + 7, worker_id: 3 },
+            )
+            .unwrap();
+        }
+    });
+
+    let spec = spec_for(&[addr.clone()], 5000);
+    let err = match StandaloneCluster::connect(&spec) {
+        Err(e) => e,
+        Ok(_) => panic!("mismatched fleet must be rejected"),
+    };
+    let msg = err.to_string();
+    assert!(msg.contains(&addr), "endpoint lost: {msg}");
+    assert!(msg.contains("rpc v"), "version context lost: {msg}");
+    assert!(msg.contains("test"), "cluster name lost: {msg}");
+    h.join().unwrap();
+}
+
+#[test]
+fn connect_failure_names_endpoint_and_attempts() {
+    // port 1 is reserved: nothing will ever listen there
+    let spec = spec_for(&["127.0.0.1:1".to_string()], 120);
+    let err = match StandaloneCluster::connect(&spec) {
+        Err(e) => e,
+        Ok(_) => panic!("expected connect failure"),
+    };
+    let msg = err.to_string();
+    assert!(msg.contains("127.0.0.1:1"), "endpoint lost: {msg}");
+    assert!(msg.contains("attempt"), "attempt count lost: {msg}");
+}
+
+#[test]
+fn probe_reports_mixed_fleet_health() {
+    let (addr_up, h) = spawn_worker(5, OpRegistry::with_builtins());
+    let spec = spec_for(&[addr_up.clone(), "127.0.0.1:1".to_string()], 200);
+    let health = deploy::probe(&spec);
+    assert_eq!(health.len(), 2);
+    assert!(health[0].ok(), "{:?}", health[0]);
+    assert_eq!(health[0].worker_id, Some(5), "handshake must report the worker id");
+    assert!(!health[1].ok());
+    assert!(health[1].error.as_ref().unwrap().contains("127.0.0.1:1"));
+
+    // the probe connection must not have consumed the worker: a real
+    // cluster can still dial and use it afterwards
+    let cluster = StandaloneCluster::connect(&spec_for(&[addr_up], 5000)).unwrap();
+    let results = cluster.run_tasks(&[count_task(0, 9)]);
+    assert_eq!(*results[0].as_ref().unwrap(), TaskOutput::Count(9));
+    cluster.stop_workers();
+    drop(cluster);
+    h.join().unwrap();
+}

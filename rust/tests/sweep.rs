@@ -6,7 +6,10 @@
 //! matrix trustworthy: distribution must never change verdicts.
 
 use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
-use av_simd::sim::{run_sweep, AdaptiveSharding, ShardSizing, SweepDriver, SweepReport, SweepSpec};
+use av_simd::sim::{
+    replay_shards, run_sweep, AdaptiveSharding, ShardSizing, SweepCase, SweepDriver,
+    SweepReport, SweepSpec,
+};
 use std::time::Duration;
 
 fn local(workers: usize) -> LocalCluster {
@@ -107,38 +110,77 @@ fn full_scale_sweep_runs_thousands_of_cases() {
 }
 
 /// `small_spec` with adaptive sharding enabled: a short calibration
-/// task, then calibrated shards for the remainder.
-fn adaptive_spec() -> SweepSpec {
+/// task, then calibrated shards for the remainder. `drift` controls
+/// mid-sweep re-calibration: `f64::INFINITY` disables it, values just
+/// above 1.0 make every drift check fire.
+fn adaptive_spec_with(drift: f64, window: usize) -> SweepSpec {
     SweepSpec {
         adaptive: Some(AdaptiveSharding {
             target_task: Duration::from_millis(20),
             calibration_cases: 40,
             min_shard: 4,
             max_shard: 512,
+            drift_threshold: drift,
+            recalibration_window: window,
         }),
         ..small_spec()
+    }
+}
+
+fn adaptive_spec() -> SweepSpec {
+    adaptive_spec_with(1.5, 64)
+}
+
+/// Check an adaptive report's sharding record: calibration bounds, a
+/// non-empty log, and that replaying the log yields exactly `tasks`
+/// order-preserving dt-pure shards covering the whole case list.
+fn assert_valid_adaptive_sharding(report: &SweepReport, spec: &SweepSpec) {
+    match &report.sharding {
+        ShardSizing::Adaptive { calibration_cases, log } => {
+            assert!(*calibration_cases >= 1 && *calibration_cases <= 40);
+            assert!(!log.is_empty(), "initial calibration must be recorded");
+            assert!(log[0].measured_per_case > Duration::ZERO);
+            assert!((4..=512).contains(&log[0].shard_size));
+            let cases = spec.cases();
+            let replayed = replay_shards(&cases, *calibration_cases, log);
+            let rejoined: Vec<SweepCase> = replayed.iter().flatten().cloned().collect();
+            assert_eq!(rejoined, cases, "log replay must partition the case list in order");
+            assert_eq!(replayed.len(), report.tasks, "one replayed shard per task");
+            for shard in &replayed {
+                assert!(shard.iter().all(|c| c.dt_index == shard[0].dt_index));
+            }
+        }
+        other => panic!("adaptive run recorded {other:?}"),
     }
 }
 
 #[test]
 fn adaptive_sharding_is_byte_identical_across_worker_counts() {
     // sharding derives from *measured* wall time, so task boundaries
-    // differ run to run — the verdict payload must not
+    // differ run to run — the verdict payload must not. Covers
+    // re-calibration off (inf), default, and hair-trigger (1.0001 with a
+    // 1-case window re-checks drift after every completed shard).
     let fixed_reference = run_sweep(&local(1), &small_spec()).unwrap().encode();
     for workers in [1usize, 3, 6] {
-        let report = run_sweep(&local(workers), &adaptive_spec()).unwrap();
-        assert_eq!(
-            report.encode(),
-            fixed_reference,
-            "adaptive local[{workers}] diverged from fixed local[1]"
-        );
-        match report.sharding {
-            ShardSizing::Adaptive { calibration_cases, measured_per_case, shard_size } => {
-                assert!(calibration_cases >= 1 && calibration_cases <= 40);
-                assert!(measured_per_case > Duration::ZERO);
-                assert!((4..=512).contains(&shard_size), "shard_size {shard_size}");
+        for (drift, window) in [(f64::INFINITY, 64), (1.5, 64), (1.0001, 1)] {
+            let spec = adaptive_spec_with(drift, window);
+            let report = run_sweep(&local(workers), &spec).unwrap();
+            assert_eq!(
+                report.encode(),
+                fixed_reference,
+                "adaptive local[{workers}] drift={drift} diverged from fixed local[1]"
+            );
+            assert_valid_adaptive_sharding(&report, &spec);
+            if !drift.is_finite() {
+                match &report.sharding {
+                    ShardSizing::Adaptive { log, .. } => assert_eq!(
+                        log.len(),
+                        1,
+                        "disabled re-calibration must never extend the log"
+                    ),
+                    _ => unreachable!(),
+                }
             }
-            other => panic!("adaptive run recorded {other:?}"),
         }
     }
 }
@@ -169,6 +211,72 @@ fn adaptive_sharding_matches_across_backends() {
         run_sweep(&local(2), &small_spec()).unwrap().encode(),
         "adaptive sharding changed the verdicts"
     );
+}
+
+#[test]
+fn cluster_spec_fleet_with_late_joiner_matches_local_bytes() {
+    // The deploy-layer acceptance path: a standalone cluster dialed from
+    // a ClusterSpec manifest (multiple worker endpoints), with one more
+    // worker joining while the sweep is running — the report must be
+    // byte-identical to a local run, with re-calibration enabled. The
+    // workers are in-process `worker::serve` threads (same protocol as
+    // worker processes), so this runs without the release binary.
+    use av_simd::engine::deploy::ClusterSpec;
+    use std::net::TcpListener;
+
+    fn spawn_worker(id: usize) -> (String, std::thread::JoinHandle<()>) {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let a = addr.clone();
+        let h = std::thread::spawn(move || {
+            av_simd::engine::worker::serve(&a, id, av_simd::full_op_registry(), "artifacts")
+                .unwrap();
+        });
+        (addr, h)
+    }
+
+    let spec = adaptive_spec_with(1.0001, 1); // re-calibrate aggressively
+    let local_reference = run_sweep(&local(2), &spec).unwrap();
+
+    let (addr_a, h_a) = spawn_worker(0);
+    let (addr_b, h_b) = spawn_worker(1);
+    let manifest = format!(
+        "[cluster]\nname = \"sweep-fleet\"\nconnect_timeout_ms = 10000\n\
+         [workers]\nhosts = [\"{addr_a}\", \"{addr_b}\"]\n"
+    );
+    let cluster_spec = ClusterSpec::from_toml_text(&manifest).unwrap();
+    assert_eq!(cluster_spec.addrs(), vec![addr_a, addr_b]);
+    let cluster = std::sync::Arc::new(StandaloneCluster::connect(&cluster_spec).unwrap());
+    assert_eq!(cluster.workers(), 2);
+
+    // admit a third worker shortly after the sweep starts
+    let (addr_c, h_c) = spawn_worker(2);
+    let joiner = {
+        let cluster = cluster.clone();
+        std::thread::spawn(move || {
+            std::thread::sleep(Duration::from_millis(30));
+            cluster.add_worker(&addr_c, Duration::from_secs(10)).unwrap();
+        })
+    };
+
+    let remote_report = run_sweep(cluster.as_ref(), &spec).unwrap();
+    joiner.join().unwrap();
+    assert_eq!(cluster.workers(), 3, "late joiner must be in the fleet");
+
+    assert_eq!(
+        remote_report.encode(),
+        local_reference.encode(),
+        "ClusterSpec fleet with late joiner diverged from local"
+    );
+    assert_eq!(remote_report.total, spec.case_count());
+    assert_valid_adaptive_sharding(&remote_report, &spec);
+
+    cluster.stop_workers();
+    drop(cluster);
+    for h in [h_a, h_b, h_c] {
+        h.join().unwrap();
+    }
 }
 
 #[test]
