@@ -13,6 +13,9 @@
 //!   `lz/decompress-fast` vs `lz/decompress-ref` — the bag chunk codec
 //!   (roundtrips asserted bit-identical).
 //! * `sweep/adaptive` vs `sweep/fixed` — end-to-end driver walls.
+//! * `replay/distributed` vs `replay/reference` — a fixture drive
+//!   sharded over a 4-worker local cluster vs the single-process
+//!   reference replay (slices/sec recorded; reports byte-checked).
 //!
 //! ```sh
 //! cargo run --release --example bench_engine            # full run
@@ -256,11 +259,60 @@ fn bench_sweep(samples: usize) -> (Sample, Sample) {
     (adaptive, fixed)
 }
 
+// ---------------------------------------------------------------- replay
+
+/// Distributed bag replay vs the single-process reference, on a fixture
+/// drive. Returns (distributed, reference) samples; units are slices.
+fn bench_replay(samples: usize, frames: u32) -> (Sample, Sample) {
+    use av_simd::sim::replay::write_fixture_bag;
+    use av_simd::sim::{ReplayDriver, ReplaySpec};
+
+    let dir = std::env::temp_dir().join(format!("av_simd_bench_replay_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let bag = dir.join("drive.bag").to_str().unwrap().to_string();
+    write_fixture_bag(&bag, frames, 42).expect("fixture bag");
+
+    let spec = ReplaySpec { bag, slices: 8, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec);
+    let (index, slices) = driver.plan().expect("plan");
+    let n_slices = slices.len() as f64;
+    let cluster = LocalCluster::new(4, av_simd::full_op_registry(), "artifacts");
+
+    // byte-equality is part of the bench contract
+    let reference = driver.reference("artifacts").expect("reference replay");
+    let distributed = driver
+        .run_planned(&cluster, &index, &slices)
+        .expect("distributed replay");
+    assert_eq!(
+        distributed.encode(),
+        reference.encode(),
+        "distributed replay diverged from the reference"
+    );
+
+    let dist = Bench::new("replay/distributed local x4")
+        .warmup(1)
+        .samples(samples)
+        .units(n_slices, "slice")
+        .run(|| {
+            driver.run_planned(&cluster, &index, &slices).unwrap();
+        });
+    let reference = Bench::new("replay/reference (single process)")
+        .warmup(1)
+        .samples(samples)
+        .units(n_slices, "slice")
+        .run(|| {
+            driver.reference("artifacts").unwrap();
+        });
+    std::fs::remove_dir_all(&dir).ok();
+    (dist, reference)
+}
+
 fn main() -> av_simd::Result<()> {
     let smoke = smoke();
     let (sched_samples, stall_ms) = if smoke { (3, 30) } else { (7, 120) };
     let (codec_samples, codec_size) = if smoke { (5, 1 << 20) } else { (9, 8 << 20) };
     let sweep_samples = if smoke { 2 } else { 5 };
+    let (replay_samples, replay_frames) = if smoke { (2, 24) } else { (4, 80) };
     println!(
         "bench_engine: smoke={smoke} (sched {sched_samples}x{stall_ms}ms, codecs \
          {codec_samples}x{} MiB)",
@@ -272,6 +324,7 @@ fn main() -> av_simd::Result<()> {
     let (lz_cc, lz_cg, lz_df, lz_dr, ratio_chain, ratio_greedy) =
         bench_lz(codec_samples, codec_size);
     let (sweep_adaptive, sweep_fixed) = bench_sweep(sweep_samples);
+    let (replay_dist, replay_ref) = bench_replay(replay_samples, replay_frames);
 
     let samples = vec![
         sched_stream,
@@ -284,6 +337,8 @@ fn main() -> av_simd::Result<()> {
         lz_dr,
         sweep_adaptive,
         sweep_fixed,
+        replay_dist,
+        replay_ref,
     ];
     print_table("engine microbenches", &samples);
 
@@ -293,12 +348,17 @@ fn main() -> av_simd::Result<()> {
     let lz_compress_speedup = speedup(&samples[5], &samples[4]);
     let lz_decompress_speedup = speedup(&samples[7], &samples[6]);
     let sweep_speedup = speedup(&samples[9], &samples[8]);
+    let replay_speedup = speedup(&samples[11], &samples[10]);
+    // slices/sec of the distributed path (median wall over slice count)
+    let replay_slices_per_sec = samples[10].throughput().unwrap_or(0.0);
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
         ("speedup_lz_compress_chain_vs_greedy", lz_compress_speedup),
         ("speedup_lz_decompress_fast_vs_ref", lz_decompress_speedup),
         ("speedup_sweep_adaptive_vs_fixed", sweep_speedup),
+        ("speedup_replay_distributed_vs_reference", replay_speedup),
+        ("replay_slices_per_sec", replay_slices_per_sec),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),

@@ -1,0 +1,417 @@
+//! `BagIndex` — a footer-independent scan of an AVBAG into a time/topic
+//! index with replay cut points.
+//!
+//! The distributed bag-replay subsystem (`sim::replay`) partitions a
+//! recorded drive by time slice, exactly the paper's data-playback
+//! model. Planning those slices needs facts the reader's footer index
+//! does not carry: per-topic message counts, per-topic time spans, the
+//! largest inter-message gap per topic (which bounds the warm-up prefix
+//! a slice needs before its perception state has converged), and
+//! balanced cut points over the global timeline.
+//!
+//! `BagIndex::scan` walks the record stream from the top of the file —
+//! it never trusts the footer — so it doubles as the bag *validator*:
+//! a chunk with zero messages, a record that extends past the end of
+//! the file (the classic truncated-trailing-chunk corruption), CRC
+//! damage, or an unknown record type all surface as typed
+//! [`Error::BagFormat`] errors naming the byte offset.
+
+use super::chunked_file::ChunkStore;
+use super::format::{self, ChunkInfo};
+use crate::error::{Error, Result};
+use crate::msg::Time;
+use std::collections::BTreeMap;
+use std::path::Path;
+use std::time::Duration;
+
+/// Per-topic facts gathered by a [`BagIndex::scan`].
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TopicIndex {
+    /// Messages recorded on the topic.
+    pub messages: u64,
+    /// Message type on the topic (from its connection record).
+    pub type_name: String,
+    /// Earliest message timestamp.
+    pub first: Time,
+    /// Latest message timestamp.
+    pub last: Time,
+    /// Largest gap between consecutive messages (time order), in nanos.
+    /// Zero for topics with fewer than two messages. An overlapping
+    /// replay slice whose warm-up prefix is at least this long is
+    /// guaranteed to see the predecessor of its first in-window message.
+    pub max_gap: u64,
+}
+
+/// Time/topic index of one bag, built by scanning every chunk.
+///
+/// Unlike [`super::BagReader`] (which reads the footer index), a
+/// `BagIndex` re-derives everything from the record stream, holding all
+/// message timestamps (8 bytes per message) — the price of exact,
+/// chunk-layout-independent cut points.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BagIndex {
+    /// Chunk records in file order, re-derived from the scan (offsets
+    /// and stored lengths verified against the actual bytes).
+    pub chunks: Vec<ChunkInfo>,
+    /// Per-topic index, keyed by topic name.
+    pub topics: BTreeMap<String, TopicIndex>,
+    /// Total messages in the bag.
+    pub messages: u64,
+    /// Every message timestamp in the bag, sorted ascending (nanos).
+    pub times: Vec<u64>,
+    /// Bytes scanned (the bag's total size).
+    pub bytes: u64,
+}
+
+impl BagIndex {
+    /// Scan a bag from any [`ChunkStore`]. Walks the record stream from
+    /// the top (footer-independent), CRC-checking every record; returns
+    /// a typed error naming the byte offset on any corruption.
+    pub fn scan(store: &mut impl ChunkStore) -> Result<Self> {
+        let total = store.len();
+        if total < 8 {
+            return Err(Error::BagFormat(format!(
+                "bag too short to scan ({total} bytes)"
+            )));
+        }
+        let head = store.read_at(0, 8)?;
+        if &head[..7] != format::MAGIC {
+            return Err(Error::BagFormat("bad magic: not an AVBAG file".into()));
+        }
+        if head[7] != format::FORMAT_VERSION {
+            return Err(Error::BagFormat(format!(
+                "unsupported bag version {}",
+                head[7]
+            )));
+        }
+
+        let mut chunks = Vec::new();
+        // conn_id → message timestamps, filled chunk by chunk; resolved
+        // to topics once the trailing connection records arrive.
+        let mut conn_times: BTreeMap<u32, Vec<u64>> = BTreeMap::new();
+        let mut connections: Vec<format::Connection> = Vec::new();
+        let mut saw_footer = false;
+
+        let mut off = 8u64;
+        while off < total {
+            let remaining = total - off;
+            if remaining == format::FOOTER_LEN {
+                let buf = store.read_at(off, format::FOOTER_LEN as usize)?;
+                format::decode_footer(&buf).map_err(|_| {
+                    Error::BagFormat(format!(
+                        "trailing {} bytes at byte offset {off} are not a valid \
+                         footer — truncated bag?",
+                        format::FOOTER_LEN
+                    ))
+                })?;
+                saw_footer = true;
+                break;
+            }
+            // minimum stored record: type(1) + len(4) + crc(4)
+            if remaining < 9 {
+                return Err(Error::BagFormat(format!(
+                    "bag truncated mid-record at byte offset {off}: only \
+                     {remaining} byte(s) remain"
+                )));
+            }
+            let head = store.read_at(off, 5)?;
+            let rec_type = head[0];
+            let len = u32::from_le_bytes([head[1], head[2], head[3], head[4]]) as u64;
+            let stored = 9 + len;
+            if off + stored > total {
+                return Err(Error::BagFormat(format!(
+                    "record type {rec_type} at byte offset {off} claims {stored} \
+                     bytes but only {remaining} remain — truncated trailing chunk?"
+                )));
+            }
+            let buf = store.read_at(off, stored as usize)?;
+            let (t, payload, consumed) = format::decode_record(&buf).map_err(|e| {
+                Error::BagFormat(format!("record at byte offset {off}: {e}"))
+            })?;
+            debug_assert_eq!(consumed as u64, stored);
+            match t {
+                format::REC_CHUNK => {
+                    let msgs = format::decode_chunk(payload).map_err(|e| {
+                        Error::BagFormat(format!("chunk at byte offset {off}: {e}"))
+                    })?;
+                    if msgs.is_empty() {
+                        return Err(Error::BagFormat(format!(
+                            "empty chunk (zero messages) at byte offset {off}"
+                        )));
+                    }
+                    let start_time = msgs.iter().map(|m| m.time).min().unwrap();
+                    let end_time = msgs.iter().map(|m| m.time).max().unwrap();
+                    chunks.push(ChunkInfo {
+                        offset: off,
+                        stored_len: stored as u32,
+                        start_time,
+                        end_time,
+                        message_count: msgs.len() as u32,
+                    });
+                    for m in &msgs {
+                        conn_times.entry(m.conn_id).or_default().push(m.time.nanos);
+                    }
+                }
+                format::REC_CONNECTION => {
+                    let mut r = crate::util::bytes::ByteReader::new(payload);
+                    connections.push(format::Connection::decode(&mut r).map_err(|e| {
+                        Error::BagFormat(format!(
+                            "connection record at byte offset {off}: {e}"
+                        ))
+                    })?);
+                }
+                // the footer index is redundant with this scan; skip it
+                format::REC_INDEX => {}
+                other => {
+                    return Err(Error::BagFormat(format!(
+                        "unknown record type {other} at byte offset {off}"
+                    )))
+                }
+            }
+            off += stored;
+        }
+        if !saw_footer {
+            return Err(Error::BagFormat(format!(
+                "bag ends at byte offset {off} without a footer — truncated bag?"
+            )));
+        }
+
+        // resolve conn ids → topics and fold per-topic stats
+        let mut topics: BTreeMap<String, TopicIndex> = BTreeMap::new();
+        let mut times: Vec<u64> = Vec::new();
+        for (conn_id, mut ts) in conn_times {
+            let conn = connections
+                .iter()
+                .find(|c| c.conn_id == conn_id)
+                .ok_or_else(|| {
+                    Error::BagFormat(format!(
+                        "chunk messages reference connection {conn_id} but the bag \
+                         has no such connection record"
+                    ))
+                })?;
+            ts.sort_unstable();
+            let max_gap = ts.windows(2).map(|w| w[1] - w[0]).max().unwrap_or(0);
+            times.extend_from_slice(&ts);
+            let entry = topics.entry(conn.topic.clone()).or_insert_with(|| TopicIndex {
+                messages: 0,
+                type_name: conn.type_name.clone(),
+                first: Time::from_nanos(*ts.first().unwrap()),
+                last: Time::from_nanos(*ts.last().unwrap()),
+                max_gap: 0,
+            });
+            entry.messages += ts.len() as u64;
+            entry.first = entry.first.min(Time::from_nanos(*ts.first().unwrap()));
+            entry.last = entry.last.max(Time::from_nanos(*ts.last().unwrap()));
+            entry.max_gap = entry.max_gap.max(max_gap);
+        }
+        times.sort_unstable();
+        Ok(Self {
+            chunks,
+            topics,
+            messages: times.len() as u64,
+            times,
+            bytes: total,
+        })
+    }
+
+    /// [`BagIndex::scan`] over a disk bag.
+    pub fn scan_path(path: impl AsRef<Path>) -> Result<Self> {
+        let mut store = super::chunked_file::DiskChunkedFile::open(path)?;
+        Self::scan(&mut store)
+    }
+
+    /// Bag time span (first, last message timestamp), `None` when empty.
+    pub fn time_range(&self) -> Option<(Time, Time)> {
+        Some((
+            Time::from_nanos(*self.times.first()?),
+            Time::from_nanos(*self.times.last()?),
+        ))
+    }
+
+    /// Timeline cut points for `slices` message-balanced slices:
+    /// `k+1` ascending nanosecond boundaries (first = first message
+    /// time, last = last message time + 1, i.e. exclusive), where
+    /// `k ≤ slices` (equal timestamps can merge adjacent cuts). A pure
+    /// function of the bag's message timestamps — independent of chunk
+    /// layout, worker count, and backend. Empty bag ⇒ empty vec.
+    pub fn cut_points(&self, slices: usize) -> Vec<u64> {
+        let Some((first, last)) = self.time_range() else {
+            return Vec::new();
+        };
+        let n = slices.max(1).min(self.times.len());
+        let mut cuts = Vec::with_capacity(n + 1);
+        cuts.push(first.nanos);
+        for k in 1..n {
+            let t = self.times[self.times.len() * k / n];
+            if t > *cuts.last().unwrap() && t <= last.nanos {
+                cuts.push(t);
+            }
+        }
+        cuts.push(last.nanos + 1);
+        cuts
+    }
+
+    /// The warm-up prefix an overlapping slice needs so that, for every
+    /// selected topic (empty = all), the predecessor of the slice's
+    /// first in-window message falls inside the warm-up window: the max
+    /// per-topic inter-message gap. Replay state that depends on one
+    /// previous message (odometry scan pairs, latency gaps) is then
+    /// guaranteed to converge before the slice's own window starts.
+    pub fn min_warmup(&self, topics: &[String]) -> Duration {
+        let gap = self
+            .topics
+            .iter()
+            .filter(|(name, _)| topics.is_empty() || topics.contains(*name))
+            .map(|(_, t)| t.max_gap)
+            .max()
+            .unwrap_or(0);
+        Duration::from_nanos(gap)
+    }
+
+    /// Messages recorded on `topic` (0 when absent).
+    pub fn topic_messages(&self, topic: &str) -> u64 {
+        self.topics.get(topic).map(|t| t.messages).unwrap_or(0)
+    }
+
+    /// Total messages on the selected topics (empty = all).
+    pub fn selected_messages(&self, topics: &[String]) -> u64 {
+        if topics.is_empty() {
+            self.messages
+        } else {
+            topics.iter().map(|t| self.topic_messages(t)).sum()
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bag::format::Compression;
+    use crate::bag::memory::MemoryChunkedFile;
+    use crate::bag::writer::BagWriter;
+    use crate::msg::{Image, Message, PointCloud};
+
+    /// 2 topics, small chunks so the bag has several chunk records.
+    fn build_bag() -> MemoryChunkedFile {
+        let mut w = BagWriter::new(MemoryChunkedFile::new(), Compression::None, 2048).unwrap();
+        for i in 0..20u64 {
+            if i % 2 == 0 {
+                w.write("/camera", Time::from_nanos(i * 100), &Image::synthetic(8, 8, i))
+                    .unwrap();
+            } else {
+                w.write("/lidar", Time::from_nanos(i * 100), &PointCloud::synthetic(16, i))
+                    .unwrap();
+            }
+        }
+        w.finish().unwrap()
+    }
+
+    #[test]
+    fn scan_matches_bag_contents() {
+        let mut store = build_bag();
+        let idx = BagIndex::scan(&mut store).unwrap();
+        assert_eq!(idx.messages, 20);
+        assert!(idx.chunks.len() >= 2, "expected several chunks");
+        assert_eq!(idx.topics.len(), 2);
+        let cam = &idx.topics["/camera"];
+        assert_eq!(cam.messages, 10);
+        assert_eq!(cam.type_name, Image::TYPE_NAME);
+        assert_eq!(cam.first, Time::from_nanos(0));
+        assert_eq!(cam.last, Time::from_nanos(1800));
+        assert_eq!(cam.max_gap, 200, "camera messages every 200 ns");
+        assert_eq!(idx.time_range().unwrap(), (Time::from_nanos(0), Time::from_nanos(1900)));
+        assert_eq!(idx.min_warmup(&[]).as_nanos(), 200);
+        assert_eq!(idx.selected_messages(&["/camera".into()]), 10);
+        // chunk info must agree with the reader's footer index
+        let r = crate::bag::BagReader::open(store).unwrap();
+        assert_eq!(idx.messages, r.message_count());
+    }
+
+    #[test]
+    fn cut_points_are_balanced_and_cover_the_timeline() {
+        let mut store = build_bag();
+        let idx = BagIndex::scan(&mut store).unwrap();
+        for n in [1usize, 2, 4, 7] {
+            let cuts = idx.cut_points(n);
+            assert!(cuts.len() >= 2 && cuts.len() <= n + 1, "{n}: {cuts:?}");
+            assert!(cuts.windows(2).all(|w| w[0] < w[1]), "{cuts:?} not ascending");
+            assert_eq!(cuts[0], 0);
+            assert_eq!(*cuts.last().unwrap(), 1901, "exclusive end");
+            // every message falls in exactly one [cuts[i], cuts[i+1])
+            let covered: u64 = cuts
+                .windows(2)
+                .map(|w| {
+                    idx.times.iter().filter(|&&t| t >= w[0] && t < w[1]).count() as u64
+                })
+                .sum();
+            assert_eq!(covered, idx.messages);
+        }
+    }
+
+    #[test]
+    fn empty_chunk_is_a_typed_error_with_offset() {
+        // handcraft: magic + a chunk record with zero messages + footer
+        let mut bytes = Vec::new();
+        bytes.extend_from_slice(format::MAGIC);
+        bytes.push(format::FORMAT_VERSION);
+        let chunk = format::encode_chunk(&[], Compression::None).unwrap();
+        let chunk_off = bytes.len();
+        bytes.extend_from_slice(&chunk);
+        bytes.extend_from_slice(&format::encode_footer(8, 0));
+        let mut store = MemoryChunkedFile::from_bytes(&bytes);
+        let err = BagIndex::scan(&mut store).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::BagFormat(_)), "{msg}");
+        assert!(msg.contains("empty chunk"), "{msg}");
+        assert!(msg.contains(&format!("byte offset {chunk_off}")), "{msg}");
+    }
+
+    #[test]
+    fn truncated_trailing_chunk_is_a_typed_error_with_offset() {
+        let full = build_bag().to_vec();
+        let idx = {
+            let mut store = MemoryChunkedFile::from_bytes(&full);
+            BagIndex::scan(&mut store).unwrap()
+        };
+        // cut the file in the middle of the last chunk record
+        let last = idx.chunks.last().unwrap();
+        let cut = (last.offset + last.stored_len as u64 / 2) as usize;
+        let mut store = MemoryChunkedFile::from_bytes(&full[..cut]);
+        let err = BagIndex::scan(&mut store).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::BagFormat(_)), "{msg}");
+        assert!(msg.contains("truncated"), "{msg}");
+        assert!(msg.contains("byte offset"), "{msg}");
+    }
+
+    #[test]
+    fn bag_without_footer_is_rejected() {
+        // records intact but footer missing entirely
+        let full = build_bag().to_vec();
+        let cut = full.len() - format::FOOTER_LEN as usize;
+        let mut store = MemoryChunkedFile::from_bytes(&full[..cut]);
+        let err = BagIndex::scan(&mut store).unwrap_err();
+        assert!(err.to_string().contains("footer"), "{err}");
+    }
+
+    #[test]
+    fn corrupt_chunk_crc_is_rejected_with_offset() {
+        let mut full = build_bag().to_vec();
+        let idx_of_payload = {
+            let mut store = MemoryChunkedFile::from_bytes(&full);
+            BagIndex::scan(&mut store).unwrap().chunks[0].offset as usize + 6
+        };
+        full[idx_of_payload] ^= 0xff;
+        let mut store = MemoryChunkedFile::from_bytes(&full);
+        let err = BagIndex::scan(&mut store).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("CRC"), "{msg}");
+        assert!(msg.contains("byte offset"), "{msg}");
+    }
+
+    #[test]
+    fn garbage_is_rejected() {
+        let mut store = MemoryChunkedFile::from_bytes(&[7u8; 64]);
+        assert!(BagIndex::scan(&mut store).is_err());
+    }
+}

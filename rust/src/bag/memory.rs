@@ -107,7 +107,9 @@ impl ChunkStore for MemoryChunkedFile {
     }
 
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
-        if offset + len as u64 > self.len {
+        // checked: a corrupt index can carry offsets near u64::MAX, and a
+        // wrapped sum here would pass the bound and panic on page lookup
+        if offset.checked_add(len as u64).is_none_or(|end| end > self.len) {
             return Err(Error::Corrupt(format!(
                 "memory bag read past end: offset {offset} + {len} > {}",
                 self.len

@@ -10,6 +10,7 @@
 pub mod cache;
 pub mod chunked_file;
 pub mod format;
+pub mod index;
 pub mod memory;
 pub mod reader;
 pub mod writer;
@@ -17,6 +18,7 @@ pub mod writer;
 pub use cache::BagCache;
 pub use chunked_file::{ChunkStore, DiskChunkedFile};
 pub use format::{Compression, Connection};
+pub use index::{BagIndex, TopicIndex};
 pub use memory::MemoryChunkedFile;
 pub use reader::{BagReader, PlayedMessage};
 pub use writer::BagWriter;

@@ -74,6 +74,30 @@ impl<S: ChunkStore> BagReader<S> {
             )));
         }
         let (chunks, connections) = format::decode_index(payload)?;
+        // Index sanity up front, so corruption fails at open with the
+        // chunk's byte offset instead of deep inside a replay: a chunk
+        // claiming zero messages was never written by any writer, and a
+        // chunk extending past EOF is the truncated-trailing-chunk case.
+        for (i, c) in chunks.iter().enumerate() {
+            if c.message_count == 0 {
+                return Err(Error::BagFormat(format!(
+                    "chunk {i} at byte offset {} is empty (zero messages)",
+                    c.offset
+                )));
+            }
+            // checked: a forged offset near u64::MAX must not wrap past
+            // the bound and reach the store's panic path
+            if c.offset
+                .checked_add(c.stored_len as u64)
+                .is_none_or(|end| end > total)
+            {
+                return Err(Error::BagFormat(format!(
+                    "chunk {i} at byte offset {} extends past end of bag \
+                     ({} + {} > {total}) — truncated trailing chunk?",
+                    c.offset, c.offset, c.stored_len
+                )));
+            }
+        }
         let conn_by_id = connections
             .iter()
             .enumerate()
@@ -126,8 +150,29 @@ impl<S: ChunkStore> BagReader<S> {
     }
 
     /// Play back all messages in time order. `topics` = None plays
-    /// everything; otherwise only the named topics.
+    /// everything; otherwise only the named topics. Delegates to
+    /// [`BagReader::play_range`] over the maximal window, so whole-bag
+    /// and windowed playback can never diverge in filter or ordering
+    /// semantics. (A timestamp of exactly `u64::MAX` nanos is outside
+    /// the exclusive window bound; no writer produces one.)
     pub fn play(&mut self, topics: Option<&[&str]>) -> Result<Vec<PlayedMessage>> {
+        self.play_range(topics, Time::ZERO, Time::from_nanos(u64::MAX))
+    }
+
+    /// Play back only messages with `start ≤ time < end` (plus the
+    /// usual topic filter), skipping chunks whose index span falls
+    /// entirely outside the window — the slice-replay hot path: a
+    /// worker replaying one time slice of a long drive reads only the
+    /// chunks that overlap it. Equal-timestamp messages keep a
+    /// consistent order (chunk order, then stable time sort) no matter
+    /// which window is requested, so slice replays and whole-bag
+    /// replays see identical subsequences.
+    pub fn play_range(
+        &mut self,
+        topics: Option<&[&str]>,
+        start: Time,
+        end: Time,
+    ) -> Result<Vec<PlayedMessage>> {
         let keep: Option<Vec<u32>> = topics.map(|ts| {
             self.connections
                 .iter()
@@ -136,11 +181,16 @@ impl<S: ChunkStore> BagReader<S> {
                 .collect()
         });
         let mut out = Vec::new();
-        // Chunks are time-ordered by construction; iterate in index order
-        // and stable-sort at the end to merge overlapping chunk spans.
         for i in 0..self.chunks.len() {
+            let info = &self.chunks[i];
+            if info.end_time < start || info.start_time >= end {
+                continue; // chunk entirely outside the window
+            }
             let msgs = self.read_chunk(i)?;
             for m in msgs {
+                if m.time < start || m.time >= end {
+                    continue;
+                }
                 if let Some(keep) = &keep {
                     if !keep.contains(&m.conn_id) {
                         continue;
@@ -299,6 +349,84 @@ mod tests {
         let full = build_bag(Compression::None).to_vec();
         let store = MemoryChunkedFile::from_bytes(&full[..full.len() - 10]);
         assert!(BagReader::open(store).is_err());
+    }
+
+    #[test]
+    fn play_range_matches_filtered_full_play() {
+        let store = build_bag(Compression::None);
+        let mut r = BagReader::open(store).unwrap();
+        let all = r.play(None).unwrap();
+        let (start, end) = (Time::from_nanos(40), Time::from_nanos(130));
+        let want: Vec<_> = all
+            .iter()
+            .filter(|m| m.time >= start && m.time < end)
+            .cloned()
+            .collect();
+        let got = r.play_range(None, start, end).unwrap();
+        assert_eq!(got, want);
+        assert!(!got.is_empty());
+        // empty window
+        assert!(r
+            .play_range(None, Time::from_nanos(500), Time::from_nanos(600))
+            .unwrap()
+            .is_empty());
+        // topic filter composes with the window
+        let cams = r.play_range(Some(&["/camera"]), start, end).unwrap();
+        assert!(cams.iter().all(|m| m.topic == "/camera"));
+        assert_eq!(
+            cams.len(),
+            want.iter().filter(|m| m.topic == "/camera").count()
+        );
+    }
+
+    #[test]
+    fn empty_chunk_in_index_rejected_at_open() {
+        // rebuild the bag's index to claim an empty chunk
+        let store = build_bag(Compression::None);
+        let bytes = store.to_vec();
+        let r = BagReader::open(MemoryChunkedFile::from_bytes(&bytes)).unwrap();
+        let mut chunks = r.chunks.clone();
+        let conns = r.connections().to_vec();
+        chunks[0].message_count = 0;
+        let footer_at = bytes.len() - format::FOOTER_LEN as usize;
+        let (index_offset, _) = format::decode_footer(&bytes[footer_at..]).unwrap();
+        let mut forged = bytes[..index_offset as usize].to_vec();
+        let index = format::encode_index(&chunks, &conns);
+        forged.extend_from_slice(&index);
+        forged.extend_from_slice(&format::encode_footer(index_offset, index.len() as u64));
+        let err = BagReader::open(MemoryChunkedFile::from_bytes(&forged)).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("empty"), "{msg}");
+        assert!(msg.contains("byte offset"), "{msg}");
+    }
+
+    #[test]
+    fn chunk_past_eof_rejected_at_open() {
+        let store = build_bag(Compression::None);
+        let bytes = store.to_vec();
+        let r = BagReader::open(MemoryChunkedFile::from_bytes(&bytes)).unwrap();
+        let mut chunks = r.chunks.clone();
+        let conns = r.connections().to_vec();
+        let footer_at = bytes.len() - format::FOOTER_LEN as usize;
+        let (index_offset, _) = format::decode_footer(&bytes[footer_at..]).unwrap();
+        let forge = |chunks: &[ChunkInfo]| {
+            let mut forged = bytes[..index_offset as usize].to_vec();
+            let index = format::encode_index(chunks, &conns);
+            forged.extend_from_slice(&index);
+            forged
+                .extend_from_slice(&format::encode_footer(index_offset, index.len() as u64));
+            forged
+        };
+        chunks[0].stored_len = bytes.len() as u32 * 2; // claims past EOF
+        let err = BagReader::open(MemoryChunkedFile::from_bytes(&forge(&chunks))).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("truncated trailing chunk"), "{msg}");
+        assert!(msg.contains("byte offset"), "{msg}");
+        // offset near u64::MAX: the bounds check must not wrap and pass
+        chunks[0].stored_len = 100;
+        chunks[0].offset = u64::MAX - 8;
+        let err = BagReader::open(MemoryChunkedFile::from_bytes(&forge(&chunks))).unwrap_err();
+        assert!(err.to_string().contains("truncated trailing chunk"), "{err}");
     }
 
     #[test]

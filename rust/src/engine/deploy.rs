@@ -65,10 +65,35 @@ impl WorkerEndpoint {
     }
 
     /// Parse one manifest entry into endpoints. Entries are
-    /// `host:port` (one worker) or `host:port*N` (N workers on
-    /// sequential ports starting at `port`); with no `*N` suffix the
-    /// spec-wide `capacity` applies.
+    /// `host:port` (one worker), `host:port*N` (N worker *processes* on
+    /// sequential ports starting at `port`), or `host:port+N` (N
+    /// connections — task slots — to one multi-slot worker process on
+    /// that single port, see `worker --slots`); with no suffix the
+    /// spec-wide `capacity` applies as `*capacity`. The two suffixes
+    /// cannot be combined.
     pub fn parse(entry: &str, default_capacity: usize) -> Result<Vec<WorkerEndpoint>> {
+        if entry.contains('*') && entry.contains('+') {
+            return Err(Error::Config(format!(
+                "cluster spec: '{entry}' mixes '*N' (processes on sequential \
+                 ports) with '+N' (slots on one port) — use one or the other"
+            )));
+        }
+        // `+N`: N duplicate endpoints — the driver dials the same
+        // host:port once per slot
+        if let Some((addr, n)) = entry.rsplit_once('+') {
+            let slots: usize = n.trim().parse().map_err(|_| {
+                Error::Config(format!("cluster spec: bad slot count in '{entry}'"))
+            })?;
+            if slots == 0 {
+                return Err(Error::Config(format!(
+                    "cluster spec: zero slots in '{entry}'"
+                )));
+            }
+            let (host, port) = Self::split_host_port(addr.trim(), entry)?;
+            return Ok((0..slots)
+                .map(|_| WorkerEndpoint { host: host.to_string(), port })
+                .collect());
+        }
         let (addr, count) = match entry.rsplit_once('*') {
             Some((addr, n)) => {
                 let n: usize = n.trim().parse().map_err(|_| {
@@ -83,6 +108,18 @@ impl WorkerEndpoint {
                 "cluster spec: zero capacity in '{entry}'"
             )));
         }
+        let (host, port) = Self::split_host_port(addr, entry)?;
+        if (port as usize) + count - 1 > u16::MAX as usize {
+            return Err(Error::Config(format!(
+                "cluster spec: '{entry}' expands past port 65535"
+            )));
+        }
+        Ok((0..count)
+            .map(|j| WorkerEndpoint { host: host.to_string(), port: port + j as u16 })
+            .collect())
+    }
+
+    fn split_host_port<'a>(addr: &'a str, entry: &str) -> Result<(&'a str, u16)> {
         let (host, port) = addr.rsplit_once(':').ok_or_else(|| {
             Error::Config(format!("cluster spec: '{entry}' is not host:port"))
         })?;
@@ -92,14 +129,7 @@ impl WorkerEndpoint {
         let port: u16 = port.parse().map_err(|_| {
             Error::Config(format!("cluster spec: bad port in '{entry}'"))
         })?;
-        if (port as usize) + count - 1 > u16::MAX as usize {
-            return Err(Error::Config(format!(
-                "cluster spec: '{entry}' expands past port 65535"
-            )));
-        }
-        Ok((0..count)
-            .map(|j| WorkerEndpoint { host: host.to_string(), port: port + j as u16 })
-            .collect())
+        Ok((host, port))
     }
 }
 
@@ -183,23 +213,31 @@ impl ClusterSpec {
             return Err(Error::Config("cluster spec: workers.capacity must be >= 1".into()));
         }
         let mut workers = Vec::new();
+        // An addr may repeat *within* one entry (`host:port+N` opens N
+        // slot connections to one worker on purpose), but the same addr
+        // appearing in two different entries is a manifest mistake that
+        // would double-dial one worker.
+        let mut seen = std::collections::BTreeSet::new();
         for entry in &hosts {
-            workers.extend(WorkerEndpoint::parse(entry, capacity)?);
+            let expanded = WorkerEndpoint::parse(entry, capacity)?;
+            let mut entry_addrs = std::collections::BTreeSet::new();
+            for w in &expanded {
+                if !entry_addrs.insert(w.addr()) {
+                    continue; // intra-entry duplicate: intended slots
+                }
+                if !seen.insert(w.addr()) {
+                    return Err(Error::Config(format!(
+                        "cluster spec: duplicate endpoint {}",
+                        w.addr()
+                    )));
+                }
+            }
+            workers.extend(expanded);
         }
         if workers.is_empty() {
             return Err(Error::Config(
                 "cluster spec: workers.hosts must name at least one endpoint".into(),
             ));
-        }
-        // duplicate endpoints would double-dial one worker
-        let mut seen = std::collections::BTreeSet::new();
-        for w in &workers {
-            if !seen.insert(w.addr()) {
-                return Err(Error::Config(format!(
-                    "cluster spec: duplicate endpoint {}",
-                    w.addr()
-                )));
-            }
         }
         Ok(Self { name, workers, connect_timeout, artifact_dir, launch_program })
     }
@@ -266,33 +304,51 @@ pub fn probe(spec: &ClusterSpec) -> Vec<WorkerHealth> {
 }
 
 /// Spawn a worker process (via the spec's `launch.program`) for every
-/// *loopback* endpoint in the spec, detached — the children outlive the
-/// calling process, so `av-simd deploy --launch` then exit leaves a
-/// serving fleet behind. Remote endpoints are skipped (launching over
-/// SSH/orchestrators is the operator's side of the contract — see
-/// `docs/OPERATIONS.md`); returns the spawned children in endpoint
-/// order alongside how many endpoints were skipped.
+/// *unique loopback* endpoint in the spec, detached — the children
+/// outlive the calling process, so `av-simd deploy --launch` then exit
+/// leaves a serving fleet behind. An endpoint that appears `N` times
+/// (the `host:port+N` slot syntax) gets **one** process launched with
+/// `--slots N`, matching the `N` connections drivers will open to it.
+/// Remote endpoints are skipped (launching over SSH/orchestrators is
+/// the operator's side of the contract — see `docs/OPERATIONS.md`);
+/// returns the spawned children in first-appearance order alongside how
+/// many endpoints were skipped.
 pub fn launch_local_workers(
     spec: &ClusterSpec,
 ) -> Result<(Vec<std::process::Child>, usize)> {
     let program = spec.launch_program.as_deref().ok_or_else(|| {
         Error::Config("cluster spec has no [launch] program to spawn workers with".into())
     })?;
-    let mut children = Vec::new();
+    // group endpoints: (addr, slot count), first-appearance order
+    let mut order: Vec<String> = Vec::new();
+    let mut slots: BTreeMap<String, usize> = BTreeMap::new();
     let mut skipped = 0usize;
-    for (i, w) in spec.workers.iter().enumerate() {
+    for w in &spec.workers {
         if !w.is_local() {
             skipped += 1;
             continue;
         }
         let addr = w.addr();
+        match slots.get_mut(&addr) {
+            Some(n) => *n += 1,
+            None => {
+                order.push(addr.clone());
+                slots.insert(addr, 1);
+            }
+        }
+    }
+    let mut children = Vec::new();
+    for (i, addr) in order.iter().enumerate() {
+        let n_slots = slots[addr];
         let child = std::process::Command::new(program)
             .args([
                 "worker",
                 "--listen",
-                &addr,
+                addr,
                 "--id",
                 &i.to_string(),
+                "--slots",
+                &n_slots.to_string(),
                 "--artifacts",
                 &spec.artifact_dir,
             ])
@@ -389,6 +445,32 @@ mod tests {
             "[workers]\nhosts = [\"h:7077\"]\ncapacity = 0\n"
         )
         .is_err());
+    }
+
+    #[test]
+    fn slot_syntax_expands_to_duplicate_endpoints() {
+        let spec = ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"10.0.0.1:7077+3\", \"10.0.0.2:7077\"]\n",
+        )
+        .unwrap();
+        assert_eq!(
+            spec.addrs(),
+            vec![
+                "10.0.0.1:7077".to_string(),
+                "10.0.0.1:7077".to_string(),
+                "10.0.0.1:7077".to_string(),
+                "10.0.0.2:7077".to_string(),
+            ]
+        );
+        // zero slots, mixed suffixes, cross-entry duplicates all fail
+        for bad in [
+            "[workers]\nhosts = [\"h:7077+0\"]\n",
+            "[workers]\nhosts = [\"h:7077+2*2\"]\n",
+            "[workers]\nhosts = [\"h:7077+nope\"]\n",
+            "[workers]\nhosts = [\"h:7077+2\", \"h:7077\"]\n",
+        ] {
+            assert!(ClusterSpec::from_toml_text(bad).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]

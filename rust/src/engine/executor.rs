@@ -60,6 +60,27 @@ pub fn load_source(ctx: &TaskCtx, source: &Source) -> Result<Vec<Record>> {
             }
             Ok(scenarios.clone())
         }
+        Source::BagSlices { path, topics, slices } => {
+            // Same fail-fast contract as Scenarios: a poisoned slice
+            // record is data corruption, not a transient fault. Each
+            // output record is a self-contained slice job (path + topics
+            // + slice) so the `run_replay` op needs no side channel.
+            let mut records = Vec::with_capacity(slices.len());
+            for (i, s) in slices.iter().enumerate() {
+                let slice = crate::sim::replay::ReplaySlice::decode(s).map_err(|e| {
+                    Error::Sim(format!("bag slice record {i} is poisoned: {e}"))
+                })?;
+                records.push(
+                    crate::sim::replay::SliceJob {
+                        path: path.clone(),
+                        topics: topics.clone(),
+                        slice,
+                    }
+                    .encode(),
+                );
+            }
+            Ok(records)
+        }
     }
 }
 
@@ -94,6 +115,17 @@ pub fn run_task(ctx: &TaskCtx, registry: &OpRegistry, spec: &TaskSpec) -> Result
                 })?;
             }
             Ok(TaskOutput::Episodes(records))
+        }
+        Action::Replays => {
+            for (i, rec) in records.iter().enumerate() {
+                crate::sim::replay::ReplayVerdict::decode(rec).map_err(|e| {
+                    Error::Sim(format!(
+                        "replays action: record {i} is not a ReplayVerdict \
+                         (is `run_replay` missing from the op chain?): {e}"
+                    ))
+                })?;
+            }
+            Ok(TaskOutput::Replays(records))
         }
     }
 }

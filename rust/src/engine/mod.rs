@@ -9,8 +9,9 @@
 //!   fleets: parse (TOML/JSON), health-probe, launch local workers.
 //! * [`stream`] — the streaming work-stealing pipeline between the
 //!   scheduler and a cluster's workers.
-//! * [`scheduler`] — streaming dispatch with immediate bounded retries
-//!   (plus the old round-based model as a bench baseline).
+//! * [`scheduler`] — provider-driven streaming dispatch with immediate
+//!   bounded retries ([`scheduler::TaskProvider`] / [`run_job`]; plus
+//!   the old round-based model as a bench baseline).
 //! * [`context`] — the driver API: [`SimContext`] + [`Rdd`].
 //! * [`rpc`] / [`worker`] — the standalone-mode TCP protocol.
 //!
@@ -54,5 +55,5 @@ pub use deploy::{ClusterSpec, WorkerEndpoint, WorkerHealth};
 pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 pub use remote::StandaloneCluster;
-pub use scheduler::{run_job, run_job_rounds, JobReport};
+pub use scheduler::{run_job, run_job_rounds, run_provider, JobReport, TaskProvider};
 pub use stream::{Completion, TaskStream};

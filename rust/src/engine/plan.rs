@@ -35,6 +35,20 @@ pub enum Source {
     /// a poisoned shard fails fast on the worker instead of deep inside
     /// an episode.
     Scenarios { scenarios: Vec<Record> },
+    /// One shard of a distributed bag replay (see `sim::replay`): time
+    /// slices of the bag at `path`, filtered to `topics` (empty = all).
+    /// `slices` are encoded [`crate::sim::replay::ReplaySlice`]s;
+    /// loading emits one self-contained slice-job record per slice
+    /// (path + topics + slice), validated up front so a poisoned slice
+    /// fails fast on the worker.
+    BagSlices {
+        /// Bag file the slices replay (read through the worker cache).
+        path: String,
+        /// Topic filter shared by every slice (empty = all topics).
+        topics: Vec<String>,
+        /// Encoded [`crate::sim::replay::ReplaySlice`] records.
+        slices: Vec<Record>,
+    },
 }
 
 impl Source {
@@ -71,6 +85,18 @@ impl Source {
                 w.put_u8(4);
                 w.put_varint(scenarios.len() as u64);
                 for s in scenarios {
+                    w.put_bytes(s);
+                }
+            }
+            Source::BagSlices { path, topics, slices } => {
+                w.put_u8(5);
+                w.put_str(path);
+                w.put_varint(topics.len() as u64);
+                for t in topics {
+                    w.put_str(t);
+                }
+                w.put_varint(slices.len() as u64);
+                for s in slices {
                     w.put_bytes(s);
                 }
             }
@@ -111,6 +137,20 @@ impl Source {
                 }
                 Ok(Source::Scenarios { scenarios })
             }
+            5 => {
+                let path = r.get_str()?;
+                let n = r.get_varint()? as usize;
+                let mut topics = Vec::with_capacity(n.min(1 << 10));
+                for _ in 0..n {
+                    topics.push(r.get_str()?);
+                }
+                let n = r.get_varint()? as usize;
+                let mut slices = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    slices.push(r.get_bytes_vec()?);
+                }
+                Ok(Source::BagSlices { path, topics, slices })
+            }
             other => Err(Error::Engine(format!("unknown source tag {other}"))),
         }
     }
@@ -125,6 +165,9 @@ impl Source {
             }
             Source::Range { start, end } => format!("range[{start}..{end})"),
             Source::Scenarios { scenarios } => format!("scenarios[{}]", scenarios.len()),
+            Source::BagSlices { path, slices, .. } => {
+                format!("bag-slices:{path}[{}]", slices.len())
+            }
         }
     }
 }
@@ -169,6 +212,11 @@ pub enum Action {
     /// episodes) and returns them as [`TaskOutput::Episodes`], preserving
     /// record order.
     Episodes,
+    /// Terminal for bag replays: validates that every record is a
+    /// decodable `ReplayVerdict` (i.e. the op chain actually replayed
+    /// the slices) and returns them as [`TaskOutput::Replays`],
+    /// preserving record order.
+    Replays,
 }
 
 impl Action {
@@ -183,6 +231,7 @@ impl Action {
                 w.put_str(type_name);
             }
             Action::Episodes => w.put_u8(3),
+            Action::Replays => w.put_u8(4),
         }
     }
 
@@ -196,6 +245,7 @@ impl Action {
                 type_name: r.get_str()?,
             }),
             3 => Ok(Action::Episodes),
+            4 => Ok(Action::Replays),
             other => Err(Error::Engine(format!("unknown action tag {other}"))),
         }
     }
@@ -261,6 +311,9 @@ pub enum TaskOutput {
     /// Encoded `EpisodeResult`s, in the shard's scenario order (produced
     /// by [`Action::Episodes`]).
     Episodes(Vec<Record>),
+    /// Encoded `ReplayVerdict`s, in the shard's slice order (produced by
+    /// [`Action::Replays`]).
+    Replays(Vec<Record>),
 }
 
 impl TaskOutput {
@@ -281,6 +334,13 @@ impl TaskOutput {
             }
             TaskOutput::Episodes(rs) => {
                 w.put_u8(2);
+                w.put_varint(rs.len() as u64);
+                for r in rs {
+                    w.put_bytes(r);
+                }
+            }
+            TaskOutput::Replays(rs) => {
+                w.put_u8(3);
                 w.put_varint(rs.len() as u64);
                 for r in rs {
                     w.put_bytes(r);
@@ -310,6 +370,14 @@ impl TaskOutput {
                     rs.push(r.get_bytes_vec()?);
                 }
                 Ok(TaskOutput::Episodes(rs))
+            }
+            3 => {
+                let n = r.get_varint()? as usize;
+                let mut rs = Vec::with_capacity(n.min(1 << 20));
+                for _ in 0..n {
+                    rs.push(r.get_bytes_vec()?);
+                }
+                Ok(TaskOutput::Replays(rs))
             }
             other => Err(Error::Engine(format!("unknown output tag {other}"))),
         }
@@ -385,6 +453,11 @@ mod tests {
             Source::SynthFrames { seed: 7, count: 10, width: 64, height: 48 },
             Source::Range { start: 5, end: 50 },
             Source::Scenarios { scenarios: vec![vec![0, 1, 2], vec![]] },
+            Source::BagSlices {
+                path: "/data/drive.bag".into(),
+                topics: vec!["/camera".into(), "/lidar".into()],
+                slices: vec![vec![1, 2, 3], vec![4]],
+            },
         ] {
             let s = TaskSpec { source: source.clone(), ..spec() };
             assert_eq!(TaskSpec::decode(&s.encode()).unwrap().source, source);
@@ -402,6 +475,7 @@ mod tests {
                 type_name: "T".into(),
             },
             Action::Episodes,
+            Action::Replays,
         ] {
             let s = TaskSpec { action: action.clone(), ..spec() };
             assert_eq!(TaskSpec::decode(&s.encode()).unwrap().action, action);
@@ -414,6 +488,7 @@ mod tests {
             TaskOutput::Records(vec![vec![1, 2], vec![], vec![9; 100]]),
             TaskOutput::Count(12345),
             TaskOutput::Episodes(vec![vec![3; 40], vec![7; 40]]),
+            TaskOutput::Replays(vec![vec![5; 16], vec![]]),
         ] {
             assert_eq!(TaskOutput::decode(&out.encode()).unwrap(), out);
         }

@@ -1,12 +1,17 @@
 //! Job scheduler: streams tasks to a [`Cluster`], retries failed
 //! attempts immediately (no round barrier), and records job metrics.
 //!
-//! `run_job` is the production path: it opens a [`TaskStream`], submits
-//! every task, and reacts to completions as they arrive — a retryable
-//! failure re-enters the queue the moment it is observed, so a retry
-//! overlaps the still-running stragglers instead of waiting for the
-//! whole batch. Outputs are still returned in task order (each
-//! completion carries the sequence slot it fills).
+//! The core is [`run_provider`]: it opens a [`TaskStream`], pulls tasks
+//! lazily from a [`TaskProvider`], and reacts to completions as they
+//! arrive — a retryable failure re-enters the queue the moment it is
+//! observed, so a retry overlaps the still-running stragglers instead of
+//! waiting for the whole batch. The provider decides *what* runs (it may
+//! cut work lazily at a cursor, as the adaptive sweep does) and folds
+//! each successful output back into driver state; the scheduler owns the
+//! completion/retry/metrics loop once, for every driver.
+//!
+//! `run_job` is the fixed-task-list convenience on top (outputs returned
+//! in task order; each completion carries the sequence slot it fills).
 //!
 //! `run_job_rounds` is the old barrier-synchronous model (one full
 //! `run_tasks` batch per retry wave), kept as the comparison baseline
@@ -66,21 +71,55 @@ fn percentile(samples: &mut [Duration], q: f64) -> Duration {
     samples[idx]
 }
 
-/// Run a job: all tasks to completion with bounded retries, streaming.
-/// Returns outputs in task order plus the report.
-pub fn run_job(
+/// A lazy task source driving [`run_provider`].
+///
+/// The scheduler pulls tasks on demand (so a provider may cut work at a
+/// cursor using information that only exists once earlier tasks have
+/// finished — the adaptive sweep re-shards its unsubmitted tail this
+/// way) and hands every successful output straight back, so the provider
+/// places results without the scheduler buffering them.
+///
+/// Sequence slots are assigned by the scheduler: the `seq` passed to
+/// [`TaskProvider::next_task`] is the slot the eventual completion (or
+/// any retry of it) reports under in [`TaskProvider::on_output`].
+pub trait TaskProvider {
+    /// Produce the task for sequence slot `seq` (monotonic from 0), or
+    /// `None` when the provider is exhausted. Not called again after
+    /// returning `None`, nor after a task has permanently failed.
+    fn next_task(&mut self, seq: u64) -> Option<TaskSpec>;
+
+    /// Fold a successful completion back into driver state. `wall` is
+    /// the attempt's execution time (providers that calibrate against
+    /// measured wall use it). An `Err` aborts the job after in-flight
+    /// tasks drain.
+    fn on_output(&mut self, seq: u64, output: TaskOutput, wall: Duration) -> Result<()>;
+
+    /// Max unfinished attempts in flight; the scheduler stops pulling
+    /// new tasks while at the window. Bounding it keeps a tail of work
+    /// unsubmitted (and therefore still re-plannable). Default:
+    /// effectively unbounded.
+    fn window(&self) -> usize {
+        usize::MAX
+    }
+}
+
+/// Run a provider-driven job to completion with bounded retries,
+/// streaming. This is the one completion/retry/metrics loop every
+/// driver (fixed jobs, adaptive sweeps, bag replays) goes through.
+pub fn run_provider(
     cluster: &dyn Cluster,
-    tasks: Vec<TaskSpec>,
+    provider: &mut dyn TaskProvider,
     max_retries: usize,
-) -> Result<(Vec<TaskOutput>, JobReport)> {
-    let job_id = tasks.first().map(|t| t.job_id).unwrap_or(0);
-    let total = tasks.len();
+) -> Result<JobReport> {
     let start = Instant::now();
-    let mut outputs: Vec<Option<TaskOutput>> = vec![None; total];
+    let mut walls: Vec<Duration> = Vec::new();
+    let mut waits: Vec<Duration> = Vec::new();
+    let mut job_id = 0u64;
+    let mut submitted = 0u64;
+    let mut outstanding = 0usize;
+    let mut exhausted = false;
     let mut retries_used = 0usize;
     let mut first_err: Option<Error> = None;
-    let mut walls: Vec<Duration> = Vec::with_capacity(total);
-    let mut waits: Vec<Duration> = Vec::with_capacity(total);
 
     let m = crate::metrics::Metrics::global();
     let wall_hist = m.histogram("engine_task_wall");
@@ -90,13 +129,27 @@ pub fn run_job(
     // closes the stream on every exit path (incl. panics), so workers
     // never stay parked on an abandoned job
     let _close = stream.clone().close_on_drop();
-    let mut outstanding = 0usize;
-    for (i, t) in tasks.into_iter().enumerate() {
-        stream.submit(i as u64, t);
-        outstanding += 1;
-    }
 
-    while outstanding > 0 {
+    loop {
+        // Pull up to the provider's window. New work stops after the
+        // first permanent failure — in-flight tasks just drain.
+        let window = provider.window().max(1);
+        while first_err.is_none() && !exhausted && outstanding < window {
+            match provider.next_task(submitted) {
+                Some(t) => {
+                    if submitted == 0 {
+                        job_id = t.job_id;
+                    }
+                    stream.submit(submitted, t);
+                    submitted += 1;
+                    outstanding += 1;
+                }
+                None => exhausted = true,
+            }
+        }
+        if outstanding == 0 {
+            break;
+        }
         let Some(c) = stream.next_completion() else {
             return Err(first_err.unwrap_or_else(|| {
                 Error::Engine(format!(
@@ -110,7 +163,13 @@ pub fn run_job(
         wall_hist.observe(c.wall);
         wait_hist.observe(c.queue_wait);
         match c.result {
-            Ok(out) => outputs[c.seq as usize] = Some(out),
+            Ok(out) => {
+                if first_err.is_none() {
+                    if let Err(e) = provider.on_output(c.seq, out, c.wall) {
+                        first_err = Some(e);
+                    }
+                }
+            }
             Err(e) => {
                 crate::logmsg!(
                     "warn",
@@ -144,20 +203,56 @@ pub fn run_job(
     if let Some(e) = first_err {
         return Err(e);
     }
-    let outputs: Vec<TaskOutput> = outputs
-        .into_iter()
-        .map(|o| o.expect("all sequence slots filled or job errored"))
-        .collect();
-    let mut report = JobReport::new(job_id, total, retries_used, start.elapsed());
+    let mut report = JobReport::new(job_id, submitted as usize, retries_used, start.elapsed());
     report.task_wall_p50 = percentile(&mut walls, 0.50);
     report.task_wall_p95 = percentile(&mut walls, 0.95);
     report.queue_wait_p50 = percentile(&mut waits, 0.50);
     report.queue_wait_p95 = percentile(&mut waits, 0.95);
     // process metrics (`Metrics::global().report()`)
     m.counter("engine_jobs_completed").inc();
-    m.counter("engine_tasks_completed").add(total as u64);
+    m.counter("engine_tasks_completed").add(submitted);
     m.counter("engine_task_retries").add(retries_used as u64);
     m.histogram("engine_job_wall").observe(report.wall);
+    Ok(report)
+}
+
+/// Fixed task list as a provider: submit everything, collect outputs by
+/// sequence slot.
+struct VecProvider {
+    tasks: std::vec::IntoIter<TaskSpec>,
+    outputs: Vec<Option<TaskOutput>>,
+}
+
+impl TaskProvider for VecProvider {
+    fn next_task(&mut self, _seq: u64) -> Option<TaskSpec> {
+        self.tasks.next()
+    }
+
+    fn on_output(&mut self, seq: u64, output: TaskOutput, _wall: Duration) -> Result<()> {
+        self.outputs[seq as usize] = Some(output);
+        Ok(())
+    }
+}
+
+/// Run a job: all tasks to completion with bounded retries, streaming.
+/// Returns outputs in task order plus the report. A convenience wrapper
+/// over [`run_provider`] with a fixed task list.
+pub fn run_job(
+    cluster: &dyn Cluster,
+    tasks: Vec<TaskSpec>,
+    max_retries: usize,
+) -> Result<(Vec<TaskOutput>, JobReport)> {
+    let total = tasks.len();
+    let mut provider = VecProvider {
+        tasks: tasks.into_iter(),
+        outputs: (0..total).map(|_| None).collect(),
+    };
+    let report = run_provider(cluster, &mut provider, max_retries)?;
+    let outputs: Vec<TaskOutput> = provider
+        .outputs
+        .into_iter()
+        .map(|o| o.expect("all sequence slots filled or job errored"))
+        .collect();
     Ok((outputs, report))
 }
 

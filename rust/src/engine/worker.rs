@@ -1,10 +1,14 @@
 //! Standalone worker: a separate OS process serving tasks over TCP.
 //!
-//! Launched as `av-simd worker --listen <addr> --id <n>`; the driver's
-//! [`super::remote::StandaloneCluster`] connects and drives it with
-//! [`super::rpc`] frames. One connection at a time, tasks executed
-//! serially (one task slot per worker process, matching the paper's
-//! one-ROS-node-per-Spark-worker layout).
+//! Launched as `av-simd worker --listen <addr> --id <n> [--slots N]`;
+//! the driver's [`super::remote::StandaloneCluster`] connects and
+//! drives it with [`super::rpc`] frames. Each connection executes its
+//! tasks serially, but the process accepts up to `slots` connections
+//! *concurrently* — one multi-slot worker saturates a multi-core box
+//! without the `host:port*N` one-process-per-core workaround in
+//! `ClusterSpec` manifests (drivers open one connection per slot via
+//! the `host:port+N` spec syntax). All connections share one bag cache,
+//! so a bag any slot loaded replays from RAM for every other slot.
 
 use super::executor;
 use super::ops::{OpRegistry, TaskCtx};
@@ -12,24 +16,116 @@ use super::plan::{TaskOutput, TaskSpec};
 use super::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
 use crate::error::{Error, Result};
 use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
 
-/// Serve tasks forever (until `Shutdown` or driver disconnect after at
-/// least one session). Returns after a clean shutdown.
+/// Serve tasks forever with one task slot (until `Shutdown` or driver
+/// disconnect after at least one session). Returns after a clean
+/// shutdown. See [`serve_with_slots`] for the multi-slot form.
 pub fn serve(addr: &str, worker_id: usize, registry: OpRegistry, artifact_dir: &str) -> Result<()> {
+    serve_with_slots(addr, worker_id, registry, artifact_dir, 1)
+}
+
+/// Serve tasks with up to `slots` concurrent connections, each running
+/// tasks serially on its own thread. Connections beyond the bound wait
+/// in the accept queue until a slot frees. A `Shutdown` on any
+/// connection stops the whole process (after in-flight connections
+/// finish). All slots share the worker's [`TaskCtx`] bag cache.
+pub fn serve_with_slots(
+    addr: &str,
+    worker_id: usize,
+    registry: OpRegistry,
+    artifact_dir: &str,
+    slots: usize,
+) -> Result<()> {
+    let slots = slots.max(1);
     let listener = TcpListener::bind(addr)
         .map_err(|e| Error::Engine(format!("worker {worker_id} bind {addr}: {e}")))?;
-    crate::logmsg!("info", "worker {worker_id} listening on {addr}");
-    let ctx = TaskCtx::new(worker_id, artifact_dir);
-    for conn in listener.incoming() {
-        let stream = conn.map_err(Error::Io)?;
-        match serve_connection(stream, &ctx, &registry) {
-            Ok(ShutdownKind::Graceful) => return Ok(()),
-            Ok(ShutdownKind::Disconnect) => continue, // driver may reconnect
-            Err(e) => {
-                crate::logmsg!("warn", "worker {worker_id} connection error: {e}");
-                continue;
-            }
+    // Self-dial target for waking the accept loop on shutdown: the
+    // actual bound address — except an unspecified bind (0.0.0.0/::),
+    // which is not dialable itself but is reachable via loopback.
+    let local = listener
+        .local_addr()
+        .map_err(|e| Error::Engine(format!("worker {worker_id} local_addr: {e}")))?;
+    let wake_addr = if local.ip().is_unspecified() {
+        // family-matched loopback: a v6-only [::] socket is not
+        // reachable via 127.0.0.1
+        match local.ip() {
+            std::net::IpAddr::V4(_) => format!("127.0.0.1:{}", local.port()),
+            std::net::IpAddr::V6(_) => format!("[::1]:{}", local.port()),
         }
+    } else {
+        local.to_string()
+    };
+    crate::logmsg!("info", "worker {worker_id} listening on {addr} ({slots} slot(s))");
+    let ctx = TaskCtx::new(worker_id, artifact_dir);
+    let shutdown = Arc::new(AtomicBool::new(false));
+    // counting gate bounding concurrent connections at `slots`
+    struct Gate {
+        active: Mutex<usize>,
+        freed: Condvar,
+    }
+    let gate = Arc::new(Gate { active: Mutex::new(0), freed: Condvar::new() });
+    let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+
+    for conn in listener.incoming() {
+        if shutdown.load(Ordering::SeqCst) {
+            break; // a handler saw Shutdown (this accept was its wake-up)
+        }
+        let stream = conn.map_err(Error::Io)?;
+        // take a slot (blocks the acceptor while all slots are busy —
+        // pending connections queue in the kernel backlog)
+        {
+            let mut active = gate.active.lock().unwrap();
+            while *active >= slots {
+                active = gate.freed.wait(active).unwrap();
+            }
+            *active += 1;
+        }
+        let ctx = ctx.clone();
+        let registry = registry.clone();
+        let gate = gate.clone();
+        let shutdown = shutdown.clone();
+        let wake = wake_addr.clone();
+        handles.push(
+            std::thread::Builder::new()
+                .name(format!("av-simd-worker-{worker_id}-slot"))
+                .spawn(move || {
+                    let result = serve_connection(stream, &ctx, &registry);
+                    // free the slot before any shutdown wake, so the
+                    // acceptor is never left parked on a full gate
+                    {
+                        let mut active = gate.active.lock().unwrap();
+                        *active -= 1;
+                    }
+                    gate.freed.notify_one();
+                    match result {
+                        Ok(ShutdownKind::Graceful) => {
+                            shutdown.store(true, Ordering::SeqCst);
+                            // unblock the accept loop
+                            if let Err(e) = TcpStream::connect(&wake) {
+                                crate::logmsg!(
+                                    "warn",
+                                    "worker {worker_id} shutdown wake dial {wake}: {e}"
+                                );
+                            }
+                        }
+                        Ok(ShutdownKind::Disconnect) => {} // driver may reconnect
+                        Err(e) => {
+                            crate::logmsg!(
+                                "warn",
+                                "worker {worker_id} connection error: {e}"
+                            );
+                        }
+                    }
+                })
+                .expect("spawn worker slot thread"),
+        );
+        // reap finished handlers so the vec stays bounded on long runs
+        handles.retain(|h| !h.is_finished());
+    }
+    for h in handles {
+        let _ = h.join();
     }
     Ok(())
 }
@@ -317,6 +413,74 @@ mod tests {
         // and report how many connect attempts were made
         assert!(msg.contains("127.0.0.1:1"), "address lost: {msg}");
         assert!(msg.contains("attempt"), "attempt count lost: {msg}");
+    }
+
+    /// Register an op that blocks until `need` concurrent invocations
+    /// rendezvous (5 s timeout → error). Proves slots really run
+    /// concurrently — a serial worker would deadlock, not just be slow.
+    fn rendezvous_op(reg: &OpRegistry, need: usize) {
+        use std::sync::{Condvar, Mutex};
+        let state = std::sync::Arc::new((Mutex::new(0usize), Condvar::new()));
+        reg.register("rendezvous", move |_c, _p, records| {
+            let (lock, cv) = &*state;
+            let mut inside = lock.lock().unwrap();
+            *inside += 1;
+            cv.notify_all();
+            let deadline = std::time::Instant::now() + std::time::Duration::from_secs(5);
+            while *inside < need {
+                let left = deadline.saturating_duration_since(std::time::Instant::now());
+                if left.is_zero() {
+                    return Err(Error::Engine(format!(
+                        "rendezvous timed out with {} of {need} tasks inside",
+                        *inside
+                    )));
+                }
+                let (g, timeout) = cv.wait_timeout(inside, left).unwrap();
+                inside = g;
+                if timeout.timed_out() && *inside < need {
+                    return Err(Error::Engine(format!(
+                        "rendezvous timed out with {} of {need} tasks inside",
+                        *inside
+                    )));
+                }
+            }
+            Ok(records)
+        });
+    }
+
+    #[test]
+    fn multi_slot_worker_runs_connections_concurrently() {
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let reg = OpRegistry::with_builtins();
+        rendezvous_op(&reg, 2);
+        let addr2 = addr.clone();
+        let serve_handle = std::thread::spawn(move || {
+            super::serve_with_slots(&addr2, 0, reg, "artifacts", 2).unwrap();
+        });
+
+        let spec = |id: u32| TaskSpec {
+            job_id: 1,
+            task_id: id,
+            attempt: 0,
+            source: Source::Range { start: 0, end: 3 },
+            ops: vec![super::super::plan::OpCall::new("rendezvous", vec![])],
+            action: Action::Count,
+        };
+        // two clients, each sends one task; the tasks only complete if
+        // both connections are served at the same time
+        let mut a = WorkerClient::connect(&addr, std::time::Duration::from_secs(5)).unwrap();
+        let mut b = WorkerClient::connect(&addr, std::time::Duration::from_secs(5)).unwrap();
+        a.send_task(&spec(0)).unwrap();
+        b.send_task(&spec(1)).unwrap();
+        assert_eq!(a.recv_reply(0).unwrap(), TaskOutput::Count(3));
+        assert_eq!(b.recv_reply(1).unwrap(), TaskOutput::Count(3));
+
+        // one Shutdown stops the whole process once connections close
+        a.shutdown().unwrap();
+        drop(b);
+        serve_handle.join().unwrap();
     }
 
     #[test]

@@ -1,8 +1,9 @@
 //! `av-simd` — the platform launcher.
 //!
 //! Subcommands:
-//! * `worker --listen ADDR --id N [--artifacts DIR]` — standalone worker
-//!   process (spawned by `StandaloneCluster`, or manually for multi-box).
+//! * `worker --listen ADDR --id N [--slots S] [--artifacts DIR]` —
+//!   standalone worker process (spawned by `StandaloneCluster`, or
+//!   manually for multi-box); `--slots` bounds concurrent connections.
 //! * `deploy --spec FILE [--launch]` — health-check (and optionally
 //!   launch) a multi-host worker fleet from a `ClusterSpec` manifest.
 //! * `user-logic NAME` — BinPipedRDD child mode: stream on stdin/stdout.
@@ -13,6 +14,9 @@
 //! * `sweep [--workers N] [--standalone] ...` — parameterized scenario
 //!   sweep (ego-speed grid × dt × seed × the Fig-1 matrix) sharded over
 //!   the cluster, aggregated into a `SweepReport`.
+//! * `replay --bag FILE ...` — shard a recorded drive into overlapping
+//!   time slices, replay them through the perception pipeline on the
+//!   cluster, aggregate a deterministic `ReplayReport`.
 //! * `info` — registries, artifacts, config.
 
 use av_simd::cli::Args;
@@ -43,6 +47,7 @@ fn run(raw: &[String]) -> Result<()> {
         "perceive" => cmd_perceive(&args),
         "scenarios" => cmd_scenarios(&args),
         "sweep" => cmd_sweep(&args),
+        "replay" => cmd_replay(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             print!("{HELP}");
@@ -61,7 +66,8 @@ av-simd — distributed simulation platform for autonomous driving
 USAGE: av-simd <command> [flags]
 
 COMMANDS:
-  worker      --listen ADDR --id N [--artifacts DIR]   serve tasks over TCP
+  worker      --listen ADDR --id N [--slots S] [--artifacts DIR]
+              serve tasks over TCP (S concurrent task slots, default 1)
   deploy      --spec FILE [--launch]                   health-check (and
               optionally launch) a multi-host fleet from a ClusterSpec
               manifest (TOML or JSON; see docs/OPERATIONS.md)
@@ -75,6 +81,12 @@ COMMANDS:
               [--recalibrate-drift F] [--recalibrate-window N]
               [--ego-speeds A,B,..] [--dts A,B,..] [--seeds A,B,..]
               [--jitter F] [--horizon S] [--worst K] [--record-worst DIR]
+  replay      --bag FILE [--slices N] [--warmup-ms MS] [--rate R]
+              [--topics A,B,..] [--workers N] [--standalone]
+              [--base-port P] [--cluster-spec FILE] [--verify]
+              [--fixture-frames F] [--seed S]
+              shard a recorded drive across the cluster and replay it
+              through the perception pipeline (docs/OPERATIONS.md)
   info        [--artifacts DIR]
 ";
 
@@ -131,8 +143,15 @@ fn cmd_deploy(args: &Args) -> Result<()> {
 fn cmd_worker(args: &Args) -> Result<()> {
     let listen = args.require("listen")?;
     let id = args.get_usize("id", 0)?;
+    let slots = args.get_usize("slots", 1)?;
     let artifacts = args.get_or("artifacts", "artifacts");
-    av_simd::engine::worker::serve(listen, id, av_simd::full_op_registry(), artifacts)
+    av_simd::engine::worker::serve_with_slots(
+        listen,
+        id,
+        av_simd::full_op_registry(),
+        artifacts,
+        slots,
+    )
 }
 
 fn cmd_user_logic(args: &Args) -> Result<()> {
@@ -364,6 +383,87 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         let paths = driver.record_worst(&report, dir)?;
         for p in paths {
             println!("recorded {p}");
+        }
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_replay(args: &Args) -> Result<()> {
+    use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
+    use av_simd::sim::{ReplayDriver, ReplaySpec};
+
+    let bag = args.require("bag")?.to_string();
+    // --fixture-frames N: synthesize a deterministic datagen drive at
+    // --bag first (demos and smoke tests need no recorded data)
+    if args.has("fixture-frames") {
+        let frames = args.get_usize("fixture-frames", 20)? as u32;
+        let seed = args.get_u64("seed", 42)?;
+        av_simd::sim::replay::write_fixture_bag(&bag, frames, seed)?;
+        println!("wrote fixture bag {bag} ({frames} frames, seed {seed})");
+    }
+
+    let defaults = ReplaySpec::default();
+    let spec = ReplaySpec {
+        bag,
+        topics: match args.get("topics") {
+            None => Vec::new(),
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+        },
+        slices: args.get_usize("slices", defaults.slices)?,
+        warmup: std::time::Duration::from_millis(
+            args.get_u64("warmup-ms", defaults.warmup.as_millis() as u64)?,
+        ),
+        rate: match args.get("rate") {
+            None => defaults.rate,
+            Some(v) => v
+                .parse()
+                .map_err(|_| av_simd::err!(Config, "--rate expects a number, got '{v}'"))?,
+        },
+        ..defaults
+    };
+
+    let workers = args.get_usize("workers", 4)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let cluster: Box<dyn Cluster> = if let Some(spec_path) = args.get("cluster-spec") {
+        let cs = av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(spec_path))?;
+        Box::new(StandaloneCluster::connect(&cs)?)
+    } else if args.has("standalone") {
+        let base_port = args.get_usize("base-port", 7077)? as u16;
+        Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
+    } else {
+        Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
+    };
+
+    let driver = ReplayDriver::new(spec);
+    let (index, slices) = driver.plan()?;
+    println!(
+        "replay: {} messages / {} topics over {:.2} bag-s in {} slice(s) on {} {} \
+         workers (warm-up {:?})",
+        index.messages,
+        index.topics.len(),
+        index
+            .time_range()
+            .map(|(a, b)| (b.nanos - a.nanos) as f64 / 1e9)
+            .unwrap_or(0.0),
+        slices.len(),
+        cluster.workers(),
+        cluster.backend(),
+        driver.effective_warmup(&index),
+    );
+    let report = driver.run_planned(cluster.as_ref(), &index, &slices)?;
+    print!("{}", report.render());
+    if args.has("verify") {
+        let reference = driver.reference(artifacts)?;
+        if reference.encode() == report.encode() {
+            println!("verify: distributed report byte-equal to single-process reference");
+        } else {
+            cluster.shutdown();
+            return Err(av_simd::err!(
+                Sim,
+                "verify FAILED: distributed report differs from the single-process \
+                 reference"
+            ));
         }
     }
     cluster.shutdown();

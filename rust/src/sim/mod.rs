@@ -8,12 +8,16 @@
 
 pub mod controller;
 pub mod dynamics;
+pub mod replay;
 pub mod runner;
 pub mod scenario;
 pub mod sweep;
 
 pub use controller::{control, ControlMode, ControllerParams, LeadObservation};
 pub use dynamics::{collides, step, VehicleParams, VehicleState};
+pub use replay::{
+    run_replay, ReplayDriver, ReplayReport, ReplaySlice, ReplaySpec, ReplayVerdict,
+};
 pub use runner::{run_episode, run_matrix, EpisodeConfig, EpisodeResult};
 pub use scenario::{random_scenario, scenario_matrix, Direction, Maneuver, RelSpeed, Scenario};
 pub use sweep::{
@@ -89,8 +93,11 @@ pub fn decode_result(buf: &[u8]) -> Result<EpisodeResult> {
 ///   default config (the original 66-case demo path);
 /// * `run_episode` — the sweep workhorse: params carry an encoded
 ///   [`EpisodeParams`] (timestep, horizon, controller under test), so one
-///   worker binary serves any sweep point.
+///   worker binary serves any sweep point;
+/// * `run_replay` — the bag-replay workhorse (see [`replay`]):
+///   slice-job records → replay-verdict records.
 pub fn register_sim_ops(reg: &OpRegistry) {
+    replay::register_replay_ops(reg);
     reg.register_map("run_scenario", |_ctx, _p, rec| {
         let s = decode_scenario(&rec)?;
         let res = run_episode(

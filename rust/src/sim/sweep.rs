@@ -33,7 +33,9 @@
 //! assert_eq!(spec.cases().len(), spec.case_count());
 //! ```
 
-use crate::engine::{run_job, Action, Cluster, OpCall, Source, TaskOutput, TaskSpec};
+use crate::engine::{
+    run_job, run_provider, Action, Cluster, OpCall, Source, TaskOutput, TaskProvider, TaskSpec,
+};
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
 use crate::msg::Time;
@@ -557,6 +559,89 @@ fn place_episodes(
     }
 }
 
+/// The adaptive sweep's [`TaskProvider`]: cuts shards lazily at the
+/// submission cursor (so the unsubmitted tail can still be re-sharded),
+/// places each completed shard's episodes straight into the case-indexed
+/// result slots, and folds measured per-case wall time back into the
+/// shard size when drift exceeds the threshold. All completion/retry/
+/// metrics handling lives in [`run_provider`] — this type only decides
+/// *what* runs next and what a finished shard means.
+struct AdaptiveTail<'a> {
+    spec: &'a SweepSpec,
+    ad: &'a AdaptiveSharding,
+    cases: &'a [SweepCase],
+    results: &'a mut [Option<EpisodeResult>],
+    /// First case not yet submitted.
+    cursor: usize,
+    /// Cases per shard currently in force.
+    shard_size: usize,
+    current_per_case: Duration,
+    /// seq → (start case, case count) of each submitted shard.
+    ranges: Vec<(usize, usize)>,
+    log: &'a mut Vec<Calibration>,
+    /// Completed cases/wall since the last re-calibration check.
+    acc_cases: usize,
+    acc_wall: Duration,
+    window: usize,
+}
+
+impl TaskProvider for AdaptiveTail<'_> {
+    fn next_task(&mut self, seq: u64) -> Option<TaskSpec> {
+        if self.cursor >= self.cases.len() {
+            return None;
+        }
+        debug_assert_eq!(seq as usize, self.ranges.len(), "seq tracks submitted shards");
+        let end = next_shard_end(self.cases, self.cursor, self.shard_size);
+        // task 0 of the sweep job is the calibration shard
+        let task = shard_task(self.spec, &self.cases[self.cursor..end], self.ranges.len() + 1);
+        self.ranges.push((self.cursor, end - self.cursor));
+        self.cursor = end;
+        Some(task)
+    }
+
+    fn on_output(&mut self, seq: u64, output: TaskOutput, wall: Duration) -> Result<()> {
+        let (start, len) = self.ranges[seq as usize];
+        place_episodes(output, start, len, self.results)?;
+        self.acc_cases += len;
+        self.acc_wall += wall;
+        // fold measured wall back into the sharding of the unsubmitted
+        // tail once the smoothing window is full and the drift threshold
+        // is exceeded
+        if self.cursor < self.cases.len() && self.acc_cases >= self.ad.recalibration_window.max(1)
+        {
+            let measured = Duration::from_nanos(
+                ((self.acc_wall.as_nanos() as u64) / self.acc_cases as u64).max(1),
+            );
+            if drift_exceeded(self.current_per_case, measured, self.ad.drift_threshold) {
+                self.current_per_case = measured;
+                let new_size = calibrated_shard_size(self.ad.target_task, measured, self.ad);
+                if new_size != self.shard_size {
+                    crate::logmsg!(
+                        "info",
+                        "sweep re-calibrated at case {}: {:.1} µs/case -> {new_size} \
+                         cases/shard",
+                        self.cursor,
+                        measured.as_secs_f64() * 1e6
+                    );
+                    self.shard_size = new_size;
+                    self.log.push(Calibration {
+                        from_case: self.cursor,
+                        measured_per_case: measured,
+                        shard_size: new_size,
+                    });
+                }
+            }
+            self.acc_cases = 0;
+            self.acc_wall = Duration::ZERO;
+        }
+        Ok(())
+    }
+
+    fn window(&self) -> usize {
+        self.window
+    }
+}
+
 // ---------------------------------------------------------------------
 // report
 // ---------------------------------------------------------------------
@@ -895,14 +980,15 @@ impl SweepDriver {
 
     /// Adaptive path: run a dt-pure calibration prefix as one task,
     /// derive cases-per-shard from its measured wall time, then *stream*
-    /// the remainder — shards are cut lazily at the submission cursor,
-    /// and completed shards keep feeding measured per-case wall time
-    /// back in. When the measurement drifts past
-    /// [`AdaptiveSharding::drift_threshold`], the unsubmitted tail is
-    /// re-sharded and the decision is appended to the calibration log
-    /// ([`SweepReport::sharding`]). Case order — and therefore the
-    /// encoded verdict payload — is identical to the fixed path; only
-    /// task boundaries move.
+    /// the remainder through the generalized scheduler
+    /// ([`run_provider`]) — an [`AdaptiveTail`] provider cuts shards
+    /// lazily at the submission cursor, and completed shards keep
+    /// feeding measured per-case wall time back in. When the
+    /// measurement drifts past [`AdaptiveSharding::drift_threshold`],
+    /// the unsubmitted tail is re-sharded and the decision is appended
+    /// to the calibration log ([`SweepReport::sharding`]). Case order —
+    /// and therefore the encoded verdict payload — is identical to the
+    /// fixed path; only task boundaries move.
     fn run_adaptive(&self, cluster: &dyn Cluster, ad: &AdaptiveSharding) -> Result<SweepReport> {
         let cases = self.spec.cases();
         if cases.is_empty() {
@@ -934,8 +1020,7 @@ impl SweepDriver {
         let per_case = Duration::from_nanos(
             ((calib_job.task_wall_p50.as_nanos() as u64) / calib_len as u64).max(1),
         );
-        let mut shard_size = calibrated_shard_size(ad.target_task, per_case, ad);
-        let mut current_per_case = per_case;
+        let shard_size = calibrated_shard_size(ad.target_task, per_case, ad);
         let mut log = vec![Calibration {
             from_case: calib_len,
             measured_per_case: per_case,
@@ -944,121 +1029,30 @@ impl SweepDriver {
 
         // --- stream the tail, re-sharding the unsubmitted remainder ---
         let mut retries = calib_job.retries;
-        // seq → (start case, case count) of each submitted shard
         let mut ranges: Vec<(usize, usize)> = Vec::new();
         if calib_len < cases.len() {
-            let m = Metrics::global();
-            let wall_hist = m.histogram("engine_task_wall");
-            let wait_hist = m.histogram("engine_task_queue_wait");
-
-            let stream = cluster.open_stream();
-            let _close = stream.clone().close_on_drop();
-            // Submission window: enough shards in flight to keep every
-            // worker's pipeline full, small enough that a re-calibration
-            // still has a tail left to re-shard. Affects dispatch only —
-            // never verdicts, which depend on case order alone.
-            let window = cluster.workers().saturating_mul(2).max(4);
-            let mut cursor = calib_len; // first case not yet submitted
-            let mut outstanding = 0usize;
-            let mut first_err: Option<Error> = None;
-            // drift accumulation since the last (re-)calibration check
-            let mut acc_cases = 0usize;
-            let mut acc_wall = Duration::ZERO;
-            let window_cases = ad.recalibration_window.max(1);
-
-            loop {
-                while first_err.is_none() && cursor < cases.len() && outstanding < window {
-                    let end = next_shard_end(&cases, cursor, shard_size);
-                    let seq = ranges.len() as u64;
-                    let task = shard_task(&self.spec, &cases[cursor..end], ranges.len() + 1);
-                    ranges.push((cursor, end - cursor));
-                    stream.submit(seq, task);
-                    outstanding += 1;
-                    cursor = end;
-                }
-                if outstanding == 0 {
-                    break;
-                }
-                let Some(c) = stream.next_completion() else {
-                    return Err(first_err.unwrap_or_else(|| {
-                        Error::Engine(format!(
-                            "sweep stream ended with {outstanding} task(s) unresolved"
-                        ))
-                    }));
-                };
-                outstanding -= 1;
-                wall_hist.observe(c.wall);
-                wait_hist.observe(c.queue_wait);
-                let (start, len) = ranges[c.seq as usize];
-                match c.result {
-                    Ok(out) => {
-                        place_episodes(out, start, len, &mut results)?;
-                        acc_cases += len;
-                        acc_wall += c.wall;
-                        // fold measured wall back into the sharding of
-                        // the unsubmitted tail once the smoothing window
-                        // is full and the drift threshold is exceeded
-                        if first_err.is_none()
-                            && cursor < cases.len()
-                            && acc_cases >= window_cases
-                        {
-                            let measured = Duration::from_nanos(
-                                ((acc_wall.as_nanos() as u64) / acc_cases as u64).max(1),
-                            );
-                            if drift_exceeded(current_per_case, measured, ad.drift_threshold)
-                            {
-                                current_per_case = measured;
-                                let new_size =
-                                    calibrated_shard_size(ad.target_task, measured, ad);
-                                if new_size != shard_size {
-                                    crate::logmsg!(
-                                        "info",
-                                        "sweep re-calibrated at case {cursor}: \
-                                         {:.1} µs/case -> {new_size} cases/shard",
-                                        measured.as_secs_f64() * 1e6
-                                    );
-                                    shard_size = new_size;
-                                    log.push(Calibration {
-                                        from_case: cursor,
-                                        measured_per_case: measured,
-                                        shard_size,
-                                    });
-                                }
-                            }
-                            acc_cases = 0;
-                            acc_wall = Duration::ZERO;
-                        }
-                    }
-                    Err(e) => {
-                        crate::logmsg!(
-                            "warn",
-                            "sweep task {} attempt {} failed: {e}",
-                            c.spec.task_id,
-                            c.spec.attempt
-                        );
-                        if first_err.is_none()
-                            && (c.spec.attempt as usize) < self.spec.max_retries
-                            && e.is_retryable()
-                        {
-                            let mut t = c.spec;
-                            t.attempt += 1;
-                            retries += 1;
-                            stream.submit(c.seq, t);
-                            outstanding += 1;
-                        } else if first_err.is_none() {
-                            first_err = Some(Error::Engine(format!(
-                                "sweep task {} failed after {} attempt(s): {e}",
-                                c.spec.task_id,
-                                c.spec.attempt + 1
-                            )));
-                        }
-                    }
-                }
-            }
-            stream.close();
-            if let Some(e) = first_err {
-                return Err(e);
-            }
+            let mut provider = AdaptiveTail {
+                spec: &self.spec,
+                ad,
+                cases: &cases,
+                results: &mut results,
+                cursor: calib_len,
+                shard_size,
+                current_per_case: per_case,
+                ranges: Vec::new(),
+                log: &mut log,
+                acc_cases: 0,
+                acc_wall: Duration::ZERO,
+                // Submission window: enough shards in flight to keep
+                // every worker's pipeline full, small enough that a
+                // re-calibration still has a tail left to re-shard.
+                // Affects dispatch only — never verdicts, which depend
+                // on case order alone.
+                window: cluster.workers().saturating_mul(2).max(4),
+            };
+            let tail_job = run_provider(cluster, &mut provider, self.spec.max_retries)?;
+            retries += tail_job.retries;
+            ranges = provider.ranges;
         }
         // the recorded log must replay the executed layout exactly
         debug_assert_eq!(

@@ -1,0 +1,352 @@
+//! Distributed bag-replay integration suite: the determinism contract
+//! (`ReplayReport` bytes identical across backends × worker counts ×
+//! slice sizes, and equal to the single-process reference), retry
+//! robustness under skewed slices, and codec property tests for the
+//! replay wire types.
+//!
+//! Standalone clusters drive *in-process* `worker::serve` threads over
+//! real TCP (the deploy-test pattern), so the whole suite runs under
+//! plain `cargo test` with no release binary on disk.
+
+use av_simd::engine::deploy::ClusterSpec;
+use av_simd::engine::{run_job, worker, LocalCluster, StandaloneCluster, TaskOutput};
+use av_simd::sim::replay::{
+    slices_from_cuts, write_fixture_bag, ReplayParams, ReplaySlice, ReplaySpec, ReplayVerdict,
+    SliceJob,
+};
+use av_simd::sim::ReplayDriver;
+use av_simd::util::proptest::{check_n, gen};
+use av_simd::util::prng::Prng;
+use std::net::TcpListener;
+use std::time::Duration;
+
+fn artifact_dir() -> String {
+    std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+/// Write a fixture bag unique to this test invocation.
+fn fixture(tag: &str, frames: u32, seed: u64) -> String {
+    let dir = std::env::temp_dir().join("av_simd_replay_it");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join(format!("{tag}_{}.bag", std::process::id()));
+    let p = path.to_str().unwrap().to_string();
+    write_fixture_bag(&p, frames, seed).unwrap();
+    p
+}
+
+/// Reserve an ephemeral port, then serve a worker on it from a thread.
+fn spawn_worker(id: usize) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let a = addr.clone();
+    let dir = artifact_dir();
+    let h = std::thread::spawn(move || {
+        worker::serve(&a, id, av_simd::full_op_registry(), &dir).unwrap();
+    });
+    (addr, h)
+}
+
+fn standalone(n: usize) -> (StandaloneCluster, Vec<std::thread::JoinHandle<()>>) {
+    let mut addrs = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let (addr, h) = spawn_worker(i);
+        addrs.push(format!("\"{addr}\""));
+        handles.push(h);
+    }
+    let spec = ClusterSpec::from_toml_text(&format!(
+        "[cluster]\nname = \"replay-test\"\nconnect_timeout_ms = 5000\n\
+         [workers]\nhosts = [{}]\n",
+        addrs.join(", ")
+    ))
+    .unwrap();
+    (StandaloneCluster::connect(&spec).unwrap(), handles)
+}
+
+/// The acceptance matrix: {local, standalone} × {1, 2, 4 workers} ×
+/// {3, 7 slices}, every report byte-equal to the single-process
+/// reference replay.
+#[test]
+fn report_bytes_identical_across_backends_workers_and_slice_sizes() {
+    let bag = fixture("matrix", 16, 42);
+    let reference = {
+        let spec = ReplaySpec { bag: bag.clone(), ..ReplaySpec::default() };
+        ReplayDriver::new(spec).reference(&artifact_dir()).unwrap()
+    };
+    assert_eq!(reference.stats.frames, 16, "{:?}", reference.stats);
+    assert_eq!(reference.stats.odom.pairs + reference.stats.odom.skipped, 15);
+
+    for slices in [3usize, 7] {
+        let spec = ReplaySpec { bag: bag.clone(), slices, ..ReplaySpec::default() };
+        let driver = ReplayDriver::new(spec);
+        let (index, plan) = driver.plan().unwrap();
+        assert!(plan.len() >= 2, "slicing degenerated to {} slice(s)", plan.len());
+
+        for workers in [1usize, 2, 4] {
+            // local (thread pool)
+            let local = LocalCluster::new(workers, av_simd::full_op_registry(), &artifact_dir());
+            let report = driver.run_planned(&local, &index, &plan).unwrap();
+            assert_eq!(
+                report.encode(),
+                reference.encode(),
+                "local x{workers}, {slices} slices diverged"
+            );
+
+            // standalone (worker processes over TCP — in-process serve)
+            let (cluster, handles) = standalone(workers);
+            let report = driver.run_planned(&cluster, &index, &plan).unwrap();
+            assert_eq!(
+                report.encode(),
+                reference.encode(),
+                "standalone x{workers}, {slices} slices diverged"
+            );
+            cluster.stop_workers();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+    }
+    std::fs::remove_file(bag).ok();
+}
+
+/// Skewed-slice stress: one slice covering ~10× the timeline of the
+/// others, with a transient first-attempt failure injected into every
+/// task — verdict bytes must still equal the clean run's, byte for
+/// byte, and the retry must actually happen.
+#[test]
+fn skewed_slices_with_retries_keep_verdict_bytes() {
+    use std::sync::atomic::{AtomicUsize, Ordering};
+    use std::sync::Arc;
+
+    let bag = fixture("skew", 24, 7);
+    let spec = ReplaySpec { bag: bag.clone(), slices: 12, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec);
+    let (index, _) = driver.plan().unwrap();
+
+    // custom cuts: merge the first 10 of 12 balanced slices into one
+    let cuts = index.cut_points(12);
+    assert!(cuts.len() == 13, "need 12 distinct slices, got {}", cuts.len() - 1);
+    let skewed_cuts = vec![cuts[0], cuts[10], cuts[11], cuts[12]];
+    let slices = slices_from_cuts(&skewed_cuts, driver.effective_warmup(&index));
+    assert_eq!(slices.len(), 3);
+    assert!(
+        (slices[0].end - slices[0].start) > 5 * (slices[1].end - slices[1].start),
+        "slice 0 is not skewed: {slices:?}"
+    );
+
+    // clean distributed run
+    let local = LocalCluster::new(3, av_simd::full_op_registry(), &artifact_dir());
+    let clean = driver.run_planned(&local, &index, &slices).unwrap();
+    assert_eq!(clean.encode(), driver.reference(&artifact_dir()).unwrap().encode());
+
+    // poisoned run: every task fails its first attempt, then succeeds
+    let reg = av_simd::full_op_registry();
+    let seen = Arc::new(std::sync::Mutex::new(std::collections::HashSet::new()));
+    let trips = Arc::new(AtomicUsize::new(0));
+    let (s2, t2) = (seen.clone(), trips.clone());
+    reg.register("poison_once", move |_c, params, records| {
+        let task_id = params.first().copied().unwrap_or(0);
+        if s2.lock().unwrap().insert(task_id) {
+            t2.fetch_add(1, Ordering::SeqCst);
+            return Err(av_simd::err!(Engine, "transient poison on task {task_id}"));
+        }
+        Ok(records)
+    });
+    let cluster = LocalCluster::new(3, reg, &artifact_dir());
+    let mut tasks = driver.tasks(&slices);
+    for t in &mut tasks {
+        t.ops.insert(
+            0,
+            av_simd::engine::OpCall::new("poison_once", vec![t.task_id as u8]),
+        );
+    }
+    let n_tasks = tasks.len();
+    let (outs, job) = run_job(&cluster, tasks, 2).unwrap();
+    assert_eq!(job.retries, n_tasks, "every task retried exactly once");
+    assert_eq!(trips.load(Ordering::SeqCst), n_tasks);
+
+    let mut verdicts = Vec::new();
+    for out in outs {
+        match out {
+            TaskOutput::Replays(rs) => {
+                assert_eq!(rs.len(), 1);
+                verdicts.push(ReplayVerdict::decode(&rs[0]).unwrap());
+            }
+            other => panic!("unexpected {other:?}"),
+        }
+    }
+    let poisoned = driver.aggregate(&index, &slices, verdicts).unwrap();
+    assert_eq!(
+        poisoned.encode(),
+        clean.encode(),
+        "retries changed the replay verdicts"
+    );
+    std::fs::remove_file(bag).ok();
+}
+
+/// A poisoned slice record in `Source::BagSlices` must fail the task
+/// fast with a non-retryable error (data corruption, not a transient).
+#[test]
+fn poisoned_slice_record_fails_fast() {
+    use av_simd::engine::{Action, OpCall, Source, TaskCtx, TaskSpec};
+
+    let reg = av_simd::full_op_registry();
+    let ctx = TaskCtx::new(0, artifact_dir());
+    let spec = TaskSpec {
+        job_id: 1,
+        task_id: 0,
+        attempt: 0,
+        source: Source::BagSlices {
+            path: "/nonexistent.bag".into(),
+            topics: vec![],
+            slices: vec![vec![0xff; 7]],
+        },
+        ops: vec![OpCall::new("run_replay", ReplayParams { rate: f64::INFINITY }.encode())],
+        action: Action::Replays,
+    };
+    let err = av_simd::engine::executor::run_task(&ctx, &reg, &spec).unwrap_err();
+    assert!(err.to_string().contains("poisoned"), "{err}");
+    assert!(!err.is_retryable(), "corrupt slice must not be retried");
+}
+
+// ------------------------------------------------------------------
+// codec property tests
+// ------------------------------------------------------------------
+
+fn gen_spec(rng: &mut Prng) -> ReplaySpec {
+    ReplaySpec {
+        bag: format!("/data/{}.bag", gen::ident(rng, 12)),
+        topics: gen::vec_of(rng, 4, |r| format!("/{}", gen::ident(r, 8))),
+        slices: 1 + rng.below(64) as usize,
+        warmup: Duration::from_nanos(rng.below(5_000_000_000)),
+        rate: match rng.below(3) {
+            0 => f64::INFINITY,
+            1 => 0.0,
+            _ => (1 + rng.below(1000)) as f64 / 10.0,
+        },
+        max_retries: rng.below(5) as usize,
+    }
+}
+
+fn gen_verdict(rng: &mut Prng) -> ReplayVerdict {
+    use av_simd::sim::replay::{ControlStats, OdometryStats, ReplayStats, TopicStats};
+    let mut topics = std::collections::BTreeMap::new();
+    for _ in 0..rng.below(5) {
+        let t = TopicStats {
+            messages: rng.below(10_000),
+            gap_hist: std::array::from_fn(|_| rng.below(1000)),
+        };
+        topics.insert(format!("/{}", gen::ident(rng, 8)), t);
+    }
+    let messages = topics.values().map(|t: &TopicStats| t.messages).sum();
+    let stats = ReplayStats {
+        messages,
+        topics,
+        frames: rng.below(1000),
+        detections: std::array::from_fn(|_| rng.below(500)),
+        odom: OdometryStats {
+            pairs: rng.below(1000),
+            skipped: rng.below(10),
+            abs_dx_um: rng.below(1 << 40) as i64 - (1 << 39),
+            abs_dy_um: rng.below(1 << 40) as i64 - (1 << 39),
+            abs_dtheta_urad: rng.below(1 << 30) as i64 - (1 << 29),
+            travel_um: rng.below(1 << 40) as i64,
+        },
+        ctrl: ControlStats {
+            pairs: rng.below(1000),
+            emergency: rng.below(100),
+            brake_cmds: rng.below(100),
+            max_brake_q: rng.below(10_000_000) as i64,
+            divergence_q: rng.below(1 << 40) as i64,
+        },
+    };
+    ReplayVerdict { slice: rng.below(1 << 16) as u32, stats }
+}
+
+#[test]
+fn replay_spec_codec_roundtrips() {
+    check_n(
+        "replay spec roundtrip",
+        av_simd::util::proptest::default_cases(),
+        gen_spec,
+        |spec| {
+            // byte-level fixpoint: tolerant of non-finite rate values
+            let enc = spec.encode();
+            match ReplaySpec::decode(&enc) {
+                Ok(back) => back.encode() == enc,
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+#[test]
+fn replay_verdict_codec_roundtrips() {
+    check_n(
+        "replay verdict roundtrip",
+        av_simd::util::proptest::default_cases(),
+        gen_verdict,
+        |v| ReplayVerdict::decode(&v.encode()).map(|b| b == *v).unwrap_or(false),
+    );
+}
+
+#[test]
+fn replay_report_codec_roundtrips() {
+    use av_simd::sim::ReplayReport;
+    check_n(
+        "replay report roundtrip",
+        av_simd::util::proptest::default_cases(),
+        |rng| {
+            let v = gen_verdict(rng);
+            let start = rng.below(1 << 40);
+            ReplayReport {
+                start,
+                end: start + 1 + rng.below(1 << 40),
+                stats: v.stats,
+                slices: 3,
+                tasks: 3,
+                retries: 1,
+                wall: Duration::from_millis(5),
+            }
+        },
+        |r| {
+            let enc = r.encode();
+            match ReplayReport::decode(&enc) {
+                Ok(back) => {
+                    // execution facts are not part of the payload
+                    back.encode() == enc
+                        && back.stats == r.stats
+                        && back.start == r.start
+                        && back.end == r.end
+                        && back.wall == Duration::ZERO
+                }
+                Err(_) => false,
+            }
+        },
+    );
+}
+
+/// Slices and slice jobs: structured roundtrip plus rejection of
+/// inverted windows.
+#[test]
+fn slice_codecs_roundtrip_under_fuzz() {
+    check_n(
+        "slice job roundtrip",
+        av_simd::util::proptest::default_cases(),
+        |rng| {
+            let start = rng.below(1 << 50);
+            SliceJob {
+                path: format!("/bags/{}.bag", gen::ident(rng, 10)),
+                topics: gen::vec_of(rng, 3, |r| format!("/{}", gen::ident(r, 6))),
+                slice: ReplaySlice {
+                    index: rng.below(1 << 20) as u32,
+                    warmup_start: start.saturating_sub(rng.below(1 << 20)),
+                    start,
+                    end: start + 1 + rng.below(1 << 30),
+                },
+            }
+        },
+        |job| SliceJob::decode(&job.encode()).map(|b| b == *job).unwrap_or(false),
+    );
+}
