@@ -16,6 +16,11 @@
 //! * `replay/distributed` vs `replay/reference` — a fixture drive
 //!   sharded over a 4-worker local cluster vs the single-process
 //!   reference replay (slices/sec recorded; reports byte-checked).
+//! * `storage/block-fetch` — a cold, hash-verified manifest + block
+//!   fetch over loopback through `BlockClient` (the data plane's
+//!   worker-side cache-miss path; `block_fetch_mb_per_sec` fact), plus
+//!   `storage/hex32` content-address encoding
+//!   (`hex_encode_mb_per_sec`).
 //!
 //! ```sh
 //! cargo run --release --example bench_engine            # full run
@@ -307,6 +312,61 @@ fn bench_replay(samples: usize, frames: u32) -> (Sample, Sample) {
     (dist, reference)
 }
 
+// ---------------------------------------------------------------- storage
+
+/// Data-plane microbenches: (1) a cold manifest + every-block fetch over
+/// loopback TCP through `BlockClient` (hash-verified end to end — the
+/// worker-side cost of resolving a `DataRef::Manifest` on a cache
+/// miss); (2) `hex32` content-address encoding, the block-naming hot
+/// path on every write/read/fetch/cache key.
+fn bench_block_fetch(samples: usize, size: usize) -> (Sample, Sample) {
+    use av_simd::engine::{BlockClient, BlockServer};
+    use av_simd::storage::{hex32, BlockStore};
+
+    let dir = std::env::temp_dir().join(format!(
+        "av_simd_bench_store_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("bench store dir");
+    let data = sensor_like_buffer(size);
+    let store = BlockStore::open(&dir).expect("store").with_block_size(256 * 1024);
+    let (id, manifest) = store.publish(&data).expect("publish");
+    let server =
+        BlockServer::serve(Arc::new(store), "127.0.0.1:0", "127.0.0.1").expect("serve");
+    let peer = server.peer().to_string();
+
+    let fetch = Bench::new("storage/block-fetch loopback")
+        .warmup(1)
+        .samples(samples)
+        .units(size as f64, "B")
+        .run(|| {
+            let mut c =
+                BlockClient::connect(&peer, std::time::Duration::from_secs(5)).unwrap();
+            let m = c.fetch_manifest(&id).unwrap();
+            for i in 0..m.blocks.len() as u32 {
+                std::hint::black_box(c.fetch_block(&id, i, &m).unwrap());
+            }
+        });
+
+    let ids: Vec<[u8; 32]> = manifest.blocks.iter().map(|b| b.id).collect();
+    let reps = 4096 / ids.len().max(1) + 1;
+    let hex_bytes = (ids.len() * reps * 32) as f64;
+    let hex = Bench::new("storage/hex32 encode")
+        .warmup(1)
+        .samples(samples)
+        .units(hex_bytes, "B")
+        .run(|| {
+            for _ in 0..reps {
+                for bid in &ids {
+                    std::hint::black_box(hex32(std::hint::black_box(bid)));
+                }
+            }
+        });
+    drop(server);
+    std::fs::remove_dir_all(&dir).ok();
+    (fetch, hex)
+}
+
 fn main() -> av_simd::Result<()> {
     let smoke = smoke();
     let (sched_samples, stall_ms) = if smoke { (3, 30) } else { (7, 120) };
@@ -319,12 +379,15 @@ fn main() -> av_simd::Result<()> {
         codec_size >> 20
     );
 
+    let (fetch_samples, fetch_size) = if smoke { (3, 1 << 20) } else { (7, 16 << 20) };
+
     let (sched_stream, sched_rounds) = bench_scheduler(sched_samples, stall_ms);
     let (crc_fast, crc_slow) = bench_crc(codec_samples, codec_size);
     let (lz_cc, lz_cg, lz_df, lz_dr, ratio_chain, ratio_greedy) =
         bench_lz(codec_samples, codec_size);
     let (sweep_adaptive, sweep_fixed) = bench_sweep(sweep_samples);
     let (replay_dist, replay_ref) = bench_replay(replay_samples, replay_frames);
+    let (block_fetch, hex_encode) = bench_block_fetch(fetch_samples, fetch_size);
 
     let samples = vec![
         sched_stream,
@@ -339,6 +402,8 @@ fn main() -> av_simd::Result<()> {
         sweep_fixed,
         replay_dist,
         replay_ref,
+        block_fetch,
+        hex_encode,
     ];
     print_table("engine microbenches", &samples);
 
@@ -351,6 +416,10 @@ fn main() -> av_simd::Result<()> {
     let replay_speedup = speedup(&samples[11], &samples[10]);
     // slices/sec of the distributed path (median wall over slice count)
     let replay_slices_per_sec = samples[10].throughput().unwrap_or(0.0);
+    // data-plane facts: verified block fetch over loopback (MB/s of bag
+    // bytes landed on the "worker" side) and hex content-address encode
+    let block_fetch_mb_per_sec = samples[12].throughput().unwrap_or(0.0) / 1e6;
+    let hex_encode_mb_per_sec = samples[13].throughput().unwrap_or(0.0) / 1e6;
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
@@ -359,6 +428,8 @@ fn main() -> av_simd::Result<()> {
         ("speedup_sweep_adaptive_vs_fixed", sweep_speedup),
         ("speedup_replay_distributed_vs_reference", replay_speedup),
         ("replay_slices_per_sec", replay_slices_per_sec),
+        ("block_fetch_mb_per_sec", block_fetch_mb_per_sec),
+        ("hex_encode_mb_per_sec", hex_encode_mb_per_sec),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),
@@ -386,6 +457,10 @@ fn main() -> av_simd::Result<()> {
     assert!(
         lz_decompress_speedup > 1.0,
         "fast lz decompress regressed vs reference: {lz_decompress_speedup:.2}"
+    );
+    assert!(
+        block_fetch_mb_per_sec > 0.0,
+        "block fetch bench produced no throughput"
     );
     println!("bench_engine OK");
     Ok(())

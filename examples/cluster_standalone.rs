@@ -68,7 +68,10 @@ fn main() -> av_simd::Result<()> {
                 job_id: 1,
                 task_id: (i * 100 + j) as u32,
                 attempt: 0,
-                source: Source::BagFile { path: path.clone(), topics: vec!["/camera".into()] },
+                source: Source::BagFile {
+                    data: av_simd::engine::DataRef::path(path.clone()),
+                    topics: vec!["/camera".into()],
+                },
                 ops: vec![
                     OpCall::new("take_payload", vec![]),
                     OpCall::new("classify_images", vec![]),

@@ -13,6 +13,10 @@
 //! * `StandaloneCluster` dialed from a `ClusterSpec` over two
 //!   in-process `worker::serve` threads (full TCP/RPC path, no release
 //!   binary needed)
+//! * the content-addressed data plane: the bag is published into a
+//!   block store, the bag *file is deleted*, and a fresh standalone
+//!   fleet replays it purely from manifest + block fetches — still
+//!   byte-identical
 
 use av_simd::engine::deploy::ClusterSpec;
 use av_simd::engine::{worker, LocalCluster, StandaloneCluster};
@@ -48,7 +52,7 @@ fn main() -> av_simd::Result<()> {
     );
 
     let spec = ReplaySpec { bag: bag.clone(), slices: 4, ..ReplaySpec::default() };
-    let driver = ReplayDriver::new(spec);
+    let mut driver = ReplayDriver::new(spec);
     let (index, slices) = driver.plan()?;
     println!(
         "plan: {} messages, {} topics, {} slices, warm-up {:?}",
@@ -95,6 +99,35 @@ fn main() -> av_simd::Result<()> {
     cluster.stop_workers();
     h_a.join().expect("worker a");
     h_b.join().expect("worker b");
+
+    // data plane: publish the bag into a block store, delete the bag
+    // file, and replay it on a fresh fleet purely through manifest +
+    // block fetches — no worker (or even the driver) can open the path
+    let store_root = dir.join("store");
+    let id = driver.publish(&store_root, "127.0.0.1")?;
+    std::fs::remove_file(&bag)?;
+    let (index2, slices2) = driver.plan()?;
+    let (addr_c, h_c) = spawn_worker(2);
+    let (addr_d, h_d) = spawn_worker(3);
+    let cluster_spec = ClusterSpec::from_toml_text(&format!(
+        "[cluster]\nname = \"replay-example-dp\"\nconnect_timeout_ms = 5000\n\
+         [workers]\nhosts = [\"{addr_c}\", \"{addr_d}\"]\n"
+    ))?;
+    let cluster = StandaloneCluster::connect(&cluster_spec)?;
+    let report = driver.run_planned(&cluster, &index2, &slices2)?;
+    println!(
+        "\n== standalone x2, manifest {} (bag file deleted) ==",
+        id.short()
+    );
+    print!("{}", report.render());
+    assert_eq!(
+        report.encode(),
+        reference.encode(),
+        "manifest-based replay diverged from the reference"
+    );
+    cluster.stop_workers();
+    h_c.join().expect("worker c");
+    h_d.join().expect("worker d");
 
     std::fs::remove_dir_all(&dir).ok();
     println!("\nreplay_drive OK: all backends byte-identical to the reference");

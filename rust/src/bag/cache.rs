@@ -1,11 +1,13 @@
-//! `BagCache` — process-wide registry of in-memory bags (paper §3.2).
+//! `BagCache` — a process-wide LRU byte cache (paper §3.2).
 //!
-//! Workers receive bag bytes over the wire (BinPipedRDD / RPC), drop them
-//! into the cache, and play them back through `MemoryChunkedFile` without
-//! any disk I/O. An LRU byte-capacity bound keeps the cache from eating
-//! the machine (the paper's 65 GB server is someone else's machine).
+//! Originally a registry of whole in-memory bags keyed by path; today
+//! it is the byte store behind the engine's data plane
+//! (`engine::data::DataPlane`), holding path-read bags, verified
+//! manifests, and content-addressed blocks under prefixed keys, all
+//! `Arc`-shared so hits are zero-copy. An LRU byte-capacity bound keeps
+//! the cache from eating the machine (the paper's 65 GB server is
+//! someone else's machine).
 
-use super::memory::MemoryChunkedFile;
 use crate::error::{Error, Result};
 use std::collections::HashMap;
 use std::sync::{Arc, Mutex};
@@ -51,13 +53,34 @@ impl BagCache {
     /// entries until the new entry fits. Oversized entries are rejected.
     pub fn put(&self, key: &str, data: Vec<u8>) -> Result<()> {
         let mut g = self.inner.lock().unwrap();
-        let size = data.len() as u64;
-        if size > g.capacity {
+        if data.len() as u64 > g.capacity {
             return Err(Error::Storage(format!(
-                "bag '{key}' ({size} B) exceeds cache capacity ({} B)",
+                "bag '{key}' ({} B) exceeds cache capacity ({} B)",
+                data.len(),
                 g.capacity
             )));
         }
+        Self::insert_locked(&mut g, key, data);
+        Ok(())
+    }
+
+    /// Insert and return the shared handle in one step — the data
+    /// plane's block-cache path (callers keep using the bytes whether or
+    /// not they were cached). An entry larger than the whole cache is
+    /// returned *uncached* instead of erroring: the fetch already paid
+    /// for the bytes, so the task should still run.
+    pub fn put_shared(&self, key: &str, data: Vec<u8>) -> Arc<Vec<u8>> {
+        let mut g = self.inner.lock().unwrap();
+        if data.len() as u64 > g.capacity {
+            return Arc::new(data);
+        }
+        Self::insert_locked(&mut g, key, data)
+    }
+
+    /// Insert under an already-held lock, evicting LRU entries until the
+    /// new entry fits; returns the shared handle.
+    fn insert_locked(g: &mut Inner, key: &str, data: Vec<u8>) -> Arc<Vec<u8>> {
+        let size = data.len() as u64;
         if let Some(old) = g.entries.remove(key) {
             g.used -= old.data.len() as u64;
         }
@@ -74,9 +97,11 @@ impl BagCache {
         }
         g.tick += 1;
         let tick = g.tick;
-        g.entries.insert(key.to_string(), Entry { data: Arc::new(data), last_used: tick });
+        let arc = Arc::new(data);
+        g.entries
+            .insert(key.to_string(), Entry { data: arc.clone(), last_used: tick });
         g.used += size;
-        Ok(())
+        arc
     }
 
     /// Fetch bag bytes; bumps LRU recency. None on miss.
@@ -97,18 +122,6 @@ impl BagCache {
             g.misses += 1;
         }
         found
-    }
-
-    /// Get a bag as a playable `MemoryChunkedFile`, loading it from disk
-    /// on miss (read-through).
-    pub fn open(&self, path: &str) -> Result<MemoryChunkedFile> {
-        if let Some(data) = self.get(path) {
-            return Ok(MemoryChunkedFile::from_bytes(&data));
-        }
-        let bytes = std::fs::read(path)
-            .map_err(|e| Error::Storage(format!("bag '{path}': {e}")))?;
-        self.put(path, bytes.clone())?;
-        Ok(MemoryChunkedFile::from_bytes(&bytes))
     }
 
     /// True when `key` is resident.
@@ -167,6 +180,20 @@ mod tests {
     fn oversized_entry_rejected() {
         let c = BagCache::new(10);
         assert!(c.put("big", vec![0u8; 11]).is_err());
+    }
+
+    #[test]
+    fn put_shared_returns_handle_and_tolerates_oversize() {
+        let c = BagCache::new(100);
+        let a = c.put_shared("k", vec![1, 2, 3]);
+        assert_eq!(*a, vec![1, 2, 3]);
+        assert!(c.contains("k"));
+        assert!(Arc::ptr_eq(&a, &c.get("k").unwrap()), "same allocation shared");
+        // oversized: bytes come back usable, nothing cached
+        let big = c.put_shared("big", vec![0u8; 101]);
+        assert_eq!(big.len(), 101);
+        assert!(!c.contains("big"));
+        assert!(c.used_bytes() <= 100);
     }
 
     #[test]

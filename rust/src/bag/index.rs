@@ -214,9 +214,15 @@ impl BagIndex {
         })
     }
 
-    /// [`BagIndex::scan`] over a disk bag.
+    /// [`BagIndex::scan`] over a disk bag. An unopenable file is a
+    /// typed error naming the path (the common operator mistake is a
+    /// path that does not resolve on this host — see the data plane's
+    /// `--publish` mode for shipping the bytes instead).
     pub fn scan_path(path: impl AsRef<Path>) -> Result<Self> {
-        let mut store = super::chunked_file::DiskChunkedFile::open(path)?;
+        let p = path.as_ref();
+        let mut store = super::chunked_file::DiskChunkedFile::open(p).map_err(|e| {
+            Error::Storage(format!("bag '{}': {e}", p.display()))
+        })?;
         Self::scan(&mut store)
     }
 

@@ -135,7 +135,10 @@ impl SimContext {
         Ok(self.rdd(
             paths
                 .into_iter()
-                .map(|path| Source::BagFile { path, topics: topics.clone() })
+                .map(|path| Source::BagFile {
+                    data: super::data::DataRef::path(path),
+                    topics: topics.clone(),
+                })
                 .collect(),
         ))
     }

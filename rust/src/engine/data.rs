@@ -1,0 +1,747 @@
+//! The engine's data plane: content-addressed task inputs shipped over
+//! RPC instead of resolved from worker-local paths.
+//!
+//! The paper's platform distributes simulation data *to* the compute
+//! nodes (Spark + an HDFS-like storage tier); nothing assumes a shared
+//! filesystem. This module closes that gap for our engine: a task names
+//! its bag input with a [`DataRef`] — either a worker-local `Path`
+//! (back-compat; single box or genuinely shared storage) or a
+//! `Manifest` (a `storage::ManifestId` plus the `host:port` of a *block
+//! peer* that serves the bytes). Workers resolve manifests through
+//! their [`DataPlane`]: an LRU byte cache (shared across all `--slots`
+//! connections of a worker process) backed by [`BlockClient`] fetches
+//! of individual content-addressed blocks over the
+//! [`super::rpc`] framing. Every transfer is verified: the manifest
+//! must hash to its id, and every block must hash to its address — a
+//! lying or corrupted peer is detected at fetch time, never replayed.
+//!
+//! The serving side is [`BlockServer`]: the driver publishes a bag into
+//! a `storage::BlockStore` (`publish_bag` → manifest id) and serves
+//! `FetchManifest`/`FetchBlock` requests from it, so a standalone fleet
+//! on other hosts needs zero shared state — the bag travels through the
+//! engine, exactly once per block per worker (cache hits after that).
+
+use crate::bag::BagCache;
+use crate::engine::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
+use crate::error::{Error, Result};
+use crate::storage::{
+    hex32, verify_block, BlockChunkStore, BlockStore, Manifest, ManifestId,
+};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use std::collections::HashMap;
+use std::net::{TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
+use std::time::Duration;
+
+/// Where a task's bag bytes come from.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum DataRef {
+    /// A filesystem path resolvable on the executing worker (the
+    /// original model: single box, or storage genuinely mounted
+    /// everywhere).
+    Path(String),
+    /// A content-addressed object: fetch the manifest and its blocks
+    /// from `peer` and verify everything against `id`. The bytes are
+    /// identical on every worker by construction.
+    Manifest {
+        /// Content address of the published object.
+        id: ManifestId,
+        /// `host:port` of the block peer serving it (normally the
+        /// driver's [`BlockServer`]).
+        peer: String,
+    },
+}
+
+impl DataRef {
+    /// Convenience constructor for the back-compat path form.
+    pub fn path(p: impl Into<String>) -> Self {
+        DataRef::Path(p.into())
+    }
+
+    /// Plan-time validation: malformed refs fail when the task is
+    /// built/decoded, not deep inside a worker's bag open.
+    pub fn validate(&self) -> Result<()> {
+        match self {
+            DataRef::Path(p) if p.is_empty() => {
+                Err(Error::Engine("data ref: empty bag path".into()))
+            }
+            DataRef::Manifest { peer, .. }
+                if peer.is_empty() || !peer.contains(':') =>
+            {
+                Err(Error::Engine(format!(
+                    "data ref: block peer '{peer}' is not host:port"
+                )))
+            }
+            _ => Ok(()),
+        }
+    }
+
+    /// Short description for logs / `Source::describe`.
+    pub fn describe(&self) -> String {
+        match self {
+            DataRef::Path(p) => p.clone(),
+            DataRef::Manifest { id, peer } => format!("mf:{}@{peer}", id.short()),
+        }
+    }
+
+    /// Serialize into a task-spec payload.
+    pub fn encode_into(&self, w: &mut ByteWriter) {
+        match self {
+            DataRef::Path(p) => {
+                w.put_u8(0);
+                w.put_str(p);
+            }
+            DataRef::Manifest { id, peer } => {
+                w.put_u8(1);
+                w.put_raw(&id.0);
+                w.put_str(peer);
+            }
+        }
+    }
+
+    /// Decode a [`DataRef::encode_into`] payload (validated).
+    pub fn decode(r: &mut ByteReader<'_>) -> Result<Self> {
+        let d = match r.get_u8()? {
+            0 => DataRef::Path(r.get_str()?),
+            1 => {
+                let id: [u8; 32] = r.get_raw(32)?.try_into().unwrap();
+                DataRef::Manifest { id: ManifestId(id), peer: r.get_str()? }
+            }
+            other => {
+                return Err(Error::Engine(format!("unknown data ref tag {other}")))
+            }
+        };
+        d.validate()?;
+        Ok(d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// client
+// ---------------------------------------------------------------------
+
+/// RPC client for a block peer: fetches manifests and blocks with
+/// end-to-end hash verification. Every error names the peer's
+/// `host:port` and — for block fetches — the manifest id and block
+/// index, mirroring the deploy layer's connect-error convention. All
+/// fetch failures are `Error::Engine` (retryable): a worker that loses
+/// its block peer mid-slice fails the *task*, which the scheduler may
+/// re-run elsewhere.
+pub struct BlockClient {
+    reader: std::io::BufReader<TcpStream>,
+    writer: std::io::BufWriter<TcpStream>,
+    /// The `host:port` this client dialed.
+    pub peer: String,
+}
+
+impl BlockClient {
+    /// Connect to a block peer, retrying with capped backoff until
+    /// `timeout`, then verify the RPC version via the `Hello`
+    /// handshake. Errors name the peer and the attempt count.
+    pub fn connect(peer: &str, timeout: Duration) -> Result<Self> {
+        let deadline = std::time::Instant::now() + timeout;
+        let mut backoff = Duration::from_millis(1);
+        let mut attempts = 0usize;
+        let stream = loop {
+            attempts += 1;
+            match TcpStream::connect(peer) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if std::time::Instant::now() >= deadline {
+                        return Err(Error::Engine(format!(
+                            "block peer {peer} not reachable after {attempts} \
+                             connect attempt(s) over {timeout:?}: {e}"
+                        )));
+                    }
+                    std::thread::sleep(backoff);
+                    backoff = (backoff * 2).min(Duration::from_millis(50));
+                }
+            }
+        };
+        stream.set_nodelay(true).ok();
+        // Bound the handshake by the remaining budget (a wedged peer
+        // must not hang the fetch forever).
+        let remaining = deadline
+            .saturating_duration_since(std::time::Instant::now())
+            .max(Duration::from_millis(1));
+        stream.set_read_timeout(Some(remaining)).ok();
+        let mut c = Self {
+            reader: std::io::BufReader::new(stream.try_clone()?),
+            writer: std::io::BufWriter::new(stream),
+            peer: peer.to_string(),
+        };
+        write_msg(&mut c.writer, &RpcMsg::Hello { version: RPC_VERSION })
+            .map_err(|e| c.ctx_err("handshake", &e))?;
+        match read_msg(&mut c.reader).map_err(|e| c.ctx_err("handshake", &e))? {
+            Some(RpcMsg::HelloOk { version, .. }) if version == RPC_VERSION => {}
+            Some(RpcMsg::HelloOk { version, .. }) => {
+                return Err(Error::Engine(format!(
+                    "block peer {peer} speaks rpc v{version} but this build needs \
+                     v{RPC_VERSION} — redeploy"
+                )));
+            }
+            other => {
+                return Err(Error::Engine(format!(
+                    "block peer {peer} answered handshake with {other:?}"
+                )))
+            }
+        }
+        // After the handshake, reads keep a *generous* cap instead of
+        // none at all: a loaded peer may be slow, but a peer that stalls
+        // mid-fetch (paused process, silent partition) must surface as a
+        // retryable task error, not hang the worker's task thread
+        // forever — the module's failure contract only holds if every
+        // read eventually returns.
+        c.reader
+            .get_ref()
+            .set_read_timeout(Some(BLOCK_READ_TIMEOUT))
+            .ok();
+        Ok(c)
+    }
+
+    fn ctx_err(&self, what: &str, e: &dyn std::fmt::Display) -> Error {
+        Error::Engine(format!("{what} from block peer {}: {e}", self.peer))
+    }
+
+    /// Fetch and verify the manifest for `id`: the returned manifest's
+    /// encoded bytes hash to `id`, so every block length and address in
+    /// it is authenticated.
+    pub fn fetch_manifest(&mut self, id: &ManifestId) -> Result<Manifest> {
+        let what = format!("manifest {}", id.short());
+        write_msg(&mut self.writer, &RpcMsg::FetchManifest { id: id.0 })
+            .map_err(|e| self.ctx_err(&what, &e))?;
+        let bytes = match read_msg(&mut self.reader).map_err(|e| self.ctx_err(&what, &e))? {
+            Some(RpcMsg::ManifestData(b)) => b,
+            Some(RpcMsg::FetchErr(m)) => return Err(self.ctx_err(&what, &m)),
+            None => return Err(self.ctx_err(&what, &"peer hung up mid-fetch")),
+            other => {
+                return Err(self.ctx_err(&what, &format!("unexpected reply {other:?}")))
+            }
+        };
+        if crate::util::sha256::digest(&bytes) != id.0 {
+            return Err(self.ctx_err(
+                &what,
+                &"manifest bytes do not hash to the requested id",
+            ));
+        }
+        Manifest::decode(&bytes).map_err(|e| self.ctx_err(&what, &e))
+    }
+
+    /// Fetch block `index` of `manifest` (whose id is `id`) and verify
+    /// it against the manifest's `BlockRef`. Failures name the manifest
+    /// id, block index, and this peer's `host:port`.
+    pub fn fetch_block(
+        &mut self,
+        id: &ManifestId,
+        index: u32,
+        manifest: &Manifest,
+    ) -> Result<Vec<u8>> {
+        let what = format!("block {index} of manifest {}", id.short());
+        let bref = manifest.blocks.get(index as usize).ok_or_else(|| {
+            self.ctx_err(
+                &what,
+                &format!("manifest has only {} block(s)", manifest.blocks.len()),
+            )
+        })?;
+        write_msg(
+            &mut self.writer,
+            &RpcMsg::FetchBlock { manifest: id.0, index },
+        )
+        .map_err(|e| self.ctx_err(&what, &e))?;
+        let bytes = match read_msg(&mut self.reader).map_err(|e| self.ctx_err(&what, &e))? {
+            Some(RpcMsg::BlockData(b)) => b,
+            Some(RpcMsg::FetchErr(m)) => return Err(self.ctx_err(&what, &m)),
+            None => return Err(self.ctx_err(&what, &"peer hung up mid-fetch")),
+            other => {
+                return Err(self.ctx_err(&what, &format!("unexpected reply {other:?}")))
+            }
+        };
+        verify_block(&bytes, bref, manifest.block_offset(index as usize))
+            .map_err(|e| self.ctx_err(&what, &e))?;
+        Ok(bytes)
+    }
+}
+
+// ---------------------------------------------------------------------
+// server
+// ---------------------------------------------------------------------
+
+/// Per-read socket cap on block fetches after the connect handshake
+/// (ample for a 4 MiB block on any sane link; a peer that cannot move
+/// one block in this long is treated as lost and the task retried).
+const BLOCK_READ_TIMEOUT: Duration = Duration::from_secs(30);
+
+/// Worker id a [`BlockServer`] reports in its `HelloOk` (distinguishes
+/// block peers from task workers in probes and logs).
+pub const BLOCK_PEER_ID: u64 = u64::MAX;
+
+/// A block peer: serves `FetchManifest`/`FetchBlock` requests from a
+/// [`BlockStore`] over the engine's RPC framing. The driver runs one
+/// next to each job that ships data by manifest; workers dial it with
+/// [`BlockClient`]. Serving is read-only and every block is verified
+/// before it leaves (local disk corruption is reported to the
+/// requester, not silently forwarded).
+pub struct BlockServer {
+    peer: String,
+    wake_addr: String,
+    shutdown: Arc<AtomicBool>,
+    accept_handle: Option<std::thread::JoinHandle<()>>,
+}
+
+impl BlockServer {
+    /// Bind `listen` (e.g. `"0.0.0.0:0"` for any port) and serve
+    /// `store` until [`BlockServer::stop`] / drop. `advertise_host` is
+    /// the hostname workers should dial (combined with the actually
+    /// bound port to form [`BlockServer::peer`]); pass `"127.0.0.1"`
+    /// for single-box runs, the driver's reachable address for fleets.
+    pub fn serve(
+        store: Arc<BlockStore>,
+        listen: &str,
+        advertise_host: &str,
+    ) -> Result<Self> {
+        let listener = TcpListener::bind(listen)
+            .map_err(|e| Error::Engine(format!("block server bind {listen}: {e}")))?;
+        let local = listener
+            .local_addr()
+            .map_err(|e| Error::Engine(format!("block server local_addr: {e}")))?;
+        let peer = format!("{advertise_host}:{}", local.port());
+        let wake_addr = if local.ip().is_unspecified() {
+            match local.ip() {
+                std::net::IpAddr::V4(_) => format!("127.0.0.1:{}", local.port()),
+                std::net::IpAddr::V6(_) => format!("[::1]:{}", local.port()),
+            }
+        } else {
+            local.to_string()
+        };
+        let shutdown = Arc::new(AtomicBool::new(false));
+        let flag = shutdown.clone();
+        let accept_handle = std::thread::Builder::new()
+            .name(format!("av-simd-block-server-{}", local.port()))
+            .spawn(move || {
+                for conn in listener.incoming() {
+                    if flag.load(Ordering::SeqCst) {
+                        break;
+                    }
+                    let Ok(stream) = conn else { continue };
+                    let store = store.clone();
+                    // Handlers are detached: they exit when the client
+                    // disconnects, and hold no listener resources.
+                    let _ = std::thread::Builder::new()
+                        .name("av-simd-block-conn".into())
+                        .spawn(move || {
+                            if let Err(e) = serve_block_conn(stream, &store) {
+                                crate::logmsg!("warn", "block server connection: {e}");
+                            }
+                        });
+                }
+            })
+            .map_err(|e| Error::Engine(format!("spawn block server thread: {e}")))?;
+        crate::logmsg!("info", "block server serving on {peer}");
+        Ok(Self { peer, wake_addr, shutdown, accept_handle: Some(accept_handle) })
+    }
+
+    /// The `host:port` workers should dial (advertised host + bound
+    /// port) — what goes into [`DataRef::Manifest`].
+    pub fn peer(&self) -> &str {
+        &self.peer
+    }
+
+    /// Stop accepting connections and release the port. In-flight
+    /// connections finish on their own threads.
+    pub fn stop(&mut self) {
+        if let Some(h) = self.accept_handle.take() {
+            self.shutdown.store(true, Ordering::SeqCst);
+            // wake the accept loop so it observes the flag (a failed
+            // dial means the loop already exited)
+            let _ = TcpStream::connect(&self.wake_addr);
+            let _ = h.join();
+        }
+    }
+}
+
+impl Drop for BlockServer {
+    fn drop(&mut self) {
+        self.stop();
+    }
+}
+
+/// One block-server connection: answer fetches until the client hangs
+/// up. Manifests are cached per connection so a client streaming every
+/// block of one object costs one manifest load, not N.
+fn serve_block_conn(stream: TcpStream, store: &BlockStore) -> Result<()> {
+    stream.set_nodelay(true).ok();
+    let mut reader = std::io::BufReader::new(stream.try_clone()?);
+    let mut writer = std::io::BufWriter::new(stream);
+    let mut manifests: HashMap<[u8; 32], Manifest> = HashMap::new();
+    loop {
+        match read_msg(&mut reader)? {
+            None => return Ok(()),
+            Some(RpcMsg::Ping) => write_msg(&mut writer, &RpcMsg::Pong)?,
+            Some(RpcMsg::Hello { version: _ }) => write_msg(
+                &mut writer,
+                &RpcMsg::HelloOk { version: RPC_VERSION, worker_id: BLOCK_PEER_ID },
+            )?,
+            Some(RpcMsg::Shutdown) => return Ok(()),
+            Some(RpcMsg::FetchManifest { id }) => {
+                let reply = match store.manifest(&ManifestId(id)) {
+                    Ok(m) => {
+                        let bytes = m.encode();
+                        manifests.insert(id, m);
+                        RpcMsg::ManifestData(bytes)
+                    }
+                    Err(e) => RpcMsg::FetchErr(e.to_string()),
+                };
+                write_msg(&mut writer, &reply)?;
+            }
+            Some(RpcMsg::FetchBlock { manifest, index }) => {
+                let reply = match fetch_block_reply(store, &mut manifests, manifest, index)
+                {
+                    Ok(bytes) => RpcMsg::BlockData(bytes),
+                    Err(e) => RpcMsg::FetchErr(e.to_string()),
+                };
+                write_msg(&mut writer, &reply)?;
+            }
+            Some(other) => {
+                return Err(Error::Engine(format!(
+                    "block server received unexpected message {other:?}"
+                )))
+            }
+        }
+    }
+}
+
+/// Resolve one `FetchBlock` request against the store (loading the
+/// manifest through the per-connection cache) and verify the block
+/// before serving it.
+fn fetch_block_reply(
+    store: &BlockStore,
+    manifests: &mut HashMap<[u8; 32], Manifest>,
+    manifest_id: [u8; 32],
+    index: u32,
+) -> Result<Vec<u8>> {
+    let m = match manifests.entry(manifest_id) {
+        std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
+        std::collections::hash_map::Entry::Vacant(v) => {
+            v.insert(store.manifest(&ManifestId(manifest_id))?)
+        }
+    };
+    let bref = m.blocks.get(index as usize).ok_or_else(|| {
+        Error::Storage(format!(
+            "manifest {} has {} block(s), index {index} out of range",
+            ManifestId(manifest_id).short(),
+            m.blocks.len()
+        ))
+    })?;
+    store.read_block(bref, m.block_offset(index as usize))
+}
+
+// ---------------------------------------------------------------------
+// worker-side data plane
+// ---------------------------------------------------------------------
+
+/// The worker's view of the data plane: resolves [`DataRef`]s into
+/// playable block stores through one LRU byte cache. The cache replaces
+/// the old path-keyed bag cache and is shared by all `--slots`
+/// connections of a worker process (every [`super::ops::TaskCtx`] clone
+/// shares it), holding three kinds of entries:
+///
+/// * `path:<p>` — whole bag files read from a worker-local path;
+/// * `mf:<hex>` — verified manifest bytes;
+/// * `blk:<hex>` — verified blocks, keyed by content address, so two
+///   manifests sharing blocks dedupe in RAM and eviction is per-block.
+///
+/// Resolution is zero-copy on hits: cached entries are `Arc`-shared
+/// into the returned [`BlockChunkStore`] (the old path cache copied the
+/// whole bag into a fresh buffer on every open).
+#[derive(Clone)]
+pub struct DataPlane {
+    cache: BagCache,
+    fetch_timeout: Duration,
+    /// Per-manifest single-flight locks: concurrent first opens of the
+    /// same manifest (a multi-slot worker receiving several slices of a
+    /// just-published bag at once) serialize, so a cold bag crosses the
+    /// wire once per worker process — the followers find every block
+    /// cached. Entries are bounded by the number of distinct manifests
+    /// this worker has ever resolved (tiny).
+    inflight: Arc<std::sync::Mutex<HashMap<String, Arc<std::sync::Mutex<()>>>>>,
+}
+
+impl DataPlane {
+    /// Data plane with an LRU byte budget of `capacity_bytes`. The
+    /// default fetch-connect budget is short (2 s): unlike task
+    /// workers, a block peer is up *before* any task referencing it is
+    /// dispatched, so an unreachable peer should fail the task quickly
+    /// and let the scheduler's retry policy take over.
+    pub fn new(capacity_bytes: u64) -> Self {
+        Self {
+            cache: BagCache::new(capacity_bytes),
+            fetch_timeout: Duration::from_secs(2),
+            inflight: Arc::new(std::sync::Mutex::new(HashMap::new())),
+        }
+    }
+
+    /// Override the per-resolution connect budget; builder-style.
+    pub fn with_fetch_timeout(mut self, t: Duration) -> Self {
+        self.fetch_timeout = t;
+        self
+    }
+
+    /// The underlying byte cache (stats, direct seeding in tests).
+    pub fn cache(&self) -> &BagCache {
+        &self.cache
+    }
+
+    /// Resolve a data ref into a playable store. `Path` refs read
+    /// through the cache from the local filesystem; `Manifest` refs
+    /// fetch any missing manifest/blocks from the ref's peer, verify
+    /// them, and cache them by content address.
+    pub fn open(&self, data: &DataRef) -> Result<BlockChunkStore> {
+        data.validate()?;
+        match data {
+            DataRef::Path(p) => self.open_path(p),
+            DataRef::Manifest { id, peer } => self.open_manifest(id, peer),
+        }
+    }
+
+    fn open_path(&self, path: &str) -> Result<BlockChunkStore> {
+        let key = format!("path:{path}");
+        if let Some(bytes) = self.cache.get(&key) {
+            return Ok(BlockChunkStore::from_arc(bytes));
+        }
+        let bytes = std::fs::read(path)
+            .map_err(|e| Error::Storage(format!("bag '{path}': {e}")))?;
+        Ok(BlockChunkStore::from_arc(self.cache.put_shared(&key, bytes)))
+    }
+
+    fn open_manifest(&self, id: &ManifestId, peer: &str) -> Result<BlockChunkStore> {
+        // single-flight per manifest: the first resolver fetches, the
+        // rest wait and then hit the cache block by block (a poisoned
+        // lock just means an earlier resolver panicked — proceed)
+        let gate = {
+            let mut g = self.inflight.lock().unwrap();
+            g.entry(id.hex())
+                .or_insert_with(|| Arc::new(std::sync::Mutex::new(())))
+                .clone()
+        };
+        let _resolving = gate.lock().unwrap_or_else(|p| p.into_inner());
+        // one lazily-opened connection per resolution: a fully cached
+        // object never dials the peer at all
+        let mut client: Option<BlockClient> = None;
+        let mf_key = format!("mf:{}", id.hex());
+        let manifest = match self.cache.get(&mf_key) {
+            Some(bytes) => Manifest::decode(&bytes)?,
+            None => {
+                let m = self.client(&mut client, peer, id)?.fetch_manifest(id)?;
+                self.cache.put_shared(&mf_key, m.encode());
+                m
+            }
+        };
+        let mut blocks = Vec::with_capacity(manifest.blocks.len());
+        for (i, b) in manifest.blocks.iter().enumerate() {
+            let key = format!("blk:{}", hex32(&b.id));
+            let arc = match self.cache.get(&key) {
+                Some(a) => a,
+                None => {
+                    let bytes = self
+                        .client(&mut client, peer, id)?
+                        .fetch_block(id, i as u32, &manifest)?;
+                    self.cache.put_shared(&key, bytes)
+                }
+            };
+            blocks.push(arc);
+        }
+        Ok(BlockChunkStore::new(blocks))
+    }
+
+    /// Lazily connect the per-resolution client; a connect failure is
+    /// wrapped with the manifest being resolved, so even "peer
+    /// unreachable" errors name what the worker was trying to fetch.
+    fn client<'a>(
+        &self,
+        slot: &'a mut Option<BlockClient>,
+        peer: &str,
+        id: &ManifestId,
+    ) -> Result<&'a mut BlockClient> {
+        if slot.is_none() {
+            *slot = Some(
+                BlockClient::connect(peer, self.fetch_timeout).map_err(|e| {
+                    Error::Engine(format!("fetching manifest {}: {e}", id.short()))
+                })?,
+            );
+        }
+        Ok(slot.as_mut().expect("just filled"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn tmp_dir(tag: &str) -> std::path::PathBuf {
+        let dir = std::env::temp_dir().join(format!(
+            "av_simd_data_{tag}_{}_{:x}",
+            std::process::id(),
+            crate::util::now_nanos()
+        ));
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    fn published_store(
+        dir: &std::path::Path,
+        data: &[u8],
+    ) -> (Arc<BlockStore>, ManifestId) {
+        let store = BlockStore::open(dir).unwrap().with_block_size(1024);
+        let (id, _) = store.publish(data).unwrap();
+        (Arc::new(store), id)
+    }
+
+    #[test]
+    fn data_ref_codec_roundtrips_and_validates() {
+        let refs = [
+            DataRef::path("/data/drive.bag"),
+            DataRef::Manifest {
+                id: ManifestId([9u8; 32]),
+                peer: "10.0.0.1:7199".into(),
+            },
+        ];
+        for d in refs {
+            let mut w = ByteWriter::new();
+            d.encode_into(&mut w);
+            let buf = w.into_vec();
+            let mut r = ByteReader::new(&buf);
+            assert_eq!(DataRef::decode(&mut r).unwrap(), d);
+        }
+        // invalid refs are rejected at decode time
+        for bad in [
+            DataRef::Path(String::new()),
+            DataRef::Manifest { id: ManifestId([0; 32]), peer: "noport".into() },
+            DataRef::Manifest { id: ManifestId([0; 32]), peer: String::new() },
+        ] {
+            assert!(bad.validate().is_err(), "{bad:?}");
+            let mut w = ByteWriter::new();
+            bad.encode_into(&mut w);
+            let buf = w.into_vec();
+            let mut r = ByteReader::new(&buf);
+            assert!(DataRef::decode(&mut r).is_err(), "{bad:?}");
+        }
+    }
+
+    #[test]
+    fn path_open_is_cached_and_zero_copy() {
+        let dir = tmp_dir("path");
+        let path = dir.join("x.bin");
+        let data: Vec<u8> = (0..5000).map(|i| (i % 253) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+        let dp = DataPlane::new(1 << 20);
+        let p = path.to_str().unwrap();
+        use crate::bag::ChunkStore;
+        let mut s1 = dp.open(&DataRef::path(p)).unwrap();
+        assert_eq!(s1.read_at(0, data.len()).unwrap(), data);
+        let mut s2 = dp.open(&DataRef::path(p)).unwrap();
+        assert_eq!(s2.read_at(100, 50).unwrap(), &data[100..150]);
+        let (hits, misses, _) = dp.cache().stats();
+        assert_eq!((hits, misses), (1, 1));
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn manifest_open_fetches_verifies_and_caches() {
+        use crate::bag::ChunkStore;
+        let dir = tmp_dir("fetch");
+        let data: Vec<u8> = (0..10_000).map(|i| (i % 247) as u8).collect();
+        let (store, id) = published_store(&dir, &data);
+        let mut server = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+        let dref = DataRef::Manifest { id, peer: server.peer().to_string() };
+
+        let dp = DataPlane::new(1 << 20);
+        let mut obj = dp.open(&dref).unwrap();
+        assert_eq!(obj.len() as usize, data.len());
+        assert_eq!(obj.read_at(0, data.len()).unwrap(), data);
+
+        // second resolution: fully cached — works even with the peer gone
+        server.stop();
+        let mut again = dp.open(&dref).unwrap();
+        assert_eq!(again.read_at(500, 600).unwrap(), &data[500..1100]);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn blocks_dedupe_across_manifests_in_the_cache() {
+        let dir = tmp_dir("dedupe");
+        let store = BlockStore::open(&dir).unwrap().with_block_size(1024);
+        // two objects sharing their first two blocks
+        let mut a = vec![7u8; 2048];
+        let mut b = vec![7u8; 2048];
+        a.extend_from_slice(&[1u8; 512]);
+        b.extend_from_slice(&[2u8; 512]);
+        let (id_a, _) = store.publish(&a).unwrap();
+        let (id_b, _) = store.publish(&b).unwrap();
+        let server =
+            BlockServer::serve(Arc::new(store), "127.0.0.1:0", "127.0.0.1").unwrap();
+        let dp = DataPlane::new(1 << 20);
+        dp.open(&DataRef::Manifest { id: id_a, peer: server.peer().to_string() })
+            .unwrap();
+        let used_after_a = dp.cache().used_bytes();
+        dp.open(&DataRef::Manifest { id: id_b, peer: server.peer().to_string() })
+            .unwrap();
+        let grew = dp.cache().used_bytes() - used_after_a;
+        // object b adds only its manifest + its one distinct block —
+        // identical content (vec![7; 2048] is one deduped block id) rides
+        // the cache
+        assert!(grew < 1024 + 256, "cache grew by {grew} — blocks not deduped");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn fetch_errors_name_manifest_index_and_peer() {
+        let dir = tmp_dir("err");
+        let (store, id) = published_store(&dir, &[5u8; 3000]);
+        let server = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+        let peer = server.peer().to_string();
+
+        // bad index → server-side FetchErr carried back with context
+        let mut c = BlockClient::connect(&peer, Duration::from_secs(5)).unwrap();
+        let manifest = c.fetch_manifest(&id).unwrap();
+        let fat = Manifest {
+            total_len: manifest.total_len + 1024,
+            blocks: {
+                let mut b = manifest.blocks.clone();
+                let first = b[0];
+                b.push(first);
+                b
+            },
+        };
+        let err = c.fetch_block(&id, fat.blocks.len() as u32 - 1, &fat).unwrap_err();
+        let msg = err.to_string();
+        assert!(err.is_retryable(), "fetch errors must be retryable: {msg}");
+        assert!(msg.contains(&id.short()), "manifest id lost: {msg}");
+        assert!(msg.contains("block 3"), "block index lost: {msg}");
+        assert!(msg.contains(&peer), "peer lost: {msg}");
+
+        // unknown manifest → FetchErr naming the id
+        let ghost = ManifestId(crate::util::sha256::digest(b"ghost"));
+        let err = c.fetch_manifest(&ghost).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains(&ghost.short()), "{msg}");
+        assert!(msg.contains(&peer), "{msg}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn lost_peer_is_a_retryable_error_naming_the_peer() {
+        // reserve a port, then close it — nothing listens
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let peer = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let id = ManifestId(crate::util::sha256::digest(b"unreachable"));
+        let dp = DataPlane::new(1 << 20);
+        let err = dp
+            .open(&DataRef::Manifest { id, peer: peer.clone() })
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(err.is_retryable(), "lost peer must be retryable: {msg}");
+        assert!(msg.contains(&peer), "peer lost from error: {msg}");
+    }
+}

@@ -151,6 +151,15 @@ pub struct ClusterSpec {
     /// `target/release/av-simd`); `None` means the fleet is launched by
     /// something else (systemd, k8s, ssh loops).
     pub launch_program: Option<String>,
+    /// Block-store root on the *driver* host for data-plane publishes
+    /// (`[storage] root = ...`): `av-simd replay --publish` against
+    /// this spec publishes the bag there and serves it to the fleet.
+    pub store_root: Option<String>,
+    /// Hostname workers should dial to reach the driver's block server
+    /// (`[storage] advertise = ...`). Defaults to `127.0.0.1`, which is
+    /// only right for single-box fleets — multi-host manifests must set
+    /// the driver's reachable address.
+    pub advertise_host: Option<String>,
 }
 
 impl ClusterSpec {
@@ -190,6 +199,8 @@ impl ClusterSpec {
         let mut connect_timeout = Duration::from_secs(20);
         let mut artifact_dir = "artifacts".to_string();
         let mut launch_program = None;
+        let mut store_root = None;
+        let mut advertise_host = None;
         let mut hosts: Vec<String> = Vec::new();
         let mut capacity = 1usize;
         for (key, val) in doc {
@@ -202,6 +213,8 @@ impl ClusterSpec {
                 "workers.hosts" => hosts = val.as_str_array()?.to_vec(),
                 "workers.capacity" => capacity = val.as_usize()?,
                 "launch.program" => launch_program = Some(val.as_str()?.to_string()),
+                "storage.root" => store_root = Some(val.as_str()?.to_string()),
+                "storage.advertise" => advertise_host = Some(val.as_str()?.to_string()),
                 other => {
                     return Err(Error::Config(format!(
                         "cluster spec: unknown key '{other}'"
@@ -239,7 +252,15 @@ impl ClusterSpec {
                 "cluster spec: workers.hosts must name at least one endpoint".into(),
             ));
         }
-        Ok(Self { name, workers, connect_timeout, artifact_dir, launch_program })
+        Ok(Self {
+            name,
+            workers,
+            connect_timeout,
+            artifact_dir,
+            launch_program,
+            store_root,
+            advertise_host,
+        })
     }
 
     /// Dial strings for every endpoint, in manifest order.
@@ -418,7 +439,20 @@ mod tests {
         assert_eq!(spec.connect_timeout, Duration::from_secs(20));
         assert_eq!(spec.artifact_dir, "artifacts");
         assert!(spec.launch_program.is_none());
+        assert!(spec.store_root.is_none());
+        assert!(spec.advertise_host.is_none());
         assert!(spec.workers[0].is_local());
+    }
+
+    #[test]
+    fn storage_section_parses() {
+        let spec = ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"10.0.0.2:7077\"]\n\
+             [storage]\nroot = \"/srv/av-store\"\nadvertise = \"10.0.0.1\"\n",
+        )
+        .unwrap();
+        assert_eq!(spec.store_root.as_deref(), Some("/srv/av-store"));
+        assert_eq!(spec.advertise_host.as_deref(), Some("10.0.0.1"));
     }
 
     #[test]
@@ -501,6 +535,8 @@ mod tests {
             connect_timeout: Duration::from_millis(50),
             artifact_dir: "artifacts".into(),
             launch_program: None,
+            store_root: None,
+            advertise_host: None,
         };
         let health = probe(&spec);
         assert_eq!(health.len(), 1);

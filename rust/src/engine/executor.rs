@@ -13,10 +13,12 @@ use crate::msg::{Image, Message, Time};
 pub fn load_source(ctx: &TaskCtx, source: &Source) -> Result<Vec<Record>> {
     match source {
         Source::Inline { records } => Ok(records.clone()),
-        Source::BagFile { path, topics } => {
-            // Read through the worker's in-memory bag cache (paper §3.2):
-            // first touch loads from disk, repeats replay from RAM.
-            let store = ctx.cache.open(path)?;
+        Source::BagFile { data, topics } => {
+            // Resolve through the worker's data plane (paper §3.2's
+            // cache, generalized): a path reads from local disk on
+            // first touch, a manifest fetches verified blocks from its
+            // peer; either way repeats replay from RAM.
+            let store = ctx.data.open(data)?;
             let mut reader = BagReader::open(store)?;
             let topic_refs: Option<Vec<&str>> = if topics.is_empty() {
                 None
@@ -60,11 +62,15 @@ pub fn load_source(ctx: &TaskCtx, source: &Source) -> Result<Vec<Record>> {
             }
             Ok(scenarios.clone())
         }
-        Source::BagSlices { path, topics, slices } => {
+        Source::BagSlices { data, topics, slices } => {
             // Same fail-fast contract as Scenarios: a poisoned slice
             // record is data corruption, not a transient fault. Each
-            // output record is a self-contained slice job (path + topics
-            // + slice) so the `run_replay` op needs no side channel.
+            // output record is a self-contained slice job (data ref +
+            // topics + slice) so the `run_replay` op needs no side
+            // channel. An invalid data ref is equally permanent, so it
+            // maps to non-retryable Error::Sim here.
+            data.validate()
+                .map_err(|e| Error::Sim(format!("bag slices data ref is invalid: {e}")))?;
             let mut records = Vec::with_capacity(slices.len());
             for (i, s) in slices.iter().enumerate() {
                 let slice = crate::sim::replay::ReplaySlice::decode(s).map_err(|e| {
@@ -72,7 +78,7 @@ pub fn load_source(ctx: &TaskCtx, source: &Source) -> Result<Vec<Record>> {
                 })?;
                 records.push(
                     crate::sim::replay::SliceJob {
-                        path: path.clone(),
+                        data: data.clone(),
                         topics: topics.clone(),
                         slice,
                     }
@@ -196,7 +202,7 @@ mod tests {
             task_id: 0,
             attempt: 0,
             source: Source::BagFile {
-                path: path.to_string_lossy().into_owned(),
+                data: super::super::data::DataRef::path(path.to_string_lossy().into_owned()),
                 topics: vec![],
             },
             ops: vec![OpCall::new("take_payload", vec![])],
@@ -204,7 +210,7 @@ mod tests {
         };
         assert_eq!(run_task(&ctx, &reg, &spec).unwrap(), TaskOutput::Count(6));
         assert_eq!(run_task(&ctx, &reg, &spec).unwrap(), TaskOutput::Count(6));
-        let (hits, misses, _) = ctx.cache.stats();
+        let (hits, misses, _) = ctx.data.cache().stats();
         assert_eq!(misses, 1, "first open misses");
         assert_eq!(hits, 1, "second open hits the memory cache");
         std::fs::remove_file(&path).ok();

@@ -2,6 +2,9 @@
 //!
 //! * [`plan`] — serializable task descriptions (sources, op chains,
 //!   actions) — the closure-serialization substitute.
+//! * [`data`] — the content-addressed data plane: [`data::DataRef`]
+//!   task inputs, the worker-side [`data::DataPlane`] block cache, and
+//!   the [`data::BlockServer`]/[`data::BlockClient`] fetch RPC.
 //! * [`ops`] — the operator registry shared by driver and workers.
 //! * [`executor`] — task execution (source → ops → action).
 //! * [`cluster`] / [`remote`] — thread-pool and worker-process clusters.
@@ -39,6 +42,7 @@
 
 pub mod cluster;
 pub mod context;
+pub mod data;
 pub mod deploy;
 pub mod executor;
 pub mod ops;
@@ -51,6 +55,7 @@ pub mod worker;
 
 pub use cluster::{Cluster, LocalCluster};
 pub use context::{Rdd, SimContext};
+pub use data::{BlockClient, BlockServer, DataPlane, DataRef};
 pub use deploy::{ClusterSpec, WorkerEndpoint, WorkerHealth};
 pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};

@@ -7,8 +7,8 @@
 //! directly, in standalone mode the op must exist in the worker binary,
 //! exactly like Spark needing the application jar on every executor).
 
+use super::data::DataPlane;
 use super::plan::{OpCall, PlayedRecord, Record};
-use crate::bag::BagCache;
 use crate::error::{Error, Result};
 use crate::pipe::{self, ChildSpec, LogicRegistry, PipeItem};
 use std::collections::HashMap;
@@ -17,8 +17,12 @@ use std::sync::{Arc, RwLock};
 /// Services available to operators while running a task.
 #[derive(Clone)]
 pub struct TaskCtx {
-    /// Worker-local in-memory bag cache (paper §3.2).
-    pub cache: BagCache,
+    /// Worker-local data plane (paper §3.2's in-memory cache,
+    /// generalized): resolves `DataRef`s — bags by path *or*
+    /// content-addressed blocks fetched from a block peer — through one
+    /// LRU byte cache shared by every clone of this context (all task
+    /// slots of a worker process).
+    pub data: DataPlane,
     /// AOT artifact directory for PJRT-backed ops.
     pub artifact_dir: String,
     /// Worker id (0-based) for logs and data-gen seeding.
@@ -31,7 +35,7 @@ impl TaskCtx {
     /// Context for worker `worker_id` with artifacts under `artifact_dir`.
     pub fn new(worker_id: usize, artifact_dir: impl Into<String>) -> Self {
         Self {
-            cache: BagCache::new(1 << 30),
+            data: DataPlane::new(1 << 30),
             artifact_dir: artifact_dir.into(),
             worker_id,
             logic: crate::full_logic_registry(),

@@ -10,6 +10,7 @@
 //! Records are raw byte vectors (`RDD[Bytes]`, exactly the paper's §3.1
 //! model); typed views are layered on top by the ops themselves.
 
+use super::data::DataRef;
 use crate::error::{Error, Result};
 use crate::msg::Time;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -22,9 +23,16 @@ pub type Record = Vec<u8>;
 pub enum Source {
     /// Records shipped inline with the task (parallelize / shuffled data).
     Inline { records: Vec<Record> },
-    /// One bag file; records are encoded [`PlayedRecord`]s, optionally
-    /// filtered to `topics` (empty = all).
-    BagFile { path: String, topics: Vec<String> },
+    /// One bag; records are encoded [`PlayedRecord`]s, optionally
+    /// filtered to `topics` (empty = all). `data` names the bytes — a
+    /// worker-local path or a content-addressed manifest fetched
+    /// through the data plane (see [`DataRef`]).
+    BagFile {
+        /// Where the bag bytes come from.
+        data: DataRef,
+        /// Topic filter (empty = all topics).
+        topics: Vec<String>,
+    },
     /// Synthetic camera frames generated on the worker (scalability
     /// workloads without disk); records are encoded `msg::Image`s.
     SynthFrames { seed: u64, count: u32, width: u32, height: u32 },
@@ -36,14 +44,15 @@ pub enum Source {
     /// an episode.
     Scenarios { scenarios: Vec<Record> },
     /// One shard of a distributed bag replay (see `sim::replay`): time
-    /// slices of the bag at `path`, filtered to `topics` (empty = all).
-    /// `slices` are encoded [`crate::sim::replay::ReplaySlice`]s;
+    /// slices of the bag named by `data`, filtered to `topics` (empty =
+    /// all). `slices` are encoded [`crate::sim::replay::ReplaySlice`]s;
     /// loading emits one self-contained slice-job record per slice
-    /// (path + topics + slice), validated up front so a poisoned slice
-    /// fails fast on the worker.
+    /// (data ref + topics + slice), validated up front so a poisoned
+    /// slice fails fast on the worker.
     BagSlices {
-        /// Bag file the slices replay (read through the worker cache).
-        path: String,
+        /// Bag the slices replay (resolved through the worker's data
+        /// plane — local path or manifest fetch).
+        data: DataRef,
         /// Topic filter shared by every slice (empty = all topics).
         topics: Vec<String>,
         /// Encoded [`crate::sim::replay::ReplaySlice`] records.
@@ -61,9 +70,9 @@ impl Source {
                     w.put_bytes(r);
                 }
             }
-            Source::BagFile { path, topics } => {
+            Source::BagFile { data, topics } => {
                 w.put_u8(1);
-                w.put_str(path);
+                data.encode_into(w);
                 w.put_varint(topics.len() as u64);
                 for t in topics {
                     w.put_str(t);
@@ -88,9 +97,9 @@ impl Source {
                     w.put_bytes(s);
                 }
             }
-            Source::BagSlices { path, topics, slices } => {
+            Source::BagSlices { data, topics, slices } => {
                 w.put_u8(5);
-                w.put_str(path);
+                data.encode_into(w);
                 w.put_varint(topics.len() as u64);
                 for t in topics {
                     w.put_str(t);
@@ -114,13 +123,15 @@ impl Source {
                 Ok(Source::Inline { records })
             }
             1 => {
-                let path = r.get_str()?;
+                let data = DataRef::decode(r)?;
                 let n = r.get_varint()? as usize;
-                let mut topics = Vec::with_capacity(n);
+                // capacity capped like the BagSlices arm: a corrupt
+                // frame's varint must not drive a huge pre-allocation
+                let mut topics = Vec::with_capacity(n.min(1 << 10));
                 for _ in 0..n {
                     topics.push(r.get_str()?);
                 }
-                Ok(Source::BagFile { path, topics })
+                Ok(Source::BagFile { data, topics })
             }
             2 => Ok(Source::SynthFrames {
                 seed: r.get_u64()?,
@@ -138,7 +149,7 @@ impl Source {
                 Ok(Source::Scenarios { scenarios })
             }
             5 => {
-                let path = r.get_str()?;
+                let data = DataRef::decode(r)?;
                 let n = r.get_varint()? as usize;
                 let mut topics = Vec::with_capacity(n.min(1 << 10));
                 for _ in 0..n {
@@ -149,7 +160,7 @@ impl Source {
                 for _ in 0..n {
                     slices.push(r.get_bytes_vec()?);
                 }
-                Ok(Source::BagSlices { path, topics, slices })
+                Ok(Source::BagSlices { data, topics, slices })
             }
             other => Err(Error::Engine(format!("unknown source tag {other}"))),
         }
@@ -159,14 +170,14 @@ impl Source {
     pub fn describe(&self) -> String {
         match self {
             Source::Inline { records } => format!("inline[{}]", records.len()),
-            Source::BagFile { path, .. } => format!("bag:{path}"),
+            Source::BagFile { data, .. } => format!("bag:{}", data.describe()),
             Source::SynthFrames { count, width, height, .. } => {
                 format!("synth[{count} x {width}x{height}]")
             }
             Source::Range { start, end } => format!("range[{start}..{end})"),
             Source::Scenarios { scenarios } => format!("scenarios[{}]", scenarios.len()),
-            Source::BagSlices { path, slices, .. } => {
-                format!("bag-slices:{path}[{}]", slices.len())
+            Source::BagSlices { data, slices, .. } => {
+                format!("bag-slices:{}[{}]", data.describe(), slices.len())
             }
         }
     }
@@ -430,7 +441,10 @@ mod tests {
             job_id: 9,
             task_id: 3,
             attempt: 1,
-            source: Source::BagFile { path: "/data/x.bag".into(), topics: vec!["/camera".into()] },
+            source: Source::BagFile {
+                data: DataRef::path("/data/x.bag"),
+                topics: vec!["/camera".into()],
+            },
             ops: vec![
                 OpCall::new("take_payload", vec![]),
                 OpCall::new("binpipe", b"rotate90".to_vec()),
@@ -449,19 +463,51 @@ mod tests {
     fn all_sources_roundtrip() {
         for source in [
             Source::Inline { records: vec![vec![1], vec![2, 3]] },
-            Source::BagFile { path: "p".into(), topics: vec![] },
+            Source::BagFile { data: DataRef::path("p"), topics: vec![] },
+            Source::BagFile {
+                data: DataRef::Manifest {
+                    id: crate::storage::ManifestId([0xA5; 32]),
+                    peer: "10.0.0.9:7199".into(),
+                },
+                topics: vec!["/camera".into()],
+            },
             Source::SynthFrames { seed: 7, count: 10, width: 64, height: 48 },
             Source::Range { start: 5, end: 50 },
             Source::Scenarios { scenarios: vec![vec![0, 1, 2], vec![]] },
             Source::BagSlices {
-                path: "/data/drive.bag".into(),
+                data: DataRef::path("/data/drive.bag"),
                 topics: vec!["/camera".into(), "/lidar".into()],
                 slices: vec![vec![1, 2, 3], vec![4]],
+            },
+            Source::BagSlices {
+                data: DataRef::Manifest {
+                    id: crate::storage::ManifestId([3; 32]),
+                    peer: "127.0.0.1:9000".into(),
+                },
+                topics: vec![],
+                slices: vec![vec![9; 28]],
             },
         ] {
             let s = TaskSpec { source: source.clone(), ..spec() };
             assert_eq!(TaskSpec::decode(&s.encode()).unwrap().source, source);
         }
+    }
+
+    #[test]
+    fn invalid_data_ref_rejected_at_decode() {
+        // a BagFile source whose data ref names a peer without a port
+        // must fail the plan-time validation inside decode
+        let s = TaskSpec {
+            source: Source::BagFile {
+                data: DataRef::Manifest {
+                    id: crate::storage::ManifestId([1; 32]),
+                    peer: "noport".into(),
+                },
+                topics: vec![],
+            },
+            ..spec()
+        };
+        assert!(TaskSpec::decode(&s.encode()).is_err());
     }
 
     #[test]

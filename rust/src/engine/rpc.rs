@@ -8,7 +8,15 @@
 //! version + worker id — the deployment health check), then sends
 //! `RunTask` frames which the worker answers with `TaskOk`/`TaskErr`.
 //! `Ping`/`Pong` is the liveness probe used while waiting for worker
-//! startup. See `docs/ARCHITECTURE.md` for the full wire-format spec.
+//! startup.
+//!
+//! The same framing carries the *data plane* (see `engine::data`): a
+//! worker resolving a `DataRef::Manifest` task input dials the block
+//! peer named in the ref and issues `FetchManifest`/`FetchBlock`
+//! requests, answered with `ManifestData`/`BlockData` (or `FetchErr`).
+//! Transfers are hash-verified by the requester — a block that does not
+//! hash to its content address is rejected no matter who served it.
+//! See `docs/ARCHITECTURE.md` for the full wire-format spec.
 
 use crate::error::{Error, Result};
 use std::io::{Read, Write};
@@ -20,7 +28,11 @@ pub const MAX_FRAME: u32 = 1 << 30;
 /// frame or payload change; the driver refuses workers that answer
 /// [`RpcMsg::Hello`] with a different version, so a mixed-version fleet
 /// fails loudly at connect time instead of corrupting task payloads.
-pub const RPC_VERSION: u32 = 1;
+///
+/// v2: the data-plane frames ([`RpcMsg::FetchManifest`] /
+/// [`RpcMsg::FetchBlock`] and replies) plus `DataRef`-carrying task
+/// sources — v1 workers cannot decode v2 `TaskSpec` payloads.
+pub const RPC_VERSION: u32 = 2;
 
 /// RPC message.
 #[derive(Debug, Clone, PartialEq)]
@@ -49,9 +61,35 @@ pub enum RpcMsg {
         /// The worker's protocol version.
         version: u32,
         /// The worker's `--id` (diagnostic: lets a deploy probe map
-        /// endpoints back to launch manifests).
+        /// endpoints back to launch manifests). Block-peer servers
+        /// answer with `u64::MAX`.
         worker_id: u64,
     },
+    /// Requester → block peer: send the manifest bytes for this
+    /// 32-byte manifest id (see `storage::ManifestId`).
+    FetchManifest {
+        /// SHA-256 content address of the manifest.
+        id: [u8; 32],
+    },
+    /// Block peer → requester: the encoded `storage::Manifest`. The
+    /// requester verifies the bytes hash to the requested id.
+    ManifestData(Vec<u8>),
+    /// Requester → block peer: send block `index` of manifest
+    /// `manifest`. Indexing by (manifest, position) rather than bare
+    /// block id keeps the server lookup O(1) against a manifest it has
+    /// already loaded and lets fetch errors name the object they broke.
+    FetchBlock {
+        /// Manifest the block belongs to.
+        manifest: [u8; 32],
+        /// 0-based block position within the manifest.
+        index: u32,
+    },
+    /// Block peer → requester: the raw block bytes. The requester
+    /// verifies length and SHA-256 against the manifest's `BlockRef`.
+    BlockData(Vec<u8>),
+    /// Block peer → requester: a fetch failed (missing manifest, bad
+    /// index, corrupt block on the serving side).
+    FetchErr(String),
 }
 
 impl RpcMsg {
@@ -65,16 +103,22 @@ impl RpcMsg {
             RpcMsg::Shutdown => 6,
             RpcMsg::Hello { .. } => 7,
             RpcMsg::HelloOk { .. } => 8,
+            RpcMsg::FetchManifest { .. } => 9,
+            RpcMsg::ManifestData(_) => 10,
+            RpcMsg::FetchBlock { .. } => 11,
+            RpcMsg::BlockData(_) => 12,
+            RpcMsg::FetchErr(_) => 13,
         }
     }
 }
 
 /// Write one frame.
 pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
-    let mut scratch = [0u8; 12];
+    let mut scratch = [0u8; 36];
     let payload: &[u8] = match msg {
         RpcMsg::RunTask(b) | RpcMsg::TaskOk(b) => b,
-        RpcMsg::TaskErr(s) => s.as_bytes(),
+        RpcMsg::ManifestData(b) | RpcMsg::BlockData(b) => b,
+        RpcMsg::TaskErr(s) | RpcMsg::FetchErr(s) => s.as_bytes(),
         RpcMsg::Hello { version } => {
             scratch[..4].copy_from_slice(&version.to_le_bytes());
             &scratch[..4]
@@ -83,6 +127,15 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
             scratch[..4].copy_from_slice(&version.to_le_bytes());
             scratch[4..12].copy_from_slice(&worker_id.to_le_bytes());
             &scratch[..12]
+        }
+        RpcMsg::FetchManifest { id } => {
+            scratch[..32].copy_from_slice(id);
+            &scratch[..32]
+        }
+        RpcMsg::FetchBlock { manifest, index } => {
+            scratch[..32].copy_from_slice(manifest);
+            scratch[32..36].copy_from_slice(&index.to_le_bytes());
+            &scratch[..36]
         }
         _ => &[],
     };
@@ -163,6 +216,33 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
                 worker_id: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
             }
         }
+        9 => {
+            if payload.len() != 32 {
+                return Err(Error::Engine(format!(
+                    "bad FetchManifest payload length {}",
+                    payload.len()
+                )));
+            }
+            RpcMsg::FetchManifest { id: payload[..32].try_into().unwrap() }
+        }
+        10 => RpcMsg::ManifestData(payload),
+        11 => {
+            if payload.len() != 36 {
+                return Err(Error::Engine(format!(
+                    "bad FetchBlock payload length {}",
+                    payload.len()
+                )));
+            }
+            RpcMsg::FetchBlock {
+                manifest: payload[..32].try_into().unwrap(),
+                index: u32::from_le_bytes(payload[32..36].try_into().unwrap()),
+            }
+        }
+        12 => RpcMsg::BlockData(payload),
+        13 => RpcMsg::FetchErr(
+            String::from_utf8(payload)
+                .map_err(|_| Error::Engine("FetchErr not utf-8".into()))?,
+        ),
         other => return Err(Error::Engine(format!("unknown rpc type {other}"))),
     };
     Ok(Some(msg))
@@ -192,6 +272,23 @@ mod tests {
         roundtrip(RpcMsg::HelloOk { version: RPC_VERSION, worker_id: 42 });
         roundtrip(RpcMsg::Hello { version: u32::MAX });
         roundtrip(RpcMsg::HelloOk { version: 0, worker_id: u64::MAX });
+        roundtrip(RpcMsg::FetchManifest { id: [7u8; 32] });
+        roundtrip(RpcMsg::ManifestData(vec![1, 2, 3]));
+        roundtrip(RpcMsg::FetchBlock { manifest: [0xAB; 32], index: u32::MAX });
+        roundtrip(RpcMsg::BlockData(vec![0; 100]));
+        roundtrip(RpcMsg::FetchErr("no such block".into()));
+    }
+
+    #[test]
+    fn truncated_fetch_payloads_rejected() {
+        for (ty, len) in [(9u8, 31usize), (11, 35)] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&((len + 1) as u32).to_le_bytes());
+            buf.push(ty);
+            buf.extend_from_slice(&vec![0u8; len]);
+            let mut cur = &buf[..];
+            assert!(read_msg(&mut cur).is_err(), "type {ty} with {len}-byte payload");
+        }
     }
 
     #[test]

@@ -7,8 +7,12 @@
 //! *concurrently* — one multi-slot worker saturates a multi-core box
 //! without the `host:port*N` one-process-per-core workaround in
 //! `ClusterSpec` manifests (drivers open one connection per slot via
-//! the `host:port+N` spec syntax). All connections share one bag cache,
-//! so a bag any slot loaded replays from RAM for every other slot.
+//! the `host:port+N` spec syntax). All connections share one
+//! [`super::data::DataPlane`] — the per-worker LRU cache holding bags
+//! read by path *and* content-addressed blocks fetched from a block
+//! peer — so data any slot resolved replays from RAM for every other
+//! slot, and a manifest-named bag crosses the wire at most once per
+//! worker process.
 
 use super::executor;
 use super::ops::{OpRegistry, TaskCtx};

@@ -85,8 +85,12 @@ COMMANDS:
               [--topics A,B,..] [--workers N] [--standalone]
               [--base-port P] [--cluster-spec FILE] [--verify]
               [--fixture-frames F] [--seed S]
+              [--publish] [--store-root DIR] [--advertise HOST]
               shard a recorded drive across the cluster and replay it
-              through the perception pipeline (docs/OPERATIONS.md)
+              through the perception pipeline; --publish ships the bag
+              bytes through the engine (content-addressed blocks from a
+              driver-side store) instead of requiring the path to
+              resolve on every worker (docs/OPERATIONS.md)
   info        [--artifacts DIR]
 ";
 
@@ -425,9 +429,14 @@ fn cmd_replay(args: &Args) -> Result<()> {
 
     let workers = args.get_usize("workers", 4)?;
     let artifacts = args.get_or("artifacts", "artifacts");
-    let cluster: Box<dyn Cluster> = if let Some(spec_path) = args.get("cluster-spec") {
-        let cs = av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(spec_path))?;
-        Box::new(StandaloneCluster::connect(&cs)?)
+    let cluster_spec = match args.get("cluster-spec") {
+        Some(p) => {
+            Some(av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(p))?)
+        }
+        None => None,
+    };
+    let cluster: Box<dyn Cluster> = if let Some(cs) = &cluster_spec {
+        Box::new(StandaloneCluster::connect(cs)?)
     } else if args.has("standalone") {
         let base_port = args.get_usize("base-port", 7077)? as u16;
         Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
@@ -435,7 +444,27 @@ fn cmd_replay(args: &Args) -> Result<()> {
         Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
     };
 
-    let driver = ReplayDriver::new(spec);
+    let mut driver = ReplayDriver::new(spec);
+    if args.has("publish") || args.has("store-root") {
+        // resolution order: flag, then the cluster spec's [storage]
+        // section, then a local default
+        let store_root = args
+            .get("store-root")
+            .map(str::to_string)
+            .or_else(|| cluster_spec.as_ref().and_then(|c| c.store_root.clone()))
+            .unwrap_or_else(|| "blockstore".to_string());
+        let advertise = args
+            .get("advertise")
+            .map(str::to_string)
+            .or_else(|| cluster_spec.as_ref().and_then(|c| c.advertise_host.clone()))
+            .unwrap_or_else(|| "127.0.0.1".to_string());
+        let id = driver.publish(&store_root, &advertise)?;
+        let (_, peer) = driver.published().expect("just published");
+        println!(
+            "published bag as manifest {} (store {store_root}, blocks served at {peer})",
+            id.short()
+        );
+    }
     let (index, slices) = driver.plan()?;
     println!(
         "replay: {} messages / {} topics over {:.2} bag-s in {} slice(s) on {} {} \

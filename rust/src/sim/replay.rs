@@ -16,6 +16,17 @@
 //! [`ReplayVerdict`]s home, where [`ReplayDriver`] folds them into a
 //! [`ReplayReport`].
 //!
+//! ## Data distribution
+//!
+//! Tasks name the bag with a [`DataRef`]: a worker-resolvable path by
+//! default, or — after [`ReplayDriver::publish`] — a content-addressed
+//! manifest plus the driver's block-peer address. Published replays
+//! need **no shared filesystem**: the driver splits the bag into
+//! SHA-256-addressed blocks in a `storage::BlockStore`, serves them
+//! over RPC, and each worker fetches (and hash-verifies) exactly the
+//! blocks it misses, once per worker process. Both modes produce
+//! byte-identical reports.
+//!
 //! ## The per-slice pipeline
 //!
 //! Messages replay in bag-time order at a configurable rate
@@ -24,11 +35,13 @@
 //!
 //! * camera frames → the PJRT image classifier (one frame per batch, so
 //!   batch grouping can never differ between slicings) → per-class
-//!   detection counts;
+//!   detection counts — and the PJRT segmenter → per-class pixel
+//!   histograms;
 //! * LiDAR scans → planar ICP against the previous scan on the same
 //!   topic → odometry deltas, plus a lead-gap estimate feeding the
 //!   ACC/AEB controller under test → commanded-control divergence
-//!   stats;
+//!   stats — and PointNet-lite descriptors compared consecutively →
+//!   loop-closure similarity stats;
 //! * every topic → message counts and inter-arrival latency histograms
 //!   (bag-time gaps, so they are reproducible).
 //!
@@ -52,13 +65,14 @@
 
 use crate::bag::{BagIndex, BagReader};
 use crate::engine::{
-    run_provider, Action, Cluster, OpCall, OpRegistry, Source, TaskCtx, TaskOutput, TaskProvider,
-    TaskSpec,
+    run_provider, Action, BlockServer, Cluster, DataRef, OpCall, OpRegistry, Source, TaskCtx,
+    TaskOutput, TaskProvider, TaskSpec,
 };
 use crate::error::{Error, Result};
 use crate::msg::{Image, Message, PointCloud, Time};
-use crate::perception::with_classifier;
+use crate::perception::{descriptor_similarity, scan_descriptor, with_classifier, with_segmenter};
 use crate::perception::{icp_2d, Transform2D};
+use crate::storage::{BlockStore, ManifestId};
 use crate::sim::controller::{control, ControlMode, ControllerParams, LeadObservation};
 use crate::sim::dynamics::VehicleState;
 use crate::util::bytes::{ByteReader, ByteWriter};
@@ -78,6 +92,11 @@ const GAP_EDGES: [u64; 5] =
 
 /// Buckets in the per-topic latency histogram.
 pub const GAP_BUCKETS: usize = GAP_EDGES.len() + 1;
+
+/// Loop-closure similarity bar in quantized micro-units (cosine 0.9):
+/// consecutive scans from a smoothly moving vehicle should match above
+/// it; a pair below it is a candidate discontinuity.
+const LOOP_SIM_BAR_Q: i64 = 900_000;
 
 fn gap_bucket(gap_nanos: u64) -> usize {
     GAP_EDGES.iter().position(|&e| gap_nanos < e).unwrap_or(GAP_EDGES.len())
@@ -99,9 +118,10 @@ fn quant(v: f64) -> i64 {
 /// play it back.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ReplaySpec {
-    /// Bag file to replay (readable by every worker — shared storage or
-    /// a path valid on each host; workers read it through their bag
-    /// cache).
+    /// Bag file to replay. Without a [`ReplayDriver::publish`], the
+    /// path must resolve on every worker (shared storage or a copy per
+    /// host); after a publish, only the driver ever reads it — workers
+    /// fetch the bytes by manifest through the data plane.
     pub bag: String,
     /// Topic filter (empty = all topics).
     pub topics: Vec<String>,
@@ -244,8 +264,10 @@ pub fn slices_from_cuts(cuts: &[u64], warmup: Duration) -> Vec<ReplaySlice> {
 /// the `run_replay` operator needs nothing beyond its input records.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SliceJob {
-    /// Bag file to replay (read through the worker cache).
-    pub path: String,
+    /// Bag to replay, resolved through the worker's data plane (local
+    /// path, or a content-addressed manifest fetched from a block
+    /// peer).
+    pub data: DataRef,
     /// Topic filter (empty = all).
     pub topics: Vec<String>,
     /// The time slice to replay.
@@ -256,7 +278,7 @@ impl SliceJob {
     /// Serialize as an engine record.
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
-        w.put_str(&self.path);
+        self.data.encode_into(&mut w);
         w.put_varint(self.topics.len() as u64);
         for t in &self.topics {
             w.put_str(t);
@@ -268,14 +290,14 @@ impl SliceJob {
     /// Decode a [`SliceJob::encode`] record.
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
-        let path = r.get_str()?;
+        let data = DataRef::decode(&mut r)?;
         let n = r.get_varint()? as usize;
         let mut topics = Vec::with_capacity(n.min(1 << 10));
         for _ in 0..n {
             topics.push(r.get_str()?);
         }
         let slice = ReplaySlice::decode(&r.get_bytes_vec()?)?;
-        Ok(Self { path, topics, slice })
+        Ok(Self { data, topics, slice })
     }
 }
 
@@ -358,6 +380,37 @@ pub struct ControlStats {
     pub divergence_q: i64,
 }
 
+/// Per-pixel segmentation accumulators over in-window camera frames
+/// (the paper's §2.3 segmentation workload, wired into the per-slice
+/// replay pipeline). Pixel counts are integers, so slice sums are
+/// associative by construction.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct SegStats {
+    /// Frames segmented (equals the classified frame count — both
+    /// consume every in-window camera frame).
+    pub frames: u64,
+    /// Σ per-frame class-pixel histogram, in
+    /// [`crate::perception::SEG_CLASSES`] order.
+    pub pixels: [u64; 4],
+}
+
+/// Loop-closure descriptor accumulators over in-window consecutive
+/// scan pairs: each LiDAR scan is embedded by the PointNet-lite
+/// descriptor artifact and compared (cosine similarity) against the
+/// previous scan on the same topic — the warm-up prefix guarantees the
+/// predecessor was seen, exactly like the ICP pairing. Similarities are
+/// quantized to micro-units so sums are associative.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct LoopStats {
+    /// Scan pairs compared (every consecutive pair, including pairs the
+    /// ICP path skips for having too few points — descriptors pad).
+    pub pairs: u64,
+    /// Σ quantized cosine similarity (micro-units; ≤ `pairs` × 1e6).
+    pub similarity_q: i64,
+    /// Pairs below the 0.9 loop-closure bar (candidate discontinuities).
+    pub low_similarity: u64,
+}
+
 /// The deterministic replay payload shared by per-slice verdicts and
 /// the aggregated report. Merging is pure integer addition (plus one
 /// max), so folding per-slice stats in any grouping yields identical
@@ -376,6 +429,10 @@ pub struct ReplayStats {
     pub odom: OdometryStats,
     /// Controller divergence accumulators.
     pub ctrl: ControlStats,
+    /// Segmentation accumulators.
+    pub seg: SegStats,
+    /// Loop-closure descriptor accumulators.
+    pub loops: LoopStats,
 }
 
 impl ReplayStats {
@@ -404,6 +461,13 @@ impl ReplayStats {
         self.ctrl.brake_cmds += other.ctrl.brake_cmds;
         self.ctrl.max_brake_q = self.ctrl.max_brake_q.max(other.ctrl.max_brake_q);
         self.ctrl.divergence_q += other.ctrl.divergence_q;
+        self.seg.frames += other.seg.frames;
+        for (a, b) in self.seg.pixels.iter_mut().zip(other.seg.pixels) {
+            *a += b;
+        }
+        self.loops.pairs += other.loops.pairs;
+        self.loops.similarity_q += other.loops.similarity_q;
+        self.loops.low_similarity += other.loops.low_similarity;
     }
 
     fn encode_into(&self, w: &mut ByteWriter) {
@@ -431,6 +495,13 @@ impl ReplayStats {
         w.put_u64(self.ctrl.brake_cmds);
         w.put_i64(self.ctrl.max_brake_q);
         w.put_i64(self.ctrl.divergence_q);
+        w.put_u64(self.seg.frames);
+        for p in self.seg.pixels {
+            w.put_u64(p);
+        }
+        w.put_u64(self.loops.pairs);
+        w.put_i64(self.loops.similarity_q);
+        w.put_u64(self.loops.low_similarity);
     }
 
     fn decode_from(r: &mut ByteReader<'_>) -> Result<Self> {
@@ -465,7 +536,16 @@ impl ReplayStats {
             max_brake_q: r.get_i64()?,
             divergence_q: r.get_i64()?,
         };
-        Ok(Self { messages, topics, frames, detections, odom, ctrl })
+        let mut seg = SegStats { frames: r.get_u64()?, pixels: [0; 4] };
+        for p in &mut seg.pixels {
+            *p = r.get_u64()?;
+        }
+        let loops = LoopStats {
+            pairs: r.get_u64()?,
+            similarity_q: r.get_i64()?,
+            low_similarity: r.get_u64()?,
+        };
+        Ok(Self { messages, topics, frames, detections, odom, ctrl, seg, loops })
     }
 }
 
@@ -479,10 +559,11 @@ pub struct ReplayVerdict {
 }
 
 impl ReplayVerdict {
-    /// Serialize as an engine record (versioned).
+    /// Serialize as an engine record (versioned; v2 added the
+    /// segmentation and loop-closure stat blocks).
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
-        w.put_u8(1); // version
+        w.put_u8(2); // version
         w.put_u32(self.slice);
         self.stats.encode_into(&mut w);
         w.into_vec()
@@ -492,7 +573,7 @@ impl ReplayVerdict {
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
         match r.get_u8()? {
-            1 => {}
+            2 => {}
             v => return Err(Error::Sim(format!("unknown replay verdict version {v}"))),
         }
         Ok(Self { slice: r.get_u32()?, stats: ReplayStats::decode_from(&mut r)? })
@@ -529,7 +610,7 @@ impl ReplayReport {
     /// legitimately vary run to run).
     pub fn encode(&self) -> Vec<u8> {
         let mut w = ByteWriter::new();
-        w.put_u8(1); // version
+        w.put_u8(2); // version (v2: segmentation + loop-closure blocks)
         w.put_u64(self.start);
         w.put_u64(self.end);
         self.stats.encode_into(&mut w);
@@ -540,7 +621,7 @@ impl ReplayReport {
     pub fn decode(buf: &[u8]) -> Result<Self> {
         let mut r = ByteReader::new(buf);
         match r.get_u8()? {
-            1 => {}
+            2 => {}
             v => return Err(Error::Sim(format!("unknown replay report version {v}"))),
         }
         Ok(Self {
@@ -620,6 +701,23 @@ impl ReplayReport {
                 s.ctrl.divergence_q as f64 / 1e6,
             ));
         }
+        if s.seg.frames > 0 {
+            out.push_str(&format!("segmentation ({} frames):", s.seg.frames));
+            for (label, n) in crate::perception::SEG_CLASSES.iter().zip(s.seg.pixels) {
+                if n > 0 {
+                    out.push_str(&format!("  {label}:{n}px"));
+                }
+            }
+            out.push('\n');
+        }
+        if s.loops.pairs > 0 {
+            out.push_str(&format!(
+                "loop closure: {} scan pairs, mean similarity {:.4}, {} below bar\n",
+                s.loops.pairs,
+                s.loops.similarity_q as f64 / 1e6 / s.loops.pairs as f64,
+                s.loops.low_similarity,
+            ));
+        }
         out
     }
 }
@@ -670,18 +768,24 @@ fn lead_gap(scan: &PointCloud) -> Option<f64> {
     best
 }
 
-/// Per-topic LiDAR pipeline state (previous scan + its lead gap).
+/// Per-topic LiDAR pipeline state (previous scan, its lead gap, and
+/// its loop-closure descriptor). `desc` is `None` for warm-up scans —
+/// descriptors are the only model compute a warm-up message could
+/// trigger, and only the *last* pre-window scan's descriptor is ever
+/// compared, so it is computed lazily at the first in-window pair
+/// instead of once per warm-up scan (identical value, identical stats).
 struct LidarState {
     scan: PointCloud,
     time_nanos: u64,
     gap: Option<f64>,
+    desc: Option<Vec<f32>>,
 }
 
 /// Replay one slice through the perception pipeline. This is the
 /// worker-side body of the `run_replay` operator, also called directly
 /// by [`ReplayDriver::reference`] for the single-process baseline.
 pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Result<ReplayVerdict> {
-    let store = ctx.cache.open(&job.path)?;
+    let store = ctx.data.open(&job.data)?;
     let mut reader = BagReader::open(store)?;
     let topic_refs: Option<Vec<&str>> = if job.topics.is_empty() {
         None
@@ -726,6 +830,14 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
                 let class = res[0].class_id as usize;
                 stats.detections[class.min(7)] += 1;
                 stats.frames += 1;
+                // segmentation rides the same frame (stateless, so
+                // slicing cannot change it): per-class pixel counts are
+                // integers and sum associatively across slices
+                let seg = with_segmenter(&ctx.artifact_dir, |s| s.segment(&img))?;
+                stats.seg.frames += 1;
+                for (a, b) in stats.seg.pixels.iter_mut().zip(seg.histogram) {
+                    *a += b as u64;
+                }
             }
         } else if m.type_name == PointCloud::TYPE_NAME {
             // lidar → ICP odometry + controller, against the previous
@@ -733,8 +845,36 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
             // guarantees has been seen before the window starts)
             let scan = PointCloud::decode(&m.data)?;
             let gap_now = lead_gap(&scan);
+            // descriptors only exist for in-window scans; the last
+            // warm-up scan's is filled in lazily below when the first
+            // in-window pair needs it
+            let desc_now = if in_window {
+                Some(scan_descriptor(&ctx.artifact_dir, &scan)?)
+            } else {
+                None
+            };
             if let Some(prev) = lidar.get(&m.topic) {
                 if in_window {
+                    // descriptor comparison covers *every* consecutive
+                    // pair (descriptors pad tiny scans the ICP skips)
+                    let prev_desc_owned;
+                    let prev_desc: &[f32] = match &prev.desc {
+                        Some(d) => d,
+                        None => {
+                            prev_desc_owned =
+                                scan_descriptor(&ctx.artifact_dir, &prev.scan)?;
+                            &prev_desc_owned
+                        }
+                    };
+                    let desc_now_ref =
+                        desc_now.as_ref().expect("computed for in-window scans");
+                    let q =
+                        quant(descriptor_similarity(prev_desc, desc_now_ref) as f64);
+                    stats.loops.pairs += 1;
+                    stats.loops.similarity_q += q;
+                    if q < LOOP_SIM_BAR_Q {
+                        stats.loops.low_similarity += 1;
+                    }
                     if prev.scan.num_points() < 3 || scan.num_points() < 3 {
                         stats.odom.skipped += 1;
                     } else {
@@ -777,7 +917,7 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
             }
             lidar.insert(
                 m.topic.clone(),
-                LidarState { scan, time_nanos: m.time.nanos, gap: gap_now },
+                LidarState { scan, time_nanos: m.time.nanos, gap: gap_now, desc: desc_now },
             );
         }
         // other message types (IMU, …) contribute counts/gaps only
@@ -823,8 +963,25 @@ pub fn write_fixture_bag(path: &str, frames: u32, seed: u64) -> Result<()> {
 // ---------------------------------------------------------------------
 
 /// Driver-side API: index → slice → schedule → aggregate.
+///
+/// By default tasks reference the bag by its worker-resolvable *path*
+/// (the PR-4 model). Calling [`ReplayDriver::publish`] switches the
+/// driver to the data plane: the bag is published once into a
+/// `storage::BlockStore`, a [`BlockServer`] serves its blocks, and
+/// every task names the bag by manifest id + peer — workers need no
+/// shared filesystem, and the two modes produce byte-identical
+/// reports.
 pub struct ReplayDriver {
     spec: ReplaySpec,
+    data: Option<PublishedBag>,
+}
+
+/// Driver-side publish state: the local store, the published manifest,
+/// and the block peer serving it.
+struct PublishedBag {
+    store: std::sync::Arc<BlockStore>,
+    id: ManifestId,
+    server: BlockServer,
 }
 
 /// The replay job's [`TaskProvider`]: one slice per task, verdicts
@@ -863,12 +1020,74 @@ impl TaskProvider for ReplayProvider<'_> {
 impl ReplayDriver {
     /// Driver for `spec`.
     pub fn new(spec: ReplaySpec) -> Self {
-        Self { spec }
+        Self { spec, data: None }
     }
 
     /// The replay specification this driver runs.
     pub fn spec(&self) -> &ReplaySpec {
         &self.spec
+    }
+
+    /// Publish the spec's bag into a [`BlockStore`] at `store_root` and
+    /// start serving its blocks: subsequent plans/runs reference the
+    /// bag by manifest id + this driver's block peer instead of a path,
+    /// so workers anywhere fetch the bytes through the engine. The bag
+    /// file itself is no longer needed after this call — planning and
+    /// the single-process reference replay both read from the store.
+    /// `advertise_host` is the address workers dial (`"127.0.0.1"` for
+    /// single-box runs, the driver's reachable host for fleets).
+    /// Returns the manifest id.
+    pub fn publish(
+        &mut self,
+        store_root: impl AsRef<std::path::Path>,
+        advertise_host: &str,
+    ) -> Result<ManifestId> {
+        let store = std::sync::Arc::new(BlockStore::open(store_root)?);
+        let (id, manifest) = store.publish_bag(&self.spec.bag)?;
+        let server = BlockServer::serve(store.clone(), "0.0.0.0:0", advertise_host)?;
+        crate::logmsg!(
+            "info",
+            "published bag '{}' as manifest {} ({} block(s), {} B) served at {}",
+            self.spec.bag,
+            id.short(),
+            manifest.blocks.len(),
+            manifest.total_len,
+            server.peer()
+        );
+        self.data = Some(PublishedBag { store, id, server });
+        Ok(id)
+    }
+
+    /// Stop serving blocks and fall back to path-based task refs.
+    pub fn stop_publishing(&mut self) {
+        self.data = None;
+    }
+
+    /// The published manifest id and block-peer address, when
+    /// [`ReplayDriver::publish`] has been called.
+    pub fn published(&self) -> Option<(ManifestId, String)> {
+        self.data.as_ref().map(|p| (p.id, p.server.peer().to_string()))
+    }
+
+    /// How tasks will name the bag: `Manifest` after a publish, `Path`
+    /// otherwise.
+    pub fn data_ref(&self) -> DataRef {
+        match &self.data {
+            Some(p) => DataRef::Manifest { id: p.id, peer: p.server.peer().to_string() },
+            None => DataRef::path(self.spec.bag.clone()),
+        }
+    }
+
+    /// Scan the bag bytes into an index — from the published store when
+    /// serving, from the path otherwise.
+    fn scan_index(&self) -> Result<BagIndex> {
+        match &self.data {
+            Some(p) => {
+                let mut obj = p.store.open_object(&p.id)?;
+                BagIndex::scan(&mut obj)
+            }
+            None => BagIndex::scan_path(&self.spec.bag),
+        }
     }
 
     /// The warm-up prefix actually used: the spec's request, extended
@@ -879,9 +1098,11 @@ impl ReplayDriver {
     }
 
     /// Scan the bag and cut the timeline: returns the index plus the
-    /// overlapping slice plan. Pure function of (bag bytes, spec).
+    /// overlapping slice plan. Pure function of (bag bytes, spec) —
+    /// identical whether the bytes come from the path or the published
+    /// store.
     pub fn plan(&self) -> Result<(BagIndex, Vec<ReplaySlice>)> {
-        let index = BagIndex::scan_path(&self.spec.bag)?;
+        let index = self.scan_index()?;
         if index.selected_messages(&self.spec.topics) == 0 {
             return Err(Error::Sim(format!(
                 "bag '{}' has no messages on the selected topics",
@@ -893,9 +1114,12 @@ impl ReplayDriver {
         Ok((index, slices))
     }
 
-    /// Compile slices into engine tasks (one slice per task).
+    /// Compile slices into engine tasks (one slice per task). Each
+    /// task's source names the bag through [`ReplayDriver::data_ref`]
+    /// (path, or manifest + block peer after a publish).
     pub fn tasks(&self, slices: &[ReplaySlice]) -> Vec<TaskSpec> {
         let params = ReplayParams { rate: self.spec.rate }.encode();
+        let data = self.data_ref();
         slices
             .iter()
             .map(|s| TaskSpec {
@@ -903,7 +1127,7 @@ impl ReplayDriver {
                 task_id: s.index,
                 attempt: 0,
                 source: Source::BagSlices {
-                    path: self.spec.bag.clone(),
+                    data: data.clone(),
                     topics: self.spec.topics.clone(),
                     slices: vec![s.encode()],
                 },
@@ -1022,12 +1246,26 @@ impl ReplayDriver {
                 stats.frames
             )));
         }
+        if stats.seg.frames != expect_frames {
+            return Err(Error::Sim(format!(
+                "replay coverage: segmented {} of {expect_frames} camera frames",
+                stats.seg.frames
+            )));
+        }
         if stats.odom.pairs + stats.odom.skipped != expect_scan_pairs {
             return Err(Error::Sim(format!(
                 "replay coverage: evaluated {} of {expect_scan_pairs} LiDAR scan \
                  pairs — a slice's warm-up prefix did not reach its previous \
                  scan; raise ReplaySpec::warmup",
                 stats.odom.pairs + stats.odom.skipped
+            )));
+        }
+        if stats.loops.pairs != expect_scan_pairs {
+            return Err(Error::Sim(format!(
+                "replay coverage: loop-closure compared {} of {expect_scan_pairs} \
+                 scan pairs — a slice's warm-up prefix did not reach its previous \
+                 scan; raise ReplaySpec::warmup",
+                stats.loops.pairs
             )));
         }
 
@@ -1049,7 +1287,7 @@ impl ReplayDriver {
     /// contract the `rust/tests/replay.rs` suite asserts.
     pub fn reference(&self, artifact_dir: &str) -> Result<ReplayReport> {
         let wall_start = Instant::now();
-        let index = BagIndex::scan_path(&self.spec.bag)?;
+        let index = self.scan_index()?;
         let Some((first, last)) = index.time_range() else {
             return Err(Error::Sim(format!("bag '{}' is empty", self.spec.bag)));
         };
@@ -1060,7 +1298,7 @@ impl ReplayDriver {
             end: last.nanos + 1,
         };
         let job = SliceJob {
-            path: self.spec.bag.clone(),
+            data: self.data_ref(),
             topics: self.spec.topics.clone(),
             slice,
         };
@@ -1159,12 +1397,40 @@ mod tests {
         assert_eq!(ReplaySlice::decode(&s.encode()).unwrap(), s);
         let bad = ReplaySlice { start: 900, end: 100, ..s };
         assert!(ReplaySlice::decode(&bad.encode()).is_err());
-        let job = SliceJob {
-            path: "/data/x.bag".into(),
-            topics: vec!["/camera".into()],
-            slice: s,
-        };
-        assert_eq!(SliceJob::decode(&job.encode()).unwrap(), job);
+        for data in [
+            DataRef::path("/data/x.bag"),
+            DataRef::Manifest {
+                id: crate::storage::ManifestId([0x5A; 32]),
+                peer: "127.0.0.1:7199".into(),
+            },
+        ] {
+            let job = SliceJob { data, topics: vec!["/camera".into()], slice: s };
+            assert_eq!(SliceJob::decode(&job.encode()).unwrap(), job);
+        }
+    }
+
+    #[test]
+    fn published_replay_equals_path_replay_bytes() {
+        let bag = fixture(6, 21);
+        let spec = ReplaySpec { bag: bag.clone(), slices: 2, ..ReplaySpec::default() };
+        let by_path = ReplayDriver::new(spec.clone()).run(&local(2)).unwrap();
+
+        let store_root = std::env::temp_dir().join(format!(
+            "av_simd_replay_pub_{}_{:x}",
+            std::process::id(),
+            crate::util::now_nanos()
+        ));
+        let mut driver = ReplayDriver::new(spec);
+        let id = driver.publish(&store_root, "127.0.0.1").unwrap();
+        let (got_id, peer) = driver.published().unwrap();
+        assert_eq!(got_id, id);
+        assert!(peer.contains(':'), "{peer}");
+        assert!(matches!(driver.data_ref(), DataRef::Manifest { .. }));
+        // the bag path is not consulted after the publish
+        std::fs::remove_file(&bag).unwrap();
+        let by_manifest = driver.run(&local(2)).unwrap();
+        assert_eq!(by_manifest.encode(), by_path.encode());
+        std::fs::remove_dir_all(&store_root).ok();
     }
 
     #[test]
@@ -1228,7 +1494,7 @@ mod tests {
             .iter()
             .map(|s| {
                 let job = SliceJob {
-                    path: bag.clone(),
+                    data: DataRef::path(bag.clone()),
                     topics: vec![],
                     slice: *s,
                 };

@@ -1,7 +1,14 @@
 //! DFS-lite — the platform's HDFS stand-in (paper Fig 3's storage tier).
 //!
 //! A [`BlockStore`] is a directory of content-addressed, hash-verified
-//! blocks plus named manifests mapping a logical path to its block list.
+//! blocks plus manifests mapping an object to its block list. Manifests
+//! come in two flavours: *named* (the original `put`/`get` API — a
+//! logical path chosen by the caller) and *content-addressed* (the
+//! [`BlockStore::publish`] API — the manifest is stored under the
+//! SHA-256 of its own bytes, so a [`ManifestId`] is a verifiable name
+//! for an exact byte sequence; this is what the engine's data plane
+//! ships over RPC).
+//!
 //! Blocks are addressed by SHA-256 — NOT CRC32: bag records embed their
 //! own CRC32, and `CRC(m ‖ CRC(m))` is a constant residue, so distinct
 //! bags can share a whole-file CRC32 (a real collision our integration
@@ -10,26 +17,183 @@
 //! durable binary outputs (`RDD[Bytes] → HDFS`) and chunked re-reads, with
 //! corruption detection on every read. Replication across machines is out
 //! of scope (single-box testbed); the API is shaped so a replicated
-//! implementation could slot in.
+//! implementation could slot in. What *is* in scope is shipping blocks
+//! between machines: see `engine::data` for the RPC fetch path and
+//! [`BlockChunkStore`] for replaying a bag directly off verified blocks.
 
+use crate::bag::ChunkStore;
 use crate::error::{Error, Result};
 use crate::util::bytes::{ByteReader, ByteWriter};
+use std::fmt;
 use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+/// A 32-byte SHA-256 content address (block or manifest).
+pub type BlockId = [u8; 32];
 
 /// Content address of a block: SHA-256 digest (from `util::sha256`; the
 /// offline crate set has no `sha2`).
-fn block_id(data: &[u8]) -> [u8; 32] {
+fn block_id(data: &[u8]) -> BlockId {
     crate::util::sha256::digest(data)
 }
 
-fn hex(id: &[u8; 32]) -> String {
-    id.iter().map(|b| format!("{b:02x}")).collect()
+/// Hex-encode a 32-byte content address (lowercase, 64 chars). One
+/// `String` allocation and a nibble lookup table — this sits on the
+/// data plane's block-naming hot path (every block write, read, fetch,
+/// and cache key goes through it), where the old per-byte
+/// `format!("{b:02x}")` allocated 32 intermediate `String`s per id.
+pub fn hex32(id: &BlockId) -> String {
+    const HEX: &[u8; 16] = b"0123456789abcdef";
+    let mut out = String::with_capacity(64);
+    for &b in id {
+        out.push(HEX[(b >> 4) as usize] as char);
+        out.push(HEX[(b & 0x0f) as usize] as char);
+    }
+    out
+}
+
+fn hex(id: &BlockId) -> String {
+    hex32(id)
+}
+
+/// Content address of a published manifest: the SHA-256 of the encoded
+/// manifest bytes. Naming an object by its manifest id pins the *exact*
+/// byte sequence — a fetched manifest (and every block it names) is
+/// verifiable against the id alone, which is what lets the engine ship
+/// bag bytes between mutually untrusting processes.
+#[derive(Clone, Copy, PartialEq, Eq, Hash)]
+pub struct ManifestId(pub BlockId);
+
+impl ManifestId {
+    /// Lowercase 64-char hex form (the on-disk manifest file stem).
+    pub fn hex(&self) -> String {
+        hex32(&self.0)
+    }
+
+    /// First 12 hex chars — enough for logs, short enough to read.
+    pub fn short(&self) -> String {
+        self.hex()[..12].to_string()
+    }
+
+    /// Parse a 64-char hex string back into an id. Strictly hex digits
+    /// only (`from_str_radix` alone would accept a `+` sign per pair,
+    /// silently resolving a mistyped id to a different manifest).
+    pub fn parse(s: &str) -> Result<Self> {
+        let s = s.trim();
+        if s.len() != 64 || !s.bytes().all(|b| b.is_ascii_hexdigit()) {
+            return Err(Error::Storage(format!(
+                "manifest id must be 64 hex chars, got {} ('{s}')",
+                s.len()
+            )));
+        }
+        let mut id = [0u8; 32];
+        for (i, byte) in id.iter_mut().enumerate() {
+            *byte = u8::from_str_radix(&s[2 * i..2 * i + 2], 16).map_err(|_| {
+                Error::Storage(format!("manifest id has non-hex chars: '{s}'"))
+            })?;
+        }
+        Ok(Self(id))
+    }
+}
+
+impl fmt::Display for ManifestId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.hex())
+    }
+}
+
+impl fmt::Debug for ManifestId {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "ManifestId({})", self.short())
+    }
+}
+
+/// One block reference inside a [`Manifest`]: content address + length.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct BlockRef {
+    /// SHA-256 of the block bytes.
+    pub id: BlockId,
+    /// Block length in bytes.
+    pub len: u32,
+}
+
+/// An object's block list: how `total_len` bytes are split into
+/// content-addressed blocks, in order. The encoded form is both the
+/// on-disk manifest file and the RPC `ManifestData` payload.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct Manifest {
+    /// Total object length (Σ block lens; kept explicit so truncation
+    /// of the block list is detectable).
+    pub total_len: u64,
+    /// Blocks in object order.
+    pub blocks: Vec<BlockRef>,
+}
+
+impl Manifest {
+    /// Split `data` into `block_size` chunks and describe them (no I/O).
+    pub fn describe(data: &[u8], block_size: usize) -> Self {
+        let blocks = if data.is_empty() {
+            Vec::new()
+        } else {
+            data.chunks(block_size)
+                .map(|c| BlockRef { id: block_id(c), len: c.len() as u32 })
+                .collect()
+        };
+        Self { total_len: data.len() as u64, blocks }
+    }
+
+    /// Serialize: `varint n_blocks ‖ u64 total_len ‖ (id[32] ‖ u32 len)*`
+    /// — byte-compatible with the manifests [`BlockStore::put`] has
+    /// always written.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::with_capacity(16 + self.blocks.len() * 36);
+        w.put_varint(self.blocks.len() as u64);
+        w.put_u64(self.total_len);
+        for b in &self.blocks {
+            w.put_raw(&b.id);
+            w.put_u32(b.len);
+        }
+        w.into_vec()
+    }
+
+    /// Decode a [`Manifest::encode`] payload, validating that the block
+    /// lengths sum to `total_len`.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let n = r.get_varint()? as usize;
+        let total_len = r.get_u64()?;
+        let mut blocks = Vec::with_capacity(n.min(1 << 20));
+        for _ in 0..n {
+            let id: BlockId = r.get_raw(32)?.try_into().unwrap();
+            blocks.push(BlockRef { id, len: r.get_u32()? });
+        }
+        let m = Self { total_len, blocks };
+        let sum: u64 = m.blocks.iter().map(|b| b.len as u64).sum();
+        if sum != m.total_len {
+            return Err(Error::Storage(format!(
+                "manifest block lengths sum to {sum}, header says {}",
+                m.total_len
+            )));
+        }
+        Ok(m)
+    }
+
+    /// Content address of this manifest (SHA-256 of [`Manifest::encode`]).
+    pub fn id(&self) -> ManifestId {
+        ManifestId(block_id(&self.encode()))
+    }
+
+    /// Object byte offset where block `index` starts.
+    pub fn block_offset(&self, index: usize) -> u64 {
+        self.blocks[..index].iter().map(|b| b.len as u64).sum()
+    }
 }
 
 /// Default block size (4 MiB, HDFS-small because our testbed is small).
 pub const DEFAULT_BLOCK_SIZE: usize = 4 * 1024 * 1024;
 
-/// Content-addressed block store with named manifests.
+/// Content-addressed block store with named and content-addressed
+/// manifests.
 pub struct BlockStore {
     root: PathBuf,
     block_size: usize,
@@ -50,7 +214,17 @@ impl BlockStore {
         self
     }
 
-    fn block_path(&self, id: &[u8; 32]) -> PathBuf {
+    /// The directory this store lives in.
+    pub fn root(&self) -> &Path {
+        &self.root
+    }
+
+    /// The block size new objects are split at.
+    pub fn block_size(&self) -> usize {
+        self.block_size
+    }
+
+    fn block_path(&self, id: &BlockId) -> PathBuf {
         self.root.join("blocks").join(format!("{}.blk", hex(id)))
     }
 
@@ -61,65 +235,151 @@ impl BlockStore {
         Ok(self.root.join("manifests").join(format!("{name}.mf")))
     }
 
-    /// Store `data` under `name`, splitting into CRC-tagged blocks.
-    /// Blocks are content-addressed by CRC, so identical chunks dedupe.
-    pub fn put(&self, name: &str, data: &[u8]) -> Result<()> {
-        let mut manifest = ByteWriter::new();
-        let chunks: Vec<&[u8]> = if data.is_empty() {
-            vec![]
-        } else {
-            data.chunks(self.block_size).collect()
-        };
-        manifest.put_varint(chunks.len() as u64);
-        manifest.put_u64(data.len() as u64);
-        for chunk in chunks {
-            let id = block_id(chunk);
-            let path = self.block_path(&id);
+    /// Write `data` to `path` atomically (temp file + rename), so a
+    /// concurrent publisher of identical content can never expose a
+    /// half-written block: both racers write their own temp file and the
+    /// renames are idempotent (same bytes, same final name).
+    fn write_atomic(&self, path: &Path, data: &[u8]) -> Result<()> {
+        // pid + per-process counter makes the temp name unique even for
+        // same-instant writers in one process (nanos alone can collide
+        // on coarse clocks, and two racers sharing a temp file would
+        // fail the second rename)
+        static SEQ: std::sync::atomic::AtomicU64 = std::sync::atomic::AtomicU64::new(0);
+        let tmp = path.with_extension(format!(
+            "tmp.{}.{}",
+            std::process::id(),
+            SEQ.fetch_add(1, std::sync::atomic::Ordering::Relaxed)
+        ));
+        std::fs::write(&tmp, data)?;
+        std::fs::rename(&tmp, path).map_err(|e| {
+            std::fs::remove_file(&tmp).ok();
+            Error::Io(e)
+        })
+    }
+
+    /// Write every block of `manifest` that is not already present.
+    fn write_blocks(&self, data: &[u8], manifest: &Manifest) -> Result<()> {
+        let mut off = 0usize;
+        for b in &manifest.blocks {
+            let path = self.block_path(&b.id);
             if !path.exists() {
-                std::fs::write(&path, chunk)?;
+                self.write_atomic(&path, &data[off..off + b.len as usize])?;
             }
-            manifest.put_raw(&id);
-            manifest.put_u32(chunk.len() as u32);
+            off += b.len as usize;
         }
-        std::fs::write(self.manifest_path(name)?, manifest.into_vec())?;
         Ok(())
     }
 
-    /// Fetch an object, verifying every block's CRC.
+    /// Store `data` under a caller-chosen `name`, splitting into
+    /// content-addressed blocks. Identical blocks dedupe.
+    pub fn put(&self, name: &str, data: &[u8]) -> Result<()> {
+        let path = self.manifest_path(name)?;
+        let manifest = Manifest::describe(data, self.block_size);
+        self.write_blocks(data, &manifest)?;
+        self.write_atomic(&path, &manifest.encode())?;
+        Ok(())
+    }
+
+    /// Publish `data` as a content-addressed object: blocks are written
+    /// (deduped), the manifest is stored under the SHA-256 of its own
+    /// bytes, and that [`ManifestId`] is returned alongside the block
+    /// list. Publishing identical content from any number of processes
+    /// concurrently converges on one set of files (atomic writes +
+    /// content-derived names).
+    pub fn publish(&self, data: &[u8]) -> Result<(ManifestId, Manifest)> {
+        let manifest = Manifest::describe(data, self.block_size);
+        self.write_blocks(data, &manifest)?;
+        let id = manifest.id();
+        let path = self.manifest_path(&id.hex())?;
+        if !path.exists() {
+            self.write_atomic(&path, &manifest.encode())?;
+        }
+        Ok((id, manifest))
+    }
+
+    /// [`BlockStore::publish`] for a file on disk (the bag-publish
+    /// path: `publish_bag(bag_path)` → manifest id the engine ships to
+    /// workers instead of the path).
+    pub fn publish_bag(&self, path: impl AsRef<Path>) -> Result<(ManifestId, Manifest)> {
+        let path = path.as_ref();
+        let data = std::fs::read(path)
+            .map_err(|e| Error::Storage(format!("publish bag '{}': {e}", path.display())))?;
+        self.publish(&data)
+    }
+
+    /// Load a published manifest by id, verifying the bytes against the
+    /// id (a manifest that does not hash to its own name is corrupt).
+    pub fn manifest(&self, id: &ManifestId) -> Result<Manifest> {
+        let path = self.manifest_path(&id.hex())?;
+        let bytes = std::fs::read(&path).map_err(|e| {
+            Error::Storage(format!(
+                "manifest {} not readable in store {}: {e}",
+                id.short(),
+                self.root.display()
+            ))
+        })?;
+        if block_id(&bytes) != id.0 {
+            return Err(Error::Storage(format!(
+                "manifest {} bytes do not hash to their id — corrupt manifest file",
+                id.short()
+            )));
+        }
+        Manifest::decode(&bytes)
+    }
+
+    /// Read and verify one block named by `bref`. `object_offset` is the
+    /// block's byte offset inside its object, carried into every error
+    /// so corruption reports name both the block id and where in the
+    /// object it sits.
+    pub fn read_block(&self, bref: &BlockRef, object_offset: u64) -> Result<Vec<u8>> {
+        let path = self.block_path(&bref.id);
+        let data = std::fs::read(&path).map_err(|e| {
+            Error::Storage(format!(
+                "block {} (object bytes {object_offset}..{}): {e}",
+                hex(&bref.id),
+                object_offset + bref.len as u64
+            ))
+        })?;
+        verify_block(&data, bref, object_offset)?;
+        Ok(data)
+    }
+
+    /// Open a published object as a playable [`BlockChunkStore`]: every
+    /// block is read and hash-verified up front, then served zero-copy.
+    /// `BagReader`/`BagIndex` run directly on the result.
+    pub fn open_object(&self, id: &ManifestId) -> Result<BlockChunkStore> {
+        let manifest = self.manifest(id)?;
+        let mut blocks = Vec::with_capacity(manifest.blocks.len());
+        let mut off = 0u64;
+        for b in &manifest.blocks {
+            blocks.push(Arc::new(self.read_block(b, off)?));
+            off += b.len as u64;
+        }
+        Ok(BlockChunkStore::new(blocks))
+    }
+
+    /// Fetch a named object, verifying every block's hash.
     pub fn get(&self, name: &str) -> Result<Vec<u8>> {
         let mf = std::fs::read(self.manifest_path(name)?)
             .map_err(|e| Error::Storage(format!("object '{name}': {e}")))?;
-        let mut r = ByteReader::new(&mf);
-        let n_blocks = r.get_varint()? as usize;
-        let total = r.get_u64()? as usize;
-        let mut out = Vec::with_capacity(total);
-        for _ in 0..n_blocks {
-            let id: [u8; 32] = r.get_raw(32)?.try_into().unwrap();
-            let len = r.get_u32()? as usize;
-            let block = std::fs::read(self.block_path(&id))
-                .map_err(|e| Error::Storage(format!("block {}: {e}", hex(&id))))?;
-            if block.len() != len {
-                return Err(Error::Storage(format!(
-                    "block {} length {} != manifest {len}",
-                    hex(&id),
-                    block.len()
-                )));
-            }
-            if block_id(&block) != id {
-                return Err(Error::Storage(format!("block {} hash mismatch", hex(&id))));
-            }
-            out.extend_from_slice(&block);
+        let manifest = Manifest::decode(&mf)?;
+        let mut out = Vec::with_capacity(manifest.total_len as usize);
+        let mut off = 0u64;
+        for b in &manifest.blocks {
+            out.extend_from_slice(&self.read_block(b, off)?);
+            off += b.len as u64;
         }
-        if out.len() != total {
+        if out.len() as u64 != manifest.total_len {
             return Err(Error::Storage(format!(
-                "object '{name}' reassembled to {} bytes, manifest said {total}",
-                out.len()
+                "object '{name}' reassembled to {} bytes, manifest said {}",
+                out.len(),
+                manifest.total_len
             )));
         }
         Ok(out)
     }
 
-    /// List stored object names.
+    /// List stored object names (named and content-addressed alike).
     pub fn list(&self) -> Result<Vec<String>> {
         let mut names = Vec::new();
         for e in std::fs::read_dir(self.root.join("manifests"))? {
@@ -144,6 +404,116 @@ impl BlockStore {
     pub fn delete(&self, name: &str) -> Result<()> {
         std::fs::remove_file(self.manifest_path(name)?)?;
         Ok(())
+    }
+}
+
+/// Verify fetched/read block bytes against their [`BlockRef`]: length
+/// first (a truncated block file), then the SHA-256 (a bit flip). Both
+/// error messages carry the block id and the object byte offset. Shared
+/// by the local read path and the RPC fetch path, so a corrupt block is
+/// rejected identically wherever it surfaces.
+pub fn verify_block(data: &[u8], bref: &BlockRef, object_offset: u64) -> Result<()> {
+    if data.len() != bref.len as usize {
+        return Err(Error::Storage(format!(
+            "block {} at object byte offset {object_offset}: {} bytes on hand, \
+             manifest says {} — truncated block?",
+            hex(&bref.id),
+            data.len(),
+            bref.len
+        )));
+    }
+    if block_id(data) != bref.id {
+        return Err(Error::Storage(format!(
+            "block {} at object byte offset {object_offset}: hash mismatch — \
+             content does not match its address",
+            hex(&bref.id)
+        )));
+    }
+    Ok(())
+}
+
+/// A read-only [`ChunkStore`] over a list of verified, shared blocks —
+/// the data plane's read adapter: `BagReader` and `BagIndex` replay a
+/// bag straight off content-addressed blocks (local or fetched over
+/// RPC) with no contiguous reassembly copy. Blocks are `Arc`-shared
+/// with the worker's block cache, so opening the same bag twice costs
+/// no memory.
+pub struct BlockChunkStore {
+    blocks: Vec<Arc<Vec<u8>>>,
+    /// Start offset of each block (ascending); `ends[i] = starts[i] + len`.
+    starts: Vec<u64>,
+    len: u64,
+}
+
+impl BlockChunkStore {
+    /// Build from blocks in object order (zero-length blocks are
+    /// dropped — they carry no bytes and would stall the read walk).
+    pub fn new(blocks: Vec<Arc<Vec<u8>>>) -> Self {
+        let blocks: Vec<Arc<Vec<u8>>> =
+            blocks.into_iter().filter(|b| !b.is_empty()).collect();
+        let mut starts = Vec::with_capacity(blocks.len());
+        let mut off = 0u64;
+        for b in &blocks {
+            starts.push(off);
+            off += b.len() as u64;
+        }
+        Self { blocks, starts, len: off }
+    }
+
+    /// A single-block view over one shared buffer (the path-cache fast
+    /// path: a whole cached bag served zero-copy).
+    pub fn from_arc(data: Arc<Vec<u8>>) -> Self {
+        Self::new(vec![data])
+    }
+}
+
+impl ChunkStore for BlockChunkStore {
+    fn append(&mut self, _data: &[u8]) -> Result<u64> {
+        Err(Error::Storage(
+            "content-addressed object is read-only (blocks are immutable)".into(),
+        ))
+    }
+
+    fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        if offset.checked_add(len as u64).is_none_or(|end| end > self.len) {
+            return Err(Error::Corrupt(format!(
+                "block object read past end: offset {offset} + {len} > {}",
+                self.len
+            )));
+        }
+        if len == 0 {
+            return Ok(Vec::new());
+        }
+        // find the block containing `offset`
+        let mut i = match self.starts.binary_search(&offset) {
+            Ok(i) => i,
+            Err(i) => i - 1,
+        };
+        let mut out = Vec::with_capacity(len);
+        let mut pos = offset;
+        let mut remaining = len;
+        while remaining > 0 {
+            let block = &self.blocks[i];
+            let in_block = (pos - self.starts[i]) as usize;
+            let take = remaining.min(block.len() - in_block);
+            out.extend_from_slice(&block[in_block..in_block + take]);
+            pos += take as u64;
+            remaining -= take;
+            i += 1;
+        }
+        Ok(out)
+    }
+
+    fn len(&self) -> u64 {
+        self.len
+    }
+
+    fn flush(&mut self) -> Result<()> {
+        Ok(())
+    }
+
+    fn backend(&self) -> &'static str {
+        "blocks"
     }
 }
 
@@ -179,22 +549,147 @@ mod tests {
     }
 
     #[test]
-    fn corruption_is_detected() {
+    fn hex_matches_reference() {
+        let mut id = [0u8; 32];
+        for (i, b) in id.iter_mut().enumerate() {
+            *b = (i * 37 % 256) as u8;
+        }
+        let reference: String = id.iter().map(|b| format!("{b:02x}")).collect();
+        assert_eq!(hex32(&id), reference);
+        assert_eq!(hex32(&[0u8; 32]), "0".repeat(64));
+        assert_eq!(hex32(&[0xffu8; 32]), "f".repeat(64));
+    }
+
+    #[test]
+    fn manifest_id_hex_parse_roundtrip() {
+        let id = ManifestId(block_id(b"some object"));
+        assert_eq!(ManifestId::parse(&id.hex()).unwrap(), id);
+        assert!(ManifestId::parse("abc").is_err());
+        assert!(ManifestId::parse(&"g".repeat(64)).is_err());
+        // from_str_radix would accept '+1' pairs — parse must not
+        assert!(ManifestId::parse(&"+1".repeat(32)).is_err());
+        assert!(ManifestId::parse(&" 1".repeat(32)).is_err());
+    }
+
+    #[test]
+    fn publish_is_content_addressed_and_openable() {
         let (s, dir) = store();
         let s = s.with_block_size(1024);
-        let data = vec![7u8; 3000];
-        s.put("obj", &data).unwrap();
-        // corrupt one block on disk
-        let block = std::fs::read_dir(dir.join("blocks"))
+        let data: Vec<u8> = (0..5000).map(|i| (i % 241) as u8).collect();
+        let (id, manifest) = s.publish(&data).unwrap();
+        assert_eq!(manifest.total_len, 5000);
+        assert_eq!(manifest.blocks.len(), 5);
+        // the id is the hash of the manifest bytes — re-publishing the
+        // same content yields the same id and no new files
+        let n_files = std::fs::read_dir(dir.join("blocks")).unwrap().count();
+        let (id2, _) = s.publish(&data).unwrap();
+        assert_eq!(id, id2);
+        assert_eq!(std::fs::read_dir(dir.join("blocks")).unwrap().count(), n_files);
+        // open_object reassembles verified bytes
+        let mut obj = s.open_object(&id).unwrap();
+        assert_eq!(obj.read_at(0, 5000).unwrap(), data);
+        assert_eq!(obj.len(), 5000);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn missing_manifest_is_typed_with_id() {
+        let (s, dir) = store();
+        let id = ManifestId(block_id(b"never published"));
+        let err = s.manifest(&id).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Storage(_)), "{msg}");
+        assert!(msg.contains(&id.short()), "manifest id lost: {msg}");
+        assert!(s.open_object(&id).is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn truncated_block_file_is_typed_with_id_and_offset() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        let data = vec![9u8; 3000];
+        let (id, manifest) = s.publish(&data).unwrap();
+        // truncate the middle block on disk
+        let victim = &manifest.blocks[1];
+        let path = dir.join("blocks").join(format!("{}.blk", hex(&victim.id)));
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes.truncate(100);
+        std::fs::write(&path, bytes).unwrap();
+        let err = s.open_object(&id).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Storage(_)), "{msg}");
+        assert!(msg.contains("truncated"), "{msg}");
+        assert!(msg.contains(&hex(&victim.id)), "block id lost: {msg}");
+        assert!(msg.contains("offset 1024"), "object offset lost: {msg}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn bit_flipped_block_is_typed_with_id_and_offset() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        let data: Vec<u8> = (0..3000).map(|i| (i % 201) as u8).collect();
+        let (id, manifest) = s.publish(&data).unwrap();
+        let victim = &manifest.blocks[2];
+        let path = dir.join("blocks").join(format!("{}.blk", hex(&victim.id)));
+        let mut bytes = std::fs::read(&path).unwrap();
+        bytes[0] ^= 0xff; // same length, different content
+        std::fs::write(&path, bytes).unwrap();
+        let err = s.open_object(&id).unwrap_err();
+        let msg = err.to_string();
+        assert!(matches!(err, Error::Storage(_)), "{msg}");
+        assert!(msg.contains("hash mismatch"), "{msg}");
+        assert!(msg.contains(&hex(&victim.id)), "block id lost: {msg}");
+        assert!(msg.contains("offset 2048"), "object offset lost: {msg}");
+        // the named-object read path reports the same way
+        s.put("named", &data).unwrap();
+        assert!(s.get("named").is_err());
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn corrupt_manifest_bytes_rejected_against_id() {
+        let (s, dir) = store();
+        let (id, _) = s.publish(b"manifest corruption test").unwrap();
+        let path = dir.join("manifests").join(format!("{}.mf", id.hex()));
+        let mut bytes = std::fs::read(&path).unwrap();
+        let last = bytes.len() - 1;
+        bytes[last] ^= 0x01;
+        std::fs::write(&path, bytes).unwrap();
+        let err = s.manifest(&id).unwrap_err();
+        assert!(err.to_string().contains("hash to their id"), "{err}");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn concurrent_publish_of_identical_content_dedupes() {
+        let (s, dir) = store();
+        let s = std::sync::Arc::new(s.with_block_size(1024));
+        let data: Vec<u8> = (0..8192).map(|i| (i % 239) as u8).collect();
+        let ids: Vec<ManifestId> = std::thread::scope(|scope| {
+            let handles: Vec<_> = (0..8)
+                .map(|_| {
+                    let s = s.clone();
+                    let data = data.clone();
+                    scope.spawn(move || s.publish(&data).unwrap().0)
+                })
+                .collect();
+            handles.into_iter().map(|h| h.join().unwrap()).collect()
+        });
+        assert!(ids.windows(2).all(|w| w[0] == w[1]), "publishers disagreed on id");
+        // 8 distinct blocks, one manifest — no duplicate or leftover temp files
+        let block_files: Vec<_> = std::fs::read_dir(dir.join("blocks"))
             .unwrap()
-            .next()
-            .unwrap()
-            .unwrap()
-            .path();
-        let mut b = std::fs::read(&block).unwrap();
-        b[0] ^= 0xff;
-        std::fs::write(&block, b).unwrap();
-        assert!(matches!(s.get("obj"), Err(Error::Storage(_))));
+            .map(|e| e.unwrap().path())
+            .collect();
+        assert_eq!(block_files.len(), 8, "{block_files:?}");
+        assert!(
+            block_files.iter().all(|p| p.extension().unwrap() == "blk"),
+            "leftover temp files: {block_files:?}"
+        );
+        let mut obj = s.open_object(&ids[0]).unwrap();
+        assert_eq!(obj.read_at(0, data.len()).unwrap(), data);
         std::fs::remove_dir_all(dir).ok();
     }
 
@@ -229,5 +724,43 @@ mod tests {
         assert!(s.put("../evil", b"x").is_err());
         assert!(s.put("a/b", b"x").is_err());
         std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn block_chunk_store_reads_across_boundaries() {
+        let data: Vec<u8> = (0..4000).map(|i| (i % 251) as u8).collect();
+        let blocks: Vec<Arc<Vec<u8>>> =
+            data.chunks(1000).map(|c| Arc::new(c.to_vec())).collect();
+        let mut store = BlockChunkStore::new(blocks);
+        assert_eq!(store.len(), 4000);
+        assert_eq!(store.backend(), "blocks");
+        // read spanning two boundaries
+        assert_eq!(store.read_at(900, 2200).unwrap(), &data[900..3100]);
+        assert_eq!(store.read_at(0, 4000).unwrap(), data);
+        assert_eq!(store.read_at(3999, 1).unwrap(), &data[3999..]);
+        assert!(store.read_at(3999, 2).is_err());
+        assert!(store.read_at(u64::MAX, 2).is_err(), "offset wrap must not panic");
+        assert!(store.append(b"x").is_err(), "read-only");
+        // single-arc fast path
+        let mut one = BlockChunkStore::from_arc(Arc::new(data.clone()));
+        assert_eq!(one.read_at(10, 100).unwrap(), &data[10..110]);
+    }
+
+    #[test]
+    fn manifest_codec_roundtrips_and_validates() {
+        let data: Vec<u8> = (0..2500).map(|i| (i % 7) as u8).collect();
+        let m = Manifest::describe(&data, 1000);
+        assert_eq!(m.blocks.len(), 3);
+        assert_eq!(m.block_offset(2), 2000);
+        let back = Manifest::decode(&m.encode()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.id(), m.id());
+        // total_len mismatch rejected
+        let mut bad = m.clone();
+        bad.total_len += 1;
+        assert!(Manifest::decode(&bad.encode()).is_err());
+        // empty manifest ok
+        let empty = Manifest::describe(&[], 1000);
+        assert_eq!(Manifest::decode(&empty.encode()).unwrap(), empty);
     }
 }

@@ -1,7 +1,7 @@
 //! Cross-module integration tests: datagen → bag → engine → perception,
 //! bus playback, config-driven contexts, DFS persistence.
 
-use av_simd::bag::{BagCache, BagReader, MemoryChunkedFile};
+use av_simd::bag::{BagReader, MemoryChunkedFile};
 use av_simd::bus::{clock::Pace, play_bag, Broker, PlayOptions, QoS, SimClock};
 use av_simd::datagen::{generate_drive, generate_drive_dir, DriveSpec};
 use av_simd::engine::SimContext;
@@ -66,20 +66,24 @@ fn bag_playback_feeds_live_graph_with_all_topics() {
 
 #[test]
 fn bag_cache_accelerated_second_pass() {
+    use av_simd::engine::{DataPlane, DataRef};
+
     let dir = tmp_dir("cache");
     let dir_s = dir.to_str().unwrap();
     let paths =
         generate_drive_dir(dir_s, 1, &DriveSpec { frames: 20, ..DriveSpec::default() })
             .unwrap();
-    let cache = BagCache::new(64 << 20);
-    // pass 1: loads from disk
-    let mut r1 = BagReader::open(cache.open(&paths[0]).unwrap()).unwrap();
+    // the worker-side resolution path (paper §3.2's cache, behind the
+    // data plane): first open loads from disk, the second replays the
+    // same Arc-shared bytes from RAM
+    let dp = DataPlane::new(64 << 20);
+    let bag_ref = DataRef::path(paths[0].clone());
+    let mut r1 = BagReader::open(dp.open(&bag_ref).unwrap()).unwrap();
     let n1 = r1.for_each(None, |_| Ok(())).unwrap();
-    // pass 2: hits memory
-    let mut r2 = BagReader::open(cache.open(&paths[0]).unwrap()).unwrap();
+    let mut r2 = BagReader::open(dp.open(&bag_ref).unwrap()).unwrap();
     let n2 = r2.for_each(None, |_| Ok(())).unwrap();
     assert_eq!(n1, n2);
-    let (hits, misses, _) = cache.stats();
+    let (hits, misses, _) = dp.cache().stats();
     assert_eq!((hits, misses), (1, 1));
     std::fs::remove_dir_all(&dir).ok();
 }

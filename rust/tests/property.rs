@@ -40,7 +40,16 @@ fn random_spec(rng: &mut Prng) -> TaskSpec {
             records: gen::vec_of(rng, 8, |r| gen::bytes(r, 64)),
         },
         1 => Source::BagFile {
-            path: gen::ident(rng, 32),
+            data: if rng.next_bool(0.5) {
+                av_simd::engine::DataRef::path(gen::ident(rng, 32))
+            } else {
+                let mut id = [0u8; 32];
+                rng.fill_bytes(&mut id);
+                av_simd::engine::DataRef::Manifest {
+                    id: av_simd::storage::ManifestId(id),
+                    peer: format!("{}:{}", gen::ident(rng, 8), 1 + rng.below(65_000)),
+                }
+            },
             topics: gen::vec_of(rng, 3, |r| gen::ident(r, 12)),
         },
         2 => Source::SynthFrames {
@@ -468,13 +477,25 @@ fn prop_bag_cache_never_exceeds_capacity() {
 #[test]
 fn prop_rpc_frames_roundtrip() {
     use av_simd::engine::rpc::{read_msg, write_msg, RpcMsg};
-    check("rpc roundtrip", |rng| match rng.below(6) {
+    check("rpc roundtrip", |rng| match rng.below(10) {
         0 => RpcMsg::RunTask(gen::bytes(rng, 512)),
         1 => RpcMsg::TaskOk(gen::bytes(rng, 512)),
         2 => RpcMsg::TaskErr(gen::ident(rng, 64)),
         3 => RpcMsg::Ping,
         4 => RpcMsg::Pong,
-        _ => RpcMsg::Shutdown,
+        5 => RpcMsg::Shutdown,
+        6 => {
+            let mut id = [0u8; 32];
+            rng.fill_bytes(&mut id);
+            RpcMsg::FetchManifest { id }
+        }
+        7 => RpcMsg::ManifestData(gen::bytes(rng, 512)),
+        8 => {
+            let mut manifest = [0u8; 32];
+            rng.fill_bytes(&mut manifest);
+            RpcMsg::FetchBlock { manifest, index: rng.next_u32() }
+        }
+        _ => RpcMsg::BlockData(gen::bytes(rng, 512)),
     }, |msg| {
         let mut buf = Vec::new();
         write_msg(&mut buf, msg).unwrap();

@@ -9,7 +9,7 @@
 //! plain `cargo test` with no release binary on disk.
 
 use av_simd::engine::deploy::ClusterSpec;
-use av_simd::engine::{run_job, worker, LocalCluster, StandaloneCluster, TaskOutput};
+use av_simd::engine::{run_job, worker, DataRef, LocalCluster, StandaloneCluster, TaskOutput};
 use av_simd::sim::replay::{
     slices_from_cuts, write_fixture_bag, ReplayParams, ReplaySlice, ReplaySpec, ReplayVerdict,
     SliceJob,
@@ -185,6 +185,117 @@ fn skewed_slices_with_retries_keep_verdict_bytes() {
     std::fs::remove_file(bag).ok();
 }
 
+/// The data-plane acceptance bar: the same bag replayed via
+/// worker-local path vs. manifest-based block fetch produces
+/// byte-identical `ReplayReport`s, across {local, standalone-from-
+/// ClusterSpec} × {1, 2, 4 workers} — with the bag *file deleted*
+/// before any manifest-based run, so no worker (wherever its cwd) can
+/// possibly resolve the path. The bytes must come through the engine.
+#[test]
+fn manifest_replay_bytes_equal_path_replay_without_the_bag_file() {
+    let bag = fixture("dataplane", 16, 42);
+    let spec = ReplaySpec { bag: bag.clone(), slices: 5, ..ReplaySpec::default() };
+
+    // path-based reference, while the file still exists
+    let by_path = ReplayDriver::new(spec.clone())
+        .reference(&artifact_dir())
+        .unwrap();
+
+    // publish into a block store, then delete the bag file
+    let store_root = std::env::temp_dir().join(format!(
+        "av_simd_replay_it_store_{}",
+        std::process::id()
+    ));
+    let mut driver = ReplayDriver::new(spec.clone());
+    driver.publish(&store_root, "127.0.0.1").unwrap();
+    std::fs::remove_file(&bag).unwrap();
+
+    // the path no longer resolves anywhere — a path-based driver fails
+    let err = ReplayDriver::new(spec).plan().unwrap_err();
+    assert!(err.to_string().contains(&bag), "{err}");
+
+    // planning off the published store still works (BagIndex scans the
+    // verified blocks directly)
+    let (index, plan) = driver.plan().unwrap();
+    assert!(plan.len() >= 2, "slicing degenerated to {} slice(s)", plan.len());
+
+    for workers in [1usize, 2, 4] {
+        let local = LocalCluster::new(workers, av_simd::full_op_registry(), &artifact_dir());
+        let report = driver.run_planned(&local, &index, &plan).unwrap();
+        assert_eq!(
+            report.encode(),
+            by_path.encode(),
+            "manifest-based local x{workers} diverged from the path-based report"
+        );
+
+        let (cluster, handles) = standalone(workers);
+        let report = driver.run_planned(&cluster, &index, &plan).unwrap();
+        assert_eq!(
+            report.encode(),
+            by_path.encode(),
+            "manifest-based standalone x{workers} diverged from the path-based report"
+        );
+        cluster.stop_workers();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+    // the manifest-based reference replay matches too (fetches from the
+    // driver's own block server over loopback)
+    assert_eq!(driver.reference(&artifact_dir()).unwrap().encode(), by_path.encode());
+    std::fs::remove_dir_all(&store_root).ok();
+}
+
+/// A worker losing its block peer mid-job must surface a *retryable*
+/// task error naming the manifest id, the block index, and the peer's
+/// `host:port` (the PR-3 connect-error convention), so the scheduler
+/// retries it and — when the peer never comes back — the job error
+/// tells the operator exactly which fetch broke.
+#[test]
+fn lost_block_peer_is_retryable_and_names_manifest_block_and_peer() {
+    use av_simd::engine::TaskCtx;
+
+    let bag = fixture("lostpeer", 8, 9);
+    let spec = ReplaySpec {
+        bag: bag.clone(),
+        slices: 2,
+        max_retries: 1,
+        ..ReplaySpec::default()
+    };
+    let store_root = std::env::temp_dir().join(format!(
+        "av_simd_replay_it_lost_{}",
+        std::process::id()
+    ));
+    let mut driver = ReplayDriver::new(spec);
+    let id = driver.publish(&store_root, "127.0.0.1").unwrap();
+    let (_, peer) = driver.published().unwrap();
+    let (_, plan) = driver.plan().unwrap();
+    let tasks = driver.tasks(&plan);
+    // kill the peer: the manifest-based tasks now point at a dead addr
+    driver.stop_publishing();
+
+    // executor-level: the fetch failure is retryable and fully named
+    let ctx = TaskCtx::new(0, artifact_dir());
+    let reg = av_simd::full_op_registry();
+    let err = av_simd::engine::executor::run_task(&ctx, &reg, &tasks[0]).unwrap_err();
+    let msg = err.to_string();
+    assert!(err.is_retryable(), "lost peer must be retryable: {msg}");
+    assert!(msg.contains(&peer), "peer host:port lost: {msg}");
+
+    // job-level: the scheduler retries, exhausts the budget, and the
+    // job error still names the peer
+    let cluster = LocalCluster::new(2, av_simd::full_op_registry(), &artifact_dir());
+    let err = run_job(&cluster, tasks, 1).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains(&peer), "job error lost the peer: {msg}");
+    assert!(
+        msg.contains(&id.short()) || msg.contains("manifest"),
+        "job error lost the manifest: {msg}"
+    );
+    std::fs::remove_file(&bag).ok();
+    std::fs::remove_dir_all(&store_root).ok();
+}
+
 /// A poisoned slice record in `Source::BagSlices` must fail the task
 /// fast with a non-retryable error (data corruption, not a transient).
 #[test]
@@ -198,7 +309,7 @@ fn poisoned_slice_record_fails_fast() {
         task_id: 0,
         attempt: 0,
         source: Source::BagSlices {
-            path: "/nonexistent.bag".into(),
+            data: DataRef::path("/nonexistent.bag"),
             topics: vec![],
             slices: vec![vec![0xff; 7]],
         },
@@ -230,7 +341,9 @@ fn gen_spec(rng: &mut Prng) -> ReplaySpec {
 }
 
 fn gen_verdict(rng: &mut Prng) -> ReplayVerdict {
-    use av_simd::sim::replay::{ControlStats, OdometryStats, ReplayStats, TopicStats};
+    use av_simd::sim::replay::{
+        ControlStats, LoopStats, OdometryStats, ReplayStats, SegStats, TopicStats,
+    };
     let mut topics = std::collections::BTreeMap::new();
     for _ in 0..rng.below(5) {
         let t = TopicStats {
@@ -259,6 +372,15 @@ fn gen_verdict(rng: &mut Prng) -> ReplayVerdict {
             brake_cmds: rng.below(100),
             max_brake_q: rng.below(10_000_000) as i64,
             divergence_q: rng.below(1 << 40) as i64,
+        },
+        seg: SegStats {
+            frames: rng.below(1000),
+            pixels: std::array::from_fn(|_| rng.below(1 << 20)),
+        },
+        loops: LoopStats {
+            pairs: rng.below(1000),
+            similarity_q: rng.below(1 << 30) as i64 - (1 << 29),
+            low_similarity: rng.below(100),
         },
     };
     ReplayVerdict { slice: rng.below(1 << 16) as u32, stats }
@@ -336,8 +458,18 @@ fn slice_codecs_roundtrip_under_fuzz() {
         av_simd::util::proptest::default_cases(),
         |rng| {
             let start = rng.below(1 << 50);
+            let data = if rng.next_bool(0.5) {
+                DataRef::path(format!("/bags/{}.bag", gen::ident(rng, 10)))
+            } else {
+                let mut id = [0u8; 32];
+                rng.fill_bytes(&mut id);
+                DataRef::Manifest {
+                    id: av_simd::storage::ManifestId(id),
+                    peer: format!("{}:{}", gen::ident(rng, 8), 1 + rng.below(65_000)),
+                }
+            };
             SliceJob {
-                path: format!("/bags/{}.bag", gen::ident(rng, 10)),
+                data,
                 topics: gen::vec_of(rng, 3, |r| format!("/{}", gen::ident(r, 6))),
                 slice: ReplaySlice {
                     index: rng.below(1 << 20) as u32,
