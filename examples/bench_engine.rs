@@ -21,6 +21,14 @@
 //!   worker-side cache-miss path; `block_fetch_mb_per_sec` fact), plus
 //!   `storage/hex32` content-address encoding
 //!   (`hex_encode_mb_per_sec`).
+//! * `swarm/sibling-fetch` vs `swarm/driver-fetch` — a cold worker
+//!   cache resolving a manifest from a *warm sibling's* in-memory cache
+//!   vs from the driver's disk-backed store, both over loopback
+//!   (`swarm_fetch_mb_per_sec` fact).
+//! * `sched/tail+speculation` vs `sched/tail no-speculation` — a job
+//!   whose straggler stalls only on its first execution: speculative
+//!   re-execution cuts the tail, plain scheduling waits it out
+//!   (`speculation_tail_speedup` fact, asserted ≥ 1.3).
 //!
 //! ```sh
 //! cargo run --release --example bench_engine            # full run
@@ -99,6 +107,23 @@ fn register_bench_ops(reg: &av_simd::engine::OpRegistry) {
         if last_epoch_failed.swap(epoch, Ordering::SeqCst) != epoch {
             return Err(av_simd::err!(Engine, "transient first-attempt failure"));
         }
+        std::thread::sleep(std::time::Duration::from_millis(ms));
+        Ok(records)
+    });
+    // stalls `slow_ms` on the first call per epoch, `fast_ms` after — a
+    // straggler caused by where the attempt *ran*, not what it computes,
+    // i.e. exactly what speculative re-execution can rescue
+    let last_epoch_stalled = Arc::new(AtomicU64::new(u64::MAX));
+    reg.register("bench_stall_once", move |_c, params, records| {
+        let mut r = av_simd::util::bytes::ByteReader::new(params);
+        let epoch = r.get_varint()?;
+        let slow_ms = r.get_varint()?;
+        let fast_ms = r.get_varint()?;
+        let ms = if last_epoch_stalled.swap(epoch, Ordering::SeqCst) != epoch {
+            slow_ms
+        } else {
+            fast_ms
+        };
         std::thread::sleep(std::time::Duration::from_millis(ms));
         Ok(records)
     });
@@ -367,6 +392,138 @@ fn bench_block_fetch(samples: usize, size: usize) -> (Sample, Sample) {
     (fetch, hex)
 }
 
+/// Speculation tail bench: 6-task jobs on 2 workers where task 0 stalls
+/// `slow_ms` on its first execution per epoch and `fast_ms` after.
+/// Without speculation the job waits out the stall; with it, once the
+/// fast tasks establish a p95 the scheduler re-runs the straggler on the
+/// idle worker and the duplicate (a *second* execution, so fast) wins.
+/// One pre-built cluster per iteration keeps abandoned losing attempts
+/// from one run off the next run's workers — and keeps cluster teardown
+/// (which waits for those losers) out of the timed region.
+fn bench_speculation(samples: usize, slow_ms: u64, fast_ms: u64) -> (Sample, Sample) {
+    use av_simd::engine::{run_job_with, Speculation};
+
+    fn tail_tasks(epoch: u64, slow_ms: u64, fast_ms: u64) -> Vec<TaskSpec> {
+        let mut tasks = vec![count_task(
+            0,
+            vec![OpCall::new("bench_stall_once", varints(&[epoch, slow_ms, fast_ms]))],
+        )];
+        for i in 1..6 {
+            tasks.push(count_task(i, vec![OpCall::new("bench_stall", varints(&[fast_ms]))]));
+        }
+        tasks
+    }
+    let mk_clusters = |n: usize| -> Vec<LocalCluster> {
+        (0..n)
+            .map(|_| {
+                let reg = av_simd::full_op_registry();
+                register_bench_ops(&reg);
+                LocalCluster::new(2, reg, "artifacts")
+            })
+            .collect()
+    };
+    let warmup = 1usize;
+    let policy = Speculation { enabled: true, multiplier: 1.5, min_samples: 3 };
+
+    let clusters_on = mk_clusters(samples + warmup);
+    let epoch = AtomicU64::new(0);
+    let with = Bench::new("sched/tail+speculation")
+        .warmup(warmup)
+        .samples(samples)
+        .units(6.0, "task")
+        .run(|| {
+            let e = epoch.fetch_add(1, Ordering::SeqCst);
+            let cluster = &clusters_on[e as usize];
+            let (outs, report) =
+                run_job_with(cluster, tail_tasks(e, slow_ms, fast_ms), 2, policy).unwrap();
+            assert_eq!(outs.len(), 6);
+            assert!(
+                report.speculations >= 1,
+                "the tail scenario must actually speculate (got {})",
+                report.speculations
+            );
+        });
+
+    let clusters_off = mk_clusters(samples + warmup);
+    let epoch = AtomicU64::new(0);
+    let without = Bench::new("sched/tail no-speculation (baseline)")
+        .warmup(warmup)
+        .samples(samples)
+        .units(6.0, "task")
+        .run(|| {
+            let e = epoch.fetch_add(1, Ordering::SeqCst);
+            let cluster = &clusters_off[e as usize];
+            let (outs, report) =
+                run_job(cluster, tail_tasks(e, slow_ms, fast_ms), 2).unwrap();
+            assert_eq!(outs.len(), 6);
+            assert_eq!(report.speculations, 0);
+        });
+    // teardown (joins any abandoned losing attempts) happens here, after
+    // both timed regions
+    drop(clusters_on);
+    drop(clusters_off);
+    (with, without)
+}
+
+// ---------------------------------------------------------------- swarm
+
+/// Swarm fetch: a cold worker-side cache resolving a published manifest
+/// entirely from a *warm sibling's* in-memory cache over loopback TCP
+/// (hash-verified, like any peer fetch), vs the same resolution from the
+/// driver's disk-backed block store. Returns (sibling, driver) samples;
+/// units are bag bytes landed.
+fn bench_swarm_fetch(samples: usize, size: usize) -> (Sample, Sample) {
+    use av_simd::engine::{BlockServer, BlockSource, DataPlane, DataRef};
+    use av_simd::storage::BlockStore;
+
+    let dir = std::env::temp_dir().join(format!(
+        "av_simd_bench_swarm_{}",
+        std::process::id()
+    ));
+    std::fs::create_dir_all(&dir).expect("bench swarm dir");
+    let data = sensor_like_buffer(size);
+    let store = BlockStore::open(&dir).expect("store").with_block_size(256 * 1024);
+    let (id, _) = store.publish(&data).expect("publish");
+    let driver_server =
+        BlockServer::serve(Arc::new(store), "127.0.0.1:0", "127.0.0.1").expect("serve driver");
+    let driver_peer = driver_server.peer().to_string();
+
+    // warm the sibling once from the driver, then serve its cache the
+    // way a worker's swarm block server does
+    let warm = DataPlane::new(1 << 30);
+    warm.open(&DataRef::manifest(id, driver_peer.clone())).expect("warm the sibling");
+    assert_eq!(warm.resident_manifests(), vec![id], "sibling not fully resident");
+    let warm_source: Arc<dyn BlockSource> = Arc::new(warm);
+    let warm_server = BlockServer::serve_source(warm_source, "127.0.0.1:0", "127.0.0.1")
+        .expect("serve sibling");
+    let warm_peer = warm_server.peer().to_string();
+
+    let sibling = Bench::new("swarm/sibling-fetch loopback")
+        .warmup(1)
+        .samples(samples)
+        .units(size as f64, "B")
+        .run(|| {
+            let cold = DataPlane::new(1 << 30);
+            std::hint::black_box(
+                cold.open(&DataRef::manifest(id, warm_peer.clone())).unwrap(),
+            );
+        });
+    let driver = Bench::new("swarm/driver-fetch (baseline)")
+        .warmup(1)
+        .samples(samples)
+        .units(size as f64, "B")
+        .run(|| {
+            let cold = DataPlane::new(1 << 30);
+            std::hint::black_box(
+                cold.open(&DataRef::manifest(id, driver_peer.clone())).unwrap(),
+            );
+        });
+    drop(warm_server);
+    drop(driver_server);
+    std::fs::remove_dir_all(&dir).ok();
+    (sibling, driver)
+}
+
 fn main() -> av_simd::Result<()> {
     let smoke = smoke();
     let (sched_samples, stall_ms) = if smoke { (3, 30) } else { (7, 120) };
@@ -380,6 +537,7 @@ fn main() -> av_simd::Result<()> {
     );
 
     let (fetch_samples, fetch_size) = if smoke { (3, 1 << 20) } else { (7, 16 << 20) };
+    let (spec_samples, spec_slow_ms, spec_fast_ms) = if smoke { (3, 150, 5) } else { (5, 400, 10) };
 
     let (sched_stream, sched_rounds) = bench_scheduler(sched_samples, stall_ms);
     let (crc_fast, crc_slow) = bench_crc(codec_samples, codec_size);
@@ -388,6 +546,8 @@ fn main() -> av_simd::Result<()> {
     let (sweep_adaptive, sweep_fixed) = bench_sweep(sweep_samples);
     let (replay_dist, replay_ref) = bench_replay(replay_samples, replay_frames);
     let (block_fetch, hex_encode) = bench_block_fetch(fetch_samples, fetch_size);
+    let (swarm_sibling, swarm_driver) = bench_swarm_fetch(fetch_samples, fetch_size);
+    let (spec_on, spec_off) = bench_speculation(spec_samples, spec_slow_ms, spec_fast_ms);
 
     let samples = vec![
         sched_stream,
@@ -404,6 +564,10 @@ fn main() -> av_simd::Result<()> {
         replay_ref,
         block_fetch,
         hex_encode,
+        swarm_sibling,
+        swarm_driver,
+        spec_on,
+        spec_off,
     ];
     print_table("engine microbenches", &samples);
 
@@ -420,6 +584,12 @@ fn main() -> av_simd::Result<()> {
     // bytes landed on the "worker" side) and hex content-address encode
     let block_fetch_mb_per_sec = samples[12].throughput().unwrap_or(0.0) / 1e6;
     let hex_encode_mb_per_sec = samples[13].throughput().unwrap_or(0.0) / 1e6;
+    // swarm facts: bag bytes landed on a cold worker from a warm
+    // sibling's cache, and how that compares to pulling from the driver
+    let swarm_fetch_mb_per_sec = samples[14].throughput().unwrap_or(0.0) / 1e6;
+    let swarm_sibling_vs_driver = speedup(&samples[15], &samples[14]);
+    // tail fact: wall of the straggler job without speculation over with
+    let speculation_tail_speedup = speedup(&samples[17], &samples[16]);
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
@@ -430,6 +600,9 @@ fn main() -> av_simd::Result<()> {
         ("replay_slices_per_sec", replay_slices_per_sec),
         ("block_fetch_mb_per_sec", block_fetch_mb_per_sec),
         ("hex_encode_mb_per_sec", hex_encode_mb_per_sec),
+        ("swarm_fetch_mb_per_sec", swarm_fetch_mb_per_sec),
+        ("speedup_swarm_sibling_vs_driver", swarm_sibling_vs_driver),
+        ("speculation_tail_speedup", speculation_tail_speedup),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),
@@ -461,6 +634,14 @@ fn main() -> av_simd::Result<()> {
     assert!(
         block_fetch_mb_per_sec > 0.0,
         "block fetch bench produced no throughput"
+    );
+    assert!(
+        swarm_fetch_mb_per_sec > 0.0,
+        "swarm sibling fetch bench produced no throughput"
+    );
+    assert!(
+        speculation_tail_speedup >= 1.3,
+        "speculation tail speedup {speculation_tail_speedup:.2} below the 1.3x bar"
     );
     println!("bench_engine OK");
     Ok(())

@@ -129,6 +129,21 @@ impl BagCache {
         self.inner.lock().unwrap().entries.contains_key(key)
     }
 
+    /// Resident keys starting with `prefix`, sorted. Recency is *not*
+    /// bumped — this is an observation, not a use (the data plane scans
+    /// `mf:` keys to build swarm advertisements).
+    pub fn keys_with_prefix(&self, prefix: &str) -> Vec<String> {
+        let g = self.inner.lock().unwrap();
+        let mut keys: Vec<String> = g
+            .entries
+            .keys()
+            .filter(|k| k.starts_with(prefix))
+            .cloned()
+            .collect();
+        keys.sort();
+        keys
+    }
+
     /// Bytes currently held.
     pub fn used_bytes(&self) -> u64 {
         self.inner.lock().unwrap().used
@@ -211,6 +226,16 @@ mod tests {
         c.clear();
         assert_eq!(c.used_bytes(), 0);
         assert!(!c.contains("a"));
+    }
+
+    #[test]
+    fn keys_with_prefix_is_sorted_and_filtered() {
+        let c = BagCache::new(1024);
+        c.put("mf:bb", vec![1]).unwrap();
+        c.put("blk:zz", vec![2]).unwrap();
+        c.put("mf:aa", vec![3]).unwrap();
+        assert_eq!(c.keys_with_prefix("mf:"), vec!["mf:aa", "mf:bb"]);
+        assert_eq!(c.keys_with_prefix("path:"), Vec::<String>::new());
     }
 
     #[test]

@@ -9,6 +9,7 @@
 //! API ([`Cluster::run_tasks`]) is a thin convenience wrapper over the
 //! stream.
 
+use super::data::SwarmRegistry;
 use super::executor;
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
@@ -55,6 +56,14 @@ pub trait Cluster: Send + Sync {
 
     /// Graceful shutdown (no-op for local).
     fn shutdown(&self) {}
+
+    /// The cluster's swarm registry — which workers' block caches hold
+    /// which manifests — when the backend tracks one. Local clusters
+    /// share one process (and one page cache) with the driver, so there
+    /// is no swarm to consult and the default `None` stands.
+    fn swarm(&self) -> Option<SwarmRegistry> {
+        None
+    }
 
     /// Backend name for logs/benches.
     fn backend(&self) -> &'static str;

@@ -6,8 +6,8 @@
 //! filesystem. This module closes that gap for our engine: a task names
 //! its bag input with a [`DataRef`] — either a worker-local `Path`
 //! (back-compat; single box or genuinely shared storage) or a
-//! `Manifest` (a `storage::ManifestId` plus the `host:port` of a *block
-//! peer* that serves the bytes). Workers resolve manifests through
+//! `Manifest` (a `storage::ManifestId` plus an ordered list of *block
+//! peers* that serve the bytes). Workers resolve manifests through
 //! their [`DataPlane`]: an LRU byte cache (shared across all `--slots`
 //! connections of a worker process) backed by [`BlockClient`] fetches
 //! of individual content-addressed blocks over the
@@ -15,11 +15,17 @@
 //! must hash to its id, and every block must hash to its address — a
 //! lying or corrupted peer is detected at fetch time, never replayed.
 //!
-//! The serving side is [`BlockServer`]: the driver publishes a bag into
-//! a `storage::BlockStore` (`publish_bag` → manifest id) and serves
-//! `FetchManifest`/`FetchBlock` requests from it, so a standalone fleet
-//! on other hosts needs zero shared state — the bag travels through the
-//! engine, exactly once per block per worker (cache hits after that).
+//! The serving side is [`BlockServer`], which answers
+//! `FetchManifest`/`FetchBlock` from any [`BlockSource`]. The driver
+//! publishes a bag into a `storage::BlockStore` (`publish_bag` →
+//! manifest id) and serves from disk; *workers* additionally serve
+//! their own `DataPlane` cache ([`BlockServer::serve_source`]), turning
+//! distribution into a swarm: a cold worker's peer list names warm
+//! sibling workers first and the driver last, so fetch bandwidth scales
+//! with the fleet and the driver stops being a single point of failure
+//! for data already replicated into worker caches. Peer failures fall
+//! back to the next peer in the list — hash verification makes any
+//! peer, sibling or driver, equally untrusted.
 
 use crate::bag::BagCache;
 use crate::engine::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
@@ -42,14 +48,16 @@ pub enum DataRef {
     /// everywhere).
     Path(String),
     /// A content-addressed object: fetch the manifest and its blocks
-    /// from `peer` and verify everything against `id`. The bytes are
-    /// identical on every worker by construction.
+    /// from the first reachable entry of `peers` and verify everything
+    /// against `id`. The bytes are identical on every worker by
+    /// construction, no matter which peer served them.
     Manifest {
         /// Content address of the published object.
         id: ManifestId,
-        /// `host:port` of the block peer serving it (normally the
-        /// driver's [`BlockServer`]).
-        peer: String,
+        /// Ordered fetch sources (`host:port` each): warm sibling
+        /// workers first, the driver's [`BlockServer`] last. A worker
+        /// advances to the next peer on any connect or fetch failure.
+        peers: Vec<String>,
     },
 }
 
@@ -59,6 +67,12 @@ impl DataRef {
         DataRef::Path(p.into())
     }
 
+    /// Convenience constructor for a manifest ref served by one peer
+    /// (the common driver-only case).
+    pub fn manifest(id: ManifestId, peer: impl Into<String>) -> Self {
+        DataRef::Manifest { id, peers: vec![peer.into()] }
+    }
+
     /// Plan-time validation: malformed refs fail when the task is
     /// built/decoded, not deep inside a worker's bag open.
     pub fn validate(&self) -> Result<()> {
@@ -66,12 +80,18 @@ impl DataRef {
             DataRef::Path(p) if p.is_empty() => {
                 Err(Error::Engine("data ref: empty bag path".into()))
             }
-            DataRef::Manifest { peer, .. }
-                if peer.is_empty() || !peer.contains(':') =>
-            {
-                Err(Error::Engine(format!(
-                    "data ref: block peer '{peer}' is not host:port"
-                )))
+            DataRef::Manifest { peers, .. } if peers.is_empty() => {
+                Err(Error::Engine("data ref: empty block peer list".into()))
+            }
+            DataRef::Manifest { peers, .. } => {
+                for peer in peers {
+                    if peer.is_empty() || !peer.contains(':') {
+                        return Err(Error::Engine(format!(
+                            "data ref: block peer '{peer}' is not host:port"
+                        )));
+                    }
+                }
+                Ok(())
             }
             _ => Ok(()),
         }
@@ -81,7 +101,13 @@ impl DataRef {
     pub fn describe(&self) -> String {
         match self {
             DataRef::Path(p) => p.clone(),
-            DataRef::Manifest { id, peer } => format!("mf:{}@{peer}", id.short()),
+            DataRef::Manifest { id, peers } => {
+                let first = peers.first().map(String::as_str).unwrap_or("?");
+                match peers.len() {
+                    0 | 1 => format!("mf:{}@{first}", id.short()),
+                    n => format!("mf:{}@{first}(+{} peer(s))", id.short(), n - 1),
+                }
+            }
         }
     }
 
@@ -92,10 +118,13 @@ impl DataRef {
                 w.put_u8(0);
                 w.put_str(p);
             }
-            DataRef::Manifest { id, peer } => {
+            DataRef::Manifest { id, peers } => {
                 w.put_u8(1);
                 w.put_raw(&id.0);
-                w.put_str(peer);
+                w.put_varint(peers.len() as u64);
+                for peer in peers {
+                    w.put_str(peer);
+                }
             }
         }
     }
@@ -106,7 +135,12 @@ impl DataRef {
             0 => DataRef::Path(r.get_str()?),
             1 => {
                 let id: [u8; 32] = r.get_raw(32)?.try_into().unwrap();
-                DataRef::Manifest { id: ManifestId(id), peer: r.get_str()? }
+                let n = r.get_varint()? as usize;
+                let mut peers = Vec::with_capacity(n.min(1024));
+                for _ in 0..n {
+                    peers.push(r.get_str()?);
+                }
+                DataRef::Manifest { id: ManifestId(id), peers }
             }
             other => {
                 return Err(Error::Engine(format!("unknown data ref tag {other}")))
@@ -114,6 +148,69 @@ impl DataRef {
         };
         d.validate()?;
         Ok(d)
+    }
+}
+
+// ---------------------------------------------------------------------
+// swarm registry
+// ---------------------------------------------------------------------
+
+/// Driver-side bookkeeping of which worker block-servers hold which
+/// manifests, fed by [`super::rpc::RpcMsg::BlockAd`] frames piggybacked
+/// on task replies. The scheduler consults it when building a task's
+/// [`DataRef::Manifest`] peer list: warm sibling workers first, the
+/// driver last. The registry is best-effort by design — a stale entry
+/// (worker died, cache evicted) just costs the requester one failed
+/// peer before it falls back, so advertisements never need to be acked
+/// or expired.
+#[derive(Clone, Default)]
+pub struct SwarmRegistry {
+    inner: Arc<std::sync::Mutex<HashMap<[u8; 32], Vec<String>>>>,
+}
+
+impl SwarmRegistry {
+    /// Empty registry.
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Record `peer`'s full advertised set: `peer` is removed from
+    /// manifests it no longer advertises (eviction) and appended — in
+    /// advertisement order, deduplicated — to each manifest it does.
+    pub fn advertise(&self, peer: &str, manifests: &[[u8; 32]]) {
+        let mut g = self.inner.lock().unwrap();
+        for peers in g.values_mut() {
+            peers.retain(|p| p != peer);
+        }
+        for id in manifests {
+            let peers = g.entry(*id).or_default();
+            if !peers.iter().any(|p| p == peer) {
+                peers.push(peer.to_string());
+            }
+        }
+        g.retain(|_, v| !v.is_empty());
+    }
+
+    /// Worker peers currently advertising `id`, in first-advertised
+    /// order (the driver's own server is *not* in here — callers append
+    /// it last as the authoritative fallback).
+    pub fn peers_for(&self, id: &ManifestId) -> Vec<String> {
+        self.inner
+            .lock()
+            .unwrap()
+            .get(&id.0)
+            .cloned()
+            .unwrap_or_default()
+    }
+
+    /// Number of manifests with at least one advertising peer.
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().len()
+    }
+
+    /// True when no peer has advertised anything.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
     }
 }
 
@@ -276,12 +373,98 @@ const BLOCK_READ_TIMEOUT: Duration = Duration::from_secs(30);
 /// block peers from task workers in probes and logs).
 pub const BLOCK_PEER_ID: u64 = u64::MAX;
 
+/// Anything a [`BlockServer`] can serve manifests and blocks from.
+///
+/// Two implementations exist: [`BlockStore`] (the driver's on-disk
+/// store — the authoritative copy) and [`DataPlane`] (a worker's LRU
+/// byte cache — best-effort swarm serving). A source is allowed to
+/// *stop* having an object (cache eviction): it returns an error, the
+/// server answers `FetchErr`, and the requester falls back to its next
+/// peer. Requesters hash-verify everything, so a source never needs to
+/// be trusted, only reachable.
+pub trait BlockSource: Send + Sync {
+    /// The encoded manifest bytes for `id` (must hash to `id`).
+    fn manifest_bytes(&self, id: &ManifestId) -> Result<Vec<u8>>;
+    /// The raw bytes of block `index` of `manifest` (id `id`).
+    fn block_bytes(
+        &self,
+        id: &ManifestId,
+        manifest: &Manifest,
+        index: u32,
+    ) -> Result<Vec<u8>>;
+}
+
+impl BlockSource for BlockStore {
+    fn manifest_bytes(&self, id: &ManifestId) -> Result<Vec<u8>> {
+        BlockStore::manifest_bytes(self, id)
+    }
+
+    fn block_bytes(
+        &self,
+        id: &ManifestId,
+        manifest: &Manifest,
+        index: u32,
+    ) -> Result<Vec<u8>> {
+        let bref = manifest.blocks.get(index as usize).ok_or_else(|| {
+            Error::Storage(format!(
+                "manifest {} has {} block(s), index {index} out of range",
+                id.short(),
+                manifest.blocks.len()
+            ))
+        })?;
+        self.read_block(bref, manifest.block_offset(index as usize))
+    }
+}
+
+impl BlockSource for DataPlane {
+    /// Cache-resident manifests only — a miss (never fetched, or
+    /// evicted) is an error, which the server relays as `FetchErr` and
+    /// the requester survives by falling back to its next peer.
+    fn manifest_bytes(&self, id: &ManifestId) -> Result<Vec<u8>> {
+        self.cache
+            .get(&format!("mf:{}", id.hex()))
+            .map(|a| a.as_ref().clone())
+            .ok_or_else(|| {
+                Error::Storage(format!(
+                    "manifest {} not resident in this worker's cache",
+                    id.short()
+                ))
+            })
+    }
+
+    fn block_bytes(
+        &self,
+        id: &ManifestId,
+        manifest: &Manifest,
+        index: u32,
+    ) -> Result<Vec<u8>> {
+        let bref = manifest.blocks.get(index as usize).ok_or_else(|| {
+            Error::Storage(format!(
+                "manifest {} has {} block(s), index {index} out of range",
+                id.short(),
+                manifest.blocks.len()
+            ))
+        })?;
+        self.cache
+            .get(&format!("blk:{}", hex32(&bref.id)))
+            .map(|a| a.as_ref().clone())
+            .ok_or_else(|| {
+                Error::Storage(format!(
+                    "block {index} of manifest {} evicted from this worker's cache",
+                    id.short()
+                ))
+            })
+    }
+}
+
 /// A block peer: serves `FetchManifest`/`FetchBlock` requests from a
-/// [`BlockStore`] over the engine's RPC framing. The driver runs one
-/// next to each job that ships data by manifest; workers dial it with
-/// [`BlockClient`]. Serving is read-only and every block is verified
-/// before it leaves (local disk corruption is reported to the
-/// requester, not silently forwarded).
+/// [`BlockSource`] over the engine's RPC framing. The driver runs one
+/// over its [`BlockStore`] next to each job that ships data by
+/// manifest; every worker runs one over its [`DataPlane`] cache (the
+/// swarm); requesters dial either with [`BlockClient`]. Serving is
+/// read-only and every block served from disk is verified before it
+/// leaves (local corruption is reported to the requester, not silently
+/// forwarded).
 pub struct BlockServer {
     peer: String,
     wake_addr: String,
@@ -297,6 +480,17 @@ impl BlockServer {
     /// for single-box runs, the driver's reachable address for fleets.
     pub fn serve(
         store: Arc<BlockStore>,
+        listen: &str,
+        advertise_host: &str,
+    ) -> Result<Self> {
+        Self::serve_source(store, listen, advertise_host)
+    }
+
+    /// [`BlockServer::serve`] generalized to any [`BlockSource`] —
+    /// notably a worker's [`DataPlane`] cache, which is how a worker
+    /// joins the swarm as a fetch source for the data it holds.
+    pub fn serve_source(
+        source: Arc<dyn BlockSource>,
         listen: &str,
         advertise_host: &str,
     ) -> Result<Self> {
@@ -324,13 +518,13 @@ impl BlockServer {
                         break;
                     }
                     let Ok(stream) = conn else { continue };
-                    let store = store.clone();
+                    let source = source.clone();
                     // Handlers are detached: they exit when the client
                     // disconnects, and hold no listener resources.
                     let _ = std::thread::Builder::new()
                         .name("av-simd-block-conn".into())
                         .spawn(move || {
-                            if let Err(e) = serve_block_conn(stream, &store) {
+                            if let Err(e) = serve_block_conn(stream, source.as_ref()) {
                                 crate::logmsg!("warn", "block server connection: {e}");
                             }
                         });
@@ -369,7 +563,7 @@ impl Drop for BlockServer {
 /// One block-server connection: answer fetches until the client hangs
 /// up. Manifests are cached per connection so a client streaming every
 /// block of one object costs one manifest load, not N.
-fn serve_block_conn(stream: TcpStream, store: &BlockStore) -> Result<()> {
+fn serve_block_conn(stream: TcpStream, source: &dyn BlockSource) -> Result<()> {
     stream.set_nodelay(true).ok();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
@@ -384,18 +578,20 @@ fn serve_block_conn(stream: TcpStream, store: &BlockStore) -> Result<()> {
             )?,
             Some(RpcMsg::Shutdown) => return Ok(()),
             Some(RpcMsg::FetchManifest { id }) => {
-                let reply = match store.manifest(&ManifestId(id)) {
-                    Ok(m) => {
-                        let bytes = m.encode();
-                        manifests.insert(id, m);
-                        RpcMsg::ManifestData(bytes)
-                    }
+                let reply = match source.manifest_bytes(&ManifestId(id)) {
+                    Ok(bytes) => match Manifest::decode(&bytes) {
+                        Ok(m) => {
+                            manifests.insert(id, m);
+                            RpcMsg::ManifestData(bytes)
+                        }
+                        Err(e) => RpcMsg::FetchErr(e.to_string()),
+                    },
                     Err(e) => RpcMsg::FetchErr(e.to_string()),
                 };
                 write_msg(&mut writer, &reply)?;
             }
             Some(RpcMsg::FetchBlock { manifest, index }) => {
-                let reply = match fetch_block_reply(store, &mut manifests, manifest, index)
+                let reply = match fetch_block_reply(source, &mut manifests, manifest, index)
                 {
                     Ok(bytes) => RpcMsg::BlockData(bytes),
                     Err(e) => RpcMsg::FetchErr(e.to_string()),
@@ -411,29 +607,25 @@ fn serve_block_conn(stream: TcpStream, store: &BlockStore) -> Result<()> {
     }
 }
 
-/// Resolve one `FetchBlock` request against the store (loading the
-/// manifest through the per-connection cache) and verify the block
-/// before serving it.
+/// Resolve one `FetchBlock` request against the source (loading the
+/// manifest through the per-connection cache). The decoded manifest is
+/// pinned per connection, so a cache source can keep answering block
+/// fetches it still holds even after its own `mf:` entry was evicted.
 fn fetch_block_reply(
-    store: &BlockStore,
+    source: &dyn BlockSource,
     manifests: &mut HashMap<[u8; 32], Manifest>,
     manifest_id: [u8; 32],
     index: u32,
 ) -> Result<Vec<u8>> {
+    let id = ManifestId(manifest_id);
     let m = match manifests.entry(manifest_id) {
         std::collections::hash_map::Entry::Occupied(e) => e.into_mut(),
         std::collections::hash_map::Entry::Vacant(v) => {
-            v.insert(store.manifest(&ManifestId(manifest_id))?)
+            let bytes = source.manifest_bytes(&id)?;
+            v.insert(Manifest::decode(&bytes)?)
         }
     };
-    let bref = m.blocks.get(index as usize).ok_or_else(|| {
-        Error::Storage(format!(
-            "manifest {} has {} block(s), index {index} out of range",
-            ManifestId(manifest_id).short(),
-            m.blocks.len()
-        ))
-    })?;
-    store.read_block(bref, m.block_offset(index as usize))
+    source.block_bytes(&id, m, index)
 }
 
 // ---------------------------------------------------------------------
@@ -494,18 +686,46 @@ impl DataPlane {
 
     /// Resolve a data ref into a playable store. `Path` refs read
     /// through the cache from the local filesystem; `Manifest` refs
-    /// fetch any missing manifest/blocks from the ref's peer, verify
-    /// them, and cache them by content address.
+    /// fetch any missing manifest/blocks from the ref's peers (in
+    /// order, falling back on per-peer failure), verify them, and cache
+    /// them by content address.
     pub fn open(&self, data: &DataRef) -> Result<BlockChunkStore> {
         data.validate()?;
         match data {
             DataRef::Path(p) => self.open_path(p),
-            DataRef::Manifest { id, peer } => self.open_manifest(id, peer),
+            DataRef::Manifest { id, peers } => self.open_manifest(id, peers),
         }
     }
 
+    /// Manifest ids fully resident in the cache (manifest bytes *and*
+    /// every block), sorted by hex id. This is what a worker advertises
+    /// to the driver as its swarm-servable set.
+    pub fn resident_manifests(&self) -> Vec<ManifestId> {
+        let mut out = Vec::new();
+        for key in self.cache.keys_with_prefix("mf:") {
+            let Ok(id) = ManifestId::parse(&key["mf:".len()..]) else { continue };
+            let Some(bytes) = self.cache.get(&key) else { continue };
+            let Ok(m) = Manifest::decode(&bytes) else { continue };
+            if m.blocks
+                .iter()
+                .all(|b| self.cache.contains(&format!("blk:{}", hex32(&b.id))))
+            {
+                out.push(id);
+            }
+        }
+        out
+    }
+
     fn open_path(&self, path: &str) -> Result<BlockChunkStore> {
-        let key = format!("path:{path}");
+        // Key on the canonical path so `./drive.bag`, `drive.bag`, and
+        // symlinks to the same file share one cache entry instead of
+        // each holding a duplicate copy of the bytes. Canonicalization
+        // failure (file not created yet, dangling link) falls back to
+        // the raw string — the read below reports the real error.
+        let canon = std::fs::canonicalize(path)
+            .map(|p| p.to_string_lossy().into_owned())
+            .unwrap_or_else(|_| path.to_string());
+        let key = format!("path:{canon}");
         if let Some(bytes) = self.cache.get(&key) {
             return Ok(BlockChunkStore::from_arc(bytes));
         }
@@ -514,25 +734,61 @@ impl DataPlane {
         Ok(BlockChunkStore::from_arc(self.cache.put_shared(&key, bytes)))
     }
 
-    fn open_manifest(&self, id: &ManifestId, peer: &str) -> Result<BlockChunkStore> {
+    fn open_manifest(&self, id: &ManifestId, peers: &[String]) -> Result<BlockChunkStore> {
         // single-flight per manifest: the first resolver fetches, the
         // rest wait and then hit the cache block by block (a poisoned
         // lock just means an earlier resolver panicked — proceed)
+        let key = id.hex();
         let gate = {
             let mut g = self.inflight.lock().unwrap();
-            g.entry(id.hex())
+            g.entry(key.clone())
                 .or_insert_with(|| Arc::new(std::sync::Mutex::new(())))
                 .clone()
         };
-        let _resolving = gate.lock().unwrap_or_else(|p| p.into_inner());
+        let out = {
+            let _resolving = gate.lock().unwrap_or_else(|p| p.into_inner());
+            self.resolve_manifest(id, peers)
+        };
+        // Drop the gate once nobody is waiting on it, so the map stays
+        // bounded by *concurrent* resolutions instead of growing by one
+        // entry per manifest ever resolved. strong_count == 2 means the
+        // map's reference plus our local `gate` — any waiter holds a
+        // third; checking under the map lock makes the count stable (a
+        // new arrival needs this same lock to clone the gate).
+        let mut g = self.inflight.lock().unwrap();
+        if g.get(&key).is_some_and(|a| Arc::strong_count(a) == 2) {
+            g.remove(&key);
+        }
+        drop(g);
+        out
+    }
+
+    /// Number of live single-flight gates (test hook for the drain
+    /// invariant).
+    #[cfg(test)]
+    fn inflight_len(&self) -> usize {
+        self.inflight.lock().unwrap().len()
+    }
+
+    /// The body of a manifest resolution, running under the manifest's
+    /// single-flight gate. Fetches walk the peer list in order: any
+    /// connect or fetch failure advances to the next peer (already
+    /// cached blocks are kept — a mid-fetch peer death re-fetches only
+    /// the block that failed, from the next peer).
+    fn resolve_manifest(&self, id: &ManifestId, peers: &[String]) -> Result<BlockChunkStore> {
         // one lazily-opened connection per resolution: a fully cached
-        // object never dials the peer at all
-        let mut client: Option<BlockClient> = None;
+        // object never dials any peer at all
+        let mut cursor = PeerCursor {
+            peers,
+            idx: 0,
+            client: None,
+            timeout: self.fetch_timeout,
+        };
         let mf_key = format!("mf:{}", id.hex());
         let manifest = match self.cache.get(&mf_key) {
             Some(bytes) => Manifest::decode(&bytes)?,
             None => {
-                let m = self.client(&mut client, peer, id)?.fetch_manifest(id)?;
+                let m = cursor.try_peers(id, |c| c.fetch_manifest(id))?;
                 self.cache.put_shared(&mf_key, m.encode());
                 m
             }
@@ -543,9 +799,8 @@ impl DataPlane {
             let arc = match self.cache.get(&key) {
                 Some(a) => a,
                 None => {
-                    let bytes = self
-                        .client(&mut client, peer, id)?
-                        .fetch_block(id, i as u32, &manifest)?;
+                    let bytes =
+                        cursor.try_peers(id, |c| c.fetch_block(id, i as u32, &manifest))?;
                     self.cache.put_shared(&key, bytes)
                 }
             };
@@ -553,24 +808,58 @@ impl DataPlane {
         }
         Ok(BlockChunkStore::new(blocks))
     }
+}
 
-    /// Lazily connect the per-resolution client; a connect failure is
-    /// wrapped with the manifest being resolved, so even "peer
-    /// unreachable" errors name what the worker was trying to fetch.
-    fn client<'a>(
-        &self,
-        slot: &'a mut Option<BlockClient>,
-        peer: &str,
+/// Fallback iterator over a [`DataRef::Manifest`] peer list: holds one
+/// live connection to the current peer and advances (never rewinds) on
+/// any connect or fetch failure. Exhausting the list surfaces the last
+/// peer's error wrapped with the manifest id and how many peers were
+/// tried.
+struct PeerCursor<'a> {
+    peers: &'a [String],
+    idx: usize,
+    client: Option<BlockClient>,
+    timeout: Duration,
+}
+
+impl PeerCursor<'_> {
+    fn try_peers<T>(
+        &mut self,
         id: &ManifestId,
-    ) -> Result<&'a mut BlockClient> {
-        if slot.is_none() {
-            *slot = Some(
-                BlockClient::connect(peer, self.fetch_timeout).map_err(|e| {
-                    Error::Engine(format!("fetching manifest {}: {e}", id.short()))
-                })?,
-            );
+        mut op: impl FnMut(&mut BlockClient) -> Result<T>,
+    ) -> Result<T> {
+        let mut last: Option<Error> = None;
+        loop {
+            if self.idx >= self.peers.len() {
+                let e = last
+                    .unwrap_or_else(|| Error::Engine("no block peers in data ref".into()));
+                return Err(Error::Engine(format!(
+                    "fetching manifest {}: all {} block peer(s) failed; last: {e}",
+                    id.short(),
+                    self.peers.len()
+                )));
+            }
+            if self.client.is_none() {
+                match BlockClient::connect(&self.peers[self.idx], self.timeout) {
+                    Ok(c) => self.client = Some(c),
+                    Err(e) => {
+                        last = Some(e);
+                        self.idx += 1;
+                        continue;
+                    }
+                }
+            }
+            match op(self.client.as_mut().expect("just connected")) {
+                Ok(v) => return Ok(v),
+                Err(e) => {
+                    // the connection may be dead or the peer may simply
+                    // not hold this object anymore — either way, move on
+                    self.client = None;
+                    last = Some(e);
+                    self.idx += 1;
+                }
+            }
         }
-        Ok(slot.as_mut().expect("just filled"))
     }
 }
 
@@ -601,9 +890,14 @@ mod tests {
     fn data_ref_codec_roundtrips_and_validates() {
         let refs = [
             DataRef::path("/data/drive.bag"),
+            DataRef::manifest(ManifestId([9u8; 32]), "10.0.0.1:7199"),
             DataRef::Manifest {
-                id: ManifestId([9u8; 32]),
-                peer: "10.0.0.1:7199".into(),
+                id: ManifestId([3u8; 32]),
+                peers: vec![
+                    "worker-a:7201".into(),
+                    "worker-b:7201".into(),
+                    "driver:7200".into(),
+                ],
             },
         ];
         for d in refs {
@@ -616,8 +910,14 @@ mod tests {
         // invalid refs are rejected at decode time
         for bad in [
             DataRef::Path(String::new()),
-            DataRef::Manifest { id: ManifestId([0; 32]), peer: "noport".into() },
-            DataRef::Manifest { id: ManifestId([0; 32]), peer: String::new() },
+            DataRef::Manifest { id: ManifestId([0; 32]), peers: vec!["noport".into()] },
+            DataRef::Manifest { id: ManifestId([0; 32]), peers: vec![String::new()] },
+            DataRef::Manifest { id: ManifestId([0; 32]), peers: vec![] },
+            DataRef::Manifest {
+                id: ManifestId([0; 32]),
+                // one bad peer poisons the whole list
+                peers: vec!["ok:1".into(), "noport".into()],
+            },
         ] {
             assert!(bad.validate().is_err(), "{bad:?}");
             let mut w = ByteWriter::new();
@@ -653,7 +953,7 @@ mod tests {
         let data: Vec<u8> = (0..10_000).map(|i| (i % 247) as u8).collect();
         let (store, id) = published_store(&dir, &data);
         let mut server = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
-        let dref = DataRef::Manifest { id, peer: server.peer().to_string() };
+        let dref = DataRef::manifest(id, server.peer());
 
         let dp = DataPlane::new(1 << 20);
         let mut obj = dp.open(&dref).unwrap();
@@ -681,11 +981,9 @@ mod tests {
         let server =
             BlockServer::serve(Arc::new(store), "127.0.0.1:0", "127.0.0.1").unwrap();
         let dp = DataPlane::new(1 << 20);
-        dp.open(&DataRef::Manifest { id: id_a, peer: server.peer().to_string() })
-            .unwrap();
+        dp.open(&DataRef::manifest(id_a, server.peer())).unwrap();
         let used_after_a = dp.cache().used_bytes();
-        dp.open(&DataRef::Manifest { id: id_b, peer: server.peer().to_string() })
-            .unwrap();
+        dp.open(&DataRef::manifest(id_b, server.peer())).unwrap();
         let grew = dp.cache().used_bytes() - used_after_a;
         // object b adds only its manifest + its one distinct block —
         // identical content (vec![7; 2048] is one deduped block id) rides
@@ -737,11 +1035,217 @@ mod tests {
         drop(listener);
         let id = ManifestId(crate::util::sha256::digest(b"unreachable"));
         let dp = DataPlane::new(1 << 20);
-        let err = dp
-            .open(&DataRef::Manifest { id, peer: peer.clone() })
-            .unwrap_err();
+        let err = dp.open(&DataRef::manifest(id, peer.clone())).unwrap_err();
         let msg = err.to_string();
         assert!(err.is_retryable(), "lost peer must be retryable: {msg}");
         assert!(msg.contains(&peer), "peer lost from error: {msg}");
+    }
+
+    /// Satellite regression: `./x`, the plain path, and a symlink to the
+    /// same file must share one cache entry, not cache three copies.
+    #[test]
+    fn path_aliases_share_one_cache_entry() {
+        let dir = tmp_dir("alias");
+        let path = dir.join("drive.bag");
+        let data = vec![0xABu8; 4096];
+        std::fs::write(&path, &data).unwrap();
+        let link = dir.join("drive-link.bag");
+        #[cfg(unix)]
+        std::os::unix::fs::symlink(&path, &link).unwrap();
+        #[cfg(not(unix))]
+        std::fs::hard_link(&path, &link).unwrap();
+
+        let dp = DataPlane::new(1 << 20);
+        let direct = path.to_str().unwrap().to_string();
+        // a dot-relative alias of the same file
+        let dotted = format!(
+            "{}/./{}",
+            dir.to_str().unwrap(),
+            path.file_name().unwrap().to_str().unwrap()
+        );
+        dp.open(&DataRef::path(&direct)).unwrap();
+        let used_once = dp.cache().used_bytes();
+        dp.open(&DataRef::path(&dotted)).unwrap();
+        dp.open(&DataRef::path(link.to_str().unwrap())).unwrap();
+        assert_eq!(
+            dp.cache().used_bytes(),
+            used_once,
+            "aliased paths must not duplicate the bytes"
+        );
+        let (hits, misses, _) = dp.cache().stats();
+        assert_eq!((hits, misses), (2, 1), "aliases must hit the first entry");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Satellite regression: the single-flight map must drain after
+    /// resolutions complete (success *and* failure paths) instead of
+    /// leaking one gate per manifest ever resolved.
+    #[test]
+    fn inflight_gates_drain_after_resolution() {
+        let dir = tmp_dir("drain");
+        let data: Vec<u8> = (0..8000).map(|i| (i % 251) as u8).collect();
+        let (store, id) = published_store(&dir, &data);
+        let server = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+        let dp = DataPlane::new(1 << 20);
+        dp.open(&DataRef::manifest(id, server.peer())).unwrap();
+        assert_eq!(dp.inflight_len(), 0, "gate leaked after successful resolution");
+
+        // concurrent resolutions of the same manifest also drain
+        let mut handles = Vec::new();
+        for _ in 0..4 {
+            let dp2 = dp.clone();
+            let dref = DataRef::manifest(id, server.peer());
+            handles.push(std::thread::spawn(move || dp2.open(&dref).map(|_| ())));
+        }
+        for h in handles {
+            h.join().unwrap().unwrap();
+        }
+        assert_eq!(dp.inflight_len(), 0, "gate leaked after concurrent resolutions");
+
+        // failed resolutions must not leak either
+        let ghost = ManifestId(crate::util::sha256::digest(b"never published"));
+        let fast = DataPlane::new(1 << 20).with_fetch_timeout(Duration::from_millis(50));
+        assert!(fast.open(&DataRef::manifest(ghost, "127.0.0.1:1")).is_err());
+        assert_eq!(fast.inflight_len(), 0, "gate leaked after failed resolution");
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Tentpole: a dead first peer falls back to the next peer in the
+    /// list, and the whole object still resolves and verifies.
+    #[test]
+    fn dead_first_peer_falls_back_to_next() {
+        let dir = tmp_dir("fallback");
+        let data: Vec<u8> = (0..6000).map(|i| (i % 249) as u8).collect();
+        let (store, id) = published_store(&dir, &data);
+        let server = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+        // a reserved-then-closed port: connect fails fast
+        let dead = {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let addr = l.local_addr().unwrap().to_string();
+            drop(l);
+            addr
+        };
+        let dp = DataPlane::new(1 << 20).with_fetch_timeout(Duration::from_millis(200));
+        use crate::bag::ChunkStore;
+        let mut obj = dp
+            .open(&DataRef::Manifest {
+                id,
+                peers: vec![dead, server.peer().to_string()],
+            })
+            .unwrap();
+        assert_eq!(obj.read_at(0, data.len()).unwrap(), data);
+    }
+
+    /// Tentpole: a peer that dies *mid-fetch* (manifest served, then
+    /// connection dropped) loses only the block in flight — the
+    /// requester re-fetches it from the next peer and keeps the blocks
+    /// it already verified.
+    #[test]
+    fn mid_fetch_peer_death_falls_back_to_next_peer() {
+        let dir = tmp_dir("midfetch");
+        let data: Vec<u8> = (0..5000).map(|i| (i % 241) as u8).collect();
+        let (store, id) = published_store(&dir, &data);
+
+        // treacherous peer: answers the handshake and the manifest
+        // fetch, serves block 0, then slams the connection shut
+        let treacherous = TcpListener::bind("127.0.0.1:0").unwrap();
+        let taddr = treacherous.local_addr().unwrap().to_string();
+        let tstore = store.clone();
+        let thandle = std::thread::spawn(move || {
+            let (stream, _) = treacherous.accept().unwrap();
+            let mut reader = std::io::BufReader::new(stream.try_clone().unwrap());
+            let mut writer = std::io::BufWriter::new(stream);
+            let mut served_blocks = 0usize;
+            loop {
+                match read_msg(&mut reader) {
+                    Ok(Some(RpcMsg::Hello { .. })) => write_msg(
+                        &mut writer,
+                        &RpcMsg::HelloOk { version: RPC_VERSION, worker_id: BLOCK_PEER_ID },
+                    )
+                    .unwrap(),
+                    Ok(Some(RpcMsg::FetchManifest { id })) => {
+                        let m = tstore.manifest(&ManifestId(id)).unwrap();
+                        write_msg(&mut writer, &RpcMsg::ManifestData(m.encode())).unwrap();
+                    }
+                    Ok(Some(RpcMsg::FetchBlock { manifest, index })) => {
+                        if served_blocks >= 1 {
+                            return; // die mid-fetch: request read, no reply
+                        }
+                        served_blocks += 1;
+                        let m = tstore.manifest(&ManifestId(manifest)).unwrap();
+                        let bytes = tstore
+                            .read_block(
+                                &m.blocks[index as usize],
+                                m.block_offset(index as usize),
+                            )
+                            .unwrap();
+                        write_msg(&mut writer, &RpcMsg::BlockData(bytes)).unwrap();
+                    }
+                    _ => return,
+                }
+            }
+        });
+
+        let healthy = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+        let dp = DataPlane::new(1 << 20).with_fetch_timeout(Duration::from_secs(2));
+        use crate::bag::ChunkStore;
+        let mut obj = dp
+            .open(&DataRef::Manifest {
+                id,
+                peers: vec![taddr, healthy.peer().to_string()],
+            })
+            .unwrap();
+        assert_eq!(obj.read_at(0, data.len()).unwrap(), data);
+        thandle.join().unwrap();
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    /// Tentpole: a warm worker's `DataPlane` cache serves the swarm —
+    /// and keeps serving correctly (via `FetchErr` + fallback) while
+    /// its LRU evicts blocks under it.
+    #[test]
+    fn cache_backed_serving_survives_lru_eviction_races() {
+        use crate::bag::ChunkStore;
+        let dir = tmp_dir("swarmserve");
+        let data: Vec<u8> = (0..20_000).map(|i| (i % 239) as u8).collect();
+        let (store, id) = published_store(&dir, &data);
+        let driver = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+
+        // warm worker: resolves from the driver, then serves its cache
+        let warm = Arc::new(DataPlane::new(1 << 20));
+        warm.open(&DataRef::manifest(id, driver.peer())).unwrap();
+        assert_eq!(warm.resident_manifests(), vec![id], "warm cache must advertise");
+        let warm_srv: Arc<dyn BlockSource> = warm.clone();
+        let warm_server =
+            BlockServer::serve_source(warm_srv, "127.0.0.1:0", "127.0.0.1").unwrap();
+
+        // cold worker fetches from the warm sibling first, driver last,
+        // while a churn thread thrashes the warm worker's LRU
+        let churn_stop = Arc::new(AtomicBool::new(false));
+        let churner = {
+            let warm = warm.clone();
+            let stop = churn_stop.clone();
+            std::thread::spawn(move || {
+                let mut i = 0u64;
+                while !stop.load(Ordering::SeqCst) {
+                    // oversized junk entries force evictions
+                    warm.cache().put_shared(&format!("junk:{i}"), vec![0u8; 900 << 10]);
+                    i += 1;
+                }
+            })
+        };
+        for round in 0..4 {
+            let cold = DataPlane::new(1 << 20);
+            let mut obj = cold
+                .open(&DataRef::Manifest {
+                    id,
+                    peers: vec![warm_server.peer().to_string(), driver.peer().to_string()],
+                })
+                .unwrap_or_else(|e| panic!("round {round}: {e}"));
+            assert_eq!(obj.read_at(0, data.len()).unwrap(), data, "round {round}");
+        }
+        churn_stop.store(true, Ordering::SeqCst);
+        churner.join().unwrap();
+        std::fs::remove_dir_all(dir).ok();
     }
 }

@@ -36,6 +36,7 @@
 //! ]);
 //! ```
 
+use super::scheduler::Speculation;
 use super::worker::WorkerClient;
 use crate::config::{flatten_json, parse_toml, TomlValue};
 use crate::error::{Error, Result};
@@ -160,6 +161,12 @@ pub struct ClusterSpec {
     /// only right for single-box fleets — multi-host manifests must set
     /// the driver's reachable address.
     pub advertise_host: Option<String>,
+    /// Speculative straggler re-execution policy for jobs against this
+    /// fleet (`[speculation]` section: `enabled`, `multiplier`,
+    /// `min_samples`). Naming the section enables speculation unless
+    /// `enabled = false` is given; `None` means the manifest is silent
+    /// and the driver's own default (off) applies.
+    pub speculation: Option<Speculation>,
 }
 
 impl ClusterSpec {
@@ -201,6 +208,7 @@ impl ClusterSpec {
         let mut launch_program = None;
         let mut store_root = None;
         let mut advertise_host = None;
+        let mut speculation: Option<Speculation> = None;
         let mut hosts: Vec<String> = Vec::new();
         let mut capacity = 1usize;
         for (key, val) in doc {
@@ -215,6 +223,23 @@ impl ClusterSpec {
                 "launch.program" => launch_program = Some(val.as_str()?.to_string()),
                 "storage.root" => store_root = Some(val.as_str()?.to_string()),
                 "storage.advertise" => advertise_host = Some(val.as_str()?.to_string()),
+                "speculation.enabled" => {
+                    speculation.get_or_insert_with(Speculation::on).enabled = val.as_bool()?
+                }
+                "speculation.multiplier" => {
+                    let m = val.as_f64()?;
+                    if !(m.is_finite() && m > 0.0) {
+                        return Err(Error::Config(format!(
+                            "cluster spec: speculation.multiplier must be a \
+                             positive number, got {m}"
+                        )));
+                    }
+                    speculation.get_or_insert_with(Speculation::on).multiplier = m;
+                }
+                "speculation.min_samples" => {
+                    speculation.get_or_insert_with(Speculation::on).min_samples =
+                        val.as_usize()?
+                }
                 other => {
                     return Err(Error::Config(format!(
                         "cluster spec: unknown key '{other}'"
@@ -260,6 +285,7 @@ impl ClusterSpec {
             launch_program,
             store_root,
             advertise_host,
+            speculation,
         })
     }
 
@@ -441,6 +467,7 @@ mod tests {
         assert!(spec.launch_program.is_none());
         assert!(spec.store_root.is_none());
         assert!(spec.advertise_host.is_none());
+        assert!(spec.speculation.is_none());
         assert!(spec.workers[0].is_local());
     }
 
@@ -453,6 +480,36 @@ mod tests {
         .unwrap();
         assert_eq!(spec.store_root.as_deref(), Some("/srv/av-store"));
         assert_eq!(spec.advertise_host.as_deref(), Some("10.0.0.1"));
+    }
+
+    #[test]
+    fn speculation_section_parses() {
+        // naming any key enables speculation with defaults filled in
+        let spec = ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"10.0.0.2:7077\"]\n\
+             [speculation]\nmultiplier = 2.0\n",
+        )
+        .unwrap();
+        let s = spec.speculation.unwrap();
+        assert!(s.enabled);
+        assert_eq!(s.multiplier, 2.0);
+        assert_eq!(s.min_samples, Speculation::default().min_samples);
+        // explicit opt-out keeps tuned values but disables
+        let spec = ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"10.0.0.2:7077\"]\n\
+             [speculation]\nenabled = false\nmin_samples = 9\n",
+        )
+        .unwrap();
+        let s = spec.speculation.unwrap();
+        assert!(!s.enabled);
+        assert_eq!(s.min_samples, 9);
+        // nonsense multipliers fail loudly
+        for bad in ["0.0", "-1.5", "nan"] {
+            let toml = format!(
+                "[workers]\nhosts = [\"h:7077\"]\n[speculation]\nmultiplier = {bad}\n"
+            );
+            assert!(ClusterSpec::from_toml_text(&toml).is_err(), "accepted {bad}");
+        }
     }
 
     #[test]
@@ -537,6 +594,7 @@ mod tests {
             launch_program: None,
             store_root: None,
             advertise_host: None,
+            speculation: None,
         };
         let health = probe(&spec);
         assert_eq!(health.len(), 1);

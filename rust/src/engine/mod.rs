@@ -55,10 +55,13 @@ pub mod worker;
 
 pub use cluster::{Cluster, LocalCluster};
 pub use context::{Rdd, SimContext};
-pub use data::{BlockClient, BlockServer, DataPlane, DataRef};
+pub use data::{BlockClient, BlockServer, BlockSource, DataPlane, DataRef, SwarmRegistry};
 pub use deploy::{ClusterSpec, WorkerEndpoint, WorkerHealth};
 pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 pub use remote::StandaloneCluster;
-pub use scheduler::{run_job, run_job_rounds, run_provider, JobReport, TaskProvider};
-pub use stream::{Completion, TaskStream};
+pub use scheduler::{
+    run_job, run_job_rounds, run_job_with, run_provider, run_provider_with, JobReport,
+    Speculation, TaskProvider,
+};
+pub use stream::{Completion, CompletionWait, TaskStream};

@@ -24,6 +24,7 @@
 //! absorbs capacity that comes up after the job started.
 
 use super::cluster::Cluster;
+use super::data::SwarmRegistry;
 use super::deploy::ClusterSpec;
 use super::plan::TaskSpec;
 use super::stream::TaskStream;
@@ -62,6 +63,10 @@ struct Workers {
     /// (and its completions) can be dropped by the scheduler. Late
     /// joiners attach to every stream still alive here.
     streams: Mutex<Vec<Weak<TaskStream>>>,
+    /// Which manifests each worker's block cache holds, fed by the
+    /// `BlockAd` frames workers piggyback on task replies. Data sources
+    /// consult it to order warm sibling peers ahead of the driver.
+    swarm: SwarmRegistry,
 }
 
 /// Cluster of standalone worker processes (spawned locally or dialed
@@ -132,6 +137,7 @@ impl StandaloneCluster {
             inner: Arc::new(Workers {
                 workers: Mutex::new(workers),
                 streams: Mutex::new(Vec::new()),
+                swarm: SwarmRegistry::default(),
             }),
             owns_workers: true,
         })
@@ -158,6 +164,7 @@ impl StandaloneCluster {
             inner: Arc::new(Workers {
                 workers: Mutex::new(workers),
                 streams: Mutex::new(Vec::new()),
+                swarm: SwarmRegistry::default(),
             }),
             owns_workers: false,
         })
@@ -184,9 +191,10 @@ impl StandaloneCluster {
         for stream in live {
             stream.attach_worker();
             let w = worker.clone();
+            let swarm = self.inner.swarm.clone();
             std::thread::Builder::new()
                 .name(format!("av-simd-feeder-join-{addr}"))
-                .spawn(move || feeder_loop(&w, &stream))
+                .spawn(move || feeder_loop(&w, &stream, &swarm))
                 .expect("spawn feeder thread");
         }
         Ok(())
@@ -278,12 +286,17 @@ impl Cluster for StandaloneCluster {
         }
         for (i, w) in workers.into_iter().enumerate() {
             let stream2 = stream.clone();
+            let swarm = self.inner.swarm.clone();
             std::thread::Builder::new()
                 .name(format!("av-simd-feeder-{i}"))
-                .spawn(move || feeder_loop(&w, &stream2))
+                .spawn(move || feeder_loop(&w, &stream2, &swarm))
                 .expect("spawn feeder thread");
         }
         stream
+    }
+
+    fn swarm(&self) -> Option<SwarmRegistry> {
+        Some(self.inner.swarm.clone())
     }
 
     fn shutdown(&self) {
@@ -314,8 +327,10 @@ struct InFlight {
 
 /// Feeder: stream tasks to one worker connection, keeping up to
 /// [`PIPELINE_DEPTH`] in flight, until the stream closes or the
-/// transport dies. Detaches from the stream on every exit path.
-fn feeder_loop(w: &RemoteWorker, stream: &TaskStream) {
+/// transport dies. Detaches from the stream on every exit path. Swarm
+/// cache advertisements riding on task replies are forwarded to the
+/// cluster's registry after every receive.
+fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry) {
     struct Detach<'a>(&'a TaskStream);
     impl Drop for Detach<'_> {
         fn drop(&mut self) {
@@ -380,15 +395,16 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream) {
 
         // Read one reply (FIFO per connection).
         let f = inflight.pop_front().expect("pipeline fill guarantees one in flight");
-        match client.recv_reply(f.spec.task_id) {
+        let reply = client.recv_reply(f.spec.task_id);
+        for (peer, manifests) in client.take_advertisements() {
+            swarm.advertise(&peer, &manifests);
+        }
+        match reply {
             Ok(out) => {
                 stream.complete(f.seq, f.spec, Ok(out), f.queue_wait, f.sent_at.elapsed())
             }
             Err(e) => {
-                let msg = e.to_string();
-                let transport_dead = matches!(e, Error::Io(_))
-                    || msg.contains("hung up")
-                    || msg.contains("died mid-frame");
+                let transport_dead = e.is_transport_death();
                 stream.complete(
                     f.seq,
                     f.spec,
@@ -426,10 +442,13 @@ fn fail_undispatched(
         );
     }
     if let Some((seq, spec, queue_wait)) = deferred.take() {
+        // the deferred task was never dispatched — don't claim it was
         stream.complete(
             seq,
             spec,
-            Err(Error::Engine(format!("worker {addr} lost with task in flight"))),
+            Err(Error::Engine(format!(
+                "worker {addr} lost before dispatch: queued task never sent"
+            ))),
             queue_wait,
             Duration::ZERO,
         );

@@ -32,7 +32,11 @@ pub const MAX_FRAME: u32 = 1 << 30;
 /// v2: the data-plane frames ([`RpcMsg::FetchManifest`] /
 /// [`RpcMsg::FetchBlock`] and replies) plus `DataRef`-carrying task
 /// sources — v1 workers cannot decode v2 `TaskSpec` payloads.
-pub const RPC_VERSION: u32 = 2;
+///
+/// v3: the swarm — [`RpcMsg::BlockAd`] cache advertisements and the
+/// ordered *peer list* in `DataRef::Manifest` task payloads (v2 workers
+/// expect a single peer string and cannot decode v3 `TaskSpec`s).
+pub const RPC_VERSION: u32 = 3;
 
 /// RPC message.
 #[derive(Debug, Clone, PartialEq)]
@@ -90,6 +94,17 @@ pub enum RpcMsg {
     /// Block peer → requester: a fetch failed (missing manifest, bad
     /// index, corrupt block on the serving side).
     FetchErr(String),
+    /// Worker → driver: swarm cache advertisement, piggybacked on the
+    /// task connection ahead of a task reply whenever the worker's set
+    /// of cache-resident manifests has changed. The driver records
+    /// `peer` (the worker's dialable block-server `host:port`) as a
+    /// fetch source for each advertised manifest.
+    BlockAd {
+        /// The advertising worker's block-server endpoint.
+        peer: String,
+        /// Manifest ids fully resident in the worker's cache.
+        manifests: Vec<[u8; 32]>,
+    },
 }
 
 impl RpcMsg {
@@ -108,6 +123,7 @@ impl RpcMsg {
             RpcMsg::FetchBlock { .. } => 11,
             RpcMsg::BlockData(_) => 12,
             RpcMsg::FetchErr(_) => 13,
+            RpcMsg::BlockAd { .. } => 14,
         }
     }
 }
@@ -115,6 +131,7 @@ impl RpcMsg {
 /// Write one frame.
 pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
     let mut scratch = [0u8; 36];
+    let mut dynbuf = Vec::new();
     let payload: &[u8] = match msg {
         RpcMsg::RunTask(b) | RpcMsg::TaskOk(b) => b,
         RpcMsg::ManifestData(b) | RpcMsg::BlockData(b) => b,
@@ -136,6 +153,18 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
             scratch[..32].copy_from_slice(manifest);
             scratch[32..36].copy_from_slice(&index.to_le_bytes());
             &scratch[..36]
+        }
+        RpcMsg::BlockAd { peer, manifests } => {
+            // peer_len:u16 ‖ peer ‖ count:u32 ‖ count × id[32]
+            let peer_len = u16::try_from(peer.len())
+                .map_err(|_| Error::Engine(format!("BlockAd peer too long: {}", peer.len())))?;
+            dynbuf.extend_from_slice(&peer_len.to_le_bytes());
+            dynbuf.extend_from_slice(peer.as_bytes());
+            dynbuf.extend_from_slice(&(manifests.len() as u32).to_le_bytes());
+            for id in manifests {
+                dynbuf.extend_from_slice(id);
+            }
+            &dynbuf
         }
         _ => &[],
     };
@@ -169,7 +198,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
     let mut ty_buf = [0u8; 1];
     r.read_exact(&mut ty_buf).map_err(|e| {
         if e.kind() == std::io::ErrorKind::UnexpectedEof {
-            Error::Engine("connection died mid-frame".into())
+            Error::Transport("connection died mid-frame".into())
         } else {
             Error::Io(e)
         }
@@ -181,7 +210,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
         .read_to_end(&mut payload)
         .map_err(Error::Io)?;
     if payload.len() < payload_len {
-        return Err(Error::Engine("connection died mid-frame".into()));
+        return Err(Error::Transport("connection died mid-frame".into()));
     }
     let msg = match ty {
         1 => RpcMsg::RunTask(payload),
@@ -243,6 +272,30 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
             String::from_utf8(payload)
                 .map_err(|_| Error::Engine("FetchErr not utf-8".into()))?,
         ),
+        14 => {
+            let bad = |what: &str| {
+                Error::Engine(format!("bad BlockAd payload ({what}, {} bytes)", payload.len()))
+            };
+            if payload.len() < 2 {
+                return Err(bad("missing peer length"));
+            }
+            let peer_len = u16::from_le_bytes(payload[..2].try_into().unwrap()) as usize;
+            if payload.len() < 2 + peer_len + 4 {
+                return Err(bad("truncated peer or count"));
+            }
+            let peer = std::str::from_utf8(&payload[2..2 + peer_len])
+                .map_err(|_| bad("peer not utf-8"))?
+                .to_string();
+            let count = u32::from_le_bytes(
+                payload[2 + peer_len..2 + peer_len + 4].try_into().unwrap(),
+            ) as usize;
+            let ids = &payload[2 + peer_len + 4..];
+            if ids.len() != count * 32 {
+                return Err(bad("manifest id list length mismatch"));
+            }
+            let manifests = ids.chunks_exact(32).map(|c| c.try_into().unwrap()).collect();
+            RpcMsg::BlockAd { peer, manifests }
+        }
         other => return Err(Error::Engine(format!("unknown rpc type {other}"))),
     };
     Ok(Some(msg))
@@ -277,6 +330,42 @@ mod tests {
         roundtrip(RpcMsg::FetchBlock { manifest: [0xAB; 32], index: u32::MAX });
         roundtrip(RpcMsg::BlockData(vec![0; 100]));
         roundtrip(RpcMsg::FetchErr("no such block".into()));
+        roundtrip(RpcMsg::BlockAd { peer: "10.0.0.9:7200".into(), manifests: vec![] });
+        roundtrip(RpcMsg::BlockAd {
+            peer: "worker-3.fleet:7200".into(),
+            manifests: vec![[0u8; 32], [0xFF; 32], [7; 32]],
+        });
+    }
+
+    #[test]
+    fn truncated_block_ad_payloads_rejected() {
+        // well-formed ad, then cut at every interesting boundary
+        let mut buf = Vec::new();
+        write_msg(
+            &mut buf,
+            &RpcMsg::BlockAd { peer: "h:1".into(), manifests: vec![[1u8; 32]] },
+        )
+        .unwrap();
+        let payload_start = 5; // len:u32 + type:u8
+        for cut in [1usize, 3, 6, 20] {
+            // rebuild a frame whose payload is truncated to `cut` bytes
+            let payload = &buf[payload_start..payload_start + cut];
+            let mut frame = Vec::new();
+            frame.extend_from_slice(&((payload.len() + 1) as u32).to_le_bytes());
+            frame.push(14);
+            frame.extend_from_slice(payload);
+            let mut cur = &frame[..];
+            assert!(read_msg(&mut cur).is_err(), "BlockAd with {cut}-byte payload");
+        }
+    }
+
+    #[test]
+    fn mid_frame_eof_is_typed_transport_death() {
+        let mut buf = Vec::new();
+        write_msg(&mut buf, &RpcMsg::RunTask(vec![0; 100])).unwrap();
+        let mut cur = &buf[..20];
+        let err = read_msg(&mut cur).unwrap_err();
+        assert!(err.is_transport_death(), "mid-frame EOF must be typed: {err}");
     }
 
     #[test]

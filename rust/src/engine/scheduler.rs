@@ -20,8 +20,44 @@
 
 use super::cluster::Cluster;
 use super::plan::{TaskOutput, TaskSpec};
+use super::stream::{CompletionWait, TaskStream};
 use crate::error::{Error, Result};
+use std::collections::HashMap;
 use std::time::{Duration, Instant};
+
+/// How often the speculative scheduler wakes to scan for stragglers
+/// while no completions are arriving.
+const SPECULATION_POLL: Duration = Duration::from_millis(20);
+
+/// Speculative-execution policy for straggler tasks (Spark's
+/// `spark.speculation`): once at least `min_samples` attempts have
+/// completed, a running attempt whose wall exceeds `multiplier` × the
+/// p95 completed-attempt wall gets a duplicate submitted — provided
+/// idle worker capacity exists — and whichever completion lands first
+/// resolves the sequence slot (the loser is discarded, so results stay
+/// byte-identical to a non-speculative run).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Speculation {
+    /// Master switch; `false` means the scheduler never duplicates work.
+    pub enabled: bool,
+    /// Straggler threshold as a multiple of the running p95 task wall.
+    pub multiplier: f64,
+    /// Completed-attempt samples required before any speculation.
+    pub min_samples: usize,
+}
+
+impl Default for Speculation {
+    fn default() -> Self {
+        Self { enabled: false, multiplier: 1.5, min_samples: 4 }
+    }
+}
+
+impl Speculation {
+    /// Speculation enabled with the default tuning (1.5× p95, 4 samples).
+    pub fn on() -> Self {
+        Self { enabled: true, ..Self::default() }
+    }
+}
 
 /// Per-job execution report.
 #[derive(Debug, Clone)]
@@ -44,6 +80,9 @@ pub struct JobReport {
     pub queue_wait_p50: Duration,
     /// 95th-percentile queue wait.
     pub queue_wait_p95: Duration,
+    /// Speculative duplicate attempts launched for straggler tasks
+    /// (zero unless [`Speculation::enabled`]).
+    pub speculations: usize,
 }
 
 impl JobReport {
@@ -57,6 +96,7 @@ impl JobReport {
             task_wall_p95: Duration::ZERO,
             queue_wait_p50: Duration::ZERO,
             queue_wait_p95: Duration::ZERO,
+            speculations: 0,
         }
     }
 }
@@ -106,10 +146,72 @@ pub trait TaskProvider {
 /// Run a provider-driven job to completion with bounded retries,
 /// streaming. This is the one completion/retry/metrics loop every
 /// driver (fixed jobs, adaptive sweeps, bag replays) goes through.
+/// Speculation is off; see [`run_provider_with`] for the policy knob.
 pub fn run_provider(
     cluster: &dyn Cluster,
     provider: &mut dyn TaskProvider,
     max_retries: usize,
+) -> Result<JobReport> {
+    run_provider_with(cluster, provider, max_retries, Speculation::default())
+}
+
+/// Live-attempt bookkeeping for one unresolved sequence slot (only kept
+/// while speculation is enabled).
+struct Running {
+    spec: TaskSpec,
+    started: Instant,
+    /// Attempts currently in flight for this slot (1, or 2 with a twin).
+    attempts: usize,
+    /// A duplicate was already launched; never speculate a slot twice
+    /// per attempt.
+    speculated: bool,
+}
+
+/// Scan running attempts for stragglers and submit duplicates while
+/// idle worker capacity exists. Returns the number launched.
+fn speculate_stragglers(
+    cluster: &dyn Cluster,
+    stream: &TaskStream,
+    running: &mut HashMap<u64, Running>,
+    walls: &[Duration],
+    policy: Speculation,
+) -> usize {
+    if walls.len() < policy.min_samples.max(1) {
+        return 0;
+    }
+    let mut sorted = walls.to_vec();
+    let p95 = percentile(&mut sorted, 0.95);
+    // 1 ms floor so near-zero p95s (instant tasks) cannot make every
+    // task look like a straggler the moment it is popped
+    let threshold =
+        Duration::from_secs_f64((p95.as_secs_f64() * policy.multiplier).max(0.001));
+    let mut launched = 0usize;
+    for (seq, r) in running.iter_mut() {
+        if stream.pending() > 0 || stream.in_flight() >= cluster.workers() {
+            break; // no idle capacity — never queue duplicates behind real work
+        }
+        if r.speculated || r.attempts != 1 || r.started.elapsed() <= threshold {
+            continue;
+        }
+        stream.submit(*seq, r.spec.clone());
+        r.attempts = 2;
+        r.speculated = true;
+        launched += 1;
+    }
+    launched
+}
+
+/// [`run_provider`] with an explicit [`Speculation`] policy. With
+/// speculation on, the scheduler polls completions on a short timeout,
+/// duplicates straggler attempts onto idle workers, resolves each
+/// sequence slot with whichever completion lands first (the loser is
+/// discarded wholesale — it touches neither provider state nor the
+/// timing samples), and returns without waiting out losing attempts.
+pub fn run_provider_with(
+    cluster: &dyn Cluster,
+    provider: &mut dyn TaskProvider,
+    max_retries: usize,
+    speculation: Speculation,
 ) -> Result<JobReport> {
     let start = Instant::now();
     let mut walls: Vec<Duration> = Vec::new();
@@ -119,7 +221,10 @@ pub fn run_provider(
     let mut outstanding = 0usize;
     let mut exhausted = false;
     let mut retries_used = 0usize;
+    let mut speculations = 0usize;
     let mut first_err: Option<Error> = None;
+    // live sequence slots → attempt bookkeeping (speculation only)
+    let mut running: HashMap<u64, Running> = HashMap::new();
 
     let m = crate::metrics::Metrics::global();
     let wall_hist = m.histogram("engine_task_wall");
@@ -140,6 +245,17 @@ pub fn run_provider(
                     if submitted == 0 {
                         job_id = t.job_id;
                     }
+                    if speculation.enabled {
+                        running.insert(
+                            submitted,
+                            Running {
+                                spec: t.clone(),
+                                started: Instant::now(),
+                                attempts: 1,
+                                speculated: false,
+                            },
+                        );
+                    }
                     stream.submit(submitted, t);
                     submitted += 1;
                     outstanding += 1;
@@ -150,20 +266,40 @@ pub fn run_provider(
         if outstanding == 0 {
             break;
         }
-        let Some(c) = stream.next_completion() else {
+        let c = if speculation.enabled {
+            match stream.next_completion_timeout(SPECULATION_POLL) {
+                CompletionWait::Completion(c) => Some(c),
+                CompletionWait::Drained => None,
+                CompletionWait::TimedOut => {
+                    speculations +=
+                        speculate_stragglers(cluster, &stream, &mut running, &walls, speculation);
+                    continue;
+                }
+            }
+        } else {
+            stream.next_completion()
+        };
+        let Some(c) = c else {
             return Err(first_err.unwrap_or_else(|| {
                 Error::Engine(format!(
                     "job {job_id}: task stream ended with {outstanding} task(s) unresolved"
                 ))
             }));
         };
-        outstanding -= 1;
+        if speculation.enabled && !running.contains_key(&c.seq) {
+            // the losing twin of an already-resolved slot: discard it
+            // wholesale (its wall would double-count in the metrics and
+            // skew the straggler threshold)
+            continue;
+        }
+        outstanding -= 1; // tentatively resolved; retry/absorb re-raises
         walls.push(c.wall);
         waits.push(c.queue_wait);
         wall_hist.observe(c.wall);
         wait_hist.observe(c.queue_wait);
         match c.result {
             Ok(out) => {
+                running.remove(&c.seq);
                 if first_err.is_none() {
                     if let Err(e) = provider.on_output(c.seq, out, c.wall) {
                         first_err = Some(e);
@@ -171,6 +307,22 @@ pub fn run_provider(
                 }
             }
             Err(e) => {
+                let live = running.get(&c.seq).map(|r| r.attempts).unwrap_or(1);
+                if speculation.enabled && live > 1 {
+                    // this slot's twin is still executing and may yet
+                    // succeed — absorb the failure instead of retrying
+                    crate::logmsg!(
+                        "warn",
+                        "job {job_id} task {} attempt failed with twin in flight \
+                         (absorbed): {e}",
+                        c.spec.task_id
+                    );
+                    if let Some(r) = running.get_mut(&c.seq) {
+                        r.attempts -= 1;
+                    }
+                    outstanding += 1;
+                    continue;
+                }
                 crate::logmsg!(
                     "warn",
                     "job {job_id} task {} attempt {} failed: {e}",
@@ -186,24 +338,41 @@ pub fn run_provider(
                     let mut t = c.spec;
                     t.attempt += 1;
                     retries_used += 1;
+                    if speculation.enabled {
+                        if let Some(r) = running.get_mut(&c.seq) {
+                            r.spec = t.clone();
+                            r.started = Instant::now();
+                            r.speculated = false; // a fresh attempt may speculate anew
+                        }
+                    }
                     stream.submit(c.seq, t);
                     outstanding += 1;
-                } else if first_err.is_none() {
-                    first_err = Some(Error::Engine(format!(
-                        "job {job_id} task {} failed after {} attempt(s): {e}",
-                        c.spec.task_id,
-                        c.spec.attempt + 1
-                    )));
+                } else {
+                    running.remove(&c.seq);
+                    if first_err.is_none() {
+                        first_err = Some(Error::Engine(format!(
+                            "job {job_id} task {} failed after {} attempt(s): {e}",
+                            c.spec.task_id,
+                            c.spec.attempt + 1
+                        )));
+                    }
                 }
             }
         }
     }
-    stream.close();
+    if speculation.enabled {
+        // don't wait out losing straggler attempts — that wait is the
+        // tail latency speculation exists to cut
+        stream.abandon();
+    } else {
+        stream.close();
+    }
 
     if let Some(e) = first_err {
         return Err(e);
     }
     let mut report = JobReport::new(job_id, submitted as usize, retries_used, start.elapsed());
+    report.speculations = speculations;
     report.task_wall_p50 = percentile(&mut walls, 0.50);
     report.task_wall_p95 = percentile(&mut walls, 0.95);
     report.queue_wait_p50 = percentile(&mut waits, 0.50);
@@ -212,6 +381,7 @@ pub fn run_provider(
     m.counter("engine_jobs_completed").inc();
     m.counter("engine_tasks_completed").add(submitted);
     m.counter("engine_task_retries").add(retries_used as u64);
+    m.counter("engine_task_speculations").add(speculations as u64);
     m.histogram("engine_job_wall").observe(report.wall);
     Ok(report)
 }
@@ -242,12 +412,23 @@ pub fn run_job(
     tasks: Vec<TaskSpec>,
     max_retries: usize,
 ) -> Result<(Vec<TaskOutput>, JobReport)> {
+    run_job_with(cluster, tasks, max_retries, Speculation::default())
+}
+
+/// [`run_job`] with an explicit [`Speculation`] policy (the fixed-list
+/// convenience over [`run_provider_with`]).
+pub fn run_job_with(
+    cluster: &dyn Cluster,
+    tasks: Vec<TaskSpec>,
+    max_retries: usize,
+    speculation: Speculation,
+) -> Result<(Vec<TaskOutput>, JobReport)> {
     let total = tasks.len();
     let mut provider = VecProvider {
         tasks: tasks.into_iter(),
         outputs: (0..total).map(|_| None).collect(),
     };
-    let report = run_provider(cluster, &mut provider, max_retries)?;
+    let report = run_provider_with(cluster, &mut provider, max_retries, speculation)?;
     let outputs: Vec<TaskOutput> = provider
         .outputs
         .into_iter()
@@ -454,6 +635,65 @@ mod tests {
         w.put_varint(task_id as u64);
         w.put_varint(ms);
         w.into_vec()
+    }
+
+    /// Provider that counts `on_output` deliveries per sequence slot —
+    /// the dedup witness for speculative twins.
+    struct CountingProvider {
+        tasks: std::vec::IntoIter<TaskSpec>,
+        delivered: Vec<usize>,
+    }
+
+    impl TaskProvider for CountingProvider {
+        fn next_task(&mut self, _seq: u64) -> Option<TaskSpec> {
+            self.tasks.next()
+        }
+
+        fn on_output(&mut self, seq: u64, _output: TaskOutput, _wall: Duration) -> Result<()> {
+            self.delivered[seq as usize] += 1;
+            Ok(())
+        }
+    }
+
+    /// A zero multiplier makes every running task a straggler the moment
+    /// one sample exists; with an idle worker the scheduler must
+    /// duplicate the straggler, and first-completion-wins must deliver
+    /// every slot to the provider exactly once.
+    #[test]
+    fn speculative_duplicates_are_deduped_to_one_delivery_per_slot() {
+        let reg = OpRegistry::with_builtins();
+        stall_op(&reg);
+        let c = LocalCluster::new(2, reg, "artifacts");
+        // three quick tasks seed the wall samples; the fourth straggles
+        // long enough for the 20ms speculation poll to notice it
+        let mut tasks: Vec<TaskSpec> =
+            (0..3).map(|i| count_task(i, 4, vec![OpCall::new("stall_ms", stall_params(5))])).collect();
+        tasks.push(count_task(3, 4, vec![OpCall::new("stall_ms", stall_params(250))]));
+        let total = tasks.len();
+        let mut provider =
+            CountingProvider { tasks: tasks.into_iter(), delivered: vec![0; total] };
+        let policy = Speculation { enabled: true, multiplier: 0.0, min_samples: 1 };
+        let report = run_provider_with(&c, &mut provider, 2, policy).unwrap();
+        assert!(
+            provider.delivered.iter().all(|&n| n == 1),
+            "every slot delivered exactly once, got {:?}",
+            provider.delivered
+        );
+        assert!(report.speculations >= 1, "straggler was never speculated");
+        assert_eq!(report.tasks, 4);
+        assert_eq!(report.retries, 0, "speculation is not a retry");
+    }
+
+    /// Speculation off must leave the classic scheduler untouched: same
+    /// outputs, zero speculations reported.
+    #[test]
+    fn disabled_speculation_reports_zero_and_matches_plain_run() {
+        let c = LocalCluster::new(2, OpRegistry::with_builtins(), "artifacts");
+        let mk = || (0..6).map(|i| count_task(i, (i as u64 + 1) * 2, vec![])).collect();
+        let (plain, _) = run_job(&c, mk(), 2).unwrap();
+        let (with, report) = run_job_with(&c, mk(), 2, Speculation::default()).unwrap();
+        assert_eq!(plain, with);
+        assert_eq!(report.speculations, 0);
     }
 
     /// The retry-wave regression the streaming scheduler removes: a

@@ -42,10 +42,27 @@ struct StreamInner {
     done: VecDeque<Completion>,
     in_flight: usize,
     closed: bool,
+    /// Set by [`TaskStream::abandon`]: completions still owed by
+    /// executing workers are dropped on delivery instead of queued.
+    discard: bool,
     /// Attached workers (standalone feeders attach/detach; the local
     /// pool polls without attaching and sets `tracks_workers` false).
     workers: usize,
     tracks_workers: bool,
+}
+
+/// Outcome of a bounded wait for a completion
+/// ([`TaskStream::next_completion_timeout`]).
+#[derive(Debug)]
+pub enum CompletionWait {
+    /// A finished attempt arrived.
+    Completion(Completion),
+    /// The stream is closed and fully drained — no completion will ever
+    /// arrive again.
+    Drained,
+    /// The timeout elapsed with nothing to deliver (tasks may still be
+    /// pending or executing).
+    TimedOut,
 }
 
 /// A live streaming session between the scheduler and a set of workers.
@@ -74,6 +91,7 @@ impl TaskStream {
                 done: VecDeque::new(),
                 in_flight: 0,
                 closed: false,
+                discard: false,
                 workers: 0,
                 tracks_workers: false,
             }),
@@ -166,7 +184,9 @@ impl TaskStream {
         Some((seq, spec, enqueued.elapsed()))
     }
 
-    /// Worker side: deliver a finished attempt.
+    /// Worker side: deliver a finished attempt. After
+    /// [`TaskStream::abandon`] the result is dropped (the in-flight
+    /// count still settles, so worker bookkeeping stays consistent).
     pub fn complete(
         &self,
         seq: u64,
@@ -178,7 +198,9 @@ impl TaskStream {
         let mut g = self.inner.lock().unwrap();
         debug_assert!(g.in_flight > 0, "complete without matching pop");
         g.in_flight = g.in_flight.saturating_sub(1);
-        g.done.push_back(Completion { seq, spec, result, queue_wait, wall });
+        if !g.discard {
+            g.done.push_back(Completion { seq, spec, result, queue_wait, wall });
+        }
         self.done_ready.notify_all();
     }
 
@@ -196,6 +218,57 @@ impl TaskStream {
             }
             g = self.done_ready.wait(g).unwrap();
         }
+    }
+
+    /// Driver side: bounded wait for the next completion. Distinguishes
+    /// "nothing yet" ([`CompletionWait::TimedOut`]) from "never again"
+    /// ([`CompletionWait::Drained`]) — the speculative scheduler polls
+    /// with this so stragglers are noticed even while no completions
+    /// arrive.
+    pub fn next_completion_timeout(&self, timeout: Duration) -> CompletionWait {
+        let deadline = Instant::now() + timeout;
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(c) = g.done.pop_front() {
+                return CompletionWait::Completion(c);
+            }
+            if g.closed && g.pending.is_empty() && g.in_flight == 0 {
+                return CompletionWait::Drained;
+            }
+            let left = deadline.saturating_duration_since(Instant::now());
+            if left.is_zero() {
+                return CompletionWait::TimedOut;
+            }
+            g = self.done_ready.wait_timeout(g, left).unwrap().0;
+        }
+    }
+
+    /// Attempts currently executing on workers (popped, not completed).
+    pub fn in_flight(&self) -> usize {
+        self.inner.lock().unwrap().in_flight
+    }
+
+    /// Tasks queued but not yet picked up by a worker.
+    pub fn pending(&self) -> usize {
+        self.inner.lock().unwrap().pending.len()
+    }
+
+    /// Close *and* disown the stream: queued tasks and undelivered
+    /// completions are dropped, and any attempt still executing has its
+    /// eventual completion discarded on delivery. The speculative
+    /// scheduler uses this to return the moment every sequence slot is
+    /// resolved instead of waiting out losing straggler attempts.
+    pub fn abandon(&self) {
+        {
+            let mut g = self.inner.lock().unwrap();
+            g.closed = true;
+            g.discard = true;
+            g.pending.clear();
+            g.done.clear();
+            self.work_ready.notify_all();
+            self.done_ready.notify_all();
+        }
+        self.wake_backend();
     }
 
     /// RAII close guard: closes the stream when dropped (idempotent), so
@@ -309,6 +382,42 @@ mod tests {
         // resubmits against a dead stream fail immediately, not hang
         s.submit(1, spec(1));
         assert!(s.next_completion().unwrap().result.is_err());
+    }
+
+    #[test]
+    fn abandon_discards_late_completions() {
+        let s = TaskStream::new();
+        s.submit(0, spec(0));
+        s.submit(1, spec(1));
+        let (seq, sp, qw) = s.pop_task().unwrap();
+        s.abandon(); // task 1 still queued: dropped; task 0 executing
+        assert_eq!(s.pending(), 0, "queued work dropped");
+        assert_eq!(s.in_flight(), 1, "executing attempt still tracked");
+        s.complete(seq, sp, Ok(TaskOutput::Count(1)), qw, Duration::ZERO);
+        assert_eq!(s.in_flight(), 0, "late completion settles bookkeeping");
+        assert!(s.next_completion().is_none(), "late completion discarded");
+        assert!(s.drained());
+    }
+
+    #[test]
+    fn timeout_wait_distinguishes_timeout_from_drained() {
+        let s = TaskStream::new();
+        s.submit(0, spec(0));
+        let (seq, sp, qw) = s.pop_task().unwrap();
+        match s.next_completion_timeout(Duration::from_millis(10)) {
+            CompletionWait::TimedOut => {}
+            other => panic!("expected TimedOut, got {other:?}"),
+        }
+        s.complete(seq, sp, Ok(TaskOutput::Count(1)), qw, Duration::ZERO);
+        match s.next_completion_timeout(Duration::from_millis(10)) {
+            CompletionWait::Completion(c) => assert_eq!(c.seq, 0),
+            other => panic!("expected Completion, got {other:?}"),
+        }
+        s.close();
+        match s.next_completion_timeout(Duration::from_millis(10)) {
+            CompletionWait::Drained => {}
+            other => panic!("expected Drained, got {other:?}"),
+        }
     }
 
     #[test]

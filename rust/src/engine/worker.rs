@@ -14,6 +14,7 @@
 //! slot, and a manifest-named bag crosses the wire at most once per
 //! worker process.
 
+use super::data::{BlockServer, BlockSource};
 use super::executor;
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
@@ -63,6 +64,31 @@ pub fn serve_with_slots(
     };
     crate::logmsg!("info", "worker {worker_id} listening on {addr} ({slots} slot(s))");
     let ctx = TaskCtx::new(worker_id, artifact_dir);
+    // Swarm serving: expose this worker's block cache as a block peer on
+    // an ephemeral port next to the task port, and advertise it to the
+    // driver via BlockAd frames. Losing the bind is not fatal — the
+    // worker still runs tasks, it just never joins the swarm.
+    let block_peer_host = match local.ip() {
+        ip if ip.is_unspecified() => match ip {
+            std::net::IpAddr::V4(_) => "127.0.0.1".to_string(),
+            std::net::IpAddr::V6(_) => "[::1]".to_string(),
+        },
+        std::net::IpAddr::V6(ip) => format!("[{ip}]"),
+        ip => ip.to_string(),
+    };
+    let cache_source: Arc<dyn BlockSource> = Arc::new(ctx.data.clone());
+    let block_server = match BlockServer::serve_source(
+        cache_source,
+        &format!("{block_peer_host}:0"),
+        &block_peer_host,
+    ) {
+        Ok(s) => Some(s),
+        Err(e) => {
+            crate::logmsg!("warn", "worker {worker_id} swarm block server: {e}");
+            None
+        }
+    };
+    let block_peer = block_server.as_ref().map(|s| s.peer().to_string());
     let shutdown = Arc::new(AtomicBool::new(false));
     // counting gate bounding concurrent connections at `slots`
     struct Gate {
@@ -91,11 +117,13 @@ pub fn serve_with_slots(
         let gate = gate.clone();
         let shutdown = shutdown.clone();
         let wake = wake_addr.clone();
+        let block_peer = block_peer.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("av-simd-worker-{worker_id}-slot"))
                 .spawn(move || {
-                    let result = serve_connection(stream, &ctx, &registry);
+                    let result =
+                        serve_connection(stream, &ctx, &registry, block_peer.as_deref());
                     // free the slot before any shutdown wake, so the
                     // acceptor is never left parked on a full gate
                     {
@@ -131,6 +159,7 @@ pub fn serve_with_slots(
     for h in handles {
         let _ = h.join();
     }
+    drop(block_server); // stop the swarm block server with the worker
     Ok(())
 }
 
@@ -143,10 +172,14 @@ fn serve_connection(
     stream: TcpStream,
     ctx: &TaskCtx,
     registry: &OpRegistry,
+    block_peer: Option<&str>,
 ) -> Result<ShutdownKind> {
     stream.set_nodelay(true).ok();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
     let mut writer = std::io::BufWriter::new(stream);
+    // last swarm advertisement sent on *this* connection; an ad goes out
+    // ahead of a task reply only when the resident set changed
+    let mut last_ad: Vec<[u8; 32]> = Vec::new();
     loop {
         match read_msg(&mut reader)? {
             None => return Ok(ShutdownKind::Disconnect),
@@ -170,6 +203,20 @@ fn serve_connection(
                     Ok(out) => RpcMsg::TaskOk(out.encode()),
                     Err(e) => RpcMsg::TaskErr(e.to_string()),
                 };
+                if let Some(peer) = block_peer {
+                    let resident: Vec<[u8; 32]> =
+                        ctx.data.resident_manifests().iter().map(|m| m.0).collect();
+                    if resident != last_ad && !resident.is_empty() {
+                        write_msg(
+                            &mut writer,
+                            &RpcMsg::BlockAd {
+                                peer: peer.to_string(),
+                                manifests: resident.clone(),
+                            },
+                        )?;
+                        last_ad = resident;
+                    }
+                }
                 write_msg(&mut writer, &reply)?;
             }
             Some(other) => {
@@ -190,6 +237,9 @@ pub struct WorkerClient {
     /// The worker's self-reported id, learned during the connect
     /// handshake (diagnostic: maps endpoints back to launch manifests).
     pub worker_id: u64,
+    /// Swarm cache advertisements the worker piggybacked on task
+    /// replies, pending pickup via [`WorkerClient::take_advertisements`].
+    ads: Vec<(String, Vec<[u8; 32]>)>,
 }
 
 impl WorkerClient {
@@ -224,6 +274,7 @@ impl WorkerClient {
                         writer: std::io::BufWriter::new(stream),
                         addr: addr.to_string(),
                         worker_id: 0,
+                        ads: Vec::new(),
                     };
                     // verify liveness + protocol version
                     c.worker_id = c.handshake().map_err(|e| match e {
@@ -306,16 +357,32 @@ impl WorkerClient {
     }
 
     /// Receive the reply for the oldest outstanding [`WorkerClient::send_task`].
-    /// `task_id` is only used to label errors.
+    /// `task_id` is only used to label errors. Swarm [`RpcMsg::BlockAd`]
+    /// frames interleaved ahead of the reply are stashed for
+    /// [`WorkerClient::take_advertisements`], not surfaced as errors.
     pub fn recv_reply(&mut self, task_id: u32) -> Result<TaskOutput> {
-        match read_msg(&mut self.reader)? {
-            Some(RpcMsg::TaskOk(out)) => TaskOutput::decode(&out),
-            Some(RpcMsg::TaskErr(msg)) => Err(Error::Engine(format!(
-                "remote task {task_id} failed: {msg}"
-            ))),
-            None => Err(Error::Engine("worker hung up mid-task".into())),
-            other => Err(Error::Engine(format!("unexpected reply {other:?}"))),
+        loop {
+            match read_msg(&mut self.reader)? {
+                Some(RpcMsg::TaskOk(out)) => return TaskOutput::decode(&out),
+                Some(RpcMsg::TaskErr(msg)) => {
+                    return Err(Error::Engine(format!(
+                        "remote task {task_id} failed: {msg}"
+                    )))
+                }
+                Some(RpcMsg::BlockAd { peer, manifests }) => {
+                    self.ads.push((peer, manifests));
+                }
+                None => return Err(Error::Transport("worker hung up mid-task".into())),
+                other => return Err(Error::Engine(format!("unexpected reply {other:?}"))),
+            }
         }
+    }
+
+    /// Drain cache advertisements received since the last call: pairs of
+    /// (block-peer `host:port`, manifest ids resident in that worker's
+    /// cache). Feeders forward these to the cluster's swarm registry.
+    pub fn take_advertisements(&mut self) -> Vec<(String, Vec<[u8; 32]>)> {
+        std::mem::take(&mut self.ads)
     }
 
     /// Run one task to completion on this worker (send + wait).

@@ -21,6 +21,11 @@ pub enum Error {
     Bus(String),
     /// Distributed engine failure (scheduling, task, worker loss).
     Engine(String),
+    /// RPC transport death: the remote end hung up or the connection
+    /// died mid-frame. Distinguished from [`Error::Engine`] so the
+    /// dispatch layer can classify worker loss by type instead of by
+    /// matching error-message substrings.
+    Transport(String),
     /// BinPipedRDD child-process failure.
     Pipe(String),
     /// PJRT / XLA runtime failure.
@@ -44,6 +49,7 @@ impl Error {
             Error::BagFormat(_) => "bag",
             Error::Bus(_) => "bus",
             Error::Engine(_) => "engine",
+            Error::Transport(_) => "transport",
             Error::Pipe(_) => "pipe",
             Error::Runtime(_) => "runtime",
             Error::Config(_) => "config",
@@ -56,7 +62,19 @@ impl Error {
     /// True when retrying the same operation may succeed (used by the
     /// engine's task-retry policy).
     pub fn is_retryable(&self) -> bool {
-        matches!(self, Error::Io(_) | Error::Engine(_) | Error::Pipe(_))
+        matches!(
+            self,
+            Error::Io(_) | Error::Engine(_) | Error::Pipe(_) | Error::Transport(_)
+        )
+    }
+
+    /// True when this error means the underlying connection is dead
+    /// (socket I/O failure, peer hang-up, or a frame cut off mid-read)
+    /// rather than a per-request failure on a healthy transport. The
+    /// standalone feeder uses this to decide between retrying one task
+    /// and declaring the whole worker lost.
+    pub fn is_transport_death(&self) -> bool {
+        matches!(self, Error::Io(_) | Error::Transport(_))
     }
 }
 
@@ -68,6 +86,7 @@ impl fmt::Display for Error {
             Error::BagFormat(m) => write!(f, "bag format: {m}"),
             Error::Bus(m) => write!(f, "bus: {m}"),
             Error::Engine(m) => write!(f, "engine: {m}"),
+            Error::Transport(m) => write!(f, "transport: {m}"),
             Error::Pipe(m) => write!(f, "pipe: {m}"),
             Error::Runtime(m) => write!(f, "runtime: {m}"),
             Error::Config(m) => write!(f, "config: {m}"),
@@ -131,7 +150,19 @@ mod tests {
     #[test]
     fn retryability() {
         assert!(Error::Engine("worker lost".into()).is_retryable());
+        assert!(Error::Transport("hung up".into()).is_retryable());
         assert!(!Error::BagFormat("bad magic".into()).is_retryable());
+    }
+
+    #[test]
+    fn transport_death_is_typed_not_textual() {
+        // the classification must not depend on message wording
+        assert!(Error::Transport("anything at all".into()).is_transport_death());
+        assert!(Error::Io(std::io::Error::new(std::io::ErrorKind::BrokenPipe, "x"))
+            .is_transport_death());
+        // a worker-side task error travels over a healthy transport
+        assert!(!Error::Engine("remote task 3 failed: boom".into()).is_transport_death());
+        assert_eq!(Error::Transport("x".into()).category(), "transport");
     }
 
     #[test]

@@ -86,11 +86,15 @@ COMMANDS:
               [--base-port P] [--cluster-spec FILE] [--verify]
               [--fixture-frames F] [--seed S]
               [--publish] [--store-root DIR] [--advertise HOST]
+              [--speculate] [--speculate-multiplier F]
+              [--speculate-min-samples N]
               shard a recorded drive across the cluster and replay it
               through the perception pipeline; --publish ships the bag
               bytes through the engine (content-addressed blocks from a
               driver-side store) instead of requiring the path to
-              resolve on every worker (docs/OPERATIONS.md)
+              resolve on every worker; --speculate re-runs straggling
+              tasks on idle workers, first completion wins
+              (docs/OPERATIONS.md)
   info        [--artifacts DIR]
 ";
 
@@ -444,7 +448,41 @@ fn cmd_replay(args: &Args) -> Result<()> {
         Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
     };
 
-    let mut driver = ReplayDriver::new(spec);
+    // speculation: CLI flags, else the cluster spec's [speculation]
+    // section; the CLI fully overrides the manifest when any flag is set
+    let speculation = if args.has("speculate")
+        || args.has("speculate-multiplier")
+        || args.has("speculate-min-samples")
+    {
+        let base = av_simd::engine::Speculation::on();
+        let multiplier = match args.get("speculate-multiplier") {
+            None => base.multiplier,
+            Some(v) => {
+                let m: f64 = v.parse().map_err(|_| {
+                    av_simd::err!(Config, "--speculate-multiplier expects a number, got '{v}'")
+                })?;
+                if !(m.is_finite() && m > 0.0) {
+                    return Err(av_simd::err!(
+                        Config,
+                        "--speculate-multiplier must be positive, got '{v}'"
+                    ));
+                }
+                m
+            }
+        };
+        av_simd::engine::Speculation {
+            multiplier,
+            min_samples: args.get_usize("speculate-min-samples", base.min_samples)?,
+            ..base
+        }
+    } else {
+        cluster_spec
+            .as_ref()
+            .and_then(|c| c.speculation)
+            .unwrap_or_default()
+    };
+
+    let mut driver = ReplayDriver::new(spec).with_speculation(speculation);
     if args.has("publish") || args.has("store-root") {
         // resolution order: flag, then the cluster spec's [storage]
         // section, then a local default

@@ -20,11 +20,14 @@
 //!
 //! Tasks name the bag with a [`DataRef`]: a worker-resolvable path by
 //! default, or — after [`ReplayDriver::publish`] — a content-addressed
-//! manifest plus the driver's block-peer address. Published replays
-//! need **no shared filesystem**: the driver splits the bag into
-//! SHA-256-addressed blocks in a `storage::BlockStore`, serves them
-//! over RPC, and each worker fetches (and hash-verifies) exactly the
-//! blocks it misses, once per worker process. Both modes produce
+//! manifest plus an ordered *peer list*. Published replays need **no
+//! shared filesystem**: the driver splits the bag into SHA-256-addressed
+//! blocks in a `storage::BlockStore`, serves them over RPC, and each
+//! worker fetches (and hash-verifies) exactly the blocks it misses,
+//! once per worker process. On a swarm-tracking cluster
+//! ([`Cluster::swarm`]), each task's peer list orders warm sibling
+//! workers ahead of the driver, so cold workers pull from the swarm and
+//! the driver only serves the first copy. Both modes produce
 //! byte-identical reports.
 //!
 //! ## The per-slice pipeline
@@ -65,8 +68,8 @@
 
 use crate::bag::{BagIndex, BagReader};
 use crate::engine::{
-    run_provider, Action, BlockServer, Cluster, DataRef, OpCall, OpRegistry, Source, TaskCtx,
-    TaskOutput, TaskProvider, TaskSpec,
+    run_provider_with, Action, BlockServer, Cluster, DataRef, OpCall, OpRegistry, Source,
+    Speculation, SwarmRegistry, TaskCtx, TaskOutput, TaskProvider, TaskSpec,
 };
 use crate::error::{Error, Result};
 use crate::msg::{Image, Message, PointCloud, Time};
@@ -600,6 +603,9 @@ pub struct ReplayReport {
     pub tasks: usize,
     /// Retry attempts consumed (execution fact).
     pub retries: usize,
+    /// Speculative duplicate attempts launched (execution fact; zero
+    /// unless the driver ran with [`Speculation::enabled`]).
+    pub speculations: usize,
     /// End-to-end replay wall time (execution fact).
     pub wall: Duration,
 }
@@ -631,6 +637,7 @@ impl ReplayReport {
             slices: 0,
             tasks: 0,
             retries: 0,
+            speculations: 0,
             wall: Duration::ZERO,
         })
     }
@@ -653,12 +660,13 @@ impl ReplayReport {
         let mut out = String::new();
         out.push_str(&format!(
             "replay: {} messages over {:.2} bag-s in {} slice(s), {} task(s), {} \
-             retries, {:.2}s wall ({:.1}x realtime)\n",
+             retries, {} speculated, {:.2}s wall ({:.1}x realtime)\n",
             s.messages,
             (self.end - self.start) as f64 / 1e9,
             self.slices,
             self.tasks,
             self.retries,
+            self.speculations,
             self.wall.as_secs_f64(),
             self.speedup_vs_realtime(),
         ));
@@ -974,6 +982,7 @@ pub fn write_fixture_bag(path: &str, frames: u32, seed: u64) -> Result<()> {
 pub struct ReplayDriver {
     spec: ReplaySpec,
     data: Option<PublishedBag>,
+    speculation: Speculation,
 }
 
 /// Driver-side publish state: the local store, the published manifest,
@@ -986,15 +995,32 @@ struct PublishedBag {
 
 /// The replay job's [`TaskProvider`]: one slice per task, verdicts
 /// placed by sequence slot as completions stream in. Completion/retry/
-/// metrics handling lives in [`run_provider`].
+/// metrics handling lives in [`run_provider_with`].
 struct ReplayProvider<'a> {
     tasks: std::vec::IntoIter<TaskSpec>,
     verdicts: &'a mut [Option<ReplayVerdict>],
+    /// Swarm peer rebuilding (publish mode on a swarm-tracking cluster):
+    /// the cluster's registry, the published manifest, and the driver's
+    /// own block peer. Each task handed out gets a fresh peer list —
+    /// warm sibling workers first, driver last — so later tasks ride
+    /// the swarm instead of all dialing the driver.
+    swarm: Option<(SwarmRegistry, ManifestId, String)>,
 }
 
 impl TaskProvider for ReplayProvider<'_> {
     fn next_task(&mut self, _seq: u64) -> Option<TaskSpec> {
-        self.tasks.next()
+        let mut t = self.tasks.next()?;
+        if let Some((swarm, id, driver_peer)) = &self.swarm {
+            let mut peers = swarm.peers_for(id);
+            peers.retain(|p| p != driver_peer);
+            peers.push(driver_peer.clone());
+            if let Source::BagSlices { data: DataRef::Manifest { peers: p, .. }, .. } =
+                &mut t.source
+            {
+                *p = peers;
+            }
+        }
+        Some(t)
     }
 
     fn on_output(&mut self, seq: u64, output: TaskOutput, _wall: Duration) -> Result<()> {
@@ -1020,7 +1046,16 @@ impl TaskProvider for ReplayProvider<'_> {
 impl ReplayDriver {
     /// Driver for `spec`.
     pub fn new(spec: ReplaySpec) -> Self {
-        Self { spec, data: None }
+        Self { spec, data: None, speculation: Speculation::default() }
+    }
+
+    /// Enable (or tune) speculative straggler re-execution for this
+    /// driver's runs. Speculation changes *when* attempts launch, never
+    /// *what* the report contains — first completion per slice wins and
+    /// the report bytes stay identical to a non-speculative run.
+    pub fn with_speculation(mut self, speculation: Speculation) -> Self {
+        self.speculation = speculation;
+        self
     }
 
     /// The replay specification this driver runs.
@@ -1073,7 +1108,7 @@ impl ReplayDriver {
     /// otherwise.
     pub fn data_ref(&self) -> DataRef {
         match &self.data {
-            Some(p) => DataRef::Manifest { id: p.id, peer: p.server.peer().to_string() },
+            Some(p) => DataRef::manifest(p.id, p.server.peer()),
             None => DataRef::path(self.spec.bag.clone()),
         }
     }
@@ -1156,9 +1191,17 @@ impl ReplayDriver {
     ) -> Result<ReplayReport> {
         let wall_start = Instant::now();
         let mut verdicts: Vec<Option<ReplayVerdict>> = (0..slices.len()).map(|_| None).collect();
-        let mut provider =
-            ReplayProvider { tasks: self.tasks(slices).into_iter(), verdicts: &mut verdicts };
-        let job = run_provider(cluster, &mut provider, self.spec.max_retries)?;
+        let swarm = match (&self.data, cluster.swarm()) {
+            (Some(p), Some(reg)) => Some((reg, p.id, p.server.peer().to_string())),
+            _ => None,
+        };
+        let mut provider = ReplayProvider {
+            tasks: self.tasks(slices).into_iter(),
+            verdicts: &mut verdicts,
+            swarm,
+        };
+        let job =
+            run_provider_with(cluster, &mut provider, self.spec.max_retries, self.speculation)?;
         let verdicts: Vec<ReplayVerdict> = verdicts
             .into_iter()
             .map(|v| v.expect("every slice slot filled or the job errored"))
@@ -1166,6 +1209,7 @@ impl ReplayDriver {
         let mut report = self.aggregate(index, slices, verdicts)?;
         report.tasks = job.tasks;
         report.retries = job.retries;
+        report.speculations = job.speculations;
         report.wall = wall_start.elapsed();
         let m = crate::metrics::Metrics::global();
         m.counter("replay_messages_total").add(report.stats.messages);
@@ -1277,6 +1321,7 @@ impl ReplayDriver {
             slices: slices.len(),
             tasks: 0,
             retries: 0,
+            speculations: 0,
             wall: Duration::ZERO,
         })
     }
@@ -1399,10 +1444,7 @@ mod tests {
         assert!(ReplaySlice::decode(&bad.encode()).is_err());
         for data in [
             DataRef::path("/data/x.bag"),
-            DataRef::Manifest {
-                id: crate::storage::ManifestId([0x5A; 32]),
-                peer: "127.0.0.1:7199".into(),
-            },
+            DataRef::manifest(crate::storage::ManifestId([0x5A; 32]), "127.0.0.1:7199"),
         ] {
             let job = SliceJob { data, topics: vec!["/camera".into()], slice: s };
             assert_eq!(SliceJob::decode(&job.encode()).unwrap(), job);

@@ -327,6 +327,27 @@ impl BlockStore {
         Manifest::decode(&bytes)
     }
 
+    /// Load a published manifest's raw encoded bytes by id, verified
+    /// against the id. This is the block-server serving path: the bytes
+    /// go on the wire exactly as stored (no decode/re-encode roundtrip).
+    pub fn manifest_bytes(&self, id: &ManifestId) -> Result<Vec<u8>> {
+        let path = self.manifest_path(&id.hex())?;
+        let bytes = std::fs::read(&path).map_err(|e| {
+            Error::Storage(format!(
+                "manifest {} not readable in store {}: {e}",
+                id.short(),
+                self.root.display()
+            ))
+        })?;
+        if block_id(&bytes) != id.0 {
+            return Err(Error::Storage(format!(
+                "manifest {} bytes do not hash to their id — corrupt manifest file",
+                id.short()
+            )));
+        }
+        Ok(bytes)
+    }
+
     /// Read and verify one block named by `bref`. `object_offset` is the
     /// block's byte offset inside its object, carried into every error
     /// so corruption reports name both the block id and where in the

@@ -47,21 +47,28 @@ fn spawn_worker(id: usize) -> (String, std::thread::JoinHandle<()>) {
     (addr, h)
 }
 
+/// Connect a cluster to already-serving workers (connect mode: dropping
+/// the cluster leaves the workers up).
+fn connect_cluster(addrs: &[String]) -> StandaloneCluster {
+    let hosts: Vec<String> = addrs.iter().map(|a| format!("\"{a}\"")).collect();
+    let spec = ClusterSpec::from_toml_text(&format!(
+        "[cluster]\nname = \"replay-test\"\nconnect_timeout_ms = 5000\n\
+         [workers]\nhosts = [{}]\n",
+        hosts.join(", ")
+    ))
+    .unwrap();
+    StandaloneCluster::connect(&spec).unwrap()
+}
+
 fn standalone(n: usize) -> (StandaloneCluster, Vec<std::thread::JoinHandle<()>>) {
     let mut addrs = Vec::new();
     let mut handles = Vec::new();
     for i in 0..n {
         let (addr, h) = spawn_worker(i);
-        addrs.push(format!("\"{addr}\""));
+        addrs.push(addr);
         handles.push(h);
     }
-    let spec = ClusterSpec::from_toml_text(&format!(
-        "[cluster]\nname = \"replay-test\"\nconnect_timeout_ms = 5000\n\
-         [workers]\nhosts = [{}]\n",
-        addrs.join(", ")
-    ))
-    .unwrap();
-    (StandaloneCluster::connect(&spec).unwrap(), handles)
+    (connect_cluster(&addrs), handles)
 }
 
 /// The acceptance matrix: {local, standalone} × {1, 2, 4 workers} ×
@@ -244,6 +251,134 @@ fn manifest_replay_bytes_equal_path_replay_without_the_bag_file() {
     // driver's own block server over loopback)
     assert_eq!(driver.reference(&artifact_dir()).unwrap().encode(), by_path.encode());
     std::fs::remove_dir_all(&store_root).ok();
+}
+
+/// The swarm acceptance bar: once one worker's block cache is warm, the
+/// driver's copy of the blocks can disappear entirely — a cold sibling
+/// joining the cluster still completes a manifest-only replay because
+/// the warm worker advertised its cache (piggybacked `BlockAd`s) and
+/// the provider orders it ahead of the driver in every task's peer
+/// list.
+#[test]
+fn cold_worker_fetches_from_warm_sibling_after_driver_store_is_gone() {
+    use av_simd::engine::{Action, Cluster, Source, TaskSpec};
+
+    let bag = fixture("swarm", 12, 11);
+    let spec = ReplaySpec { bag: bag.clone(), slices: 6, ..ReplaySpec::default() };
+    let by_path = ReplayDriver::new(spec.clone()).reference(&artifact_dir()).unwrap();
+
+    let store_root = std::env::temp_dir().join(format!(
+        "av_simd_replay_it_swarm_{}",
+        std::process::id()
+    ));
+    let mut driver = ReplayDriver::new(spec);
+    let id = driver.publish(&store_root, "127.0.0.1").unwrap();
+    std::fs::remove_file(&bag).unwrap();
+    let (index, plan) = driver.plan().unwrap();
+
+    // warm exactly one worker: a 1-worker cluster runs the whole replay,
+    // so that worker's cache materializes every block of the manifest
+    let (w1_addr, w1_handle) = spawn_worker(0);
+    let one = connect_cluster(std::slice::from_ref(&w1_addr));
+    let warm = driver.run_planned(&one, &index, &plan).unwrap();
+    assert_eq!(warm.encode(), by_path.encode());
+    drop(one); // connect mode: worker 0 keeps serving, cache intact
+
+    // a cold sibling joins; the fresh cluster's swarm registry fills in
+    // from ads riding on task replies, so run cheap count jobs until the
+    // warm worker has answered (and advertised) at least once
+    let (w2_addr, w2_handle) = spawn_worker(1);
+    let cluster = connect_cluster(&[w1_addr, w2_addr]);
+    let swarm = cluster.swarm().expect("standalone clusters track a swarm");
+    for round in 0..50u32 {
+        if !swarm.peers_for(&id).is_empty() {
+            break;
+        }
+        let tasks: Vec<TaskSpec> = (0..4)
+            .map(|i| TaskSpec {
+                job_id: 9,
+                task_id: round * 4 + i,
+                attempt: 0,
+                source: Source::Range { start: 0, end: 10 },
+                ops: vec![],
+                action: Action::Count,
+            })
+            .collect();
+        run_job(&cluster, tasks, 1).unwrap();
+    }
+    assert!(
+        !swarm.peers_for(&id).is_empty(),
+        "warm worker never advertised its block cache"
+    );
+
+    // delete the driver's block store: from here on the *only* source of
+    // the bag bytes is the warm worker's cache
+    std::fs::remove_dir_all(&store_root).unwrap();
+
+    // replay until the cold worker has served a manifest task (both
+    // workers advertising proves it became resident — and with the
+    // driver's store gone, those bytes can only have come from its
+    // sibling); every run must stay byte-identical
+    for _ in 0..20 {
+        let report = driver.run_planned(&cluster, &index, &plan).unwrap();
+        assert_eq!(report.encode(), by_path.encode(), "swarm-fetched replay diverged");
+        if swarm.peers_for(&id).len() >= 2 {
+            break;
+        }
+    }
+    assert!(
+        swarm.peers_for(&id).len() >= 2,
+        "cold worker never became resident via its sibling: {:?}",
+        swarm.peers_for(&id)
+    );
+
+    cluster.stop_workers();
+    w1_handle.join().unwrap();
+    w2_handle.join().unwrap();
+    std::fs::remove_dir_all(&store_root).ok();
+}
+
+/// Speculative re-execution must change *when* attempts run, never what
+/// the report says: across backends × worker counts, with speculation
+/// off and with an aggressive policy that duplicates nearly every task,
+/// the report bytes equal the single-process reference.
+#[test]
+fn speculative_replay_bytes_match_reference_across_backends() {
+    use av_simd::engine::Speculation;
+
+    let bag = fixture("speculate", 12, 5);
+    let spec = ReplaySpec { bag: bag.clone(), slices: 5, ..ReplaySpec::default() };
+    let reference = ReplayDriver::new(spec.clone()).reference(&artifact_dir()).unwrap();
+
+    // multiplier 0 drops the straggler threshold to its 1 ms floor, so
+    // multi-worker runs really do launch duplicate attempts
+    let aggressive = Speculation { enabled: true, multiplier: 0.0, min_samples: 1 };
+    for speculation in [Speculation::default(), aggressive] {
+        let driver = ReplayDriver::new(spec.clone()).with_speculation(speculation);
+        let (index, plan) = driver.plan().unwrap();
+        for workers in [1usize, 2, 4] {
+            let local = LocalCluster::new(workers, av_simd::full_op_registry(), &artifact_dir());
+            let report = driver.run_planned(&local, &index, &plan).unwrap();
+            assert_eq!(
+                report.encode(),
+                reference.encode(),
+                "local x{workers}, speculation {speculation:?} diverged"
+            );
+
+            let (cluster, handles) = standalone(workers);
+            let report = driver.run_planned(&cluster, &index, &plan).unwrap();
+            assert_eq!(
+                report.encode(),
+                reference.encode(),
+                "standalone x{workers}, speculation {speculation:?} diverged"
+            );
+            cluster.stop_workers();
+            for h in handles {
+                h.join().unwrap();
+            }
+        }
+    }
+    std::fs::remove_file(bag).ok();
 }
 
 /// A worker losing its block peer mid-job must surface a *retryable*
@@ -429,6 +564,7 @@ fn replay_report_codec_roundtrips() {
                 slices: 3,
                 tasks: 3,
                 retries: 1,
+                speculations: 1,
                 wall: Duration::from_millis(5),
             }
         },
@@ -463,10 +599,11 @@ fn slice_codecs_roundtrip_under_fuzz() {
             } else {
                 let mut id = [0u8; 32];
                 rng.fill_bytes(&mut id);
-                DataRef::Manifest {
-                    id: av_simd::storage::ManifestId(id),
-                    peer: format!("{}:{}", gen::ident(rng, 8), 1 + rng.below(65_000)),
-                }
+                // 1–3 peers: the list must be non-empty to validate
+                let peers = (0..1 + rng.below(3))
+                    .map(|_| format!("{}:{}", gen::ident(rng, 8), 1 + rng.below(65_000)))
+                    .collect();
+                DataRef::Manifest { id: av_simd::storage::ManifestId(id), peers }
             };
             SliceJob {
                 data,
