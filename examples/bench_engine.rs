@@ -29,6 +29,9 @@
 //!   whose straggler stalls only on its first execution: speculative
 //!   re-execution cuts the tail, plain scheduling waits it out
 //!   (`speculation_tail_speedup` fact, asserted ≥ 1.3).
+//! * `replay/checkpointed` vs `replay/no checkpoint` — the same
+//!   distributed replay with durable per-slice checkpointing on vs off
+//!   (`checkpoint_overhead_pct` fact, asserted < 5%).
 //!
 //! ```sh
 //! cargo run --release --example bench_engine            # full run
@@ -337,6 +340,64 @@ fn bench_replay(samples: usize, frames: u32) -> (Sample, Sample) {
     (dist, reference)
 }
 
+// ------------------------------------------------------------- checkpoint
+
+/// Replay with durable checkpointing on vs off: prices the scheduler's
+/// per-completion `observe` + atomic record flush against the plain
+/// path. Records are small (aggregated verdicts, not raw data), so the
+/// overhead must stay inside the noise floor.
+fn bench_checkpoint(samples: usize, frames: u32) -> (Sample, Sample) {
+    use av_simd::engine::CheckpointConfig;
+    use av_simd::sim::replay::write_fixture_bag;
+    use av_simd::sim::{ReplayDriver, ReplaySpec};
+
+    let dir = std::env::temp_dir().join(format!("av_simd_bench_ckpt_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let bag = dir.join("drive.bag").to_str().unwrap().to_string();
+    write_fixture_bag(&bag, frames, 42).expect("fixture bag");
+
+    let spec = ReplaySpec { bag, slices: 8, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec);
+    let (index, slices) = driver.plan().expect("plan");
+    let n_slices = slices.len() as f64;
+    let cluster = LocalCluster::new(4, av_simd::full_op_registry(), "artifacts");
+    let cfg = CheckpointConfig {
+        root: dir.join("ckpt").to_str().unwrap().to_string(),
+        every: 1,
+        resume: false,
+    };
+
+    // byte-equality is part of the bench contract here too
+    let plain_report = driver.run_planned(&cluster, &index, &slices).expect("plain replay");
+    let ckpt_report = driver
+        .run_planned_checkpointed(&cluster, &index, &slices, &cfg)
+        .expect("checkpointed replay");
+    assert_eq!(
+        ckpt_report.encode(),
+        plain_report.encode(),
+        "checkpointing changed the replay report"
+    );
+
+    let on = Bench::new("replay/checkpointed local x4")
+        .warmup(1)
+        .samples(samples)
+        .units(n_slices, "slice")
+        .run(|| {
+            driver
+                .run_planned_checkpointed(&cluster, &index, &slices, &cfg)
+                .unwrap();
+        });
+    let off = Bench::new("replay/no checkpoint local x4")
+        .warmup(1)
+        .samples(samples)
+        .units(n_slices, "slice")
+        .run(|| {
+            driver.run_planned(&cluster, &index, &slices).unwrap();
+        });
+    std::fs::remove_dir_all(&dir).ok();
+    (on, off)
+}
+
 // ---------------------------------------------------------------- storage
 
 /// Data-plane microbenches: (1) a cold manifest + every-block fetch over
@@ -548,6 +609,7 @@ fn main() -> av_simd::Result<()> {
     let (block_fetch, hex_encode) = bench_block_fetch(fetch_samples, fetch_size);
     let (swarm_sibling, swarm_driver) = bench_swarm_fetch(fetch_samples, fetch_size);
     let (spec_on, spec_off) = bench_speculation(spec_samples, spec_slow_ms, spec_fast_ms);
+    let (ckpt_on, ckpt_off) = bench_checkpoint(replay_samples, replay_frames);
 
     let samples = vec![
         sched_stream,
@@ -568,6 +630,8 @@ fn main() -> av_simd::Result<()> {
         swarm_driver,
         spec_on,
         spec_off,
+        ckpt_on,
+        ckpt_off,
     ];
     print_table("engine microbenches", &samples);
 
@@ -590,6 +654,9 @@ fn main() -> av_simd::Result<()> {
     let swarm_sibling_vs_driver = speedup(&samples[15], &samples[14]);
     // tail fact: wall of the straggler job without speculation over with
     let speculation_tail_speedup = speedup(&samples[17], &samples[16]);
+    // durability fact: relative wall cost of folding + atomically
+    // flushing every resolved slice into the checkpoint record
+    let checkpoint_overhead_pct = (speedup(&samples[18], &samples[19]) - 1.0) * 100.0;
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
@@ -603,6 +670,7 @@ fn main() -> av_simd::Result<()> {
         ("swarm_fetch_mb_per_sec", swarm_fetch_mb_per_sec),
         ("speedup_swarm_sibling_vs_driver", swarm_sibling_vs_driver),
         ("speculation_tail_speedup", speculation_tail_speedup),
+        ("checkpoint_overhead_pct", checkpoint_overhead_pct),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),
@@ -642,6 +710,10 @@ fn main() -> av_simd::Result<()> {
     assert!(
         speculation_tail_speedup >= 1.3,
         "speculation tail speedup {speculation_tail_speedup:.2} below the 1.3x bar"
+    );
+    assert!(
+        checkpoint_overhead_pct < 5.0,
+        "checkpoint overhead {checkpoint_overhead_pct:.2}% above the 5% bar"
     );
     println!("bench_engine OK");
     Ok(())

@@ -11,12 +11,13 @@
 
 use super::data::SwarmRegistry;
 use super::executor;
+use super::fault::{FaultPlan, FAULT_TAG};
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
 use super::stream::TaskStream;
 use crate::error::{Error, Result};
 use std::sync::{Arc, Condvar, Mutex};
-use std::time::Instant;
+use std::time::{Duration, Instant};
 
 /// A set of workers that can execute tasks.
 pub trait Cluster: Send + Sync {
@@ -100,6 +101,21 @@ impl LocalCluster {
     /// Build a pool of `workers` persistent threads sharing `registry`,
     /// each with its own [`TaskCtx`] rooted at `artifact_dir`.
     pub fn new(workers: usize, registry: OpRegistry, artifact_dir: &str) -> Self {
+        Self::with_faults(workers, registry, artifact_dir, FaultPlan::none())
+    }
+
+    /// Test-only flavor of [`LocalCluster::new`]: each pool worker
+    /// consults `faults` before executing a pulled task; a scheduled
+    /// kill fails that task with a transport error and retires the
+    /// thread for good — the in-process equivalent of a worker process
+    /// dying mid-task. The pool does not track population, so a plan
+    /// must leave at least one worker alive or pending tasks hang.
+    pub fn with_faults(
+        workers: usize,
+        registry: OpRegistry,
+        artifact_dir: &str,
+        faults: FaultPlan,
+    ) -> Self {
         assert!(workers >= 1, "need at least one worker");
         let pool = Arc::new(PoolShared {
             state: Mutex::new(PoolState { streams: Vec::new(), quit: false }),
@@ -110,10 +126,11 @@ impl LocalCluster {
             let pool = pool.clone();
             let registry = registry.clone();
             let ctx = TaskCtx::new(i, artifact_dir);
+            let faults = faults.clone();
             handles.push(
                 std::thread::Builder::new()
                     .name(format!("av-simd-worker-{i}"))
-                    .spawn(move || pool_worker(pool, registry, ctx))
+                    .spawn(move || pool_worker(pool, registry, ctx, faults))
                     .expect("spawn local worker thread"),
             );
         }
@@ -180,7 +197,7 @@ fn panic_message(payload: &(dyn std::any::Any + Send)) -> String {
 
 /// Persistent pool worker: scan active streams for work, run one task,
 /// repeat; park on the pool condvar when every stream is idle.
-fn pool_worker(pool: Arc<PoolShared>, registry: OpRegistry, ctx: TaskCtx) {
+fn pool_worker(pool: Arc<PoolShared>, registry: OpRegistry, ctx: TaskCtx, faults: FaultPlan) {
     loop {
         let work = {
             let mut st = pool.state.lock().unwrap();
@@ -200,6 +217,21 @@ fn pool_worker(pool: Arc<PoolShared>, registry: OpRegistry, ctx: TaskCtx) {
             }
         };
         let (stream, (seq, spec, queue_wait)) = work;
+        if faults.worker_should_die(ctx.worker_id) {
+            // injected worker death: the held task dies with it (a
+            // retryable transport error) and the thread never returns
+            // to the pool, exactly like a crashed worker process
+            stream.complete(
+                seq,
+                spec,
+                Err(Error::Transport(format!(
+                    "{FAULT_TAG}: worker {} killed", ctx.worker_id
+                ))),
+                queue_wait,
+                Duration::ZERO,
+            );
+            return;
+        }
         let started = Instant::now();
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             executor::run_task(&ctx, &registry, &spec)
@@ -293,6 +325,32 @@ mod tests {
         // the pool must survive the panic and keep serving tasks
         let again = c.run_tasks(&[count_task(0, 9)]);
         assert_eq!(*again[0].as_ref().unwrap(), TaskOutput::Count(9));
+    }
+
+    #[test]
+    fn injected_worker_kill_is_retryable_and_job_completes() {
+        use super::super::scheduler::run_job;
+        let reg = OpRegistry::with_builtins();
+        reg.register("sleepy", |_c, _p, records| {
+            std::thread::sleep(Duration::from_millis(5));
+            Ok(records)
+        });
+        // worker 0 dies on its very first pull; worker 1 finishes the job
+        let faults = FaultPlan::none().kill_worker(0, 0);
+        let c = LocalCluster::with_faults(2, reg, "artifacts", faults);
+        let mk = |id: u32| TaskSpec {
+            job_id: 1,
+            task_id: id,
+            attempt: 0,
+            source: Source::Range { start: 0, end: 10 },
+            ops: vec![super::super::plan::OpCall::new("sleepy", vec![])],
+            action: Action::Count,
+        };
+        let tasks: Vec<TaskSpec> = (0..8).map(mk).collect();
+        let (outs, report) = run_job(&c, tasks, 2).unwrap();
+        assert_eq!(outs.len(), 8);
+        assert!(outs.iter().all(|o| *o == TaskOutput::Count(10)));
+        assert!(report.retries >= 1, "the killed worker's task must be retried");
     }
 
     #[test]

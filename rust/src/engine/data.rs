@@ -203,6 +203,18 @@ impl SwarmRegistry {
             .unwrap_or_default()
     }
 
+    /// Drop `peer` from every manifest it advertises — called when the
+    /// worker's connection detaches with a transport death, so cold
+    /// fetchers stop burning a connect-timeout on the corpse before
+    /// falling back to the driver.
+    pub fn evict(&self, peer: &str) {
+        let mut g = self.inner.lock().unwrap();
+        for peers in g.values_mut() {
+            peers.retain(|p| p != peer);
+        }
+        g.retain(|_, v| !v.is_empty());
+    }
+
     /// Number of manifests with at least one advertising peer.
     pub fn len(&self) -> usize {
         self.inner.lock().unwrap().len()
@@ -657,6 +669,9 @@ pub struct DataPlane {
     /// cached. Entries are bounded by the number of distinct manifests
     /// this worker has ever resolved (tiny).
     inflight: Arc<std::sync::Mutex<HashMap<String, Arc<std::sync::Mutex<()>>>>>,
+    /// Injected-failure schedule (block-read corruption); inert unless
+    /// set via [`DataPlane::with_faults`].
+    faults: super::fault::FaultPlan,
 }
 
 impl DataPlane {
@@ -670,12 +685,22 @@ impl DataPlane {
             cache: BagCache::new(capacity_bytes),
             fetch_timeout: Duration::from_secs(2),
             inflight: Arc::new(std::sync::Mutex::new(HashMap::new())),
+            faults: super::fault::FaultPlan::none(),
         }
     }
 
     /// Override the per-resolution connect budget; builder-style.
     pub fn with_fetch_timeout(mut self, t: Duration) -> Self {
         self.fetch_timeout = t;
+        self
+    }
+
+    /// Test-only builder: flip a byte in the next scheduled remote block
+    /// fetches (per the plan's corruption budget) *before* verification,
+    /// so the content-hash check and the retry path that recovers from a
+    /// bad peer are exercised with real corrupt bytes.
+    pub fn with_faults(mut self, faults: super::fault::FaultPlan) -> Self {
+        self.faults = faults;
         self
     }
 
@@ -799,8 +824,21 @@ impl DataPlane {
             let arc = match self.cache.get(&key) {
                 Some(a) => a,
                 None => {
-                    let bytes =
+                    let mut bytes =
                         cursor.try_peers(id, |c| c.fetch_block(id, i as u32, &manifest))?;
+                    if self.faults.take_block_corruption() && !bytes.is_empty() {
+                        // injected bit rot: damage the fetched bytes so
+                        // the real content-hash check produces the real
+                        // mismatch error, then surface it retryably (a
+                        // fresh attempt re-fetches from a healthy peer)
+                        bytes[0] ^= 0xFF;
+                        let e = verify_block(&bytes, b, manifest.block_offset(i))
+                            .expect_err("flipped byte must fail content verification");
+                        return Err(Error::Engine(format!(
+                            "{}: corrupted block fetch: {e}",
+                            super::fault::FAULT_TAG
+                        )));
+                    }
                     self.cache.put_shared(&key, bytes)
                 }
             };
@@ -884,6 +922,50 @@ mod tests {
         let store = BlockStore::open(dir).unwrap().with_block_size(1024);
         let (id, _) = store.publish(data).unwrap();
         (Arc::new(store), id)
+    }
+
+    #[test]
+    fn evicted_peer_disappears_from_every_manifest() {
+        let swarm = SwarmRegistry::new();
+        swarm.advertise("a:7201", &[[1u8; 32], [2u8; 32]]);
+        swarm.advertise("b:7201", &[[1u8; 32]]);
+        swarm.evict("a:7201");
+        assert_eq!(
+            swarm.peers_for(&ManifestId([1u8; 32])),
+            vec!["b:7201".to_string()],
+            "surviving peer keeps its ads"
+        );
+        assert!(
+            swarm.peers_for(&ManifestId([2u8; 32])).is_empty(),
+            "sole-peer manifest is dropped entirely"
+        );
+        assert_eq!(swarm.len(), 1, "empty entries are removed, not kept hollow");
+        // idempotent on unknown peers
+        swarm.evict("a:7201");
+        swarm.evict("never-advertised:1");
+        assert_eq!(swarm.len(), 1);
+    }
+
+    #[test]
+    fn injected_block_corruption_fails_retryably_then_clears() {
+        let dir = tmp_dir("corrupt");
+        let data: Vec<u8> = (0..4000).map(|i| (i % 251) as u8).collect();
+        let (store, id) = published_store(&dir, &data);
+        let server = BlockServer::serve(store, "127.0.0.1:0", "127.0.0.1").unwrap();
+        let peers = vec![server.peer().to_string()];
+
+        let faults = super::super::fault::FaultPlan::none().corrupt_block_fetches(1);
+        let dp = DataPlane::new(1 << 20).with_faults(faults);
+        let err = dp.open(&DataRef::Manifest { id, peers: peers.clone() }).unwrap_err();
+        assert!(err.is_retryable(), "injected corruption must be retryable: {err}");
+        assert!(err.to_string().contains("hash mismatch"), "{err}");
+
+        // budget spent: the retry (same plane, cold block) succeeds
+        use crate::bag::ChunkStore;
+        let mut chunks = dp.open(&DataRef::Manifest { id, peers }).unwrap();
+        let out = chunks.read_at(0, data.len()).unwrap();
+        assert_eq!(out, data);
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     #[test]

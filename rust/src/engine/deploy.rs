@@ -36,6 +36,7 @@
 //! ]);
 //! ```
 
+use super::checkpoint::CheckpointConfig;
 use super::scheduler::Speculation;
 use super::worker::WorkerClient;
 use crate::config::{flatten_json, parse_toml, TomlValue};
@@ -167,6 +168,11 @@ pub struct ClusterSpec {
     /// `enabled = false` is given; `None` means the manifest is silent
     /// and the driver's own default (off) applies.
     pub speculation: Option<Speculation>,
+    /// Durable job checkpointing (`[checkpoint]` section: `root`,
+    /// `every`, `resume`). Naming the section turns checkpointing on
+    /// for `sweep`/`replay` runs against this fleet; `None` leaves it
+    /// to the driver's `--checkpoint` flag.
+    pub checkpoint: Option<CheckpointConfig>,
 }
 
 impl ClusterSpec {
@@ -209,6 +215,7 @@ impl ClusterSpec {
         let mut store_root = None;
         let mut advertise_host = None;
         let mut speculation: Option<Speculation> = None;
+        let mut checkpoint: Option<CheckpointConfig> = None;
         let mut hosts: Vec<String> = Vec::new();
         let mut capacity = 1usize;
         for (key, val) in doc {
@@ -239,6 +246,23 @@ impl ClusterSpec {
                 "speculation.min_samples" => {
                     speculation.get_or_insert_with(Speculation::on).min_samples =
                         val.as_usize()?
+                }
+                "checkpoint.root" => {
+                    checkpoint.get_or_insert_with(CheckpointConfig::default).root =
+                        val.as_str()?.to_string()
+                }
+                "checkpoint.every" => {
+                    let every = val.as_usize()?;
+                    if every == 0 {
+                        return Err(Error::Config(
+                            "cluster spec: checkpoint.every must be >= 1".into(),
+                        ));
+                    }
+                    checkpoint.get_or_insert_with(CheckpointConfig::default).every = every;
+                }
+                "checkpoint.resume" => {
+                    checkpoint.get_or_insert_with(CheckpointConfig::default).resume =
+                        val.as_bool()?
                 }
                 other => {
                     return Err(Error::Config(format!(
@@ -286,6 +310,7 @@ impl ClusterSpec {
             store_root,
             advertise_host,
             speculation,
+            checkpoint,
         })
     }
 
@@ -468,6 +493,7 @@ mod tests {
         assert!(spec.store_root.is_none());
         assert!(spec.advertise_host.is_none());
         assert!(spec.speculation.is_none());
+        assert!(spec.checkpoint.is_none());
         assert!(spec.workers[0].is_local());
     }
 
@@ -510,6 +536,33 @@ mod tests {
             );
             assert!(ClusterSpec::from_toml_text(&toml).is_err(), "accepted {bad}");
         }
+    }
+
+    #[test]
+    fn checkpoint_section_parses() {
+        let spec = ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"10.0.0.2:7077\"]\n\
+             [checkpoint]\nroot = \"/srv/av-ckpt\"\nevery = 4\nresume = true\n",
+        )
+        .unwrap();
+        let ck = spec.checkpoint.unwrap();
+        assert_eq!(ck.root, "/srv/av-ckpt");
+        assert_eq!(ck.every, 4);
+        assert!(ck.resume);
+        // naming any key fills the rest with defaults
+        let spec = ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"10.0.0.2:7077\"]\n[checkpoint]\nevery = 2\n",
+        )
+        .unwrap();
+        let ck = spec.checkpoint.unwrap();
+        assert_eq!(ck.root, CheckpointConfig::default().root);
+        assert_eq!(ck.every, 2);
+        assert!(!ck.resume);
+        // a zero cadence would never flush — reject it
+        assert!(ClusterSpec::from_toml_text(
+            "[workers]\nhosts = [\"h:7077\"]\n[checkpoint]\nevery = 0\n"
+        )
+        .is_err());
     }
 
     #[test]
@@ -595,6 +648,7 @@ mod tests {
             store_root: None,
             advertise_host: None,
             speculation: None,
+            checkpoint: None,
         };
         let health = probe(&spec);
         assert_eq!(health.len(), 1);

@@ -1,0 +1,191 @@
+//! Deterministic fault injection for recovery-path testing.
+//!
+//! Recovery code (retry re-entry, speculation, swarm fallback, and now
+//! checkpoint resume) is exactly the code that never runs in a happy
+//! test suite. A [`FaultPlan`] is a small, seeded schedule of failures
+//! — worker kills, connection drops, block-read corruption, and a
+//! driver abort after N completions — threaded through the cluster
+//! backends behind test-only constructors
+//! (`LocalCluster::with_faults`, `StandaloneCluster::connect_with_faults`,
+//! `worker::serve_with_faults`, `DataPlane::with_faults`), so those
+//! paths are exercised reproducibly instead of by sleeps and luck.
+//!
+//! The plan is `Clone`-shared (an `Arc` of atomic countdowns): every
+//! component holding a clone draws from the *same* budget, so "corrupt
+//! the first two block fetches" means two fetches process-wide, not two
+//! per worker.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicI64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::util::prng::Prng;
+
+/// Message prefix used by every injected failure, so tests (and humans
+/// reading logs) can tell scheduled faults from real ones.
+pub const FAULT_TAG: &str = "fault injection";
+
+#[derive(Debug)]
+struct Inner {
+    /// Driver aborts once this many outputs have been resolved
+    /// (-1 = disabled).
+    abort_after: AtomicI64,
+    /// Per-worker countdown of tasks to execute before dying.
+    kills: Mutex<HashMap<usize, u64>>,
+    /// Countdown of task replies before a serving connection drops
+    /// (-1 = disabled; the drop fires once).
+    conn_drop: AtomicI64,
+    /// Number of remaining block fetches to corrupt.
+    corruptions: AtomicI64,
+}
+
+impl Default for Inner {
+    fn default() -> Self {
+        // the countdowns must start *disarmed*: 0 would mean "abort at
+        // the first completion" for `abort_after`
+        Self {
+            abort_after: AtomicI64::new(-1),
+            kills: Mutex::new(HashMap::new()),
+            conn_drop: AtomicI64::new(-1),
+            corruptions: AtomicI64::new(0),
+        }
+    }
+}
+
+/// A seeded, shareable schedule of injected failures (see module docs).
+///
+/// The default plan injects nothing; builders arm individual faults.
+#[derive(Debug, Clone, Default)]
+pub struct FaultPlan {
+    inner: Arc<Inner>,
+}
+
+impl FaultPlan {
+    /// A plan that injects nothing (same as `FaultPlan::default()`).
+    pub fn none() -> Self {
+        Self::default()
+    }
+
+    /// Derive a small mixed schedule from `seed` (one worker kill, one
+    /// connection drop, one or two block corruptions) — a convenience
+    /// for chaos sweeps where only reproducibility matters.
+    pub fn seeded(seed: u64) -> Self {
+        let mut rng = Prng::new(seed);
+        Self::none()
+            .kill_worker(rng.below(4) as usize, rng.below(3))
+            .drop_connection_after(1 + rng.below(3))
+            .corrupt_block_fetches(1 + rng.below(2))
+    }
+
+    /// Abort the driver (fail the run) once `n` task outputs have been
+    /// resolved; the checkpoint is flushed first, so a resumed driver
+    /// sees exactly `n` entries.
+    pub fn abort_driver_after(self, n: u64) -> Self {
+        self.inner.abort_after.store(n as i64, Ordering::SeqCst);
+        self
+    }
+
+    /// Kill `worker` (simulated process death) after it has executed
+    /// `after_tasks` further tasks; the task it is holding at death
+    /// completes with a transport error.
+    pub fn kill_worker(self, worker: usize, after_tasks: u64) -> Self {
+        self.inner.kills.lock().unwrap().insert(worker, after_tasks);
+        self
+    }
+
+    /// Drop a serving connection after `replies` task replies.
+    pub fn drop_connection_after(self, replies: u64) -> Self {
+        self.inner.conn_drop.store(replies as i64, Ordering::SeqCst);
+        self
+    }
+
+    /// Corrupt the next `n` remote block fetches (one flipped byte,
+    /// caught by content verification → a retryable engine error).
+    pub fn corrupt_block_fetches(self, n: u64) -> Self {
+        self.inner.corruptions.store(n as i64, Ordering::SeqCst);
+        self
+    }
+
+    /// Driver-side query: should the run abort now, given `completed`
+    /// resolved outputs?
+    pub fn driver_abort_due(&self, completed: u64) -> bool {
+        let n = self.inner.abort_after.load(Ordering::SeqCst);
+        n >= 0 && completed >= n as u64
+    }
+
+    /// Worker-side query, called once per task pulled: decrements the
+    /// worker's kill countdown and returns true when it expires.
+    pub fn worker_should_die(&self, worker: usize) -> bool {
+        let mut kills = self.inner.kills.lock().unwrap();
+        match kills.get_mut(&worker) {
+            Some(0) => true,
+            Some(n) => {
+                *n -= 1;
+                false
+            }
+            None => false,
+        }
+    }
+
+    /// Connection-side query, called once per task reply: true exactly
+    /// once, when the armed countdown expires.
+    pub fn connection_should_drop(&self) -> bool {
+        self.inner.conn_drop.fetch_sub(1, Ordering::SeqCst) == 1
+    }
+
+    /// Data-plane query, called once per remote block fetch: true while
+    /// the corruption budget lasts, consuming one unit per call.
+    pub fn take_block_corruption(&self) -> bool {
+        self.inner.corruptions.fetch_sub(1, Ordering::SeqCst) > 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn default_plan_is_inert() {
+        let plan = FaultPlan::none();
+        assert!(!plan.driver_abort_due(u64::MAX));
+        assert!(!plan.worker_should_die(0));
+        assert!(!plan.connection_should_drop());
+        assert!(!plan.take_block_corruption());
+    }
+
+    #[test]
+    fn worker_kill_counts_down_per_worker() {
+        let plan = FaultPlan::none().kill_worker(1, 2);
+        // Worker 0 is never scheduled to die.
+        assert!(!plan.worker_should_die(0));
+        // Worker 1 survives two pulls, dies on the third.
+        assert!(!plan.worker_should_die(1));
+        assert!(!plan.worker_should_die(1));
+        assert!(plan.worker_should_die(1));
+        assert!(plan.worker_should_die(1));
+    }
+
+    #[test]
+    fn clones_share_one_budget() {
+        let plan = FaultPlan::none().corrupt_block_fetches(2);
+        let other = plan.clone();
+        assert!(plan.take_block_corruption());
+        assert!(other.take_block_corruption());
+        assert!(!plan.take_block_corruption());
+    }
+
+    #[test]
+    fn connection_drop_fires_once() {
+        let plan = FaultPlan::none().drop_connection_after(2);
+        assert!(!plan.connection_should_drop());
+        assert!(plan.connection_should_drop());
+        assert!(!plan.connection_should_drop());
+    }
+
+    #[test]
+    fn abort_threshold() {
+        let plan = FaultPlan::none().abort_driver_after(3);
+        assert!(!plan.driver_abort_due(2));
+        assert!(plan.driver_abort_due(3));
+    }
+}

@@ -15,6 +15,10 @@
 //! * [`scheduler`] — provider-driven streaming dispatch with immediate
 //!   bounded retries ([`scheduler::TaskProvider`] / [`run_job`]; plus
 //!   the old round-based model as a bench baseline).
+//! * [`checkpoint`] — durable, CRC-guarded aggregation checkpoints so
+//!   a restarted driver resumes instead of rerunning from scratch.
+//! * [`fault`] — deterministic fault injection ([`fault::FaultPlan`])
+//!   exercising the recovery paths in tests and CI.
 //! * [`context`] — the driver API: [`SimContext`] + [`Rdd`].
 //! * [`rpc`] / [`worker`] — the standalone-mode TCP protocol.
 //!
@@ -40,9 +44,11 @@
 //! assert_eq!(report.retries, 0);
 //! ```
 
+pub mod checkpoint;
 pub mod cluster;
 pub mod context;
 pub mod data;
+pub mod fault;
 pub mod deploy;
 pub mod executor;
 pub mod ops;
@@ -53,15 +59,17 @@ pub mod scheduler;
 pub mod stream;
 pub mod worker;
 
+pub use checkpoint::{CheckpointConfig, CheckpointRecord, Checkpointer};
 pub use cluster::{Cluster, LocalCluster};
 pub use context::{Rdd, SimContext};
 pub use data::{BlockClient, BlockServer, BlockSource, DataPlane, DataRef, SwarmRegistry};
 pub use deploy::{ClusterSpec, WorkerEndpoint, WorkerHealth};
+pub use fault::FaultPlan;
 pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 pub use remote::StandaloneCluster;
 pub use scheduler::{
-    run_job, run_job_rounds, run_job_with, run_provider, run_provider_with, JobReport,
-    Speculation, TaskProvider,
+    run_job, run_job_rounds, run_job_with, run_provider, run_provider_hooked, run_provider_with,
+    JobReport, RetryBackoff, RunHooks, Speculation, TaskProvider,
 };
 pub use stream::{Completion, CompletionWait, TaskStream};

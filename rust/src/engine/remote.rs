@@ -26,11 +26,12 @@
 use super::cluster::Cluster;
 use super::data::SwarmRegistry;
 use super::deploy::ClusterSpec;
+use super::fault::{FaultPlan, FAULT_TAG};
 use super::plan::TaskSpec;
 use super::stream::TaskStream;
 use super::worker::WorkerClient;
 use crate::error::{Error, Result};
-use std::collections::VecDeque;
+use std::collections::{HashSet, VecDeque};
 use std::process::{Child, Command, Stdio};
 use std::sync::{Arc, Mutex, Weak};
 use std::time::{Duration, Instant};
@@ -67,6 +68,9 @@ struct Workers {
     /// `BlockAd` frames workers piggyback on task replies. Data sources
     /// consult it to order warm sibling peers ahead of the driver.
     swarm: SwarmRegistry,
+    /// Injected-failure schedule for the feeder threads (inert unless
+    /// built via [`StandaloneCluster::connect_with_faults`]).
+    faults: FaultPlan,
 }
 
 /// Cluster of standalone worker processes (spawned locally or dialed
@@ -138,6 +142,7 @@ impl StandaloneCluster {
                 workers: Mutex::new(workers),
                 streams: Mutex::new(Vec::new()),
                 swarm: SwarmRegistry::default(),
+                faults: FaultPlan::none(),
             }),
             owns_workers: true,
         })
@@ -149,6 +154,15 @@ impl StandaloneCluster {
     /// whatever launched it (use [`StandaloneCluster::stop_workers`] to
     /// stop it explicitly).
     pub fn connect(spec: &ClusterSpec) -> Result<Self> {
+        Self::connect_with_faults(spec, FaultPlan::none())
+    }
+
+    /// Test-only flavor of [`StandaloneCluster::connect`]: the given
+    /// [`FaultPlan`] is consulted by every feeder thread, so scheduled
+    /// connection drops surface as real transport deaths (failed
+    /// in-flight attempts, swarm eviction, feeder exit) without an
+    /// actual network fault.
+    pub fn connect_with_faults(spec: &ClusterSpec, faults: FaultPlan) -> Result<Self> {
         let mut workers = Vec::with_capacity(spec.workers.len());
         for endpoint in &spec.workers {
             let addr = endpoint.addr();
@@ -165,6 +179,7 @@ impl StandaloneCluster {
                 workers: Mutex::new(workers),
                 streams: Mutex::new(Vec::new()),
                 swarm: SwarmRegistry::default(),
+                faults,
             }),
             owns_workers: false,
         })
@@ -192,9 +207,10 @@ impl StandaloneCluster {
             stream.attach_worker();
             let w = worker.clone();
             let swarm = self.inner.swarm.clone();
+            let faults = self.inner.faults.clone();
             std::thread::Builder::new()
                 .name(format!("av-simd-feeder-join-{addr}"))
-                .spawn(move || feeder_loop(&w, &stream, &swarm))
+                .spawn(move || feeder_loop(&w, &stream, &swarm, &faults))
                 .expect("spawn feeder thread");
         }
         Ok(())
@@ -287,9 +303,10 @@ impl Cluster for StandaloneCluster {
         for (i, w) in workers.into_iter().enumerate() {
             let stream2 = stream.clone();
             let swarm = self.inner.swarm.clone();
+            let faults = self.inner.faults.clone();
             std::thread::Builder::new()
                 .name(format!("av-simd-feeder-{i}"))
-                .spawn(move || feeder_loop(&w, &stream2, &swarm))
+                .spawn(move || feeder_loop(&w, &stream2, &swarm, &faults))
                 .expect("spawn feeder thread");
         }
         stream
@@ -329,8 +346,11 @@ struct InFlight {
 /// [`PIPELINE_DEPTH`] in flight, until the stream closes or the
 /// transport dies. Detaches from the stream on every exit path. Swarm
 /// cache advertisements riding on task replies are forwarded to the
-/// cluster's registry after every receive.
-fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry) {
+/// cluster's registry after every receive — and evicted again if this
+/// connection dies, so cold fetchers never burn a connect-timeout on a
+/// corpse (a *clean* drain keeps the ads: the worker process and its
+/// block cache are still up, only this stream is done with them).
+fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry, faults: &FaultPlan) {
     struct Detach<'a>(&'a TaskStream);
     impl Drop for Detach<'_> {
         fn drop(&mut self) {
@@ -346,6 +366,9 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry) {
         return; // worker previously declared dead (or serving another stream)
     };
 
+    // Block-server peers this connection advertised into the swarm;
+    // dropped from the registry on every transport-death exit.
+    let mut ad_peers: HashSet<String> = HashSet::new();
     let mut inflight: VecDeque<InFlight> = VecDeque::new();
     // A pulled task too large to pipeline safely; sent once the
     // pipeline drains. Invariant: only Some while `inflight` is
@@ -383,11 +406,12 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry) {
                 stream.complete(
                     seq,
                     spec,
-                    Err(Error::Engine(format!("worker {}: {e}", w.addr))),
+                    Err(Error::Transport(format!("worker {}: {e}", w.addr))),
                     queue_wait,
                     Duration::ZERO,
                 );
                 fail_undispatched(stream, &mut inflight, &mut deferred, &w.addr);
+                evict_ads(swarm, &ad_peers, &w.addr);
                 return; // transport unusable: client stays dropped
             }
             inflight.push_back(InFlight { seq, spec, queue_wait, sent_at: Instant::now() });
@@ -395,9 +419,28 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry) {
 
         // Read one reply (FIFO per connection).
         let f = inflight.pop_front().expect("pipeline fill guarantees one in flight");
+        if faults.connection_should_drop() {
+            // Injected transport death: drop the socket (the worker sees
+            // EOF and re-accepts) and fail this connection's attempts
+            // exactly like a real wire cut.
+            drop(client);
+            stream.complete(
+                f.seq,
+                f.spec,
+                Err(Error::Transport(format!(
+                    "{FAULT_TAG}: connection to worker {} dropped", w.addr
+                ))),
+                f.queue_wait,
+                f.sent_at.elapsed(),
+            );
+            fail_undispatched(stream, &mut inflight, &mut deferred, &w.addr);
+            evict_ads(swarm, &ad_peers, &w.addr);
+            return;
+        }
         let reply = client.recv_reply(f.spec.task_id);
         for (peer, manifests) in client.take_advertisements() {
             swarm.advertise(&peer, &manifests);
+            ad_peers.insert(peer);
         }
         match reply {
             Ok(out) => {
@@ -405,21 +448,36 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry) {
             }
             Err(e) => {
                 let transport_dead = e.is_transport_death();
-                stream.complete(
-                    f.seq,
-                    f.spec,
-                    Err(Error::Engine(format!("worker {}: {e}", w.addr))),
-                    f.queue_wait,
-                    f.sent_at.elapsed(),
-                );
+                let wrapped = if transport_dead {
+                    Error::Transport(format!("worker {}: {e}", w.addr))
+                } else {
+                    Error::Engine(format!("worker {}: {e}", w.addr))
+                };
+                stream.complete(f.seq, f.spec, Err(wrapped), f.queue_wait, f.sent_at.elapsed());
                 if transport_dead {
                     // Worker lost: fail everything queued behind the dead
                     // reply; surviving workers drain the stream.
                     fail_undispatched(stream, &mut inflight, &mut deferred, &w.addr);
+                    evict_ads(swarm, &ad_peers, &w.addr);
                     return;
                 }
             }
         }
+    }
+}
+
+/// Drop a dead connection's block-server advertisements from the swarm
+/// (see [`SwarmRegistry::evict`]).
+fn evict_ads(swarm: &SwarmRegistry, ad_peers: &HashSet<String>, addr: &str) {
+    for peer in ad_peers {
+        swarm.evict(peer);
+    }
+    if !ad_peers.is_empty() {
+        crate::logmsg!(
+            "info",
+            "worker {addr} lost: evicted {} swarm advertisement peer(s)",
+            ad_peers.len()
+        );
     }
 }
 
@@ -436,7 +494,7 @@ fn fail_undispatched(
         stream.complete(
             f.seq,
             f.spec,
-            Err(Error::Engine(format!("worker {addr} lost with task in flight"))),
+            Err(Error::Transport(format!("worker {addr} lost with task in flight"))),
             f.queue_wait,
             f.sent_at.elapsed(),
         );
@@ -446,7 +504,7 @@ fn fail_undispatched(
         stream.complete(
             seq,
             spec,
-            Err(Error::Engine(format!(
+            Err(Error::Transport(format!(
                 "worker {addr} lost before dispatch: queued task never sent"
             ))),
             queue_wait,

@@ -18,7 +18,9 @@
 //! for the scheduler benches (`examples/bench_engine.rs`) and as the
 //! reference semantics the streaming path must reproduce.
 
+use super::checkpoint::Checkpointer;
 use super::cluster::Cluster;
+use super::fault::{FaultPlan, FAULT_TAG};
 use super::plan::{TaskOutput, TaskSpec};
 use super::stream::{CompletionWait, TaskStream};
 use crate::error::{Error, Result};
@@ -57,6 +59,52 @@ impl Speculation {
     pub fn on() -> Self {
         Self { enabled: true, ..Self::default() }
     }
+}
+
+/// Bounded exponential delay before resubmitting an attempt that died
+/// of transport loss ([`Error::is_transport_death`]). Without it a
+/// retryable attempt re-enters the queue immediately and can hot-loop
+/// against a fleet that is momentarily all-dead (e.g. workers
+/// restarting); with it, attempt `k` sleeps `base × 2^(k-1)`, capped.
+/// Non-transport retryable failures (task-level engine errors) still
+/// re-enter immediately — backoff is for dead wires, not flaky ops.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RetryBackoff {
+    /// Delay before the first transport-death retry.
+    pub base: Duration,
+    /// Ceiling the exponential never exceeds.
+    pub cap: Duration,
+}
+
+impl Default for RetryBackoff {
+    fn default() -> Self {
+        Self { base: Duration::from_millis(10), cap: Duration::from_millis(500) }
+    }
+}
+
+impl RetryBackoff {
+    /// Delay for retry attempt `attempt` (1-based: the first retry is
+    /// attempt 1 and sleeps `base`).
+    pub fn delay(&self, attempt: u32) -> Duration {
+        let shift = attempt.saturating_sub(1).min(16);
+        self.base.saturating_mul(1u32 << shift).min(self.cap)
+    }
+}
+
+/// Optional hooks threaded through [`run_provider_hooked`]: durable
+/// checkpointing, deterministic fault injection, and transport-death
+/// retry backoff. `RunHooks::default()` is a no-op configuration
+/// (no checkpoint, no faults, default backoff).
+#[derive(Default)]
+pub struct RunHooks<'a> {
+    /// Fold each resolved output into a durable checkpoint before the
+    /// provider consumes it (keyed by [`TaskProvider::checkpoint_slot`]).
+    pub checkpoint: Option<&'a mut Checkpointer>,
+    /// Injected-failure schedule (drives the driver-abort fault; worker
+    /// and transport faults live in the cluster backends).
+    pub faults: Option<FaultPlan>,
+    /// Backoff policy for transport-death retries.
+    pub backoff: RetryBackoff,
 }
 
 /// Per-job execution report.
@@ -141,6 +189,15 @@ pub trait TaskProvider {
     fn window(&self) -> usize {
         usize::MAX
     }
+
+    /// Plan-stable checkpoint slot for sequence slot `seq`. Sequence
+    /// numbers restart from 0 when a job resumes with fewer tasks, so a
+    /// resumable provider maps `seq` to an identifier derived from the
+    /// plan itself (slice index, case offset). Default: identity, which
+    /// is correct for fresh non-resumable runs.
+    fn checkpoint_slot(&self, seq: u64) -> u64 {
+        seq
+    }
 }
 
 /// Run a provider-driven job to completion with bounded retries,
@@ -213,7 +270,25 @@ pub fn run_provider_with(
     max_retries: usize,
     speculation: Speculation,
 ) -> Result<JobReport> {
+    run_provider_hooked(cluster, provider, max_retries, speculation, RunHooks::default())
+}
+
+/// [`run_provider_with`] plus [`RunHooks`]: durable checkpointing of
+/// resolved outputs, deterministic fault injection (driver abort), and
+/// transport-death retry backoff. Each resolved output is folded into
+/// the checkpoint *before* the provider consumes it, so a checkpoint
+/// entry implies the output was durably observed; the final record is
+/// flushed on every exit path (success or abort) so a killed driver
+/// resumes from the last resolved prefix.
+pub fn run_provider_hooked(
+    cluster: &dyn Cluster,
+    provider: &mut dyn TaskProvider,
+    max_retries: usize,
+    speculation: Speculation,
+    mut hooks: RunHooks<'_>,
+) -> Result<JobReport> {
     let start = Instant::now();
+    let mut completed = 0u64;
     let mut walls: Vec<Duration> = Vec::new();
     let mut waits: Vec<Duration> = Vec::new();
     let mut job_id = 0u64;
@@ -301,8 +376,30 @@ pub fn run_provider_with(
             Ok(out) => {
                 running.remove(&c.seq);
                 if first_err.is_none() {
-                    if let Err(e) = provider.on_output(c.seq, out, c.wall) {
-                        first_err = Some(e);
+                    // checkpoint first: an entry must never exist for an
+                    // output the provider has not (or will not) see in a
+                    // resumed run's pre-fill
+                    if let Some(ck) = hooks.checkpoint.as_deref_mut() {
+                        if let Err(e) = ck.observe(provider.checkpoint_slot(c.seq), &out) {
+                            first_err = Some(e);
+                        }
+                    }
+                    if first_err.is_none() {
+                        if let Err(e) = provider.on_output(c.seq, out, c.wall) {
+                            first_err = Some(e);
+                        }
+                    }
+                    if first_err.is_none() {
+                        completed += 1;
+                        let abort = hooks
+                            .faults
+                            .as_ref()
+                            .is_some_and(|f| f.driver_abort_due(completed));
+                        if abort {
+                            first_err = Some(Error::Engine(format!(
+                                "{FAULT_TAG}: driver aborted after {completed} completion(s)"
+                            )));
+                        }
                     }
                 }
             }
@@ -334,10 +431,15 @@ pub fn run_provider_with(
                     && e.is_retryable()
                 {
                     // immediate re-entry: the retry runs on the next free
-                    // worker while stragglers are still in flight
+                    // worker while stragglers are still in flight —
+                    // except transport deaths, which back off briefly so
+                    // a momentarily all-dead fleet isn't hot-looped
                     let mut t = c.spec;
                     t.attempt += 1;
                     retries_used += 1;
+                    if e.is_transport_death() {
+                        std::thread::sleep(hooks.backoff.delay(t.attempt));
+                    }
                     if speculation.enabled {
                         if let Some(r) = running.get_mut(&c.seq) {
                             r.spec = t.clone();
@@ -368,6 +470,18 @@ pub fn run_provider_with(
         stream.close();
     }
 
+    // Final checkpoint flush on every exit path: a permanent failure
+    // (including the injected driver abort) must still leave the record
+    // current so a restarted driver resumes from the resolved prefix.
+    if let Some(ck) = hooks.checkpoint.as_deref_mut() {
+        if let Err(e) = ck.flush() {
+            if first_err.is_none() {
+                first_err = Some(e);
+            } else {
+                crate::logmsg!("warn", "checkpoint flush failed during job abort: {e}");
+            }
+        }
+    }
     if let Some(e) = first_err {
         return Err(e);
     }
@@ -694,6 +808,61 @@ mod tests {
         let (with, report) = run_job_with(&c, mk(), 2, Speculation::default()).unwrap();
         assert_eq!(plain, with);
         assert_eq!(report.speculations, 0);
+    }
+
+    #[test]
+    fn backoff_delays_grow_and_cap() {
+        let b = RetryBackoff::default();
+        assert_eq!(b.delay(1), Duration::from_millis(10));
+        assert_eq!(b.delay(2), Duration::from_millis(20));
+        assert_eq!(b.delay(3), Duration::from_millis(40));
+        assert_eq!(b.delay(10), Duration::from_millis(500));
+        assert_eq!(b.delay(u32::MAX), Duration::from_millis(500), "shift saturates");
+    }
+
+    /// Driver-abort fault: the run fails with the fault tag after
+    /// exactly N resolved outputs, and the checkpoint holds exactly
+    /// those N entries (later drained completions are not folded).
+    #[test]
+    fn hooked_run_checkpoints_then_injected_abort_stops_folding() {
+        use super::super::checkpoint::{CheckpointConfig, Checkpointer};
+        use super::super::fault::FaultPlan;
+
+        let dir = std::env::temp_dir().join(format!(
+            "av_simd_sched_ckpt_{}_{:x}",
+            std::process::id(),
+            std::time::SystemTime::now()
+                .duration_since(std::time::UNIX_EPOCH)
+                .unwrap()
+                .as_nanos()
+        ));
+        let cfg = CheckpointConfig::new(dir.to_str().unwrap().to_string());
+        let fp = [3u8; 32];
+        let mut ck = Checkpointer::open(&cfg, 1, fp).unwrap();
+
+        let c = LocalCluster::new(1, OpRegistry::with_builtins(), "artifacts");
+        let tasks: Vec<TaskSpec> = (0..5).map(|i| count_task(i, 10, vec![])).collect();
+        let total = tasks.len();
+        let mut provider =
+            CountingProvider { tasks: tasks.into_iter(), delivered: vec![0; total] };
+        let hooks = RunHooks {
+            checkpoint: Some(&mut ck),
+            faults: Some(FaultPlan::none().abort_driver_after(2)),
+            backoff: RetryBackoff::default(),
+        };
+        let err =
+            run_provider_hooked(&c, &mut provider, 2, Speculation::default(), hooks).unwrap_err();
+        assert!(err.to_string().contains(FAULT_TAG), "{err}");
+        assert_eq!(ck.len(), 2, "exactly the pre-abort completions are durable");
+
+        // The record survives a reopen and its payloads decode.
+        let resume = CheckpointConfig { resume: true, ..cfg };
+        let ck2 = Checkpointer::open(&resume, 1, fp).unwrap();
+        assert_eq!(ck2.len(), 2);
+        for payload in ck2.resolved().values() {
+            assert_eq!(TaskOutput::decode(payload).unwrap(), TaskOutput::Count(10));
+        }
+        std::fs::remove_dir_all(&dir).ok();
     }
 
     /// The retry-wave regression the streaming scheduler removes: a

@@ -124,7 +124,7 @@ impl TaskStream {
                 g.done.push_back(Completion {
                     seq,
                     spec,
-                    result: Err(Error::Engine(
+                    result: Err(Error::Transport(
                         "no workers left to run task: all workers lost".into(),
                     )),
                     queue_wait: Duration::ZERO,
@@ -299,7 +299,7 @@ impl TaskStream {
                 g.done.push_back(Completion {
                     seq,
                     spec,
-                    result: Err(Error::Engine(
+                    result: Err(Error::Transport(
                         "no workers left to run task: all workers lost".into(),
                     )),
                     queue_wait,

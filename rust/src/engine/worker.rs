@@ -16,6 +16,7 @@
 
 use super::data::{BlockServer, BlockSource};
 use super::executor;
+use super::fault::{FaultPlan, FAULT_TAG};
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
 use super::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
@@ -42,6 +43,23 @@ pub fn serve_with_slots(
     registry: OpRegistry,
     artifact_dir: &str,
     slots: usize,
+) -> Result<()> {
+    serve_with_faults(addr, worker_id, registry, artifact_dir, slots, FaultPlan::none())
+}
+
+/// Test-only flavor of [`serve_with_slots`]: the [`FaultPlan`] is
+/// consulted on every task received — a scheduled connection drop cuts
+/// the socket *before* the reply is written, so the driver observes a
+/// real mid-task hang-up (the in-flight attempt is lost and must be
+/// retried elsewhere). The worker process itself stays up and
+/// re-accepts, like a worker behind a flaky switch.
+pub fn serve_with_faults(
+    addr: &str,
+    worker_id: usize,
+    registry: OpRegistry,
+    artifact_dir: &str,
+    slots: usize,
+    faults: FaultPlan,
 ) -> Result<()> {
     let slots = slots.max(1);
     let listener = TcpListener::bind(addr)
@@ -118,12 +136,13 @@ pub fn serve_with_slots(
         let shutdown = shutdown.clone();
         let wake = wake_addr.clone();
         let block_peer = block_peer.clone();
+        let faults = faults.clone();
         handles.push(
             std::thread::Builder::new()
                 .name(format!("av-simd-worker-{worker_id}-slot"))
                 .spawn(move || {
                     let result =
-                        serve_connection(stream, &ctx, &registry, block_peer.as_deref());
+                        serve_connection(stream, &ctx, &registry, block_peer.as_deref(), &faults);
                     // free the slot before any shutdown wake, so the
                     // acceptor is never left parked on a full gate
                     {
@@ -173,6 +192,7 @@ fn serve_connection(
     ctx: &TaskCtx,
     registry: &OpRegistry,
     block_peer: Option<&str>,
+    faults: &FaultPlan,
 ) -> Result<ShutdownKind> {
     stream.set_nodelay(true).ok();
     let mut reader = std::io::BufReader::new(stream.try_clone()?);
@@ -203,6 +223,16 @@ fn serve_connection(
                     Ok(out) => RpcMsg::TaskOk(out.encode()),
                     Err(e) => RpcMsg::TaskErr(e.to_string()),
                 };
+                if faults.connection_should_drop() {
+                    // injected wire cut: the computed reply is never
+                    // written, so the driver sees a mid-task hang-up
+                    crate::logmsg!(
+                        "warn",
+                        "{FAULT_TAG}: worker {} dropping connection before reply",
+                        ctx.worker_id
+                    );
+                    return Ok(ShutdownKind::Disconnect);
+                }
                 if let Some(peer) = block_peer {
                     let resident: Vec<[u8; 32]> =
                         ctx.data.resident_manifests().iter().map(|m| m.0).collect();

@@ -17,6 +17,8 @@
 //! * `replay --bag FILE ...` — shard a recorded drive into overlapping
 //!   time slices, replay them through the perception pipeline on the
 //!   cluster, aggregate a deterministic `ReplayReport`.
+//! * `gc --store-root DIR [--keep ID,..]` — sweep a block store,
+//!   deleting content-addressed objects not in the live set.
 //! * `info` — registries, artifacts, config.
 
 use av_simd::cli::Args;
@@ -48,6 +50,7 @@ fn run(raw: &[String]) -> Result<()> {
         "scenarios" => cmd_scenarios(&args),
         "sweep" => cmd_sweep(&args),
         "replay" => cmd_replay(&args),
+        "gc" => cmd_gc(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
             print!("{HELP}");
@@ -81,6 +84,7 @@ COMMANDS:
               [--recalibrate-drift F] [--recalibrate-window N]
               [--ego-speeds A,B,..] [--dts A,B,..] [--seeds A,B,..]
               [--jitter F] [--horizon S] [--worst K] [--record-worst DIR]
+              [--checkpoint [ROOT]] [--resume]
   replay      --bag FILE [--slices N] [--warmup-ms MS] [--rate R]
               [--topics A,B,..] [--workers N] [--standalone]
               [--base-port P] [--cluster-spec FILE] [--verify]
@@ -88,15 +92,52 @@ COMMANDS:
               [--publish] [--store-root DIR] [--advertise HOST]
               [--speculate] [--speculate-multiplier F]
               [--speculate-min-samples N]
+              [--checkpoint [ROOT]] [--resume]
               shard a recorded drive across the cluster and replay it
               through the perception pipeline; --publish ships the bag
               bytes through the engine (content-addressed blocks from a
               driver-side store) instead of requiring the path to
               resolve on every worker; --speculate re-runs straggling
-              tasks on idle workers, first completion wins
+              tasks on idle workers, first completion wins;
+              --checkpoint persists every resolved slice into a durable
+              record so --resume re-executes only what is missing
               (docs/OPERATIONS.md)
+  gc          --store-root DIR [--keep ID,ID,..]       delete manifests
+              not in the live set and every block only they referenced
   info        [--artifacts DIR]
 ";
+
+/// Resolve the durable-checkpoint configuration for `sweep`/`replay`:
+/// the `--checkpoint [ROOT]` / `--resume` flags override the cluster
+/// spec's `[checkpoint]` section; with neither, checkpointing is off.
+fn checkpoint_config(
+    args: &Args,
+    cluster_spec: Option<&av_simd::engine::deploy::ClusterSpec>,
+) -> Result<Option<av_simd::engine::CheckpointConfig>> {
+    let from_spec = cluster_spec.and_then(|c| c.checkpoint.clone());
+    let mut cfg = if args.has("checkpoint") {
+        let mut c = from_spec.unwrap_or_default();
+        if let Some(root) = args.get("checkpoint") {
+            c.root = root.to_string();
+        }
+        Some(c)
+    } else {
+        from_spec
+    };
+    if args.has("resume") {
+        match cfg.as_mut() {
+            Some(c) => c.resume = true,
+            None => {
+                return Err(av_simd::err!(
+                    Config,
+                    "--resume needs --checkpoint (or a [checkpoint] section in the \
+                     cluster spec)"
+                ))
+            }
+        }
+    }
+    Ok(cfg)
+}
 
 fn cmd_deploy(args: &Args) -> Result<()> {
     use av_simd::engine::deploy;
@@ -364,12 +405,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 
     let workers = args.get_usize("workers", 4)?;
     let artifacts = args.get_or("artifacts", "artifacts");
-    let cluster: Box<dyn Cluster> = if let Some(spec_path) = args.get("cluster-spec") {
+    let cluster_spec = match args.get("cluster-spec") {
+        Some(p) => {
+            Some(av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(p))?)
+        }
+        None => None,
+    };
+    let cluster: Box<dyn Cluster> = if let Some(cs) = &cluster_spec {
         // dial an externally managed (possibly multi-host) fleet; the
         // fleet stays up after the sweep — see `av-simd deploy`
-        let spec =
-            av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(spec_path))?;
-        Box::new(StandaloneCluster::connect(&spec)?)
+        Box::new(StandaloneCluster::connect(cs)?)
     } else if args.has("standalone") {
         let base_port = args.get_usize("base-port", 7077)? as u16;
         Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
@@ -385,7 +430,16 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         cluster.workers(),
         cluster.backend()
     );
-    let report = driver.run(cluster.as_ref())?;
+    let report = match checkpoint_config(args, cluster_spec.as_ref())? {
+        Some(cfg) => {
+            println!(
+                "checkpointing into {} (every {} shard(s), resume: {})",
+                cfg.root, cfg.every, cfg.resume
+            );
+            driver.run_checkpointed(cluster.as_ref(), &cfg)?
+        }
+        None => driver.run(cluster.as_ref())?,
+    };
     print!("{}", report.render());
     if let Some(dir) = args.get("record-worst") {
         let paths = driver.record_worst(&report, dir)?;
@@ -518,7 +572,16 @@ fn cmd_replay(args: &Args) -> Result<()> {
         cluster.backend(),
         driver.effective_warmup(&index),
     );
-    let report = driver.run_planned(cluster.as_ref(), &index, &slices)?;
+    let report = match checkpoint_config(args, cluster_spec.as_ref())? {
+        Some(cfg) => {
+            println!(
+                "checkpointing into {} (every {} slice(s), resume: {})",
+                cfg.root, cfg.every, cfg.resume
+            );
+            driver.run_planned_checkpointed(cluster.as_ref(), &index, &slices, &cfg)?
+        }
+        None => driver.run_planned(cluster.as_ref(), &index, &slices)?,
+    };
     print!("{}", report.render());
     if args.has("verify") {
         let reference = driver.reference(artifacts)?;
@@ -534,6 +597,30 @@ fn cmd_replay(args: &Args) -> Result<()> {
         }
     }
     cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_gc(args: &Args) -> Result<()> {
+    use av_simd::storage::{BlockStore, ManifestId};
+
+    let root = args.require("store-root")?;
+    let live: Vec<ManifestId> = match args.get("keep") {
+        None => Vec::new(),
+        Some(v) => v
+            .split(',')
+            .map(|s| ManifestId::parse(s.trim()))
+            .collect::<Result<Vec<_>>>()?,
+    };
+    let store = BlockStore::open(root)?;
+    let stats = store.gc(&live)?;
+    println!(
+        "gc {root}: deleted {} manifest(s) and {} block(s) ({} reclaimed), kept {} \
+         manifest(s)",
+        stats.manifests_deleted,
+        stats.blocks_deleted,
+        av_simd::util::human_bytes(stats.bytes_reclaimed),
+        stats.manifests_kept
+    );
     Ok(())
 }
 

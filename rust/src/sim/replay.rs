@@ -68,8 +68,9 @@
 
 use crate::bag::{BagIndex, BagReader};
 use crate::engine::{
-    run_provider_with, Action, BlockServer, Cluster, DataRef, OpCall, OpRegistry, Source,
-    Speculation, SwarmRegistry, TaskCtx, TaskOutput, TaskProvider, TaskSpec,
+    run_provider_hooked, Action, BlockServer, CheckpointConfig, Checkpointer, Cluster, DataRef,
+    FaultPlan, OpCall, OpRegistry, RunHooks, Source, Speculation, SwarmRegistry, TaskCtx,
+    TaskOutput, TaskProvider, TaskSpec,
 };
 use crate::error::{Error, Result};
 use crate::msg::{Image, Message, PointCloud, Time};
@@ -983,6 +984,7 @@ pub struct ReplayDriver {
     spec: ReplaySpec,
     data: Option<PublishedBag>,
     speculation: Speculation,
+    faults: FaultPlan,
 }
 
 /// Driver-side publish state: the local store, the published manifest,
@@ -995,10 +997,15 @@ struct PublishedBag {
 
 /// The replay job's [`TaskProvider`]: one slice per task, verdicts
 /// placed by sequence slot as completions stream in. Completion/retry/
-/// metrics handling lives in [`run_provider_with`].
+/// metrics handling lives in [`run_provider_hooked`].
 struct ReplayProvider<'a> {
     tasks: std::vec::IntoIter<TaskSpec>,
     verdicts: &'a mut [Option<ReplayVerdict>],
+    /// Sequence → plan-stable slice index. Identity on a fresh run; on
+    /// a checkpoint resume only the unresolved slices are submitted, so
+    /// scheduler sequence numbers (dense, from 0) no longer equal slice
+    /// indices and this map carries each completion home.
+    slots: Vec<u32>,
     /// Swarm peer rebuilding (publish mode on a swarm-tracking cluster):
     /// the cluster's registry, the published manifest, and the driver's
     /// own block peer. Each task handed out gets a fresh peer list —
@@ -1038,15 +1045,40 @@ impl TaskProvider for ReplayProvider<'_> {
                 rs.len()
             )));
         }
-        self.verdicts[seq as usize] = Some(ReplayVerdict::decode(&rs[0])?);
+        let slot = self.slots[seq as usize] as usize;
+        let v = ReplayVerdict::decode(&rs[0])?;
+        if v.slice as usize != slot {
+            return Err(Error::Sim(format!(
+                "replay task for slice {slot} returned a verdict for slice {}",
+                v.slice
+            )));
+        }
+        self.verdicts[slot] = Some(v);
         Ok(())
+    }
+
+    fn checkpoint_slot(&self, seq: u64) -> u64 {
+        self.slots[seq as usize] as u64
     }
 }
 
 impl ReplayDriver {
     /// Driver for `spec`.
     pub fn new(spec: ReplaySpec) -> Self {
-        Self { spec, data: None, speculation: Speculation::default() }
+        Self {
+            spec,
+            data: None,
+            speculation: Speculation::default(),
+            faults: FaultPlan::none(),
+        }
+    }
+
+    /// Inject a deterministic fault schedule into this driver's runs
+    /// (test/chaos tooling: e.g. [`FaultPlan::abort_driver_after`] to
+    /// simulate a driver crash mid-job and exercise checkpoint resume).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// Enable (or tune) speculative straggler re-execution for this
@@ -1189,19 +1221,153 @@ impl ReplayDriver {
         index: &BagIndex,
         slices: &[ReplaySlice],
     ) -> Result<ReplayReport> {
+        self.run_planned_with(cluster, index, slices, None)
+    }
+
+    /// [`ReplayDriver::run_planned`] with durable checkpointing: every
+    /// resolved slice is folded into a CRC-guarded
+    /// [`crate::engine::CheckpointRecord`] in the block store at
+    /// `cfg.root` before the driver consumes it. With `cfg.resume` set,
+    /// an existing record for this exact plan (same spec bytes, same
+    /// bag identity, same slice layout — see the fingerprint
+    /// cross-check) pre-fills the already-resolved slices and only the
+    /// remainder is submitted; the final report is byte-identical to an
+    /// uninterrupted run because [`ReplayReport::encode`] covers only
+    /// the deterministic payload and aggregation runs in slice order
+    /// regardless of which run produced each verdict.
+    pub fn run_planned_checkpointed(
+        &self,
+        cluster: &dyn Cluster,
+        index: &BagIndex,
+        slices: &[ReplaySlice],
+        cfg: &CheckpointConfig,
+    ) -> Result<ReplayReport> {
+        self.run_planned_with(cluster, index, slices, Some(cfg))
+    }
+
+    /// Checkpoint fingerprint: sha256 over everything that determines
+    /// the slot layout — the spec bytes, the bag's identity (manifest id
+    /// when published, path otherwise; peer addresses excluded — they
+    /// change across driver restarts without changing the data), and
+    /// every slice boundary.
+    fn job_fingerprint(&self, slices: &[ReplaySlice]) -> [u8; 32] {
+        let mut w = ByteWriter::new();
+        w.put_bytes(&self.spec.encode());
+        match &self.data {
+            Some(p) => {
+                w.put_u8(1);
+                w.put_raw(&p.id.0);
+            }
+            None => {
+                w.put_u8(0);
+                w.put_str(&self.spec.bag);
+            }
+        }
+        w.put_varint(slices.len() as u64);
+        for s in slices {
+            w.put_raw(&s.encode());
+        }
+        crate::util::sha256::digest(w.as_slice())
+    }
+
+    fn run_planned_with(
+        &self,
+        cluster: &dyn Cluster,
+        index: &BagIndex,
+        slices: &[ReplaySlice],
+        ckpt: Option<&CheckpointConfig>,
+    ) -> Result<ReplayReport> {
         let wall_start = Instant::now();
         let mut verdicts: Vec<Option<ReplayVerdict>> = (0..slices.len()).map(|_| None).collect();
+
+        // open the checkpoint and pre-fill slots it already resolved
+        let mut checkpointer = match ckpt {
+            None => None,
+            Some(cfg) => {
+                let fp = self.job_fingerprint(slices);
+                let ck = Checkpointer::open(cfg, REPLAY_JOB_ID, fp)?;
+                for (&slot, payload) in ck.resolved() {
+                    let idx = slot as usize;
+                    if idx >= slices.len() {
+                        return Err(Error::Sim(format!(
+                            "checkpoint '{}' resolves slice {slot} but the plan \
+                             has {} slices",
+                            ck.name(),
+                            slices.len()
+                        )));
+                    }
+                    let rs = match TaskOutput::decode(payload)? {
+                        TaskOutput::Replays(rs) => rs,
+                        other => {
+                            return Err(Error::Sim(format!(
+                                "checkpoint '{}' slot {slot} holds {other:?}, \
+                                 expected Replays",
+                                ck.name()
+                            )))
+                        }
+                    };
+                    if rs.len() != 1 {
+                        return Err(Error::Sim(format!(
+                            "checkpoint '{}' slot {slot} holds {} verdicts for a \
+                             1-slice task",
+                            ck.name(),
+                            rs.len()
+                        )));
+                    }
+                    let v = ReplayVerdict::decode(&rs[0])?;
+                    if v.slice as usize != idx {
+                        return Err(Error::Sim(format!(
+                            "checkpoint '{}' slot {slot} holds a verdict for \
+                             slice {}",
+                            ck.name(),
+                            v.slice
+                        )));
+                    }
+                    verdicts[idx] = Some(v);
+                }
+                if !ck.is_empty() {
+                    crate::logmsg!(
+                        "info",
+                        "resuming replay from checkpoint '{}': {} of {} slice(s) \
+                         already resolved",
+                        ck.name(),
+                        ck.len(),
+                        slices.len()
+                    );
+                }
+                Some(ck)
+            }
+        };
+
+        // submit only the unresolved slices, remembering each task's
+        // plan-stable slice slot
+        let pending: Vec<ReplaySlice> = slices
+            .iter()
+            .filter(|s| verdicts[s.index as usize].is_none())
+            .copied()
+            .collect();
+        let slots: Vec<u32> = pending.iter().map(|s| s.index).collect();
         let swarm = match (&self.data, cluster.swarm()) {
             (Some(p), Some(reg)) => Some((reg, p.id, p.server.peer().to_string())),
             _ => None,
         };
         let mut provider = ReplayProvider {
-            tasks: self.tasks(slices).into_iter(),
+            tasks: self.tasks(&pending).into_iter(),
             verdicts: &mut verdicts,
+            slots,
             swarm,
         };
-        let job =
-            run_provider_with(cluster, &mut provider, self.spec.max_retries, self.speculation)?;
+        let job = run_provider_hooked(
+            cluster,
+            &mut provider,
+            self.spec.max_retries,
+            self.speculation,
+            RunHooks {
+                checkpoint: checkpointer.as_mut(),
+                faults: Some(self.faults.clone()),
+                ..RunHooks::default()
+            },
+        )?;
         let verdicts: Vec<ReplayVerdict> = verdicts
             .into_iter()
             .map(|v| v.expect("every slice slot filled or the job errored"))
@@ -1487,6 +1653,52 @@ mod tests {
         assert!(distributed.stats.frames > 0, "{distributed:?}");
         assert!(distributed.stats.odom.pairs > 0, "{distributed:?}");
         assert!(distributed.stats.messages >= 8 * 7, "{distributed:?}");
+        std::fs::remove_file(bag).ok();
+    }
+
+    #[test]
+    fn checkpointed_replay_resumes_to_identical_bytes() {
+        let bag = fixture(6, 33);
+        let spec = ReplaySpec { bag: bag.clone(), slices: 3, ..ReplaySpec::default() };
+        let driver = ReplayDriver::new(spec);
+        let (index, slices) = driver.plan().unwrap();
+        let reference = driver.run_planned(&local(2), &index, &slices).unwrap();
+
+        let root = std::env::temp_dir().join(format!(
+            "av_simd_replay_ckpt_{}_{:x}",
+            std::process::id(),
+            crate::util::now_nanos()
+        ));
+        let cfg = CheckpointConfig::new(root.to_str().unwrap().to_string());
+
+        // injected driver crash after the first resolved slice
+        let crashing = ReplayDriver::new(driver.spec().clone())
+            .with_faults(FaultPlan::none().abort_driver_after(1));
+        let err = crashing
+            .run_planned_checkpointed(&local(2), &index, &slices, &cfg)
+            .unwrap_err();
+        assert!(err.to_string().contains("fault injection"), "{err}");
+
+        // resumed driver re-executes only the remainder, bytes identical
+        let resume = CheckpointConfig { resume: true, ..cfg.clone() };
+        let resumed = ReplayDriver::new(driver.spec().clone())
+            .run_planned_checkpointed(&local(2), &index, &slices, &resume)
+            .unwrap();
+        assert_eq!(resumed.encode(), reference.encode());
+        assert_eq!(
+            resumed.tasks,
+            slices.len() - 1,
+            "exactly the unresolved slices re-ran"
+        );
+
+        // a second resume finds everything resolved: zero tasks dispatched
+        let again = ReplayDriver::new(driver.spec().clone())
+            .run_planned_checkpointed(&local(2), &index, &slices, &resume)
+            .unwrap();
+        assert_eq!(again.encode(), reference.encode());
+        assert_eq!(again.tasks, 0);
+
+        std::fs::remove_dir_all(&root).ok();
         std::fs::remove_file(bag).ok();
     }
 

@@ -34,7 +34,8 @@
 //! ```
 
 use crate::engine::{
-    run_job, run_provider, Action, Cluster, OpCall, Source, TaskOutput, TaskProvider, TaskSpec,
+    run_job, run_provider_hooked, Action, CheckpointConfig, Checkpointer, Cluster, FaultPlan,
+    OpCall, RunHooks, Source, Speculation, TaskOutput, TaskProvider, TaskSpec,
 };
 use crate::error::{Error, Result};
 use crate::metrics::Metrics;
@@ -564,8 +565,8 @@ fn place_episodes(
 /// places each completed shard's episodes straight into the case-indexed
 /// result slots, and folds measured per-case wall time back into the
 /// shard size when drift exceeds the threshold. All completion/retry/
-/// metrics handling lives in [`run_provider`] — this type only decides
-/// *what* runs next and what a finished shard means.
+/// metrics handling lives in [`run_provider_hooked`] — this type only
+/// decides *what* runs next and what a finished shard means.
 struct AdaptiveTail<'a> {
     spec: &'a SweepSpec,
     ad: &'a AdaptiveSharding,
@@ -639,6 +640,39 @@ impl TaskProvider for AdaptiveTail<'_> {
 
     fn window(&self) -> usize {
         self.window
+    }
+
+    fn checkpoint_slot(&self, seq: u64) -> u64 {
+        // plan-stable slot: the shard's start case index (the
+        // calibration shard is seeded separately under slot 0)
+        self.ranges[seq as usize].0 as u64
+    }
+}
+
+/// A static-shard [`TaskProvider`] that knows each task's case range:
+/// completions land straight in the case-indexed result slots, and the
+/// checkpoint slot is the shard's start case index — plan-stable across
+/// driver restarts, unlike scheduler sequence numbers. Used by the
+/// checkpointed sweep paths (fresh fixed-shard runs and every resume).
+struct ShardProvider<'a> {
+    tasks: std::vec::IntoIter<TaskSpec>,
+    /// seq → (start case, case count) of each task, in submission order.
+    ranges: Vec<(usize, usize)>,
+    results: &'a mut [Option<EpisodeResult>],
+}
+
+impl TaskProvider for ShardProvider<'_> {
+    fn next_task(&mut self, _seq: u64) -> Option<TaskSpec> {
+        self.tasks.next()
+    }
+
+    fn on_output(&mut self, seq: u64, output: TaskOutput, _wall: Duration) -> Result<()> {
+        let (start, len) = self.ranges[seq as usize];
+        place_episodes(output, start, len, self.results)
+    }
+
+    fn checkpoint_slot(&self, seq: u64) -> u64 {
+        self.ranges[seq as usize].0 as u64
     }
 }
 
@@ -930,12 +964,23 @@ impl SweepReport {
 /// Driver-side API: expand → shard → schedule → aggregate.
 pub struct SweepDriver {
     spec: SweepSpec,
+    faults: FaultPlan,
 }
 
 impl SweepDriver {
     /// Driver for `spec`.
     pub fn new(spec: SweepSpec) -> Self {
-        Self { spec }
+        Self { spec, faults: FaultPlan::none() }
+    }
+
+    /// Inject a deterministic fault schedule into this driver's runs
+    /// (test/chaos tooling: e.g. [`FaultPlan::abort_driver_after`] to
+    /// simulate a driver crash mid-sweep and exercise checkpoint
+    /// resume). Faults apply to the streamed phases of the sweep (the
+    /// sharded job; for adaptive sweeps, the post-calibration tail).
+    pub fn with_faults(mut self, faults: FaultPlan) -> Self {
+        self.faults = faults;
+        self
     }
 
     /// The sweep specification this driver runs.
@@ -948,14 +993,193 @@ impl SweepDriver {
     /// the spec (see module docs) — with or without adaptive sharding.
     pub fn run(&self, cluster: &dyn Cluster) -> Result<SweepReport> {
         let report = match self.spec.adaptive {
-            Some(ad) => self.run_adaptive(cluster, &ad)?,
+            Some(ad) => self.run_adaptive(cluster, &ad, None)?,
             None => self.run_fixed(cluster)?,
         };
+        self.observe_metrics(&report);
+        Ok(report)
+    }
+
+    /// [`SweepDriver::run`] with durable checkpointing: every resolved
+    /// shard's episodes are folded into a CRC-guarded
+    /// [`crate::engine::CheckpointRecord`] in the block store at
+    /// `cfg.root` (keyed by the shard's start case index) before the
+    /// driver consumes them. With `cfg.resume` set and a record present
+    /// for this exact spec (see the fingerprint cross-check), the
+    /// already-resolved case ranges are pre-filled and only the
+    /// remainder is re-executed; the final report is byte-identical to
+    /// an uninterrupted run because [`SweepReport::encode`] depends on
+    /// case order alone, never on task boundaries.
+    ///
+    /// Adaptive sweeps checkpoint too (the calibration shard is seeded
+    /// under slot 0); a *resumed* adaptive sweep re-shards the
+    /// unresolved remainder statically at [`SweepSpec::shard_size`] —
+    /// task boundaries are execution facts, so the verdict bytes are
+    /// unaffected, and the resumed report records
+    /// [`ShardSizing::Fixed`].
+    pub fn run_checkpointed(
+        &self,
+        cluster: &dyn Cluster,
+        cfg: &CheckpointConfig,
+    ) -> Result<SweepReport> {
+        let cases = self.spec.cases();
+        if cases.is_empty() {
+            return Err(Error::Sim("sweep spec expands to zero cases".into()));
+        }
+        let mut ck = Checkpointer::open(cfg, SWEEP_JOB_ID, self.job_fingerprint(&cases))?;
+        let report = if ck.is_empty() {
+            match self.spec.adaptive {
+                Some(ad) => self.run_adaptive(cluster, &ad, Some(&mut ck))?,
+                None => self.run_sharded_checkpointed(cluster, &cases, &mut ck)?,
+            }
+        } else {
+            self.run_sharded_checkpointed(cluster, &cases, &mut ck)?
+        };
+        self.observe_metrics(&report);
+        Ok(report)
+    }
+
+    fn observe_metrics(&self, report: &SweepReport) {
         let m = Metrics::global();
         m.counter("sweep_episodes_total").add(report.total as u64);
         m.counter("sweep_failures_total").add(report.failing_total as u64);
         m.gauge("sweep_pass_rate_bp").set((report.pass_rate() * 10_000.0).round() as u64);
         m.histogram("sweep_wall").observe(report.wall);
+    }
+
+    /// Checkpoint fingerprint: sha256 over everything that determines
+    /// the report — the expanded case list (ego speeds, jitter,
+    /// timesteps, and seeds are all baked into it), the episode horizon,
+    /// the controller under test, and the worst-case cap. Shard sizes
+    /// are deliberately excluded: they move task boundaries, never
+    /// verdicts.
+    fn job_fingerprint(&self, cases: &[SweepCase]) -> [u8; 32] {
+        let mut w = ByteWriter::new();
+        w.put_varint(cases.len() as u64);
+        for c in cases {
+            c.encode_into(&mut w);
+        }
+        w.put_f64(self.spec.horizon);
+        let c = &self.spec.controller;
+        for v in [
+            c.cruise_speed,
+            c.time_gap,
+            c.min_gap,
+            c.aeb_ttc,
+            c.kp_speed,
+            c.kp_gap,
+            c.kp_lat,
+        ] {
+            w.put_f64(v);
+        }
+        w.put_varint(self.spec.worst_k as u64);
+        crate::util::sha256::digest(w.as_slice())
+    }
+
+    /// Static-shard checkpointed execution — both the fresh fixed-shard
+    /// path and every resume (fixed or adaptive) land here: pre-fill the
+    /// case ranges the record already resolved, cut the unresolved
+    /// remainder into dt-pure shards of at most
+    /// [`SweepSpec::shard_size`] cases, and stream them with the
+    /// checkpoint and fault hooks installed.
+    fn run_sharded_checkpointed(
+        &self,
+        cluster: &dyn Cluster,
+        cases: &[SweepCase],
+        ck: &mut Checkpointer,
+    ) -> Result<SweepReport> {
+        let wall_start = Instant::now();
+        let mut results: Vec<Option<EpisodeResult>> = vec![None; cases.len()];
+        for (&slot, payload) in ck.resolved() {
+            let start = slot as usize;
+            let out = TaskOutput::decode(payload)?;
+            let len = match &out {
+                TaskOutput::Episodes(rs) => rs.len(),
+                other => {
+                    return Err(Error::Sim(format!(
+                        "checkpoint '{}' slot {slot} holds {other:?}, expected \
+                         Episodes",
+                        ck.name()
+                    )))
+                }
+            };
+            if start.saturating_add(len) > cases.len() {
+                return Err(Error::Sim(format!(
+                    "checkpoint '{}' resolves cases {start}..{} but the sweep has \
+                     {} cases",
+                    ck.name(),
+                    start.saturating_add(len),
+                    cases.len()
+                )));
+            }
+            place_episodes(out, start, len, &mut results)?;
+        }
+        let resolved_cases = results.iter().filter(|r| r.is_some()).count();
+        if resolved_cases > 0 {
+            crate::logmsg!(
+                "info",
+                "resuming sweep from checkpoint '{}': {resolved_cases} of {} \
+                 case(s) already resolved",
+                ck.name(),
+                cases.len()
+            );
+        }
+
+        // cut every maximal unresolved segment into dt-pure shards
+        let mut ranges: Vec<(usize, usize)> = Vec::new();
+        let mut i = 0usize;
+        while i < cases.len() {
+            if results[i].is_some() {
+                i += 1;
+                continue;
+            }
+            let mut seg_end = i;
+            while seg_end < cases.len() && results[seg_end].is_none() {
+                seg_end += 1;
+            }
+            let mut c = i;
+            while c < seg_end {
+                let end = next_shard_end(cases, c, self.spec.shard_size).min(seg_end);
+                ranges.push((c, end - c));
+                c = end;
+            }
+            i = seg_end;
+        }
+        let tasks: Vec<TaskSpec> = ranges
+            .iter()
+            .enumerate()
+            .map(|(i, &(s, l))| shard_task(&self.spec, &cases[s..s + l], i))
+            .collect();
+        let n_tasks = tasks.len();
+        let mut provider = ShardProvider {
+            tasks: tasks.into_iter(),
+            ranges,
+            results: &mut results,
+        };
+        let job = run_provider_hooked(
+            cluster,
+            &mut provider,
+            self.spec.max_retries,
+            Speculation::default(),
+            RunHooks {
+                checkpoint: Some(ck),
+                faults: Some(self.faults.clone()),
+                ..RunHooks::default()
+            },
+        )?;
+        let results: Vec<EpisodeResult> = results
+            .into_iter()
+            .map(|o| o.expect("every case slot filled or the sweep errored"))
+            .collect();
+        let mut report = SweepReport::aggregate(
+            cases,
+            &results,
+            self.spec.worst_k,
+            n_tasks,
+            job.retries,
+            wall_start.elapsed(),
+        )?;
+        report.sharding = ShardSizing::Fixed { shard_size: self.spec.shard_size };
         Ok(report)
     }
 
@@ -981,7 +1205,7 @@ impl SweepDriver {
     /// Adaptive path: run a dt-pure calibration prefix as one task,
     /// derive cases-per-shard from its measured wall time, then *stream*
     /// the remainder through the generalized scheduler
-    /// ([`run_provider`]) — an [`AdaptiveTail`] provider cuts shards
+    /// ([`run_provider_hooked`]) — an [`AdaptiveTail`] provider cuts shards
     /// lazily at the submission cursor, and completed shards keep
     /// feeding measured per-case wall time back in. When the
     /// measurement drifts past [`AdaptiveSharding::drift_threshold`],
@@ -989,7 +1213,12 @@ impl SweepDriver {
     /// to the calibration log ([`SweepReport::sharding`]). Case order —
     /// and therefore the encoded verdict payload — is identical to the
     /// fixed path; only task boundaries move.
-    fn run_adaptive(&self, cluster: &dyn Cluster, ad: &AdaptiveSharding) -> Result<SweepReport> {
+    fn run_adaptive(
+        &self,
+        cluster: &dyn Cluster,
+        ad: &AdaptiveSharding,
+        mut ck: Option<&mut Checkpointer>,
+    ) -> Result<SweepReport> {
         let cases = self.spec.cases();
         if cases.is_empty() {
             return Err(Error::Sim("sweep spec expands to zero cases".into()));
@@ -1008,12 +1237,14 @@ impl SweepDriver {
         let calib_tasks = self.spec.task_specs_from(&calib_shards, SWEEP_JOB_ID);
         let (mut calib_outs, calib_job) = run_job(cluster, calib_tasks, self.spec.max_retries)?;
         let mut results: Vec<Option<EpisodeResult>> = vec![None; cases.len()];
-        place_episodes(
-            calib_outs.pop().expect("1-task job returns 1 output"),
-            0,
-            calib_len,
-            &mut results,
-        )?;
+        let calib_out = calib_outs.pop().expect("1-task job returns 1 output");
+        if let Some(ck) = ck.as_deref_mut() {
+            // seed the calibration shard under its start index (slot 0)
+            // so a resume never re-runs it
+            ck.insert(0, calib_out.encode());
+            ck.flush()?;
+        }
+        place_episodes(calib_out, 0, calib_len, &mut results)?;
 
         // measured per-case wall: the calibration task's execution time
         // (p50 of a 1-task job = that task) over its case count
@@ -1050,7 +1281,17 @@ impl SweepDriver {
                 // on case order alone.
                 window: cluster.workers().saturating_mul(2).max(4),
             };
-            let tail_job = run_provider(cluster, &mut provider, self.spec.max_retries)?;
+            let tail_job = run_provider_hooked(
+                cluster,
+                &mut provider,
+                self.spec.max_retries,
+                Speculation::default(),
+                RunHooks {
+                    checkpoint: ck.as_deref_mut(),
+                    faults: Some(self.faults.clone()),
+                    ..RunHooks::default()
+                },
+            )?;
             retries += tail_job.retries;
             ranges = provider.ranges;
         }
@@ -1256,6 +1497,57 @@ mod tests {
         assert_eq!(back.ttc_histogram, a.ttc_histogram);
         assert_eq!(back.failing, a.failing);
         assert_eq!(back.worst, a.worst);
+    }
+
+    #[test]
+    fn checkpointed_sweep_resumes_to_identical_bytes() {
+        let spec = SweepSpec {
+            ego_speeds: vec![10.0, 14.0],
+            dts: vec![0.05],
+            seeds: vec![1],
+            shard_size: 25,
+            ..SweepSpec::default()
+        };
+        let n_shards = spec.shards().len();
+        assert!(n_shards >= 3, "want several shards, got {n_shards}");
+        let reference = SweepDriver::new(spec.clone()).run(&local(2)).unwrap();
+
+        let root = format!(
+            "{}/av_simd_sweep_ckpt_{}",
+            std::env::temp_dir().display(),
+            crate::util::now_nanos()
+        );
+        // crash after the first completed shard persists
+        let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: false };
+        let err = SweepDriver::new(spec.clone())
+            .with_faults(FaultPlan::none().abort_driver_after(1))
+            .run_checkpointed(&local(1), &cfg)
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("fault injection"),
+            "unexpected error: {err}"
+        );
+
+        // resume: only the unresolved remainder runs, bytes identical
+        let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: true };
+        let resumed =
+            SweepDriver::new(spec.clone()).run_checkpointed(&local(2), &cfg).unwrap();
+        assert_eq!(
+            resumed.encode(),
+            reference.encode(),
+            "resumed sweep must be byte-identical to an uninterrupted run"
+        );
+        assert!(
+            resumed.tasks < n_shards,
+            "resume re-ran all {n_shards} shards instead of skipping the \
+             checkpointed one"
+        );
+
+        // a completed checkpoint resumes to zero new work
+        let again = SweepDriver::new(spec).run_checkpointed(&local(1), &cfg).unwrap();
+        assert_eq!(again.encode(), reference.encode());
+        assert_eq!(again.tasks, 0);
+        std::fs::remove_dir_all(&root).ok();
     }
 
     #[test]

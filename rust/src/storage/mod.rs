@@ -426,6 +426,102 @@ impl BlockStore {
         std::fs::remove_file(self.manifest_path(name)?)?;
         Ok(())
     }
+
+    /// Garbage-collect the store: delete every **content-addressed**
+    /// manifest not in `live`, then every block file unreachable from
+    /// the surviving manifests.
+    ///
+    /// Named manifests (checkpoints, objects stored with
+    /// [`BlockStore::put`]) are implicit GC roots — their stems don't
+    /// parse as [`ManifestId`]s and they are never deleted; blocks they
+    /// reference survive. Blocks shared between a dead and a live
+    /// manifest survive (reachability is computed over the survivors,
+    /// not the deletions).
+    ///
+    /// Exactly one GC may run at a time per store: a `gc.lock` file at
+    /// the store root is taken exclusively (`create_new`) and removed on
+    /// exit; a concurrent run fails with [`Error::Storage`] naming the
+    /// lock. A crashed GC leaves the lock behind — delete it manually
+    /// after checking no GC is running (the error says so).
+    pub fn gc(&self, live: &[ManifestId]) -> Result<GcStats> {
+        let lock_path = self.root.join("gc.lock");
+        match std::fs::OpenOptions::new().write(true).create_new(true).open(&lock_path) {
+            Ok(_) => {}
+            Err(e) if e.kind() == std::io::ErrorKind::AlreadyExists => {
+                return Err(Error::Storage(format!(
+                    "gc already running on store {} ({} exists; if no gc is \
+                     actually running, a previous run crashed — remove the \
+                     lock file and retry)",
+                    self.root.display(),
+                    lock_path.display()
+                )));
+            }
+            Err(e) => return Err(Error::Io(e)),
+        }
+        struct Unlock(PathBuf);
+        impl Drop for Unlock {
+            fn drop(&mut self) {
+                std::fs::remove_file(&self.0).ok();
+            }
+        }
+        let _unlock = Unlock(lock_path);
+
+        let mut stats = GcStats::default();
+        // Pass 1: drop dead content-addressed manifests (parseable
+        // 64-hex stems not in the live set). Named stems are roots.
+        let live_set: std::collections::HashSet<[u8; 32]> =
+            live.iter().map(|id| id.0).collect();
+        let mut survivors = Vec::new();
+        for name in self.list()? {
+            match ManifestId::parse(&name) {
+                Ok(id) if !live_set.contains(&id.0) => {
+                    self.delete(&name)?;
+                    stats.manifests_deleted += 1;
+                }
+                _ => survivors.push(name),
+            }
+        }
+        // Pass 2: compute block reachability over the survivors, then
+        // sweep unreferenced block files.
+        let mut reachable: std::collections::HashSet<[u8; 32]> =
+            std::collections::HashSet::new();
+        for name in &survivors {
+            let bytes = std::fs::read(self.manifest_path(name)?)
+                .map_err(|e| Error::Storage(format!("gc: manifest '{name}': {e}")))?;
+            for b in &Manifest::decode(&bytes)?.blocks {
+                reachable.insert(b.id);
+            }
+        }
+        for e in std::fs::read_dir(self.root.join("blocks"))? {
+            let p = e?.path();
+            if !p.extension().map(|x| x == "blk").unwrap_or(false) {
+                continue;
+            }
+            let Some(stem) = p.file_stem().and_then(|s| s.to_str()) else { continue };
+            let Ok(id) = ManifestId::parse(stem) else { continue };
+            if !reachable.contains(&id.0) {
+                let len = std::fs::metadata(&p).map(|m| m.len()).unwrap_or(0);
+                std::fs::remove_file(&p)?;
+                stats.blocks_deleted += 1;
+                stats.bytes_reclaimed += len;
+            }
+        }
+        stats.manifests_kept = survivors.len();
+        Ok(stats)
+    }
+}
+
+/// What a [`BlockStore::gc`] run deleted and kept.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct GcStats {
+    /// Content-addressed manifests deleted (not in the live set).
+    pub manifests_deleted: usize,
+    /// Manifests that survived (live + named roots).
+    pub manifests_kept: usize,
+    /// Block files deleted as unreachable.
+    pub blocks_deleted: usize,
+    /// Total bytes of deleted block files.
+    pub bytes_reclaimed: u64,
 }
 
 /// Verify fetched/read block bytes against their [`BlockRef`]: length
@@ -549,6 +645,68 @@ mod tests {
             crate::util::now_nanos()
         ));
         (BlockStore::open(&dir).unwrap(), dir)
+    }
+
+    #[test]
+    fn gc_keeps_live_and_named_deletes_the_rest() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        // two published objects sharing their first two blocks, one
+        // unshared object, one named object
+        let mut shared: Vec<u8> = (0..2048).map(|i| (i % 249) as u8).collect();
+        let a = shared.clone();
+        shared.extend((0..1024).map(|i| (i % 7) as u8));
+        let b = shared; // a's blocks + one more
+        let dead: Vec<u8> = (0..2048).map(|i| (i % 13) as u8).collect();
+        let (id_a, _) = s.publish(&a).unwrap();
+        let (id_b, mf_b) = s.publish(&b).unwrap();
+        let (id_dead, mf_dead) = s.publish(&dead).unwrap();
+        let named: Vec<u8> = (0..1500).map(|i| (i % 11) as u8).collect();
+        s.put("keep_me", &named).unwrap();
+
+        // keep b (live) — a dies, but every one of a's blocks is shared
+        // with b and must survive; dead's blocks are unshared and go
+        let stats = s.gc(&[id_b]).unwrap();
+        assert_eq!(stats.manifests_deleted, 2, "a and dead dropped");
+        assert_eq!(stats.manifests_kept, 2, "b + named kept");
+        assert_eq!(stats.blocks_deleted, mf_dead.blocks.len());
+        assert_eq!(
+            stats.bytes_reclaimed,
+            mf_dead.blocks.iter().map(|x| x.len as u64).sum::<u64>()
+        );
+        assert!(s.open_object(&id_b).is_ok(), "live object intact");
+        assert_eq!(s.get("keep_me").unwrap(), named, "named root intact");
+        assert!(s.manifest(&id_a).is_err(), "dead manifest gone");
+        assert!(s.manifest(&id_dead).is_err());
+        // b's blocks (including those it shared with a) all still read
+        for (i, bref) in mf_b.blocks.iter().enumerate() {
+            assert!(
+                s.read_block(bref, (i * 1024) as u64).is_ok(),
+                "shared block {i} must survive a's deletion"
+            );
+        }
+        // idempotent: a second gc with the same live set deletes nothing
+        let again = s.gc(&[id_b]).unwrap();
+        assert_eq!(again.manifests_deleted, 0);
+        assert_eq!(again.blocks_deleted, 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn gc_lockfile_refuses_concurrent_runs() {
+        let (s, dir) = store();
+        s.put("x", b"hello").unwrap();
+        std::fs::write(dir.join("gc.lock"), b"").unwrap();
+        let err = s.gc(&[]).unwrap_err();
+        assert!(err.to_string().contains("already running"), "{err}");
+        std::fs::remove_file(dir.join("gc.lock")).unwrap();
+        let stats = s.gc(&[]).unwrap();
+        assert_eq!(stats.manifests_kept, 1);
+        assert!(
+            !dir.join("gc.lock").exists(),
+            "lock released after a successful run"
+        );
+        std::fs::remove_dir_all(dir).ok();
     }
 
     #[test]

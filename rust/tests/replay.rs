@@ -338,6 +338,116 @@ fn cold_worker_fetches_from_warm_sibling_after_driver_store_is_gone() {
     std::fs::remove_dir_all(&store_root).ok();
 }
 
+/// The crash-resume acceptance bar: a replay driver killed by
+/// deterministic fault injection after 25% / 60% of its slices resolved
+/// must, on restart against the same checkpoint store, re-execute
+/// *only* the missing slices and produce a report byte-identical to an
+/// uninterrupted run — across {local, standalone} × {1, 2 workers}.
+#[test]
+fn crashed_driver_resumes_to_byte_identical_report() {
+    use av_simd::engine::{CheckpointConfig, FaultPlan};
+
+    let bag = fixture("crashresume", 20, 13);
+    let spec = ReplaySpec { bag: bag.clone(), slices: 5, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec.clone());
+    let (index, plan) = driver.plan().unwrap();
+    assert_eq!(plan.len(), 5, "fixture produced {} slice(s)", plan.len());
+    let reference = {
+        let local = LocalCluster::new(2, av_simd::full_op_registry(), &artifact_dir());
+        driver.run_planned(&local, &index, &plan).unwrap()
+    };
+
+    // abort after 1 of 5 (25%) and 3 of 5 (60%) completions; the
+    // scheduler folds exactly that many outputs into the checkpoint
+    // before dying, so the resume workload is deterministic too
+    for abort_after in [1usize, 3] {
+        for workers in [1usize, 2] {
+            // local backend
+            {
+                let root = std::env::temp_dir()
+                    .join(format!(
+                        "av_simd_crash_resume_l{abort_after}_{workers}_{}",
+                        std::process::id()
+                    ))
+                    .to_str()
+                    .unwrap()
+                    .to_string();
+                let cluster =
+                    LocalCluster::new(workers, av_simd::full_op_registry(), &artifact_dir());
+                let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: false };
+                let err = ReplayDriver::new(spec.clone())
+                    .with_faults(FaultPlan::none().abort_driver_after(abort_after as u64))
+                    .run_planned_checkpointed(&cluster, &index, &plan, &cfg)
+                    .unwrap_err();
+                assert!(
+                    err.to_string().contains("fault injection"),
+                    "local x{workers}: expected an injected driver abort, got: {err}"
+                );
+
+                let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: true };
+                let resumed = ReplayDriver::new(spec.clone())
+                    .run_planned_checkpointed(&cluster, &index, &plan, &cfg)
+                    .unwrap();
+                assert_eq!(
+                    resumed.encode(),
+                    reference.encode(),
+                    "local x{workers}, abort@{abort_after}: resumed report diverged"
+                );
+                assert_eq!(
+                    resumed.tasks,
+                    plan.len() - abort_after,
+                    "local x{workers}, abort@{abort_after}: resume re-ran resolved slices"
+                );
+                std::fs::remove_dir_all(&root).ok();
+            }
+            // standalone backend (fleet survives the driver crash; the
+            // resumed driver dials the same workers)
+            {
+                let root = std::env::temp_dir()
+                    .join(format!(
+                        "av_simd_crash_resume_s{abort_after}_{workers}_{}",
+                        std::process::id()
+                    ))
+                    .to_str()
+                    .unwrap()
+                    .to_string();
+                let (cluster, handles) = standalone(workers);
+                let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: false };
+                let err = ReplayDriver::new(spec.clone())
+                    .with_faults(FaultPlan::none().abort_driver_after(abort_after as u64))
+                    .run_planned_checkpointed(&cluster, &index, &plan, &cfg)
+                    .unwrap_err();
+                assert!(
+                    err.to_string().contains("fault injection"),
+                    "standalone x{workers}: expected an injected driver abort, got: {err}"
+                );
+
+                let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: true };
+                let resumed = ReplayDriver::new(spec.clone())
+                    .run_planned_checkpointed(&cluster, &index, &plan, &cfg)
+                    .unwrap();
+                assert_eq!(
+                    resumed.encode(),
+                    reference.encode(),
+                    "standalone x{workers}, abort@{abort_after}: resumed report diverged"
+                );
+                assert_eq!(
+                    resumed.tasks,
+                    plan.len() - abort_after,
+                    "standalone x{workers}, abort@{abort_after}: resume re-ran resolved \
+                     slices"
+                );
+                cluster.stop_workers();
+                for h in handles {
+                    h.join().unwrap();
+                }
+                std::fs::remove_dir_all(&root).ok();
+            }
+        }
+    }
+    std::fs::remove_file(bag).ok();
+}
+
 /// Speculative re-execution must change *when* attempts run, never what
 /// the report says: across backends × worker counts, with speculation
 /// off and with an aggressive policy that duplicates nearly every task,
