@@ -32,6 +32,10 @@
 //! * `replay/checkpointed` vs `replay/no checkpoint` — the same
 //!   distributed replay with durable per-slice checkpointing on vs off
 //!   (`checkpoint_overhead_pct` fact, asserted < 5%).
+//! * `fuzz/campaign 2w` — a fixed-seed coverage-guided fuzz campaign
+//!   (generation, round barrier, verdict folding, shrinking of the
+//!   planted cut-in failure) on a 2-worker local cluster
+//!   (`fuzz_cases_per_sec` fact).
 //!
 //! ```sh
 //! cargo run --release --example bench_engine            # full run
@@ -585,6 +589,37 @@ fn bench_swarm_fetch(samples: usize, size: usize) -> (Sample, Sample) {
     (sibling, driver)
 }
 
+// ---------------------------------------------------------------- fuzz
+
+/// Coverage-guided fuzz campaign, end to end on a 2-worker local
+/// cluster: case generation, the round barrier, verdict folding, and
+/// shrinking of the planted cut-in failure all inside the timed region.
+/// Units are fuzz cases executed (`fuzz_cases_per_sec` fact).
+fn bench_fuzz(samples: usize) -> Sample {
+    use av_simd::sim::fuzz::{cutin_regression_case, FuzzDriver, FuzzSpec};
+
+    let spec = FuzzSpec {
+        seed: 42,
+        rounds: 2,
+        round_size: 8,
+        horizon: 6.0,
+        planted: vec![cutin_regression_case()],
+        ..FuzzSpec::default()
+    };
+    let cases = spec.total_cases() as f64;
+    let driver = FuzzDriver::new(spec);
+    let cluster = LocalCluster::new(2, av_simd::full_op_registry(), "artifacts");
+    Bench::new("fuzz/campaign 2w")
+        .warmup(1)
+        .samples(samples)
+        .units(cases, "case")
+        .run(|| {
+            let report = driver.run(&cluster).unwrap();
+            assert!(report.failures >= 1, "planted cut-in failure must be found");
+            std::hint::black_box(report.encode());
+        })
+}
+
 fn main() -> av_simd::Result<()> {
     let smoke = smoke();
     let (sched_samples, stall_ms) = if smoke { (3, 30) } else { (7, 120) };
@@ -610,6 +645,7 @@ fn main() -> av_simd::Result<()> {
     let (swarm_sibling, swarm_driver) = bench_swarm_fetch(fetch_samples, fetch_size);
     let (spec_on, spec_off) = bench_speculation(spec_samples, spec_slow_ms, spec_fast_ms);
     let (ckpt_on, ckpt_off) = bench_checkpoint(replay_samples, replay_frames);
+    let fuzz_campaign = bench_fuzz(sweep_samples);
 
     let samples = vec![
         sched_stream,
@@ -632,6 +668,7 @@ fn main() -> av_simd::Result<()> {
         spec_off,
         ckpt_on,
         ckpt_off,
+        fuzz_campaign,
     ];
     print_table("engine microbenches", &samples);
 
@@ -657,6 +694,9 @@ fn main() -> av_simd::Result<()> {
     // durability fact: relative wall cost of folding + atomically
     // flushing every resolved slice into the checkpoint record
     let checkpoint_overhead_pct = (speedup(&samples[18], &samples[19]) - 1.0) * 100.0;
+    // fuzz fact: campaign throughput, generation + barrier + shrinking
+    // included (median wall over cases executed)
+    let fuzz_cases_per_sec = samples[20].throughput().unwrap_or(0.0);
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
@@ -671,6 +711,7 @@ fn main() -> av_simd::Result<()> {
         ("speedup_swarm_sibling_vs_driver", swarm_sibling_vs_driver),
         ("speculation_tail_speedup", speculation_tail_speedup),
         ("checkpoint_overhead_pct", checkpoint_overhead_pct),
+        ("fuzz_cases_per_sec", fuzz_cases_per_sec),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),
@@ -714,6 +755,10 @@ fn main() -> av_simd::Result<()> {
     assert!(
         checkpoint_overhead_pct < 5.0,
         "checkpoint overhead {checkpoint_overhead_pct:.2}% above the 5% bar"
+    );
+    assert!(
+        fuzz_cases_per_sec > 0.0,
+        "fuzz campaign bench produced no throughput"
     );
     println!("bench_engine OK");
     Ok(())

@@ -69,7 +69,7 @@ pub use ops::{OpRegistry, TaskCtx};
 pub use plan::{Action, OpCall, PlayedRecord, Record, Source, TaskOutput, TaskSpec};
 pub use remote::StandaloneCluster;
 pub use scheduler::{
-    run_job, run_job_rounds, run_job_with, run_provider, run_provider_hooked, run_provider_with,
-    JobReport, RetryBackoff, RunHooks, Speculation, TaskProvider,
+    round_window, run_job, run_job_rounds, run_job_with, run_provider, run_provider_hooked,
+    run_provider_with, JobReport, RetryBackoff, RunHooks, Speculation, TaskProvider,
 };
 pub use stream::{Completion, CompletionWait, TaskStream};

@@ -200,6 +200,25 @@ pub trait TaskProvider {
     }
 }
 
+/// Submission frontier for round-barrier providers.
+///
+/// A provider whose plan advances in rounds of `round_size` tasks (the
+/// next round's tasks depend on *every* output of the current round,
+/// e.g. a coverage-guided fuzzer re-aiming its mutator) cannot stall
+/// the scheduler by returning `None` from
+/// [`TaskProvider::next_task`] — `None` means exhausted forever.
+/// Instead it bounds [`TaskProvider::window`] dynamically: given
+/// `resolved` total resolved outputs, this returns the first task slot
+/// (exclusive) that may be submitted without crossing into the round
+/// after the one currently in flight. The scheduler re-reads the window
+/// at the top of every dispatch iteration, so the frontier advances the
+/// moment a round fully resolves, preserving full intra-round
+/// parallelism with a barrier only at round boundaries.
+pub fn round_window(resolved: u64, round_size: u64) -> u64 {
+    let t = round_size.max(1);
+    (resolved / t + 1).saturating_mul(t)
+}
+
 /// Run a provider-driven job to completion with bounded retries,
 /// streaming. This is the one completion/retry/metrics loop every
 /// driver (fixed jobs, adaptive sweeps, bag replays) goes through.
@@ -694,6 +713,20 @@ mod tests {
         let tasks = vec![count_task(0, 5, vec![OpCall::new("corrupt", vec![])])];
         assert!(run_job(&c, tasks, 5).is_err());
         assert_eq!(attempts.load(Ordering::SeqCst), 1, "corruption is not retried");
+    }
+
+    #[test]
+    fn round_window_gates_rounds_without_losing_parallelism() {
+        // nothing resolved: the whole first round may be in flight
+        assert_eq!(round_window(0, 4), 4);
+        // mid-round: frontier stays at the round boundary
+        assert_eq!(round_window(1, 4), 4);
+        assert_eq!(round_window(3, 4), 4);
+        // round complete: the next round opens in full
+        assert_eq!(round_window(4, 4), 8);
+        assert_eq!(round_window(9, 4), 12);
+        // degenerate round size is clamped, not a division by zero
+        assert_eq!(round_window(5, 0), 6);
     }
 
     #[test]

@@ -17,6 +17,10 @@
 //! * `replay --bag FILE ...` — shard a recorded drive into overlapping
 //!   time slices, replay them through the perception pipeline on the
 //!   cluster, aggregate a deterministic `ReplayReport`.
+//! * `fuzz [--seed S] ...` — coverage-guided scenario fuzzing on the
+//!   cluster: mutate scenario/controller values, shrink every failure
+//!   to a minimal counterexample, publish a regression corpus;
+//!   `--replay-corpus` re-executes a published corpus instead.
 //! * `gc --store-root DIR [--keep ID,..]` — sweep a block store,
 //!   deleting content-addressed objects not in the live set.
 //! * `info` — registries, artifacts, config.
@@ -50,6 +54,7 @@ fn run(raw: &[String]) -> Result<()> {
         "scenarios" => cmd_scenarios(&args),
         "sweep" => cmd_sweep(&args),
         "replay" => cmd_replay(&args),
+        "fuzz" => cmd_fuzz(&args),
         "gc" => cmd_gc(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
@@ -102,10 +107,58 @@ COMMANDS:
               --checkpoint persists every resolved slice into a durable
               record so --resume re-executes only what is missing
               (docs/OPERATIONS.md)
+  fuzz        [--seed S] [--rounds N] [--round-size N] [--dt S]
+              [--horizon S] [--max-mutations N] [--plant-cutin]
+              [--workers N] [--standalone] [--base-port P]
+              [--cluster-spec FILE] [--store-root DIR]
+              [--checkpoint [ROOT]] [--resume]
+              [--replay-corpus]
+              coverage-guided scenario fuzzing: a seeded mutator perturbs
+              scenario/controller values, a verdict-space coverage map
+              steers mutation energy between rounds, every failing case
+              is shrunk to a minimal counterexample; --store-root
+              publishes the counterexamples as a content-addressed
+              regression corpus (pinned by a fuzz_corpus.roots GC root
+              list); --replay-corpus re-executes a published corpus and
+              cross-checks every verdict byte-for-byte; --plant-cutin
+              seeds the schedule with the known side-cut-in failure;
+              --checkpoint/--resume make campaigns crash-resumable
+              (docs/OPERATIONS.md)
   gc          --store-root DIR [--keep ID,ID,..]       delete manifests
               not in the live set and every block only they referenced
   info        [--artifacts DIR]
 ";
+
+/// Build the execution cluster shared by `sweep`/`replay`/`fuzz`:
+/// `--cluster-spec FILE` dials an externally managed (possibly
+/// multi-host) fleet, `--standalone` spawns local worker processes over
+/// TCP, otherwise an in-process thread pool. Returns the parsed spec
+/// too (checkpoint/storage sections feed other flags).
+fn make_cluster(
+    args: &Args,
+) -> Result<(
+    Box<dyn av_simd::engine::Cluster>,
+    Option<av_simd::engine::deploy::ClusterSpec>,
+)> {
+    use av_simd::engine::{LocalCluster, StandaloneCluster};
+
+    let workers = args.get_usize("workers", 4)?;
+    let artifacts = args.get_or("artifacts", "artifacts");
+    let cluster_spec = match args.get("cluster-spec") {
+        Some(p) => Some(av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(p))?),
+        None => None,
+    };
+    let cluster: Box<dyn av_simd::engine::Cluster> = if let Some(cs) = &cluster_spec {
+        // the fleet stays up after the job — see `av-simd deploy`
+        Box::new(StandaloneCluster::connect(cs)?)
+    } else if args.has("standalone") {
+        let base_port = args.get_usize("base-port", 7077)? as u16;
+        Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
+    } else {
+        Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
+    };
+    Ok((cluster, cluster_spec))
+}
 
 /// Resolve the durable-checkpoint configuration for `sweep`/`replay`:
 /// the `--checkpoint [ROOT]` / `--resume` flags override the cluster
@@ -355,7 +408,7 @@ fn parse_u64_list(args: &Args, name: &str, default: &[u64]) -> Result<Vec<u64>> 
 }
 
 fn cmd_sweep(args: &Args) -> Result<()> {
-    use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
+    use av_simd::engine::Cluster;
     use av_simd::sim::{SweepDriver, SweepSpec};
 
     let defaults = SweepSpec::default();
@@ -403,25 +456,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         ..defaults
     };
 
-    let workers = args.get_usize("workers", 4)?;
-    let artifacts = args.get_or("artifacts", "artifacts");
-    let cluster_spec = match args.get("cluster-spec") {
-        Some(p) => {
-            Some(av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(p))?)
-        }
-        None => None,
-    };
-    let cluster: Box<dyn Cluster> = if let Some(cs) = &cluster_spec {
-        // dial an externally managed (possibly multi-host) fleet; the
-        // fleet stays up after the sweep — see `av-simd deploy`
-        Box::new(StandaloneCluster::connect(cs)?)
-    } else if args.has("standalone") {
-        let base_port = args.get_usize("base-port", 7077)? as u16;
-        Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
-    } else {
-        Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
-    };
-
+    let (cluster, cluster_spec) = make_cluster(args)?;
     let driver = SweepDriver::new(spec);
     println!(
         "sweep: {} cases in {} shards on {} {} workers",
@@ -452,7 +487,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
 }
 
 fn cmd_replay(args: &Args) -> Result<()> {
-    use av_simd::engine::{Cluster, LocalCluster, StandaloneCluster};
+    use av_simd::engine::Cluster;
     use av_simd::sim::{ReplayDriver, ReplaySpec};
 
     let bag = args.require("bag")?.to_string();
@@ -485,22 +520,8 @@ fn cmd_replay(args: &Args) -> Result<()> {
         ..defaults
     };
 
-    let workers = args.get_usize("workers", 4)?;
     let artifacts = args.get_or("artifacts", "artifacts");
-    let cluster_spec = match args.get("cluster-spec") {
-        Some(p) => {
-            Some(av_simd::engine::deploy::ClusterSpec::load(std::path::Path::new(p))?)
-        }
-        None => None,
-    };
-    let cluster: Box<dyn Cluster> = if let Some(cs) = &cluster_spec {
-        Box::new(StandaloneCluster::connect(cs)?)
-    } else if args.has("standalone") {
-        let base_port = args.get_usize("base-port", 7077)? as u16;
-        Box::new(StandaloneCluster::launch(workers, base_port, artifacts)?)
-    } else {
-        Box::new(LocalCluster::new(workers, av_simd::full_op_registry(), artifacts))
-    };
+    let (cluster, cluster_spec) = make_cluster(args)?;
 
     // speculation: CLI flags, else the cluster spec's [speculation]
     // section; the CLI fully overrides the manifest when any flag is set
@@ -595,6 +616,94 @@ fn cmd_replay(args: &Args) -> Result<()> {
                  reference"
             ));
         }
+    }
+    cluster.shutdown();
+    Ok(())
+}
+
+fn cmd_fuzz(args: &Args) -> Result<()> {
+    use av_simd::engine::Cluster;
+    use av_simd::sim::fuzz::{FuzzDriver, FuzzSpec};
+
+    let (cluster, cluster_spec) = make_cluster(args)?;
+
+    // --replay-corpus: re-execute a published regression corpus and
+    // cross-check every verdict against the recorded one, byte-for-byte
+    if args.has("replay-corpus") {
+        let store_root = args
+            .get("store-root")
+            .map(str::to_string)
+            .or_else(|| cluster_spec.as_ref().and_then(|c| c.store_root.clone()))
+            .ok_or_else(|| {
+                av_simd::err!(Config, "--replay-corpus needs --store-root DIR")
+            })?;
+        let report = av_simd::sim::run_corpus_replay(cluster.as_ref(), &store_root)?;
+        print!("{}", report.render());
+        cluster.shutdown();
+        if report.mismatches() > 0 {
+            return Err(av_simd::err!(
+                Sim,
+                "{} corpus entr(y/ies) no longer reproduce their recorded verdict",
+                report.mismatches()
+            ));
+        }
+        return Ok(());
+    }
+
+    let defaults = FuzzSpec::default();
+    let spec = FuzzSpec {
+        seed: args.get_u64("seed", defaults.seed)?,
+        rounds: args.get_usize("rounds", defaults.rounds as usize)? as u32,
+        round_size: args.get_usize("round-size", defaults.round_size as usize)? as u32,
+        dt: match args.get("dt") {
+            None => defaults.dt,
+            Some(v) => v
+                .parse()
+                .map_err(|_| av_simd::err!(Config, "--dt expects a number, got '{v}'"))?,
+        },
+        horizon: match args.get("horizon") {
+            None => defaults.horizon,
+            Some(v) => v
+                .parse()
+                .map_err(|_| av_simd::err!(Config, "--horizon expects a number, got '{v}'"))?,
+        },
+        max_mutations: args.get_usize("max-mutations", defaults.max_mutations as usize)? as u8,
+        planted: if args.has("plant-cutin") {
+            vec![av_simd::sim::fuzz::cutin_regression_case()]
+        } else {
+            Vec::new()
+        },
+        ..defaults
+    };
+
+    let driver = FuzzDriver::new(spec);
+    println!(
+        "fuzz: seed {} — {} rounds x {} cases on {} {} workers",
+        driver.spec().seed,
+        driver.spec().rounds,
+        driver.spec().round_size,
+        cluster.workers(),
+        cluster.backend()
+    );
+    let report = match checkpoint_config(args, cluster_spec.as_ref())? {
+        Some(cfg) => {
+            println!(
+                "checkpointing into {} (every {} case(s), resume: {})",
+                cfg.root, cfg.every, cfg.resume
+            );
+            driver.run_checkpointed(cluster.as_ref(), &cfg)?
+        }
+        None => driver.run(cluster.as_ref())?,
+    };
+    print!("{}", report.render());
+    if let Some(store_root) = args.get("store-root") {
+        let ids = driver.publish_corpus(&report, store_root)?;
+        println!(
+            "published {} corpus entr{} into {store_root} (index {})",
+            ids.len(),
+            if ids.len() == 1 { "y" } else { "ies" },
+            av_simd::sim::fuzz::CORPUS_INDEX
+        );
     }
     cluster.shutdown();
     Ok(())

@@ -8,6 +8,7 @@
 
 pub mod controller;
 pub mod dynamics;
+pub mod fuzz;
 pub mod replay;
 pub mod runner;
 pub mod scenario;
@@ -15,14 +16,19 @@ pub mod sweep;
 
 pub use controller::{control, ControlMode, ControllerParams, LeadObservation};
 pub use dynamics::{collides, step, VehicleParams, VehicleState};
+pub use fuzz::{
+    cutin_regression_case, execute_case, load_corpus, shrink_case, CorpusEntry,
+    CorpusReplayReport, CoverageMap, Dim, FuzzCase, FuzzDriver, FuzzReport, FuzzSpec,
+    FuzzVerdict, ShrinkLog, ShrinkStep, CORPUS_INDEX, FUZZ_JOB_ID, GAP_FLOOR,
+};
 pub use replay::{
     run_replay, ReplayDriver, ReplayReport, ReplaySlice, ReplaySpec, ReplayVerdict,
 };
 pub use runner::{run_episode, run_matrix, EpisodeConfig, EpisodeResult};
 pub use scenario::{random_scenario, scenario_matrix, Direction, Maneuver, RelSpeed, Scenario};
 pub use sweep::{
-    replay_shards, run_sweep, AdaptiveSharding, Calibration, EpisodeParams, ShardSizing,
-    SweepCase, SweepDriver, SweepReport, SweepSpec, WorstCase,
+    replay_shards, run_corpus_replay, run_sweep, AdaptiveSharding, Calibration, EpisodeParams,
+    ShardSizing, SweepCase, SweepDriver, SweepReport, SweepSpec, WorstCase,
 };
 
 use crate::engine::OpRegistry;
@@ -95,9 +101,18 @@ pub fn decode_result(buf: &[u8]) -> Result<EpisodeResult> {
 ///   [`EpisodeParams`] (timestep, horizon, controller under test), so one
 ///   worker binary serves any sweep point;
 /// * `run_replay` — the bag-replay workhorse (see [`replay`]):
-///   slice-job records → replay-verdict records.
+///   slice-job records → replay-verdict records;
+/// * `run_fuzz_case` — the fuzzing workhorse (see [`fuzz`]):
+///   [`fuzz::FuzzCase`] records → [`fuzz::FuzzVerdict`] records, with
+///   params carrying the campaign's [`EpisodeParams`].
 pub fn register_sim_ops(reg: &OpRegistry) {
     replay::register_replay_ops(reg);
+    reg.register("run_fuzz_case", |_ctx, params, records| {
+        records
+            .into_iter()
+            .map(|rec| fuzz::run_fuzz_case_record(params, &rec))
+            .collect()
+    });
     reg.register_map("run_scenario", |_ctx, _p, rec| {
         let s = decode_scenario(&rec)?;
         let res = run_episode(

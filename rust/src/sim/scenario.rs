@@ -42,6 +42,13 @@ impl Direction {
         Direction::FrontRight,
     ];
 
+    /// Direction at matrix position `i` (inverse of
+    /// `ALL.iter().position(..)`; the fuzz mutator addresses discrete
+    /// dimensions by index).
+    pub fn from_index(i: usize) -> Option<Direction> {
+        Self::ALL.get(i).copied()
+    }
+
     /// Initial offset (dx, dy) of the barrier car in the ego frame
     /// (x forward, y left).
     pub fn offset(self) -> (f64, f64) {
@@ -89,6 +96,12 @@ impl RelSpeed {
     /// All three relative speeds, in matrix order.
     pub const ALL: [RelSpeed; 3] = [RelSpeed::Slower, RelSpeed::Equal, RelSpeed::Faster];
 
+    /// Relative speed at matrix position `i` (see
+    /// [`Direction::from_index`]).
+    pub fn from_index(i: usize) -> Option<RelSpeed> {
+        Self::ALL.get(i).copied()
+    }
+
     /// Barrier speed as a multiple of ego speed.
     pub fn factor(self) -> f64 {
         match self {
@@ -122,6 +135,11 @@ pub enum Maneuver {
 impl Maneuver {
     /// All three maneuvers, in matrix order.
     pub const ALL: [Maneuver; 3] = [Maneuver::Straight, Maneuver::TurnLeft, Maneuver::TurnRight];
+
+    /// Maneuver at matrix position `i` (see [`Direction::from_index`]).
+    pub fn from_index(i: usize) -> Option<Maneuver> {
+        Self::ALL.get(i).copied()
+    }
 
     /// Steering angle the barrier car applies (rad).
     pub fn steer(self) -> f64 {

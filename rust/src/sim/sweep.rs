@@ -1384,6 +1384,52 @@ pub fn run_sweep(cluster: &dyn Cluster, spec: &SweepSpec) -> Result<SweepReport>
     SweepDriver::new(spec.clone()).run(cluster)
 }
 
+/// The sweep's corpus mode: re-execute every minimal counterexample a
+/// fuzz campaign published into `store_root` (see [`crate::sim::fuzz`])
+/// as a distributed job — one task per corpus entry, each carrying its
+/// own recorded episode timing — and cross-check that every verdict is
+/// byte-identical to the one recorded at discovery time. Loading
+/// hash-verifies manifests and blocks, so a damaged corpus fails loudly
+/// with the bad block's id before any task is dispatched.
+pub fn run_corpus_replay(
+    cluster: &dyn Cluster,
+    store_root: &str,
+) -> Result<crate::sim::fuzz::CorpusReplayReport> {
+    use crate::sim::fuzz::{load_corpus, CorpusReplayReport, FuzzVerdict, FUZZ_JOB_ID};
+
+    let start = Instant::now();
+    let store = crate::storage::BlockStore::open(store_root)?;
+    let entries = load_corpus(&store)?;
+    let tasks: Vec<TaskSpec> = entries
+        .iter()
+        .enumerate()
+        .map(|(i, (_, e))| TaskSpec {
+            job_id: FUZZ_JOB_ID,
+            task_id: i as u32,
+            attempt: 0,
+            source: Source::Inline { records: vec![e.shrunk.encode()] },
+            ops: vec![OpCall::new("run_fuzz_case", e.params().encode())],
+            action: Action::Collect,
+        })
+        .collect();
+    let (outputs, _) = run_job(cluster, tasks, 2)?;
+    let mut replayed = Vec::with_capacity(entries.len());
+    for ((id, entry), out) in entries.into_iter().zip(outputs) {
+        let rec = match out {
+            TaskOutput::Records(rs) if rs.len() == 1 => rs.into_iter().next().unwrap(),
+            other => {
+                return Err(Error::Sim(format!(
+                    "corpus replay of {} returned {other:?}, expected one record",
+                    id.short()
+                )))
+            }
+        };
+        let ok = rec == entry.shrunk_verdict.encode();
+        replayed.push((id, FuzzVerdict::decode(&rec)?, ok));
+    }
+    Ok(CorpusReplayReport { entries: replayed, wall: start.elapsed() })
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

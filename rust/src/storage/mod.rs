@@ -509,6 +509,107 @@ impl BlockStore {
         stats.manifests_kept = survivors.len();
         Ok(stats)
     }
+
+    /// Read a published (content-addressed) object back in full,
+    /// verifying the manifest bytes against `id` and every block against
+    /// its hash — a bit flip anywhere fails loudly with the damaged
+    /// block's id and offset instead of returning silently wrong bytes.
+    pub fn read_published(&self, id: &ManifestId) -> Result<Vec<u8>> {
+        let manifest = self.manifest(id)?;
+        let mut out = Vec::with_capacity(manifest.total_len as usize);
+        let mut off = 0u64;
+        for b in &manifest.blocks {
+            out.extend_from_slice(&self.read_block(b, off)?);
+            off += b.len as u64;
+        }
+        Ok(out)
+    }
+
+    /// [`BlockStore::gc`] with **root-list objects** honored: every named
+    /// object whose name ends in [`ROOTS_SUFFIX`] is read as an encoded
+    /// [`ManifestId`] list ([`encode_roots`]) and its ids join the live
+    /// set. This is how long-lived registries of published objects (the
+    /// fuzz regression corpus, for one) pin their entries across GC runs
+    /// without the caller having to re-enumerate them on every sweep:
+    /// deleting the root list is the explicit act that releases them.
+    pub fn gc_with_roots(&self, live: &[ManifestId]) -> Result<GcStats> {
+        let mut all = live.to_vec();
+        for name in self.list()? {
+            if !name.ends_with(ROOTS_SUFFIX) {
+                continue;
+            }
+            let ids = decode_roots(&self.get(&name)?).map_err(|e| {
+                Error::Storage(format!("gc: root list '{name}' is unreadable: {e}"))
+            })?;
+            all.extend(ids);
+        }
+        self.gc(&all)
+    }
+}
+
+/// Name suffix that marks a named object as a GC root list (see
+/// [`BlockStore::gc_with_roots`]).
+pub const ROOTS_SUFFIX: &str = ".roots";
+
+/// Wire version of the [`encode_roots`] root-list payload.
+pub const ROOTS_VERSION: u8 = 1;
+
+/// Encode a [`ManifestId`] list as a root-list object payload:
+/// `u8 version ‖ varint n ‖ n × [u8; 32] ‖ u32 crc32(body)`.
+pub fn encode_roots(ids: &[ManifestId]) -> Vec<u8> {
+    let mut w = crate::util::bytes::ByteWriter::with_capacity(6 + ids.len() * 32);
+    w.put_u8(ROOTS_VERSION);
+    w.put_varint(ids.len() as u64);
+    for id in ids {
+        w.put_raw(&id.0);
+    }
+    let crc = crate::util::crc32::hash(w.as_slice());
+    w.put_u32(crc);
+    w.into_vec()
+}
+
+/// Decode and verify an [`encode_roots`] payload. Truncation, trailing
+/// bytes, a CRC mismatch, or an unknown version are all [`Error::Corrupt`]
+/// — a damaged root list must fail a GC run, not silently unpin objects.
+pub fn decode_roots(buf: &[u8]) -> Result<Vec<ManifestId>> {
+    if buf.len() < 4 {
+        return Err(Error::Corrupt(format!(
+            "root list truncated: {} byte(s), need at least 4",
+            buf.len()
+        )));
+    }
+    let (body, tail) = buf.split_at(buf.len() - 4);
+    let stored = u32::from_le_bytes([tail[0], tail[1], tail[2], tail[3]]);
+    let actual = crate::util::crc32::hash(body);
+    if stored != actual {
+        return Err(Error::Corrupt(format!(
+            "root list CRC mismatch: stored {stored:#010x}, computed {actual:#010x}"
+        )));
+    }
+    let mut r = crate::util::bytes::ByteReader::new(body);
+    let version = r.get_u8()?;
+    if version != ROOTS_VERSION {
+        return Err(Error::Corrupt(format!(
+            "unsupported root list version {version} (expected {ROOTS_VERSION})"
+        )));
+    }
+    let n = r.get_varint()? as usize;
+    if n > r.remaining() / 32 {
+        return Err(Error::Corrupt(format!("root list claims {n} ids")));
+    }
+    let mut ids = Vec::with_capacity(n);
+    for _ in 0..n {
+        let mut id = [0u8; 32];
+        id.copy_from_slice(r.get_raw(32)?);
+        ids.push(ManifestId(id));
+    }
+    if !r.is_empty() {
+        return Err(Error::Corrupt(format!(
+            "root list has {} trailing byte(s)",
+            r.remaining()
+        )));
+    }
+    Ok(ids)
 }
 
 /// What a [`BlockStore::gc`] run deleted and kept.
@@ -689,6 +790,67 @@ mod tests {
         let again = s.gc(&[id_b]).unwrap();
         assert_eq!(again.manifests_deleted, 0);
         assert_eq!(again.blocks_deleted, 0);
+        std::fs::remove_dir_all(dir).ok();
+    }
+
+    #[test]
+    fn roots_codec_roundtrips_and_rejects_damage() {
+        let ids: Vec<ManifestId> =
+            (0u8..5).map(|i| ManifestId([i.wrapping_mul(37); 32])).collect();
+        let buf = encode_roots(&ids);
+        assert_eq!(decode_roots(&buf).unwrap(), ids);
+        assert_eq!(decode_roots(&encode_roots(&[])).unwrap(), vec![]);
+        // any truncation is rejected
+        for cut in 0..buf.len() {
+            assert!(decode_roots(&buf[..cut]).is_err(), "prefix of {cut} bytes");
+        }
+        // any single bit flip is rejected
+        for byte in 0..buf.len() {
+            let mut damaged = buf.clone();
+            damaged[byte] ^= 0x10;
+            assert!(decode_roots(&damaged).is_err(), "flip in byte {byte}");
+        }
+        // structurally-trailing bytes with a recomputed CRC are rejected
+        let mut body = buf[..buf.len() - 4].to_vec();
+        body.push(0xEE);
+        let crc = crate::util::crc32::hash(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        assert!(matches!(decode_roots(&body), Err(Error::Corrupt(_))));
+    }
+
+    #[test]
+    fn gc_with_roots_pins_listed_objects_until_the_list_is_deleted() {
+        let (s, dir) = store();
+        let s = s.with_block_size(1024);
+        let pinned: Vec<u8> = (0..3000).map(|i| (i % 101) as u8).collect();
+        let dead: Vec<u8> = (0..3000).map(|i| (i % 57) as u8).collect();
+        let (id_pinned, _) = s.publish(&pinned).unwrap();
+        let (id_dead, _) = s.publish(&dead).unwrap();
+        s.put("corpus.roots", &encode_roots(&[id_pinned])).unwrap();
+
+        // the root list pins its entry; the unlisted publish dies
+        let stats = s.gc_with_roots(&[]).unwrap();
+        assert_eq!(stats.manifests_deleted, 1);
+        assert!(s.manifest(&id_dead).is_err(), "unlisted object collected");
+        assert_eq!(s.read_published(&id_pinned).unwrap(), pinned);
+
+        // a damaged root list fails the GC instead of unpinning
+        let mut raw = encode_roots(&[id_pinned]);
+        let last = raw.len() - 1;
+        raw[last] ^= 0xFF;
+        s.put("corpus.roots", &raw).unwrap();
+        let err = s.gc_with_roots(&[]).unwrap_err();
+        assert!(err.to_string().contains("corpus.roots"), "{err}");
+        assert!(
+            !dir.join("gc.lock").exists(),
+            "failed gc still releases the lock"
+        );
+
+        // deleting the root list releases the entry on the next sweep
+        s.delete("corpus.roots").unwrap();
+        let stats = s.gc_with_roots(&[]).unwrap();
+        assert_eq!(stats.manifests_deleted, 1);
+        assert!(s.manifest(&id_pinned).is_err());
         std::fs::remove_dir_all(dir).ok();
     }
 

@@ -1,0 +1,253 @@
+//! Fuzz-campaign integration suite: the determinism contract (a fixed
+//! `--seed` produces byte-identical coverage maps, corpora, and shrunk
+//! minimal counterexamples across {local, standalone} × {1, 2, 4}
+//! workers), corpus durability (published counterexamples replay to the
+//! same failure after the originals are gone and a GC pass has run),
+//! and crash-resume chaos (a campaign killed by fault injection resumes
+//! from its checkpoint to the same corpus as an uninterrupted run).
+//!
+//! Standalone clusters drive *in-process* `worker::serve` threads over
+//! real TCP (the deploy-test pattern), so the whole suite runs under
+//! plain `cargo test` with no release binary on disk.
+
+use av_simd::engine::deploy::ClusterSpec;
+use av_simd::engine::{worker, LocalCluster, StandaloneCluster};
+use av_simd::sim::fuzz::{cutin_regression_case, Dim, FuzzDriver, FuzzSpec};
+use av_simd::sim::run_corpus_replay;
+use av_simd::storage::BlockStore;
+use std::net::TcpListener;
+
+fn artifact_dir() -> String {
+    std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
+}
+
+fn local(workers: usize) -> LocalCluster {
+    LocalCluster::new(workers, av_simd::full_op_registry(), &artifact_dir())
+}
+
+/// Reserve an ephemeral port, then serve a worker on it from a thread.
+fn spawn_worker(id: usize) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap().to_string();
+    drop(listener);
+    let a = addr.clone();
+    let dir = artifact_dir();
+    let h = std::thread::spawn(move || {
+        worker::serve(&a, id, av_simd::full_op_registry(), &dir).unwrap();
+    });
+    (addr, h)
+}
+
+fn standalone(n: usize) -> (StandaloneCluster, Vec<std::thread::JoinHandle<()>>) {
+    let mut hosts = Vec::new();
+    let mut handles = Vec::new();
+    for i in 0..n {
+        let (addr, h) = spawn_worker(i);
+        hosts.push(format!("\"{addr}\""));
+        handles.push(h);
+    }
+    let spec = ClusterSpec::from_toml_text(&format!(
+        "[cluster]\nname = \"fuzz-test\"\nconnect_timeout_ms = 5000\n\
+         [workers]\nhosts = [{}]\n",
+        hosts.join(", ")
+    ))
+    .unwrap();
+    (StandaloneCluster::connect(&spec).unwrap(), handles)
+}
+
+/// A small campaign with the committed cut-in regression fixture planted
+/// at the head of the schedule: 2 rounds × 6 cases, short horizon.
+fn planted_spec() -> FuzzSpec {
+    FuzzSpec {
+        seed: 42,
+        rounds: 2,
+        round_size: 6,
+        horizon: 6.0,
+        planted: vec![cutin_regression_case()],
+        ..FuzzSpec::default()
+    }
+}
+
+fn temp_root(tag: &str) -> String {
+    std::env::temp_dir()
+        .join(format!("av_simd_fuzz_it_{tag}_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string()
+}
+
+/// The acceptance matrix (satellite 1): fixed seed → byte-identical
+/// `FuzzReport`s (coverage map, corpus, every shrunk counterexample)
+/// across {local, standalone} × {1, 2, 4} workers — and the planted
+/// failing scenario shrinks to the same ≤2-field minimal counterexample
+/// everywhere.
+#[test]
+fn report_corpus_and_shrunk_counterexample_identical_across_backends_and_workers() {
+    let driver = FuzzDriver::new(planted_spec());
+    let reference = driver.run(&local(1)).unwrap();
+    assert_eq!(reference.cases, 12);
+    assert!(reference.failures >= 1, "planted cut-in must fail");
+    assert!(!reference.corpus.is_empty(), "failure must reach the corpus");
+    let minimal = &reference.corpus[0].shrunk;
+    assert!(
+        minimal.mutations.len() <= 2,
+        "minimal counterexample uses {} mutated field(s): {}",
+        minimal.mutations.len(),
+        minimal.describe()
+    );
+    assert_eq!(
+        minimal.mutations,
+        vec![(Dim::BarrierManeuver, 1.0)],
+        "shrinking must eliminate the two inert controller mutations"
+    );
+
+    let reference_bytes = reference.encode();
+    for workers in [1usize, 2, 4] {
+        let report = driver.run(&local(workers)).unwrap();
+        assert_eq!(
+            report.encode(),
+            reference_bytes,
+            "local x{workers} diverged from local x1"
+        );
+
+        let (cluster, handles) = standalone(workers);
+        let report = driver.run(&cluster).unwrap();
+        assert_eq!(
+            report.encode(),
+            reference_bytes,
+            "standalone x{workers} diverged from local x1"
+        );
+        cluster.stop_workers();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// Corpus durability: the published minimal counterexample replays to
+/// the exact recorded failure with every other campaign artifact gone —
+/// the original report dropped, and a GC pass run against an *empty*
+/// live set (the `fuzz_corpus.roots` index alone must pin the entries).
+#[test]
+fn published_corpus_replays_after_original_data_is_gone() {
+    let root = temp_root("durable");
+    let driver = FuzzDriver::new(planted_spec());
+    {
+        let report = driver.run(&local(2)).unwrap();
+        let ids = driver.publish_corpus(&report, &root).unwrap();
+        // content addressing: the store-assigned ids are derivable from
+        // the report alone
+        assert_eq!(ids, report.corpus_ids());
+        assert!(!ids.is_empty());
+        // report (and campaign) dropped here — the store is all that's left
+    }
+
+    // GC with nothing explicitly live: the corpus index is a `.roots`
+    // object, so every entry must survive the sweep
+    let store = BlockStore::open(&root).unwrap();
+    store.gc_with_roots(&[]).unwrap();
+
+    let replay = run_corpus_replay(&local(2), &root).unwrap();
+    assert!(!replay.entries.is_empty());
+    assert_eq!(
+        replay.mismatches(),
+        0,
+        "corpus entries must reproduce their recorded verdicts:\n{}",
+        replay.render()
+    );
+    // replay verdicts must themselves be failures (the corpus only holds
+    // counterexamples)
+    for (id, v, _) in &replay.entries {
+        assert!(v.failed(), "corpus entry {} replayed to a pass: {v:?}", id.short());
+    }
+
+    // and the replay outcome is backend-independent too
+    let local_bytes = replay.encode();
+    let (cluster, handles) = standalone(2);
+    let remote = run_corpus_replay(&cluster, &root).unwrap();
+    assert_eq!(remote.encode(), local_bytes, "standalone corpus replay diverged");
+    cluster.stop_workers();
+    for h in handles {
+        h.join().unwrap();
+    }
+    std::fs::remove_dir_all(&root).ok();
+}
+
+/// The crash-resume chaos bar (satellite 3): a campaign aborted by
+/// deterministic fault injection mid-round and mid-campaign must, on
+/// resume from its durable checkpoint, re-execute only the missing
+/// cases and emit a report — coverage map and corpus — byte-identical
+/// to an uninterrupted run, on local and standalone backends.
+#[test]
+fn fault_aborted_campaign_resumes_from_checkpoint_to_identical_corpus() {
+    use av_simd::engine::{CheckpointConfig, FaultPlan};
+
+    let spec = FuzzSpec { rounds: 2, round_size: 4, ..planted_spec() };
+    let total = spec.total_cases();
+    let driver = FuzzDriver::new(spec);
+    let reference = driver.run(&local(2)).unwrap().encode();
+
+    // abort 2 completions into round 0 and 5 completions in (mid round 1)
+    for abort_after in [2u64, 5] {
+        for workers in [1usize, 2] {
+            let root = temp_root(&format!("resume_{abort_after}_{workers}"));
+
+            let cluster = local(workers);
+            let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: false };
+            let err = driver
+                .run_hooked(
+                    &cluster,
+                    Some(&cfg),
+                    Some(FaultPlan::none().abort_driver_after(abort_after)),
+                )
+                .unwrap_err();
+            assert!(
+                err.to_string().contains("fault injection"),
+                "local x{workers}: expected an injected driver abort, got: {err}"
+            );
+
+            let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: true };
+            let resumed = driver.run_checkpointed(&cluster, &cfg).unwrap();
+            assert_eq!(
+                resumed.encode(),
+                reference,
+                "local x{workers}, abort@{abort_after}: resumed campaign diverged"
+            );
+            assert_eq!(
+                resumed.tasks as u64,
+                total - abort_after,
+                "local x{workers}, abort@{abort_after}: resume re-ran resolved cases"
+            );
+            std::fs::remove_dir_all(&root).ok();
+        }
+
+        // standalone: the fleet survives the driver crash; the resumed
+        // driver dials the same workers
+        let root = temp_root(&format!("resume_s_{abort_after}"));
+        let (cluster, handles) = standalone(2);
+        let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: false };
+        let err = driver
+            .run_hooked(
+                &cluster,
+                Some(&cfg),
+                Some(FaultPlan::none().abort_driver_after(abort_after)),
+            )
+            .unwrap_err();
+        assert!(
+            err.to_string().contains("fault injection"),
+            "standalone: expected an injected driver abort, got: {err}"
+        );
+        let cfg = CheckpointConfig { root: root.clone(), every: 1, resume: true };
+        let resumed = driver.run_checkpointed(&cluster, &cfg).unwrap();
+        assert_eq!(
+            resumed.encode(),
+            reference,
+            "standalone, abort@{abort_after}: resumed campaign diverged"
+        );
+        cluster.stop_workers();
+        for h in handles {
+            h.join().unwrap();
+        }
+        std::fs::remove_dir_all(&root).ok();
+    }
+}

@@ -514,3 +514,199 @@ fn prop_task_output_roundtrip() {
         })),
     }, |o| TaskOutput::decode(&o.encode()).unwrap() == *o);
 }
+
+// ---------- fuzz wire types (spec, coverage, corpus, shrink log) ----------
+
+use av_simd::sim::{
+    CorpusEntry, CoverageMap, Dim, FuzzCase, FuzzSpec, FuzzVerdict, ShrinkLog, ShrinkStep,
+};
+
+fn random_dim(rng: &mut Prng) -> Dim {
+    Dim::ALL[rng.below(Dim::ALL.len() as u64) as usize]
+}
+
+fn random_fuzz_case(rng: &mut Prng) -> FuzzCase {
+    let base = av_simd::sim::random_scenario(rng, rng.range_f64(2.0, 30.0));
+    let n = rng.below(4) as usize;
+    let mut mutations: Vec<(Dim, f64)> = Vec::new();
+    while mutations.len() < n {
+        let dim = random_dim(rng);
+        if mutations.iter().any(|(d, _)| *d == dim) {
+            continue;
+        }
+        let (lo, hi) = dim.range();
+        let v = if dim.is_discrete() {
+            rng.below(hi as u64) as f64
+        } else {
+            rng.range_f64(lo, hi)
+        };
+        mutations.push((dim, v));
+    }
+    FuzzCase { base, mutations }
+}
+
+fn random_fuzz_verdict(rng: &mut Prng) -> FuzzVerdict {
+    // min_gap / min_ttc / aeb_trigger are +inf when the episode never
+    // interacted — the codec must round-trip infinities
+    let maybe_inf = |rng: &mut Prng, lo: f64, hi: f64| {
+        if rng.next_bool(0.2) { f64::INFINITY } else { rng.range_f64(lo, hi) }
+    };
+    FuzzVerdict {
+        collided: rng.next_bool(0.3),
+        passed: rng.next_bool(0.5),
+        min_gap: maybe_inf(rng, -2.0, 30.0),
+        min_ttc: maybe_inf(rng, 0.0, 60.0),
+        aeb_trigger: maybe_inf(rng, 0.0, 12.0),
+        divergence: rng.range_f64(0.0, 8.0),
+        ticks: rng.next_u32() % 10_000,
+    }
+}
+
+fn random_shrink_log(rng: &mut Prng) -> ShrinkLog {
+    ShrinkLog {
+        steps: gen::vec_of(rng, 8, |r| ShrinkStep {
+            pass: 1 + r.below(2) as u8,
+            dim: random_dim(r),
+            from: r.range_f64(-5.0, 30.0),
+            to: r.range_f64(-5.0, 30.0),
+            kept: r.next_bool(0.5),
+        }),
+    }
+}
+
+fn random_corpus_entry(rng: &mut Prng) -> CorpusEntry {
+    let dt = rng.range_f64(0.01, 0.2);
+    CorpusEntry {
+        seed: rng.next_u64(),
+        dt,
+        horizon: dt + rng.range_f64(0.0, 20.0),
+        case: random_fuzz_case(rng),
+        verdict: random_fuzz_verdict(rng),
+        shrunk: random_fuzz_case(rng),
+        shrunk_verdict: random_fuzz_verdict(rng),
+        log: random_shrink_log(rng),
+    }
+}
+
+fn random_coverage_map(rng: &mut Prng) -> CoverageMap {
+    let mut m = CoverageMap::default();
+    for _ in 0..rng.below(40) {
+        let key = rng.next_u32();
+        for _ in 0..1 + rng.below(5) {
+            m.observe(key);
+        }
+    }
+    m
+}
+
+fn random_fuzz_spec(rng: &mut Prng) -> FuzzSpec {
+    let rounds = 1 + rng.below(4) as u32;
+    let round_size = 1 + rng.below(8) as u32;
+    let dt = rng.range_f64(0.01, 0.2);
+    let total = rounds as u64 * round_size as u64;
+    let planted_n = rng.below(total.min(3) + 1) as usize;
+    FuzzSpec {
+        seed: rng.next_u64(),
+        rounds,
+        round_size,
+        dt,
+        horizon: dt + rng.range_f64(0.0, 20.0),
+        max_mutations: 1 + rng.below(3) as u8,
+        base_ego_speed: rng.range_f64(2.0, 30.0),
+        planted: (0..planted_n).map(|_| random_fuzz_case(rng)).collect(),
+    }
+}
+
+#[test]
+fn prop_fuzz_codecs_roundtrip() {
+    check("fuzz case roundtrip", random_fuzz_case, |c| {
+        FuzzCase::decode(&c.encode()).unwrap() == *c
+    });
+    check("fuzz verdict roundtrip", random_fuzz_verdict, |v| {
+        FuzzVerdict::decode(&v.encode()).unwrap() == *v
+    });
+    check("shrink log roundtrip", random_shrink_log, |l| {
+        ShrinkLog::decode(&l.encode()).unwrap() == *l
+    });
+    check("corpus entry roundtrip", random_corpus_entry, |e| {
+        CorpusEntry::decode(&e.encode()).unwrap() == *e
+    });
+    check("coverage map roundtrip", random_coverage_map, |m| {
+        CoverageMap::decode(&m.encode()).unwrap() == *m
+    });
+    check("fuzz spec roundtrip", random_fuzz_spec, |s| {
+        FuzzSpec::decode(&s.encode()).unwrap() == *s
+    });
+}
+
+#[test]
+fn prop_fuzz_codec_truncation_rejected() {
+    check(
+        "any strict prefix of a fuzz wire object is rejected",
+        |rng| {
+            let buf = match rng.below(4) {
+                0 => random_fuzz_spec(rng).encode(),
+                1 => random_coverage_map(rng).encode(),
+                2 => random_corpus_entry(rng).encode(),
+                _ => random_shrink_log(rng).encode(),
+            };
+            let cut = rng.below(buf.len() as u64) as usize;
+            (buf, cut)
+        },
+        |(buf, cut)| {
+            // all four are CRC-tailed: a strict prefix must never decode
+            FuzzSpec::decode(&buf[..*cut]).is_err()
+                && CoverageMap::decode(&buf[..*cut]).is_err()
+                && CorpusEntry::decode(&buf[..*cut]).is_err()
+                && ShrinkLog::decode(&buf[..*cut]).is_err()
+        },
+    );
+}
+
+#[test]
+fn prop_fuzz_codec_bitflip_rejected() {
+    check(
+        "a single flipped bit fails a fuzz wire object's CRC",
+        |rng| {
+            let which = rng.below(4);
+            let buf = match which {
+                0 => random_fuzz_spec(rng).encode(),
+                1 => random_coverage_map(rng).encode(),
+                2 => random_corpus_entry(rng).encode(),
+                _ => random_shrink_log(rng).encode(),
+            };
+            let byte = rng.below(buf.len() as u64) as usize;
+            let bit = rng.below(8) as u8;
+            (which, buf, byte, bit)
+        },
+        |(which, buf, byte, bit)| {
+            let mut damaged = buf.clone();
+            damaged[*byte] ^= 1 << bit;
+            match which {
+                0 => FuzzSpec::decode(&damaged).is_err(),
+                1 => CoverageMap::decode(&damaged).is_err(),
+                2 => CorpusEntry::decode(&damaged).is_err(),
+                _ => ShrinkLog::decode(&damaged).is_err(),
+            }
+        },
+    );
+}
+
+#[test]
+fn fuzz_codec_trailing_bytes_rejected_even_with_valid_crc() {
+    use av_simd::util::crc32;
+    // junk appended to the body with the CRC *recomputed*, so only the
+    // structural trailing-byte check can catch it
+    let mut rng = Prng::new(0xF022);
+    let with_junk = |buf: &[u8]| {
+        let mut body = buf[..buf.len() - 4].to_vec();
+        body.push(0xEE);
+        let crc = crc32::hash(&body);
+        body.extend_from_slice(&crc.to_le_bytes());
+        body
+    };
+    assert!(FuzzSpec::decode(&with_junk(&random_fuzz_spec(&mut rng).encode())).is_err());
+    assert!(CoverageMap::decode(&with_junk(&random_coverage_map(&mut rng).encode())).is_err());
+    assert!(CorpusEntry::decode(&with_junk(&random_corpus_entry(&mut rng).encode())).is_err());
+    assert!(ShrinkLog::decode(&with_junk(&random_shrink_log(&mut rng).encode())).is_err());
+}

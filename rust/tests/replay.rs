@@ -24,14 +24,58 @@ fn artifact_dir() -> String {
     std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into())
 }
 
-/// Write a fixture bag unique to this test invocation.
-fn fixture(tag: &str, frames: u32, seed: u64) -> String {
-    let dir = std::env::temp_dir().join("av_simd_replay_it");
-    std::fs::create_dir_all(&dir).unwrap();
-    let path = dir.join(format!("{tag}_{}.bag", std::process::id()));
-    let p = path.to_str().unwrap().to_string();
-    write_fixture_bag(&p, frames, seed).unwrap();
-    p
+/// Shared fixture bags: each `(frames, seed)` configuration is
+/// generated **once** per test process (fixture generation runs full
+/// synthetic episodes, so regenerating per test dominated suite time)
+/// and handed out read-only. The content hash recorded at build time is
+/// re-verified on every borrow, so a test that mutates a shared bag
+/// fails the next borrower loudly instead of silently poisoning the
+/// suite. Tests that *delete* their bag take a [`private_fixture`]
+/// copy.
+fn shared_fixture(frames: u32, seed: u64) -> String {
+    use std::collections::HashMap;
+    use std::path::PathBuf;
+    use std::sync::{Mutex, OnceLock};
+    static BAGS: OnceLock<Mutex<HashMap<(u32, u64), (PathBuf, [u8; 32])>>> = OnceLock::new();
+    let mut map = BAGS.get_or_init(|| Mutex::new(HashMap::new())).lock().unwrap();
+    let (path, built_hash) = map.entry((frames, seed)).or_insert_with(|| {
+        let dir = std::env::temp_dir().join("av_simd_replay_it");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join(format!("shared_{frames}_{seed}_{}.bag", std::process::id()));
+        write_fixture_bag(path.to_str().unwrap(), frames, seed).unwrap();
+        let hash = av_simd::util::sha256::digest(&std::fs::read(&path).unwrap());
+        (path, hash)
+    });
+    assert_eq!(
+        av_simd::util::sha256::digest(&std::fs::read(&path).unwrap()),
+        *built_hash,
+        "a test mutated the shared fixture bag {}",
+        path.display()
+    );
+    path.to_str().unwrap().to_string()
+}
+
+/// A private copy of the shared `(frames, seed)` bag for tests that
+/// delete the file mid-test (the shared original stays untouched).
+fn private_fixture(tag: &str, frames: u32, seed: u64) -> String {
+    let src = shared_fixture(frames, seed);
+    let path = std::env::temp_dir()
+        .join("av_simd_replay_it")
+        .join(format!("{tag}_{}.bag", std::process::id()));
+    std::fs::copy(&src, &path).unwrap();
+    path.to_str().unwrap().to_string()
+}
+
+/// Every shared configuration stays byte-identical to its build-time
+/// hash (the borrow itself asserts it) no matter what the rest of the
+/// suite did — including the configs whose users delete their bags.
+#[test]
+fn shared_fixture_bags_stay_pristine() {
+    for (frames, seed) in [(16u32, 42u64), (24, 7), (20, 13), (12, 5), (8, 9), (12, 11)] {
+        let first = shared_fixture(frames, seed);
+        let again = shared_fixture(frames, seed);
+        assert_eq!(first, again, "shared fixture must be built exactly once");
+    }
 }
 
 /// Reserve an ephemeral port, then serve a worker on it from a thread.
@@ -76,7 +120,7 @@ fn standalone(n: usize) -> (StandaloneCluster, Vec<std::thread::JoinHandle<()>>)
 /// reference replay.
 #[test]
 fn report_bytes_identical_across_backends_workers_and_slice_sizes() {
-    let bag = fixture("matrix", 16, 42);
+    let bag = shared_fixture(16, 42);
     let reference = {
         let spec = ReplaySpec { bag: bag.clone(), ..ReplaySpec::default() };
         ReplayDriver::new(spec).reference(&artifact_dir()).unwrap()
@@ -114,7 +158,6 @@ fn report_bytes_identical_across_backends_workers_and_slice_sizes() {
             }
         }
     }
-    std::fs::remove_file(bag).ok();
 }
 
 /// Skewed-slice stress: one slice covering ~10× the timeline of the
@@ -126,7 +169,7 @@ fn skewed_slices_with_retries_keep_verdict_bytes() {
     use std::sync::atomic::{AtomicUsize, Ordering};
     use std::sync::Arc;
 
-    let bag = fixture("skew", 24, 7);
+    let bag = shared_fixture(24, 7);
     let spec = ReplaySpec { bag: bag.clone(), slices: 12, ..ReplaySpec::default() };
     let driver = ReplayDriver::new(spec);
     let (index, _) = driver.plan().unwrap();
@@ -189,7 +232,6 @@ fn skewed_slices_with_retries_keep_verdict_bytes() {
         clean.encode(),
         "retries changed the replay verdicts"
     );
-    std::fs::remove_file(bag).ok();
 }
 
 /// The data-plane acceptance bar: the same bag replayed via
@@ -200,7 +242,7 @@ fn skewed_slices_with_retries_keep_verdict_bytes() {
 /// possibly resolve the path. The bytes must come through the engine.
 #[test]
 fn manifest_replay_bytes_equal_path_replay_without_the_bag_file() {
-    let bag = fixture("dataplane", 16, 42);
+    let bag = private_fixture("dataplane", 16, 42);
     let spec = ReplaySpec { bag: bag.clone(), slices: 5, ..ReplaySpec::default() };
 
     // path-based reference, while the file still exists
@@ -263,7 +305,7 @@ fn manifest_replay_bytes_equal_path_replay_without_the_bag_file() {
 fn cold_worker_fetches_from_warm_sibling_after_driver_store_is_gone() {
     use av_simd::engine::{Action, Cluster, Source, TaskSpec};
 
-    let bag = fixture("swarm", 12, 11);
+    let bag = private_fixture("swarm", 12, 11);
     let spec = ReplaySpec { bag: bag.clone(), slices: 6, ..ReplaySpec::default() };
     let by_path = ReplayDriver::new(spec.clone()).reference(&artifact_dir()).unwrap();
 
@@ -347,7 +389,7 @@ fn cold_worker_fetches_from_warm_sibling_after_driver_store_is_gone() {
 fn crashed_driver_resumes_to_byte_identical_report() {
     use av_simd::engine::{CheckpointConfig, FaultPlan};
 
-    let bag = fixture("crashresume", 20, 13);
+    let bag = shared_fixture(20, 13);
     let spec = ReplaySpec { bag: bag.clone(), slices: 5, ..ReplaySpec::default() };
     let driver = ReplayDriver::new(spec.clone());
     let (index, plan) = driver.plan().unwrap();
@@ -445,7 +487,6 @@ fn crashed_driver_resumes_to_byte_identical_report() {
             }
         }
     }
-    std::fs::remove_file(bag).ok();
 }
 
 /// Speculative re-execution must change *when* attempts run, never what
@@ -456,7 +497,7 @@ fn crashed_driver_resumes_to_byte_identical_report() {
 fn speculative_replay_bytes_match_reference_across_backends() {
     use av_simd::engine::Speculation;
 
-    let bag = fixture("speculate", 12, 5);
+    let bag = shared_fixture(12, 5);
     let spec = ReplaySpec { bag: bag.clone(), slices: 5, ..ReplaySpec::default() };
     let reference = ReplayDriver::new(spec.clone()).reference(&artifact_dir()).unwrap();
 
@@ -488,7 +529,6 @@ fn speculative_replay_bytes_match_reference_across_backends() {
             }
         }
     }
-    std::fs::remove_file(bag).ok();
 }
 
 /// A worker losing its block peer mid-job must surface a *retryable*
@@ -500,7 +540,7 @@ fn speculative_replay_bytes_match_reference_across_backends() {
 fn lost_block_peer_is_retryable_and_names_manifest_block_and_peer() {
     use av_simd::engine::TaskCtx;
 
-    let bag = fixture("lostpeer", 8, 9);
+    let bag = shared_fixture(8, 9);
     let spec = ReplaySpec {
         bag: bag.clone(),
         slices: 2,
@@ -537,7 +577,6 @@ fn lost_block_peer_is_retryable_and_names_manifest_block_and_peer() {
         msg.contains(&id.short()) || msg.contains("manifest"),
         "job error lost the manifest: {msg}"
     );
-    std::fs::remove_file(&bag).ok();
     std::fs::remove_dir_all(&store_root).ok();
 }
 

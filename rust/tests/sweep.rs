@@ -410,3 +410,93 @@ fn driver_rejects_empty_specs() {
     let err = SweepDriver::new(spec).run(&local(1)).unwrap_err();
     assert!(err.to_string().contains("zero cases"), "{err}");
 }
+
+/// The sweep's corpus mode: a fuzz regression corpus built in a block
+/// store replays through `run_corpus_replay` byte-identically across
+/// backends and worker counts, and a bit-flipped corpus block fails
+/// loudly with the damaged block's id in the error.
+#[test]
+fn corpus_replay_matches_across_backends_and_bit_flip_names_the_block() {
+    use av_simd::engine::deploy::ClusterSpec;
+    use av_simd::engine::StandaloneCluster;
+    use av_simd::sim::fuzz::{cutin_regression_case, FuzzDriver, FuzzSpec};
+    use av_simd::sim::run_corpus_replay;
+    use av_simd::storage::{hex32, Manifest, DEFAULT_BLOCK_SIZE};
+
+    let root = std::env::temp_dir()
+        .join(format!("av_simd_sweep_corpus_{}", std::process::id()))
+        .to_str()
+        .unwrap()
+        .to_string();
+
+    // build the fixture corpus deterministically: a short campaign with
+    // the committed cut-in regression case planted at the head
+    let spec = FuzzSpec {
+        rounds: 1,
+        round_size: 4,
+        horizon: 6.0,
+        planted: vec![cutin_regression_case()],
+        ..FuzzSpec::default()
+    };
+    let driver = FuzzDriver::new(spec);
+    let report = driver.run(&local(2)).unwrap();
+    assert!(!report.corpus.is_empty(), "campaign must capture the planted failure");
+    driver.publish_corpus(&report, &root).unwrap();
+
+    // byte-identical replay across worker counts and backends
+    let reference = run_corpus_replay(&local(1), &root).unwrap();
+    assert_eq!(reference.mismatches(), 0, "{}", reference.render());
+    for workers in [2usize, 4] {
+        let replay = run_corpus_replay(&local(workers), &root).unwrap();
+        assert_eq!(
+            replay.encode(),
+            reference.encode(),
+            "corpus replay local x{workers} diverged"
+        );
+    }
+    {
+        // standalone: in-process worker threads over TCP
+        use std::net::TcpListener;
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap().to_string();
+        drop(listener);
+        let a = addr.clone();
+        let h = std::thread::spawn(move || {
+            av_simd::engine::worker::serve(&a, 0, av_simd::full_op_registry(), "artifacts")
+                .unwrap();
+        });
+        let cluster_spec = ClusterSpec::from_toml_text(&format!(
+            "[cluster]\nname = \"corpus-test\"\nconnect_timeout_ms = 5000\n\
+             [workers]\nhosts = [\"{addr}\"]\n"
+        ))
+        .unwrap();
+        let cluster = StandaloneCluster::connect(&cluster_spec).unwrap();
+        let replay = run_corpus_replay(&cluster, &root).unwrap();
+        assert_eq!(
+            replay.encode(),
+            reference.encode(),
+            "corpus replay over standalone diverged"
+        );
+        cluster.stop_workers();
+        h.join().unwrap();
+    }
+
+    // bit-flip one byte of the first entry's block on disk: the replay
+    // must refuse with the block id in the error, not drift silently
+    let entry_bytes = report.corpus[0].encode();
+    let block_id = Manifest::describe(&entry_bytes, DEFAULT_BLOCK_SIZE).blocks[0].id;
+    let block_path = std::path::Path::new(&root)
+        .join("blocks")
+        .join(format!("{}.blk", hex32(&block_id)));
+    let mut damaged = std::fs::read(&block_path).unwrap();
+    damaged[0] ^= 0x01;
+    std::fs::write(&block_path, &damaged).unwrap();
+
+    let err = run_corpus_replay(&local(1), &root).unwrap_err();
+    let msg = err.to_string();
+    assert!(
+        msg.contains(&hex32(&block_id)),
+        "corruption error must name the damaged block: {msg}"
+    );
+    std::fs::remove_dir_all(&root).ok();
+}
