@@ -32,6 +32,10 @@
 //! * `replay/checkpointed` vs `replay/no checkpoint` — the same
 //!   distributed replay with durable per-slice checkpointing on vs off
 //!   (`checkpoint_overhead_pct` fact, asserted < 5%).
+//! * `replay/traced` vs `replay/untraced` — the same distributed replay
+//!   with a per-stage trace sink installed vs not: prices span
+//!   collection, batch shipping, and driver-side merging
+//!   (`trace_overhead_pct` fact, asserted < 5%; reports byte-checked).
 //! * `fuzz/campaign 2w` — a fixed-seed coverage-guided fuzz campaign
 //!   (generation, round barrier, verdict folding, shrinking of the
 //!   planted cut-in failure) on a 2-worker local cluster
@@ -402,6 +406,64 @@ fn bench_checkpoint(samples: usize, frames: u32) -> (Sample, Sample) {
     (on, off)
 }
 
+// ---------------------------------------------------------------- trace
+
+/// Replay with per-stage span tracing on vs off: prices the worker-side
+/// thread-local span collection, batch encoding, and the driver's event
+/// merge against the plain path. Tracing is observability-only, so the
+/// reports must stay byte-identical and the wall overhead inside 5%.
+fn bench_traced_replay(samples: usize, frames: u32) -> (Sample, Sample) {
+    use av_simd::engine::trace;
+    use av_simd::sim::replay::write_fixture_bag;
+    use av_simd::sim::{ReplayDriver, ReplaySpec};
+
+    let dir = std::env::temp_dir().join(format!("av_simd_bench_trace_{}", std::process::id()));
+    std::fs::create_dir_all(&dir).expect("bench tmp dir");
+    let bag = dir.join("drive.bag").to_str().unwrap().to_string();
+    write_fixture_bag(&bag, frames, 42).expect("fixture bag");
+
+    let spec = ReplaySpec { bag, slices: 8, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec);
+    let (index, slices) = driver.plan().expect("plan");
+    let n_slices = slices.len() as f64;
+    let cluster = LocalCluster::new(4, av_simd::full_op_registry(), "artifacts");
+
+    // byte-equality is the tentpole contract: tracing must never leak
+    // into result payloads
+    let plain_report = driver.run_planned(&cluster, &index, &slices).expect("plain replay");
+    let traced_report = {
+        let log = trace::TraceLog::new();
+        let _guard = trace::install(log.clone());
+        let report = driver.run_planned(&cluster, &index, &slices).expect("traced replay");
+        assert!(!log.is_empty(), "traced replay recorded no spans");
+        report
+    };
+    assert_eq!(
+        traced_report.encode(),
+        plain_report.encode(),
+        "tracing changed the replay report"
+    );
+
+    let on = Bench::new("replay/traced local x4")
+        .warmup(1)
+        .samples(samples)
+        .units(n_slices, "slice")
+        .run(|| {
+            let log = trace::TraceLog::new();
+            let _guard = trace::install(log.clone());
+            driver.run_planned(&cluster, &index, &slices).unwrap();
+        });
+    let off = Bench::new("replay/untraced local x4 (baseline)")
+        .warmup(1)
+        .samples(samples)
+        .units(n_slices, "slice")
+        .run(|| {
+            driver.run_planned(&cluster, &index, &slices).unwrap();
+        });
+    std::fs::remove_dir_all(&dir).ok();
+    (on, off)
+}
+
 // ---------------------------------------------------------------- storage
 
 /// Data-plane microbenches: (1) a cold manifest + every-block fetch over
@@ -646,6 +708,7 @@ fn main() -> av_simd::Result<()> {
     let (spec_on, spec_off) = bench_speculation(spec_samples, spec_slow_ms, spec_fast_ms);
     let (ckpt_on, ckpt_off) = bench_checkpoint(replay_samples, replay_frames);
     let fuzz_campaign = bench_fuzz(sweep_samples);
+    let (trace_on, trace_off) = bench_traced_replay(replay_samples, replay_frames);
 
     let samples = vec![
         sched_stream,
@@ -669,6 +732,8 @@ fn main() -> av_simd::Result<()> {
         ckpt_on,
         ckpt_off,
         fuzz_campaign,
+        trace_on,
+        trace_off,
     ];
     print_table("engine microbenches", &samples);
 
@@ -697,6 +762,9 @@ fn main() -> av_simd::Result<()> {
     // fuzz fact: campaign throughput, generation + barrier + shrinking
     // included (median wall over cases executed)
     let fuzz_cases_per_sec = samples[20].throughput().unwrap_or(0.0);
+    // observability fact: relative wall cost of recording, shipping, and
+    // merging per-stage spans when a trace sink is installed
+    let trace_overhead_pct = (speedup(&samples[21], &samples[22]) - 1.0) * 100.0;
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
@@ -712,6 +780,7 @@ fn main() -> av_simd::Result<()> {
         ("speculation_tail_speedup", speculation_tail_speedup),
         ("checkpoint_overhead_pct", checkpoint_overhead_pct),
         ("fuzz_cases_per_sec", fuzz_cases_per_sec),
+        ("trace_overhead_pct", trace_overhead_pct),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),
@@ -759,6 +828,10 @@ fn main() -> av_simd::Result<()> {
     assert!(
         fuzz_cases_per_sec > 0.0,
         "fuzz campaign bench produced no throughput"
+    );
+    assert!(
+        trace_overhead_pct < 5.0,
+        "trace overhead {trace_overhead_pct:.2}% above the 5% bar"
     );
     println!("bench_engine OK");
     Ok(())

@@ -15,6 +15,7 @@ use super::fault::{FaultPlan, FAULT_TAG};
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
 use super::stream::TaskStream;
+use super::trace;
 use crate::error::{Error, Result};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
@@ -233,6 +234,21 @@ fn pool_worker(pool: Arc<PoolShared>, registry: OpRegistry, ctx: TaskCtx, faults
             return;
         }
         let started = Instant::now();
+        // Bracket execution with the thread-local span collector when a
+        // trace sink is installed. Local workers share the driver's
+        // monotonic clock, so batches merge with offset 0.
+        let traced = trace::enabled();
+        let t0 = crate::util::mono_nanos();
+        if traced {
+            trace::begin_task(
+                ctx.worker_id as u64,
+                trace::TraceCtx {
+                    job_id: spec.job_id,
+                    task_id: spec.task_id,
+                    attempt: spec.attempt,
+                },
+            );
+        }
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             executor::run_task(&ctx, &registry, &spec)
         }))
@@ -244,6 +260,14 @@ fn pool_worker(pool: Arc<PoolShared>, registry: OpRegistry, ctx: TaskCtx, faults
                 panic_message(payload.as_ref())
             )))
         });
+        if traced {
+            trace::record("task", "", t0, crate::util::mono_nanos().saturating_sub(t0));
+            if let Some(batch) = trace::end_task() {
+                if let Some(log) = trace::active() {
+                    log.absorb(&batch, 0);
+                }
+            }
+        }
         stream.complete(seq, spec, result, queue_wait, started.elapsed());
     }
 }

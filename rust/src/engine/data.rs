@@ -586,7 +586,11 @@ fn serve_block_conn(stream: TcpStream, source: &dyn BlockSource) -> Result<()> {
             Some(RpcMsg::Ping) => write_msg(&mut writer, &RpcMsg::Pong)?,
             Some(RpcMsg::Hello { version: _ }) => write_msg(
                 &mut writer,
-                &RpcMsg::HelloOk { version: RPC_VERSION, worker_id: BLOCK_PEER_ID },
+                &RpcMsg::HelloOk {
+                    version: RPC_VERSION,
+                    worker_id: BLOCK_PEER_ID,
+                    now_ns: crate::util::mono_nanos(),
+                },
             )?,
             Some(RpcMsg::Shutdown) => return Ok(()),
             Some(RpcMsg::FetchManifest { id }) => {
@@ -605,7 +609,12 @@ fn serve_block_conn(stream: TcpStream, source: &dyn BlockSource) -> Result<()> {
             Some(RpcMsg::FetchBlock { manifest, index }) => {
                 let reply = match fetch_block_reply(source, &mut manifests, manifest, index)
                 {
-                    Ok(bytes) => RpcMsg::BlockData(bytes),
+                    Ok(bytes) => {
+                        crate::metrics::Metrics::global()
+                            .counter("block_bytes_served")
+                            .add(bytes.len() as u64);
+                        RpcMsg::BlockData(bytes)
+                    }
                     Err(e) => RpcMsg::FetchErr(e.to_string()),
                 };
                 write_msg(&mut writer, &reply)?;
@@ -772,7 +781,7 @@ impl DataPlane {
         };
         let out = {
             let _resolving = gate.lock().unwrap_or_else(|p| p.into_inner());
-            self.resolve_manifest(id, peers)
+            super::trace::span("manifest_resolve", || self.resolve_manifest(id, peers))
         };
         // Drop the gate once nobody is waiting on it, so the map stays
         // bounded by *concurrent* resolutions instead of growing by one
@@ -813,7 +822,7 @@ impl DataPlane {
         let manifest = match self.cache.get(&mf_key) {
             Some(bytes) => Manifest::decode(&bytes)?,
             None => {
-                let m = cursor.try_peers(id, |c| c.fetch_manifest(id))?;
+                let m = cursor.try_peers("manifest_fetch", id, |c| c.fetch_manifest(id))?;
                 self.cache.put_shared(&mf_key, m.encode());
                 m
             }
@@ -825,7 +834,9 @@ impl DataPlane {
                 Some(a) => a,
                 None => {
                     let mut bytes =
-                        cursor.try_peers(id, |c| c.fetch_block(id, i as u32, &manifest))?;
+                        cursor.try_peers("block_fetch", id, |c| {
+                            c.fetch_block(id, i as u32, &manifest)
+                        })?;
                     if self.faults.take_block_corruption() && !bytes.is_empty() {
                         // injected bit rot: damage the fetched bytes so
                         // the real content-hash check produces the real
@@ -861,8 +872,13 @@ struct PeerCursor<'a> {
 }
 
 impl PeerCursor<'_> {
+    /// Run `op` against the current peer, advancing on failure. `stage`
+    /// names the trace accumulator (`manifest_fetch` / `block_fetch`);
+    /// each attempt is folded per `(stage, peer)` so traced slices show
+    /// time spent against each peer individually.
     fn try_peers<T>(
         &mut self,
+        stage: &str,
         id: &ManifestId,
         mut op: impl FnMut(&mut BlockClient) -> Result<T>,
     ) -> Result<T> {
@@ -887,7 +903,9 @@ impl PeerCursor<'_> {
                     }
                 }
             }
-            match op(self.client.as_mut().expect("just connected")) {
+            let peer = self.peers[self.idx].as_str();
+            let client = self.client.as_mut().expect("just connected");
+            match super::trace::accum_detail(stage, peer, || op(client)) {
                 Ok(v) => return Ok(v),
                 Err(e) => {
                     // the connection may be dead or the peer may simply
@@ -1242,7 +1260,11 @@ mod tests {
                 match read_msg(&mut reader) {
                     Ok(Some(RpcMsg::Hello { .. })) => write_msg(
                         &mut writer,
-                        &RpcMsg::HelloOk { version: RPC_VERSION, worker_id: BLOCK_PEER_ID },
+                        &RpcMsg::HelloOk {
+                            version: RPC_VERSION,
+                            worker_id: BLOCK_PEER_ID,
+                            now_ns: 0,
+                        },
                     )
                     .unwrap(),
                     Ok(Some(RpcMsg::FetchManifest { id })) => {

@@ -375,6 +375,116 @@ pub fn probe(spec: &ClusterSpec) -> Vec<WorkerHealth> {
     })
 }
 
+/// One worker's live telemetry snapshot (see [`probe_stats`]).
+#[derive(Debug, Clone)]
+pub struct WorkerStats {
+    /// The endpoint that was dialed.
+    pub addr: String,
+    /// The worker's self-reported id, when the handshake succeeded.
+    pub worker_id: Option<u64>,
+    /// The worker's metrics snapshot, when the fetch succeeded.
+    pub snapshot: Option<crate::metrics::MetricsSnapshot>,
+    /// The failure, when it did not.
+    pub error: Option<String>,
+}
+
+/// Fetch a live [`crate::metrics::MetricsSnapshot`] from every endpoint
+/// in the spec (the `av-simd top` / `deploy --probe --stats` data
+/// source). Like [`probe`]: concurrent, never fails as a whole,
+/// read-only, results in manifest order.
+pub fn probe_stats(spec: &ClusterSpec) -> Vec<WorkerStats> {
+    let timeout = spec.connect_timeout;
+    std::thread::scope(|s| {
+        let handles: Vec<_> = spec
+            .workers
+            .iter()
+            .map(|w| {
+                s.spawn(move || {
+                    let addr = w.addr();
+                    match WorkerClient::connect(&addr, timeout) {
+                        Ok(mut client) => {
+                            let worker_id = Some(client.worker_id);
+                            match client.fetch_stats() {
+                                Ok(snap) => WorkerStats {
+                                    addr,
+                                    worker_id,
+                                    snapshot: Some(snap),
+                                    error: None,
+                                },
+                                Err(e) => WorkerStats {
+                                    addr,
+                                    worker_id,
+                                    snapshot: None,
+                                    error: Some(e.to_string()),
+                                },
+                            }
+                        }
+                        Err(e) => WorkerStats {
+                            addr,
+                            worker_id: None,
+                            snapshot: None,
+                            error: Some(e.to_string()),
+                        },
+                    }
+                })
+            })
+            .collect();
+        handles
+            .into_iter()
+            .map(|h| h.join().expect("stats probe thread panicked"))
+            .collect()
+    })
+}
+
+/// Render a fleet stats table (the `av-simd top` body): one row per
+/// worker with task counts, cache hit rate, bytes served from the block
+/// cache, and slot occupancy. Unreachable workers render their error.
+pub fn render_stats(stats: &[WorkerStats]) -> String {
+    let mut out = String::new();
+    out.push_str(&format!(
+        "  {:<24} {:>3}  {:>6} {:>6}  {:>6}  {:>12}  {:>6}\n",
+        "worker", "id", "done", "failed", "hit%", "served", "slots"
+    ));
+    for w in stats {
+        let id = w
+            .worker_id
+            .map(|i| i.to_string())
+            .unwrap_or_else(|| "-".to_string());
+        match &w.snapshot {
+            Some(s) => {
+                let hits = s.gauge("worker_cache_hits");
+                let misses = s.gauge("worker_cache_misses");
+                let lookups = hits + misses;
+                let hit_pct = if lookups == 0 {
+                    "-".to_string()
+                } else {
+                    format!("{:.1}", hits as f64 * 100.0 / lookups as f64)
+                };
+                out.push_str(&format!(
+                    "  {:<24} {:>3}  {:>6} {:>6}  {:>6}  {:>12}  {:>3}/{}\n",
+                    w.addr,
+                    id,
+                    s.counter("worker_tasks_done"),
+                    s.counter("worker_tasks_failed"),
+                    hit_pct,
+                    crate::util::human_bytes(s.counter("block_bytes_served")),
+                    s.gauge("worker_slots_busy"),
+                    s.gauge("worker_slots_total"),
+                ));
+            }
+            None => {
+                out.push_str(&format!(
+                    "  {:<24} {:>3}  DOWN {}\n",
+                    w.addr,
+                    id,
+                    w.error.as_deref().unwrap_or("unknown")
+                ));
+            }
+        }
+    }
+    out
+}
+
 /// Spawn a worker process (via the spec's `launch.program`) for every
 /// *unique loopback* endpoint in the spec, detached — the children
 /// outlive the calling process, so `av-simd deploy --launch` then exit

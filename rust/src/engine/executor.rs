@@ -92,7 +92,7 @@ pub fn load_source(ctx: &TaskCtx, source: &Source) -> Result<Vec<Record>> {
 
 /// Run one task end-to-end.
 pub fn run_task(ctx: &TaskCtx, registry: &OpRegistry, spec: &TaskSpec) -> Result<TaskOutput> {
-    let input = load_source(ctx, &spec.source)?;
+    let input = super::trace::span("source_load", || load_source(ctx, &spec.source))?;
     let records = registry.apply_chain(ctx, &spec.ops, input)?;
     match &spec.action {
         Action::Collect => Ok(TaskOutput::Records(records)),

@@ -21,6 +21,10 @@
 //!   exercising the recovery paths in tests and CI.
 //! * [`context`] — the driver API: [`SimContext`] + [`Rdd`].
 //! * [`rpc`] / [`worker`] — the standalone-mode TCP protocol.
+//! * [`trace`] — distributed task tracing: worker-side per-stage
+//!   spans piggybacked on task replies, merged driver-side into a
+//!   [`trace::TraceLog`] (Chrome `trace_event` export + per-stage
+//!   `JobReport` summary).
 //!
 //! Quick taste — a four-worker in-process cluster counting a range:
 //!
@@ -57,6 +61,7 @@ pub mod remote;
 pub mod rpc;
 pub mod scheduler;
 pub mod stream;
+pub mod trace;
 pub mod worker;
 
 pub use checkpoint::{CheckpointConfig, CheckpointRecord, Checkpointer};
@@ -73,3 +78,4 @@ pub use scheduler::{
     run_provider_with, JobReport, RetryBackoff, RunHooks, Speculation, TaskProvider,
 };
 pub use stream::{Completion, CompletionWait, TaskStream};
+pub use trace::{SpanBatch, StageStat, TraceCtx, TraceLog};

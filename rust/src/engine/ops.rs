@@ -129,7 +129,8 @@ impl OpRegistry {
     ) -> Result<Vec<Record>> {
         for call in ops {
             let f = self.get(&call.name)?;
-            records = f(ctx, &call.params, records)?;
+            records =
+                super::trace::span_detail("op", &call.name, || f(ctx, &call.params, records))?;
         }
         Ok(records)
     }

@@ -29,6 +29,7 @@ use super::deploy::ClusterSpec;
 use super::fault::{FaultPlan, FAULT_TAG};
 use super::plan::TaskSpec;
 use super::stream::TaskStream;
+use super::trace;
 use super::worker::WorkerClient;
 use crate::error::{Error, Result};
 use std::collections::{HashSet, VecDeque};
@@ -402,7 +403,7 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry, fau
                 deferred = Some((seq, spec, queue_wait));
                 break;
             }
-            if let Err(e) = client.send_task_encoded(encoded) {
+            if let Err(e) = client.send_task_encoded_traced(encoded, trace::enabled()) {
                 stream.complete(
                     seq,
                     spec,
@@ -441,6 +442,16 @@ fn feeder_loop(w: &RemoteWorker, stream: &TaskStream, swarm: &SwarmRegistry, fau
         for (peer, manifests) in client.take_advertisements() {
             swarm.advertise(&peer, &manifests);
             ad_peers.insert(peer);
+        }
+        // Forward piggybacked span batches to the installed trace sink,
+        // shifting worker timestamps onto the driver's clock.
+        let batches = client.take_trace_batches();
+        if !batches.is_empty() {
+            if let Some(log) = trace::active() {
+                for batch in &batches {
+                    log.absorb(batch, client.clock_offset_ns);
+                }
+            }
         }
         match reply {
             Ok(out) => {

@@ -36,7 +36,15 @@ pub const MAX_FRAME: u32 = 1 << 30;
 /// v3: the swarm — [`RpcMsg::BlockAd`] cache advertisements and the
 /// ordered *peer list* in `DataRef::Manifest` task payloads (v2 workers
 /// expect a single peer string and cannot decode v3 `TaskSpec`s).
-pub const RPC_VERSION: u32 = 3;
+///
+/// v4: observability — [`RpcMsg::HelloOk`] carries the worker's
+/// monotonic clock (`now_ns`, the trace clock-alignment sample),
+/// [`RpcMsg::RunTaskTraced`] requests per-stage span recording,
+/// [`RpcMsg::TaskTrace`] piggybacks the span batch ahead of the task
+/// reply (the `BlockAd` pattern), and [`RpcMsg::FetchStats`] /
+/// [`RpcMsg::StatsData`] serve live `Metrics` snapshots to `av-simd
+/// top`. v3 drivers cannot decode the 20-byte v4 `HelloOk`.
+pub const RPC_VERSION: u32 = 4;
 
 /// RPC message.
 #[derive(Debug, Clone, PartialEq)]
@@ -68,6 +76,12 @@ pub enum RpcMsg {
         /// endpoints back to launch manifests). Block-peer servers
         /// answer with `u64::MAX`.
         worker_id: u64,
+        /// The worker's monotonic clock (`util::mono_nanos`) read while
+        /// building this reply. Combined with the driver's send/receive
+        /// timestamps around the handshake round trip, this estimates a
+        /// per-connection clock offset that aligns worker trace spans
+        /// onto the driver's timeline.
+        now_ns: u64,
     },
     /// Requester → block peer: send the manifest bytes for this
     /// 32-byte manifest id (see `storage::ManifestId`).
@@ -105,6 +119,21 @@ pub enum RpcMsg {
         /// Manifest ids fully resident in the worker's cache.
         manifests: Vec<[u8; 32]>,
     },
+    /// Driver → worker: like [`RpcMsg::RunTask`] (same encoded
+    /// `TaskSpec` payload) but the worker records per-stage trace
+    /// [`Span`](super::trace::Span)s while executing and ships them
+    /// back as a [`RpcMsg::TaskTrace`] frame ahead of the reply.
+    RunTaskTraced(Vec<u8>),
+    /// Worker → driver: an encoded span batch
+    /// (`engine::trace::SpanBatch`), piggybacked on the task connection
+    /// ahead of a `TaskOk`/`TaskErr` — the same pattern as
+    /// [`RpcMsg::BlockAd`].
+    TaskTrace(Vec<u8>),
+    /// Anyone → worker: request a versioned snapshot of the worker's
+    /// `Metrics` registry (the `av-simd top` poll).
+    FetchStats,
+    /// Worker → requester: the encoded `metrics::MetricsSnapshot`.
+    StatsData(Vec<u8>),
 }
 
 impl RpcMsg {
@@ -124,6 +153,10 @@ impl RpcMsg {
             RpcMsg::BlockData(_) => 12,
             RpcMsg::FetchErr(_) => 13,
             RpcMsg::BlockAd { .. } => 14,
+            RpcMsg::RunTaskTraced(_) => 15,
+            RpcMsg::TaskTrace(_) => 16,
+            RpcMsg::FetchStats => 17,
+            RpcMsg::StatsData(_) => 18,
         }
     }
 }
@@ -133,17 +166,19 @@ pub fn write_msg<W: Write>(w: &mut W, msg: &RpcMsg) -> Result<()> {
     let mut scratch = [0u8; 36];
     let mut dynbuf = Vec::new();
     let payload: &[u8] = match msg {
-        RpcMsg::RunTask(b) | RpcMsg::TaskOk(b) => b,
+        RpcMsg::RunTask(b) | RpcMsg::RunTaskTraced(b) | RpcMsg::TaskOk(b) => b,
         RpcMsg::ManifestData(b) | RpcMsg::BlockData(b) => b,
+        RpcMsg::TaskTrace(b) | RpcMsg::StatsData(b) => b,
         RpcMsg::TaskErr(s) | RpcMsg::FetchErr(s) => s.as_bytes(),
         RpcMsg::Hello { version } => {
             scratch[..4].copy_from_slice(&version.to_le_bytes());
             &scratch[..4]
         }
-        RpcMsg::HelloOk { version, worker_id } => {
+        RpcMsg::HelloOk { version, worker_id, now_ns } => {
             scratch[..4].copy_from_slice(&version.to_le_bytes());
             scratch[4..12].copy_from_slice(&worker_id.to_le_bytes());
-            &scratch[..12]
+            scratch[12..20].copy_from_slice(&now_ns.to_le_bytes());
+            &scratch[..20]
         }
         RpcMsg::FetchManifest { id } => {
             scratch[..32].copy_from_slice(id);
@@ -234,7 +269,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
             }
         }
         8 => {
-            if payload.len() != 12 {
+            if payload.len() != 20 {
                 return Err(Error::Engine(format!(
                     "bad HelloOk payload length {}",
                     payload.len()
@@ -243,6 +278,7 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
             RpcMsg::HelloOk {
                 version: u32::from_le_bytes(payload[..4].try_into().unwrap()),
                 worker_id: u64::from_le_bytes(payload[4..12].try_into().unwrap()),
+                now_ns: u64::from_le_bytes(payload[12..20].try_into().unwrap()),
             }
         }
         9 => {
@@ -296,6 +332,18 @@ pub fn read_msg<R: Read>(r: &mut R) -> Result<Option<RpcMsg>> {
             let manifests = ids.chunks_exact(32).map(|c| c.try_into().unwrap()).collect();
             RpcMsg::BlockAd { peer, manifests }
         }
+        15 => RpcMsg::RunTaskTraced(payload),
+        16 => RpcMsg::TaskTrace(payload),
+        17 => {
+            if !payload.is_empty() {
+                return Err(Error::Engine(format!(
+                    "bad FetchStats payload length {}",
+                    payload.len()
+                )));
+            }
+            RpcMsg::FetchStats
+        }
+        18 => RpcMsg::StatsData(payload),
         other => return Err(Error::Engine(format!("unknown rpc type {other}"))),
     };
     Ok(Some(msg))
@@ -322,9 +370,9 @@ mod tests {
         roundtrip(RpcMsg::Pong);
         roundtrip(RpcMsg::Shutdown);
         roundtrip(RpcMsg::Hello { version: RPC_VERSION });
-        roundtrip(RpcMsg::HelloOk { version: RPC_VERSION, worker_id: 42 });
+        roundtrip(RpcMsg::HelloOk { version: RPC_VERSION, worker_id: 42, now_ns: 123 });
         roundtrip(RpcMsg::Hello { version: u32::MAX });
-        roundtrip(RpcMsg::HelloOk { version: 0, worker_id: u64::MAX });
+        roundtrip(RpcMsg::HelloOk { version: 0, worker_id: u64::MAX, now_ns: u64::MAX });
         roundtrip(RpcMsg::FetchManifest { id: [7u8; 32] });
         roundtrip(RpcMsg::ManifestData(vec![1, 2, 3]));
         roundtrip(RpcMsg::FetchBlock { manifest: [0xAB; 32], index: u32::MAX });
@@ -335,6 +383,26 @@ mod tests {
             peer: "worker-3.fleet:7200".into(),
             manifests: vec![[0u8; 32], [0xFF; 32], [7; 32]],
         });
+        roundtrip(RpcMsg::RunTaskTraced(vec![9, 8, 7]));
+        roundtrip(RpcMsg::TaskTrace(vec![]));
+        roundtrip(RpcMsg::TaskTrace(vec![0xAA; 64]));
+        roundtrip(RpcMsg::FetchStats);
+        roundtrip(RpcMsg::StatsData(vec![1]));
+    }
+
+    #[test]
+    fn oversized_handshake_payloads_rejected() {
+        // a v3 HelloOk (12 bytes, no now_ns) must not parse as v4 —
+        // and neither must a padded 21-byte one or a FetchStats with a
+        // stray payload byte
+        for (ty, len) in [(8u8, 12usize), (8, 21), (17, 1)] {
+            let mut buf = Vec::new();
+            buf.extend_from_slice(&((len + 1) as u32).to_le_bytes());
+            buf.push(ty);
+            buf.extend_from_slice(&vec![0u8; len]);
+            let mut cur = &buf[..];
+            assert!(read_msg(&mut cur).is_err(), "type {ty} with {len}-byte payload");
+        }
     }
 
     #[test]

@@ -23,7 +23,9 @@ use super::cluster::Cluster;
 use super::fault::{FaultPlan, FAULT_TAG};
 use super::plan::{TaskOutput, TaskSpec};
 use super::stream::{CompletionWait, TaskStream};
+use super::trace::{self, StageStat, TraceCtx};
 use crate::error::{Error, Result};
+use crate::util::mono_nanos;
 use std::collections::HashMap;
 use std::time::{Duration, Instant};
 
@@ -131,6 +133,11 @@ pub struct JobReport {
     /// Speculative duplicate attempts launched for straggler tasks
     /// (zero unless [`Speculation::enabled`]).
     pub speculations: usize,
+    /// Per-stage time totals from the installed trace sink (empty when
+    /// no [`super::trace::TraceLog`] is installed). Execution facts
+    /// only — never serialized into result payloads, so report bytes
+    /// stay identical with tracing on or off.
+    pub stages: Vec<StageStat>,
 }
 
 impl JobReport {
@@ -145,8 +152,15 @@ impl JobReport {
             queue_wait_p50: Duration::ZERO,
             queue_wait_p95: Duration::ZERO,
             speculations: 0,
+            stages: Vec::new(),
         }
     }
+}
+
+/// The trace context a task spec carries (stamped on every driver event
+/// and on the traced dispatch frame).
+fn ctx_of(t: &TaskSpec) -> TraceCtx {
+    TraceCtx { job_id: t.job_id, task_id: t.task_id, attempt: t.attempt }
 }
 
 /// Nearest-rank percentile over an unsorted set of durations.
@@ -269,6 +283,9 @@ fn speculate_stragglers(
         if r.speculated || r.attempts != 1 || r.started.elapsed() <= threshold {
             continue;
         }
+        if let Some(log) = trace::active() {
+            log.driver_event("speculate", ctx_of(&r.spec), mono_nanos(), 0);
+        }
         stream.submit(*seq, r.spec.clone());
         r.attempts = 2;
         r.speculated = true;
@@ -350,6 +367,9 @@ pub fn run_provider_hooked(
                             },
                         );
                     }
+                    if let Some(log) = trace::active() {
+                        log.driver_event("submit", ctx_of(&t), mono_nanos(), 0);
+                    }
                     stream.submit(submitted, t);
                     submitted += 1;
                     outstanding += 1;
@@ -391,6 +411,18 @@ pub fn run_provider_hooked(
         waits.push(c.queue_wait);
         wall_hist.observe(c.wall);
         wait_hist.observe(c.queue_wait);
+        if let Some(log) = trace::active() {
+            // Reconstruct the attempt timeline backward from observation:
+            // the attempt finished "now", ran for `wall`, and queued for
+            // `queue_wait` before that.
+            let now = mono_nanos();
+            let wall_ns = c.wall.as_nanos() as u64;
+            let wait_ns = c.queue_wait.as_nanos() as u64;
+            let ctx = ctx_of(&c.spec);
+            let run_start = now.saturating_sub(wall_ns);
+            log.driver_event("queue_wait", ctx, run_start.saturating_sub(wait_ns), wait_ns);
+            log.driver_event("task_wall", ctx, run_start, wall_ns);
+        }
         match c.result {
             Ok(out) => {
                 running.remove(&c.seq);
@@ -466,6 +498,9 @@ pub fn run_provider_hooked(
                             r.speculated = false; // a fresh attempt may speculate anew
                         }
                     }
+                    if let Some(log) = trace::active() {
+                        log.driver_event("retry", ctx_of(&t), mono_nanos(), 0);
+                    }
                     stream.submit(c.seq, t);
                     outstanding += 1;
                 } else {
@@ -506,6 +541,9 @@ pub fn run_provider_hooked(
     }
     let mut report = JobReport::new(job_id, submitted as usize, retries_used, start.elapsed());
     report.speculations = speculations;
+    if let Some(log) = trace::active() {
+        report.stages = log.stage_totals(Some(job_id));
+    }
     report.task_wall_p50 = percentile(&mut walls, 0.50);
     report.task_wall_p95 = percentile(&mut walls, 0.95);
     report.queue_wait_p50 = percentile(&mut waits, 0.50);

@@ -1,0 +1,679 @@
+//! Distributed task tracing: per-stage [`Span`]s recorded on workers,
+//! shipped back piggybacked on task replies (the `BlockAd` pattern),
+//! merged with driver-side scheduling events into a [`TraceLog`], and
+//! exported as a Chrome `trace_event` JSON timeline plus a per-stage
+//! summary in `JobReport`.
+//!
+//! ## Recording model
+//!
+//! A task executes on exactly one thread, so the recorder is a
+//! thread-local [`SpanBatch`] collector bracketed by
+//! [`begin_task`]/[`end_task`]. Instrumentation points call
+//! [`span`]/[`span_detail`] (one span per call — task-level stages) or
+//! [`accum`]/[`accum_detail`] (per-frame hot stages like the perception
+//! phases and per-peer block fetches, folded into one span per
+//! `(name, detail)` with a `count`), all of which are no-ops costing a
+//! TLS load and a branch when no collector is installed.
+//!
+//! ## Clocks
+//!
+//! Span timestamps are `util::mono_nanos()` — monotonic nanoseconds
+//! since *that process's* start, immune to wall-clock steps. Each
+//! driver→worker connection estimates a clock offset from the `Hello`
+//! round trip (the worker's `HelloOk` carries its `mono_nanos`; the
+//! driver brackets the exchange with its own reads and takes the
+//! midpoint), and [`TraceLog::absorb`] shifts worker spans onto the
+//! driver's timeline with it. Local (in-process) clusters share the
+//! driver's clock, so their offset is zero.
+//!
+//! ## Enabling
+//!
+//! Tracing is off unless a [`TraceLog`] is installed as the process's
+//! active sink ([`install`], returning a guard that uninstalls on
+//! drop). While installed, feeders dispatch `RunTaskTraced` frames
+//! instead of `RunTask` and local pool workers bracket execution with
+//! the collector; either way span batches land in the same log. The
+//! trace is *observability only*: report payload bytes are identical
+//! with tracing on or off.
+
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
+use crate::util::mono_nanos;
+use std::cell::RefCell;
+use std::collections::BTreeMap;
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+/// Wire/version tag for [`SpanBatch::encode`].
+pub const SPAN_BATCH_VERSION: u8 = 1;
+
+/// Identity of a dispatched task attempt, stamped on every span batch
+/// and driver event so merged timelines stay attributable.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct TraceCtx {
+    /// Job the task belongs to.
+    pub job_id: u64,
+    /// Task sequence id within the job.
+    pub task_id: u32,
+    /// Attempt number (0 = first execution).
+    pub attempt: u32,
+}
+
+/// One named, timed stage of task execution.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Span {
+    /// Stage name (`queue_wait`, `block_fetch`, `icp`, …).
+    pub name: String,
+    /// Optional qualifier (peer address, op name); empty when unused.
+    pub detail: String,
+    /// Recorder-clock start (`mono_nanos` of the recording process).
+    pub start_ns: u64,
+    /// Duration in nanoseconds (summed across calls for accumulated
+    /// spans).
+    pub dur_ns: u64,
+    /// Number of folded observations (1 for plain spans).
+    pub count: u64,
+}
+
+/// Every span one task attempt recorded, plus the identity needed to
+/// merge it: the payload of the `TaskTrace` RPC frame.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SpanBatch {
+    /// Recording worker's id (`u64::MAX` when unknown).
+    pub worker_id: u64,
+    /// The task attempt these spans belong to.
+    pub ctx: TraceCtx,
+    /// Recorded spans in completion order.
+    pub spans: Vec<Span>,
+}
+
+impl SpanBatch {
+    /// Serialize to the versioned `TaskTrace` wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(SPAN_BATCH_VERSION);
+        w.put_varint(self.worker_id);
+        w.put_varint(self.ctx.job_id);
+        w.put_varint(self.ctx.task_id as u64);
+        w.put_varint(self.ctx.attempt as u64);
+        w.put_varint(self.spans.len() as u64);
+        for s in &self.spans {
+            w.put_str(&s.name);
+            w.put_str(&s.detail);
+            w.put_varint(s.start_ns);
+            w.put_varint(s.dur_ns);
+            w.put_varint(s.count);
+        }
+        w.into_vec()
+    }
+
+    /// Decode a `TaskTrace` payload; rejects unknown versions and any
+    /// truncated or trailing bytes.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let ver = r.get_u8()?;
+        if ver != SPAN_BATCH_VERSION {
+            return Err(Error::Engine(format!(
+                "span batch version {ver} unsupported (want {SPAN_BATCH_VERSION})"
+            )));
+        }
+        let worker_id = r.get_varint()?;
+        let ctx = TraceCtx {
+            job_id: r.get_varint()?,
+            task_id: u32::try_from(r.get_varint()?)
+                .map_err(|_| Error::Engine("span batch task_id overflows u32".into()))?,
+            attempt: u32::try_from(r.get_varint()?)
+                .map_err(|_| Error::Engine("span batch attempt overflows u32".into()))?,
+        };
+        let n = r.get_varint()? as usize;
+        let mut spans = Vec::with_capacity(n.min(4096));
+        for _ in 0..n {
+            spans.push(Span {
+                name: r.get_str()?,
+                detail: r.get_str()?,
+                start_ns: r.get_varint()?,
+                dur_ns: r.get_varint()?,
+                count: r.get_varint()?,
+            });
+        }
+        if !r.is_empty() {
+            return Err(Error::Engine(format!(
+                "span batch has {} trailing bytes",
+                r.remaining()
+            )));
+        }
+        Ok(SpanBatch { worker_id, ctx, spans })
+    }
+}
+
+// ------------------------------------------------------- task recorder
+
+struct Collector {
+    worker_id: u64,
+    ctx: TraceCtx,
+    spans: Vec<Span>,
+    // (name, detail) → (first start, total dur, count)
+    agg: BTreeMap<(String, String), (u64, u64, u64)>,
+}
+
+thread_local! {
+    static COLLECTOR: RefCell<Option<Collector>> = const { RefCell::new(None) };
+}
+
+/// Install the thread-local span collector for one task attempt. Must
+/// be paired with [`end_task`]; a second `begin_task` on the same
+/// thread replaces the first (a stale collector from a panicked task
+/// must not leak spans into the next one).
+pub fn begin_task(worker_id: u64, ctx: TraceCtx) {
+    COLLECTOR.with(|c| {
+        *c.borrow_mut() = Some(Collector {
+            worker_id,
+            ctx,
+            spans: Vec::new(),
+            agg: BTreeMap::new(),
+        });
+    });
+}
+
+/// Tear down the thread-local collector, folding accumulated stages
+/// into spans, and return the batch. `None` when no collector was
+/// installed.
+pub fn end_task() -> Option<SpanBatch> {
+    COLLECTOR.with(|c| c.borrow_mut().take()).map(|col| {
+        let mut spans = col.spans;
+        for ((name, detail), (start, dur, count)) in col.agg {
+            spans.push(Span { name, detail, start_ns: start, dur_ns: dur, count });
+        }
+        spans.sort_by_key(|s| s.start_ns);
+        SpanBatch { worker_id: col.worker_id, ctx: col.ctx, spans }
+    })
+}
+
+/// True when the current thread is recording a task (instrumentation's
+/// fast-path check).
+pub fn task_active() -> bool {
+    COLLECTOR.with(|c| c.borrow().is_some())
+}
+
+/// Push an already-measured span onto the current collector (used where
+/// start/end are measured outside a closure). No-op when not recording.
+pub fn record(name: &str, detail: &str, start_ns: u64, dur_ns: u64) {
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            col.spans.push(Span {
+                name: name.to_string(),
+                detail: detail.to_string(),
+                start_ns,
+                dur_ns,
+                count: 1,
+            });
+        }
+    });
+}
+
+/// Time `f` as one named span on the current task. Zero-allocation
+/// pass-through when not recording.
+pub fn span<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    span_detail(name, "", f)
+}
+
+/// [`span`] with a qualifier (peer address, op name, …).
+pub fn span_detail<T>(name: &str, detail: &str, f: impl FnOnce() -> T) -> T {
+    if !task_active() {
+        return f();
+    }
+    let t0 = mono_nanos();
+    let out = f();
+    record(name, detail, t0, mono_nanos().saturating_sub(t0));
+    out
+}
+
+/// Time `f` into the per-`(name, detail)` accumulator — for stages that
+/// run once per frame/block, folded into a single span with a `count`
+/// so batches stay small no matter how many frames a slice replays.
+pub fn accum<T>(name: &str, f: impl FnOnce() -> T) -> T {
+    accum_detail(name, "", f)
+}
+
+/// [`accum`] with a qualifier.
+pub fn accum_detail<T>(name: &str, detail: &str, f: impl FnOnce() -> T) -> T {
+    if !task_active() {
+        return f();
+    }
+    let t0 = mono_nanos();
+    let out = f();
+    let dur = mono_nanos().saturating_sub(t0);
+    COLLECTOR.with(|c| {
+        if let Some(col) = c.borrow_mut().as_mut() {
+            let entry = col
+                .agg
+                .entry((name.to_string(), detail.to_string()))
+                .or_insert((t0, 0, 0));
+            entry.1 = entry.1.saturating_add(dur);
+            entry.2 += 1;
+        }
+    });
+    out
+}
+
+// ----------------------------------------------------------- TraceLog
+
+/// One merged timeline entry: a worker span (aligned onto the driver's
+/// clock) or a driver-side scheduling event.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceEvent {
+    /// Recording worker id; `None` for driver-side events.
+    pub worker: Option<u64>,
+    /// Stage/event name.
+    pub name: String,
+    /// Optional qualifier.
+    pub detail: String,
+    /// The task attempt (zeroed for job-level events).
+    pub ctx: TraceCtx,
+    /// Driver-clock start in nanoseconds (`util::mono_nanos`).
+    pub start_ns: u64,
+    /// Duration in nanoseconds.
+    pub dur_ns: u64,
+    /// Folded observation count (1 for plain spans and events).
+    pub count: u64,
+}
+
+/// Aggregate time spent in one stage across a whole job — the
+/// per-stage summary surfaced in `JobReport`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct StageStat {
+    /// Stage name.
+    pub name: String,
+    /// Total recorded duration across all tasks.
+    pub total: Duration,
+    /// Total folded observation count.
+    pub count: u64,
+}
+
+/// Render a stage summary as indented text lines (biggest stage
+/// first) — what `--trace` prints under the job report.
+pub fn render_stages(stages: &[StageStat]) -> String {
+    let mut out = String::new();
+    for s in stages {
+        out.push_str(&format!(
+            "  {:<22} {:>10.3}ms  x{}\n",
+            s.name,
+            s.total.as_secs_f64() * 1e3,
+            s.count
+        ));
+    }
+    out
+}
+
+/// Driver-side merged trace: worker span batches (clock-aligned) plus
+/// driver scheduling events, exportable as Chrome `trace_event` JSON.
+#[derive(Default)]
+pub struct TraceLog {
+    events: Mutex<Vec<TraceEvent>>,
+}
+
+impl TraceLog {
+    /// An empty log behind an `Arc`, ready to [`install`].
+    pub fn new() -> Arc<TraceLog> {
+        Arc::new(TraceLog::default())
+    }
+
+    /// Record a driver-side event (submit, queue_wait, task_wall,
+    /// retry, speculate) on the driver's own clock.
+    pub fn driver_event(&self, name: &str, ctx: TraceCtx, start_ns: u64, dur_ns: u64) {
+        self.events.lock().unwrap().push(TraceEvent {
+            worker: None,
+            name: name.to_string(),
+            detail: String::new(),
+            ctx,
+            start_ns,
+            dur_ns,
+            count: 1,
+        });
+    }
+
+    /// Merge a worker span batch, shifting its recorder-clock
+    /// timestamps onto the driver's clock by `offset_ns` (the
+    /// handshake round-trip estimate; 0 for in-process workers).
+    pub fn absorb(&self, batch: &SpanBatch, offset_ns: i64) {
+        let mut events = self.events.lock().unwrap();
+        for s in &batch.spans {
+            let start = (s.start_ns as i64).saturating_add(offset_ns).max(0) as u64;
+            events.push(TraceEvent {
+                worker: Some(batch.worker_id),
+                name: s.name.clone(),
+                detail: s.detail.clone(),
+                ctx: batch.ctx,
+                start_ns: start,
+                dur_ns: s.dur_ns,
+                count: s.count,
+            });
+        }
+    }
+
+    /// Snapshot of every merged event (unordered).
+    pub fn events(&self) -> Vec<TraceEvent> {
+        self.events.lock().unwrap().clone()
+    }
+
+    /// Number of merged events so far.
+    pub fn len(&self) -> usize {
+        self.events.lock().unwrap().len()
+    }
+
+    /// True when nothing has been recorded.
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Per-stage totals for `job_id` (or every job when `None`),
+    /// biggest stage first — the `JobReport` summary.
+    pub fn stage_totals(&self, job_id: Option<u64>) -> Vec<StageStat> {
+        let mut agg: BTreeMap<String, (u64, u64)> = BTreeMap::new();
+        for e in self.events.lock().unwrap().iter() {
+            if job_id.is_some_and(|j| e.ctx.job_id != j) {
+                continue;
+            }
+            let entry = agg.entry(e.name.clone()).or_insert((0, 0));
+            entry.0 = entry.0.saturating_add(e.dur_ns);
+            entry.1 += e.count;
+        }
+        let mut stages: Vec<StageStat> = agg
+            .into_iter()
+            .map(|(name, (ns, count))| StageStat {
+                name,
+                total: Duration::from_nanos(ns),
+                count,
+            })
+            .collect();
+        stages.sort_by(|a, b| b.total.cmp(&a.total).then(a.name.cmp(&b.name)));
+        stages
+    }
+
+    /// Render the merged timeline as Chrome `trace_event` JSON
+    /// (load via `chrome://tracing` or <https://ui.perfetto.dev>).
+    /// Events are complete (`"ph":"X"`) with microsecond timestamps;
+    /// `pid` is the job id and `tid` lanes are workers (driver = 0).
+    pub fn chrome_json(&self) -> String {
+        let mut events = self.events();
+        events.sort_by_key(|e| (e.start_ns, e.dur_ns));
+        let mut out = String::from("{\"displayTimeUnit\":\"ms\",\"traceEvents\":[\n");
+        for (i, e) in events.iter().enumerate() {
+            if i > 0 {
+                out.push_str(",\n");
+            }
+            let tid = e.worker.map(|w| w.saturating_add(1)).unwrap_or(0);
+            let cat = if e.worker.is_some() { "worker" } else { "driver" };
+            out.push_str(&format!(
+                "{{\"name\":\"{}\",\"cat\":\"{}\",\"ph\":\"X\",\"ts\":{:.3},\"dur\":{:.3},\
+                 \"pid\":{},\"tid\":{},\"args\":{{\"task\":{},\"attempt\":{},\"count\":{}\
+                 {}{}}}}}",
+                json_escape(&e.name),
+                cat,
+                e.start_ns as f64 / 1e3,
+                e.dur_ns as f64 / 1e3,
+                e.ctx.job_id,
+                tid,
+                e.ctx.task_id,
+                e.ctx.attempt,
+                e.count,
+                if e.detail.is_empty() { "" } else { ",\"detail\":\"" },
+                if e.detail.is_empty() {
+                    String::new()
+                } else {
+                    format!("{}\"", json_escape(&e.detail))
+                },
+            ));
+        }
+        out.push_str("\n]}\n");
+        out
+    }
+
+    /// Write the Chrome JSON to `path`.
+    pub fn write_chrome(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.chrome_json()).map_err(|e| {
+            Error::Engine(format!("write trace {}: {e}", path.display()))
+        })
+    }
+}
+
+fn json_escape(s: &str) -> String {
+    let mut out = String::with_capacity(s.len());
+    for ch in s.chars() {
+        match ch {
+            '"' => out.push_str("\\\""),
+            '\\' => out.push_str("\\\\"),
+            '\n' => out.push_str("\\n"),
+            '\r' => out.push_str("\\r"),
+            '\t' => out.push_str("\\t"),
+            c if (c as u32) < 0x20 => out.push_str(&format!("\\u{:04x}", c as u32)),
+            c => out.push(c),
+        }
+    }
+    out
+}
+
+// -------------------------------------------------------- active sink
+
+fn active_slot() -> &'static Mutex<Option<Arc<TraceLog>>> {
+    static ACTIVE: OnceLock<Mutex<Option<Arc<TraceLog>>>> = OnceLock::new();
+    ACTIVE.get_or_init(|| Mutex::new(None))
+}
+
+/// Uninstalls the active [`TraceLog`] when dropped (see [`install`]).
+pub struct TraceGuard(());
+
+impl Drop for TraceGuard {
+    fn drop(&mut self) {
+        *active_slot().lock().unwrap() = None;
+    }
+}
+
+/// Install `log` as the process's active trace sink: feeders start
+/// dispatching traced tasks and schedulers start recording driver
+/// events into it. Returns a guard that uninstalls on drop. Installing
+/// while another log is active replaces it (last caller wins) — runs
+/// that trace concurrently should share one log.
+pub fn install(log: Arc<TraceLog>) -> TraceGuard {
+    *active_slot().lock().unwrap() = Some(log);
+    TraceGuard(())
+}
+
+/// The active sink, if tracing is on.
+pub fn active() -> Option<Arc<TraceLog>> {
+    active_slot().lock().unwrap().clone()
+}
+
+/// True when a trace sink is installed (the dispatch-path check).
+pub fn enabled() -> bool {
+    active_slot().lock().unwrap().is_some()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn sample_batch() -> SpanBatch {
+        SpanBatch {
+            worker_id: 3,
+            ctx: TraceCtx { job_id: 0xBA95, task_id: 17, attempt: 1 },
+            spans: vec![
+                Span {
+                    name: "block_fetch".into(),
+                    detail: "127.0.0.1:7200".into(),
+                    start_ns: 1_000,
+                    dur_ns: 250,
+                    count: 4,
+                },
+                Span {
+                    name: "icp".into(),
+                    detail: String::new(),
+                    start_ns: 2_000,
+                    dur_ns: 9_999,
+                    count: 12,
+                },
+            ],
+        }
+    }
+
+    #[test]
+    fn span_batch_roundtrips() {
+        let b = sample_batch();
+        assert_eq!(SpanBatch::decode(&b.encode()).unwrap(), b);
+        let empty = SpanBatch {
+            worker_id: u64::MAX,
+            ctx: TraceCtx::default(),
+            spans: vec![],
+        };
+        assert_eq!(SpanBatch::decode(&empty.encode()).unwrap(), empty);
+    }
+
+    #[test]
+    fn span_batch_decode_rejects_bad_inputs() {
+        let full = sample_batch().encode();
+        for cut in 1..full.len() {
+            assert!(
+                SpanBatch::decode(&full[..cut]).is_err(),
+                "decode accepted truncation at {cut}/{}",
+                full.len()
+            );
+        }
+        let mut wrong = full.clone();
+        wrong[0] = SPAN_BATCH_VERSION + 1;
+        assert!(SpanBatch::decode(&wrong).is_err());
+        let mut trailing = full;
+        trailing.push(0);
+        assert!(SpanBatch::decode(&trailing).is_err());
+    }
+
+    #[test]
+    fn collector_records_spans_and_accumulates() {
+        let ctx = TraceCtx { job_id: 9, task_id: 2, attempt: 0 };
+        begin_task(7, ctx);
+        assert!(task_active());
+        span("decode", || std::thread::sleep(Duration::from_millis(1)));
+        for _ in 0..5 {
+            accum("classify", || {});
+        }
+        accum_detail("block_fetch", "peer-a", || {});
+        accum_detail("block_fetch", "peer-b", || {});
+        let batch = end_task().expect("batch");
+        assert!(!task_active());
+        assert_eq!(batch.worker_id, 7);
+        assert_eq!(batch.ctx, ctx);
+        let find = |n: &str, d: &str| {
+            batch
+                .spans
+                .iter()
+                .find(|s| s.name == n && s.detail == d)
+                .unwrap_or_else(|| panic!("missing span {n}/{d}: {:?}", batch.spans))
+                .clone()
+        };
+        assert!(find("decode", "").dur_ns >= 1_000_000);
+        assert_eq!(find("classify", "").count, 5);
+        assert_eq!(find("block_fetch", "peer-a").count, 1);
+        assert_eq!(find("block_fetch", "peer-b").count, 1);
+        // second end_task is a no-op
+        assert!(end_task().is_none());
+        // spans outside a task are dropped, not panicking
+        span("orphan", || {});
+    }
+
+    #[test]
+    fn trace_log_merges_aligns_and_summarizes() {
+        let log = TraceLog::new();
+        let ctx = TraceCtx { job_id: 5, task_id: 0, attempt: 0 };
+        log.driver_event("queue_wait", ctx, 100, 50);
+        let batch = SpanBatch {
+            worker_id: 1,
+            ctx,
+            spans: vec![Span {
+                name: "icp".into(),
+                detail: String::new(),
+                start_ns: 1_000,
+                dur_ns: 300,
+                count: 3,
+            }],
+        };
+        // worker clock runs 1000ns behind the driver: offset +1000
+        log.absorb(&batch, 1_000);
+        // an unrelated job the summary must filter out
+        log.driver_event("queue_wait", TraceCtx { job_id: 6, ..ctx }, 0, 999_999);
+        let events = log.events();
+        let icp = events.iter().find(|e| e.name == "icp").unwrap();
+        assert_eq!(icp.start_ns, 2_000, "offset must shift worker spans");
+        assert_eq!(icp.worker, Some(1));
+        let stages = log.stage_totals(Some(5));
+        assert_eq!(stages.len(), 2);
+        let icp_stage = stages.iter().find(|s| s.name == "icp").unwrap();
+        assert_eq!(icp_stage.total, Duration::from_nanos(300));
+        assert_eq!(icp_stage.count, 3);
+        assert!(!render_stages(&stages).is_empty());
+        // negative offsets clamp at zero instead of wrapping
+        let log2 = TraceLog::new();
+        log2.absorb(&batch, -2_000_000);
+        assert_eq!(log2.events()[0].start_ns, 0);
+    }
+
+    #[test]
+    fn chrome_json_is_well_formed() {
+        let log = TraceLog::new();
+        let ctx = TraceCtx { job_id: 1, task_id: 3, attempt: 0 };
+        log.driver_event("submit", ctx, 10, 0);
+        log.absorb(
+            &SpanBatch {
+                worker_id: 0,
+                ctx,
+                spans: vec![Span {
+                    name: "op:\"quoted\"".into(),
+                    detail: "a\\b".into(),
+                    start_ns: 500,
+                    dur_ns: 100,
+                    count: 1,
+                }],
+            },
+            0,
+        );
+        let json = log.chrome_json();
+        assert!(json.starts_with('{') && json.trim_end().ends_with('}'));
+        assert!(json.contains("\"traceEvents\""));
+        assert!(json.contains("\"ph\":\"X\""));
+        assert!(json.contains("op:\\\"quoted\\\""), "escaping: {json}");
+        assert!(json.contains("a\\\\b"), "escaping: {json}");
+        // driver lane 0, worker 0 lane 1
+        assert!(json.contains("\"tid\":0"));
+        assert!(json.contains("\"tid\":1"));
+        // balanced braces/brackets — cheap well-formedness proxy
+        let (mut braces, mut brackets, mut in_str, mut esc) = (0i64, 0i64, false, false);
+        for ch in json.chars() {
+            if esc {
+                esc = false;
+                continue;
+            }
+            match ch {
+                '\\' if in_str => esc = true,
+                '"' => in_str = !in_str,
+                '{' if !in_str => braces += 1,
+                '}' if !in_str => braces -= 1,
+                '[' if !in_str => brackets += 1,
+                ']' if !in_str => brackets -= 1,
+                _ => {}
+            }
+        }
+        assert_eq!((braces, brackets, in_str), (0, 0, false), "unbalanced JSON");
+    }
+
+    #[test]
+    fn install_guard_scopes_the_active_sink() {
+        // serialized with other sink users via the global-lock pattern:
+        // this test is the only unit test here touching the global slot
+        let log = TraceLog::new();
+        {
+            let _guard = install(Arc::clone(&log));
+            assert!(enabled());
+            assert!(active().is_some());
+        }
+        assert!(!enabled(), "guard drop must uninstall");
+        assert!(active().is_none());
+    }
+}

@@ -20,7 +20,10 @@ use super::fault::{FaultPlan, FAULT_TAG};
 use super::ops::{OpRegistry, TaskCtx};
 use super::plan::{TaskOutput, TaskSpec};
 use super::rpc::{read_msg, write_msg, RpcMsg, RPC_VERSION};
+use super::trace::{self, SpanBatch, TraceCtx};
 use crate::error::{Error, Result};
+use crate::metrics::{Metrics, MetricsSnapshot};
+use crate::util::mono_nanos;
 use std::net::{TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
@@ -115,6 +118,8 @@ pub fn serve_with_faults(
     }
     let gate = Arc::new(Gate { active: Mutex::new(0), freed: Condvar::new() });
     let mut handles: Vec<std::thread::JoinHandle<()>> = Vec::new();
+    // telemetry: slot occupancy for `av-simd top`
+    Metrics::global().gauge("worker_slots_total").set(slots as u64);
 
     for conn in listener.incoming() {
         if shutdown.load(Ordering::SeqCst) {
@@ -129,6 +134,7 @@ pub fn serve_with_faults(
                 active = gate.freed.wait(active).unwrap();
             }
             *active += 1;
+            Metrics::global().gauge("worker_slots_busy").set(*active as u64);
         }
         let ctx = ctx.clone();
         let registry = registry.clone();
@@ -148,6 +154,7 @@ pub fn serve_with_faults(
                     {
                         let mut active = gate.active.lock().unwrap();
                         *active -= 1;
+                        Metrics::global().gauge("worker_slots_busy").set(*active as u64);
                     }
                     gate.freed.notify_one();
                     match result {
@@ -206,22 +213,66 @@ fn serve_connection(
             Some(RpcMsg::Ping) => write_msg(&mut writer, &RpcMsg::Pong)?,
             Some(RpcMsg::Hello { version: _ }) => {
                 // The worker always reports its own version; rejecting a
-                // mismatch is the driver's call (it owns the fleet).
+                // mismatch is the driver's call (it owns the fleet). The
+                // monotonic clock sample is the trace-alignment anchor.
                 write_msg(
                     &mut writer,
                     &RpcMsg::HelloOk {
                         version: RPC_VERSION,
                         worker_id: ctx.worker_id as u64,
+                        now_ns: mono_nanos(),
                     },
                 )?
             }
             Some(RpcMsg::Shutdown) => return Ok(ShutdownKind::Graceful),
-            Some(RpcMsg::RunTask(spec_bytes)) => {
-                let reply = match TaskSpec::decode(&spec_bytes)
-                    .and_then(|spec| executor::run_task(ctx, registry, &spec))
+            Some(RpcMsg::FetchStats) => {
+                // telemetry snapshot: refresh the data-plane gauges from
+                // this worker's shared cache, then ship the registry
+                let m = Metrics::global();
+                let (hits, misses, _) = ctx.data.cache().stats();
+                m.gauge("worker_cache_hits").set(hits);
+                m.gauge("worker_cache_misses").set(misses);
+                m.gauge("worker_cache_bytes").set(ctx.data.cache().used_bytes());
+                write_msg(&mut writer, &RpcMsg::StatsData(m.snapshot().encode()))?;
+            }
+            Some(msg @ (RpcMsg::RunTask(_) | RpcMsg::RunTaskTraced(_))) => {
+                let traced = matches!(msg, RpcMsg::RunTaskTraced(_));
+                let spec_bytes = match msg {
+                    RpcMsg::RunTask(b) | RpcMsg::RunTaskTraced(b) => b,
+                    _ => unreachable!(),
+                };
+                let t0 = mono_nanos();
+                let decoded = TaskSpec::decode(&spec_bytes);
+                if traced {
+                    if let Ok(spec) = &decoded {
+                        trace::begin_task(
+                            ctx.worker_id as u64,
+                            TraceCtx {
+                                job_id: spec.job_id,
+                                task_id: spec.task_id,
+                                attempt: spec.attempt,
+                            },
+                        );
+                    }
+                }
+                let reply = match decoded.and_then(|spec| executor::run_task(ctx, registry, &spec))
                 {
-                    Ok(out) => RpcMsg::TaskOk(out.encode()),
-                    Err(e) => RpcMsg::TaskErr(e.to_string()),
+                    Ok(out) => {
+                        Metrics::global().counter("worker_tasks_done").inc();
+                        RpcMsg::TaskOk(trace::span("reply_serialize", || out.encode()))
+                    }
+                    Err(e) => {
+                        Metrics::global().counter("worker_tasks_failed").inc();
+                        RpcMsg::TaskErr(e.to_string())
+                    }
+                };
+                let batch = if traced {
+                    // the top-level span: everything from spec decode
+                    // through reply serialization on this worker
+                    trace::record("task", "", t0, mono_nanos().saturating_sub(t0));
+                    trace::end_task()
+                } else {
+                    None
                 };
                 if faults.connection_should_drop() {
                     // injected wire cut: the computed reply is never
@@ -232,6 +283,11 @@ fn serve_connection(
                         ctx.worker_id
                     );
                     return Ok(ShutdownKind::Disconnect);
+                }
+                if let Some(batch) = batch {
+                    // span batch rides ahead of the reply, exactly like a
+                    // BlockAd — the driver stashes it while matching FIFO
+                    write_msg(&mut writer, &RpcMsg::TaskTrace(batch.encode()))?;
                 }
                 if let Some(peer) = block_peer {
                     let resident: Vec<[u8; 32]> =
@@ -270,6 +326,14 @@ pub struct WorkerClient {
     /// Swarm cache advertisements the worker piggybacked on task
     /// replies, pending pickup via [`WorkerClient::take_advertisements`].
     ads: Vec<(String, Vec<[u8; 32]>)>,
+    /// Span batches the worker piggybacked on traced task replies,
+    /// pending pickup via [`WorkerClient::take_trace_batches`].
+    traces: Vec<SpanBatch>,
+    /// Estimated offset (ns) that shifts this worker's monotonic clock
+    /// onto the driver's: `driver_mono ≈ worker_mono + offset`.
+    /// Estimated from the `Hello` round trip (midpoint method) at
+    /// connect; 0 until a handshake has completed.
+    pub clock_offset_ns: i64,
 }
 
 impl WorkerClient {
@@ -305,6 +369,8 @@ impl WorkerClient {
                         addr: addr.to_string(),
                         worker_id: 0,
                         ads: Vec::new(),
+                        traces: Vec::new(),
+                        clock_offset_ns: 0,
                     };
                     // verify liveness + protocol version
                     c.worker_id = c.handshake().map_err(|e| match e {
@@ -346,11 +412,17 @@ impl WorkerClient {
     /// [`RpcMsg::HelloOk`]. Returns the worker's reported id. This is
     /// the deploy layer's health check — a worker that answers with a
     /// different [`RPC_VERSION`] is rejected with an error naming the
-    /// endpoint and both versions.
+    /// endpoint and both versions. As a side effect the round trip
+    /// estimates [`WorkerClient::clock_offset_ns`]: the worker's
+    /// `now_ns` is assumed to have been read at the midpoint of the
+    /// driver-observed exchange, the classic NTP-style estimate (good
+    /// to half the round-trip time, microseconds on a LAN).
     pub fn handshake(&mut self) -> Result<u64> {
+        let t0 = mono_nanos();
         write_msg(&mut self.writer, &RpcMsg::Hello { version: RPC_VERSION })?;
         match read_msg(&mut self.reader)? {
-            Some(RpcMsg::HelloOk { version, worker_id }) => {
+            Some(RpcMsg::HelloOk { version, worker_id, now_ns }) => {
+                let t1 = mono_nanos();
                 if version != RPC_VERSION {
                     return Err(Error::Engine(format!(
                         "worker at {} speaks rpc v{version} but this driver needs \
@@ -358,6 +430,8 @@ impl WorkerClient {
                         self.addr
                     )));
                 }
+                let midpoint = t0 + (t1.saturating_sub(t0)) / 2;
+                self.clock_offset_ns = midpoint as i64 - now_ns as i64;
                 Ok(worker_id)
             }
             None => Err(Error::Engine(format!(
@@ -383,13 +457,28 @@ impl WorkerClient {
     /// [`WorkerClient::send_task`] with a pre-encoded spec (callers that
     /// size-check the frame before dispatch avoid encoding twice).
     pub fn send_task_encoded(&mut self, encoded_spec: Vec<u8>) -> Result<()> {
-        write_msg(&mut self.writer, &RpcMsg::RunTask(encoded_spec))
+        self.send_task_encoded_traced(encoded_spec, false)
+    }
+
+    /// [`WorkerClient::send_task_encoded`], optionally requesting
+    /// per-stage tracing: when `traced` the task rides in a
+    /// [`RpcMsg::RunTaskTraced`] frame and the worker piggybacks a
+    /// [`RpcMsg::TaskTrace`] span batch ahead of the reply (drained via
+    /// [`WorkerClient::take_trace_batches`]).
+    pub fn send_task_encoded_traced(&mut self, encoded_spec: Vec<u8>, traced: bool) -> Result<()> {
+        let msg = if traced {
+            RpcMsg::RunTaskTraced(encoded_spec)
+        } else {
+            RpcMsg::RunTask(encoded_spec)
+        };
+        write_msg(&mut self.writer, &msg)
     }
 
     /// Receive the reply for the oldest outstanding [`WorkerClient::send_task`].
     /// `task_id` is only used to label errors. Swarm [`RpcMsg::BlockAd`]
-    /// frames interleaved ahead of the reply are stashed for
-    /// [`WorkerClient::take_advertisements`], not surfaced as errors.
+    /// and [`RpcMsg::TaskTrace`] frames interleaved ahead of the reply
+    /// are stashed for [`WorkerClient::take_advertisements`] /
+    /// [`WorkerClient::take_trace_batches`], not surfaced as errors.
     pub fn recv_reply(&mut self, task_id: u32) -> Result<TaskOutput> {
         loop {
             match read_msg(&mut self.reader)? {
@@ -402,6 +491,10 @@ impl WorkerClient {
                 Some(RpcMsg::BlockAd { peer, manifests }) => {
                     self.ads.push((peer, manifests));
                 }
+                Some(RpcMsg::TaskTrace(bytes)) => match SpanBatch::decode(&bytes) {
+                    Ok(batch) => self.traces.push(batch),
+                    Err(e) => crate::logmsg!("warn", "dropping undecodable span batch: {e}"),
+                },
                 None => return Err(Error::Transport("worker hung up mid-task".into())),
                 other => return Err(Error::Engine(format!("unexpected reply {other:?}"))),
             }
@@ -413,6 +506,26 @@ impl WorkerClient {
     /// cache). Feeders forward these to the cluster's swarm registry.
     pub fn take_advertisements(&mut self) -> Vec<(String, Vec<[u8; 32]>)> {
         std::mem::take(&mut self.ads)
+    }
+
+    /// Drain span batches received since the last call. Timestamps are
+    /// still on the worker's monotonic clock — shift by
+    /// [`WorkerClient::clock_offset_ns`] when merging into a driver-side
+    /// [`super::trace::TraceLog`].
+    pub fn take_trace_batches(&mut self) -> Vec<SpanBatch> {
+        std::mem::take(&mut self.traces)
+    }
+
+    /// Fetch the worker's live metrics snapshot (the `av-simd top` /
+    /// `deploy --probe --stats` data source). Must not be interleaved
+    /// with outstanding pipelined tasks — replies are strictly FIFO.
+    pub fn fetch_stats(&mut self) -> Result<MetricsSnapshot> {
+        write_msg(&mut self.writer, &RpcMsg::FetchStats)?;
+        match read_msg(&mut self.reader)? {
+            Some(RpcMsg::StatsData(bytes)) => MetricsSnapshot::decode(&bytes),
+            None => Err(Error::Transport("worker hung up during stats fetch".into())),
+            other => Err(Error::Engine(format!("expected StatsData, got {other:?}"))),
+        }
     }
 
     /// Run one task to completion on this worker (send + wait).
@@ -597,7 +710,7 @@ mod tests {
             match read_msg(&mut reader).unwrap() {
                 Some(RpcMsg::Hello { .. }) => write_msg(
                     &mut writer,
-                    &RpcMsg::HelloOk { version: RPC_VERSION + 1, worker_id: 9 },
+                    &RpcMsg::HelloOk { version: RPC_VERSION + 1, worker_id: 9, now_ns: 0 },
                 )
                 .unwrap(),
                 other => panic!("expected Hello, got {other:?}"),

@@ -21,9 +21,17 @@
 //!   cluster: mutate scenario/controller values, shrink every failure
 //!   to a minimal counterexample, publish a regression corpus;
 //!   `--replay-corpus` re-executes a published corpus instead.
+//! * `top --cluster-spec FILE [--watch SECS]` — live fleet telemetry:
+//!   per-worker task counts, cache hit rates, bytes served, slots.
 //! * `gc --store-root DIR [--keep ID,..]` — sweep a block store,
 //!   deleting content-addressed objects not in the live set.
 //! * `info` — registries, artifacts, config.
+//!
+//! `sweep`, `replay`, and `fuzz` accept `--trace FILE`: record
+//! per-stage spans across the fleet and export a Chrome `trace_event`
+//! JSON timeline (load via `chrome://tracing` or ui.perfetto.dev).
+//! Tracing is observability-only — report bytes are identical with it
+//! on or off.
 
 use av_simd::cli::Args;
 use av_simd::config::{ClusterMode, PlatformConfig};
@@ -55,6 +63,7 @@ fn run(raw: &[String]) -> Result<()> {
         "sweep" => cmd_sweep(&args),
         "replay" => cmd_replay(&args),
         "fuzz" => cmd_fuzz(&args),
+        "top" => cmd_top(&args),
         "gc" => cmd_gc(&args),
         "info" => cmd_info(&args),
         "" | "help" => {
@@ -76,9 +85,10 @@ USAGE: av-simd <command> [flags]
 COMMANDS:
   worker      --listen ADDR --id N [--slots S] [--artifacts DIR]
               serve tasks over TCP (S concurrent task slots, default 1)
-  deploy      --spec FILE [--launch]                   health-check (and
+  deploy      --spec FILE [--launch] [--stats]         health-check (and
               optionally launch) a multi-host fleet from a ClusterSpec
-              manifest (TOML or JSON; see docs/OPERATIONS.md)
+              manifest (TOML or JSON; see docs/OPERATIONS.md); --stats
+              also fetches each worker's live telemetry snapshot
   user-logic  NAME                                     BinPipedRDD child mode
   datagen     --dir D [--bags N] [--frames F] [--size PX] [--seed S]
   perceive    --dir D [--workers N] [--standalone] [--base-port P]
@@ -124,9 +134,18 @@ COMMANDS:
               seeds the schedule with the known side-cut-in failure;
               --checkpoint/--resume make campaigns crash-resumable
               (docs/OPERATIONS.md)
+  top         --cluster-spec FILE [--watch SECS]       live fleet
+              telemetry: per-worker tasks done/failed, cache hit rate,
+              block bytes served, slot occupancy; --watch re-renders
+              every SECS seconds until interrupted
   gc          --store-root DIR [--keep ID,ID,..]       delete manifests
               not in the live set and every block only they referenced
   info        [--artifacts DIR]
+
+  sweep/replay/fuzz also accept --trace FILE: record per-stage spans
+  (queue wait, block fetch, chunk decode, perception phases, op
+  execution) across the fleet and write a Chrome trace_event JSON
+  timeline, plus a per-stage summary after the report
 ";
 
 /// Build the execution cluster shared by `sweep`/`replay`/`fuzz`:
@@ -192,6 +211,62 @@ fn checkpoint_config(
     Ok(cfg)
 }
 
+/// Stage-span collection for one CLI job: created by [`trace_session`]
+/// when `--trace FILE` is present, holding the shared [`TraceLog`] and
+/// the guard that keeps it installed as the process-wide sink while the
+/// job runs.
+struct TraceSession {
+    log: std::sync::Arc<av_simd::engine::TraceLog>,
+    _guard: av_simd::engine::trace::TraceGuard,
+    path: String,
+}
+
+/// Install a process-wide trace sink if `--trace FILE` was passed.
+/// Must be called before the job runs and kept alive until
+/// [`trace_finish`]; dropping the session uninstalls the sink.
+fn trace_session(args: &Args) -> Option<TraceSession> {
+    let path = args.get("trace")?.to_string();
+    let log = av_simd::engine::TraceLog::new();
+    let guard = av_simd::engine::trace::install(log.clone());
+    Some(TraceSession { log, _guard: guard, path })
+}
+
+/// Write the Chrome `trace_event` JSON and print the per-stage summary,
+/// then uninstall the sink. A `None` session (no `--trace`) is a no-op.
+fn trace_finish(session: Option<TraceSession>) -> Result<()> {
+    let Some(s) = session else { return Ok(()) };
+    s.log.write_chrome(std::path::Path::new(&s.path))?;
+    print!(
+        "{}",
+        av_simd::engine::trace::render_stages(&s.log.stage_totals(None))
+    );
+    println!("trace: {} event(s) written to {}", s.log.len(), s.path);
+    Ok(())
+}
+
+fn cmd_top(args: &Args) -> Result<()> {
+    use av_simd::engine::deploy;
+
+    let path = args.require("cluster-spec")?;
+    let spec = deploy::ClusterSpec::load(std::path::Path::new(path))?;
+    let watch = args.get_u64("watch", 0)?;
+    loop {
+        println!(
+            "cluster '{}' — {} worker endpoint(s)",
+            spec.name,
+            spec.workers.len()
+        );
+        let stats = deploy::probe_stats(&spec);
+        print!("{}", deploy::render_stats(&stats));
+        if watch == 0 {
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_secs(watch.max(1)));
+        println!();
+    }
+    Ok(())
+}
+
 fn cmd_deploy(args: &Args) -> Result<()> {
     use av_simd::engine::deploy;
 
@@ -239,6 +314,10 @@ fn cmd_deploy(args: &Args) -> Result<()> {
         ));
     }
     println!("all {} worker(s) healthy", health.len());
+    if args.has("stats") {
+        let stats = deploy::probe_stats(&spec);
+        print!("{}", deploy::render_stats(&stats));
+    }
     Ok(())
 }
 
@@ -457,6 +536,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
     };
 
     let (cluster, cluster_spec) = make_cluster(args)?;
+    let trace = trace_session(args);
     let driver = SweepDriver::new(spec);
     println!(
         "sweep: {} cases in {} shards on {} {} workers",
@@ -476,6 +556,7 @@ fn cmd_sweep(args: &Args) -> Result<()> {
         None => driver.run(cluster.as_ref())?,
     };
     print!("{}", report.render());
+    trace_finish(trace)?;
     if let Some(dir) = args.get("record-worst") {
         let paths = driver.record_worst(&report, dir)?;
         for p in paths {
@@ -522,6 +603,7 @@ fn cmd_replay(args: &Args) -> Result<()> {
 
     let artifacts = args.get_or("artifacts", "artifacts");
     let (cluster, cluster_spec) = make_cluster(args)?;
+    let trace = trace_session(args);
 
     // speculation: CLI flags, else the cluster spec's [speculation]
     // section; the CLI fully overrides the manifest when any flag is set
@@ -604,6 +686,9 @@ fn cmd_replay(args: &Args) -> Result<()> {
         None => driver.run_planned(cluster.as_ref(), &index, &slices)?,
     };
     print!("{}", report.render());
+    // finish (and uninstall) the trace before --verify: the reference
+    // execution is a correctness check, not part of the job timeline
+    trace_finish(trace)?;
     if args.has("verify") {
         let reference = driver.reference(artifacts)?;
         if reference.encode() == report.encode() {
@@ -626,6 +711,7 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
     use av_simd::sim::fuzz::{FuzzDriver, FuzzSpec};
 
     let (cluster, cluster_spec) = make_cluster(args)?;
+    let trace = trace_session(args);
 
     // --replay-corpus: re-execute a published regression corpus and
     // cross-check every verdict against the recorded one, byte-for-byte
@@ -639,6 +725,7 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
             })?;
         let report = av_simd::sim::run_corpus_replay(cluster.as_ref(), &store_root)?;
         print!("{}", report.render());
+        trace_finish(trace)?;
         cluster.shutdown();
         if report.mismatches() > 0 {
             return Err(av_simd::err!(
@@ -696,6 +783,7 @@ fn cmd_fuzz(args: &Args) -> Result<()> {
         None => driver.run(cluster.as_ref())?,
     };
     print!("{}", report.render());
+    trace_finish(trace)?;
     if let Some(store_root) = args.get("store-root") {
         let ids = driver.publish_corpus(&report, store_root)?;
         println!(

@@ -1,6 +1,15 @@
-//! Lightweight process metrics: named counters and duration histograms,
-//! rendered as a text report (the platform's `/metrics` analogue).
+//! Lightweight process metrics: named counters, gauges and duration
+//! histograms, rendered as Prometheus-style text exposition (the
+//! platform's `/metrics` analogue) and snapshottable into a versioned
+//! wire form served over the `FetchStats` RPC.
+//!
+//! [`Metrics::report`] is the scrape surface: one deterministic text
+//! block per call, rendered from a point-in-time [`MetricsSnapshot`]
+//! taken under a single lock pass per registry — concurrent mutators
+//! can never tear a line or reorder the output.
 
+use crate::error::{Error, Result};
+use crate::util::bytes::{ByteReader, ByteWriter};
 use std::collections::BTreeMap;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Mutex, OnceLock};
@@ -37,16 +46,32 @@ impl Gauge {
         self.0.store(v, Ordering::Relaxed);
     }
 
+    /// Add `n` (occupancy-style gauges).
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    /// Subtract `n`, saturating at zero.
+    pub fn sub(&self, n: u64) {
+        let _ = self
+            .0
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |v| Some(v.saturating_sub(n)));
+    }
+
     /// Current value.
     pub fn get(&self) -> u64 {
         self.0.load(Ordering::Relaxed)
     }
 }
 
-/// Fixed-bucket log-scale duration histogram (µs .. minutes).
+/// Number of log10 buckets in a [`Histogram`] (1µs … 100s+).
+pub const HIST_BUCKETS: usize = 9;
+
+/// Fixed-bucket log-scale duration histogram (µs .. minutes). Bucket
+/// `i` counts observations in `[10^i, 10^(i+1))` µs; bucket 0 also
+/// absorbs sub-microsecond durations and bucket 8 is unbounded above.
 pub struct Histogram {
-    /// bucket i counts durations < 10^(i) µs … simple log10 buckets.
-    buckets: [AtomicU64; 9],
+    buckets: [AtomicU64; HIST_BUCKETS],
     total_nanos: AtomicU64,
     count: AtomicU64,
 }
@@ -62,12 +87,27 @@ impl Default for Histogram {
 }
 
 impl Histogram {
-    /// Record one duration.
+    /// Record one duration. Sub-microsecond observations clamp into
+    /// bucket 0 and the nanosecond sum saturates instead of truncating
+    /// or wrapping, so pathological durations pin the sum at `u64::MAX`
+    /// rather than corrupting it.
     pub fn observe(&self, d: Duration) {
-        let us = d.as_micros().max(1) as f64;
-        let bucket = (us.log10().floor() as usize).min(8);
+        let nanos = u64::try_from(d.as_nanos()).unwrap_or(u64::MAX);
+        let us = (nanos / 1_000).max(1);
+        // integer log10, clamped to the bucket range (no float rounding
+        // at bucket edges, no negative log for sub-µs durations)
+        let mut bucket = 0usize;
+        let mut bound = 10u64;
+        while bucket < HIST_BUCKETS - 1 && us >= bound {
+            bucket += 1;
+            bound = bound.saturating_mul(10);
+        }
         self.buckets[bucket].fetch_add(1, Ordering::Relaxed);
-        self.total_nanos.fetch_add(d.as_nanos() as u64, Ordering::Relaxed);
+        let _ = self
+            .total_nanos
+            .fetch_update(Ordering::Relaxed, Ordering::Relaxed, |t| {
+                Some(t.saturating_add(nanos))
+            });
         self.count.fetch_add(1, Ordering::Relaxed);
     }
 
@@ -76,13 +116,251 @@ impl Histogram {
         self.count.load(Ordering::Relaxed)
     }
 
+    /// Total observed nanoseconds (saturating).
+    pub fn sum_nanos(&self) -> u64 {
+        self.total_nanos.load(Ordering::Relaxed)
+    }
+
+    /// Per-bucket observation counts (see the type docs for bounds).
+    pub fn bucket_counts(&self) -> [u64; HIST_BUCKETS] {
+        let mut out = [0u64; HIST_BUCKETS];
+        for (o, b) in out.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+
     /// Mean observed duration.
     pub fn mean(&self) -> Duration {
         let c = self.count();
         if c == 0 {
             return Duration::ZERO;
         }
-        Duration::from_nanos(self.total_nanos.load(Ordering::Relaxed) / c)
+        Duration::from_nanos(self.sum_nanos() / c)
+    }
+
+    /// Estimate the `q`-quantile (`0.0..=1.0`) by locating the bucket
+    /// holding the nearest-rank observation and interpolating linearly
+    /// inside its `[10^i, 10^(i+1))` µs range. An estimate, not an
+    /// exact order statistic — good to within one decade by
+    /// construction.
+    pub fn quantile(&self, q: f64) -> Duration {
+        quantile_of(&self.bucket_counts(), q)
+    }
+
+    /// Median estimate (see [`Histogram::quantile`]).
+    pub fn p50(&self) -> Duration {
+        self.quantile(0.50)
+    }
+
+    /// 95th-percentile estimate.
+    pub fn p95(&self) -> Duration {
+        self.quantile(0.95)
+    }
+
+    /// 99th-percentile estimate.
+    pub fn p99(&self) -> Duration {
+        self.quantile(0.99)
+    }
+}
+
+/// Quantile estimate over raw log10-µs bucket counts (shared by live
+/// [`Histogram`]s and decoded [`HistogramSnapshot`]s).
+pub fn quantile_of(counts: &[u64; HIST_BUCKETS], q: f64) -> Duration {
+    let total: u64 = counts.iter().sum();
+    if total == 0 {
+        return Duration::ZERO;
+    }
+    let q = q.clamp(0.0, 1.0);
+    let rank = ((q * total as f64).ceil() as u64).max(1);
+    let mut seen = 0u64;
+    for (i, &c) in counts.iter().enumerate() {
+        if c == 0 {
+            continue;
+        }
+        if seen + c >= rank {
+            let lo_us = if i == 0 { 0 } else { 10u64.pow(i as u32) };
+            let hi_us = 10u64.pow(i as u32 + 1);
+            let frac = (rank - seen) as f64 / c as f64;
+            let est_us = lo_us as f64 + (hi_us - lo_us) as f64 * frac;
+            return Duration::from_nanos((est_us * 1_000.0) as u64);
+        }
+        seen += c;
+    }
+    Duration::ZERO
+}
+
+/// The `le=` label (in µs) for exposition bucket `i`: `10^(i+1)` for
+/// bounded buckets, `+Inf` for the last.
+fn bucket_le_label(i: usize) -> String {
+    if i == HIST_BUCKETS - 1 {
+        "+Inf".to_string()
+    } else {
+        format!("{}", 10u64.pow(i as u32 + 1))
+    }
+}
+
+/// Wire/version tag for [`MetricsSnapshot::encode`].
+pub const STATS_VERSION: u8 = 1;
+
+/// Point-in-time copy of one histogram's state.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct HistogramSnapshot {
+    /// Metric name.
+    pub name: String,
+    /// Raw (non-cumulative) log10-µs bucket counts.
+    pub buckets: [u64; HIST_BUCKETS],
+    /// Saturating total of observed nanoseconds.
+    pub sum_nanos: u64,
+    /// Observation count.
+    pub count: u64,
+}
+
+impl HistogramSnapshot {
+    /// Quantile estimate over the snapshotted buckets.
+    pub fn quantile(&self, q: f64) -> Duration {
+        quantile_of(&self.buckets, q)
+    }
+}
+
+/// Versioned point-in-time copy of a whole [`Metrics`] registry — the
+/// payload of the `StatsData` RPC frame and the source every
+/// [`Metrics::report`] renders from. Entries are sorted by name
+/// (`BTreeMap` order), so encoding is deterministic.
+#[derive(Debug, Clone, PartialEq, Eq, Default)]
+pub struct MetricsSnapshot {
+    /// Counter values by name.
+    pub counters: Vec<(String, u64)>,
+    /// Gauge values by name.
+    pub gauges: Vec<(String, u64)>,
+    /// Histogram states by name.
+    pub histograms: Vec<HistogramSnapshot>,
+}
+
+impl MetricsSnapshot {
+    /// Look up a counter by name (0 when absent — scrape-friendly).
+    pub fn counter(&self, name: &str) -> u64 {
+        self.counters
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Look up a gauge by name (0 when absent).
+    pub fn gauge(&self, name: &str) -> u64 {
+        self.gauges
+            .iter()
+            .find(|(n, _)| n == name)
+            .map(|(_, v)| *v)
+            .unwrap_or(0)
+    }
+
+    /// Serialize to the versioned `StatsData` wire form.
+    pub fn encode(&self) -> Vec<u8> {
+        let mut w = ByteWriter::new();
+        w.put_u8(STATS_VERSION);
+        w.put_varint(self.counters.len() as u64);
+        for (name, v) in &self.counters {
+            w.put_str(name);
+            w.put_varint(*v);
+        }
+        w.put_varint(self.gauges.len() as u64);
+        for (name, v) in &self.gauges {
+            w.put_str(name);
+            w.put_varint(*v);
+        }
+        w.put_varint(self.histograms.len() as u64);
+        for h in &self.histograms {
+            w.put_str(&h.name);
+            for b in &h.buckets {
+                w.put_varint(*b);
+            }
+            w.put_varint(h.sum_nanos);
+            w.put_varint(h.count);
+        }
+        w.into_vec()
+    }
+
+    /// Decode a `StatsData` payload; rejects unknown versions and any
+    /// truncated or trailing bytes.
+    pub fn decode(buf: &[u8]) -> Result<Self> {
+        let mut r = ByteReader::new(buf);
+        let ver = r.get_u8()?;
+        if ver != STATS_VERSION {
+            return Err(Error::Engine(format!(
+                "stats snapshot version {ver} unsupported (want {STATS_VERSION})"
+            )));
+        }
+        let mut out = MetricsSnapshot::default();
+        let nc = r.get_varint()? as usize;
+        for _ in 0..nc {
+            let name = r.get_str()?;
+            let v = r.get_varint()?;
+            out.counters.push((name, v));
+        }
+        let ng = r.get_varint()? as usize;
+        for _ in 0..ng {
+            let name = r.get_str()?;
+            let v = r.get_varint()?;
+            out.gauges.push((name, v));
+        }
+        let nh = r.get_varint()? as usize;
+        for _ in 0..nh {
+            let name = r.get_str()?;
+            let mut buckets = [0u64; HIST_BUCKETS];
+            for b in buckets.iter_mut() {
+                *b = r.get_varint()?;
+            }
+            let sum_nanos = r.get_varint()?;
+            let count = r.get_varint()?;
+            out.histograms.push(HistogramSnapshot { name, buckets, sum_nanos, count });
+        }
+        if !r.is_empty() {
+            return Err(Error::Engine(format!(
+                "stats snapshot has {} trailing bytes",
+                r.remaining()
+            )));
+        }
+        Ok(out)
+    }
+
+    /// Render as Prometheus-style text exposition: `name value` lines
+    /// for counters and gauges, and cumulative
+    /// `name_bucket{le="..."} / name_sum / name_count` lines (plus
+    /// `p50/p95/p99` estimate gauges) per histogram. `le` bounds are in
+    /// microseconds; `_sum` is in seconds.
+    pub fn render(&self) -> String {
+        let mut out = String::new();
+        for (name, v) in &self.counters {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for (name, v) in &self.gauges {
+            out.push_str(&format!("{name} {v}\n"));
+        }
+        for h in &self.histograms {
+            let name = &h.name;
+            let mut cum = 0u64;
+            for (i, b) in h.buckets.iter().enumerate() {
+                cum += b;
+                out.push_str(&format!(
+                    "{name}_bucket{{le=\"{}\"}} {cum}\n",
+                    bucket_le_label(i)
+                ));
+            }
+            out.push_str(&format!(
+                "{name}_sum {:.6}\n{name}_count {}\n",
+                h.sum_nanos as f64 / 1e9,
+                h.count
+            ));
+            for (q, label) in [(0.50, "p50"), (0.95, "p95"), (0.99, "p99")] {
+                out.push_str(&format!(
+                    "{name}_{label}_us {:.1}\n",
+                    h.quantile(q).as_secs_f64() * 1e6
+                ));
+            }
+        }
+        out
     }
 }
 
@@ -131,23 +409,45 @@ impl Metrics {
             .clone()
     }
 
-    /// Render all metrics as a text block.
+    /// Take a point-in-time snapshot: each registry is walked under one
+    /// lock hold with values read in the same pass, so the result is
+    /// internally consistent even while other threads mutate.
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let counters = self
+            .counters
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, c)| (n.clone(), c.get()))
+            .collect();
+        let gauges = self
+            .gauges
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, g)| (n.clone(), g.get()))
+            .collect();
+        let histograms = self
+            .histograms
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(n, h)| HistogramSnapshot {
+                name: n.clone(),
+                buckets: h.bucket_counts(),
+                sum_nanos: h.sum_nanos(),
+                count: h.count(),
+            })
+            .collect();
+        MetricsSnapshot { counters, gauges, histograms }
+    }
+
+    /// Render all metrics as Prometheus-style text exposition — the
+    /// scrape surface. Renders from one [`Metrics::snapshot`], so the
+    /// output is a deterministic point-in-time view (sorted by name)
+    /// no matter how hard other threads are mutating the registry.
     pub fn report(&self) -> String {
-        let mut out = String::new();
-        for (name, c) in self.counters.lock().unwrap().iter() {
-            out.push_str(&format!("{name} {}\n", c.get()));
-        }
-        for (name, g) in self.gauges.lock().unwrap().iter() {
-            out.push_str(&format!("{name} {}\n", g.get()));
-        }
-        for (name, h) in self.histograms.lock().unwrap().iter() {
-            out.push_str(&format!(
-                "{name}_count {}\n{name}_mean_us {:.1}\n",
-                h.count(),
-                h.mean().as_secs_f64() * 1e6
-            ));
-        }
-        out
+        self.snapshot().render()
     }
 }
 
@@ -187,6 +487,55 @@ mod tests {
     }
 
     #[test]
+    fn histogram_buckets_and_quantiles() {
+        let h = Histogram::default();
+        // 10 obs at ~5µs (bucket 0), 10 at ~50µs (bucket 1), 1 at ~5s
+        // (bucket 6: 10^6..10^7 µs)
+        for _ in 0..10 {
+            h.observe(Duration::from_micros(5));
+        }
+        for _ in 0..10 {
+            h.observe(Duration::from_micros(50));
+        }
+        h.observe(Duration::from_secs(5));
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 10);
+        assert_eq!(b[1], 10);
+        assert_eq!(b[6], 1);
+        assert_eq!(b.iter().sum::<u64>(), h.count());
+        // p50 lands in the first decade, p99 in the seconds decade
+        assert!(h.p50() < Duration::from_micros(10), "p50 {:?}", h.p50());
+        assert!(h.p99() >= Duration::from_secs(1), "p99 {:?}", h.p99());
+        assert!(h.p95() >= h.p50() && h.p99() >= h.p95(), "quantiles must be ordered");
+    }
+
+    #[test]
+    fn observe_clamps_sub_microsecond_durations() {
+        let h = Histogram::default();
+        h.observe(Duration::from_nanos(1));
+        h.observe(Duration::ZERO);
+        let b = h.bucket_counts();
+        assert_eq!(b[0], 2, "sub-µs observations clamp into bucket 0: {b:?}");
+        assert_eq!(h.count(), 2);
+        assert_eq!(h.sum_nanos(), 1);
+        assert!(h.p50() <= Duration::from_micros(10));
+    }
+
+    #[test]
+    fn observe_sum_saturates_instead_of_truncating() {
+        let h = Histogram::default();
+        // u128 nanos far past u64::MAX must pin the sum, not wrap it
+        h.observe(Duration::MAX);
+        assert_eq!(h.sum_nanos(), u64::MAX);
+        let before = h.sum_nanos();
+        h.observe(Duration::from_secs(1));
+        assert_eq!(h.sum_nanos(), before, "saturated sum must not wrap");
+        assert_eq!(h.count(), 2);
+        // the giant duration still lands in the top (unbounded) bucket
+        assert_eq!(h.bucket_counts()[HIST_BUCKETS - 1], 1);
+    }
+
+    #[test]
     fn report_renders_all_kinds() {
         let m = Metrics::default();
         m.counter("a").inc();
@@ -196,6 +545,12 @@ mod tests {
         assert!(r.contains("a 1"));
         assert!(r.contains("g 7"));
         assert!(r.contains("b_count 1"));
+        // Prometheus-style exposition: cumulative buckets, sum, count
+        assert!(r.contains("b_bucket{le=\"10\"} 0"), "report:\n{r}");
+        assert!(r.contains("b_bucket{le=\"1000\"} 1"), "report:\n{r}");
+        assert!(r.contains("b_bucket{le=\"+Inf\"} 1"), "report:\n{r}");
+        assert!(r.contains("b_sum 0.000100"), "report:\n{r}");
+        assert!(r.contains("b_p50_us"), "report:\n{r}");
     }
 
     #[test]
@@ -209,9 +564,119 @@ mod tests {
     }
 
     #[test]
+    fn gauge_occupancy_arithmetic() {
+        let g = Gauge::default();
+        g.add(3);
+        g.sub(1);
+        assert_eq!(g.get(), 2);
+        g.sub(10);
+        assert_eq!(g.get(), 0, "sub saturates at zero");
+    }
+
+    #[test]
     fn timed_records() {
         let out = timed("test_timed_op", || 42);
         assert_eq!(out, 42);
         assert!(Metrics::global().histogram("test_timed_op").count() >= 1);
+    }
+
+    #[test]
+    fn snapshot_roundtrips_through_wire_form() {
+        let m = Metrics::default();
+        m.counter("tasks_done").add(17);
+        m.gauge("slots_busy").set(3);
+        let h = m.histogram("task_wall");
+        h.observe(Duration::from_millis(12));
+        h.observe(Duration::from_micros(3));
+        let snap = m.snapshot();
+        let decoded = MetricsSnapshot::decode(&snap.encode()).unwrap();
+        assert_eq!(decoded, snap);
+        assert_eq!(decoded.counter("tasks_done"), 17);
+        assert_eq!(decoded.gauge("slots_busy"), 3);
+        assert_eq!(decoded.counter("missing"), 0);
+        let hs = &decoded.histograms[0];
+        assert_eq!(hs.count, 2);
+        assert_eq!(hs.buckets.iter().sum::<u64>(), 2);
+    }
+
+    #[test]
+    fn snapshot_decode_rejects_bad_inputs() {
+        let snap = Metrics::default().snapshot();
+        let mut bytes = snap.encode();
+        // unknown version
+        let mut wrong = bytes.clone();
+        wrong[0] = STATS_VERSION + 1;
+        assert!(MetricsSnapshot::decode(&wrong).is_err());
+        // trailing garbage
+        bytes.push(0xFF);
+        assert!(MetricsSnapshot::decode(&bytes).is_err());
+        // truncation
+        let m = Metrics::default();
+        m.counter("c").inc();
+        m.histogram("h").observe(Duration::from_micros(10));
+        let full = m.snapshot().encode();
+        for cut in 1..full.len() {
+            assert!(
+                MetricsSnapshot::decode(&full[..cut]).is_err(),
+                "decode accepted truncation at {cut}/{}",
+                full.len()
+            );
+        }
+    }
+
+    #[test]
+    fn metrics_survive_concurrent_hammering() {
+        use std::sync::Arc;
+        let m = Arc::new(Metrics::default());
+        const THREADS: usize = 8;
+        const PER_THREAD: u64 = 10_000;
+        let handles: Vec<_> = (0..THREADS)
+            .map(|_| {
+                let m = Arc::clone(&m);
+                std::thread::spawn(move || {
+                    let c = m.counter("hammer");
+                    let h = m.histogram("hammer_lat");
+                    for i in 0..PER_THREAD {
+                        c.inc();
+                        h.observe(Duration::from_micros(i % 200));
+                    }
+                })
+            })
+            .collect();
+        for t in handles {
+            t.join().unwrap();
+        }
+        let total = THREADS as u64 * PER_THREAD;
+        assert_eq!(m.counter("hammer").get(), total);
+        let h = m.histogram("hammer_lat");
+        assert_eq!(h.count(), total);
+        assert_eq!(
+            h.bucket_counts().iter().sum::<u64>(),
+            total,
+            "every observation lands in exactly one bucket"
+        );
+        // report stays parseable mid-mutation: render while a writer runs
+        let writer = {
+            let m = Arc::clone(&m);
+            std::thread::spawn(move || {
+                for _ in 0..1_000 {
+                    m.counter("noise").inc();
+                    m.histogram("hammer_lat").observe(Duration::from_micros(5));
+                }
+            })
+        };
+        for _ in 0..50 {
+            let r = m.report();
+            assert!(r.contains("hammer "), "snapshot dropped a counter:\n{r}");
+            // cumulative bucket lines must be internally consistent
+            // (monotone non-decreasing), which a torn read would break
+            let mut last = 0u64;
+            for line in r.lines().filter(|l| l.starts_with("hammer_lat_bucket")) {
+                let v: u64 = line.rsplit(' ').next().unwrap().parse().unwrap();
+                assert!(v >= last, "non-monotone cumulative buckets:\n{r}");
+                last = v;
+            }
+        }
+        writer.join().unwrap();
     }
 }

@@ -72,6 +72,7 @@ use crate::engine::{
     FaultPlan, OpCall, OpRegistry, RunHooks, Source, Speculation, SwarmRegistry, TaskCtx,
     TaskOutput, TaskProvider, TaskSpec,
 };
+use crate::engine::trace;
 use crate::error::{Error, Result};
 use crate::msg::{Image, Message, PointCloud, Time};
 use crate::perception::{descriptor_similarity, scan_descriptor, with_classifier, with_segmenter};
@@ -801,11 +802,13 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
     } else {
         Some(job.topics.iter().map(|s| s.as_str()).collect())
     };
-    let msgs = reader.play_range(
-        topic_refs.as_deref(),
-        Time::from_nanos(job.slice.warmup_start),
-        Time::from_nanos(job.slice.end),
-    )?;
+    let msgs = trace::span("chunk_decode", || {
+        reader.play_range(
+            topic_refs.as_deref(),
+            Time::from_nanos(job.slice.warmup_start),
+            Time::from_nanos(job.slice.end),
+        )
+    })?;
 
     let mut stats = ReplayStats::default();
     let pacer = Pacer::new(params.rate, job.slice.warmup_start);
@@ -833,8 +836,10 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
             // differ between slicings.
             if in_window {
                 let img = Image::decode(&m.data)?;
-                let res = with_classifier(&ctx.artifact_dir, |c| {
-                    c.classify(std::slice::from_ref(&img))
+                let res = trace::accum("classify", || {
+                    with_classifier(&ctx.artifact_dir, |c| {
+                        c.classify(std::slice::from_ref(&img))
+                    })
                 })?;
                 let class = res[0].class_id as usize;
                 stats.detections[class.min(7)] += 1;
@@ -842,7 +847,9 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
                 // segmentation rides the same frame (stateless, so
                 // slicing cannot change it): per-class pixel counts are
                 // integers and sum associatively across slices
-                let seg = with_segmenter(&ctx.artifact_dir, |s| s.segment(&img))?;
+                let seg = trace::accum("segment", || {
+                    with_segmenter(&ctx.artifact_dir, |s| s.segment(&img))
+                })?;
                 stats.seg.frames += 1;
                 for (a, b) in stats.seg.pixels.iter_mut().zip(seg.histogram) {
                     *a += b as u64;
@@ -858,7 +865,9 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
             // warm-up scan's is filled in lazily below when the first
             // in-window pair needs it
             let desc_now = if in_window {
-                Some(scan_descriptor(&ctx.artifact_dir, &scan)?)
+                Some(trace::accum("descriptors", || {
+                    scan_descriptor(&ctx.artifact_dir, &scan)
+                })?)
             } else {
                 None
             };
@@ -870,8 +879,9 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
                     let prev_desc: &[f32] = match &prev.desc {
                         Some(d) => d,
                         None => {
-                            prev_desc_owned =
-                                scan_descriptor(&ctx.artifact_dir, &prev.scan)?;
+                            prev_desc_owned = trace::accum("descriptors", || {
+                                scan_descriptor(&ctx.artifact_dir, &prev.scan)
+                            })?;
                             &prev_desc_owned
                         }
                     };
@@ -889,7 +899,8 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
                     } else {
                         let dt = (m.time.nanos.saturating_sub(prev.time_nanos)) as f64 / 1e9;
                         let dt = dt.max(1e-9);
-                        let t: Transform2D = icp_2d(&prev.scan, &scan, ICP_ITERS)?;
+                        let t: Transform2D =
+                            trace::accum("icp", || icp_2d(&prev.scan, &scan, ICP_ITERS))?;
                         stats.odom.pairs += 1;
                         stats.odom.abs_dx_um += quant(t.dx.abs());
                         stats.odom.abs_dy_um += quant(t.dy.abs());

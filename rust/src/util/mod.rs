@@ -11,14 +11,16 @@ pub mod sha256;
 
 /// Minimal leveled stderr logger (the `log` crate is not in the offline
 /// crate set). Level order: error < warn < info < debug; the enabled
-/// threshold comes from `AV_SIMD_LOG` (default `warn`).
+/// threshold comes from `AV_SIMD_LOG` (default `warn`; `off`/`none`
+/// silences everything; any other unknown value means debug).
 pub fn log_enabled(level: &str) -> bool {
     fn rank(l: &str) -> u8 {
         match l {
-            "error" => 0,
-            "warn" => 1,
-            "info" => 2,
-            _ => 3,
+            "off" | "none" => 0,
+            "error" => 1,
+            "warn" => 2,
+            "info" => 3,
+            _ => 4,
         }
     }
     static THRESHOLD: std::sync::OnceLock<u8> = std::sync::OnceLock::new();
@@ -29,12 +31,19 @@ pub fn log_enabled(level: &str) -> bool {
 }
 
 /// `logmsg!("warn", "task {id} failed")` — leveled stderr logging with
-/// zero formatting cost when the level is disabled.
+/// zero formatting cost when the level is disabled. Every line carries a
+/// monotonic `+MILLISms` offset from process start so interleaved worker
+/// stderr is orderable during chaos runs.
 #[macro_export]
 macro_rules! logmsg {
     ($lvl:literal, $($arg:tt)*) => {
         if $crate::util::log_enabled($lvl) {
-            eprintln!("[av-simd {}] {}", $lvl, format!($($arg)*));
+            eprintln!(
+                "[av-simd {} +{}ms] {}",
+                $lvl,
+                $crate::util::mono_millis(),
+                format!($($arg)*)
+            );
         }
     };
 }
@@ -64,6 +73,24 @@ pub fn now_nanos() -> u64 {
         .unwrap_or(0)
 }
 
+fn mono_anchor() -> std::time::Instant {
+    static ANCHOR: std::sync::OnceLock<std::time::Instant> = std::sync::OnceLock::new();
+    *ANCHOR.get_or_init(std::time::Instant::now)
+}
+
+/// Truly monotonic nanoseconds since this process's first clock read
+/// (`Instant`-based, immune to wall-clock steps — unlike [`now_nanos`]).
+/// Trace spans and log timestamps use this so intra-process ordering is
+/// exact; cross-process alignment happens via the RPC handshake offset.
+pub fn mono_nanos() -> u64 {
+    mono_anchor().elapsed().as_nanos() as u64
+}
+
+/// Monotonic milliseconds since process start (see [`mono_nanos`]).
+pub fn mono_millis() -> u64 {
+    mono_nanos() / 1_000_000
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -80,5 +107,14 @@ mod tests {
         let a = now_nanos();
         let b = now_nanos();
         assert!(b >= a);
+    }
+
+    #[test]
+    fn mono_clock_is_monotonic_and_anchored() {
+        let a = mono_nanos();
+        std::thread::sleep(std::time::Duration::from_millis(2));
+        let b = mono_nanos();
+        assert!(b > a, "mono_nanos must advance: {a} -> {b}");
+        assert!(mono_millis() >= a / 1_000_000, "millis derive from the same anchor");
     }
 }

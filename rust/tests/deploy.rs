@@ -168,7 +168,7 @@ fn version_mismatched_worker_is_rejected_at_cluster_connect() {
         if let Some(RpcMsg::Hello { .. }) = read_msg(&mut reader).unwrap() {
             write_msg(
                 &mut writer,
-                &RpcMsg::HelloOk { version: RPC_VERSION + 7, worker_id: 3 },
+                &RpcMsg::HelloOk { version: RPC_VERSION + 7, worker_id: 3, now_ns: 0 },
             )
             .unwrap();
         }
@@ -197,6 +197,132 @@ fn connect_failure_names_endpoint_and_attempts() {
     let msg = err.to_string();
     assert!(msg.contains("127.0.0.1:1"), "endpoint lost: {msg}");
     assert!(msg.contains("attempt"), "attempt count lost: {msg}");
+}
+
+/// The fleet-telemetry acceptance bar: against a live two-process
+/// `ClusterSpec` fleet (real `target/release/av-simd` workers, so each
+/// has its own metrics registry), the per-worker `worker_tasks_done`
+/// counts fetched over `FetchStats` must sum to the job's task total —
+/// and the `av-simd top` CLI must render the same fleet. Skipped when
+/// the release binary is not on disk (CI builds it before testing).
+#[test]
+fn top_stats_sum_to_job_totals_across_a_live_fleet() {
+    let launcher = std::path::Path::new("target/release/av-simd");
+    if !launcher.exists() {
+        eprintln!("skipping: build target/release/av-simd first");
+        return;
+    }
+
+    // reserve two ephemeral loopback ports for the fleet
+    let ports: Vec<u16> = (0..2)
+        .map(|_| {
+            let l = TcpListener::bind("127.0.0.1:0").unwrap();
+            let p = l.local_addr().unwrap().port();
+            drop(l);
+            p
+        })
+        .collect();
+    let toml = format!(
+        "[cluster]\nname = \"top-test\"\nconnect_timeout_ms = 5000\n\
+         [workers]\nhosts = [\"127.0.0.1:{}\", \"127.0.0.1:{}\"]\n\
+         [launch]\nprogram = \"target/release/av-simd\"\n",
+        ports[0], ports[1]
+    );
+    let spec = ClusterSpec::from_toml_text(&toml).unwrap();
+    let (mut children, skipped) = deploy::launch_local_workers(&spec).unwrap();
+    assert_eq!(children.len(), 2);
+    assert_eq!(skipped, 0);
+
+    let deadline = std::time::Instant::now() + Duration::from_secs(15);
+    while !deploy::probe(&spec).iter().all(|h| h.ok()) {
+        assert!(std::time::Instant::now() < deadline, "fleet never came up");
+        std::thread::sleep(Duration::from_millis(100));
+    }
+
+    // freshly launched processes start at zero, but take a baseline
+    // anyway: the assertion below is about the *delta* this job causes
+    let done_sum = |stats: &[deploy::WorkerStats]| -> u64 {
+        stats
+            .iter()
+            .filter_map(|w| w.snapshot.as_ref())
+            .map(|s| s.counter("worker_tasks_done"))
+            .sum()
+    };
+    let before = done_sum(&deploy::probe_stats(&spec));
+
+    let cluster = StandaloneCluster::connect(&spec).unwrap();
+    let tasks: Vec<TaskSpec> = (0..12).map(|i| count_task(i, 5)).collect();
+    let (outs, report) = av_simd::engine::run_job(&cluster, tasks, 1).unwrap();
+    assert_eq!(outs.len(), 12);
+    assert_eq!(report.tasks, 12);
+    assert_eq!(report.retries, 0);
+
+    let stats = deploy::probe_stats(&spec);
+    assert_eq!(stats.len(), 2);
+    for w in &stats {
+        assert!(w.error.is_none(), "stats fetch failed: {w:?}");
+        assert!(w.worker_id.is_some(), "handshake lost the worker id: {w:?}");
+    }
+    assert_eq!(
+        done_sum(&stats) - before,
+        report.tasks as u64,
+        "per-worker done counts must sum to the job's task total"
+    );
+    let failed: u64 = stats
+        .iter()
+        .filter_map(|w| w.snapshot.as_ref())
+        .map(|s| s.counter("worker_tasks_failed"))
+        .sum();
+    assert_eq!(failed, 0, "clean job must not raise failure counters");
+
+    // the rendered table (the `top` body) names every endpoint
+    let table = deploy::render_stats(&stats);
+    for w in &stats {
+        assert!(table.contains(&w.addr), "endpoint missing from table:\n{table}");
+    }
+
+    // and the CLI itself sees the same live fleet
+    let spec_path = std::env::temp_dir().join(format!(
+        "av_simd_top_spec_{}.toml",
+        std::process::id()
+    ));
+    std::fs::write(&spec_path, &toml).unwrap();
+    let out = std::process::Command::new(launcher)
+        .args(["top", "--cluster-spec", spec_path.to_str().unwrap()])
+        .output()
+        .unwrap();
+    assert!(
+        out.status.success(),
+        "av-simd top failed: {}",
+        String::from_utf8_lossy(&out.stderr)
+    );
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("top-test"), "cluster name missing:\n{stdout}");
+    for p in &ports {
+        assert!(
+            stdout.contains(&format!("127.0.0.1:{p}")),
+            "worker row missing:\n{stdout}"
+        );
+    }
+    std::fs::remove_file(&spec_path).ok();
+
+    cluster.stop_workers();
+    drop(cluster);
+    for c in &mut children {
+        // shutdown was sent — reap the process, killing as a fallback
+        let deadline = std::time::Instant::now() + Duration::from_secs(5);
+        loop {
+            match c.try_wait().unwrap() {
+                Some(_) => break,
+                None if std::time::Instant::now() >= deadline => {
+                    let _ = c.kill();
+                    let _ = c.wait();
+                    break;
+                }
+                None => std::thread::sleep(Duration::from_millis(50)),
+            }
+        }
+    }
 }
 
 #[test]

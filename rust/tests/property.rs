@@ -477,7 +477,7 @@ fn prop_bag_cache_never_exceeds_capacity() {
 #[test]
 fn prop_rpc_frames_roundtrip() {
     use av_simd::engine::rpc::{read_msg, write_msg, RpcMsg};
-    check("rpc roundtrip", |rng| match rng.below(10) {
+    check("rpc roundtrip", |rng| match rng.below(18) {
         0 => RpcMsg::RunTask(gen::bytes(rng, 512)),
         1 => RpcMsg::TaskOk(gen::bytes(rng, 512)),
         2 => RpcMsg::TaskErr(gen::ident(rng, 64)),
@@ -495,7 +495,26 @@ fn prop_rpc_frames_roundtrip() {
             rng.fill_bytes(&mut manifest);
             RpcMsg::FetchBlock { manifest, index: rng.next_u32() }
         }
-        _ => RpcMsg::BlockData(gen::bytes(rng, 512)),
+        9 => RpcMsg::BlockData(gen::bytes(rng, 512)),
+        10 => RpcMsg::FetchErr(gen::ident(rng, 64)),
+        11 => RpcMsg::BlockAd {
+            peer: format!("{}:{}", gen::ident(rng, 8), 1 + rng.below(65_000)),
+            manifests: gen::vec_of(rng, 4, |r| {
+                let mut id = [0u8; 32];
+                r.fill_bytes(&mut id);
+                id
+            }),
+        },
+        12 => RpcMsg::Hello { version: rng.next_u32() },
+        13 => RpcMsg::HelloOk {
+            version: rng.next_u32(),
+            worker_id: rng.next_u64(),
+            now_ns: rng.next_u64(),
+        },
+        14 => RpcMsg::RunTaskTraced(gen::bytes(rng, 512)),
+        15 => RpcMsg::TaskTrace(gen::bytes(rng, 512)),
+        16 => RpcMsg::FetchStats,
+        _ => RpcMsg::StatsData(gen::bytes(rng, 512)),
     }, |msg| {
         let mut buf = Vec::new();
         write_msg(&mut buf, msg).unwrap();
@@ -709,4 +728,111 @@ fn fuzz_codec_trailing_bytes_rejected_even_with_valid_crc() {
     assert!(CoverageMap::decode(&with_junk(&random_coverage_map(&mut rng).encode())).is_err());
     assert!(CorpusEntry::decode(&with_junk(&random_corpus_entry(&mut rng).encode())).is_err());
     assert!(ShrinkLog::decode(&with_junk(&random_shrink_log(&mut rng).encode())).is_err());
+}
+
+// ---------- observability wire types (span batches, stats snapshots) ----------
+
+use av_simd::engine::trace::{Span, SpanBatch, TraceCtx};
+use av_simd::metrics::{HistogramSnapshot, MetricsSnapshot, HIST_BUCKETS};
+
+fn random_span_batch(rng: &mut Prng) -> SpanBatch {
+    SpanBatch {
+        // u64::MAX is the "unknown worker" sentinel — round-trip it too
+        worker_id: if rng.next_bool(0.1) { u64::MAX } else { rng.next_u64() },
+        ctx: TraceCtx {
+            job_id: rng.next_u64(),
+            task_id: rng.next_u32(),
+            attempt: rng.next_u32() % 4,
+        },
+        spans: gen::vec_of(rng, 12, |r| Span {
+            name: gen::ident(r, 16),
+            detail: if r.next_bool(0.5) { String::new() } else { gen::ident(r, 24) },
+            start_ns: r.next_u64(),
+            dur_ns: r.next_u64(),
+            count: 1 + r.below(1000),
+        }),
+    }
+}
+
+fn random_metrics_snapshot(rng: &mut Prng) -> MetricsSnapshot {
+    MetricsSnapshot {
+        counters: gen::vec_of(rng, 6, |r| (gen::ident(r, 20), r.next_u64())),
+        gauges: gen::vec_of(rng, 6, |r| (gen::ident(r, 20), r.next_u64())),
+        histograms: gen::vec_of(rng, 4, |r| {
+            let mut buckets = [0u64; HIST_BUCKETS];
+            for b in buckets.iter_mut() {
+                // mixed magnitudes so varint widths vary across buckets
+                *b = r.next_u64() >> (r.below(64) as u32);
+            }
+            HistogramSnapshot {
+                name: gen::ident(r, 20),
+                buckets,
+                sum_nanos: r.next_u64(),
+                count: r.next_u64(),
+            }
+        }),
+    }
+}
+
+#[test]
+fn prop_observability_codecs_roundtrip() {
+    check("span batch roundtrip", random_span_batch, |b| {
+        SpanBatch::decode(&b.encode()).unwrap() == *b
+    });
+    check("metrics snapshot roundtrip", random_metrics_snapshot, |s| {
+        MetricsSnapshot::decode(&s.encode()).unwrap() == *s
+    });
+}
+
+#[test]
+fn prop_observability_codec_truncation_rejected() {
+    // Neither format is CRC-tailed, but both declare element counts up
+    // front and reject trailing bytes, so a strict prefix can never
+    // decode: the parser follows the same path over the identical prefix
+    // bytes and runs out before finishing, or a shorter parse leaves an
+    // unread tail and trips the trailing check.
+    check(
+        "any strict prefix of a span batch / stats snapshot is rejected",
+        |rng| {
+            let is_trace = rng.next_bool(0.5);
+            let buf = if is_trace {
+                random_span_batch(rng).encode()
+            } else {
+                random_metrics_snapshot(rng).encode()
+            };
+            let cut = rng.below(buf.len() as u64) as usize;
+            (is_trace, buf, cut)
+        },
+        |(is_trace, buf, cut)| {
+            if *is_trace {
+                SpanBatch::decode(&buf[..*cut]).is_err()
+            } else {
+                MetricsSnapshot::decode(&buf[..*cut]).is_err()
+            }
+        },
+    );
+}
+
+#[test]
+fn prop_observability_codec_bitflip_never_panics() {
+    check_n("span batch / stats snapshot corruption safety", 64, |rng| {
+        let is_trace = rng.next_bool(0.5);
+        let mut buf = if is_trace {
+            random_span_batch(rng).encode()
+        } else {
+            random_metrics_snapshot(rng).encode()
+        };
+        let pos = rng.below(buf.len() as u64) as usize;
+        buf[pos] ^= 1 << rng.below(8);
+        (is_trace, buf)
+    }, |(is_trace, buf)| {
+        // unlike the CRC-tailed fuzz codecs these framed formats cannot
+        // detect every flip — a benign decode is allowed, a panic is not
+        if *is_trace {
+            let _ = SpanBatch::decode(buf);
+        } else {
+            let _ = MetricsSnapshot::decode(buf);
+        }
+        true
+    });
 }

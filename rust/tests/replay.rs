@@ -606,6 +606,179 @@ fn poisoned_slice_record_fails_fast() {
 }
 
 // ------------------------------------------------------------------
+// trace acceptance: tracing must never change report bytes, and a
+// traced standalone replay must account for ≥95% of task wall time
+// ------------------------------------------------------------------
+
+use av_simd::engine::trace::{self, TraceLog};
+
+/// Trace tests install the process-global sink; serialize them so two
+/// tests never fight over it (install is last-caller-wins).
+fn trace_serial() -> std::sync::MutexGuard<'static, ()> {
+    static LOCK: std::sync::Mutex<()> = std::sync::Mutex::new(());
+    LOCK.lock().unwrap_or_else(|p| p.into_inner())
+}
+
+/// The observability acceptance matrix: across {local, standalone} ×
+/// {1, 2, 4 workers}, the replay report bytes are identical with the
+/// trace sink installed or absent — tracing observes execution, it
+/// never participates in it.
+#[test]
+fn traced_replay_report_bytes_identical_across_backends_and_workers() {
+    let _serial = trace_serial();
+    let bag = shared_fixture(16, 42);
+    let spec = ReplaySpec { bag, slices: 5, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec);
+    let (index, plan) = driver.plan().unwrap();
+    let reference = driver.reference(&artifact_dir()).unwrap();
+
+    for workers in [1usize, 2, 4] {
+        let local = LocalCluster::new(workers, av_simd::full_op_registry(), &artifact_dir());
+        let off = driver.run_planned(&local, &index, &plan).unwrap();
+        let log = TraceLog::new();
+        let on = {
+            let _guard = trace::install(log.clone());
+            driver.run_planned(&local, &index, &plan).unwrap()
+        };
+        assert_eq!(
+            on.encode(),
+            off.encode(),
+            "tracing changed local x{workers} report bytes"
+        );
+        assert_eq!(off.encode(), reference.encode(), "local x{workers} diverged");
+        assert!(!log.is_empty(), "traced local x{workers} run recorded nothing");
+
+        let (cluster, handles) = standalone(workers);
+        let off = driver.run_planned(&cluster, &index, &plan).unwrap();
+        let log = TraceLog::new();
+        let on = {
+            let _guard = trace::install(log.clone());
+            driver.run_planned(&cluster, &index, &plan).unwrap()
+        };
+        assert_eq!(
+            on.encode(),
+            off.encode(),
+            "tracing changed standalone x{workers} report bytes"
+        );
+        assert_eq!(off.encode(), reference.encode(), "standalone x{workers} diverged");
+        assert!(!log.is_empty(), "traced standalone x{workers} run recorded nothing");
+        cluster.stop_workers();
+        for h in handles {
+            h.join().unwrap();
+        }
+    }
+}
+
+/// The trace-quality acceptance bar, over a real TCP fleet: worker
+/// `task` spans must cover ≥ 95% of driver-observed task wall time,
+/// every executed task must have shipped a span batch back, the
+/// perception stages must all be present, and the exported Chrome
+/// `trace_event` JSON must be loadable (structurally balanced, one
+/// complete event per merged trace entry).
+#[test]
+fn standalone_traced_replay_covers_task_wall_and_exports_chrome_json() {
+    use std::collections::BTreeSet;
+
+    let _serial = trace_serial();
+    let bag = shared_fixture(24, 7);
+    let spec = ReplaySpec { bag, slices: 6, ..ReplaySpec::default() };
+    let driver = ReplayDriver::new(spec);
+    let (index, plan) = driver.plan().unwrap();
+
+    let (cluster, handles) = standalone(2);
+    let log = TraceLog::new();
+    {
+        let _guard = trace::install(log.clone());
+        driver.run_planned(&cluster, &index, &plan).unwrap();
+    }
+    cluster.stop_workers();
+    for h in handles {
+        h.join().unwrap();
+    }
+
+    let events = log.events();
+    // every attempt the driver timed has a worker-side task span
+    let walled: BTreeSet<u32> = events
+        .iter()
+        .filter(|e| e.name == "task_wall")
+        .map(|e| e.ctx.task_id)
+        .collect();
+    let spanned: BTreeSet<u32> = events
+        .iter()
+        .filter(|e| e.worker.is_some() && e.name == "task")
+        .map(|e| e.ctx.task_id)
+        .collect();
+    assert_eq!(walled.len(), plan.len(), "driver timed {walled:?}");
+    assert!(
+        spanned.is_superset(&walled),
+        "tasks without worker spans: {:?}",
+        walled.difference(&spanned).collect::<Vec<_>>()
+    );
+
+    // coverage: worker task spans vs. driver-observed wall (the gap is
+    // RPC framing + result decode, which must stay under 5%)
+    let wall_ns: u64 = events
+        .iter()
+        .filter(|e| e.name == "task_wall")
+        .map(|e| e.dur_ns)
+        .sum();
+    let task_ns: u64 = events
+        .iter()
+        .filter(|e| e.worker.is_some() && e.name == "task")
+        .map(|e| e.dur_ns)
+        .sum();
+    assert!(wall_ns > 0, "driver observed no task wall time");
+    let coverage = task_ns as f64 / wall_ns as f64;
+    assert!(
+        coverage >= 0.95,
+        "worker spans cover only {:.1}% of task wall time",
+        coverage * 100.0
+    );
+
+    // the perception stages and scheduler events all surfaced
+    let names: BTreeSet<&str> = events.iter().map(|e| e.name.as_str()).collect();
+    for required in [
+        "submit", "queue_wait", "task_wall", "task", "source_load", "chunk_decode",
+        "classify", "segment", "descriptors", "icp",
+    ] {
+        assert!(names.contains(required), "stage {required:?} missing from {names:?}");
+    }
+
+    // Chrome export: one complete ("ph":"X") event per merged entry,
+    // structurally balanced outside string literals
+    let path = std::env::temp_dir().join(format!(
+        "av_simd_replay_it_trace_{}.json",
+        std::process::id()
+    ));
+    log.write_chrome(&path).unwrap();
+    let json = std::fs::read_to_string(&path).unwrap();
+    std::fs::remove_file(&path).ok();
+    assert_eq!(
+        json.matches("\"ph\":\"X\"").count(),
+        log.len(),
+        "event count mismatch in chrome export"
+    );
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in json.chars() {
+        if esc {
+            esc = false;
+            continue;
+        }
+        match c {
+            '\\' if in_str => esc = true,
+            '"' => in_str = !in_str,
+            '{' | '[' if !in_str => depth += 1,
+            '}' | ']' if !in_str => {
+                depth -= 1;
+                assert!(depth >= 0, "unbalanced chrome JSON");
+            }
+            _ => {}
+        }
+    }
+    assert!(!in_str && depth == 0, "chrome JSON did not close cleanly");
+}
+
+// ------------------------------------------------------------------
 // codec property tests
 // ------------------------------------------------------------------
 

@@ -84,6 +84,44 @@ fn standalone_cluster_matches_local_byte_for_byte() {
     assert_eq!(remote_report.total, spec.case_count());
 }
 
+/// Tracing must observe a sweep, never participate in it: with the
+/// trace sink installed the report bytes equal the untraced reference
+/// across worker counts and backends, and spans actually get recorded.
+#[test]
+fn traced_sweep_report_bytes_identical_across_backends() {
+    use av_simd::engine::trace::{self, TraceLog};
+    let spec = small_spec();
+    let reference = run_sweep(&local(1), &spec).unwrap().encode();
+    for workers in [1usize, 2, 4] {
+        let log = TraceLog::new();
+        let report = {
+            let _guard = trace::install(log.clone());
+            run_sweep(&local(workers), &spec).unwrap()
+        };
+        assert_eq!(
+            report.encode(),
+            reference,
+            "tracing changed local[{workers}] sweep bytes"
+        );
+        assert!(!log.is_empty(), "traced local[{workers}] sweep recorded nothing");
+    }
+
+    let launcher = std::path::Path::new("target/release/av-simd");
+    if !launcher.exists() {
+        eprintln!("skipping standalone half: build target/release/av-simd first");
+        return;
+    }
+    let cluster = StandaloneCluster::launch_program(launcher, 2, 7431, "artifacts").unwrap();
+    let log = TraceLog::new();
+    let report = {
+        let _guard = trace::install(log.clone());
+        run_sweep(&cluster, &spec).unwrap()
+    };
+    cluster.shutdown();
+    assert_eq!(report.encode(), reference, "tracing changed standalone sweep bytes");
+    assert!(!log.is_empty(), "traced standalone sweep recorded nothing");
+}
+
 #[test]
 fn full_scale_sweep_runs_thousands_of_cases() {
     // The acceptance-scale run: the default spec is >= 1000 cases and
