@@ -40,6 +40,14 @@
 //!   (generation, round barrier, verdict folding, shrinking of the
 //!   planted cut-in failure) on a 2-worker local cluster
 //!   (`fuzz_cases_per_sec` fact).
+//! * `perception/*` — the perception raw-speed pass: batched PJRT
+//!   classification (`classify_frames_per_sec`), grid-accelerated ICP
+//!   (`icp_points_per_sec`), zero-copy chunk decode
+//!   (`chunk_decode_mb_per_sec`), and the composite
+//!   `perception/pass fast` vs `perception/pass reference` slice body
+//!   (`speedup_perception_pass` fact, asserted ≥ 1.5; every fast path
+//!   is cross-checked against its retained `_reference` kernel before
+//!   timing).
 //!
 //! ```sh
 //! cargo run --release --example bench_engine            # full run
@@ -682,6 +690,165 @@ fn bench_fuzz(samples: usize) -> Sample {
         })
 }
 
+// ------------------------------------------------------------- perception
+
+/// The perception raw-speed pass, benched layer by layer and end to
+/// end. Inputs are built once; before timing, every fast path is
+/// cross-checked against its retained `_reference` kernel: batched
+/// logits must be bit-identical to per-frame reference inference, grid
+/// ICP must agree with the brute-force kernel to reassociation
+/// tolerance, and the zero-copy decode must equal the allocating
+/// decode. Returns (classify, icp, decode, pass-fast, pass-reference)
+/// samples.
+fn bench_perception(
+    samples: usize,
+    frames: usize,
+    icp_points: usize,
+    chunk_kib: usize,
+) -> (Sample, Sample, Sample, Sample, Sample) {
+    use av_simd::bag::format::{self, Compression, MessageRecord};
+    use av_simd::msg::{Image, PointCloud, Time};
+    use av_simd::perception::classify::pack_image;
+    use av_simd::perception::lidar_odom::icp_2d_reference;
+    use av_simd::perception::{icp_2d, icp_uses_grid, Classifier, Segmenter};
+    use av_simd::runtime::ModelRuntime;
+
+    const ICP_ITERS: usize = 8;
+
+    // inputs, built once: a chunk of encoded camera frames (off-native
+    // size so the resample pack path runs), a large sensor chunk for the
+    // decode-only bench, and two lidar clouds big enough for the grid
+    let images: Vec<Image> =
+        (0..frames as u64).map(|i| Image::synthetic(48, 32, i)).collect();
+    let image_chunk = format::encode_chunk(
+        &images
+            .iter()
+            .enumerate()
+            .map(|(i, img)| MessageRecord {
+                conn_id: 0,
+                time: Time::from_nanos(i as u64),
+                data: img.encode(),
+            })
+            .collect::<Vec<_>>(),
+        Compression::Deflate,
+    )
+    .expect("image chunk");
+    let (_, image_payload, _) =
+        format::decode_record(&image_chunk).expect("image chunk envelope");
+
+    let big = sensor_like_buffer(chunk_kib << 10);
+    let big_chunk = format::encode_chunk(
+        &big.chunks(4096)
+            .enumerate()
+            .map(|(i, part)| MessageRecord {
+                conn_id: 1,
+                time: Time::from_nanos(i as u64),
+                data: part.to_vec(),
+            })
+            .collect::<Vec<_>>(),
+        Compression::Deflate,
+    )
+    .expect("sensor chunk");
+    let (_, big_payload, _) =
+        format::decode_record(&big_chunk).expect("sensor chunk envelope");
+
+    let src = PointCloud::synthetic(icp_points, 3);
+    let dst = PointCloud::synthetic(icp_points, 4);
+    assert!(icp_uses_grid(dst.num_points()), "bench clouds must take the grid path");
+
+    let clf = Classifier::load("artifacts").expect("classifier");
+    let seg = Segmenter::load("artifacts").expect("segmenter");
+    let rt = ModelRuntime::new("artifacts").expect("runtime");
+    let clf_b1 = rt.model("classifier_b1").expect("classifier_b1");
+    let seg_b1 = rt.model("segmenter_b1").expect("segmenter_b1");
+
+    // equivalence gates — the fast pass may not move a single bit
+    let batched = clf.classify(&images).expect("batched classify");
+    for (img, fast) in images.iter().zip(&batched) {
+        let mut input = Vec::new();
+        pack_image(img, &mut input).expect("pack");
+        let per_frame = clf_b1.run_f32_reference(&input).expect("reference logits");
+        let fast_bits: Vec<u32> = fast.logits.iter().map(|v| v.to_bits()).collect();
+        let ref_bits: Vec<u32> = per_frame.iter().map(|v| v.to_bits()).collect();
+        assert_eq!(
+            fast_bits, ref_bits,
+            "batched logits diverged from the reference kernel"
+        );
+    }
+    let t_fast = icp_2d(&src, &dst, ICP_ITERS).expect("grid icp");
+    let t_ref = icp_2d_reference(&src, &dst, ICP_ITERS).expect("reference icp");
+    assert!(
+        (t_fast.dx - t_ref.dx).abs() < 1e-6
+            && (t_fast.dy - t_ref.dy).abs() < 1e-6
+            && (t_fast.dtheta - t_ref.dtheta).abs() < 1e-6,
+        "grid ICP diverged from the brute-force reference: {t_fast:?} vs {t_ref:?}"
+    );
+    let mut scratch = Vec::new();
+    assert_eq!(
+        format::decode_chunk_into(big_payload, &mut scratch).expect("decode into"),
+        format::decode_chunk(big_payload).expect("decode"),
+        "zero-copy chunk decode diverged from the allocating decode"
+    );
+
+    // layer benches (fast paths; facts are throughputs)
+    let classify = Bench::new("perception/classify batched")
+        .warmup(1)
+        .samples(samples)
+        .units(frames as f64, "frame")
+        .run(|| {
+            std::hint::black_box(clf.classify(std::hint::black_box(&images)).unwrap());
+        });
+    let icp = Bench::new("perception/icp grid")
+        .warmup(1)
+        .samples(samples)
+        .units((icp_points * ICP_ITERS) as f64, "pt")
+        .run(|| {
+            std::hint::black_box(icp_2d(&src, &dst, ICP_ITERS).unwrap());
+        });
+    let decode = Bench::new("perception/chunk-decode zero-copy")
+        .warmup(1)
+        .samples(samples)
+        .units(big.len() as f64, "B")
+        .run(|| {
+            std::hint::black_box(
+                format::decode_chunk_into(std::hint::black_box(big_payload), &mut scratch)
+                    .unwrap(),
+            );
+        });
+
+    // the composite pass: chunk decode → image decode → batched
+    // inference → grid ICP, vs per-frame reference kernels and the
+    // allocating decode — the slice body both ways
+    let pass_fast = Bench::new("perception/pass fast")
+        .warmup(1)
+        .samples(samples)
+        .units(frames as f64, "frame")
+        .run(|| {
+            let msgs = format::decode_chunk_into(image_payload, &mut scratch).unwrap();
+            let imgs: Vec<Image> =
+                msgs.iter().map(|m| Image::decode(&m.data).unwrap()).collect();
+            std::hint::black_box(clf.classify(&imgs).unwrap());
+            std::hint::black_box(seg.segment_batch(&imgs).unwrap());
+            std::hint::black_box(icp_2d(&src, &dst, ICP_ITERS).unwrap());
+        });
+    let pass_ref = Bench::new("perception/pass reference (baseline)")
+        .warmup(1)
+        .samples(samples)
+        .units(frames as f64, "frame")
+        .run(|| {
+            let msgs = format::decode_chunk(image_payload).unwrap();
+            for m in &msgs {
+                let img = Image::decode(&m.data).unwrap();
+                let mut input = Vec::new();
+                pack_image(&img, &mut input).unwrap();
+                std::hint::black_box(clf_b1.run_f32_reference(&input).unwrap());
+                std::hint::black_box(seg_b1.run_f32_reference(&input).unwrap());
+            }
+            std::hint::black_box(icp_2d_reference(&src, &dst, ICP_ITERS).unwrap());
+        });
+    (classify, icp, decode, pass_fast, pass_ref)
+}
+
 fn main() -> av_simd::Result<()> {
     let smoke = smoke();
     let (sched_samples, stall_ms) = if smoke { (3, 30) } else { (7, 120) };
@@ -709,6 +876,10 @@ fn main() -> av_simd::Result<()> {
     let (ckpt_on, ckpt_off) = bench_checkpoint(replay_samples, replay_frames);
     let fuzz_campaign = bench_fuzz(sweep_samples);
     let (trace_on, trace_off) = bench_traced_replay(replay_samples, replay_frames);
+    let (perc_samples, perc_frames, perc_icp_pts, perc_chunk_kib) =
+        if smoke { (2, 4, 400, 256) } else { (3, 8, 1500, 2048) };
+    let (perc_classify, perc_icp, perc_decode, perc_pass_fast, perc_pass_ref) =
+        bench_perception(perc_samples, perc_frames, perc_icp_pts, perc_chunk_kib);
 
     let samples = vec![
         sched_stream,
@@ -734,6 +905,11 @@ fn main() -> av_simd::Result<()> {
         fuzz_campaign,
         trace_on,
         trace_off,
+        perc_classify,
+        perc_icp,
+        perc_decode,
+        perc_pass_fast,
+        perc_pass_ref,
     ];
     print_table("engine microbenches", &samples);
 
@@ -765,6 +941,14 @@ fn main() -> av_simd::Result<()> {
     // observability fact: relative wall cost of recording, shipping, and
     // merging per-stage spans when a trace sink is installed
     let trace_overhead_pct = (speedup(&samples[21], &samples[22]) - 1.0) * 100.0;
+    // perception facts: batched classify throughput, grid ICP NN queries
+    // per second (source points × iterations), zero-copy chunk decode,
+    // and the headline composite-pass speedup over the retained
+    // `_reference` kernels
+    let classify_frames_per_sec = samples[23].throughput().unwrap_or(0.0);
+    let icp_points_per_sec = samples[24].throughput().unwrap_or(0.0);
+    let chunk_decode_mb_per_sec = samples[25].throughput().unwrap_or(0.0) / 1e6;
+    let speedup_perception_pass = speedup(&samples[27], &samples[26]);
     let facts: Vec<(&str, f64)> = vec![
         ("speedup_scheduler_streaming_vs_rounds", sched_speedup),
         ("speedup_crc32_slice8_vs_bytewise", crc_speedup),
@@ -781,6 +965,10 @@ fn main() -> av_simd::Result<()> {
         ("checkpoint_overhead_pct", checkpoint_overhead_pct),
         ("fuzz_cases_per_sec", fuzz_cases_per_sec),
         ("trace_overhead_pct", trace_overhead_pct),
+        ("classify_frames_per_sec", classify_frames_per_sec),
+        ("icp_points_per_sec", icp_points_per_sec),
+        ("chunk_decode_mb_per_sec", chunk_decode_mb_per_sec),
+        ("speedup_perception_pass", speedup_perception_pass),
         ("lz_ratio_chain", ratio_chain),
         ("lz_ratio_greedy", ratio_greedy),
         ("smoke", if smoke { 1.0 } else { 0.0 }),
@@ -832,6 +1020,16 @@ fn main() -> av_simd::Result<()> {
     assert!(
         trace_overhead_pct < 5.0,
         "trace overhead {trace_overhead_pct:.2}% above the 5% bar"
+    );
+    assert!(
+        classify_frames_per_sec > 0.0
+            && icp_points_per_sec > 0.0
+            && chunk_decode_mb_per_sec > 0.0,
+        "perception benches produced no throughput"
+    );
+    assert!(
+        speedup_perception_pass >= 1.5,
+        "perception pass speedup {speedup_perception_pass:.2} below the 1.5x bar"
     );
     println!("bench_engine OK");
     Ok(())

@@ -20,6 +20,19 @@ pub trait ChunkStore: Send {
     /// Read exactly `len` bytes starting at `offset`.
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>>;
 
+    /// Read exactly `len` bytes starting at `offset` into `out`
+    /// (cleared first) — the zero-copy fetch path: a reader reuses one
+    /// envelope buffer across every chunk it replays instead of taking
+    /// a fresh allocation per read. The default delegates to
+    /// [`ChunkStore::read_at`]; backends override it to fill `out`
+    /// directly.
+    fn read_at_into(&mut self, offset: u64, len: usize, out: &mut Vec<u8>) -> Result<()> {
+        let buf = self.read_at(offset, len)?;
+        out.clear();
+        out.extend_from_slice(&buf);
+        Ok(())
+    }
+
     /// Total bytes stored.
     fn len(&self) -> u64;
 
@@ -45,6 +58,10 @@ impl<S: ChunkStore> ChunkStore for &mut S {
 
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
         (**self).read_at(offset, len)
+    }
+
+    fn read_at_into(&mut self, offset: u64, len: usize, out: &mut Vec<u8>) -> Result<()> {
+        (**self).read_at_into(offset, len, out)
     }
 
     fn len(&self) -> u64 {
@@ -138,21 +155,27 @@ impl ChunkStore for DiskChunkedFile {
     }
 
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut buf = Vec::new();
+        self.read_at_into(offset, len, &mut buf)?;
+        Ok(buf)
+    }
+
+    fn read_at_into(&mut self, offset: u64, len: usize, out: &mut Vec<u8>) -> Result<()> {
         // Reads must observe buffered writes.
         if let Some(w) = self.writer.as_mut() {
             w.flush()?;
         }
         let r = self.ensure_reader()?;
         r.seek(SeekFrom::Start(offset))?;
-        let mut buf = vec![0u8; len];
-        r.read_exact(&mut buf).map_err(|e| {
+        out.clear();
+        out.resize(len, 0);
+        r.read_exact(out).map_err(|e| {
             if e.kind() == std::io::ErrorKind::UnexpectedEof {
                 Error::Corrupt(format!("bag truncated at offset {offset} (+{len})"))
             } else {
                 Error::Io(e)
             }
-        })?;
-        Ok(buf)
+        })
     }
 
     fn len(&self) -> u64 {

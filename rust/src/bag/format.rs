@@ -222,24 +222,39 @@ pub fn encode_chunk(messages: &[MessageRecord], compression: Compression) -> Res
 
 /// Decode a chunk record payload back into messages.
 pub fn decode_chunk(payload: &[u8]) -> Result<Vec<MessageRecord>> {
+    let mut scratch = Vec::new();
+    decode_chunk_into(payload, &mut scratch)
+}
+
+/// [`decode_chunk`] with a caller-owned decompression scratch buffer —
+/// the zero-copy decode path. Uncompressed chunk bodies are parsed
+/// straight out of `payload` (no staging copy at all); deflate bodies
+/// decompress into `scratch` via [`crate::util::lz::decompress_into`],
+/// so a reader replaying thousands of chunks reuses one buffer instead
+/// of allocating per chunk. Output is identical to [`decode_chunk`].
+pub fn decode_chunk_into(payload: &[u8], scratch: &mut Vec<u8>) -> Result<Vec<MessageRecord>> {
     let mut r = ByteReader::new(payload);
     let compression = Compression::from_u8(r.get_u8()?)?;
     let raw_len = r.get_u32()? as usize;
     let body_slice = r.get_raw(r.remaining())?;
-    let raw: Vec<u8> = match compression {
-        Compression::None => body_slice.to_vec(),
+    match compression {
+        Compression::None => parse_messages(body_slice),
         Compression::Deflate => {
-            let out = crate::util::lz::decompress(body_slice, raw_len)?;
-            if out.len() != raw_len {
+            crate::util::lz::decompress_into(body_slice, raw_len, scratch)?;
+            if scratch.len() != raw_len {
                 return Err(Error::BagFormat(format!(
                     "chunk decompressed to {} bytes, index said {raw_len}",
-                    out.len()
+                    scratch.len()
                 )));
             }
-            out
+            parse_messages(scratch)
         }
-    };
-    let mut r = ByteReader::new(&raw);
+    }
+}
+
+/// Parse a raw (decompressed) chunk body into its message list.
+fn parse_messages(raw: &[u8]) -> Result<Vec<MessageRecord>> {
+    let mut r = ByteReader::new(raw);
     let mut messages = Vec::new();
     while !r.is_empty() {
         messages.push(MessageRecord {

@@ -107,6 +107,12 @@ impl ChunkStore for MemoryChunkedFile {
     }
 
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.read_at_into(offset, len, &mut out)?;
+        Ok(out)
+    }
+
+    fn read_at_into(&mut self, offset: u64, len: usize, out: &mut Vec<u8>) -> Result<()> {
         // checked: a corrupt index can carry offsets near u64::MAX, and a
         // wrapped sum here would pass the bound and panic on page lookup
         if offset.checked_add(len as u64).is_none_or(|end| end > self.len) {
@@ -115,7 +121,8 @@ impl ChunkStore for MemoryChunkedFile {
                 self.len
             )));
         }
-        let mut out = Vec::with_capacity(len);
+        out.clear();
+        out.reserve(len);
         let mut pos = offset as usize;
         let mut remaining = len;
         while remaining > 0 {
@@ -126,7 +133,7 @@ impl ChunkStore for MemoryChunkedFile {
             pos += take;
             remaining -= take;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn len(&self) -> u64 {

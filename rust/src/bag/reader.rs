@@ -42,6 +42,11 @@ pub struct BagReader<S: ChunkStore> {
     chunks: Vec<ChunkInfo>,
     connections: Vec<Connection>,
     conn_by_id: HashMap<u32, usize>,
+    /// Chunk-envelope fetch buffer, reused across [`Self::read_chunk`]
+    /// calls (zero-copy fetch→decode path: the store fills it in place).
+    env_buf: Vec<u8>,
+    /// Decompression scratch shared across chunks (deflate bodies).
+    raw_buf: Vec<u8>,
 }
 
 impl<S: ChunkStore> BagReader<S> {
@@ -103,7 +108,14 @@ impl<S: ChunkStore> BagReader<S> {
             .enumerate()
             .map(|(i, c)| (c.conn_id, i))
             .collect();
-        Ok(Self { store, chunks, connections, conn_by_id })
+        Ok(Self {
+            store,
+            chunks,
+            connections,
+            conn_by_id,
+            env_buf: Vec::new(),
+            raw_buf: Vec::new(),
+        })
     }
 
     /// Connection records from the bag index.
@@ -128,17 +140,22 @@ impl<S: ChunkStore> BagReader<S> {
         Some((start, end))
     }
 
-    /// Read and decode one chunk's messages.
+    /// Read and decode one chunk's messages. The envelope fetch and the
+    /// decompression both land in reader-owned scratch buffers, so a
+    /// replay touching thousands of chunks performs no per-chunk staging
+    /// allocation (the store writes into `env_buf` in place; deflate
+    /// bodies decompress into `raw_buf`).
     fn read_chunk(&mut self, i: usize) -> Result<Vec<format::MessageRecord>> {
         let info = self.chunks[i].clone();
-        let buf = self.store.read_at(info.offset, info.stored_len as usize)?;
-        let (rec_type, payload, _) = format::decode_record(&buf)?;
+        self.store
+            .read_at_into(info.offset, info.stored_len as usize, &mut self.env_buf)?;
+        let (rec_type, payload, _) = format::decode_record(&self.env_buf)?;
         if rec_type != format::REC_CHUNK {
             return Err(Error::BagFormat(format!(
                 "chunk index pointed at record type {rec_type}"
             )));
         }
-        let msgs = format::decode_chunk(payload)?;
+        let msgs = format::decode_chunk_into(payload, &mut self.raw_buf)?;
         if msgs.len() != info.message_count as usize {
             return Err(Error::BagFormat(format!(
                 "chunk {i} decoded {} messages, index said {}",

@@ -6,7 +6,9 @@
 use crate::error::{Error, Result};
 use crate::msg::{Detection, DetectionArray, Image};
 use crate::runtime::{thread_runtime, CompiledModel};
+use std::cell::RefCell;
 use std::rc::Rc;
+use std::sync::OnceLock;
 
 /// Label set — must match `python/compile/model.py::CLASSES`.
 pub const CLASSES: [&str; 8] = [
@@ -23,10 +25,20 @@ pub const CLASSES: [&str; 8] = [
 /// Model input side (images are resized to this).
 pub const INPUT_SIZE: usize = 32;
 
+/// Frames packed per batched runtime call (matches the `_b8` artifacts).
+pub const BATCH: usize = 8;
+
 /// Batched image classifier over the PJRT runtime (thread-local).
+///
+/// The packed-tensor and logits staging buffers live in the classifier
+/// (interior mutability) and are reused across every call — a replay
+/// slice classifies thousands of frames through one pair of
+/// allocations instead of one `Vec<f32>` per frame.
 pub struct Classifier {
     b1: Rc<CompiledModel>,
     b8: Rc<CompiledModel>,
+    input: RefCell<Vec<f32>>,
+    logits: RefCell<Vec<f32>>,
 }
 
 /// One classification result.
@@ -46,30 +58,40 @@ impl Classifier {
     /// Load from this thread's runtime rooted at `artifact_dir`.
     pub fn load(artifact_dir: &str) -> Result<Self> {
         let rt = thread_runtime(artifact_dir)?;
-        Ok(Self { b1: rt.model("classifier_b1")?, b8: rt.model("classifier_b8")? })
+        Ok(Self {
+            b1: rt.model("classifier_b1")?,
+            b8: rt.model("classifier_b8")?,
+            input: RefCell::new(Vec::new()),
+            logits: RefCell::new(Vec::new()),
+        })
     }
 
     /// Classify a batch of images (any sizes; resized to 32×32).
-    /// Uses the batch-8 artifact for full groups and batch-1 for the tail.
+    /// Uses the batch-8 artifact for full groups and batch-1 for the
+    /// tail. Results are bit-identical for every grouping of the same
+    /// frames: the runtime seeds batch variants from the family name,
+    /// so `classifier_b8` row *i* computes exactly `classifier_b1` on
+    /// row *i* (asserted by the property suite).
     pub fn classify(&self, images: &[Image]) -> Result<Vec<ClassResult>> {
         let mut out = Vec::with_capacity(images.len());
-        let row = INPUT_SIZE * INPUT_SIZE * 3;
+        let mut input = self.input.borrow_mut();
+        let mut logits = self.logits.borrow_mut();
         let mut i = 0;
-        while i + 8 <= images.len() {
-            let mut input = Vec::with_capacity(8 * row);
-            for img in &images[i..i + 8] {
+        while i + BATCH <= images.len() {
+            input.clear();
+            for img in &images[i..i + BATCH] {
                 pack_image(img, &mut input)?;
             }
-            let logits = self.b8.run_f32(&input)?;
-            for b in 0..8 {
+            self.b8.run_f32_into(&input, &mut logits)?;
+            for b in 0..BATCH {
                 out.push(interpret_logits(&logits[b * 8..(b + 1) * 8]));
             }
-            i += 8;
+            i += BATCH;
         }
         for img in &images[i..] {
-            let mut input = Vec::with_capacity(row);
+            input.clear();
             pack_image(img, &mut input)?;
-            let logits = self.b1.run_f32(&input)?;
+            self.b1.run_f32_into(&input, &mut logits)?;
             out.push(interpret_logits(&logits));
         }
         Ok(out)
@@ -90,7 +112,29 @@ impl Classifier {
     }
 }
 
-/// Resize (nearest-neighbour) + normalize an image into `out` as NHWC f32.
+/// `v / 255.0` for every byte value, precomputed once. The resample
+/// path historically divided per channel; the table stores exactly
+/// those quotients, so packed tensors are byte-identical to the
+/// division loop while the hot path does table loads only. (The
+/// model-native fast path multiplies by `1.0 / 255.0` instead — also
+/// historical; each path keeps its own rounding so outputs never move.)
+fn norm_lut() -> &'static [f32; 256] {
+    static LUT: OnceLock<[f32; 256]> = OnceLock::new();
+    LUT.get_or_init(|| {
+        let mut t = [0f32; 256];
+        for (b, v) in t.iter_mut().enumerate() {
+            *v = b as f32 / 255.0;
+        }
+        t
+    })
+}
+
+/// Resize (nearest-neighbour) + normalize an image into `out` as NHWC
+/// f32 (appends `32*32*3` values; callers reuse `out` across frames by
+/// clearing it between packs). The resample loop walks one source-row
+/// slice per output row — per-pixel indexing into the full frame (a
+/// bounds check per channel) is gone, and normalization is a table
+/// load. Output bytes are identical to the original per-pixel loop.
 pub fn pack_image(img: &Image, out: &mut Vec<f32>) -> Result<()> {
     img.validate()?;
     let (w, h) = (img.width as usize, img.height as usize);
@@ -104,19 +148,24 @@ pub fn pack_image(img: &Image, out: &mut Vec<f32>) -> Result<()> {
         out.extend(img.data.iter().map(|&b| b as f32 * (1.0 / 255.0)));
         return Ok(());
     }
+    let lut = norm_lut();
+    out.reserve(INPUT_SIZE * INPUT_SIZE * 3);
     for y in 0..INPUT_SIZE {
         let sy = y * h / INPUT_SIZE;
+        // one bounds-checked slice per output row; `validate()` above
+        // guarantees `data.len() == w * h * bpp`, so the row exists
+        let row = &img.data[sy * w * bpp..(sy + 1) * w * bpp];
         for x in 0..INPUT_SIZE {
             let sx = x * w / INPUT_SIZE;
-            let o = (sy * w + sx) * bpp;
             match bpp {
                 3 => {
-                    out.push(img.data[o] as f32 / 255.0);
-                    out.push(img.data[o + 1] as f32 / 255.0);
-                    out.push(img.data[o + 2] as f32 / 255.0);
+                    let px = &row[sx * 3..sx * 3 + 3];
+                    out.push(lut[px[0] as usize]);
+                    out.push(lut[px[1] as usize]);
+                    out.push(lut[px[2] as usize]);
                 }
                 _ => {
-                    let v = img.data[o] as f32 / 255.0;
+                    let v = lut[row[sx * bpp] as usize];
                     out.extend_from_slice(&[v, v, v]);
                 }
             }
@@ -178,6 +227,25 @@ mod tests {
             assert_eq!(single.class_id, batched[i].class_id, "image {i}");
             for (a, b) in single.logits.iter().zip(&batched[i].logits) {
                 assert!((a - b).abs() < 1e-4, "image {i}: {a} vs {b}");
+            }
+        }
+    }
+
+    #[test]
+    fn pack_image_reused_scratch_yields_identical_bytes() {
+        // Satellite: the staging buffer is reused across a slice — packing
+        // the same frame repeatedly through one scratch Vec must produce
+        // bitwise-identical tensors (both resample and native paths).
+        for (w, h) in [(64u32, 48u32), (32, 32), (17, 93)] {
+            let img = Image::synthetic(w, h, 7);
+            let mut scratch = Vec::new();
+            pack_image(&img, &mut scratch).unwrap();
+            let first: Vec<u32> = scratch.iter().map(|v| v.to_bits()).collect();
+            for _ in 0..3 {
+                scratch.clear();
+                pack_image(&img, &mut scratch).unwrap();
+                let again: Vec<u32> = scratch.iter().map(|v| v.to_bits()).collect();
+                assert_eq!(first, again, "{w}x{h}");
             }
         }
     }

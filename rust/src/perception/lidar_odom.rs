@@ -5,6 +5,14 @@
 //! odometry estimator in the playback pipeline) and a PJRT-backed scan
 //! descriptor (PointNet-lite artifact) used for loop-closure-style scan
 //! matching.
+//!
+//! Perf pass: correspondence search runs over a spatial grid built once
+//! per destination cloud ([`CorrGrid`]) instead of an O(src×dst) scan
+//! per iteration, and the alignment/cosine reductions use explicit
+//! lane-chunked accumulators. The grid search is *exact* — it returns
+//! the same correspondence index as the brute-force scan, ties broken
+//! by lowest point index (property-tested); the pre-pass kernels are
+//! kept as `_reference` bench baselines.
 
 use crate::error::{Error, Result};
 use crate::msg::PointCloud;
@@ -39,41 +47,273 @@ impl Transform2D {
     }
 }
 
+/// Minimum destination-cloud size for the grid correspondence path;
+/// below this the brute-force scan wins (grid build cost dominates).
+pub const GRID_MIN_POINTS: usize = 32;
+
+/// True when [`icp_2d`] uses the spatial-grid correspondence search for
+/// a destination cloud of `dst_points` points (recorded as the `icp`
+/// trace-span detail: `grid` vs `brute`).
+pub fn icp_uses_grid(dst_points: usize) -> bool {
+    dst_points >= GRID_MIN_POINTS
+}
+
+/// Spatial grid over a destination cloud for exact nearest-neighbour
+/// queries. Cells are dense (row-major `Vec`, no hashing) and hold
+/// point indices in ascending order; [`CorrGrid::nearest`] expands
+/// rings of cells outward from the query cell and stops only once the
+/// ring's lower distance bound *strictly* exceeds the best hit, so
+/// every cell that could hold an equally-near point is visited and the
+/// lowest-index tie wins — exactly the brute-force scan's semantics.
+#[doc(hidden)]
+pub struct CorrGrid<'a> {
+    pts: &'a [(f64, f64)],
+    cells: Vec<Vec<u32>>,
+    nx: usize,
+    ny: usize,
+    min_x: f64,
+    min_y: f64,
+    cx: f64,
+    cy: f64,
+}
+
+impl<'a> CorrGrid<'a> {
+    /// Bucket `pts` (non-empty) into a grid sized for ~1 point/cell.
+    pub fn build(pts: &'a [(f64, f64)]) -> Self {
+        let (mut min_x, mut min_y) = (f64::INFINITY, f64::INFINITY);
+        let (mut max_x, mut max_y) = (f64::NEG_INFINITY, f64::NEG_INFINITY);
+        for &(x, y) in pts {
+            min_x = min_x.min(x);
+            min_y = min_y.min(y);
+            max_x = max_x.max(x);
+            max_y = max_y.max(y);
+        }
+        let w = (max_x - min_x).max(0.0);
+        let h = (max_y - min_y).max(0.0);
+        // target cell edge ≈ sqrt(area / n); degenerate extents (a
+        // point or an axis-aligned line) collapse to a single row/col
+        let cell = (w * h / pts.len() as f64).sqrt();
+        let cell = if cell.is_finite() && cell > 1e-12 { cell } else { w.max(h).max(1.0) };
+        let nx = (((w / cell).floor() as usize) + 1).clamp(1, 512);
+        let ny = (((h / cell).floor() as usize) + 1).clamp(1, 512);
+        let cx = if w > 0.0 { w / nx as f64 } else { 1.0 };
+        let cy = if h > 0.0 { h / ny as f64 } else { 1.0 };
+        let mut cells = vec![Vec::new(); nx * ny];
+        for (i, &(x, y)) in pts.iter().enumerate() {
+            let ix = (((x - min_x) / cx).floor() as i64).clamp(0, nx as i64 - 1) as usize;
+            let iy = (((y - min_y) / cy).floor() as i64).clamp(0, ny as i64 - 1) as usize;
+            cells[iy * nx + ix].push(i as u32); // ascending by construction
+        }
+        CorrGrid { pts, cells, nx, ny, min_x, min_y, cx, cy }
+    }
+
+    /// Exact nearest-neighbour index of `p` in the bucketed cloud
+    /// (lowest index on distance ties). `p` may lie outside the grid's
+    /// bounding box — the query cell is clamped, which only widens the
+    /// ring bound.
+    pub fn nearest(&self, p: (f64, f64)) -> usize {
+        let qx = (((p.0 - self.min_x) / self.cx).floor() as i64).clamp(0, self.nx as i64 - 1);
+        let qy = (((p.1 - self.min_y) / self.cy).floor() as i64).clamp(0, self.ny as i64 - 1);
+        let (nxi, nyi) = (self.nx as i64, self.ny as i64);
+        let min_cell = self.cx.min(self.cy);
+        let mut best_idx = usize::MAX;
+        let mut best_d2 = f64::INFINITY;
+        let rmax = nxi.max(nyi);
+        for r in 0..=rmax {
+            if best_idx != usize::MAX {
+                // any point in ring r is ≥ (r-1) whole cells away; stop
+                // only on a STRICT bound so distance ties are still found
+                let lb = (r - 1).max(0) as f64 * min_cell;
+                if lb * lb > best_d2 {
+                    break;
+                }
+            }
+            let mut visit = |cxi: i64, cyi: i64| {
+                if cxi < 0 || cyi < 0 || cxi >= nxi || cyi >= nyi {
+                    return;
+                }
+                for &idx in &self.cells[cyi as usize * self.nx + cxi as usize] {
+                    let d = d2(p, self.pts[idx as usize]);
+                    let idx = idx as usize;
+                    if d < best_d2 || (d == best_d2 && idx < best_idx) {
+                        best_d2 = d;
+                        best_idx = idx;
+                    }
+                }
+            };
+            if r == 0 {
+                visit(qx, qy);
+            } else {
+                for x in (qx - r)..=(qx + r) {
+                    visit(x, qy - r);
+                    visit(x, qy + r);
+                }
+                for y in (qy - r + 1)..=(qy + r - 1) {
+                    visit(qx - r, y);
+                    visit(qx + r, y);
+                }
+            }
+        }
+        best_idx
+    }
+}
+
+/// Brute-force lowest-index nearest neighbour — the small-cloud path
+/// and the property-test baseline the grid must match exactly.
+#[doc(hidden)]
+pub fn brute_nearest(pts: &[(f64, f64)], p: (f64, f64)) -> usize {
+    let mut best = 0usize;
+    let mut best_d = f64::INFINITY;
+    for (i, &q) in pts.iter().enumerate() {
+        let d = d2(p, q);
+        if d < best_d {
+            best_d = d;
+            best = i;
+        }
+    }
+    best
+}
+
+fn tree4(v: [f64; 4]) -> f64 {
+    (v[0] + v[1]) + (v[2] + v[3])
+}
+
+fn tree8(v: [f32; 8]) -> f32 {
+    ((v[0] + v[1]) + (v[2] + v[3])) + ((v[4] + v[5]) + (v[6] + v[7]))
+}
+
+/// 4-lane chunked centroid sums over correspondence pairs, returned as
+/// means `(mx, my, qx, qy)`.
+fn centroids(pairs: &[((f64, f64), (f64, f64))]) -> (f64, f64, f64, f64) {
+    let (mut mx, mut my, mut qx, mut qy) = ([0f64; 4], [0f64; 4], [0f64; 4], [0f64; 4]);
+    let mut it = pairs.chunks_exact(4);
+    for ch in it.by_ref() {
+        for (l, &((px, py), (dxp, dyp))) in ch.iter().enumerate() {
+            mx[l] += px;
+            my[l] += py;
+            qx[l] += dxp;
+            qy[l] += dyp;
+        }
+    }
+    for &((px, py), (dxp, dyp)) in it.remainder() {
+        mx[0] += px;
+        my[0] += py;
+        qx[0] += dxp;
+        qy[0] += dyp;
+    }
+    let n = pairs.len() as f64;
+    (tree4(mx) / n, tree4(my) / n, tree4(qx) / n, tree4(qy) / n)
+}
+
+/// 4-lane chunked cross-covariance terms `(sxx, sxy)` about the means.
+fn cross_cov(
+    pairs: &[((f64, f64), (f64, f64))],
+    (mx, my, qx, qy): (f64, f64, f64, f64),
+) -> (f64, f64) {
+    let (mut sxx, mut sxy) = ([0f64; 4], [0f64; 4]);
+    let mut it = pairs.chunks_exact(4);
+    for ch in it.by_ref() {
+        for (l, &((px, py), (dxp, dyp))) in ch.iter().enumerate() {
+            let (ax, ay) = (px - mx, py - my);
+            let (bx, by) = (dxp - qx, dyp - qy);
+            sxx[l] += ax * bx + ay * by;
+            sxy[l] += ax * by - ay * bx;
+        }
+    }
+    for &((px, py), (dxp, dyp)) in it.remainder() {
+        let (ax, ay) = (px - mx, py - my);
+        let (bx, by) = (dxp - qx, dyp - qy);
+        sxx[0] += ax * bx + ay * by;
+        sxy[0] += ax * by - ay * bx;
+    }
+    (tree4(sxx), tree4(sxy))
+}
+
+fn clouds_to_xy(pc: &PointCloud) -> Vec<(f64, f64)> {
+    (0..pc.num_points())
+        .map(|i| {
+            let (x, y, _, _) = pc.point(i);
+            (x as f64, y as f64)
+        })
+        .collect()
+}
+
 /// Point-to-point ICP in the plane (z ignored). Returns the transform
 /// that maps `src` onto `dst`.
+///
+/// Correspondences come from an exact spatial-grid search (built once
+/// over `dst`, reused across iterations) when the destination cloud has
+/// at least [`GRID_MIN_POINTS`] points, else from the brute scan — both
+/// return identical indices, so the path choice never changes the
+/// estimate. The alignment reductions use 4-lane chunked accumulators;
+/// [`icp_2d_reference`] keeps the pre-pass sequential kernel.
 pub fn icp_2d(src: &PointCloud, dst: &PointCloud, iterations: usize) -> Result<Transform2D> {
     if src.num_points() < 3 || dst.num_points() < 3 {
         return Err(Error::Sim("icp needs >= 3 points per scan".into()));
     }
-    let dst_pts: Vec<(f64, f64)> = (0..dst.num_points())
-        .map(|i| {
-            let (x, y, _, _) = dst.point(i);
-            (x as f64, y as f64)
-        })
-        .collect();
-    let mut cur: Vec<(f64, f64)> = (0..src.num_points())
-        .map(|i| {
-            let (x, y, _, _) = src.point(i);
-            (x as f64, y as f64)
-        })
-        .collect();
+    let dst_pts = clouds_to_xy(dst);
+    let mut cur = clouds_to_xy(src);
+    let grid =
+        if icp_uses_grid(dst_pts.len()) { Some(CorrGrid::build(&dst_pts)) } else { None };
+    let mut total = Transform2D::default();
+    let mut pairs: Vec<((f64, f64), (f64, f64))> = Vec::with_capacity(cur.len());
+
+    for _ in 0..iterations {
+        pairs.clear();
+        match &grid {
+            Some(g) => pairs.extend(cur.iter().map(|&p| (p, dst_pts[g.nearest(p)]))),
+            None => {
+                pairs.extend(cur.iter().map(|&p| (p, dst_pts[brute_nearest(&dst_pts, p)])))
+            }
+        }
+        // closed-form 2D rigid alignment (Umeyama / SVD-free for 2D)
+        let means = centroids(&pairs);
+        let (mx, my, qx, qy) = means;
+        let (sxx, sxy) = cross_cov(&pairs, means);
+        let theta = sxy.atan2(sxx);
+        let (s, c) = theta.sin_cos();
+        let step = Transform2D {
+            dx: qx - (c * mx - s * my),
+            dy: qy - (s * mx + c * my),
+            dtheta: theta,
+        };
+        for p in &mut cur {
+            *p = step.apply(p.0, p.1);
+        }
+        total = step.compose(&total);
+        if step.dx.abs() < 1e-9 && step.dy.abs() < 1e-9 && step.dtheta.abs() < 1e-9 {
+            break;
+        }
+    }
+    Ok(total)
+}
+
+/// Pre-pass ICP kernel (per-iteration brute scan, sequential sums) —
+/// kept as the bench baseline for `speedup_perception_pass`.
+#[doc(hidden)]
+pub fn icp_2d_reference(
+    src: &PointCloud,
+    dst: &PointCloud,
+    iterations: usize,
+) -> Result<Transform2D> {
+    if src.num_points() < 3 || dst.num_points() < 3 {
+        return Err(Error::Sim("icp needs >= 3 points per scan".into()));
+    }
+    let dst_pts = clouds_to_xy(dst);
+    let mut cur = clouds_to_xy(src);
     let mut total = Transform2D::default();
 
     for _ in 0..iterations {
-        // nearest-neighbour correspondence (brute force; scans are small)
         let pairs: Vec<((f64, f64), (f64, f64))> = cur
             .iter()
             .map(|&p| {
                 let q = dst_pts
                     .iter()
-                    .min_by(|a, b| {
-                        d2(p, **a).partial_cmp(&d2(p, **b)).unwrap()
-                    })
+                    .min_by(|a, b| d2(p, **a).partial_cmp(&d2(p, **b)).unwrap())
                     .unwrap();
                 (p, *q)
             })
             .collect();
-        // closed-form 2D rigid alignment (Umeyama / SVD-free for 2D)
         let n = pairs.len() as f64;
         let (mut mx, mut my, mut qx, mut qy) = (0.0, 0.0, 0.0, 0.0);
         for ((px, py), (dxp, dyp)) in &pairs {
@@ -127,8 +367,55 @@ pub fn scan_descriptor(artifact_dir: &str, pc: &PointCloud) -> Result<Vec<f32>> 
     m.run_f32(&input)
 }
 
-/// Cosine similarity between two descriptors (scan-match score).
+fn sumsq_8lane(v: &[f32]) -> f32 {
+    let mut acc = [0f32; 8];
+    let mut it = v.chunks_exact(8);
+    for ch in it.by_ref() {
+        for (l, &x) in ch.iter().enumerate() {
+            acc[l] += x * x;
+        }
+    }
+    let mut tail = 0f32;
+    for &x in it.remainder() {
+        tail += x * x;
+    }
+    tree8(acc) + tail
+}
+
+fn dot_8lane(a: &[f32], b: &[f32]) -> f32 {
+    let n = a.len().min(b.len());
+    let mut acc = [0f32; 8];
+    let mut i = 0;
+    while i + 8 <= n {
+        for l in 0..8 {
+            acc[l] += a[i + l] * b[i + l];
+        }
+        i += 8;
+    }
+    let mut tail = 0f32;
+    for k in i..n {
+        tail += a[k] * b[k];
+    }
+    tree8(acc) + tail
+}
+
+/// Cosine similarity between two descriptors (scan-match score), via
+/// 8-lane chunked dot/norm accumulators;
+/// [`descriptor_similarity_reference`] keeps the sequential reduction.
 pub fn descriptor_similarity(a: &[f32], b: &[f32]) -> f32 {
+    let dot = dot_8lane(a, b);
+    let na = sumsq_8lane(a).sqrt();
+    let nb = sumsq_8lane(b).sqrt();
+    if na == 0.0 || nb == 0.0 {
+        0.0
+    } else {
+        dot / (na * nb)
+    }
+}
+
+/// Pre-pass sequential cosine similarity — bench baseline.
+#[doc(hidden)]
+pub fn descriptor_similarity_reference(a: &[f32], b: &[f32]) -> f32 {
     let dot: f32 = a.iter().zip(b).map(|(x, y)| x * y).sum();
     let na: f32 = a.iter().map(|x| x * x).sum::<f32>().sqrt();
     let nb: f32 = b.iter().map(|x| x * x).sum::<f32>().sqrt();
@@ -208,6 +495,64 @@ mod tests {
     }
 
     #[test]
+    fn icp_matches_reference_estimate() {
+        // Same correspondences by construction; only the float-sum
+        // association differs, so estimates agree to tight tolerance on
+        // both sides of the grid threshold.
+        for n in [20usize, 90] {
+            let src = ring(n, &Transform2D::default());
+            let truth = Transform2D { dx: 0.3, dy: -0.2, dtheta: 0.01 };
+            let dst = ring(n, &truth);
+            let a = icp_2d(&src, &dst, 25).unwrap();
+            let b = icp_2d_reference(&src, &dst, 25).unwrap();
+            assert!((a.dx - b.dx).abs() < 1e-6, "n={n} {a:?} vs {b:?}");
+            assert!((a.dy - b.dy).abs() < 1e-6, "n={n} {a:?} vs {b:?}");
+            assert!((a.dtheta - b.dtheta).abs() < 1e-6, "n={n} {a:?} vs {b:?}");
+        }
+    }
+
+    #[test]
+    fn grid_nearest_matches_brute_nearest() {
+        let mut rng = crate::util::prng::Prng::new(11);
+        let pts: Vec<(f64, f64)> = (0..200)
+            .map(|_| (rng.range_f64(-40.0, 40.0), rng.range_f64(-40.0, 40.0)))
+            .collect();
+        let grid = CorrGrid::build(&pts);
+        // in-box, out-of-box, and exactly-on-a-point queries
+        let mut queries: Vec<(f64, f64)> = (0..300)
+            .map(|_| (rng.range_f64(-60.0, 60.0), rng.range_f64(-60.0, 60.0)))
+            .collect();
+        queries.extend(pts.iter().take(20).copied());
+        for q in queries {
+            assert_eq!(grid.nearest(q), brute_nearest(&pts, q), "query {q:?}");
+        }
+    }
+
+    #[test]
+    fn grid_nearest_breaks_ties_by_lowest_index() {
+        // Duplicate points and a query equidistant from two lattice
+        // points: the brute scan returns the first minimum; the grid
+        // must agree even when the tie spans cells.
+        let pts =
+            vec![(1.0, 0.0), (-1.0, 0.0), (1.0, 0.0), (0.0, 5.0), (0.0, -5.0), (3.0, 3.0)];
+        let grid = CorrGrid::build(&pts);
+        for q in [(0.0, 0.0), (1.0, 0.0), (0.0, 0.5)] {
+            assert_eq!(grid.nearest(q), brute_nearest(&pts, q), "query {q:?}");
+        }
+    }
+
+    #[test]
+    fn grid_handles_degenerate_extents() {
+        // collinear and single-location clouds must not break the grid
+        let line: Vec<(f64, f64)> = (0..50).map(|i| (i as f64, 2.0)).collect();
+        let g = CorrGrid::build(&line);
+        assert_eq!(g.nearest((10.2, 7.0)), brute_nearest(&line, (10.2, 7.0)));
+        let dup = vec![(4.0, 4.0); 40];
+        let g = CorrGrid::build(&dup);
+        assert_eq!(g.nearest((0.0, 0.0)), 0);
+    }
+
+    #[test]
     fn transform_compose_and_apply() {
         let a = Transform2D { dx: 1.0, dy: 0.0, dtheta: std::f64::consts::FRAC_PI_2 };
         let b = Transform2D { dx: 0.0, dy: 2.0, dtheta: 0.0 };
@@ -231,5 +576,19 @@ mod tests {
             descriptor_similarity(&da, &dc) < descriptor_similarity(&da, &db),
             "different scan less similar"
         );
+    }
+
+    #[test]
+    fn chunked_similarity_close_to_reference() {
+        let mut rng = crate::util::prng::Prng::new(3);
+        for len in [1usize, 7, 8, 64, 100] {
+            let a: Vec<f32> =
+                (0..len).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            let b: Vec<f32> =
+                (0..len).map(|_| rng.range_f64(-1.0, 1.0) as f32).collect();
+            let fast = descriptor_similarity(&a, &b);
+            let slow = descriptor_similarity_reference(&a, &b);
+            assert!((fast - slow).abs() < 1e-5, "len={len}: {fast} vs {slow}");
+        }
     }
 }

@@ -10,8 +10,11 @@ pub mod classify;
 pub mod lidar_odom;
 pub mod segment;
 
-pub use classify::{Classifier, ClassResult, CLASSES};
-pub use lidar_odom::{descriptor_similarity, icp_2d, scan_descriptor, Transform2D};
+pub use classify::{Classifier, ClassResult, BATCH, CLASSES};
+pub use lidar_odom::{
+    descriptor_similarity, icp_2d, icp_uses_grid, scan_descriptor, Transform2D,
+    GRID_MIN_POINTS,
+};
 pub use segment::{SegResult, Segmenter, SEG_CLASSES};
 
 use crate::engine::OpRegistry;
@@ -83,18 +86,18 @@ pub fn register_perception_ops(reg: &OpRegistry) {
 
     // Image records → per-image dominant segmentation class (u8 record).
     reg.register("segment_images", |ctx, _p, records| {
+        let images: Result<Vec<Image>> = records.iter().map(|r| Image::decode(r)).collect();
+        let images = images?;
         with_segmenter(&ctx.artifact_dir, |s| {
-            records
-                .iter()
-                .map(|r| {
-                    let img = Image::decode(r)?;
-                    let seg = s.segment(&img)?;
+            Ok(s.segment_batch(&images)?
+                .into_iter()
+                .map(|seg| {
                     let dominant = (0..4u8)
                         .max_by_key(|&c| seg.histogram[c as usize])
                         .unwrap();
-                    Ok(vec![dominant])
+                    vec![dominant]
                 })
-                .collect()
+                .collect())
         })
     });
 

@@ -3,8 +3,9 @@
 
 use crate::error::Result;
 use crate::msg::Image;
-use crate::perception::classify::pack_image;
+use crate::perception::classify::{pack_image, BATCH};
 use crate::runtime::{thread_runtime, CompiledModel};
+use std::cell::RefCell;
 use std::rc::Rc;
 
 /// Segmentation label set (must match `model.py::SEG_CLASSES` order).
@@ -21,37 +22,83 @@ pub struct SegResult {
 }
 
 /// Batched segmenter.
+///
+/// Like [`crate::perception::Classifier`], the packed-tensor and logits
+/// staging buffers live in the segmenter (interior mutability) and are
+/// reused across every call instead of reallocating per frame.
 pub struct Segmenter {
     b1: Rc<CompiledModel>,
+    b8: Rc<CompiledModel>,
+    input: RefCell<Vec<f32>>,
+    logits: RefCell<Vec<f32>>,
+}
+
+/// Per-pixel logits (`[32*32*4]`) for one frame → class map + histogram.
+fn interpret_seg(logits: &[f32]) -> SegResult {
+    let mut class_map = Vec::with_capacity(SIZE * SIZE);
+    let mut histogram = [0u32; 4];
+    for px in logits.chunks_exact(4) {
+        let mut best = 0u8;
+        let mut best_v = f32::NEG_INFINITY;
+        for (i, &v) in px.iter().enumerate() {
+            if v > best_v {
+                best = i as u8;
+                best_v = v;
+            }
+        }
+        histogram[best as usize] += 1;
+        class_map.push(best);
+    }
+    SegResult { class_map, histogram }
 }
 
 impl Segmenter {
-    /// Load the segmenter artifact from `artifact_dir`.
+    /// Load the segmenter artifacts from `artifact_dir`.
     pub fn load(artifact_dir: &str) -> Result<Self> {
         let rt = thread_runtime(artifact_dir)?;
-        Ok(Self { b1: rt.model("segmenter_b1")? })
+        Ok(Self {
+            b1: rt.model("segmenter_b1")?,
+            b8: rt.model("segmenter_b8")?,
+            input: RefCell::new(Vec::new()),
+            logits: RefCell::new(Vec::new()),
+        })
     }
 
     /// Segment one image (resized to 32×32).
     pub fn segment(&self, img: &Image) -> Result<SegResult> {
-        let mut input = Vec::with_capacity(SIZE * SIZE * 3);
-        pack_image(img, &mut input)?;
-        let logits = self.b1.run_f32(&input)?; // [32*32*4]
-        let mut class_map = Vec::with_capacity(SIZE * SIZE);
-        let mut histogram = [0u32; 4];
-        for px in logits.chunks_exact(4) {
-            let mut best = 0u8;
-            let mut best_v = f32::NEG_INFINITY;
-            for (i, &v) in px.iter().enumerate() {
-                if v > best_v {
-                    best = i as u8;
-                    best_v = v;
-                }
+        Ok(self.segment_batch(std::slice::from_ref(img))?.remove(0))
+    }
+
+    /// Segment a batch of images: the batch-8 artifact takes full
+    /// groups, batch-1 the ragged tail. Results are bit-identical for
+    /// every grouping of the same frames — `segmenter_b8` is seeded
+    /// from the same family name as `segmenter_b1`, so batch row *i*
+    /// computes exactly the single-frame kernel on frame *i* (asserted
+    /// by the property suite).
+    pub fn segment_batch(&self, images: &[Image]) -> Result<Vec<SegResult>> {
+        const ROW: usize = SIZE * SIZE * 4;
+        let mut out = Vec::with_capacity(images.len());
+        let mut input = self.input.borrow_mut();
+        let mut logits = self.logits.borrow_mut();
+        let mut i = 0;
+        while i + BATCH <= images.len() {
+            input.clear();
+            for img in &images[i..i + BATCH] {
+                pack_image(img, &mut input)?;
             }
-            histogram[best as usize] += 1;
-            class_map.push(best);
+            self.b8.run_f32_into(&input, &mut logits)?;
+            for b in 0..BATCH {
+                out.push(interpret_seg(&logits[b * ROW..(b + 1) * ROW]));
+            }
+            i += BATCH;
         }
-        Ok(SegResult { class_map, histogram })
+        for img in &images[i..] {
+            input.clear();
+            pack_image(img, &mut input)?;
+            self.b1.run_f32_into(&input, &mut logits)?;
+            out.push(interpret_seg(&logits));
+        }
+        Ok(out)
     }
 }
 
@@ -81,5 +128,20 @@ mod tests {
             hist[c as usize] += 1;
         }
         assert_eq!(hist, res.histogram);
+    }
+
+    #[test]
+    fn batch_path_matches_single_path_exactly() {
+        let s = Segmenter::load(&artifact_dir()).unwrap();
+        for n in [1usize, 3, 8, 11] {
+            let imgs: Vec<Image> =
+                (0..n).map(|i| Image::synthetic(32, 32, i as u64)).collect();
+            let batched = s.segment_batch(&imgs).unwrap();
+            assert_eq!(batched.len(), n);
+            for (i, img) in imgs.iter().enumerate() {
+                let single = s.segment(img).unwrap();
+                assert_eq!(single, batched[i], "n={n} frame {i}");
+            }
+        }
     }
 }

@@ -75,6 +75,105 @@ impl CompiledModel {
     /// Execute on a flat f32 input of the signature's input shape.
     /// Returns the flat f32 output.
     pub fn run_f32(&self, input: &[f32]) -> Result<Vec<f32>> {
+        let mut out = Vec::new();
+        self.run_f32_into(input, &mut out)?;
+        Ok(out)
+    }
+
+    /// [`CompiledModel::run_f32`] writing into a caller-owned logits
+    /// buffer (cleared first) so per-frame pipelines reuse one
+    /// allocation across calls.
+    ///
+    /// The projection `acc_j = B[j mod |B|] + Σ_i x_i · A[(31i + j)
+    /// mod |A|] · B[(i + 7j) mod |B|]` is evaluated 4 output lanes at a
+    /// time: each lane keeps its own accumulator and its own pair of
+    /// incrementally-maintained table indices (step +31 mod |A|, +1 mod
+    /// |B| as `i` advances — no division in the inner loop), and every
+    /// lane adds its terms in ascending-`i` order exactly as the scalar
+    /// loop does. Lanes are *independent outputs*, so the blocking
+    /// cannot reassociate any sum: outputs are bitwise identical to
+    /// [`CompiledModel::run_f32_reference`] (asserted by tests and the
+    /// perception property suite).
+    pub fn run_f32_into(&self, input: &[f32], out: &mut Vec<f32>) -> Result<()> {
+        let expect: usize = self.sig.in_dims.iter().product();
+        if input.len() != expect {
+            return Err(Error::Runtime(format!(
+                "model '{}' expects {expect} f32 inputs ({:?}), got {}",
+                self.sig.name,
+                self.sig.in_dims,
+                input.len()
+            )));
+        }
+        let batch = self.sig.batch().max(1);
+        let in_row = self.sig.in_elems_per_row().max(1);
+        let out_row = self.sig.out_elems_per_row().max(1);
+        out.clear();
+        out.reserve(batch * out_row);
+        let wa = &self.wa[..TAB_A];
+        let wb = &self.wb[..TAB_B];
+        const LANES: usize = 4;
+        for r in 0..batch {
+            let row = &input[r * in_row..(r + 1) * in_row];
+            let mut j = 0usize;
+            while j + LANES <= out_row {
+                let mut acc = [0f32; LANES];
+                let mut ia = [0usize; LANES];
+                let mut ib = [0usize; LANES];
+                for l in 0..LANES {
+                    acc[l] = wb[(j + l) % TAB_B];
+                    ia[l] = (j + l) % TAB_A;
+                    ib[l] = (j + l).wrapping_mul(7) % TAB_B;
+                }
+                for &x in row {
+                    for l in 0..LANES {
+                        acc[l] += x * wa[ia[l]] * wb[ib[l]];
+                        // steps are < table size, so one conditional
+                        // subtract replaces the modulo
+                        ia[l] += 31;
+                        if ia[l] >= TAB_A {
+                            ia[l] -= TAB_A;
+                        }
+                        ib[l] += 1;
+                        if ib[l] >= TAB_B {
+                            ib[l] -= TAB_B;
+                        }
+                    }
+                }
+                for a in acc {
+                    out.push((a * 0.25).tanh());
+                }
+                j += LANES;
+            }
+            // scalar tail for out_row % LANES (same incremental indices)
+            while j < out_row {
+                let mut acc = wb[j % TAB_B];
+                let mut ia = j % TAB_A;
+                let mut ib = j.wrapping_mul(7) % TAB_B;
+                for &x in row {
+                    acc += x * wa[ia] * wb[ib];
+                    ia += 31;
+                    if ia >= TAB_A {
+                        ia -= TAB_A;
+                    }
+                    ib += 1;
+                    if ib >= TAB_B {
+                        ib -= TAB_B;
+                    }
+                }
+                out.push((acc * 0.25).tanh());
+                j += 1;
+            }
+        }
+        Ok(())
+    }
+
+    /// The pre-optimization scalar kernel: one output at a time, table
+    /// indices recomputed with a modulo per element. Kept (not
+    /// `cfg(test)`) as the `bench_engine` baseline for the
+    /// `speedup_perception_pass` fact and as the bit-identity oracle
+    /// for the lane-blocked [`CompiledModel::run_f32`].
+    #[doc(hidden)]
+    pub fn run_f32_reference(&self, input: &[f32]) -> Result<Vec<f32>> {
         let expect: usize = self.sig.in_dims.iter().product();
         if input.len() != expect {
             return Err(Error::Runtime(format!(
@@ -273,6 +372,39 @@ mod tests {
         let m = rt.model("lidar_feat_b1").unwrap();
         let out = m.run_f32(&vec![0.1; 256 * 4]).unwrap();
         assert_eq!(out.len(), 64);
+    }
+
+    #[test]
+    fn lane_blocked_kernel_matches_reference_bitwise() {
+        // The perf-pass contract: the 4-lane incremental-index kernel
+        // must be bit-identical to the scalar modulo kernel for every
+        // manifest model (covers out_row % 4 == 0 and the scalar tail).
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        for name in
+            ["classifier_b1", "classifier_b8", "segmenter_b1", "segmenter_b8", "lidar_feat_b1"]
+        {
+            let m = rt.model(name).unwrap();
+            let n: usize = m.sig.in_dims.iter().product();
+            let input: Vec<f32> =
+                (0..n).map(|i| ((i * 131 + 17) % 509) as f32 / 509.0 - 0.5).collect();
+            let fast = m.run_f32(&input).unwrap();
+            let slow = m.run_f32_reference(&input).unwrap();
+            assert_eq!(fast, slow, "{name}: lane-blocked kernel diverged");
+        }
+    }
+
+    #[test]
+    fn run_into_reuses_buffer_and_matches() {
+        let rt = ModelRuntime::new(artifact_dir()).unwrap();
+        let m = rt.model("classifier_b1").unwrap();
+        let a: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 97) as f32 / 97.0).collect();
+        let b: Vec<f32> = (0..32 * 32 * 3).map(|i| (i % 89) as f32 / 89.0).collect();
+        let mut buf = Vec::new();
+        m.run_f32_into(&a, &mut buf).unwrap();
+        assert_eq!(buf, m.run_f32(&a).unwrap());
+        // second call clears and refills — no stale logits
+        m.run_f32_into(&b, &mut buf).unwrap();
+        assert_eq!(buf, m.run_f32(&b).unwrap());
     }
 
     #[test]

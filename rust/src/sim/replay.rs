@@ -36,10 +36,12 @@
 //! (faster-than-realtime by default; pacing affects wall time only,
 //! never results):
 //!
-//! * camera frames → the PJRT image classifier (one frame per batch, so
-//!   batch grouping can never differ between slicings) → per-class
-//!   detection counts — and the PJRT segmenter → per-class pixel
-//!   histograms;
+//! * camera frames → the PJRT image classifier and segmenter, batched
+//!   in fixed-size groups keyed by in-slice frame index (batches never
+//!   span a slice boundary, and the batched path is bit-identical to
+//!   per-frame — the batch artifacts are seeded from the same family
+//!   weights, so grouping can never change a result) → per-class
+//!   detection counts and per-class pixel histograms;
 //! * LiDAR scans → planar ICP against the previous scan on the same
 //!   topic → odometry deltas, plus a lead-gap estimate feeding the
 //!   ACC/AEB controller under test → commanded-control divergence
@@ -76,7 +78,7 @@ use crate::engine::trace;
 use crate::error::{Error, Result};
 use crate::msg::{Image, Message, PointCloud, Time};
 use crate::perception::{descriptor_similarity, scan_descriptor, with_classifier, with_segmenter};
-use crate::perception::{icp_2d, Transform2D};
+use crate::perception::{icp_2d, icp_uses_grid, Transform2D, BATCH};
 use crate::storage::{BlockStore, ManifestId};
 use crate::sim::controller::{control, ControlMode, ControllerParams, LeadObservation};
 use crate::sim::dynamics::VehicleState;
@@ -791,6 +793,41 @@ struct LidarState {
     desc: Option<Vec<f32>>,
 }
 
+/// Run one batch of in-window camera frames through the batched
+/// classifier + segmenter and fold the results into `stats`, then clear
+/// the batch. Detection counts and pixel histograms are integer sums,
+/// so deferring them to the flush point cannot change the report.
+fn flush_frames(
+    artifact_dir: &str,
+    pending: &mut Vec<Image>,
+    stats: &mut ReplayStats,
+) -> Result<()> {
+    if pending.is_empty() {
+        return Ok(());
+    }
+    // span detail records the actual batch size ("b8", "b3" tail, …)
+    let detail = format!("b{}", pending.len());
+    crate::logmsg!("debug", "perception flush: classify/segment batch {detail}");
+    let res = trace::accum_detail("classify", &detail, || {
+        with_classifier(artifact_dir, |c| c.classify(pending))
+    })?;
+    for r in &res {
+        stats.detections[(r.class_id as usize).min(7)] += 1;
+        stats.frames += 1;
+    }
+    let segs = trace::accum_detail("segment", &detail, || {
+        with_segmenter(artifact_dir, |s| s.segment_batch(pending))
+    })?;
+    for seg in &segs {
+        stats.seg.frames += 1;
+        for (a, b) in stats.seg.pixels.iter_mut().zip(seg.histogram) {
+            *a += b as u64;
+        }
+    }
+    pending.clear();
+    Ok(())
+}
+
 /// Replay one slice through the perception pipeline. This is the
 /// worker-side body of the `run_replay` operator, also called directly
 /// by [`ReplayDriver::reference`] for the single-process baseline.
@@ -814,6 +851,8 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
     let pacer = Pacer::new(params.rate, job.slice.warmup_start);
     let mut prev_time: BTreeMap<String, u64> = BTreeMap::new();
     let mut lidar: BTreeMap<String, LidarState> = BTreeMap::new();
+    // camera frames awaiting a batched classify/segment call
+    let mut pending: Vec<Image> = Vec::with_capacity(BATCH);
 
     for m in msgs {
         pacer.pace(m.time.nanos);
@@ -831,28 +870,19 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
         prev_time.insert(m.topic.clone(), m.time.nanos);
 
         if m.type_name == Image::TYPE_NAME {
-            // camera → classifier (stateless: warm-up frames are skipped
-            // entirely). One frame per batch so batch grouping can never
-            // differ between slicings.
+            // camera → classifier + segmenter (stateless: warm-up
+            // frames are skipped entirely). In-window frames batch in
+            // fixed groups of BATCH keyed by in-slice frame index —
+            // batches never span a slice boundary (the tail flushes at
+            // slice end), and the batched artifacts are seeded from the
+            // same family weights as batch-1, so the logits for a frame
+            // are bit-identical under every grouping. Different
+            // slicings therefore group differently but report
+            // identically.
             if in_window {
-                let img = Image::decode(&m.data)?;
-                let res = trace::accum("classify", || {
-                    with_classifier(&ctx.artifact_dir, |c| {
-                        c.classify(std::slice::from_ref(&img))
-                    })
-                })?;
-                let class = res[0].class_id as usize;
-                stats.detections[class.min(7)] += 1;
-                stats.frames += 1;
-                // segmentation rides the same frame (stateless, so
-                // slicing cannot change it): per-class pixel counts are
-                // integers and sum associatively across slices
-                let seg = trace::accum("segment", || {
-                    with_segmenter(&ctx.artifact_dir, |s| s.segment(&img))
-                })?;
-                stats.seg.frames += 1;
-                for (a, b) in stats.seg.pixels.iter_mut().zip(seg.histogram) {
-                    *a += b as u64;
+                pending.push(Image::decode(&m.data)?);
+                if pending.len() == BATCH {
+                    flush_frames(&ctx.artifact_dir, &mut pending, &mut stats)?;
                 }
             }
         } else if m.type_name == PointCloud::TYPE_NAME {
@@ -899,8 +929,13 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
                     } else {
                         let dt = (m.time.nanos.saturating_sub(prev.time_nanos)) as f64 / 1e9;
                         let dt = dt.max(1e-9);
-                        let t: Transform2D =
-                            trace::accum("icp", || icp_2d(&prev.scan, &scan, ICP_ITERS))?;
+                        // span detail records the correspondence path
+                        // (dst cloud size picks grid vs brute force)
+                        let icp_path =
+                            if icp_uses_grid(scan.num_points()) { "grid" } else { "brute" };
+                        let t: Transform2D = trace::accum_detail("icp", icp_path, || {
+                            icp_2d(&prev.scan, &scan, ICP_ITERS)
+                        })?;
                         stats.odom.pairs += 1;
                         stats.odom.abs_dx_um += quant(t.dx.abs());
                         stats.odom.abs_dy_um += quant(t.dy.abs());
@@ -942,6 +977,15 @@ pub fn replay_slice(ctx: &TaskCtx, job: &SliceJob, params: &ReplayParams) -> Res
         }
         // other message types (IMU, …) contribute counts/gaps only
     }
+    // ragged tail: the last in-slice frames flush as one smaller batch
+    flush_frames(&ctx.artifact_dir, &mut pending, &mut stats)?;
+    crate::logmsg!(
+        "debug",
+        "slice {}: {} frame(s) classified, {} odom pair(s)",
+        job.slice.index,
+        stats.frames,
+        stats.odom.pairs
+    );
     Ok(ReplayVerdict { slice: job.slice.index, stats })
 }
 

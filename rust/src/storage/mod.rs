@@ -693,21 +693,28 @@ impl ChunkStore for BlockChunkStore {
     }
 
     fn read_at(&mut self, offset: u64, len: usize) -> Result<Vec<u8>> {
+        let mut out = Vec::new();
+        self.read_at_into(offset, len, &mut out)?;
+        Ok(out)
+    }
+
+    fn read_at_into(&mut self, offset: u64, len: usize, out: &mut Vec<u8>) -> Result<()> {
         if offset.checked_add(len as u64).is_none_or(|end| end > self.len) {
             return Err(Error::Corrupt(format!(
                 "block object read past end: offset {offset} + {len} > {}",
                 self.len
             )));
         }
+        out.clear();
         if len == 0 {
-            return Ok(Vec::new());
+            return Ok(());
         }
         // find the block containing `offset`
         let mut i = match self.starts.binary_search(&offset) {
             Ok(i) => i,
             Err(i) => i - 1,
         };
-        let mut out = Vec::with_capacity(len);
+        out.reserve(len);
         let mut pos = offset;
         let mut remaining = len;
         while remaining > 0 {
@@ -719,7 +726,7 @@ impl ChunkStore for BlockChunkStore {
             remaining -= take;
             i += 1;
         }
-        Ok(out)
+        Ok(())
     }
 
     fn len(&self) -> u64 {

@@ -224,7 +224,20 @@ pub fn compress_greedy(input: &[u8]) -> Vec<u8> {
 /// (truncated run, zero/too-far distance, oversized output) is an
 /// `Error::Corrupt` — never a panic, never unbounded allocation.
 pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
-    let mut out = Vec::with_capacity(expected_len.min(1 << 26));
+    let mut out = Vec::new();
+    decompress_into(input, expected_len, &mut out)?;
+    Ok(out)
+}
+
+/// Decompress directly into a caller-owned buffer (cleared first) — the
+/// zero-copy decode path: `BagReader` feeds one reused scratch `Vec`
+/// per reader, so a replay slice decodes every chunk without a fresh
+/// allocation each time. Identical output bytes and error behavior to
+/// [`decompress`]; on error the buffer contents are unspecified (but
+/// its length never exceeds `expected_len`).
+pub fn decompress_into(input: &[u8], expected_len: usize, out: &mut Vec<u8>) -> Result<()> {
+    out.clear();
+    out.reserve(expected_len.min(1 << 26));
     let mut i = 0usize;
     while i < input.len() {
         let t = input[i];
@@ -275,7 +288,7 @@ pub fn decompress(input: &[u8], expected_len: usize) -> Result<Vec<u8>> {
             }
         }
     }
-    Ok(out)
+    Ok(())
 }
 
 /// The original byte-at-a-time decoder (push-per-byte match copies),
@@ -439,5 +452,23 @@ mod tests {
         let data = vec![1u8; 500];
         let packed = compress(&data);
         assert!(decompress(&packed, 10).is_err(), "cap must trip");
+    }
+
+    #[test]
+    fn decompress_into_reuses_buffer_across_chunks() {
+        // one scratch Vec through several differently-sized payloads —
+        // bytes must match the allocating API every time, including
+        // after a failed decode left the buffer in a dirty state
+        let mut rng = Prng::new(21);
+        let mut scratch = Vec::new();
+        for n in [1000usize, 17, 70_000, 0, 333] {
+            let mut data = vec![0u8; n];
+            rng.fill_bytes(&mut data);
+            data.extend_from_slice(b"repeat repeat repeat repeat");
+            let packed = compress(&data);
+            decompress_into(&packed, data.len(), &mut scratch).unwrap();
+            assert_eq!(scratch, data, "n={n}");
+            assert!(decompress_into(&packed, 3, &mut scratch).is_err(), "cap must trip");
+        }
     }
 }

@@ -813,6 +813,102 @@ fn prop_observability_codec_truncation_rejected() {
     );
 }
 
+// ---------- perception kernels ----------
+
+use av_simd::perception::lidar_odom::{brute_nearest, CorrGrid};
+use av_simd::perception::{Classifier, Segmenter};
+
+#[test]
+fn prop_grid_nearest_matches_brute_force_including_ties() {
+    // The spatial-grid correspondence search must return the exact same
+    // index as the brute-force scan for every query — including distance
+    // ties, which the brute scan resolves to the lowest point index.
+    // Half the clouds live on a half-integer lattice so duplicate points
+    // and exact equidistant queries are common, not incidental.
+    check(
+        "grid NN == brute-force NN (ties by lowest index)",
+        |rng| {
+            let lattice = rng.next_bool(0.5);
+            let n = 3 + rng.below(120) as usize;
+            let pts: Vec<(f64, f64)> = (0..n)
+                .map(|_| {
+                    if lattice {
+                        (rng.below(12) as f64, rng.below(12) as f64)
+                    } else {
+                        (rng.range_f64(-50.0, 50.0), rng.range_f64(-50.0, 50.0))
+                    }
+                })
+                .collect();
+            let mut queries: Vec<(f64, f64)> = (0..40)
+                .map(|_| {
+                    if lattice {
+                        // half-integer coords sit equidistant between
+                        // lattice points — guaranteed tie candidates
+                        (rng.below(26) as f64 * 0.5 - 1.0, rng.below(26) as f64 * 0.5 - 1.0)
+                    } else {
+                        (rng.range_f64(-70.0, 70.0), rng.range_f64(-70.0, 70.0))
+                    }
+                })
+                .collect();
+            // querying the points themselves hits zero-distance ties on
+            // duplicated lattice points
+            queries.extend(pts.iter().take(10).copied());
+            (pts, queries)
+        },
+        |(pts, queries)| {
+            let grid = CorrGrid::build(pts);
+            queries.iter().all(|&q| grid.nearest(q) == brute_nearest(pts, q))
+        },
+    );
+}
+
+#[test]
+fn prop_batched_perception_bit_identical_to_per_frame() {
+    // The replay pipeline may group the same frames differently across
+    // slicings; the report contract holds because batched inference is
+    // bit-identical to per-frame inference for every grouping. Sweep
+    // K ∈ {1, 2, 3, 8} over a mixed pool (native 32×32 and resampled
+    // sizes) with ragged tails, comparing raw logit bits and exact
+    // segmentation outputs against the one-frame-at-a-time path.
+    let dir = std::env::var("AV_SIMD_ARTIFACTS").unwrap_or_else(|_| "artifacts".into());
+    let c = Classifier::load(&dir).unwrap();
+    let s = Segmenter::load(&dir).unwrap();
+    let mut rng = Prng::new(0xBA7C4);
+    let pool: Vec<Image> = (0..11)
+        .map(|i| {
+            let (w, h) = match i % 3 {
+                0 => (32, 32),
+                1 => (48, 24),
+                _ => (17, 40),
+            };
+            Image::synthetic(w, h, rng.next_u64())
+        })
+        .collect();
+    let single_logits: Vec<Vec<u32>> = pool
+        .iter()
+        .map(|img| {
+            let r = c.classify(std::slice::from_ref(img)).unwrap().remove(0);
+            r.logits.iter().map(|v| v.to_bits()).collect()
+        })
+        .collect();
+    let single_segs: Vec<_> = pool.iter().map(|img| s.segment(img).unwrap()).collect();
+    for k in [1usize, 2, 3, 8] {
+        let mut batched_logits: Vec<Vec<u32>> = Vec::new();
+        let mut batched_segs = Vec::new();
+        for group in pool.chunks(k) {
+            batched_logits.extend(
+                c.classify(group)
+                    .unwrap()
+                    .into_iter()
+                    .map(|r| r.logits.iter().map(|v| v.to_bits()).collect::<Vec<u32>>()),
+            );
+            batched_segs.extend(s.segment_batch(group).unwrap());
+        }
+        assert_eq!(single_logits, batched_logits, "K={k}: classifier logits moved");
+        assert_eq!(single_segs, batched_segs, "K={k}: segmentation moved");
+    }
+}
+
 #[test]
 fn prop_observability_codec_bitflip_never_panics() {
     check_n("span batch / stats snapshot corruption safety", 64, |rng| {
